@@ -1,0 +1,55 @@
+//! Image classification at three precisions — a miniature of the paper's
+//! Table 1 experiment: train ResNet-mini on SynthCIFAR as full-precision,
+//! BWNN (1-bit) and TBN_4 (sub-bit), then print the comparison, including
+//! the analytic columns on the *full-size* ResNet18.
+//!
+//! `TBN_STEPS` scales the run (default 200; the EXPERIMENTS.md numbers use
+//! the configured 500).
+
+use anyhow::{anyhow, Result};
+use tiledbits::arch;
+use tiledbits::config::Manifest;
+use tiledbits::coordinator::{report, run_or_load};
+use tiledbits::runtime::Runtime;
+use tiledbits::tbn::{compress, TilingPolicy};
+use tiledbits::train::TrainOptions;
+
+fn main() -> Result<()> {
+    let artifacts = std::env::var("TBN_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let steps: usize = std::env::var("TBN_STEPS").ok()
+        .and_then(|s| s.parse().ok()).unwrap_or(200);
+    let manifest = Manifest::load(&artifacts).map_err(|e| anyhow!(e))?;
+    let rt = Runtime::new(&artifacts)?;
+    let opts = TrainOptions { steps: Some(steps), eval_every: 0, log_every: 50, seed: None };
+
+    println!("== image classification: FP vs BWNN vs TBN (ResNet-mini / SynthCIFAR) ==\n");
+    let ids = ["resnet_mini_fp", "resnet_mini_bwnn", "resnet_mini_tbn4",
+               "resnet_mini_tbn8", "resnet_mini_tbn16"];
+    let mut runs = Vec::new();
+    for id in ids {
+        let rec = run_or_load(&rt, &manifest, id, &opts, "runs")?;
+        println!("{:24} acc {:>5.1}%  bit-width {:>6.3}  storage {:>9} bits",
+                 id, 100.0 * rec.metric, rec.bit_width, rec.storage_bits);
+        runs.push((id, rec));
+    }
+
+    println!("\n-- analytic columns on the full-size ResNet18 (paper Table 1) --");
+    let a = arch::resnet18_cifar();
+    for (label, pol) in [
+        ("Full-Precision", TilingPolicy::fp()),
+        ("BWNN (1-bit)", TilingPolicy::bwnn(0)),
+        ("TBN_4", TilingPolicy::tbn(4, 64_000)),
+        ("TBN_8", TilingPolicy::tbn(8, 64_000)),
+        ("TBN_16", TilingPolicy::tbn(16, 64_000)),
+    ] {
+        let (bw, mbit, sav) = compress::table_row(&a, &pol);
+        println!("{label:16} bit-width {bw:>6.3}  #params {mbit:>8.2} M-bit  savings {sav:>5.1}x");
+    }
+
+    let table = report::accuracy_table(
+        "Table 1 (ResNet18 CIFAR): published vs measured-mini",
+        "resnet18_cifar", "T1",
+        &runs.iter().map(|(l, r)| (*l, r)).collect::<Vec<_>>());
+    println!("\n{}", table.render());
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! Quickstart: the end-to-end driver proving all three layers compose.
+//!
+//! Pipeline exercised (no Python anywhere on this path):
+//!   1. load the AOT artifacts (Layer 2 JAX graphs with the Layer 1 Pallas
+//!      tile-reuse kernel lowered into the forward graph);
+//!   2. train a Tiled Bit Network on a synthetic classification set, with
+//!      the Rust coordinator driving the PJRT train_step graph;
+//!   3. evaluate, export the sub-bit TBNZ model, and verify the exported
+//!      tiles through the forward graph;
+//!   4. run the native Algorithm 1 engine on the same model and serve a few
+//!      requests through the dynamic batcher.
+//!
+//! Run with: `make artifacts && cargo run --release --example quickstart`
+
+use anyhow::{anyhow, Result};
+use tiledbits::config::Manifest;
+use tiledbits::coordinator::run_experiment;
+use tiledbits::nn::{MlpEngine, Nonlin};
+use tiledbits::runtime::Runtime;
+use tiledbits::serve::{BatchPolicy, Server};
+use tiledbits::train::{export, Trainer, TrainOptions};
+use tiledbits::util::human_bytes;
+
+fn main() -> Result<()> {
+    let artifacts = std::env::var("TBN_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let steps: usize = std::env::var("TBN_STEPS").ok()
+        .and_then(|s| s.parse().ok()).unwrap_or(300);
+
+    println!("== tiledbits quickstart ==");
+    let manifest = Manifest::load(&artifacts)
+        .map_err(|e| anyhow!("{e}\nhint: run `make artifacts` first"))?;
+    let rt = Runtime::new(&artifacts)?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // ---- 1+2: train a TBN (p=4) on the synthetic MNIST stand-in ----------
+    let id = "mlp_micro_tbn4";
+    let exp = manifest.by_id(id).ok_or_else(|| anyhow!("missing {id}"))?;
+    println!("\n[1/4] training {id} for {steps} steps (p={}, lambda={})",
+             exp.tiling.p, exp.tiling.lambda);
+    let opts = TrainOptions { steps: Some(steps), eval_every: steps / 4,
+                              log_every: 50, seed: None };
+    let rec = run_experiment(&rt, exp, &opts)?;
+    println!("      final test accuracy {:.2}%  (loss {:.4})",
+             100.0 * rec.metric, rec.loss);
+    println!("      forward-graph verification: {:.1}% prediction agreement",
+             100.0 * rec.forward_agreement);
+
+    // ---- 3: export the sub-bit model --------------------------------------
+    println!("\n[2/4] exporting TBNZ (sub-bit serialized model)");
+    let trainer = Trainer::new(&rt, exp)?;
+    let (_, model) = trainer.run(&TrainOptions {
+        steps: Some(steps), eval_every: 0, log_every: 10_000, seed: None })?;
+    let tbnz = export::to_tbnz(exp, &model)?;
+    let (params, bits, bw) = export::export_summary(&tbnz);
+    println!("      {params} params -> {} on disk ({bw:.3} bits/param, {:.1}x vs 1-bit)",
+             human_bytes(bits as f64 / 8.0), 1.0 / bw);
+    let out = "runs/quickstart.tbnz";
+    std::fs::create_dir_all("runs").ok();
+    tbnz.save(out)?;
+    println!("      wrote {out}");
+
+    // ---- 4a: native engine (Algorithm 1) ----------------------------------
+    println!("\n[3/4] native Algorithm 1 engine");
+    let engine = MlpEngine::new(tbnz, Nonlin::Relu).map_err(|e| anyhow!(e))?;
+    println!("      peak memory {}  storage {}",
+             human_bytes(engine.peak_memory_bytes() as f64),
+             human_bytes(engine.storage_bytes() as f64));
+    let d = trainer.test_ds.x_elems;
+    let fps = engine.measure_fps(&trainer.test_ds.x[..d], 500);
+    println!("      {fps:.0} frames/sec (single core)");
+
+    // ---- 4b: serving stack -------------------------------------------------
+    println!("\n[4/4] serving through the dynamic batcher");
+    let server = Server::start(engine, BatchPolicy::default());
+    let n = 64;
+    for i in 0..n {
+        let x = trainer.test_ds.x[i * d..(i + 1) * d].to_vec();
+        server.infer(x).map_err(|e| anyhow!(e))?;
+    }
+    let stats = server.stats();
+    println!("      served {} requests, mean latency {:.0}us, mean batch {:.2}",
+             stats.served, stats.mean_latency_us(), stats.mean_batch());
+    println!("\nquickstart OK");
+    Ok(())
+}

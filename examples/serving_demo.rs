@@ -1,0 +1,79 @@
+//! Serving demo: a trained sub-bit model behind the dynamic batcher, with
+//! concurrent clients and a latency/throughput report — the deployment story
+//! for the native engine (DESIGN.md L3).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+use tiledbits::config::Manifest;
+use tiledbits::data;
+use tiledbits::nn::{MlpEngine, Nonlin};
+use tiledbits::runtime::Runtime;
+use tiledbits::serve::{BatchPolicy, Server};
+use tiledbits::train::{export, Trainer, TrainOptions};
+
+fn main() -> Result<()> {
+    let artifacts = std::env::var("TBN_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let steps: usize = std::env::var("TBN_STEPS").ok()
+        .and_then(|s| s.parse().ok()).unwrap_or(200);
+    let clients: usize = std::env::var("TBN_CLIENTS").ok()
+        .and_then(|s| s.parse().ok()).unwrap_or(8);
+    let per_client: usize = 200;
+
+    let manifest = Manifest::load(&artifacts).map_err(|e| anyhow!(e))?;
+    let rt = Runtime::new(&artifacts)?;
+    let exp = manifest.by_id("mlp_micro_tbn4").ok_or_else(|| anyhow!("missing exp"))?;
+
+    println!("== serving demo: TBN_4 MLP behind the dynamic batcher ==");
+    println!("training {steps} steps...");
+    let trainer = Trainer::new(&rt, exp)?;
+    let (result, model) = trainer.run(&TrainOptions {
+        steps: Some(steps), eval_every: 0, log_every: 10_000, seed: None })?;
+    println!("test accuracy {:.1}%", 100.0 * result.final_eval.metric);
+
+    let tbnz = export::to_tbnz(exp, &model)?;
+    let engine = MlpEngine::new(tbnz, Nonlin::Relu).map_err(|e| anyhow!(e))?;
+    let in_dim = engine.in_dim();
+    let server = Arc::new(Server::start(engine, BatchPolicy {
+        max_batch: 32,
+        window: Duration::from_micros(250),
+    }));
+
+    let ds = data::generate(&exp.dataset_kind, &exp.io.x, exp.dataset_classes,
+                            per_client * clients, 1234).map_err(|e| anyhow!(e))?;
+    println!("\n{clients} concurrent clients x {per_client} requests each");
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let s = server.clone();
+        let xs: Vec<Vec<f32>> = (0..per_client)
+            .map(|i| {
+                let k = c * per_client + i;
+                ds.x[k * in_dim..(k + 1) * in_dim].to_vec()
+            })
+            .collect();
+        handles.push(std::thread::spawn(move || {
+            let mut lat = Vec::with_capacity(xs.len());
+            for x in xs {
+                let r = s.infer(x).unwrap();
+                lat.push(r.total_us);
+            }
+            lat
+        }));
+    }
+    let mut lats: Vec<u64> = Vec::new();
+    for h in handles {
+        lats.extend(h.join().unwrap());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    lats.sort_unstable();
+    let pct = |p: f64| lats[((lats.len() - 1) as f64 * p) as usize];
+    let stats = server.stats();
+    println!("\nthroughput: {:.0} req/s ({} requests in {wall:.3}s)",
+             lats.len() as f64 / wall, lats.len());
+    println!("latency: p50 {}us  p95 {}us  p99 {}us  max {}us",
+             pct(0.50), pct(0.95), pct(0.99), stats.max_latency_us);
+    println!("batching: {} batches, mean size {:.2}", stats.batches, stats.mean_batch());
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time compiler package: authors and AOT-lowers all compute graphs.
+
+Never imported at runtime — the Rust binary only consumes the HLO text and
+manifest this package emits into ``artifacts/``.
+"""

@@ -1,0 +1,274 @@
+"""AOT compiler: lower every experiment's graphs to HLO text + manifest.
+
+For each entry in ``configs/experiments.json`` this emits four graphs:
+
+* ``<id>.init.hlo.txt``       (seed:i32[]) -> (param_0, ..., param_k)
+* ``<id>.train_step.hlo.txt`` (step, lr, params..., opt..., x, y)
+                              -> (params'..., opt'..., loss, metric)
+* ``<id>.eval_step.hlo.txt``  (params..., x, y) -> (loss, metric, preds)
+* ``<id>.forward.hlo.txt``    (x, infer_params...) -> (logits,)
+
+plus a single ``manifest.json`` describing every tensor positionally (name,
+shape, dtype, role) so the Rust runtime can drive training and inference
+without ever importing Python.
+
+Interchange is HLO **text** (never ``.serialize()``): jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 rejects;
+the text parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .layers import ParamSpec, TilingConfig, accuracy, mse, softmax_xent
+from .models import build_model
+from .optim import apply_update, init_opt_state, opt_slot_count
+from . import layers as L
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def merge_train(defaults: dict, exp: dict) -> dict:
+    out = dict(defaults.get("train", {}))
+    out.update(exp.get("train", {}))
+    return out
+
+
+def task_of(exp: dict) -> str:
+    fam = exp["model"]["family"]
+    if fam == "pointnet_seg":
+        return "seg"
+    if fam == "tst":
+        return "forecast"
+    return "cls"
+
+
+def io_shapes(exp: dict, defaults: dict, task: str) -> dict:
+    ds = exp["dataset"]
+    train_b = merge_train(defaults, exp).get("batch", defaults["train"]["batch"])
+    eval_b = exp.get("eval_batch", defaults.get("eval_batch", 256))
+    serve_b = exp.get("serve_batch", defaults.get("serve_batch", 32))
+    xs = list(ds["input"])
+    if task == "cls":
+        y_train, y_dt = [train_b], "i32"
+        y_eval = [eval_b]
+    elif task == "seg":
+        pts = xs[0]
+        y_train, y_dt = [train_b, pts], "i32"
+        y_eval = [eval_b, pts]
+    else:  # forecast: predict next step for all channels
+        ch = ds["channels"]
+        y_train, y_dt = [train_b, ch], "f32"
+        y_eval = [eval_b, ch]
+    return {
+        "task": task,
+        "train_batch": train_b, "eval_batch": eval_b, "serve_batch": serve_b,
+        "x": xs, "y_train": y_train, "y_eval": y_eval, "y_dtype": y_dt,
+    }
+
+
+def infer_param_entries(specs: List[ParamSpec]) -> List[dict]:
+    """Positional inference-parameter table (what the Rust exporter produces)."""
+    out = []
+    for s in specs:
+        if s.quant == "tiled":
+            out.append({"name": s.name + ".tile", "kind": "tile",
+                        "shape": [s.q], "source": s.name, "p": s.p, "q": s.q})
+            out.append({"name": s.name + ".alphas", "kind": "alphas",
+                        "shape": [s.n_alphas], "source": s.name,
+                        "alpha_src": s.alpha_src, "p": s.p, "q": s.q})
+        elif s.quant == "bwnn":
+            out.append({"name": s.name + ".bin", "kind": "bwnn_bin",
+                        "shape": list(s.shape), "source": s.name})
+            out.append({"name": s.name + ".alpha", "kind": "bwnn_alpha",
+                        "shape": [1], "source": s.name})
+        elif s.role == "alpha_src":
+            continue  # A is a training-only parameter; never shipped
+        else:
+            out.append({"name": s.name, "kind": "fp",
+                        "shape": list(s.shape), "source": s.name})
+    return out
+
+
+def build_graphs(exp: dict, defaults: dict):
+    """Returns (manifest_entry, {graph_name: hlo_text})."""
+    tiling = TilingConfig.from_json(exp["tiling"])
+    model = build_model(exp["model"], tiling)
+    specs = model.specs
+    n_params = len(specs)
+    tr = merge_train(defaults, exp)
+    opt_kind = tr.get("opt", "sgd")
+    slots = opt_slot_count(opt_kind)
+    task = task_of(exp)
+    io = io_shapes(exp, defaults, task)
+    smoothing = float(tr.get("label_smoothing", 0.0))
+
+    x_train = jax.ShapeDtypeStruct((io["train_batch"], *io["x"]), F32)
+    x_eval = jax.ShapeDtypeStruct((io["eval_batch"], *io["x"]), F32)
+    x_serve = jax.ShapeDtypeStruct((io["serve_batch"], *io["x"]), F32)
+    y_dt = I32 if io["y_dtype"] == "i32" else F32
+    y_train = jax.ShapeDtypeStruct(tuple(io["y_train"]), y_dt)
+    y_eval = jax.ShapeDtypeStruct(tuple(io["y_eval"]), y_dt)
+    param_sds = [jax.ShapeDtypeStruct(s.shape, F32) for s in specs]
+    opt_sds = [jax.ShapeDtypeStruct(s.shape, F32) for s in specs for _ in range(slots)]
+
+    def unflatten(flat) -> Dict[str, jnp.ndarray]:
+        return {s.name: v for s, v in zip(specs, flat)}
+
+    def loss_metric(params, x, y):
+        logits = model.apply(params, x)
+        if task == "forecast":
+            loss = mse(logits, y)
+            return loss, loss
+        loss = softmax_xent(logits, y, smoothing)
+        return loss, accuracy(logits, y)
+
+    # ---- init ----
+    def init_fn(seed):
+        params = L.init_params(seed, specs)
+        return tuple(params[s.name] for s in specs)
+
+    # ---- train_step ----
+    def train_step_fn(step, lr, *flat):
+        # keep `step` alive even for optimizers that ignore it (SGD): jax
+        # prunes unused arguments at lowering, which would shift the Rust
+        # side's positional input list.
+        lr = lr + 0.0 * step
+        params = unflatten(flat[:n_params])
+        opt_state = list(flat[n_params:n_params + n_params * slots])
+        x, y = flat[-2], flat[-1]
+
+        def lf(p):
+            loss, metric = loss_metric(p, x, y)
+            return loss, metric
+
+        (loss, metric), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        new_params, new_state = apply_update(
+            opt_kind, specs, params, grads, opt_state, lr, step, tr)
+        return (*[new_params[s.name] for s in specs], *new_state, loss, metric)
+
+    # ---- eval_step ----
+    def eval_step_fn(*flat):
+        params = unflatten(flat[:n_params])
+        x, y = flat[-2], flat[-1]
+        logits = model.apply(params, x)
+        if task == "forecast":
+            loss = mse(logits, y)
+            preds = jnp.zeros((1,), I32)
+            return loss, loss, preds
+        loss = softmax_xent(logits, y, smoothing)
+        return loss, accuracy(logits, y), jnp.argmax(logits, axis=-1).astype(I32)
+
+    # ---- forward (inference path; tiled FC -> Pallas kernel) ----
+    infer_entries = infer_param_entries(specs)
+    infer_sds = [jax.ShapeDtypeStruct(tuple(e["shape"]), F32) for e in infer_entries]
+
+    def forward_fn(x, *flat):
+        params = {e["name"]: v for e, v in zip(infer_entries, flat)}
+        return (model.apply(params, x),)
+
+    t0 = time.time()
+    graphs = {}
+    graphs["init"] = to_hlo_text(jax.jit(init_fn).lower(
+        jax.ShapeDtypeStruct((), I32)))
+    graphs["train_step"] = to_hlo_text(jax.jit(train_step_fn).lower(
+        jax.ShapeDtypeStruct((), F32), jax.ShapeDtypeStruct((), F32),
+        *param_sds, *opt_sds, x_train, y_train))
+    graphs["eval_step"] = to_hlo_text(jax.jit(eval_step_fn).lower(
+        *param_sds, x_eval, y_eval))
+    graphs["forward"] = to_hlo_text(jax.jit(forward_fn).lower(
+        x_serve, *infer_sds))
+    elapsed = time.time() - t0
+
+    entry = {
+        "id": exp["id"],
+        "tables": exp.get("tables", []),
+        "model": exp["model"],
+        "dataset": exp["dataset"],
+        "tiling": dataclass_tiling(tiling),
+        "train": tr,
+        "io": io,
+        "opt": {"kind": opt_kind, "slots": slots},
+        "params": [
+            {"name": s.name, "shape": list(s.shape), "role": s.role,
+             "quant": s.quant, "p": s.p, "q": s.q if s.quant == "tiled" else 0,
+             "n_alphas": s.n_alphas if s.quant == "tiled" else 0,
+             "alpha_src": s.alpha_src if s.quant == "tiled" else ""}
+            for s in specs
+        ],
+        "infer_params": infer_entries,
+        "graphs": {
+            name: {"file": f"{exp['id']}.{name}.hlo.txt"} for name in graphs
+        },
+        "lower_seconds": round(elapsed, 2),
+    }
+    return entry, graphs
+
+
+def dataclass_tiling(t: TilingConfig) -> dict:
+    return {"mode": t.mode, "p": t.p, "lambda": t.lam,
+            "alpha": t.alpha, "alpha_src": t.alpha_src}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--config", default="../configs/experiments.json")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated experiment-id prefixes to build")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    with open(args.config) as f:
+        cfg = json.load(f)
+    defaults = cfg["defaults"]
+    exps = cfg["experiments"]
+    if args.list:
+        for e in exps:
+            print(e["id"])
+        return 0
+    if args.only:
+        prefixes = args.only.split(",")
+        exps = [e for e in exps if any(e["id"].startswith(p) for p in prefixes)]
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"experiments": []}
+    total0 = time.time()
+    for i, exp in enumerate(exps):
+        entry, graphs = build_graphs(exp, defaults)
+        for name, text in graphs.items():
+            path = os.path.join(args.out, entry["graphs"][name]["file"])
+            with open(path, "w") as f:
+                f.write(text)
+        manifest["experiments"].append(entry)
+        print(f"[{i + 1}/{len(exps)}] {exp['id']}: "
+              f"{len(entry['params'])} params, lowered in {entry['lower_seconds']}s",
+              flush=True)
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['experiments'])} experiments "
+          f"in {time.time() - total0:.1f}s -> {args.out}/manifest.json")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,7 @@
+"""L1 compute kernels: Pallas tile-reuse kernels + the pure-jnp oracle."""
+
+from . import ref
+from .tile_construct import tile_alphas, tile_construct
+from .tiled_matmul import tiled_matmul, vmem_bytes_tiled
+
+__all__ = ["ref", "tiled_matmul", "tile_construct", "tile_alphas", "vmem_bytes_tiled"]

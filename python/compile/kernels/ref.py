@@ -1,0 +1,107 @@
+"""Pure-jnp reference oracle for the Tiled Bit Network core ops.
+
+This module is the single source of truth for the *semantics* of the paper's
+Equations 1-9 (Gorbett et al., CIKM 2024).  Every other implementation — the
+Pallas kernels in this package, the training layers in ``compile.layers``, and
+the Rust host implementations in ``rust/src/tbn/`` — is tested against these
+functions.
+
+Canonical layout convention (used everywhere in this repo):
+
+* A weight tensor ``W`` with ``N`` elements is flattened **row-major** (C
+  order) to a vector ``w`` of length ``N = p * q``.
+* Eq. 1-2: ``w`` is viewed as a ``p x q`` matrix (each row is one *tile slot*)
+  and summed over the ``p`` axis, giving ``s`` of length ``q``.
+* Eq. 3: the tile is ``t = sign(s)`` with the paper's convention
+  ``t_i = 1 if s_i > 0 else -1`` (zero maps to -1).
+* Eq. 4-5: the binary weight is ``b[k] = t[k mod q]``, reshaped back to the
+  original tensor shape.  Consequently the alpha of flat element ``k`` is
+  ``alpha[k div q]`` in the per-tile setting.
+
+This matches Algorithm 1's pointer arithmetic (the tile index cycles through
+the flattened weights, the alpha index increments every ``q`` elements).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def tile_from_weights(w: jnp.ndarray, p: int) -> jnp.ndarray:
+    """Eqs. 1-3: aggregate the flattened weights into a q-length binary tile.
+
+    Args:
+      w: weight tensor of any shape whose element count is divisible by ``p``.
+      p: compression factor (number of tile replicas in the layer).
+
+    Returns:
+      ``t`` of shape ``(q,)`` with values in {-1, +1} (same dtype as ``w``).
+    """
+    n = w.size
+    assert n % p == 0, f"layer size {n} not divisible by p={p}"
+    q = n // p
+    s = w.reshape(p, q).sum(axis=0)
+    return jnp.where(s > 0, 1.0, -1.0).astype(w.dtype)
+
+
+def alphas_from(a: jnp.ndarray, p: int, per_tile: bool) -> jnp.ndarray:
+    """Eqs. 7 & 9: compute the scaling factor(s) for one layer.
+
+    Args:
+      a: the tensor used for scaling (either ``W`` itself or the independent
+        parameter ``A``), same shape as the layer weight.
+      p: compression factor.
+      per_tile: if True returns one alpha per tile (shape ``(p,)``, Eq. 9);
+        otherwise a single layer-wide alpha (shape ``(1,)``, Eq. 7).
+
+    Returns:
+      alphas of shape ``(p,)`` or ``(1,)`` (non-negative).
+    """
+    n = a.size
+    if per_tile:
+        q = n // p
+        return jnp.abs(a.reshape(p, q)).mean(axis=1)
+    return jnp.abs(a).reshape(1, -1).mean(axis=1)
+
+
+def expand_tile(t: jnp.ndarray, alphas: jnp.ndarray, shape: tuple) -> jnp.ndarray:
+    """Eqs. 4-5 plus scaling: reconstruct the full weight tensor B-hat.
+
+    ``b[k] = t[k mod q] * alphas[k // q]`` reshaped to ``shape`` (with a
+    single alpha the same scalar covers all tiles).
+    """
+    n = 1
+    for d in shape:
+        n *= d
+    q = t.shape[0]
+    p = n // q
+    assert p * q == n, f"tile length {q} does not divide layer size {n}"
+    b = jnp.tile(t, p)
+    if alphas.shape[0] == 1:
+        scale = jnp.broadcast_to(alphas, (n,))
+    else:
+        assert alphas.shape[0] == p
+        scale = jnp.repeat(alphas, q)
+    return (b * scale).reshape(shape)
+
+
+def tiled_dense_ref(
+    x: jnp.ndarray, t: jnp.ndarray, alphas: jnp.ndarray, out_features: int, in_features: int
+) -> jnp.ndarray:
+    """Reference tiled fully-connected forward: ``y = x @ B-hat^T``.
+
+    The weight matrix is ``(out_features, in_features)`` reconstructed from
+    the tile; ``x`` is ``(batch, in_features)``.
+    """
+    bhat = expand_tile(t, alphas, (out_features, in_features))
+    return x @ bhat.T
+
+
+def binarize_bwnn(w: jnp.ndarray) -> tuple:
+    """XNOR-Net-style binary-weight baseline: sign(w) with mean-|w| scaling.
+
+    Returns (binary weights in {-1,+1}, scalar alpha of shape (1,)).
+    """
+    alpha = jnp.abs(w).reshape(1, -1).mean(axis=1)
+    b = jnp.where(w > 0, 1.0, -1.0).astype(w.dtype)
+    return b, alpha

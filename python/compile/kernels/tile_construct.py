@@ -1,0 +1,76 @@
+"""Pallas kernels for tile construction (training forward, Eqs. 1-3 & 9).
+
+Two small kernels used on the training path's forward pass:
+
+* ``tile_construct`` — view the flattened weights as ``(p, q)``, sum over the
+  ``p`` replicas and threshold (Eqs. 1-3).  Grid walks ``q`` in blocks; each
+  step reduces a ``(p, bq)`` strip, so VMEM holds ``p*bq`` weights at a time
+  rather than the whole layer.
+* ``tile_alphas`` — per-tile scaling factors (Eq. 9): mean absolute value of
+  each length-``q`` segment.  Grid walks the ``p`` tiles in blocks.
+
+Both are lowered with ``interpret=True`` (CPU PJRT); semantics are pinned by
+``ref.tile_from_weights`` / ``ref.alphas_from`` and the hypothesis suite in
+``python/tests/test_kernels.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _divisor_le(n: int, target: int) -> int:
+    best = 1
+    for d in range(1, min(n, target) + 1):
+        if n % d == 0:
+            best = d
+    return best
+
+
+def _construct_kernel(w_ref, t_ref):
+    s = w_ref[...].sum(axis=0)                       # (bq,)
+    t_ref[...] = jnp.where(s > 0, 1.0, -1.0).astype(t_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("p", "interpret"))
+def tile_construct(w: jnp.ndarray, p: int, interpret: bool = True) -> jnp.ndarray:
+    """Eqs. 1-3 as a Pallas kernel: flattened ``w`` -> (q,) binary tile."""
+    n = w.size
+    assert n % p == 0
+    q = n // p
+    bq = _divisor_le(q, 512)
+    wm = w.reshape(p, q)
+    return pl.pallas_call(
+        _construct_kernel,
+        grid=(q // bq,),
+        in_specs=[pl.BlockSpec((p, bq), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((bq,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((q,), w.dtype),
+        interpret=interpret,
+    )(wm)
+
+
+def _alpha_kernel(a_ref, o_ref):
+    o_ref[...] = jnp.abs(a_ref[...]).mean(axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("p", "interpret"))
+def tile_alphas(a: jnp.ndarray, p: int, interpret: bool = True) -> jnp.ndarray:
+    """Eq. 9 as a Pallas kernel: flattened ``a`` -> (p,) per-tile alphas."""
+    n = a.size
+    assert n % p == 0
+    q = n // p
+    bp = _divisor_le(p, 64)
+    am = a.reshape(p, q)
+    return pl.pallas_call(
+        _alpha_kernel,
+        grid=(p // bp,),
+        in_specs=[pl.BlockSpec((bp, q), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bp,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((p,), a.dtype),
+        interpret=interpret,
+    )(am)

@@ -1,0 +1,121 @@
+"""Pallas tile-reusing fully-connected kernel (paper section 5.2, TPU-adapted).
+
+The paper's Triton kernel keeps a single ``m x q`` tile resident and wraps the
+weight pointer modulo ``q`` while sweeping an ``m x n`` matmul.  On TPU the
+analogous resource is VMEM: this kernel's weight-side VMEM footprint is the
+``q``-length tile plus ``p`` alpha scalars instead of the full ``N = p*q``
+weight matrix.  Each grid step reconstructs its weight block in-register from
+the *same* tile ref (constant index_map -> Mosaic keeps one copy resident),
+replacing Triton's modular pointer arithmetic with a gather over
+``flat_index mod q``.
+
+Must be lowered with ``interpret=True``: the CPU PJRT client (xla_extension
+0.5.1) cannot execute Mosaic custom-calls.  Real-TPU efficiency is estimated
+analytically in DESIGN.md section 8 / EXPERIMENTS.md section Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _block_rows(m: int, target: int = 128) -> int:
+    """Largest divisor of ``m`` that is <= target (output rows per grid step)."""
+    best = 1
+    for d in range(1, min(m, target) + 1):
+        if m % d == 0:
+            best = d
+    return best
+
+
+def _kernel(x_ref, t_ref, a_ref, o_ref, *, n: int, q: int, bm: int, n_alphas: int):
+    """One output block: rows [i*bm, (i+1)*bm) of y = x @ B-hat^T.
+
+    The weight block is reconstructed from the tile:
+      B-hat[r, c] = t[(r*n + c) mod q] * alpha[(r*n + c) // q]
+    """
+    i = pl.program_id(0)
+    rows = i * bm + jnp.arange(bm, dtype=jnp.int32)            # (bm,)
+    cols = jnp.arange(n, dtype=jnp.int32)                      # (n,)
+    flat = rows[:, None] * n + cols[None, :]                   # (bm, n)
+    tile = t_ref[...]                                          # (q,) - the only weight-side load
+    w = jnp.take(tile, flat % q, axis=0)                       # (bm, n) in-register expansion
+    if n_alphas == 1:
+        w = w * a_ref[0]
+    else:
+        alphas = a_ref[...]                                    # (p,)
+        w = w * jnp.take(alphas, flat // q, axis=0)
+    o_ref[...] = jnp.dot(x_ref[...], w.T, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("out_features", "in_features", "interpret", "block_rows"))
+def tiled_matmul(
+    x: jnp.ndarray,
+    t: jnp.ndarray,
+    alphas: jnp.ndarray,
+    out_features: int,
+    in_features: int,
+    interpret: bool = True,
+    block_rows: int | None = None,
+) -> jnp.ndarray:
+    """y = x @ expand(t, alphas)^T without materializing the weight matrix.
+
+    Args:
+      x: (batch, in_features) activations.
+      t: (q,) binary tile (+-1 floats).
+      alphas: (p,) per-tile or (1,) layer-wide scalars.
+      out_features/in_features: weight matrix shape (m, n); m*n == p*q.
+      interpret: keep True for CPU PJRT (see module docstring).
+      block_rows: override the output-row block size (must divide m).
+
+    Returns:
+      (batch, out_features) float32.
+    """
+    m, n = out_features, in_features
+    q = t.shape[0]
+    n_alphas = alphas.shape[0]
+    assert x.shape[-1] == n, f"x last dim {x.shape[-1]} != in_features {n}"
+    assert (m * n) % q == 0, f"tile length {q} must divide layer size {m * n}"
+    bm = block_rows if block_rows is not None else _block_rows(m)
+    assert m % bm == 0
+    batch = x.shape[0]
+
+    kernel = functools.partial(_kernel, n=n, q=q, bm=bm, n_alphas=n_alphas)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm,),
+        in_specs=[
+            # x: whole activation block every step (constant index_map ->
+            # resident in VMEM once, not re-fetched per grid step).
+            pl.BlockSpec((batch, n), lambda i: (0, 0)),
+            # the tile: THE point of the kernel - same (q,) block for every
+            # output block; weight-side HBM->VMEM traffic is q elements total.
+            pl.BlockSpec((q,), lambda i: (0,)),
+            pl.BlockSpec((n_alphas,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((batch, bm), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((batch, m), jnp.float32),
+        interpret=interpret,
+    )(x, t, alphas)
+
+
+def vmem_bytes_tiled(batch: int, m: int, n: int, q: int, p: int, bm: int | None = None) -> dict:
+    """Analytic VMEM footprint of one grid step of the tiled kernel (f32).
+
+    Used by the performance model (EXPERIMENTS.md section Perf) to compare
+    against a standard blocked matmul, which must stream all m*n weights.
+    """
+    bm = bm if bm is not None else _block_rows(m)
+    return {
+        "x": batch * n * 4,
+        "tile": q * 4,
+        "alphas": p * 4,
+        "w_block_scratch": bm * n * 4,
+        "out": batch * bm * 4,
+        "weight_stream_total": q * 4,          # vs m*n*4 for a dense kernel
+        "dense_weight_stream_total": m * n * 4,
+    }

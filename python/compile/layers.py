@@ -1,0 +1,434 @@
+"""Layer-2 building blocks: tiled/binary/full-precision layers with STE.
+
+This module implements the paper's Equations 1-9 as *differentiable training
+ops* (straight-through estimation) plus the standard NN primitives needed by
+the model zoo in ``compile.models``.  Semantics of the tiling math are pinned
+by ``compile.kernels.ref`` (the pure-jnp oracle) and the hypothesis suite.
+
+Parameter bookkeeping
+---------------------
+Models are pure functions over an ordered dict of named arrays.  Every
+parameter is declared with a :class:`ParamSpec`; the tiling *decision* (tile /
+binarize / keep fp) is made once at model-build time from the experiment's
+``tiling`` config (mode, p, lambda, alpha mode, alpha source) and recorded on
+the spec so that
+
+* the AOT compiler (``compile.aot``) can emit a manifest describing exactly
+  which parameters are tiles/alphas/weights, and
+* the Rust coordinator can reconstruct inference parameters natively.
+
+Straight-through estimation
+---------------------------
+``ste_sign(s) = s + stop_grad(sign(s) - s)`` — forward is the hard sign of
+Eq. 3, backward is identity, so gradients flow through the reshape+sum of
+Eqs. 1-2 into W exactly as the paper's Eq. 6 prescribes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Tiling configuration + parameter specs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TilingConfig:
+    """Experiment-wide tiling policy (paper section 3, Hyperparameter Settings).
+
+    mode: "fp" (no quantization), "bwnn" (1-bit XNOR-style), "tbn" (tiled).
+    p: compression factor (tiles per layer).
+    lam: minimum layer size N for tiling/binarization (paper's lambda).
+    alpha: "single" (Eq. 7) or "per_tile" (Eq. 9).
+    alpha_src: "W" (reuse the weight) or "A" (independent parameter).
+    """
+
+    mode: str = "fp"
+    p: int = 4
+    lam: int = 64_000
+    alpha: str = "per_tile"
+    alpha_src: str = "A"
+
+    @staticmethod
+    def from_json(d: dict) -> "TilingConfig":
+        return TilingConfig(
+            mode=d.get("mode", "fp"),
+            p=int(d.get("p", 4)),
+            lam=int(d.get("lambda", 64_000)),
+            alpha=d.get("alpha", "per_tile"),
+            alpha_src=d.get("alpha_src", "A"),
+        )
+
+
+@dataclasses.dataclass
+class ParamSpec:
+    """One named parameter of a model, with its tiling decision.
+
+    quant is one of:
+      "tiled"  — weight trained full-precision, tiled at inference (Eqs. 1-5);
+      "bwnn"   — binarized with a single mean-|w| alpha (XNOR-Net style);
+      "fp"     — left full precision (layer below lambda, or fp mode);
+      "aux"    — non-weight parameter (norm scales, embeddings, ...), never
+                 quantized; also used for the independent alpha source A.
+    """
+
+    name: str
+    shape: Tuple[int, ...]
+    init: str  # "kaiming" | "zeros" | "ones" | "normal" | "trunc_normal"
+    role: str  # "weight" | "alpha_src" | "other"
+    quant: str = "fp"
+    p: int = 1
+    n_alphas: int = 1
+    alpha_src: str = "W"
+    fan_in: Optional[int] = None  # overrides kaiming fan-in when set
+
+    @property
+    def size(self) -> int:
+        return int(math.prod(self.shape))
+
+    @property
+    def q(self) -> int:
+        return self.size // self.p
+
+
+class ModelDef:
+    """A model = ordered parameter specs + an apply function.
+
+    ``apply(params, x) -> logits`` runs the *training-path* forward (tiling
+    via STE from W).  ``specs`` drive init, the optimizer, the AOT manifest
+    and the Rust-side export.
+    """
+
+    def __init__(self, specs: List[ParamSpec], apply: Callable[[Params, jnp.ndarray], jnp.ndarray]):
+        self.specs = specs
+        self.apply = apply
+
+    def spec(self, name: str) -> ParamSpec:
+        for s in self.specs:
+            if s.name == name:
+                return s
+        raise KeyError(name)
+
+
+class SpecBuilder:
+    """Collects ParamSpecs while a model function declares its layers.
+
+    The builder applies the experiment's TilingConfig to every weight
+    declaration: a weight of size N is tiled iff mode=="tbn", N >= lambda and
+    p divides N; binarized iff mode=="bwnn" and N >= lambda.  Tiled weights
+    with alpha_src=="A" get a sibling parameter "<name>.A".
+    """
+
+    def __init__(self, tiling: TilingConfig):
+        self.tiling = tiling
+        self.specs: List[ParamSpec] = []
+        self._names: set = set()
+
+    def _add(self, spec: ParamSpec) -> ParamSpec:
+        assert spec.name not in self._names, f"duplicate param {spec.name}"
+        self._names.add(spec.name)
+        self.specs.append(spec)
+        return spec
+
+    def weight(self, name: str, shape: Sequence[int], init: str = "kaiming",
+               fan_in: Optional[int] = None) -> ParamSpec:
+        shape = tuple(int(d) for d in shape)
+        n = int(math.prod(shape))
+        t = self.tiling
+        if t.mode == "tbn" and n >= t.lam and n % t.p == 0:
+            n_alphas = t.p if t.alpha == "per_tile" else 1
+            spec = self._add(ParamSpec(name, shape, init, "weight", "tiled",
+                                       p=t.p, n_alphas=n_alphas,
+                                       alpha_src=t.alpha_src, fan_in=fan_in))
+            if t.alpha_src == "A":
+                self._add(ParamSpec(name + ".A", shape, init, "alpha_src",
+                                    "aux", fan_in=fan_in))
+            return spec
+        if t.mode in ("tbn", "bwnn"):
+            # TBNs are built on binary-weight models: every weight layer that
+            # is not tiled (below lambda, or indivisible by p) is stored at
+            # 1 bit, XNOR-Net style.  This matches the paper's accounting
+            # (e.g. Table 6: the untiled classification head is 1-bit) and
+            # its bit-width columns.
+            return self._add(ParamSpec(name, shape, init, "weight", "bwnn",
+                                       fan_in=fan_in))
+        return self._add(ParamSpec(name, shape, init, "weight", "fp", fan_in=fan_in))
+
+    def other(self, name: str, shape: Sequence[int], init: str) -> ParamSpec:
+        return self._add(ParamSpec(name, tuple(int(d) for d in shape), init,
+                                   "other", "aux"))
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+
+def _fan_in(spec: ParamSpec) -> int:
+    if spec.fan_in is not None:
+        return spec.fan_in
+    if len(spec.shape) == 2:  # (out, in)
+        return spec.shape[1]
+    if len(spec.shape) == 4:  # (out_c, in_c, kh, kw)
+        return spec.shape[1] * spec.shape[2] * spec.shape[3]
+    return max(1, spec.size // max(1, spec.shape[0]))
+
+
+def init_param(key: jax.Array, spec: ParamSpec) -> jnp.ndarray:
+    """Kaiming-normal (scale-fan, per the paper's appendix) and friends."""
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, jnp.float32)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, jnp.float32)
+    if spec.init == "normal":
+        return 0.02 * jax.random.normal(key, spec.shape, jnp.float32)
+    if spec.init == "trunc_normal":
+        return 0.02 * jax.random.truncated_normal(key, -2.0, 2.0, spec.shape, jnp.float32)
+    # kaiming normal with fan-in scaling (He init, gain for ReLU)
+    std = math.sqrt(2.0 / _fan_in(spec))
+    return std * jax.random.normal(key, spec.shape, jnp.float32)
+
+
+def init_params(seed: jnp.ndarray, specs: List[ParamSpec]) -> Params:
+    """Deterministically initialize every parameter from an i32 seed scalar.
+
+    The independent alpha source A is initialized from a different fold of
+    the key than its W (the paper seeds W and A differently).
+    """
+    key = jax.random.PRNGKey(seed)
+    out: Params = {}
+    for i, spec in enumerate(specs):
+        sub = jax.random.fold_in(key, i)
+        if spec.role == "alpha_src":
+            sub = jax.random.fold_in(sub, 0x5EED)
+        out[spec.name] = init_param(sub, spec)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Straight-through tiling (training path)
+# ---------------------------------------------------------------------------
+
+
+def ste_sign(s: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 3 forward (sign with 0 -> -1), identity backward."""
+    hard = jnp.where(s > 0, 1.0, -1.0).astype(s.dtype)
+    return s + jax.lax.stop_gradient(hard - s)
+
+
+def effective_weight(params: Params, spec: ParamSpec) -> jnp.ndarray:
+    """The weight actually used by the layer, per the spec's quant decision.
+
+    tiled: Eqs. 1-5 with STE + alpha scaling (Eqs. 7/9) from W or A.
+    bwnn:  alpha * ste_sign(W)  (XNOR-Net binary-weight baseline).
+    fp:    W unchanged.
+    """
+    w = params[spec.name]
+    if spec.quant == "fp" or spec.quant == "aux":
+        return w
+    if spec.quant == "bwnn":
+        alpha = jnp.mean(jnp.abs(w))
+        return alpha * ste_sign(w)
+    assert spec.quant == "tiled"
+    p, q = spec.p, spec.q
+    s = w.reshape(p, q).sum(axis=0)  # Eqs. 1-2
+    t = ste_sign(s)  # Eq. 3
+    a_src = params[spec.name + ".A"] if spec.alpha_src == "A" else w
+    if spec.n_alphas == 1:
+        alphas = jnp.mean(jnp.abs(a_src)).reshape(1)  # Eq. 7
+        scale = jnp.broadcast_to(alphas, (spec.size,))
+    else:
+        alphas = jnp.mean(jnp.abs(a_src.reshape(p, q)), axis=1)  # Eq. 9
+        scale = jnp.repeat(alphas, q)
+    b = jnp.tile(t, p) * scale  # Eqs. 4-5 + scaling
+    return b.reshape(spec.shape)
+
+
+def inference_weight_arrays(w: jnp.ndarray, a: Optional[jnp.ndarray],
+                            spec: ParamSpec) -> Dict[str, jnp.ndarray]:
+    """What gets *stored* for inference (mirrors the Rust-side exporter).
+
+    tiled -> {tile (q,), alphas (n_alphas,)}; bwnn -> {bin (shape), alpha (1,)};
+    fp -> {w}.  Used by tests and by aot.py to build the forward graph's
+    example inputs.
+    """
+    if spec.quant == "tiled":
+        t = ref.tile_from_weights(w, spec.p)
+        src = a if (spec.alpha_src == "A" and a is not None) else w
+        alphas = ref.alphas_from(src, spec.p, per_tile=spec.n_alphas > 1)
+        return {"tile": t, "alphas": alphas}
+    if spec.quant == "bwnn":
+        b, alpha = ref.binarize_bwnn(w)
+        return {"bin": b, "alpha": alpha}
+    return {"w": w}
+
+
+# ---------------------------------------------------------------------------
+# NN primitives (training path; no biases on quantized layers, per the paper)
+# ---------------------------------------------------------------------------
+
+
+def _inference_weight(params: Params, spec: ParamSpec) -> Optional[jnp.ndarray]:
+    """Reconstruct a weight from *inference* parameters if present.
+
+    The forward (serving) graph is traced over a params dict keyed by the
+    exported artifact names: ``<name>.tile``/``<name>.alphas`` for tiled
+    layers, ``<name>.bin``/``<name>.alpha`` for BWNN layers, plain ``<name>``
+    for full-precision.  Returns None when ``params`` holds training params.
+    """
+    if spec.name + ".tile" in params:
+        t = params[spec.name + ".tile"]
+        alphas = params[spec.name + ".alphas"]
+        return ref.expand_tile(t, alphas, spec.shape)
+    if spec.name + ".bin" in params:
+        return params[spec.name + ".bin"] * params[spec.name + ".alpha"]
+    return None
+
+
+def dense(params: Params, spec: ParamSpec, x: jnp.ndarray) -> jnp.ndarray:
+    """y = x @ W^T with W of shape (out, in); x (..., in).
+
+    On the inference path a *tiled* dense layer routes through the Pallas
+    tile-reusing kernel (paper §5.2): only the q-length tile and the alpha
+    vector are weight-side operands — the full matrix is never materialized.
+    """
+    if spec.name + ".tile" in params:
+        from .kernels.tiled_matmul import tiled_matmul
+
+        out_f, in_f = spec.shape
+        xb = x.reshape(-1, in_f)
+        y = tiled_matmul(xb, params[spec.name + ".tile"],
+                         params[spec.name + ".alphas"], out_f, in_f,
+                         interpret=True)
+        return y.reshape(*x.shape[:-1], out_f).astype(x.dtype)
+    if spec.name + ".bin" in params:
+        w = params[spec.name + ".bin"] * params[spec.name + ".alpha"]
+        return x @ w.T
+    w = effective_weight(params, spec)
+    return x @ w.T
+
+
+def conv2d(params: Params, spec: ParamSpec, x: jnp.ndarray, stride: int = 1,
+           padding: str = "SAME", groups: int = 1) -> jnp.ndarray:
+    """NCHW conv with OIHW weights (tiled convs expand the tile in-graph)."""
+    w = _inference_weight(params, spec)
+    if w is None:
+        w = effective_weight(params, spec)
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=padding,
+        feature_group_count=groups,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+
+
+def groupnorm(params: Params, prefix: str, x: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """GroupNorm over NCHW (batch-independent; BN substitute, see DESIGN §7)."""
+    n, c, h, w = x.shape
+    g = min(groups, c)
+    while c % g != 0:
+        g -= 1
+    xg = x.reshape(n, g, c // g, h, w)
+    mean = xg.mean(axis=(2, 3, 4), keepdims=True)
+    var = xg.var(axis=(2, 3, 4), keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + 1e-5)
+    xn = xg.reshape(n, c, h, w)
+    scale = params[prefix + ".gn_scale"].reshape(1, c, 1, 1)
+    bias = params[prefix + ".gn_bias"].reshape(1, c, 1, 1)
+    return xn * scale + bias
+
+
+def layernorm(params: Params, prefix: str, x: jnp.ndarray) -> jnp.ndarray:
+    mean = x.mean(axis=-1, keepdims=True)
+    var = x.var(axis=-1, keepdims=True)
+    xn = (x - mean) * jax.lax.rsqrt(var + 1e-5)
+    return xn * params[prefix + ".ln_scale"] + params[prefix + ".ln_bias"]
+
+
+def declare_groupnorm(b: SpecBuilder, prefix: str, channels: int) -> None:
+    b.other(prefix + ".gn_scale", (channels,), "ones")
+    b.other(prefix + ".gn_bias", (channels,), "zeros")
+
+
+def declare_layernorm(b: SpecBuilder, prefix: str, dim: int) -> None:
+    b.other(prefix + ".ln_scale", (dim,), "ones")
+    b.other(prefix + ".ln_bias", (dim,), "zeros")
+
+
+def attention(params: Params, model: "ModelBind", prefix: str, x: jnp.ndarray,
+              heads: int) -> jnp.ndarray:
+    """Multi-head self-attention; q/k/v/proj are tileable dense layers.
+
+    x: (batch, tokens, dim).
+    """
+    bsz, tok, dim = x.shape
+    hd = dim // heads
+    q = model.dense(prefix + ".wq", x)
+    k = model.dense(prefix + ".wk", x)
+    v = model.dense(prefix + ".wv", x)
+
+    def split(z):
+        return z.reshape(bsz, tok, heads, hd).transpose(0, 2, 1, 3)
+
+    qh, kh, vh = split(q), split(k), split(v)
+    att = (qh @ kh.transpose(0, 1, 3, 2)) / math.sqrt(hd)
+    att = jax.nn.softmax(att, axis=-1)
+    out = (att @ vh).transpose(0, 2, 1, 3).reshape(bsz, tok, dim)
+    return model.dense(prefix + ".wo", out)
+
+
+class ModelBind:
+    """Convenience wrapper binding a spec list to a params dict at apply time."""
+
+    def __init__(self, specs: List[ParamSpec], params: Params):
+        self._by_name = {s.name: s for s in specs}
+        self.params = params
+
+    def dense(self, name: str, x: jnp.ndarray) -> jnp.ndarray:
+        return dense(self.params, self._by_name[name], x)
+
+    def conv(self, name: str, x: jnp.ndarray, stride: int = 1,
+             padding: str = "SAME", groups: int = 1) -> jnp.ndarray:
+        return conv2d(self.params, self._by_name[name], x, stride, padding, groups)
+
+    def gn(self, prefix: str, x: jnp.ndarray, groups: int = 8) -> jnp.ndarray:
+        return groupnorm(self.params, prefix, x, groups)
+
+    def ln(self, prefix: str, x: jnp.ndarray) -> jnp.ndarray:
+        return layernorm(self.params, prefix, x)
+
+    def p(self, name: str) -> jnp.ndarray:
+        return self.params[name]
+
+
+# ---------------------------------------------------------------------------
+# Losses / metrics
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 smoothing: float = 0.0) -> jnp.ndarray:
+    """Mean cross-entropy; labels int32 of shape logits.shape[:-1]."""
+    nclass = logits.shape[-1]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, nclass, dtype=logits.dtype)
+    if smoothing > 0.0:
+        onehot = onehot * (1.0 - smoothing) + smoothing / nclass
+    return -(onehot * logp).sum(axis=-1).mean()
+
+
+def accuracy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    return (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32).mean()
+
+
+def mse(pred: jnp.ndarray, target: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean((pred - target) ** 2)

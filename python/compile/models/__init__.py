@@ -1,0 +1,35 @@
+"""Model zoo: every architecture family the paper evaluates, scaled to CPU.
+
+``build_model(model_cfg, tiling)`` dispatches on ``model_cfg["family"]`` and
+returns a :class:`compile.layers.ModelDef` (ordered ParamSpecs + apply fn).
+All models are bias-free on quantized layers, per the paper ("We do not
+consider bias parameters in this work").
+"""
+
+from __future__ import annotations
+
+from ..layers import ModelDef, TilingConfig
+from . import cnn, mixer, mlp, pointnet, tst, vit
+
+_FAMILIES = {
+    "mlp": mlp.build,
+    "resnet_mini": cnn.build_resnet_mini,
+    "vgg_mini": cnn.build_vgg_mini,
+    "vit_tiny": vit.build,
+    "pointnet_cls": pointnet.build_cls,
+    "pointnet_seg": pointnet.build_seg,
+    "tst": tst.build,
+    "mlpmixer": mixer.build_mlpmixer,
+    "convmixer": mixer.build_convmixer,
+}
+
+
+def build_model(model_cfg: dict, tiling: TilingConfig) -> ModelDef:
+    family = model_cfg["family"]
+    if family not in _FAMILIES:
+        raise ValueError(f"unknown model family {family!r}")
+    return _FAMILIES[family](model_cfg, tiling)
+
+
+def families() -> list:
+    return sorted(_FAMILIES)

@@ -1,0 +1,108 @@
+"""CNN families for Table 1/2 and Figures 7/8: ResNet-mini and VGG-mini.
+
+Scaled-down counterparts of the paper's ResNet-18/50 and VGG-Small (DESIGN §7:
+the full architectures are reproduced analytically in ``rust/src/arch``; the
+minis carry the accuracy-trend claims).  BatchNorm is replaced by GroupNorm
+(batch-size independent — keeps train/eval graphs identical; DESIGN §7).
+
+ResNet-mini: stem conv + 2 stages x 2 basic blocks (widths w, 2w), stride-2
+downsample between stages, global average pool, FC head.
+VGG-mini: [w, w, M, 2w, 2w, M] conv stack + FC head (VGG-Small shape).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..layers import (ModelBind, ModelDef, SpecBuilder, TilingConfig,
+                      declare_groupnorm)
+
+
+def build_resnet_mini(cfg: dict, tiling: TilingConfig) -> ModelDef:
+    w = int(cfg.get("width", 16))
+    classes = int(cfg["classes"])
+    in_ch = 3
+
+    b = SpecBuilder(tiling)
+    b.weight("stem", (w, in_ch, 3, 3))
+    declare_groupnorm(b, "stem", w)
+
+    stages = [(w, 1), (2 * w, 2)]  # (channels, first-block stride)
+    blocks = 2
+    cin = w
+    for si, (ch, stride) in enumerate(stages):
+        for bi in range(blocks):
+            st = stride if bi == 0 else 1
+            pre = f"s{si}b{bi}"
+            b.weight(f"{pre}.conv1", (ch, cin, 3, 3))
+            declare_groupnorm(b, f"{pre}.conv1", ch)
+            b.weight(f"{pre}.conv2", (ch, ch, 3, 3))
+            declare_groupnorm(b, f"{pre}.conv2", ch)
+            if st != 1 or cin != ch:
+                b.weight(f"{pre}.down", (ch, cin, 1, 1))
+                declare_groupnorm(b, f"{pre}.down", ch)
+            cin = ch
+    b.weight("head", (classes, cin))
+    specs = b.specs
+    has = {s.name for s in specs}
+
+    def apply(params, x):
+        m = ModelBind(specs, params)
+        h = jax.nn.relu(m.gn("stem", m.conv("stem", x)))
+        cin_l = w
+        for si, (ch, stride) in enumerate(stages):
+            for bi in range(blocks):
+                st = stride if bi == 0 else 1
+                pre = f"s{si}b{bi}"
+                r = h
+                h2 = jax.nn.relu(m.gn(f"{pre}.conv1", m.conv(f"{pre}.conv1", h, stride=st)))
+                h2 = m.gn(f"{pre}.conv2", m.conv(f"{pre}.conv2", h2))
+                if f"{pre}.down" in has:
+                    r = m.gn(f"{pre}.down", m.conv(f"{pre}.down", r, stride=st))
+                h = jax.nn.relu(h2 + r)
+                cin_l = ch
+        h = h.mean(axis=(2, 3))  # global average pool
+        return m.dense("head", h)
+
+    return ModelDef(specs, apply)
+
+
+def build_vgg_mini(cfg: dict, tiling: TilingConfig) -> ModelDef:
+    w = int(cfg.get("width", 32))
+    classes = int(cfg["classes"])
+    plan = [w, w, "M", 2 * w, 2 * w, "M"]
+
+    b = SpecBuilder(tiling)
+    cin = 3
+    ci = 0
+    for item in plan:
+        if item == "M":
+            continue
+        b.weight(f"conv{ci}", (int(item), cin, 3, 3))
+        declare_groupnorm(b, f"conv{ci}", int(item))
+        cin = int(item)
+        ci += 1
+    # input 16x16 -> two 2x2 maxpools -> 4x4 feature map
+    b.weight("fc", (4 * w, cin * 4 * 4))
+    b.weight("head", (classes, 4 * w))
+    specs = b.specs
+
+    def apply(params, x):
+        m = ModelBind(specs, params)
+        h = x
+        ci_l = 0
+        for item in plan:
+            if item == "M":
+                h = jax.lax.reduce_window(
+                    h, -jnp.inf, jax.lax.max,
+                    window_dimensions=(1, 1, 2, 2),
+                    window_strides=(1, 1, 2, 2), padding="VALID")
+            else:
+                h = jax.nn.relu(m.gn(f"conv{ci_l}", m.conv(f"conv{ci_l}", h)))
+                ci_l += 1
+        h = h.reshape(h.shape[0], -1)
+        h = jax.nn.relu(m.dense("fc", h))
+        return m.dense("head", h)
+
+    return ModelDef(specs, apply)

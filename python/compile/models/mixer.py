@@ -1,0 +1,100 @@
+"""MLPMixer and ConvMixer for Figure 6 (effect of layer size) and Figure 7.
+
+MLPMixer: per-block token-mixing MLP (across patches) + channel-mixing MLP.
+ConvMixer: patch-embedding conv, then depth x [depthwise conv + pointwise
+conv] with residual on the depthwise step (Trockman & Kolter).
+
+These are the paper's ablation architectures: ConvMixer's largest layer is
+small, so accuracy degrades quickly with p; MLPMixer's channel MLPs are
+bigger and degrade more gracefully.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..layers import (ModelBind, ModelDef, SpecBuilder, TilingConfig,
+                      declare_groupnorm, declare_layernorm)
+
+
+def build_mlpmixer(cfg: dict, tiling: TilingConfig) -> ModelDef:
+    dim = int(cfg["dim"])
+    depth = int(cfg["depth"])
+    patch = int(cfg["patch"])
+    token_mlp = int(cfg["token_mlp"])
+    channel_mlp = int(cfg["channel_mlp"])
+    classes = int(cfg["classes"])
+    img = int(cfg.get("img", 16))
+    chans = int(cfg.get("in_channels", 3))
+    tokens = (img // patch) ** 2
+
+    b = SpecBuilder(tiling)
+    b.weight("patch_embed", (dim, chans * patch * patch))
+    for d in range(depth):
+        pre = f"blk{d}"
+        declare_layernorm(b, f"{pre}.ln1", dim)
+        b.weight(f"{pre}.tok.fc1", (token_mlp, tokens))
+        b.weight(f"{pre}.tok.fc2", (tokens, token_mlp))
+        declare_layernorm(b, f"{pre}.ln2", dim)
+        b.weight(f"{pre}.ch.fc1", (channel_mlp, dim))
+        b.weight(f"{pre}.ch.fc2", (dim, channel_mlp))
+    declare_layernorm(b, "final", dim)
+    b.weight("head", (classes, dim))
+    specs = b.specs
+
+    def apply(params, x):
+        m = ModelBind(specs, params)
+        n, c, hh, ww = x.shape
+        gh, gw = hh // patch, ww // patch
+        xp = x.reshape(n, c, gh, patch, gw, patch)
+        xp = xp.transpose(0, 2, 4, 1, 3, 5).reshape(n, gh * gw, c * patch * patch)
+        h = m.dense("patch_embed", xp)  # (n, tokens, dim)
+        for d in range(depth):
+            pre = f"blk{d}"
+            # token mixing: transpose to (n, dim, tokens)
+            t = m.ln(f"{pre}.ln1", h).transpose(0, 2, 1)
+            t = m.dense(f"{pre}.tok.fc2", jax.nn.gelu(m.dense(f"{pre}.tok.fc1", t)))
+            h = h + t.transpose(0, 2, 1)
+            ch = m.ln(f"{pre}.ln2", h)
+            ch = m.dense(f"{pre}.ch.fc2", jax.nn.gelu(m.dense(f"{pre}.ch.fc1", ch)))
+            h = h + ch
+        h = m.ln("final", h).mean(axis=1)
+        return m.dense("head", h)
+
+    return ModelDef(specs, apply)
+
+
+def build_convmixer(cfg: dict, tiling: TilingConfig) -> ModelDef:
+    dim = int(cfg["dim"])
+    depth = int(cfg["depth"])
+    kernel = int(cfg["kernel"])
+    patch = int(cfg["patch"])
+    classes = int(cfg["classes"])
+    chans = int(cfg.get("in_channels", 3))
+
+    b = SpecBuilder(tiling)
+    b.weight("patch_embed", (dim, chans, patch, patch))
+    declare_groupnorm(b, "patch_embed", dim)
+    for d in range(depth):
+        pre = f"blk{d}"
+        b.weight(f"{pre}.dw", (dim, 1, kernel, kernel))  # depthwise
+        declare_groupnorm(b, f"{pre}.dw", dim)
+        b.weight(f"{pre}.pw", (dim, dim, 1, 1))  # pointwise
+        declare_groupnorm(b, f"{pre}.pw", dim)
+    b.weight("head", (classes, dim))
+    specs = b.specs
+
+    def apply(params, x):
+        m = ModelBind(specs, params)
+        h = jax.nn.gelu(m.gn("patch_embed", m.conv("patch_embed", x, stride=patch, padding="VALID")))
+        for d in range(depth):
+            pre = f"blk{d}"
+            r = h
+            h = jax.nn.gelu(m.gn(f"{pre}.dw", m.conv(f"{pre}.dw", h, groups=h.shape[1])))
+            h = h + r
+            h = jax.nn.gelu(m.gn(f"{pre}.pw", m.conv(f"{pre}.pw", h)))
+        h = h.mean(axis=(2, 3))
+        return m.dense("head", h)
+
+    return ModelDef(specs, apply)

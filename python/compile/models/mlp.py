@@ -1,0 +1,37 @@
+"""MLP (paper section 5.1): the microcontroller model — 1 hidden layer + ReLU.
+
+Matches Table 6's deployment model: in_dim -> hidden -> classes, fused ReLU,
+no biases.  The hidden layer (in_dim*hidden params) is above lambda and gets
+tiled; the classification head is small and stays full precision (the paper
+notes "Since the classification layer only contains 1280 parameters, it is
+not tiled").
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..layers import ModelBind, ModelDef, SpecBuilder, TilingConfig
+
+
+def build(cfg: dict, tiling: TilingConfig) -> ModelDef:
+    in_dim = int(cfg["in_dim"])
+    hidden = [int(h) for h in cfg["hidden"]]
+    classes = int(cfg["classes"])
+
+    b = SpecBuilder(tiling)
+    dims = [in_dim] + hidden
+    for i in range(len(hidden)):
+        b.weight(f"fc{i}", (dims[i + 1], dims[i]))
+    b.weight("head", (classes, dims[-1]))
+    specs = b.specs
+
+    def apply(params, x):
+        m = ModelBind(specs, params)
+        h = x.reshape(x.shape[0], -1)
+        for i in range(len(hidden)):
+            h = jax.nn.relu(m.dense(f"fc{i}", h))
+        return m.dense("head", h)
+
+    return ModelDef(specs, apply)

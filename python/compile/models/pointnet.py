@@ -1,0 +1,76 @@
+"""PointNet (classification + segmentation) for Table 3.
+
+Faithful to Qi et al.'s vanilla PointNet minus the input/feature T-Nets
+(documented substitution; the T-Nets are small and below lambda in the paper
+anyway).  Shared per-point MLPs are dense layers applied to (batch, points,
+features) — exactly the 1x1-conv-as-FC structure that makes PointNet a
+fully-connected model in the paper's Fig. 2 accounting.
+
+Classification: shared MLP [64,128,256] -> max-pool -> FC [128] -> classes.
+Segmentation:   per-point features concat global feature -> per-point head.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..layers import (ModelBind, ModelDef, SpecBuilder, TilingConfig,
+                      declare_layernorm)
+
+
+def _shared_mlp_declare(b: SpecBuilder, dims, pre: str) -> None:
+    for i in range(len(dims) - 1):
+        b.weight(f"{pre}{i}", (dims[i + 1], dims[i]))
+        declare_layernorm(b, f"{pre}{i}", dims[i + 1])
+
+
+def _shared_mlp(m: ModelBind, dims, pre: str, h: jnp.ndarray) -> jnp.ndarray:
+    for i in range(len(dims) - 1):
+        h = jax.nn.relu(m.ln(f"{pre}{i}", m.dense(f"{pre}{i}", h)))
+    return h
+
+
+def build_cls(cfg: dict, tiling: TilingConfig) -> ModelDef:
+    classes = int(cfg["classes"])
+    feat = [3, 64, 128, 256]
+
+    b = SpecBuilder(tiling)
+    _shared_mlp_declare(b, feat, "sa")
+    b.weight("fc1", (128, feat[-1]))
+    declare_layernorm(b, "fc1", 128)
+    b.weight("head", (classes, 128))
+    specs = b.specs
+
+    def apply(params, x):
+        # x: (batch, points, 3)
+        m = ModelBind(specs, params)
+        h = _shared_mlp(m, feat, "sa", x)
+        g = h.max(axis=1)  # global max pool over points
+        g = jax.nn.relu(m.ln("fc1", m.dense("fc1", g)))
+        return m.dense("head", g)
+
+    return ModelDef(specs, apply)
+
+
+def build_seg(cfg: dict, tiling: TilingConfig) -> ModelDef:
+    classes = int(cfg["classes"])
+    feat = [3, 64, 128, 256]
+    seg = [feat[-1] + feat[-1], 128, 64]
+
+    b = SpecBuilder(tiling)
+    _shared_mlp_declare(b, feat, "sa")
+    _shared_mlp_declare(b, seg, "seg")
+    b.weight("head", (classes, seg[-1]))
+    specs = b.specs
+
+    def apply(params, x):
+        # x: (batch, points, 3) -> per-point logits (batch, points, classes)
+        m = ModelBind(specs, params)
+        h = _shared_mlp(m, feat, "sa", x)  # (b, n, 256)
+        g = h.max(axis=1, keepdims=True)  # (b, 1, 256) global feature
+        hg = jnp.concatenate([h, jnp.broadcast_to(g, h.shape)], axis=-1)
+        hs = _shared_mlp(m, seg, "seg", hg)
+        return m.dense("head", hs)
+
+    return ModelDef(specs, apply)

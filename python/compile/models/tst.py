@@ -1,0 +1,42 @@
+"""Time-series Transformer encoder for Table 5 (Zerveas-style).
+
+Single-step multivariate forecasting: the encoder reads a (seq, channels)
+window, and a linear head on the last token predicts the next step's values
+for all channels.  MSE loss, matching the paper's ECL/Weather setup.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..layers import ModelBind, ModelDef, SpecBuilder, TilingConfig, declare_layernorm
+from .vit import declare_encoder_block, encoder_block
+
+
+def build(cfg: dict, tiling: TilingConfig) -> ModelDef:
+    dim = int(cfg["dim"])
+    depth = int(cfg["depth"])
+    heads = int(cfg["heads"])
+    mlp_dim = int(cfg["mlp_dim"])
+    seq = int(cfg["seq"])
+    channels = int(cfg["channels"])
+
+    b = SpecBuilder(tiling)
+    b.weight("in_proj", (dim, channels))
+    b.other("pos_embed", (seq, dim), "normal")
+    for d in range(depth):
+        declare_encoder_block(b, f"blk{d}", dim, mlp_dim)
+    declare_layernorm(b, "final", dim)
+    b.weight("head", (channels, dim))
+    specs = b.specs
+
+    def apply(params, x):
+        # x: (batch, seq, channels) -> (batch, channels) next-step forecast
+        m = ModelBind(specs, params)
+        h = m.dense("in_proj", x) + m.p("pos_embed")
+        for d in range(depth):
+            h = encoder_block(m, f"blk{d}", h, heads)
+        h = m.ln("final", h)[:, -1, :]  # last-token representation
+        return m.dense("head", h)
+
+    return ModelDef(specs, apply)

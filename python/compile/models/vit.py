@@ -1,0 +1,69 @@
+"""ViT-tiny for Table 4 / Table 7 / Figure 5 (scaled-down ViT, patch size 4).
+
+Pre-norm Transformer encoder on patch embeddings with a learnable position
+embedding and mean-pool classification head.  All attention projections and
+MLP layers are tileable dense weights — this is the architecture class where
+the paper's fully-connected tiling matters most (Fig. 2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..layers import (ModelBind, ModelDef, SpecBuilder, TilingConfig,
+                      attention, declare_layernorm)
+
+
+def declare_encoder_block(b: SpecBuilder, pre: str, dim: int, mlp_dim: int) -> None:
+    declare_layernorm(b, f"{pre}.ln1", dim)
+    for n in ("wq", "wk", "wv", "wo"):
+        b.weight(f"{pre}.attn.{n}", (dim, dim))
+    declare_layernorm(b, f"{pre}.ln2", dim)
+    b.weight(f"{pre}.mlp.fc1", (mlp_dim, dim))
+    b.weight(f"{pre}.mlp.fc2", (dim, mlp_dim))
+
+
+def encoder_block(m: ModelBind, pre: str, x: jnp.ndarray, heads: int) -> jnp.ndarray:
+    h = attention(m.params, m, f"{pre}.attn", m.ln(f"{pre}.ln1", x), heads)
+    x = x + h
+    h = m.ln(f"{pre}.ln2", x)
+    h = jax.nn.gelu(m.dense(f"{pre}.mlp.fc1", h))
+    h = m.dense(f"{pre}.mlp.fc2", h)
+    return x + h
+
+
+def build(cfg: dict, tiling: TilingConfig) -> ModelDef:
+    dim = int(cfg["dim"])
+    depth = int(cfg["depth"])
+    heads = int(cfg["heads"])
+    mlp_dim = int(cfg["mlp_dim"])
+    patch = int(cfg["patch"])
+    classes = int(cfg["classes"])
+    img = int(cfg.get("img", 16))
+    chans = int(cfg.get("in_channels", 3))
+    tokens = (img // patch) ** 2
+
+    b = SpecBuilder(tiling)
+    b.weight("patch_embed", (dim, chans * patch * patch))
+    b.other("pos_embed", (tokens, dim), "normal")
+    for d in range(depth):
+        declare_encoder_block(b, f"blk{d}", dim, mlp_dim)
+    declare_layernorm(b, "final", dim)
+    b.weight("head", (classes, dim))
+    specs = b.specs
+
+    def apply(params, x):
+        m = ModelBind(specs, params)
+        n, c, hh, ww = x.shape
+        gh, gw = hh // patch, ww // patch
+        # (n,c,h,w) -> (n, tokens, c*patch*patch)
+        xp = x.reshape(n, c, gh, patch, gw, patch)
+        xp = xp.transpose(0, 2, 4, 1, 3, 5).reshape(n, gh * gw, c * patch * patch)
+        h = m.dense("patch_embed", xp) + m.p("pos_embed")
+        for d in range(depth):
+            h = encoder_block(m, f"blk{d}", h, heads)
+        h = m.ln("final", h).mean(axis=1)
+        return m.dense("head", h)
+
+    return ModelDef(specs, apply)

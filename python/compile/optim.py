@@ -1,0 +1,118 @@
+"""Hand-rolled optimizers as pure functions (no optax in the vendor set).
+
+State layout is deliberately flat and positional so the Rust trainer can hold
+opt-state tensors as opaque PJRT literals next to the parameters:
+
+* SGD+momentum: one slot per parameter (the velocity buffer).
+* Adam/AdamW:   two slots per parameter (m then v, interleaved per param).
+
+The learning rate (and, for Adam, the step counter for bias correction) are
+*inputs* to the train-step graph — schedules are computed by the Rust
+coordinator (L3 owns scheduling), never baked into the HLO.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax.numpy as jnp
+
+from .layers import ParamSpec, Params
+
+
+def opt_slot_count(kind: str) -> int:
+    return {"sgd": 1, "adam": 2, "adamw": 2}[kind]
+
+
+def init_opt_state(kind: str, params: Params, specs: List[ParamSpec]) -> List[jnp.ndarray]:
+    slots = opt_slot_count(kind)
+    out: List[jnp.ndarray] = []
+    for spec in specs:
+        for _ in range(slots):
+            out.append(jnp.zeros(spec.shape, jnp.float32))
+    return out
+
+
+def _decay_mask(spec: ParamSpec) -> bool:
+    """Weight decay applies to weights (and A), not to norm scales/embeddings."""
+    return spec.role in ("weight", "alpha_src")
+
+
+def sgd_update(
+    specs: List[ParamSpec],
+    params: Params,
+    grads: Params,
+    state: List[jnp.ndarray],
+    lr: jnp.ndarray,
+    momentum: float,
+    weight_decay: float,
+) -> Tuple[Params, List[jnp.ndarray]]:
+    """Classic SGD with momentum and (coupled) weight decay."""
+    new_params: Params = {}
+    new_state: List[jnp.ndarray] = []
+    for i, spec in enumerate(specs):
+        w = params[spec.name]
+        g = grads[spec.name]
+        if weight_decay > 0.0 and _decay_mask(spec):
+            g = g + weight_decay * w
+        v = momentum * state[i] + g
+        new_state.append(v)
+        new_params[spec.name] = w - lr * v
+    return new_params, new_state
+
+
+def adam_update(
+    specs: List[ParamSpec],
+    params: Params,
+    grads: Params,
+    state: List[jnp.ndarray],
+    lr: jnp.ndarray,
+    step: jnp.ndarray,
+    beta1: float = 0.9,
+    beta2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    decoupled: bool = False,
+) -> Tuple[Params, List[jnp.ndarray]]:
+    """Adam (coupled wd) or AdamW (decoupled); ``step`` is 1-based, f32."""
+    new_params: Params = {}
+    new_state: List[jnp.ndarray] = []
+    bc1 = 1.0 - beta1 ** step
+    bc2 = 1.0 - beta2 ** step
+    for i, spec in enumerate(specs):
+        w = params[spec.name]
+        g = grads[spec.name]
+        if weight_decay > 0.0 and not decoupled and _decay_mask(spec):
+            g = g + weight_decay * w
+        m = beta1 * state[2 * i] + (1.0 - beta1) * g
+        v = beta2 * state[2 * i + 1] + (1.0 - beta2) * g * g
+        new_state.append(m)
+        new_state.append(v)
+        update = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        if weight_decay > 0.0 and decoupled and _decay_mask(spec):
+            update = update + weight_decay * w
+        new_params[spec.name] = w - lr * update
+    return new_params, new_state
+
+
+def apply_update(
+    kind: str,
+    specs: List[ParamSpec],
+    params: Params,
+    grads: Params,
+    state: List[jnp.ndarray],
+    lr: jnp.ndarray,
+    step: jnp.ndarray,
+    hp: Dict,
+) -> Tuple[Params, List[jnp.ndarray]]:
+    """Dispatch on optimizer kind with hyperparameters from the config."""
+    wd = float(hp.get("weight_decay", 0.0))
+    if kind == "sgd":
+        return sgd_update(specs, params, grads, state, lr,
+                          momentum=float(hp.get("momentum", 0.9)), weight_decay=wd)
+    if kind == "adam":
+        return adam_update(specs, params, grads, state, lr, step, weight_decay=wd)
+    if kind == "adamw":
+        return adam_update(specs, params, grads, state, lr, step,
+                           weight_decay=wd, decoupled=True)
+    raise ValueError(f"unknown optimizer {kind!r}")

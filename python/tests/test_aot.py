@@ -1,0 +1,144 @@
+"""AOT pipeline tests: graph lowering, manifest consistency, HLO executability.
+
+Uses a temp output dir and a couple of small experiments so the suite stays
+fast; the full 48-experiment build is exercised by `make artifacts`.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.layers import TilingConfig, init_params
+from compile.models import build_model
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+CONFIG = os.path.join(REPO, "configs", "experiments.json")
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    with open(CONFIG) as f:
+        return json.load(f)
+
+
+@pytest.fixture(scope="module")
+def mlp_entry(cfg):
+    exp = next(e for e in cfg["experiments"] if e["id"] == "mlp_micro_tbn4")
+    return aot.build_graphs(exp, cfg["defaults"])
+
+
+class TestManifest:
+    def test_every_experiment_has_unique_id(self, cfg):
+        ids = [e["id"] for e in cfg["experiments"]]
+        assert len(ids) == len(set(ids))
+
+    def test_every_experiment_references_a_table_or_figure(self, cfg):
+        for e in cfg["experiments"]:
+            assert e.get("tables"), f"{e['id']} not mapped to any table/figure"
+
+    def test_graph_files_and_roles(self, mlp_entry):
+        entry, graphs = mlp_entry
+        assert set(graphs) == {"init", "train_step", "eval_step", "forward"}
+        roles = {p["role"] for p in entry["params"]}
+        assert "weight" in roles and "alpha_src" in roles
+
+    def test_tiled_param_bookkeeping(self, mlp_entry):
+        entry, _ = mlp_entry
+        tiled = [p for p in entry["params"] if p["quant"] == "tiled"]
+        assert tiled
+        for p in tiled:
+            n = int(np.prod(p["shape"]))
+            assert p["p"] * p["q"] == n
+        kinds = [ip["kind"] for ip in entry["infer_params"]]
+        assert "tile" in kinds and "alphas" in kinds
+        # A never ships to inference
+        assert not any(ip["name"].endswith(".A") for ip in entry["infer_params"])
+
+    def test_hlo_text_parses_as_hlo(self, mlp_entry):
+        _, graphs = mlp_entry
+        for name, text in graphs.items():
+            assert text.startswith("HloModule"), f"{name} is not HLO text"
+            assert "ENTRY" in text
+
+
+class TestGraphSemantics:
+    """Execute the lowered python functions (pre-lowering) for numerics."""
+
+    def test_init_then_train_step_reduces_loss(self, cfg):
+        exp = next(e for e in cfg["experiments"] if e["id"] == "mlp_micro_tbn4")
+        tiling = TilingConfig.from_json(exp["tiling"])
+        model = build_model(exp["model"], tiling)
+        specs = model.specs
+        tr = aot.merge_train(cfg["defaults"], exp)
+        from compile.optim import apply_update, init_opt_state
+
+        params = init_params(jnp.asarray(exp.get("seed", 1), jnp.int32), specs)
+        state = init_opt_state(tr["opt"], params, specs)
+        r = np.random.default_rng(0)
+        x = jnp.asarray(r.standard_normal((16, 256)), jnp.float32)
+        y = jnp.asarray(r.integers(0, 10, 16), jnp.int32)
+
+        from compile.layers import softmax_xent
+
+        def lf(p):
+            return softmax_xent(model.apply(p, x), y)
+
+        first = float(lf(params))
+        for step in range(1, 16):
+            loss, grads = jax.value_and_grad(lf)(params)
+            params, state = apply_update(tr["opt"], specs, params, grads, state,
+                                         jnp.asarray(0.05, jnp.float32),
+                                         jnp.asarray(step, jnp.float32), tr)
+        assert float(lf(params)) < first
+
+    def test_io_shapes_cls_seg_forecast(self, cfg):
+        by_id = {e["id"]: e for e in cfg["experiments"]}
+        io = aot.io_shapes(by_id["mlp_micro_tbn4"], cfg["defaults"], "cls")
+        assert io["y_dtype"] == "i32" and len(io["y_train"]) == 1
+        io = aot.io_shapes(by_id["pointnet_seg_tbn4"], cfg["defaults"], "seg")
+        assert io["y_train"] == [io["train_batch"], 128]
+        io = aot.io_shapes(by_id["tst_elec_tbn4"], cfg["defaults"], "forecast")
+        assert io["y_dtype"] == "f32" and io["y_train"][1] == 32
+
+
+class TestBuiltArtifacts:
+    """Consistency checks over the real artifacts/ dir when it exists."""
+
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        path = os.path.join(REPO, "artifacts", "manifest.json")
+        if not os.path.exists(path):
+            pytest.skip("artifacts not built (run `make artifacts`)")
+        with open(path) as f:
+            return json.load(f)
+
+    def test_all_graph_files_exist(self, manifest):
+        for e in manifest["experiments"]:
+            for g in e["graphs"].values():
+                assert os.path.exists(os.path.join(REPO, "artifacts", g["file"]))
+
+    def test_config_and_manifest_agree(self, manifest, cfg):
+        assert {e["id"] for e in manifest["experiments"]} == \
+               {e["id"] for e in cfg["experiments"]}
+
+    def test_tbn_experiments_have_subbit_width(self, manifest):
+        """Bit-width over quantized layers must be < 1 for every TBN config."""
+        for e in manifest["experiments"]:
+            if e["tiling"]["mode"] != "tbn":
+                continue
+            bits = 0.0
+            n = 0
+            for pr in e["params"]:
+                if pr["quant"] == "tiled":
+                    sz = int(np.prod(pr["shape"]))
+                    bits += pr["q"] + 32.0 * pr["n_alphas"]
+                    n += sz
+            if n:
+                assert bits / n < 1.0, e["id"]

@@ -1,0 +1,181 @@
+"""Unit tests for compile.layers: tiling decisions, init, STE weights, norms."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.layers import (ModelBind, ParamSpec, SpecBuilder, TilingConfig,
+                            accuracy, dense, effective_weight, init_params,
+                            inference_weight_arrays, mse, softmax_xent)
+
+
+class TestSpecBuilderDecisions:
+    def test_fp_mode_never_quantizes(self):
+        b = SpecBuilder(TilingConfig(mode="fp"))
+        s = b.weight("w", (512, 512))
+        assert s.quant == "fp"
+
+    def test_tbn_tiles_large_divisible_layers(self):
+        b = SpecBuilder(TilingConfig(mode="tbn", p=4, lam=1000))
+        s = b.weight("w", (64, 64))  # N=4096 >= 1000, divisible by 4
+        assert s.quant == "tiled" and s.p == 4 and s.q == 1024
+
+    def test_lambda_small_falls_back_to_binary(self):
+        # untiled layers in a TBN are stored 1-bit (paper Table 6: the
+        # untiled classification head is binary)
+        b = SpecBuilder(TilingConfig(mode="tbn", p=4, lam=10_000))
+        s = b.weight("w", (64, 64))
+        assert s.quant == "bwnn"
+
+    def test_indivisible_layer_falls_back_to_binary(self):
+        b = SpecBuilder(TilingConfig(mode="tbn", p=4, lam=1))
+        s = b.weight("w", (3, 9))  # 27 not divisible by 4
+        assert s.quant == "bwnn"
+
+    def test_alpha_src_A_adds_sibling_param(self):
+        b = SpecBuilder(TilingConfig(mode="tbn", p=2, lam=1, alpha_src="A"))
+        b.weight("w", (4, 4))
+        names = [s.name for s in b.specs]
+        assert names == ["w", "w.A"]
+        assert b.specs[1].role == "alpha_src"
+
+    def test_alpha_src_W_adds_nothing(self):
+        b = SpecBuilder(TilingConfig(mode="tbn", p=2, lam=1, alpha_src="W"))
+        b.weight("w", (4, 4))
+        assert [s.name for s in b.specs] == ["w"]
+
+    def test_single_alpha_mode(self):
+        b = SpecBuilder(TilingConfig(mode="tbn", p=4, lam=1, alpha="single"))
+        assert b.weight("w", (4, 4)).n_alphas == 1
+
+    def test_bwnn_binarizes_everything(self):
+        b = SpecBuilder(TilingConfig(mode="bwnn", lam=100))
+        big = b.weight("big", (32, 32))
+        small = b.weight("small", (4, 4))
+        assert big.quant == "bwnn" and small.quant == "bwnn"
+
+    def test_duplicate_name_rejected(self):
+        b = SpecBuilder(TilingConfig())
+        b.weight("w", (2, 2))
+        with pytest.raises(AssertionError):
+            b.weight("w", (2, 2))
+
+
+class TestInit:
+    def test_deterministic(self):
+        b = SpecBuilder(TilingConfig(mode="tbn", p=2, lam=1))
+        b.weight("w", (8, 8))
+        p1 = init_params(jnp.asarray(7, jnp.int32), b.specs)
+        p2 = init_params(jnp.asarray(7, jnp.int32), b.specs)
+        for k in p1:
+            np.testing.assert_array_equal(np.asarray(p1[k]), np.asarray(p2[k]))
+
+    def test_seed_changes_values(self):
+        b = SpecBuilder(TilingConfig())
+        b.weight("w", (8, 8))
+        p1 = init_params(jnp.asarray(1, jnp.int32), b.specs)
+        p2 = init_params(jnp.asarray(2, jnp.int32), b.specs)
+        assert not np.array_equal(np.asarray(p1["w"]), np.asarray(p2["w"]))
+
+    def test_A_differs_from_W(self):
+        b = SpecBuilder(TilingConfig(mode="tbn", p=2, lam=1, alpha_src="A"))
+        b.weight("w", (8, 8))
+        p = init_params(jnp.asarray(1, jnp.int32), b.specs)
+        assert not np.array_equal(np.asarray(p["w"]), np.asarray(p["w.A"]))
+
+    def test_kaiming_scale(self):
+        b = SpecBuilder(TilingConfig())
+        b.weight("w", (256, 512))
+        p = init_params(jnp.asarray(0, jnp.int32), b.specs)
+        std = float(np.asarray(p["w"]).std())
+        assert std == pytest.approx((2.0 / 512) ** 0.5, rel=0.15)
+
+
+class TestEffectiveWeight:
+    def test_tiled_matches_ref_pipeline(self):
+        spec = ParamSpec("w", (8, 16), "kaiming", "weight", "tiled",
+                         p=4, n_alphas=4, alpha_src="A")
+        r = np.random.default_rng(0)
+        w = jnp.asarray(r.standard_normal((8, 16)), jnp.float32)
+        a = jnp.asarray(r.standard_normal((8, 16)), jnp.float32)
+        got = effective_weight({"w": w, "w.A": a}, spec)
+        t = ref.tile_from_weights(w, 4)
+        al = ref.alphas_from(a, 4, per_tile=True)
+        want = ref.expand_tile(t, al, (8, 16))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_bwnn_matches_ref(self):
+        spec = ParamSpec("w", (8, 8), "kaiming", "weight", "bwnn")
+        w = jnp.asarray(np.random.default_rng(1).standard_normal((8, 8)),
+                        jnp.float32)
+        got = effective_weight({"w": w}, spec)
+        b, alpha = ref.binarize_bwnn(w)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(b * alpha),
+                                   rtol=1e-6)
+
+    def test_fp_identity(self):
+        spec = ParamSpec("w", (4, 4), "kaiming", "weight", "fp")
+        w = jnp.ones((4, 4))
+        np.testing.assert_array_equal(
+            np.asarray(effective_weight({"w": w}, spec)), np.asarray(w))
+
+    def test_tiled_weight_has_p_identical_slices(self):
+        """Paper §4.1: tiling creates replicated channel groups."""
+        spec = ParamSpec("w", (8, 4), "kaiming", "weight", "tiled",
+                         p=4, n_alphas=1, alpha_src="W")
+        w = jnp.asarray(np.random.default_rng(2).standard_normal((8, 4)),
+                        jnp.float32)
+        bhat = np.asarray(effective_weight({"w": w}, spec)).reshape(4, -1)
+        for i in range(1, 4):
+            np.testing.assert_allclose(bhat[i], bhat[0])
+
+
+class TestInferenceExport:
+    def test_tiled_export_shapes(self):
+        spec = ParamSpec("w", (8, 16), "kaiming", "weight", "tiled",
+                         p=4, n_alphas=4, alpha_src="A")
+        w = jnp.ones((8, 16))
+        a = jnp.full((8, 16), 0.5)
+        arrs = inference_weight_arrays(w, a, spec)
+        assert arrs["tile"].shape == (32,)
+        assert arrs["alphas"].shape == (4,)
+        np.testing.assert_allclose(np.asarray(arrs["alphas"]), 0.5)
+
+    def test_forward_dispatch_tile_params(self):
+        """dense() with .tile params must equal the training-path weight."""
+        spec = ParamSpec("w", (8, 16), "kaiming", "weight", "tiled",
+                         p=4, n_alphas=4, alpha_src="W")
+        r = np.random.default_rng(3)
+        w = jnp.asarray(r.standard_normal((8, 16)), jnp.float32)
+        x = jnp.asarray(r.standard_normal((5, 16)), jnp.float32)
+        train_y = dense({"w": w}, spec, x)
+        arrs = inference_weight_arrays(w, None, spec)
+        infer_y = dense({"w.tile": arrs["tile"], "w.alphas": arrs["alphas"]},
+                        spec, x)
+        np.testing.assert_allclose(np.asarray(train_y), np.asarray(infer_y),
+                                   rtol=2e-4, atol=2e-4)
+
+
+class TestLossesMetrics:
+    def test_xent_uniform_logits(self):
+        logits = jnp.zeros((4, 10))
+        labels = jnp.asarray([0, 1, 2, 3], jnp.int32)
+        assert float(softmax_xent(logits, labels)) == pytest.approx(np.log(10), rel=1e-5)
+
+    def test_label_smoothing_increases_loss_at_certainty(self):
+        logits = jnp.asarray([[100.0, 0.0]])
+        labels = jnp.asarray([0], jnp.int32)
+        plain = float(softmax_xent(logits, labels, 0.0))
+        smooth = float(softmax_xent(logits, labels, 0.1))
+        assert smooth > plain
+
+    def test_accuracy(self):
+        logits = jnp.asarray([[1.0, 0.0], [0.0, 1.0], [1.0, 0.0]])
+        labels = jnp.asarray([0, 1, 1], jnp.int32)
+        assert float(accuracy(logits, labels)) == pytest.approx(2 / 3)
+
+    def test_mse(self):
+        assert float(mse(jnp.asarray([1.0, 3.0]), jnp.asarray([0.0, 0.0]))) == 5.0

@@ -1,0 +1,151 @@
+"""Model-zoo tests: shapes, tiling coverage, train/infer parity, optimizers."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.layers import TilingConfig, init_params, inference_weight_arrays
+from compile.models import build_model, families
+from compile.optim import apply_update, init_opt_state, opt_slot_count
+
+TBN = TilingConfig(mode="tbn", p=4, lam=1024, alpha="per_tile", alpha_src="A")
+FP = TilingConfig(mode="fp")
+
+CASES = {
+    "mlp": ({"family": "mlp", "in_dim": 256, "hidden": [128], "classes": 10},
+            (2, 256), (2, 10)),
+    "resnet_mini": ({"family": "resnet_mini", "width": 16, "classes": 10},
+                    (2, 3, 16, 16), (2, 10)),
+    "vgg_mini": ({"family": "vgg_mini", "width": 32, "classes": 10},
+                 (2, 3, 16, 16), (2, 10)),
+    "vit_tiny": ({"family": "vit_tiny", "dim": 64, "depth": 2, "heads": 4,
+                  "mlp_dim": 128, "patch": 4, "classes": 10},
+                 (2, 3, 16, 16), (2, 10)),
+    "pointnet_cls": ({"family": "pointnet_cls", "points": 64, "classes": 8},
+                     (2, 64, 3), (2, 8)),
+    "pointnet_seg": ({"family": "pointnet_seg", "points": 64, "classes": 4},
+                     (2, 64, 3), (2, 64, 4)),
+    "tst": ({"family": "tst", "dim": 32, "depth": 2, "heads": 4,
+             "mlp_dim": 64, "seq": 24, "channels": 8},
+            (2, 24, 8), (2, 8)),
+    "mlpmixer": ({"family": "mlpmixer", "dim": 64, "depth": 2, "patch": 4,
+                  "token_mlp": 64, "channel_mlp": 128, "classes": 10},
+                 (2, 3, 16, 16), (2, 10)),
+    "convmixer": ({"family": "convmixer", "dim": 48, "depth": 2, "kernel": 5,
+                   "patch": 2, "classes": 10},
+                  (2, 3, 16, 16), (2, 10)),
+}
+
+
+def rng_x(shape, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal(shape),
+                       jnp.float32)
+
+
+@pytest.mark.parametrize("family", sorted(CASES))
+def test_output_shape_fp(family):
+    cfg, x_shape, y_shape = CASES[family]
+    model = build_model(cfg, FP)
+    params = init_params(jnp.asarray(0, jnp.int32), model.specs)
+    out = model.apply(params, rng_x(x_shape))
+    assert out.shape == y_shape
+
+
+@pytest.mark.parametrize("family", sorted(CASES))
+def test_output_shape_tbn(family):
+    cfg, x_shape, y_shape = CASES[family]
+    model = build_model(cfg, TBN)
+    params = init_params(jnp.asarray(0, jnp.int32), model.specs)
+    out = model.apply(params, rng_x(x_shape))
+    assert out.shape == y_shape
+    assert np.isfinite(np.asarray(out)).all()
+
+
+@pytest.mark.parametrize("family", sorted(CASES))
+def test_tbn_actually_tiles_something(family):
+    cfg, _, _ = CASES[family]
+    model = build_model(cfg, TBN)
+    tiled = [s for s in model.specs if s.quant == "tiled"]
+    assert tiled, f"{family}: no layer met the tiling criteria"
+    for s in tiled:
+        assert s.size % s.p == 0 and s.size >= TBN.lam
+
+
+@pytest.mark.parametrize("family", sorted(CASES))
+def test_train_infer_parity(family):
+    """Training-path forward (STE from W) == inference-path forward (tiles)."""
+    cfg, x_shape, _ = CASES[family]
+    model = build_model(cfg, TBN)
+    params = init_params(jnp.asarray(1, jnp.int32), model.specs)
+    x = rng_x(x_shape, seed=1)
+    train_out = model.apply(params, x)
+
+    infer = {}
+    for s in model.specs:
+        if s.role == "alpha_src":
+            continue
+        a = params.get(s.name + ".A")
+        arrs = inference_weight_arrays(params[s.name], a, s)
+        if s.quant == "tiled":
+            infer[s.name + ".tile"] = arrs["tile"]
+            infer[s.name + ".alphas"] = arrs["alphas"]
+        elif s.quant == "bwnn":
+            infer[s.name + ".bin"] = arrs["bin"]
+            infer[s.name + ".alpha"] = arrs["alpha"]
+        else:
+            infer[s.name] = arrs["w"]
+    infer_out = model.apply(infer, x)
+    np.testing.assert_allclose(np.asarray(train_out), np.asarray(infer_out),
+                               rtol=5e-3, atol=5e-3)
+
+
+@pytest.mark.parametrize("kind", ["sgd", "adam", "adamw"])
+def test_optimizer_reduces_loss(kind):
+    cfg, x_shape, _ = CASES["mlp"]
+    model = build_model(cfg, TBN)
+    specs = model.specs
+    params = init_params(jnp.asarray(0, jnp.int32), specs)
+    state = init_opt_state(kind, params, specs)
+    x = rng_x(x_shape)
+    y = jnp.asarray([1, 3], jnp.int32)
+
+    def loss_fn(p):
+        logits = model.apply(p, x)
+        logp = jax.nn.log_softmax(logits)
+        return -logp[jnp.arange(2), y].mean()
+
+    hp = {"momentum": 0.9, "weight_decay": 1e-4}
+    losses = []
+    lr = jnp.asarray(0.05 if kind == "sgd" else 0.005, jnp.float32)
+    for step in range(1, 21):
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        losses.append(float(loss))
+        params, state = apply_update(kind, specs, params, grads, state, lr,
+                                     jnp.asarray(step, jnp.float32), hp)
+    assert losses[-1] < losses[0], f"{kind}: {losses[0]} -> {losses[-1]}"
+
+
+def test_opt_slot_counts():
+    assert opt_slot_count("sgd") == 1
+    assert opt_slot_count("adam") == 2
+
+
+def test_families_list():
+    assert set(families()) == set(CASES)
+
+
+def test_grad_nonzero_for_all_trainables():
+    cfg, x_shape, _ = CASES["mlp"]
+    model = build_model(cfg, TBN)
+    params = init_params(jnp.asarray(0, jnp.int32), model.specs)
+    x = rng_x(x_shape)
+    y = jnp.asarray([1, 3], jnp.int32)
+
+    def loss_fn(p):
+        logits = model.apply(p, x)
+        return -jax.nn.log_softmax(logits)[jnp.arange(2), y].mean()
+
+    grads = jax.grad(loss_fn)(params)
+    for name, g in grads.items():
+        assert float(jnp.max(jnp.abs(g))) > 0.0, f"zero grad for {name}"

@@ -1,0 +1,86 @@
+"""Performance-model tests for the L1 Pallas kernel (structure, not wallclock).
+
+interpret=True timings are CPU-numpy and meaningless as a TPU proxy, so the
+perf contract is structural: VMEM footprint per grid step, weight-stream
+reduction, and MXU-friendly block shapes — checked over every tiled FC layer
+that actually ships in the manifest.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile.kernels.tiled_matmul import _block_rows, vmem_bytes_tiled
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+VMEM_BUDGET = 16 * 1024 * 1024  # bytes per TPU core
+
+
+def manifest():
+    path = os.path.join(REPO, "artifacts", "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    with open(path) as f:
+        return json.load(f)
+
+
+def tiled_fc_layers(man):
+    """(exp_id, m, n, p, q) for every tiled 2-D weight in the manifest."""
+    out = []
+    for e in man["experiments"]:
+        for p in e["params"]:
+            if p["quant"] == "tiled" and len(p["shape"]) == 2:
+                m, n = p["shape"]
+                out.append((e["id"], m, n, p["p"], p["q"]))
+    return out
+
+
+class TestVmemBudget:
+    def test_every_tiled_fc_fits_vmem(self):
+        man = manifest()
+        layers = tiled_fc_layers(man)
+        assert layers, "no tiled FC layers in the manifest?"
+        for (eid, m, n, p, q) in layers:
+            batch = next(e for e in man["experiments"] if e["id"] == eid)
+            batch = batch["io"]["serve_batch"]
+            stats = vmem_bytes_tiled(batch, m, n, q, p)
+            step_bytes = (stats["x"] + stats["tile"] + stats["alphas"]
+                          + stats["w_block_scratch"] + stats["out"])
+            assert step_bytes < VMEM_BUDGET, (
+                f"{eid} {m}x{n} p={p}: {step_bytes} bytes/step")
+
+    def test_weight_stream_reduction_is_exactly_p(self):
+        for (eid, m, n, p, q) in tiled_fc_layers(manifest()):
+            stats = vmem_bytes_tiled(8, m, n, q, p)
+            ratio = stats["dense_weight_stream_total"] / stats["weight_stream_total"]
+            assert ratio == pytest.approx(p), f"{eid}: {ratio} != {p}"
+
+    def test_block_rows_divides_and_bounded(self):
+        for (eid, m, n, p, q) in tiled_fc_layers(manifest()):
+            bm = _block_rows(m)
+            assert m % bm == 0
+            assert bm <= 128, f"{eid}: bm={bm} exceeds the MXU-aligned cap"
+
+
+class TestBlockShapeChoice:
+    """The bm sweep recorded in EXPERIMENTS.md §Perf: larger bm amortizes
+    grid overhead but grows the in-register expansion scratch linearly;
+    bm=128 is the largest MXU-aligned block that keeps every manifest layer
+    under budget."""
+
+    def test_bm_sweep_scratch_growth_linear(self):
+        m, n, p = 512, 512, 4
+        q = m * n // p
+        prev = 0
+        for bm in [32, 64, 128]:
+            s = vmem_bytes_tiled(8, m, n, q, p, bm=bm)["w_block_scratch"]
+            assert s == bm * n * 4
+            assert s > prev
+            prev = s
+
+    def test_tile_resident_cost_independent_of_bm(self):
+        m, n, p = 512, 512, 4
+        q = m * n // p
+        tiles = {vmem_bytes_tiled(8, m, n, q, p, bm=bm)["tile"] for bm in [32, 64, 128]}
+        assert len(tiles) == 1

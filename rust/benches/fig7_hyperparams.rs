@@ -1,0 +1,57 @@
+//! Figure 7: hyperparameter configurations — test accuracy across training
+//! for (a) global tiling vs lambda, (b) W vs W+A alpha source, (c) single vs
+//! per-tile alphas, on both ResNet-mini and MLPMixer-mini.
+
+use tiledbits::bench_util::{bench_dirs, bench_steps, header};
+use tiledbits::config::Manifest;
+use tiledbits::coordinator::run_or_load;
+use tiledbits::runtime::Runtime;
+use tiledbits::train::TrainOptions;
+
+fn curve(rec: &tiledbits::coordinator::RunRecord) -> String {
+    rec.eval_curve
+        .iter()
+        .map(|(s, _, m)| format!("{s}:{:.2}", m))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+fn main() {
+    header("Figure 7: hyperparameter configurations across training");
+    let (artifacts, runs) = bench_dirs();
+    let steps = bench_steps(80);
+    let Ok(manifest) = Manifest::load(&artifacts) else {
+        println!("(artifacts not built; skipping)");
+        return;
+    };
+    let rt = Runtime::new(&artifacts).expect("PJRT");
+    let opts = TrainOptions {
+        steps: Some(steps),
+        eval_every: (steps / 4).max(1),
+        log_every: 10_000,
+        seed: None,
+    };
+
+    for family in ["resnet_mini", "mlpmixer"] {
+        println!("\n-- {family} ({steps} steps; eval curve as step:acc) --");
+        let variants = [
+            ("tbn4", "default (lambda, W+A, multi-alpha)"),
+            ("tbn4_global", "global tiling (lambda=0)"),
+            ("tbn4_wonly", "W for alphas (no A)"),
+            ("tbn4_single_alpha", "single alpha per layer"),
+        ];
+        for (suffix, label) in variants {
+            let id = format!("{family}_{suffix}");
+            if manifest.by_id(&id).is_none() {
+                continue;
+            }
+            match run_or_load(&rt, &manifest, &id, &opts, &runs) {
+                Ok(rec) => println!("{label:36} final {:5.1}%  [{}]",
+                                    100.0 * rec.metric, curve(&rec)),
+                Err(e) => println!("{label:36} FAILED: {e:#}"),
+            }
+        }
+    }
+    println!("\nshape check (paper Fig 7/8): global tiling is the clear loser;");
+    println!("W+A and multi-alpha give small gains over W-only / single-alpha.");
+}

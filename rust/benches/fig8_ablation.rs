@@ -1,0 +1,55 @@
+//! Figure 8: test loss across tiling configurations on the ResNet (the
+//! paper's appendix ablation) — same four configs as Fig 7 but tracked in
+//! *loss* space, on the ResNet-mini.
+
+use tiledbits::bench_util::{bench_dirs, bench_steps, header};
+use tiledbits::config::Manifest;
+use tiledbits::coordinator::run_or_load;
+use tiledbits::runtime::Runtime;
+use tiledbits::train::TrainOptions;
+
+fn main() {
+    header("Figure 8: ResNet tiling-configuration test loss");
+    let (artifacts, runs) = bench_dirs();
+    let steps = bench_steps(80);
+    let Ok(manifest) = Manifest::load(&artifacts) else {
+        println!("(artifacts not built; skipping)");
+        return;
+    };
+    let rt = Runtime::new(&artifacts).expect("PJRT");
+    let opts = TrainOptions {
+        steps: Some(steps),
+        eval_every: (steps / 4).max(1),
+        log_every: 10_000,
+        seed: None,
+    };
+
+    let variants = [
+        ("resnet_mini_tbn4", "lambda + W+A + multi-alpha (best)"),
+        ("resnet_mini_tbn4_global", "global tiling"),
+        ("resnet_mini_tbn4_wonly", "W-only alphas"),
+        ("resnet_mini_tbn4_single_alpha", "single alpha"),
+    ];
+    let mut losses = Vec::new();
+    for (id, label) in variants {
+        match run_or_load(&rt, &manifest, id, &opts, &runs) {
+            Ok(rec) => {
+                let curve: Vec<String> = rec.eval_curve.iter()
+                    .map(|(s, l, _)| format!("{s}:{l:.3}")).collect();
+                println!("{label:36} final loss {:.4}  [{}]",
+                         rec.loss, curve.join(" "));
+                losses.push((label, rec.loss));
+            }
+            Err(e) => println!("{label:36} FAILED: {e:#}"),
+        }
+    }
+    if let (Some(best), Some(global)) = (
+        losses.iter().find(|(l, _)| l.contains("best")),
+        losses.iter().find(|(l, _)| l.contains("global")),
+    ) {
+        println!("\nshape check: global-tiling loss {:.4} vs default {:.4} — the paper's",
+                 global.1, best.1);
+        println!("only clear Fig-8 separation is global tiling being worst{}",
+                 if global.1 >= best.1 { " (holds)" } else { " (NOT holding at this scale)" });
+    }
+}

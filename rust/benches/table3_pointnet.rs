@@ -1,0 +1,60 @@
+//! Table 3: PointNet classification / part segmentation (IoU) on the
+//! synthetic point-cloud substrates, plus the analytic columns on the
+//! full-size PointNet specs.
+
+use tiledbits::arch;
+use tiledbits::bench_util::{bench_dirs, bench_steps, header};
+use tiledbits::config::Manifest;
+use tiledbits::coordinator::run_or_load;
+use tiledbits::runtime::Runtime;
+use tiledbits::tbn::{compress, TilingPolicy};
+use tiledbits::train::TrainOptions;
+
+fn main() {
+    header("Table 3: PointNet (cls + part seg + semantic seg)");
+
+    println!("\n-- analytic columns (full-size PointNet) --");
+    for (name, lam) in [("pointnet_cls", 64_000), ("pointnet_part_seg", 64_000),
+                        ("pointnet_sem_seg", 64_000)] {
+        let a = arch::arch_by_name(name).unwrap();
+        println!("{name} ({:.2}M params, {:.0}% FC):",
+                 a.total_params() as f64 / 1e6, 100.0 * a.fc_fraction());
+        for p in [4usize, 8] {
+            let (bw, mbit, sav) = compress::table_row(&a, &TilingPolicy::tbn(p, lam));
+            println!("  TBN_{p}: bit-width {bw:.3}  {mbit:.2} M-bit  ({sav:.1}x)");
+        }
+    }
+
+    let (artifacts, runs) = bench_dirs();
+    let steps = bench_steps(60);
+    let Ok(manifest) = Manifest::load(&artifacts) else {
+        println!("\n(artifacts not built; skipping measured half)");
+        return;
+    };
+    let rt = Runtime::new(&artifacts).expect("PJRT");
+    let opts = TrainOptions { steps: Some(steps), eval_every: 0, log_every: 10_000, seed: None };
+
+    println!("\n-- measured: classification (SynthModelNet, {steps} steps) --");
+    for id in ["pointnet_cls_fp", "pointnet_cls_bwnn", "pointnet_cls_tbn4",
+               "pointnet_cls_tbn8"] {
+        match run_or_load(&rt, &manifest, id, &opts, &runs) {
+            Ok(rec) => println!("{id:24} acc {:5.1}%  bit-width {:.3}",
+                                100.0 * rec.metric, rec.bit_width),
+            Err(e) => println!("{id:24} FAILED: {e:#}"),
+        }
+    }
+    println!("\n-- measured: part segmentation (SynthShapeNet) --");
+    for id in ["pointnet_seg_fp", "pointnet_seg_bwnn", "pointnet_seg_tbn4",
+               "pointnet_seg_tbn8"] {
+        match run_or_load(&rt, &manifest, id, &opts, &runs) {
+            Ok(rec) => println!(
+                "{id:24} acc {:5.1}%  inst-IoU {:.3}  class-IoU {:.3}  bit-width {:.3}",
+                100.0 * rec.metric,
+                rec.instance_iou.unwrap_or(0.0),
+                rec.class_iou.unwrap_or(0.0),
+                rec.bit_width),
+            Err(e) => println!("{id:24} FAILED: {e:#}"),
+        }
+    }
+    println!("\nshape check: TBN_4 on par with BWNN, both below FP; IoU well above chance.");
+}

@@ -1,0 +1,46 @@
+//! Table 4: Vision Transformers (ViT / Swin-t) — analytic columns on the
+//! full-size specs, measured accuracy on the ViT-tiny mini.
+
+use tiledbits::arch;
+use tiledbits::bench_util::{bench_dirs, bench_steps, header};
+use tiledbits::config::Manifest;
+use tiledbits::coordinator::run_or_load;
+use tiledbits::runtime::Runtime;
+use tiledbits::tbn::{compress, TilingPolicy};
+use tiledbits::train::TrainOptions;
+
+fn main() {
+    header("Table 4: Vision Transformers on CIFAR-10/ImageNet");
+
+    println!("\n-- analytic columns --");
+    for (name, ps, lam) in [("vit_cifar", vec![4usize, 8], 64_000usize),
+                            ("swin_t", vec![4, 8], 64_000),
+                            ("swin_t", vec![2], 150_000)] {
+        let a = arch::arch_by_name(name).unwrap();
+        for &p in &ps {
+            let (bw, mbit, sav) = compress::table_row(&a, &TilingPolicy::tbn(p, lam));
+            println!("{name:12} TBN_{p:<2} (lambda {lam:>6}): bit-width {bw:.3}  \
+                      {mbit:8.2} M-bit  ({sav:.1}x)");
+        }
+    }
+    println!("paper: ViT TBN_4 0.253/2.40, TBN_8 0.129/1.22; Swin-t TBN_4 0.259/6.88,");
+    println!("       TBN_8 0.135/3.61; Swin-t ImageNet TBN_2 0.534/14.7");
+
+    let (artifacts, runs) = bench_dirs();
+    let steps = bench_steps(60);
+    let Ok(manifest) = Manifest::load(&artifacts) else {
+        println!("\n(artifacts not built; skipping measured half)");
+        return;
+    };
+    let rt = Runtime::new(&artifacts).expect("PJRT");
+    let opts = TrainOptions { steps: Some(steps), eval_every: 0, log_every: 10_000, seed: None };
+    println!("\n-- measured: ViT-tiny on SynthCIFAR ({steps} steps) --");
+    for id in ["vit_tiny_fp", "vit_tiny_bwnn", "vit_tiny_tbn4", "vit_tiny_tbn8"] {
+        match run_or_load(&rt, &manifest, id, &opts, &runs) {
+            Ok(rec) => println!("{id:20} acc {:5.1}%  bit-width {:.3}",
+                                100.0 * rec.metric, rec.bit_width),
+            Err(e) => println!("{id:20} FAILED: {e:#}"),
+        }
+    }
+    println!("\nshape check: TBN_4 within a few points of FP (the paper's headline for ViTs).");
+}

@@ -1,0 +1,53 @@
+//! Table 7: inference memory on the ImageNet ViT — peak memory, parameter
+//! memory and %-of-peak for the four kernel variants, from the allocator
+//! model, plus a measured host-side weight-residency check on the native
+//! engine's layer records.
+
+use tiledbits::arch;
+use tiledbits::bench_util::header;
+use tiledbits::coordinator::report;
+use tiledbits::nn::layer_resident_bytes;
+use tiledbits::tbn::{alphas_from, tile_from_weights, AlphaMode, LayerRecord,
+                     TilingPolicy, WeightPayload};
+use tiledbits::tbn::memory::{simulate, KernelKind};
+use tiledbits::tensor::BitVec;
+use tiledbits::util::Rng;
+
+fn main() {
+    header("Table 7: inference memory, ImageNet ViT");
+    print!("{}", report::memory_table(4).render());
+    println!("paper: FP 222.5/208.0 (93.5%), FP-Tiled 78.5/52.0, BWNN 18.4/6.5,");
+    println!("       TBN_4 13.4/1.6 (11.9%)\n");
+
+    // host-measured residency of one real 8.3M-param ViT block layer
+    let (m, n, p) = (832usize, 3328usize, 4usize);
+    let mut rng = Rng::new(7);
+    let w = rng.normal_vec(m * n, 1.0);
+    let variants = [
+        ("fp", LayerRecord { name: "mlp.fc1".into(), shape: vec![m, n],
+                             payload: WeightPayload::Fp(w.clone()) }),
+        ("bwnn", LayerRecord { name: "mlp.fc1".into(), shape: vec![m, n],
+                               payload: WeightPayload::Bwnn {
+                                   bits: BitVec::from_signs(&w), alpha: 0.5 } }),
+        ("tbn4", LayerRecord { name: "mlp.fc1".into(), shape: vec![m, n],
+                               payload: WeightPayload::Tiled {
+                                   p,
+                                   tile: tile_from_weights(&w, p),
+                                   alphas: alphas_from(&w, p, AlphaMode::PerTile) } }),
+    ];
+    println!("-- measured bytes resident for one {m}x{n} FC layer --");
+    let fp_bytes = layer_resident_bytes(&variants[0].1) as f64;
+    for (name, rec) in &variants {
+        let b = layer_resident_bytes(rec);
+        println!("{name:6} {:>12} bytes  ({:.1}x vs fp)", b, fp_bytes / b as f64);
+    }
+
+    // peak sensitivity to p
+    println!("\n-- TBN peak memory vs p (allocator model) --");
+    let a = arch::vit_small_imagenet();
+    for p in [2usize, 4, 8, 16] {
+        let r = simulate(&a, &TilingPolicy::tbn(p, 150_000), KernelKind::TbnPacked);
+        println!("p={p:<2} peak {:7.2} MB  params {:6.2} MB  ({:.1}% of peak)",
+                 r.peak_bytes / 1e6, r.param_bytes / 1e6, 100.0 * r.param_fraction());
+    }
+}

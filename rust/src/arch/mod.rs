@@ -1,0 +1,222 @@
+//! Exact layer-shape specifications of the *paper's* architectures.
+//!
+//! These drive every analytic column in the paper's tables: bit-width,
+//! #Params (M-bit), savings vs 1-bit, bit-ops (Table 2), conv/FC composition
+//! (Figure 2) and the inference memory model (Table 7 / Figure 5).  The
+//! scaled-down *trainable* minis live in `python/compile/models`; this module
+//! describes the full-size networks so the accounting matches the paper.
+//!
+//! Param totals are calibrated against the paper's own numbers (#Params
+//! M-bit / 32): ResNet18-CIFAR 10.99M, ResNet50-CIFAR 23.45M, VGG-Small
+//! 4.57M, ResNet34-ImageNet 21.1M, ViT-CIFAR 9.5M, Swin-t 26.6M, PointNet
+//! 3.48M/8.34M/3.53M, TST 4.5M/0.37M.
+
+mod models;
+
+pub use models::*;
+
+/// Layer kind: everything the paper tiles is a conv or an FC weight.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    /// (out_c, in_c, kh, kw)
+    Conv { co: usize, ci: usize, kh: usize, kw: usize },
+    /// (out_features, in_features)
+    Fc { co: usize, ci: usize },
+    /// Norm scales, embeddings, ... (never quantized)
+    Other,
+}
+
+/// One weight-bearing layer of a full-size architecture.
+#[derive(Debug, Clone)]
+pub struct LayerSpec {
+    pub name: String,
+    pub kind: Kind,
+    /// Total weight elements.
+    pub params: usize,
+    /// Multiply-accumulates for one input sample.
+    pub macs: u64,
+    /// Input activation elements (batch 1).
+    pub in_act: usize,
+    /// Output activation elements (batch 1).
+    pub out_act: usize,
+}
+
+impl LayerSpec {
+    pub fn conv(name: &str, ci: usize, co: usize, k: usize, h_out: usize, w_out: usize,
+                h_in: usize, w_in: usize) -> LayerSpec {
+        let params = co * ci * k * k;
+        LayerSpec {
+            name: name.into(),
+            kind: Kind::Conv { co, ci, kh: k, kw: k },
+            params,
+            macs: (co * ci * k * k * h_out * w_out) as u64,
+            in_act: ci * h_in * w_in,
+            out_act: co * h_out * w_out,
+        }
+    }
+
+    pub fn fc(name: &str, ci: usize, co: usize) -> LayerSpec {
+        LayerSpec {
+            name: name.into(),
+            kind: Kind::Fc { co, ci },
+            params: co * ci,
+            macs: (co * ci) as u64,
+            in_act: ci,
+            out_act: co,
+        }
+    }
+
+    /// FC applied to `tokens` positions (transformer / PointNet shared MLP).
+    pub fn fc_tok(name: &str, ci: usize, co: usize, tokens: usize) -> LayerSpec {
+        LayerSpec {
+            name: name.into(),
+            kind: Kind::Fc { co, ci },
+            params: co * ci,
+            macs: (co * ci * tokens) as u64,
+            in_act: ci * tokens,
+            out_act: co * tokens,
+        }
+    }
+
+    pub fn other(name: &str, params: usize) -> LayerSpec {
+        LayerSpec { name: name.into(), kind: Kind::Other, params, macs: 0,
+                    in_act: 0, out_act: 0 }
+    }
+
+    pub fn is_conv(&self) -> bool {
+        matches!(self.kind, Kind::Conv { .. })
+    }
+
+    pub fn is_fc(&self) -> bool {
+        matches!(self.kind, Kind::Fc { .. })
+    }
+
+    /// Per-output-channel weight count (replication granularity, §4.1).
+    pub fn per_channel(&self) -> usize {
+        match self.kind {
+            Kind::Conv { ci, kh, kw, .. } => ci * kh * kw,
+            Kind::Fc { ci, .. } => ci,
+            Kind::Other => self.params,
+        }
+    }
+}
+
+/// A named full-size architecture.
+#[derive(Debug, Clone)]
+pub struct ArchSpec {
+    pub name: String,
+    pub layers: Vec<LayerSpec>,
+}
+
+impl ArchSpec {
+    pub fn total_params(&self) -> usize {
+        self.layers.iter().map(|l| l.params).sum()
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs).sum()
+    }
+
+    pub fn conv_params(&self) -> usize {
+        self.layers.iter().filter(|l| l.is_conv()).map(|l| l.params).sum()
+    }
+
+    pub fn fc_params(&self) -> usize {
+        self.layers.iter().filter(|l| l.is_fc()).map(|l| l.params).sum()
+    }
+
+    /// Fraction of weight params in FC layers (Figure 2's y-axis).
+    pub fn fc_fraction(&self) -> f64 {
+        let total = (self.conv_params() + self.fc_params()).max(1);
+        self.fc_params() as f64 / total as f64
+    }
+}
+
+/// All architectures that appear in the paper's evaluation.
+pub fn all_archs() -> Vec<ArchSpec> {
+    vec![
+        resnet18_cifar(),
+        resnet50_cifar(),
+        vgg_small_cifar(),
+        resnet34_imagenet(),
+        vit_cifar(),
+        vit_small_imagenet(),
+        swin_t(),
+        mobilevit(),
+        pointnet_cls(),
+        pointnet_part_seg(),
+        pointnet_sem_seg(),
+        mlpmixer_cifar(),
+        convmixer_cifar(),
+        tst_electricity(),
+        tst_weather(),
+    ]
+}
+
+pub fn arch_by_name(name: &str) -> Option<ArchSpec> {
+    all_archs().into_iter().find(|a| a.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Paper-calibrated param totals (±3%): Tables 1, 3, 4, 5.
+    #[test]
+    fn param_totals_match_paper() {
+        let cases = [
+            ("resnet18_cifar", 10.99e6, 0.03),
+            ("resnet50_cifar", 23.45e6, 0.03),
+            ("vgg_small_cifar", 4.57e6, 0.03),
+            ("resnet34_imagenet", 21.09e6, 0.04),
+            ("vit_cifar", 9.49e6, 0.03),
+            ("swin_t", 26.6e6, 0.08),
+            ("pointnet_cls", 3.48e6, 0.05),
+            ("pointnet_part_seg", 8.34e6, 0.08),
+            ("pointnet_sem_seg", 3.53e6, 0.05),
+            ("tst_electricity", 4.54e6, 0.05),
+            ("tst_weather", 0.368e6, 0.10),
+        ];
+        for (name, want, tol) in cases {
+            let arch = arch_by_name(name).unwrap_or_else(|| panic!("missing {name}"));
+            let got = arch.total_params() as f64;
+            let rel = (got - want).abs() / want;
+            assert!(rel < tol, "{name}: got {got:.3e}, paper {want:.3e} (rel {rel:.3})");
+        }
+    }
+
+    /// Figure 2: ResNets are conv-dominated; ViT/Mixer/PointNet FC-dominated.
+    #[test]
+    fn composition_trends() {
+        assert!(resnet18_cifar().fc_fraction() < 0.05);
+        assert!(resnet34_imagenet().fc_fraction() < 0.15);
+        assert!(vit_cifar().fc_fraction() > 0.95);
+        assert!(swin_t().fc_fraction() > 0.90);
+        assert!(pointnet_cls().fc_fraction() > 0.95);
+        assert!(mlpmixer_cifar().fc_fraction() > 0.95);
+        assert!(convmixer_cifar().fc_fraction() < 0.1);
+    }
+
+    #[test]
+    fn macs_positive_and_consistent() {
+        for arch in all_archs() {
+            assert!(arch.total_macs() > 0, "{}", arch.name);
+            for l in &arch.layers {
+                if l.is_conv() || l.is_fc() {
+                    assert!(l.params > 0 && l.per_channel() > 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn layer_constructors() {
+        let c = LayerSpec::conv("c", 3, 64, 3, 32, 32, 32, 32);
+        assert_eq!(c.params, 64 * 3 * 9);
+        assert_eq!(c.macs, (64 * 3 * 9 * 32 * 32) as u64);
+        assert_eq!(c.per_channel(), 27);
+        let f = LayerSpec::fc_tok("f", 512, 512, 64);
+        assert_eq!(f.params, 512 * 512);
+        assert_eq!(f.macs, (512 * 512 * 64) as u64);
+    }
+}

@@ -1,0 +1,305 @@
+//! Builders for every paper architecture (see mod.rs for calibration notes).
+
+use super::{ArchSpec, LayerSpec};
+
+// ---------------------------------------------------------------------------
+// ResNets
+// ---------------------------------------------------------------------------
+
+/// Basic-block ResNet (18/34-style). `stage_blocks` per stage, widths
+/// doubling from `width0`; `img` is the input spatial size after the stem.
+fn basic_resnet(name: &str, stage_blocks: [usize; 4], width0: usize, img: usize,
+                stem: LayerSpec, classes: usize) -> ArchSpec {
+    let mut layers = vec![stem];
+    let mut cin = width0;
+    let mut sp = img;
+    for (si, &nblocks) in stage_blocks.iter().enumerate() {
+        let ch = width0 << si;
+        for bi in 0..nblocks {
+            let stride = if si > 0 && bi == 0 { 2 } else { 1 };
+            if stride == 2 {
+                sp /= 2;
+            }
+            let pre = format!("s{si}b{bi}");
+            layers.push(LayerSpec::conv(&format!("{pre}.conv1"), cin, ch, 3, sp, sp,
+                                        sp * stride, sp * stride));
+            layers.push(LayerSpec::conv(&format!("{pre}.conv2"), ch, ch, 3, sp, sp, sp, sp));
+            if stride != 1 || cin != ch {
+                layers.push(LayerSpec::conv(&format!("{pre}.down"), cin, ch, 1, sp, sp,
+                                            sp * stride, sp * stride));
+            }
+            cin = ch;
+        }
+    }
+    layers.push(LayerSpec::fc("fc", cin, classes));
+    ArchSpec { name: name.into(), layers }
+}
+
+/// Bottleneck ResNet (50-style), expansion 4.
+fn bottleneck_resnet(name: &str, stage_blocks: [usize; 4], width0: usize, img: usize,
+                     stem: LayerSpec, classes: usize) -> ArchSpec {
+    let mut layers = vec![stem];
+    let mut cin = width0;
+    let mut sp = img;
+    for (si, &nblocks) in stage_blocks.iter().enumerate() {
+        let mid = width0 << si;
+        let out = mid * 4;
+        for bi in 0..nblocks {
+            let stride = if si > 0 && bi == 0 { 2 } else { 1 };
+            if stride == 2 {
+                sp /= 2;
+            }
+            let pre = format!("s{si}b{bi}");
+            layers.push(LayerSpec::conv(&format!("{pre}.conv1"), cin, mid, 1, sp, sp,
+                                        sp * stride, sp * stride));
+            layers.push(LayerSpec::conv(&format!("{pre}.conv2"), mid, mid, 3, sp, sp, sp, sp));
+            layers.push(LayerSpec::conv(&format!("{pre}.conv3"), mid, out, 1, sp, sp, sp, sp));
+            if stride != 1 || cin != out {
+                layers.push(LayerSpec::conv(&format!("{pre}.down"), cin, out, 1, sp, sp,
+                                            sp * stride, sp * stride));
+            }
+            cin = out;
+        }
+    }
+    layers.push(LayerSpec::fc("fc", cin, classes));
+    ArchSpec { name: name.into(), layers }
+}
+
+pub fn resnet18_cifar() -> ArchSpec {
+    basic_resnet("resnet18_cifar", [2, 2, 2, 2], 64, 32,
+                 LayerSpec::conv("stem", 3, 64, 3, 32, 32, 32, 32), 10)
+}
+
+pub fn resnet50_cifar() -> ArchSpec {
+    bottleneck_resnet("resnet50_cifar", [3, 4, 6, 3], 64, 32,
+                      LayerSpec::conv("stem", 3, 64, 3, 32, 32, 32, 32), 10)
+}
+
+pub fn resnet34_imagenet() -> ArchSpec {
+    basic_resnet("resnet34_imagenet", [3, 4, 6, 3], 64, 56,
+                 LayerSpec::conv("stem", 3, 64, 7, 112, 112, 224, 224), 1000)
+}
+
+// ---------------------------------------------------------------------------
+// VGG-Small (the BNN literature's CIFAR VGG)
+// ---------------------------------------------------------------------------
+
+pub fn vgg_small_cifar() -> ArchSpec {
+    let plan: [(usize, usize); 6] =
+        [(128, 32), (128, 32), (256, 16), (256, 16), (512, 8), (512, 8)];
+    let mut layers = Vec::new();
+    let mut cin = 3;
+    let mut sp_in = 32;
+    for (i, &(ch, sp)) in plan.iter().enumerate() {
+        layers.push(LayerSpec::conv(&format!("conv{i}"), cin, ch, 3, sp, sp, sp_in, sp_in));
+        cin = ch;
+        sp_in = sp;
+    }
+    layers.push(LayerSpec::fc("fc", 512 * 4 * 4, 10));
+    ArchSpec { name: "vgg_small_cifar".into(), layers }
+}
+
+// ---------------------------------------------------------------------------
+// Transformers
+// ---------------------------------------------------------------------------
+
+/// Standard encoder stack: qkv + proj + 2-layer MLP per block, FC applied
+/// across `tokens` positions.
+fn encoder_blocks(layers: &mut Vec<LayerSpec>, depth: usize, dim: usize,
+                  mlp: usize, tokens: usize) {
+    for d in 0..depth {
+        let pre = format!("blk{d}");
+        layers.push(LayerSpec::fc_tok(&format!("{pre}.wq"), dim, dim, tokens));
+        layers.push(LayerSpec::fc_tok(&format!("{pre}.wk"), dim, dim, tokens));
+        layers.push(LayerSpec::fc_tok(&format!("{pre}.wv"), dim, dim, tokens));
+        layers.push(LayerSpec::fc_tok(&format!("{pre}.wo"), dim, dim, tokens));
+        layers.push(LayerSpec::fc_tok(&format!("{pre}.mlp.fc1"), dim, mlp, tokens));
+        layers.push(LayerSpec::fc_tok(&format!("{pre}.mlp.fc2"), mlp, dim, tokens));
+    }
+}
+
+/// ViT trained on CIFAR-10 (Table 4): patch 4, dim 512, depth 6, mlp 512.
+pub fn vit_cifar() -> ArchSpec {
+    let (dim, depth, mlp, tokens) = (512, 6, 512, 64);
+    let mut layers = vec![LayerSpec::fc_tok("patch_embed", 3 * 4 * 4, dim, tokens)];
+    encoder_blocks(&mut layers, depth, dim, mlp, tokens);
+    layers.push(LayerSpec::other("pos_embed", tokens * dim));
+    layers.push(LayerSpec::fc("head", dim, 10));
+    ArchSpec { name: "vit_cifar".into(), layers }
+}
+
+/// ImageNet ViT (Small) used in Table 7 / Fig 5: ~52M params, six ~8.4M
+/// attention blocks (dim 832, mlp ratio 4, patch 16 on 224).
+pub fn vit_small_imagenet() -> ArchSpec {
+    let (dim, depth, tokens) = (832, 6, 196);
+    let mut layers = vec![LayerSpec::fc_tok("patch_embed", 3 * 16 * 16, dim, tokens)];
+    encoder_blocks(&mut layers, depth, dim, 4 * dim, tokens);
+    layers.push(LayerSpec::other("pos_embed", tokens * dim));
+    layers.push(LayerSpec::fc("head", dim, 1000));
+    ArchSpec { name: "vit_small_imagenet".into(), layers }
+}
+
+/// Swin-t: stages [2,2,6,2] at dims [96,192,384,768], patch-merging FCs.
+pub fn swin_t() -> ArchSpec {
+    let dims = [96usize, 192, 384, 768];
+    let depths = [2usize, 2, 6, 2];
+    let tokens = [3136usize, 784, 196, 49]; // 224/4 = 56 -> 56^2 ...
+    let mut layers = vec![LayerSpec::fc_tok("patch_embed", 3 * 4 * 4, dims[0], tokens[0])];
+    for s in 0..4 {
+        let mut stage = Vec::new();
+        encoder_blocks(&mut stage, depths[s], dims[s], 4 * dims[s], tokens[s]);
+        for mut l in stage {
+            l.name = format!("st{s}.{}", l.name);
+            layers.push(l);
+        }
+        if s < 3 {
+            layers.push(LayerSpec::fc_tok(&format!("st{s}.merge"), 4 * dims[s],
+                                          dims[s + 1], tokens[s + 1]));
+        }
+    }
+    layers.push(LayerSpec::fc("head", dims[3], 1000));
+    ArchSpec { name: "swin_t".into(), layers }
+}
+
+/// MobileViT-S-like hybrid (Figure 2 only): conv stem/stages + transformer
+/// blocks, roughly balanced conv/FC split at ~5.6M params.
+pub fn mobilevit() -> ArchSpec {
+    let mut layers = vec![
+        LayerSpec::conv("stem", 3, 16, 3, 128, 128, 256, 256),
+        LayerSpec::conv("mv2_0", 16, 32, 3, 128, 128, 128, 128),
+        LayerSpec::conv("mv2_1", 32, 64, 3, 64, 64, 128, 128),
+        LayerSpec::conv("mv2_2", 64, 96, 3, 32, 32, 64, 64),
+        LayerSpec::conv("mv2_3", 96, 128, 3, 16, 16, 32, 32),
+        LayerSpec::conv("mv2_4", 128, 160, 3, 8, 8, 16, 16),
+    ];
+    encoder_blocks(&mut layers, 2, 144, 288, 256);
+    encoder_blocks(&mut layers, 4, 192, 384, 64);
+    encoder_blocks(&mut layers, 3, 240, 480, 16);
+    layers.push(LayerSpec::conv("proj", 160, 640, 1, 8, 8, 8, 8));
+    layers.push(LayerSpec::fc("head", 640, 1000));
+    ArchSpec { name: "mobilevit".into(), layers }
+}
+
+// ---------------------------------------------------------------------------
+// PointNets (Qi et al., incl. T-Nets — FC-dominated per Figure 2)
+// ---------------------------------------------------------------------------
+
+fn tnet(layers: &mut Vec<LayerSpec>, pre: &str, k: usize, points: usize) {
+    layers.push(LayerSpec::fc_tok(&format!("{pre}.conv1"), k, 64, points));
+    layers.push(LayerSpec::fc_tok(&format!("{pre}.conv2"), 64, 128, points));
+    layers.push(LayerSpec::fc_tok(&format!("{pre}.conv3"), 128, 1024, points));
+    layers.push(LayerSpec::fc(&format!("{pre}.fc1"), 1024, 512));
+    layers.push(LayerSpec::fc(&format!("{pre}.fc2"), 512, 256));
+    layers.push(LayerSpec::fc(&format!("{pre}.fc3"), 256, k * k));
+}
+
+pub fn pointnet_cls() -> ArchSpec {
+    let n = 1024; // points
+    let mut layers = Vec::new();
+    tnet(&mut layers, "tnet3", 3, n);
+    layers.push(LayerSpec::fc_tok("conv1", 3, 64, n));
+    layers.push(LayerSpec::fc_tok("conv2", 64, 64, n));
+    tnet(&mut layers, "tnet64", 64, n);
+    layers.push(LayerSpec::fc_tok("conv3", 64, 64, n));
+    layers.push(LayerSpec::fc_tok("conv4", 64, 128, n));
+    layers.push(LayerSpec::fc_tok("conv5", 128, 1024, n));
+    layers.push(LayerSpec::fc("fc1", 1024, 512));
+    layers.push(LayerSpec::fc("fc2", 512, 256));
+    layers.push(LayerSpec::fc("head", 256, 40));
+    ArchSpec { name: "pointnet_cls".into(), layers }
+}
+
+pub fn pointnet_part_seg() -> ArchSpec {
+    let n = 2048;
+    let mut layers = Vec::new();
+    tnet(&mut layers, "tnet3", 3, n);
+    layers.push(LayerSpec::fc_tok("conv1", 3, 64, n));
+    layers.push(LayerSpec::fc_tok("conv2", 64, 128, n));
+    layers.push(LayerSpec::fc_tok("conv3", 128, 128, n));
+    tnet(&mut layers, "tnet128", 128, n);
+    layers.push(LayerSpec::fc_tok("conv4", 128, 512, n));
+    layers.push(LayerSpec::fc_tok("conv5", 512, 2048, n));
+    // per-point concat of skip features + global feature + class one-hot
+    // concat: skip features (64+128+128+512) + global (2048) + one-hot (16)
+    layers.push(LayerSpec::fc_tok("seg1", 2048 + 512 + 128 + 128 + 64 + 16, 256, n));
+    layers.push(LayerSpec::fc_tok("seg2", 256, 256, n));
+    layers.push(LayerSpec::fc_tok("seg3", 256, 128, n));
+    layers.push(LayerSpec::fc_tok("head", 128, 50, n));
+    ArchSpec { name: "pointnet_part_seg".into(), layers }
+}
+
+pub fn pointnet_sem_seg() -> ArchSpec {
+    let n = 4096;
+    let mut layers = Vec::new();
+    tnet(&mut layers, "tnet3", 3, n);
+    layers.push(LayerSpec::fc_tok("conv1", 3, 64, n));
+    layers.push(LayerSpec::fc_tok("conv2", 64, 64, n));
+    tnet(&mut layers, "tnet64", 64, n);
+    layers.push(LayerSpec::fc_tok("conv3", 64, 64, n));
+    layers.push(LayerSpec::fc_tok("conv4", 64, 128, n));
+    layers.push(LayerSpec::fc_tok("conv5", 128, 1024, n));
+    layers.push(LayerSpec::fc_tok("seg1", 1024 + 64, 512, n));
+    layers.push(LayerSpec::fc_tok("seg2", 512, 256, n));
+    layers.push(LayerSpec::fc_tok("head", 256, 13, n));
+    ArchSpec { name: "pointnet_sem_seg".into(), layers }
+}
+
+// ---------------------------------------------------------------------------
+// Mixers (Figure 6 ablation architectures)
+// ---------------------------------------------------------------------------
+
+/// MLPMixer whose largest layers are 131k elements (512x256), per Fig 6.
+pub fn mlpmixer_cifar() -> ArchSpec {
+    let (dim, depth, tokens, tok_h, ch_h) = (512, 6, 64, 64, 256);
+    let mut layers = vec![LayerSpec::fc_tok("patch_embed", 3 * 4 * 4, dim, tokens)];
+    for d in 0..depth {
+        let pre = format!("blk{d}");
+        layers.push(LayerSpec::fc_tok(&format!("{pre}.tok.fc1"), tokens, tok_h, dim));
+        layers.push(LayerSpec::fc_tok(&format!("{pre}.tok.fc2"), tok_h, tokens, dim));
+        layers.push(LayerSpec::fc_tok(&format!("{pre}.ch.fc1"), dim, ch_h, tokens));
+        layers.push(LayerSpec::fc_tok(&format!("{pre}.ch.fc2"), ch_h, dim, tokens));
+    }
+    layers.push(LayerSpec::fc("head", dim, 10));
+    ArchSpec { name: "mlpmixer_cifar".into(), layers }
+}
+
+/// ConvMixer-256/16 kernel 8 patch 1: largest layer 65,536 (256x256), Fig 6.
+pub fn convmixer_cifar() -> ArchSpec {
+    let (dim, depth, k, sp) = (256, 16, 8, 32);
+    let mut layers = vec![LayerSpec::conv("patch_embed", 3, dim, 1, sp, sp, sp, sp)];
+    for d in 0..depth {
+        let pre = format!("blk{d}");
+        // depthwise: ci = 1 per group; params dim*k*k
+        layers.push(LayerSpec {
+            name: format!("{pre}.dw"),
+            kind: super::Kind::Conv { co: dim, ci: 1, kh: k, kw: k },
+            params: dim * k * k,
+            macs: (dim * k * k * sp * sp) as u64,
+            in_act: dim * sp * sp,
+            out_act: dim * sp * sp,
+        });
+        layers.push(LayerSpec::conv(&format!("{pre}.pw"), dim, dim, 1, sp, sp, sp, sp));
+    }
+    layers.push(LayerSpec::fc("head", dim, 10));
+    ArchSpec { name: "convmixer_cifar".into(), layers }
+}
+
+// ---------------------------------------------------------------------------
+// Time-series Transformers (Table 5)
+// ---------------------------------------------------------------------------
+
+pub fn tst_electricity() -> ArchSpec {
+    let (dim, depth, mlp, seq, ch) = (512, 2, 1024, 96, 321);
+    let mut layers = vec![LayerSpec::fc_tok("in_proj", ch, dim, seq)];
+    encoder_blocks(&mut layers, depth, dim, mlp, seq);
+    layers.push(LayerSpec::fc("head", dim, ch));
+    ArchSpec { name: "tst_electricity".into(), layers }
+}
+
+pub fn tst_weather() -> ArchSpec {
+    let (dim, depth, mlp, seq, ch) = (128, 2, 448, 96, 7);
+    let mut layers = vec![LayerSpec::fc_tok("in_proj", ch, dim, seq)];
+    encoder_blocks(&mut layers, depth, dim, mlp, seq);
+    layers.push(LayerSpec::fc("head", dim, ch));
+    ArchSpec { name: "tst_weather".into(), layers }
+}

@@ -1,0 +1,117 @@
+//! Micro-benchmark harness (criterion is not in the offline vendor set).
+//!
+//! Provides warmup + repeated timing with mean/std/min reporting, and a
+//! small table printer shared by the `rust/benches/*` binaries (all of which
+//! are `harness = false`).
+
+use std::time::Instant;
+
+/// Result of one timed benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        1.0 / self.mean_s.max(1e-12)
+    }
+
+    pub fn report(&self) -> String {
+        format!("{:40} {:>12} {:>12} {:>12}  ({} iters)",
+                self.name,
+                fmt_time(self.mean_s),
+                fmt_time(self.std_s),
+                fmt_time(self.min_s),
+                self.iters)
+    }
+}
+
+/// Human-readable seconds.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` warmup calls.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let (mean, std) = crate::util::mean_std(&times);
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: mean,
+        std_s: std,
+        min_s: times.iter().cloned().fold(f64::INFINITY, f64::min),
+    }
+}
+
+/// Print the standard bench header.
+pub fn header(title: &str) {
+    println!("\n#### {title}");
+    println!("{:40} {:>12} {:>12} {:>12}", "benchmark", "mean", "std", "min");
+    println!("{}", "-".repeat(84));
+}
+
+/// Step-count override for training benches: `TBN_BENCH_STEPS` (default 60)
+/// keeps `cargo bench` fast; set higher (or run `tbn run-all`) for the full
+/// paper-scale runs recorded in EXPERIMENTS.md.
+pub fn bench_steps(default: usize) -> usize {
+    std::env::var("TBN_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Shared bench entry boilerplate: artifacts + runs dirs.
+pub fn bench_dirs() -> (String, String) {
+    let artifacts = std::env::var("TBN_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let runs = std::env::var("TBN_RUNS").unwrap_or_else(|_| "runs".into());
+    (artifacts, runs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_measures() {
+        let mut count = 0;
+        let r = bench("noop", 2, 10, || {
+            count += 1;
+        });
+        assert_eq!(count, 12);
+        assert_eq!(r.iters, 10);
+        assert!(r.mean_s >= 0.0 && r.min_s <= r.mean_s);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.0).ends_with('s'));
+        assert!(fmt_time(0.002).ends_with("ms"));
+        assert!(fmt_time(2e-6).ends_with("us"));
+    }
+
+    #[test]
+    fn bench_steps_default() {
+        std::env::remove_var("TBN_BENCH_STEPS");
+        assert_eq!(bench_steps(60), 60);
+    }
+}

@@ -1,0 +1,132 @@
+//! Hand-rolled CLI: flag parsing + subcommand registry (no clap offline).
+
+use std::collections::HashMap;
+
+/// Parsed command line: subcommand, positional args, `--key value` /
+/// `--flag` options.
+#[derive(Debug, Clone, Default)]
+pub struct Cli {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Cli {
+    /// Parse from an iterator of argument strings (after argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Cli {
+        let mut cli = Cli::default();
+        let mut it = args.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                cli.command = it.next().unwrap();
+            }
+        }
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                // --key=value, --key value, or bare flag
+                if let Some((k, v)) = name.split_once('=') {
+                    cli.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    cli.options.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    cli.flags.push(name.to_string());
+                }
+            } else {
+                cli.positional.push(arg);
+            }
+        }
+        cli
+    }
+
+    pub fn from_env() -> Cli {
+        Cli::parse(std::env::args().skip(1))
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn opt_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.opt(key).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, key: &str) -> Option<usize> {
+        self.opt(key).and_then(|v| v.parse().ok())
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+/// Usage text for the `tbn` binary.
+pub const USAGE: &str = "\
+tbn — Tiled Bit Networks coordinator (CIKM 2024 reproduction)
+
+USAGE:
+  tbn <COMMAND> [OPTIONS]
+
+COMMANDS:
+  list                      list experiments (and their tables) from the manifest
+  info                      platform + manifest + architecture summary
+  train <exp_id>            train one experiment end-to-end and record runs/<id>.json
+  run-table <T1|...|F8>     run every experiment behind a paper table/figure
+  run-all                   run every experiment in the manifest
+  report                    render all analytic tables (T2, T7, F2) + cached runs
+  export <exp_id>           train (or reuse) and write the TBNZ model file
+  serve <exp_id>            start the native serving demo on a trained model
+
+OPTIONS:
+  --artifacts <dir>         artifact directory            [default: artifacts]
+  --runs <dir>              run-record directory          [default: runs]
+  --steps <n>               override training step count
+  --eval-every <n>          evaluation period             [default: 100]
+  --seed <n>                override the experiment seed
+  --out <path>              output path (export)
+  --quiet                   errors only
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Cli {
+        Cli::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_command_and_positional() {
+        let c = parse("train mlp_micro_tbn4");
+        assert_eq!(c.command, "train");
+        assert_eq!(c.positional, vec!["mlp_micro_tbn4"]);
+    }
+
+    #[test]
+    fn parses_options_and_flags() {
+        let c = parse("train x --steps 50 --runs=/tmp/r --quiet");
+        assert_eq!(c.opt_usize("steps"), Some(50));
+        assert_eq!(c.opt("runs"), Some("/tmp/r"));
+        assert!(c.has_flag("quiet"));
+        assert!(!c.has_flag("verbose"));
+    }
+
+    #[test]
+    fn empty_args() {
+        let c = parse("");
+        assert_eq!(c.command, "");
+    }
+
+    #[test]
+    fn flag_before_value_option() {
+        let c = parse("report --quiet --steps 10");
+        assert!(c.has_flag("quiet"));
+        assert_eq!(c.opt_usize("steps"), Some(10));
+    }
+
+    #[test]
+    fn defaults() {
+        let c = parse("info");
+        assert_eq!(c.opt_or("artifacts", "artifacts"), "artifacts");
+    }
+}

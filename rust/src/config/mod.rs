@@ -1,0 +1,307 @@
+//! Experiment configuration: typed view over `artifacts/manifest.json`
+//! (written by `python/compile/aot.py` from `configs/experiments.json`).
+//!
+//! The manifest is the contract between the Python compiler and the Rust
+//! coordinator: positional parameter tables, graph file names, IO shapes,
+//! and the tiling policy of every experiment.
+
+use crate::tbn::{AlphaMode, TilingPolicy};
+use crate::util::Json;
+
+/// One parameter of the training graphs (positional).
+#[derive(Debug, Clone)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub role: String,  // weight | alpha_src | other
+    pub quant: String, // tiled | bwnn | fp | aux
+    pub p: usize,
+    pub q: usize,
+    pub n_alphas: usize,
+    pub alpha_src: String, // "W" | "A" | ""
+}
+
+impl ParamInfo {
+    pub fn n(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One positional input of the forward (inference) graph.
+#[derive(Debug, Clone)]
+pub struct InferParamInfo {
+    pub name: String,
+    pub kind: String, // tile | alphas | bwnn_bin | bwnn_alpha | fp
+    pub shape: Vec<usize>,
+    pub source: String,
+}
+
+/// IO contract of an experiment.
+#[derive(Debug, Clone)]
+pub struct IoInfo {
+    pub task: String, // cls | seg | forecast
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub serve_batch: usize,
+    pub x: Vec<usize>,       // per-sample input shape
+    pub y_train: Vec<usize>, // full train label shape
+    pub y_eval: Vec<usize>,
+    pub y_is_int: bool,
+}
+
+/// A fully-described experiment from the manifest.
+#[derive(Debug, Clone)]
+pub struct Experiment {
+    pub id: String,
+    pub tables: Vec<String>,
+    pub model_family: String,
+    pub dataset_kind: String,
+    pub dataset_classes: usize,
+    pub dataset_n_train: usize,
+    pub dataset_n_test: usize,
+    pub tiling: TilingPolicy,
+    pub opt_kind: String,
+    pub opt_slots: usize,
+    pub train_steps: usize,
+    pub lr: f64,
+    pub warmup: usize,
+    pub schedule: String,
+    pub seed: u64,
+    pub params: Vec<ParamInfo>,
+    pub infer_params: Vec<InferParamInfo>,
+    pub io: IoInfo,
+    pub graph_files: Vec<(String, String)>, // (graph name, file)
+}
+
+impl Experiment {
+    pub fn graph_file(&self, name: &str) -> Option<&str> {
+        self.graph_files
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, f)| f.as_str())
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Total opt-state tensors in the train graph.
+    pub fn n_opt(&self) -> usize {
+        self.params.len() * self.opt_slots
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub experiments: Vec<Experiment>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &str) -> Result<Manifest, String> {
+        let path = format!("{artifacts_dir}/manifest.json");
+        let j = Json::parse_file(&path)?;
+        Manifest::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest, String> {
+        let exps = j
+            .get("experiments")
+            .and_then(Json::as_arr)
+            .ok_or("manifest: missing experiments")?;
+        let mut experiments = Vec::with_capacity(exps.len());
+        for e in exps {
+            experiments.push(parse_experiment(e)?);
+        }
+        Ok(Manifest { experiments })
+    }
+
+    pub fn by_id(&self, id: &str) -> Option<&Experiment> {
+        self.experiments.iter().find(|e| e.id == id)
+    }
+
+    /// All experiments mapped to a paper table/figure id (e.g. "T1", "F6").
+    pub fn for_table(&self, table: &str) -> Vec<&Experiment> {
+        self.experiments
+            .iter()
+            .filter(|e| e.tables.iter().any(|t| t == table))
+            .collect()
+    }
+}
+
+fn parse_tiling(j: &Json) -> TilingPolicy {
+    TilingPolicy {
+        mode: j.str_or("mode", "fp").to_string(),
+        p: j.usize_or("p", 1),
+        lambda: j.usize_or("lambda", 0),
+        alpha: AlphaMode::from_str(j.str_or("alpha", "per_tile")),
+        alpha_src_a: j.str_or("alpha_src", "A") == "A",
+    }
+}
+
+fn parse_experiment(e: &Json) -> Result<Experiment, String> {
+    let id = e.str_or("id", "").to_string();
+    if id.is_empty() {
+        return Err("experiment without id".into());
+    }
+    let err = |m: &str| format!("{id}: {m}");
+
+    let io_j = e.get("io").ok_or_else(|| err("missing io"))?;
+    let io = IoInfo {
+        task: io_j.str_or("task", "cls").to_string(),
+        train_batch: io_j.usize_or("train_batch", 64),
+        eval_batch: io_j.usize_or("eval_batch", 256),
+        serve_batch: io_j.usize_or("serve_batch", 32),
+        x: io_j.get("x").map(Json::usize_vec).unwrap_or_default(),
+        y_train: io_j.get("y_train").map(Json::usize_vec).unwrap_or_default(),
+        y_eval: io_j.get("y_eval").map(Json::usize_vec).unwrap_or_default(),
+        y_is_int: io_j.str_or("y_dtype", "i32") == "i32",
+    };
+
+    let params = e
+        .get("params")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| err("missing params"))?
+        .iter()
+        .map(|p| ParamInfo {
+            name: p.str_or("name", "").to_string(),
+            shape: p.get("shape").map(Json::usize_vec).unwrap_or_default(),
+            role: p.str_or("role", "weight").to_string(),
+            quant: p.str_or("quant", "fp").to_string(),
+            p: p.usize_or("p", 1),
+            q: p.usize_or("q", 0),
+            n_alphas: p.usize_or("n_alphas", 0),
+            alpha_src: p.str_or("alpha_src", "").to_string(),
+        })
+        .collect();
+
+    let infer_params = e
+        .get("infer_params")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| err("missing infer_params"))?
+        .iter()
+        .map(|p| InferParamInfo {
+            name: p.str_or("name", "").to_string(),
+            kind: p.str_or("kind", "fp").to_string(),
+            shape: p.get("shape").map(Json::usize_vec).unwrap_or_default(),
+            source: p.str_or("source", "").to_string(),
+        })
+        .collect();
+
+    let graphs = e.get("graphs").and_then(Json::as_obj).ok_or_else(|| err("missing graphs"))?;
+    let graph_files = graphs
+        .iter()
+        .map(|(name, g)| (name.clone(), g.str_or("file", "").to_string()))
+        .collect();
+
+    let tr = e.get("train").cloned().unwrap_or(Json::Obj(vec![]));
+    let ds = e.get("dataset").cloned().unwrap_or(Json::Obj(vec![]));
+    let opt = e.get("opt").cloned().unwrap_or(Json::Obj(vec![]));
+    let model = e.get("model").cloned().unwrap_or(Json::Obj(vec![]));
+
+    Ok(Experiment {
+        id,
+        tables: e
+            .get("tables")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(|t| t.as_str().map(String::from)).collect())
+            .unwrap_or_default(),
+        model_family: model.str_or("family", "").to_string(),
+        dataset_kind: ds.str_or("kind", "").to_string(),
+        dataset_classes: ds.usize_or("classes", 0),
+        dataset_n_train: ds.usize_or("n_train", 1024),
+        dataset_n_test: ds.usize_or("n_test", 256),
+        tiling: parse_tiling(e.get("tiling").unwrap_or(&Json::Obj(vec![]))),
+        opt_kind: opt.str_or("kind", "sgd").to_string(),
+        opt_slots: opt.usize_or("slots", 1),
+        train_steps: tr.usize_or("steps", 400),
+        lr: tr.f64_or("lr", 0.05),
+        warmup: tr.usize_or("warmup", 0),
+        schedule: tr.str_or("schedule", "cosine").to_string(),
+        seed: tr.usize_or("seed", 1) as u64,
+        params,
+        infer_params,
+        io,
+        graph_files,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest_json() -> Json {
+        Json::parse(
+            r#"{"experiments": [{
+                "id": "exp1", "tables": ["T1", "F7"],
+                "model": {"family": "mlp"},
+                "dataset": {"kind": "synth_mnist", "classes": 10,
+                            "n_train": 1024, "n_test": 256},
+                "tiling": {"mode": "tbn", "p": 4, "lambda": 2048,
+                           "alpha": "per_tile", "alpha_src": "A"},
+                "train": {"steps": 100, "lr": 0.05, "warmup": 5,
+                          "schedule": "cosine", "opt": "sgd"},
+                "opt": {"kind": "sgd", "slots": 1},
+                "io": {"task": "cls", "train_batch": 64, "eval_batch": 256,
+                       "serve_batch": 32, "x": [256], "y_train": [64],
+                       "y_eval": [256], "y_dtype": "i32"},
+                "params": [
+                    {"name": "fc0", "shape": [128, 256], "role": "weight",
+                     "quant": "tiled", "p": 4, "q": 8192, "n_alphas": 4,
+                     "alpha_src": "A"},
+                    {"name": "fc0.A", "shape": [128, 256], "role": "alpha_src",
+                     "quant": "aux"},
+                    {"name": "head", "shape": [10, 128], "role": "weight",
+                     "quant": "fp"}
+                ],
+                "infer_params": [
+                    {"name": "fc0.tile", "kind": "tile", "shape": [8192],
+                     "source": "fc0"},
+                    {"name": "fc0.alphas", "kind": "alphas", "shape": [4],
+                     "source": "fc0"},
+                    {"name": "head", "kind": "fp", "shape": [10, 128],
+                     "source": "head"}
+                ],
+                "graphs": {
+                    "init": {"file": "exp1.init.hlo.txt"},
+                    "train_step": {"file": "exp1.train_step.hlo.txt"},
+                    "eval_step": {"file": "exp1.eval_step.hlo.txt"},
+                    "forward": {"file": "exp1.forward.hlo.txt"}
+                }
+            }]}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_experiment() {
+        let m = Manifest::from_json(&sample_manifest_json()).unwrap();
+        assert_eq!(m.experiments.len(), 1);
+        let e = m.by_id("exp1").unwrap();
+        assert_eq!(e.model_family, "mlp");
+        assert_eq!(e.tiling.mode, "tbn");
+        assert_eq!(e.tiling.p, 4);
+        assert!(e.tiling.alpha_src_a);
+        assert_eq!(e.n_params(), 3);
+        assert_eq!(e.n_opt(), 3);
+        assert_eq!(e.params[0].q, 8192);
+        assert_eq!(e.io.x, vec![256]);
+        assert!(e.io.y_is_int);
+        assert_eq!(e.graph_file("init"), Some("exp1.init.hlo.txt"));
+        assert_eq!(e.graph_file("nope"), None);
+    }
+
+    #[test]
+    fn for_table_filters() {
+        let m = Manifest::from_json(&sample_manifest_json()).unwrap();
+        assert_eq!(m.for_table("T1").len(), 1);
+        assert_eq!(m.for_table("F7").len(), 1);
+        assert_eq!(m.for_table("T5").len(), 0);
+    }
+
+    #[test]
+    fn missing_id_rejected() {
+        let j = Json::parse(r#"{"experiments": [{"io": {}}]}"#).unwrap();
+        assert!(Manifest::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,60 @@
+//! Experiment coordinator: registry, runner and report rendering.
+//!
+//! The runner takes one manifest experiment through the full pipeline —
+//! train → eval → export (TBNZ + forward literals) → forward-graph
+//! verification → record — and persists a `runs/<id>.json` record so
+//! benches and reports can reuse completed runs instead of retraining.
+
+pub mod report;
+mod runner;
+
+pub use runner::{run_experiment, RunRecord, VerifyOutcome};
+
+use crate::config::Manifest;
+use crate::train::TrainOptions;
+use crate::runtime::Runtime;
+
+/// Paper table/figure ids in presentation order.
+pub const TABLES: &[(&str, &str)] = &[
+    ("T1", "CNN results on CIFAR-10 and ImageNet"),
+    ("T2", "Bit-Ops of ResNet architectures"),
+    ("T3", "PointNet classification / part seg / semantic seg"),
+    ("T4", "Vision Transformers on CIFAR-10 and ImageNet"),
+    ("T5", "Multivariate time series forecasting"),
+    ("T6", "Microcontroller deployment"),
+    ("T7", "GPU inference memory (ImageNet ViT)"),
+    ("F2", "Conv vs FC composition of popular DNNs"),
+    ("F5", "Per-layer memory trace during inference"),
+    ("F6", "Accuracy vs compression (ConvMixer / MLPMixer)"),
+    ("F7", "Hyperparameter configurations across training"),
+    ("F8", "ResNet tiling-configuration test loss"),
+];
+
+/// Load a cached run record if present.
+pub fn load_run(runs_dir: &str, id: &str) -> Option<RunRecord> {
+    RunRecord::load(&format!("{runs_dir}/{id}.json")).ok()
+}
+
+/// Train (or reuse a cached record for) one experiment.
+pub fn run_or_load(rt: &Runtime, manifest: &Manifest, id: &str,
+                   opts: &TrainOptions, runs_dir: &str)
+                   -> anyhow::Result<RunRecord> {
+    if let Some(rec) = load_run(runs_dir, id) {
+        // only reuse records trained for at least as many steps
+        if opts.steps.map_or(true, |s| rec.steps >= s) {
+            return Ok(rec);
+        }
+    }
+    let exp = manifest
+        .by_id(id)
+        .ok_or_else(|| anyhow::anyhow!("unknown experiment {id}"))?;
+    let rec = run_experiment(rt, exp, opts)?;
+    std::fs::create_dir_all(runs_dir).ok();
+    rec.save(&format!("{runs_dir}/{id}.json"))?;
+    Ok(rec)
+}
+
+/// Resolve the experiments behind one table/figure id.
+pub fn experiments_for<'m>(manifest: &'m Manifest, table: &str) -> Vec<&'m str> {
+    manifest.for_table(table).iter().map(|e| e.id.as_str()).collect()
+}

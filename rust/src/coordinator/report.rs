@@ -1,0 +1,212 @@
+//! Report rendering: the paper's table layouts over measured + analytic rows.
+
+use crate::arch;
+use crate::baselines;
+use super::runner::RunRecord;
+
+/// A rendered table: title + header + rows of strings.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(cell.len());
+                }
+            }
+        }
+        let mut out = format!("== {} ==\n", self.title);
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+fn fmt_opt(v: Option<f64>, mul: f64) -> String {
+    v.map(|x| format!("{:.2}", x * mul)).unwrap_or_else(|| "-".into())
+}
+
+/// Accuracy-style tables (T1/T3/T4/T5): published analytic columns on the
+/// full-size arch + measured metric from the scaled-down run.
+pub fn accuracy_table(title: &str, arch_name: &str, table_id: &str,
+                      runs: &[(&str, &RunRecord)]) -> Table {
+    let mut rows = Vec::new();
+    if let Some(a) = arch::arch_by_name(arch_name) {
+        for r in baselines::rows_for(table_id, arch_name) {
+            let _ = &a;
+            rows.push(vec![
+                format!("{}{}", r.method, if r.binary_act { "*" } else { "" }),
+                format!("{:.3}", r.bit_width),
+                format!("{:.2}", r.mbit),
+                format!("{:.2}", r.metric),
+                "paper".into(),
+            ]);
+        }
+    }
+    for (label, rec) in runs {
+        rows.push(vec![
+            label.to_string(),
+            format!("{:.3}", rec.bit_width),
+            format!("{:.3}", rec.storage_bits as f64 / 1e6),
+            format!("{:.2}", rec.metric * 100.0),
+            "measured (mini)".into(),
+        ]);
+    }
+    Table {
+        title: title.to_string(),
+        header: vec!["Method".into(), "Bit-Width".into(), "#Params (M-bit)".into(),
+                     "Metric".into(), "Source".into()],
+        rows,
+    }
+}
+
+/// Table 2: bit-ops accounting over the paper's CNNs.
+pub fn bitops_table() -> Table {
+    let cases = [
+        ("CIFAR-10", "resnet18_cifar", 4usize, 64_000usize),
+        ("CIFAR-10", "resnet50_cifar", 4, 64_000),
+        ("ImageNet", "resnet34_imagenet", 2, 150_000),
+    ];
+    let mut rows = Vec::new();
+    for (ds, name, p, lam) in cases {
+        let a = arch::arch_by_name(name).unwrap();
+        let (fp, bw, tb, factor) = crate::tbn::bitops::table2_row(&a, p, lam);
+        rows.push(vec![
+            ds.into(), name.into(),
+            format!("{fp:.2}"), format!("{bw:.3}"), format!("{tb:.3}"),
+            format!("({factor:.1}x)"),
+        ]);
+    }
+    Table {
+        title: "Table 2: Bit-Ops (G) — Full Precision / IR-Net(BWNN) / TBN".into(),
+        header: vec!["Dataset".into(), "Model".into(), "Full Prec".into(),
+                     "Binary".into(), "TBN".into(), "Savings".into()],
+        rows,
+    }
+}
+
+/// Figure 2: conv/FC composition of popular DNNs.
+pub fn composition_table() -> Table {
+    let mut rows = Vec::new();
+    for a in arch::all_archs() {
+        rows.push(vec![
+            a.name.clone(),
+            format!("{:.1}", a.total_params() as f64 / 1e6),
+            format!("{:.1}%", 100.0 * (1.0 - a.fc_fraction())),
+            format!("{:.1}%", 100.0 * a.fc_fraction()),
+        ]);
+    }
+    Table {
+        title: "Figure 2: composition of popular DNNs".into(),
+        header: vec!["Architecture".into(), "Params (M)".into(),
+                     "Conv %".into(), "FC %".into()],
+        rows,
+    }
+}
+
+/// Table 7: memory rows for the ImageNet ViT.
+pub fn memory_table(p: usize) -> Table {
+    let a = arch::vit_small_imagenet();
+    let rows_data = crate::tbn::memory::table7_rows(&a, p, 150_000);
+    let fp_peak = rows_data[0].1.peak_bytes;
+    let fp_param = rows_data[0].1.param_bytes;
+    let mut rows = Vec::new();
+    for (name, r) in &rows_data {
+        rows.push(vec![
+            name.to_string(),
+            format!("{:.1} ({:.1}x)", r.peak_bytes / 1e6, fp_peak / r.peak_bytes),
+            format!("{:.1} ({:.1}x)", r.param_bytes / 1e6, fp_param / r.param_bytes),
+            format!("{:.1}%", 100.0 * r.param_fraction()),
+        ]);
+    }
+    Table {
+        title: format!("Table 7: inference memory, ImageNet ViT (p={p})"),
+        header: vec!["Model".into(), "Peak Mem (MB)".into(),
+                     "Param Mem (MB)".into(), "% Param Mem".into()],
+        rows,
+    }
+}
+
+/// Compression sweep rows (Figure 6): accuracy vs p from cached runs.
+pub fn sweep_table(title: &str, runs: &[(usize, &RunRecord)]) -> Table {
+    let rows = runs
+        .iter()
+        .map(|(p, r)| {
+            vec![format!("p={p}"), format!("{:.3}", r.bit_width),
+                 format!("{:.2}", r.metric * 100.0),
+                 fmt_opt(Some(r.loss), 1.0)]
+        })
+        .collect();
+    Table {
+        title: title.to_string(),
+        header: vec!["Compression".into(), "Bit-Width".into(),
+                     "Test Acc %".into(), "Loss".into()],
+        rows,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bitops_table_renders() {
+        let t = bitops_table();
+        assert_eq!(t.rows.len(), 3);
+        let s = t.render();
+        assert!(s.contains("resnet18_cifar"));
+        assert!(s.contains("ImageNet"));
+    }
+
+    #[test]
+    fn composition_covers_all_archs() {
+        let t = composition_table();
+        assert_eq!(t.rows.len(), crate::arch::all_archs().len());
+    }
+
+    #[test]
+    fn memory_table_four_rows() {
+        let t = memory_table(4);
+        assert_eq!(t.rows.len(), 4);
+        assert!(t.render().contains("Full Precision"));
+    }
+
+    #[test]
+    fn accuracy_table_includes_published() {
+        let t = accuracy_table("Table 1: ResNet18", "resnet18_cifar", "T1", &[]);
+        assert!(t.rows.len() >= 8);
+        assert!(t.render().contains("IR-Net"));
+    }
+
+    #[test]
+    fn render_alignment_stable() {
+        let t = Table {
+            title: "x".into(),
+            header: vec!["a".into(), "bb".into()],
+            rows: vec![vec!["lllllong".into(), "1".into()]],
+        };
+        let s = t.render();
+        assert!(s.lines().count() >= 4);
+    }
+}

@@ -1,0 +1,253 @@
+//! The per-experiment pipeline: train → export → verify → record.
+
+use anyhow::{Context, Result};
+
+use crate::config::Experiment;
+use crate::info;
+use crate::runtime::{self, Runtime};
+use crate::tensor::Tensor;
+use crate::train::{export, metrics, TrainOptions, Trainer};
+use crate::util::Json;
+
+/// Outcome of the forward-graph verification step: the AOT `forward` graph
+/// (Pallas tile-reuse kernel inside) is fed the *Rust-exported* tiles and
+/// compared against the eval graph's predictions on the same samples.
+#[derive(Debug, Clone, Default)]
+pub struct VerifyOutcome {
+    pub checked: usize,
+    pub agreed: usize,
+    /// Max |logit| produced (finite-ness witness).
+    pub max_abs_logit: f64,
+}
+
+impl VerifyOutcome {
+    pub fn agreement(&self) -> f64 {
+        self.agreed as f64 / self.checked.max(1) as f64
+    }
+}
+
+/// Persisted record of one completed run.
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    pub id: String,
+    pub steps: usize,
+    pub loss: f64,
+    /// Accuracy (cls/seg) or MSE (forecast).
+    pub metric: f64,
+    pub class_iou: Option<f64>,
+    pub instance_iou: Option<f64>,
+    pub bit_width: f64,
+    pub storage_bits: usize,
+    pub total_params: usize,
+    pub duration_s: f64,
+    pub forward_agreement: f64,
+    /// (step, loss, metric) eval curve for the figure benches.
+    pub eval_curve: Vec<(usize, f64, f64)>,
+    /// (step, loss) train curve (subsampled).
+    pub train_curve: Vec<(usize, f64)>,
+}
+
+impl RunRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::Str(self.id.clone())),
+            ("steps", Json::Num(self.steps as f64)),
+            ("loss", Json::Num(self.loss)),
+            ("metric", Json::Num(self.metric)),
+            ("class_iou", self.class_iou.map(Json::Num).unwrap_or(Json::Null)),
+            ("instance_iou", self.instance_iou.map(Json::Num).unwrap_or(Json::Null)),
+            ("bit_width", Json::Num(self.bit_width)),
+            ("storage_bits", Json::Num(self.storage_bits as f64)),
+            ("total_params", Json::Num(self.total_params as f64)),
+            ("duration_s", Json::Num(self.duration_s)),
+            ("forward_agreement", Json::Num(self.forward_agreement)),
+            ("eval_curve", Json::Arr(self.eval_curve.iter().map(|(s, l, m)| {
+                Json::from_f64s(&[*s as f64, *l, *m])
+            }).collect())),
+            ("train_curve", Json::Arr(self.train_curve.iter().map(|(s, l)| {
+                Json::from_f64s(&[*s as f64, *l])
+            }).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunRecord, String> {
+        let curve3 = |key: &str| -> Vec<(usize, f64, f64)> {
+            j.get(key).and_then(Json::as_arr).map(|a| {
+                a.iter()
+                    .filter_map(|row| {
+                        let v = row.as_arr()?;
+                        Some((v[0].as_usize()?, v[1].as_f64()?, v[2].as_f64()?))
+                    })
+                    .collect()
+            }).unwrap_or_default()
+        };
+        let curve2 = |key: &str| -> Vec<(usize, f64)> {
+            j.get(key).and_then(Json::as_arr).map(|a| {
+                a.iter()
+                    .filter_map(|row| {
+                        let v = row.as_arr()?;
+                        Some((v[0].as_usize()?, v[1].as_f64()?))
+                    })
+                    .collect()
+            }).unwrap_or_default()
+        };
+        Ok(RunRecord {
+            id: j.str_or("id", "").to_string(),
+            steps: j.usize_or("steps", 0),
+            loss: j.f64_or("loss", 0.0),
+            metric: j.f64_or("metric", 0.0),
+            class_iou: j.get("class_iou").and_then(Json::as_f64),
+            instance_iou: j.get("instance_iou").and_then(Json::as_f64),
+            bit_width: j.f64_or("bit_width", 32.0),
+            storage_bits: j.usize_or("storage_bits", 0),
+            total_params: j.usize_or("total_params", 0),
+            duration_s: j.f64_or("duration_s", 0.0),
+            forward_agreement: j.f64_or("forward_agreement", 0.0),
+            eval_curve: curve3("eval_curve"),
+            train_curve: curve2("train_curve"),
+        })
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .with_context(|| format!("write {path}"))
+    }
+
+    pub fn load(path: &str) -> Result<RunRecord, String> {
+        RunRecord::from_json(&Json::parse_file(path)?)
+    }
+}
+
+/// Verify the exported model through the AOT forward graph.
+fn verify_forward(rt: &Runtime, exp: &Experiment, trainer: &Trainer,
+                  model: &crate::train::TrainedModel,
+                  eval_preds: &[i32]) -> Result<VerifyOutcome> {
+    let Some(file) = exp.graph_file("forward") else {
+        return Ok(VerifyOutcome::default());
+    };
+    let exe = rt.load(file)?;
+    let batch = exp.io.serve_batch;
+    let idxs: Vec<usize> = (0..batch).collect();
+    let (x, _, _) = trainer.test_ds.gather(&idxs);
+    let mut x_shape = vec![batch];
+    x_shape.extend_from_slice(&exp.io.x);
+    let mut inputs = vec![runtime::literal_f32(&Tensor::new(x_shape, x))?];
+    inputs.extend(export::forward_inputs(exp, model)?);
+    let out = exe.run(&inputs)?;
+    let logits = runtime::tensor_from_literal(&out[0])?;
+    let max_abs = logits.data.iter().fold(0.0f64, |m, &v| m.max(v.abs() as f64));
+    if !max_abs.is_finite() {
+        anyhow::bail!("{}: forward produced non-finite logits", exp.id);
+    }
+    let mut outcome = VerifyOutcome { checked: 0, agreed: 0, max_abs_logit: max_abs };
+    if exp.io.task != "forecast" && !eval_preds.is_empty() {
+        let fwd_preds: Vec<i32> = logits.argmax_last().iter().map(|&i| i as i32).collect();
+        let per_sample = if exp.io.task == "seg" { trainer.test_ds.y_int_elems } else { 1 };
+        let n = (batch * per_sample).min(eval_preds.len()).min(fwd_preds.len());
+        outcome.checked = n;
+        outcome.agreed = (0..n).filter(|&i| fwd_preds[i] == eval_preds[i]).count();
+    }
+    Ok(outcome)
+}
+
+/// Run one experiment end to end and build its record.
+pub fn run_experiment(rt: &Runtime, exp: &Experiment, opts: &TrainOptions)
+                      -> Result<RunRecord> {
+    info!("coord", "running {} ({} steps{})", exp.id,
+          opts.steps.unwrap_or(exp.train_steps),
+          if opts.steps.is_some() { ", override" } else { "" });
+    let trainer = Trainer::new(rt, exp)?;
+    let (result, model) = trainer.run(opts)?;
+
+    // export; the bit-width column counts conv/FC *weight* layers only
+    // (paper convention — norm scales / embeddings are excluded), while
+    // storage_bits is the whole TBNZ file.
+    let tbnz = export::to_tbnz(exp, &model)?;
+    let (total_params, storage_bits, _) = export::export_summary(&tbnz);
+    let weight_names: std::collections::HashSet<&str> = exp
+        .params
+        .iter()
+        .filter(|p| p.role == "weight")
+        .map(|p| p.name.as_str())
+        .collect();
+    let (mut w_bits, mut w_params) = (0usize, 0usize);
+    for l in tbnz.layers.iter().filter(|l| weight_names.contains(l.name.as_str())) {
+        w_bits += l.storage_bits();
+        w_params += l.n();
+    }
+    let bit_width = w_bits as f64 / w_params.max(1) as f64;
+
+    // eval predictions on the verification slice (re-run eval graph once)
+    let eval_preds = eval_predictions(rt, exp, &trainer, &model)?;
+    let verify = verify_forward(rt, exp, &trainer, &model, &eval_preds)?;
+    if verify.checked > 0 {
+        info!("coord", "{} forward-graph agreement {:.1}% over {} preds",
+              exp.id, 100.0 * verify.agreement(), verify.checked);
+    }
+
+    let train_curve: Vec<(usize, f64)> = result
+        .train_history
+        .iter()
+        .filter(|h| h.step % 10 == 0 || h.step + 1 == result.steps)
+        .map(|h| (h.step, h.loss))
+        .collect();
+
+    Ok(RunRecord {
+        id: exp.id.clone(),
+        steps: result.steps,
+        loss: result.final_eval.loss,
+        metric: result.final_eval.metric,
+        class_iou: result.final_eval.class_iou,
+        instance_iou: result.final_eval.instance_iou,
+        bit_width,
+        storage_bits,
+        total_params,
+        duration_s: result.duration_s,
+        forward_agreement: verify.agreement(),
+        eval_curve: result
+            .eval_history
+            .iter()
+            .map(|e| (e.step, e.loss, e.metric))
+            .collect(),
+        train_curve,
+    })
+}
+
+/// Predictions of the eval graph on the first serve_batch samples (the same
+/// slice `verify_forward` uses), via the full eval batch.
+fn eval_predictions(rt: &Runtime, exp: &Experiment, trainer: &Trainer,
+                    model: &crate::train::TrainedModel) -> Result<Vec<i32>> {
+    if exp.io.task == "forecast" {
+        return Ok(vec![]);
+    }
+    let Some(file) = exp.graph_file("eval_step") else { return Ok(vec![]) };
+    let exe = rt.load(file)?;
+    let batch = exp.io.eval_batch;
+    let idxs: Vec<usize> = (0..batch).collect();
+    let (x, yi, _) = trainer.test_ds.gather(&idxs);
+    let mut x_shape = vec![batch];
+    x_shape.extend_from_slice(&exp.io.x);
+    let mut inputs: Vec<xla::Literal> = model
+        .params
+        .iter()
+        .map(|t| runtime::literal_f32(t))
+        .collect::<Result<Vec<_>>>()?;
+    inputs.push(runtime::literal_f32(&Tensor::new(x_shape, x))?);
+    let y_shape = if exp.io.task == "seg" {
+        vec![batch, trainer.test_ds.y_int_elems]
+    } else {
+        vec![batch]
+    };
+    inputs.push(runtime::literal_i32(&y_shape, &yi)?);
+    let out = exe.run(&inputs)?;
+    let preds = runtime::i32_from_literal(&out[2])?;
+    // sanity: accuracy from preds ~= metric reported by the graph
+    let acc = metrics::accuracy(&preds, &yi);
+    let graph_acc = runtime::f32_scalar_from_literal(&out[1])? as f64;
+    if (acc - graph_acc).abs() > 1e-3 {
+        anyhow::bail!("{}: pred/metric mismatch {acc} vs {graph_acc}", exp.id);
+    }
+    // truncate to the serve slice (+ per-point for seg)
+    let per_sample = if exp.io.task == "seg" { trainer.test_ds.y_int_elems } else { 1 };
+    Ok(preds[..exp.io.serve_batch * per_sample].to_vec())
+}

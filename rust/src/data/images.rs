@@ -1,0 +1,142 @@
+//! Class-structured synthetic image sets (CIFAR-10 / MNIST stand-ins).
+
+use crate::util::Rng;
+use super::{Dataset, Task};
+
+/// SynthMNIST: per-class prototype vectors + Gaussian noise, normalized.
+///
+/// Each class c has a fixed prototype drawn from a class-seeded stream; a
+/// sample is `prototype + sigma * noise`.  sigma is chosen so a linear model
+/// separates classes well but single features do not.
+pub fn synth_mnist(input: &[usize], classes: usize, n: usize, rng: &mut Rng) -> Dataset {
+    let d: usize = input.iter().product();
+    let mut protos = Vec::with_capacity(classes);
+    for c in 0..classes {
+        // prototypes come from a *fixed* stream so train/test agree
+        let mut pr = Rng::new(PROTO_SEED ^ (c as u64 + 1).wrapping_mul(0x9E3779B9));
+        protos.push(pr.normal_vec(d, 1.0));
+    }
+    let mut x = Vec::with_capacity(n * d);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let c = rng.below(classes);
+        y.push(c as i32);
+        let proto = &protos[c];
+        for &pj in proto.iter() {
+            x.push(pj + 1.2 * rng.gauss_f32());
+        }
+    }
+    Dataset { n, x_elems: d, x, y_int: y, y_float: vec![], y_elems: 0,
+              y_int_elems: 1, task: Task::Cls }
+}
+
+/// SynthCIFAR: class-specific 2-D frequency/blob patterns per channel plus
+/// colored noise — closer to natural-image statistics than pure prototypes,
+/// so convolutional inductive bias helps (CNNs beat linear models here).
+pub fn synth_cifar(input: &[usize], classes: usize, n: usize, rng: &mut Rng) -> Dataset {
+    assert_eq!(input.len(), 3, "synth_cifar wants [c, h, w]");
+    let (c_ch, h, w) = (input[0], input[1], input[2]);
+    let d = c_ch * h * w;
+
+    // fixed per-class pattern parameters
+    struct Pat {
+        fx: f32,
+        fy: f32,
+        phase: f32,
+        blob_x: f32,
+        blob_y: f32,
+        chan_mix: Vec<f32>,
+    }
+    let pats: Vec<Pat> = (0..classes)
+        .map(|c| {
+            let mut pr = Rng::new(0xC1FA ^ (c as u64 + 1).wrapping_mul(0x9E3779B9));
+            Pat {
+                fx: 0.5 + 2.5 * pr.next_f32(),
+                fy: 0.5 + 2.5 * pr.next_f32(),
+                phase: std::f32::consts::TAU * pr.next_f32(),
+                blob_x: pr.next_f32(),
+                blob_y: pr.next_f32(),
+                chan_mix: (0..c_ch).map(|_| 0.5 + pr.next_f32()).collect(),
+            }
+        })
+        .collect();
+
+    let mut x = Vec::with_capacity(n * d);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let c = rng.below(classes);
+        y.push(c as i32);
+        let p = &pats[c];
+        // small per-sample jitter so samples within a class vary
+        let jx = 0.15 * rng.gauss_f32();
+        let jy = 0.15 * rng.gauss_f32();
+        let amp = 0.8 + 0.4 * rng.next_f32();
+        for ch in 0..c_ch {
+            let mix = p.chan_mix[ch];
+            for iy in 0..h {
+                for ix in 0..w {
+                    let u = ix as f32 / w as f32;
+                    let v = iy as f32 / h as f32;
+                    let wave = (std::f32::consts::TAU
+                        * (p.fx * (u + jx) + p.fy * (v + jy))
+                        + p.phase)
+                        .sin();
+                    let bx = u - p.blob_x;
+                    let by = v - p.blob_y;
+                    let blob = (-8.0 * (bx * bx + by * by)).exp();
+                    let signal = mix * (0.7 * wave + 1.5 * blob);
+                    x.push(amp * signal + 0.6 * rng.gauss_f32());
+                }
+            }
+        }
+    }
+    Dataset { n, x_elems: d, x, y_int: y, y_float: vec![], y_elems: 0,
+              y_int_elems: 1, task: Task::Cls }
+}
+
+/// Fixed stream for class prototypes (shared by train and test splits).
+const PROTO_SEED: u64 = 0x5397_11AA_02;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mnist_shapes() {
+        let mut rng = Rng::new(1);
+        let d = synth_mnist(&[256], 10, 12, &mut rng);
+        assert_eq!(d.x.len(), 12 * 256);
+        assert_eq!(d.y_int.len(), 12);
+    }
+
+    #[test]
+    fn cifar_within_class_similarity() {
+        // two samples of the same class correlate more than across classes
+        let mut rng = Rng::new(2);
+        let d = synth_cifar(&[3, 16, 16], 10, 400, &mut rng);
+        let dim = d.x_elems;
+        let corr = |a: &[f32], b: &[f32]| -> f64 {
+            let dot: f64 = a.iter().zip(b).map(|(x, y)| (*x * *y) as f64).sum();
+            let na: f64 = a.iter().map(|x| (*x * *x) as f64).sum::<f64>().sqrt();
+            let nb: f64 = b.iter().map(|x| (*x * *x) as f64).sum::<f64>().sqrt();
+            dot / (na * nb)
+        };
+        let mut same = Vec::new();
+        let mut diff = Vec::new();
+        for i in 0..60 {
+            for j in (i + 1)..60 {
+                let ci = d.y_int[i];
+                let cj = d.y_int[j];
+                let c = corr(&d.x[i * dim..(i + 1) * dim], &d.x[j * dim..(j + 1) * dim]);
+                if ci == cj {
+                    same.push(c);
+                } else {
+                    diff.push(c);
+                }
+            }
+        }
+        let ms = same.iter().sum::<f64>() / same.len().max(1) as f64;
+        let md = diff.iter().sum::<f64>() / diff.len().max(1) as f64;
+        assert!(ms > md + 0.1, "same {ms} vs diff {md}");
+    }
+}

@@ -1,0 +1,251 @@
+//! Synthetic dataset substrates (DESIGN.md §7 substitutions).
+//!
+//! The paper evaluates on CIFAR-10/ImageNet, ModelNet40/ShapeNet/S3DIS and
+//! the ECL/Weather series — none of which are available offline.  Each
+//! generator below produces a *class-structured* synthetic stand-in that
+//! exercises the identical train/compress path: tunable separability so the
+//! FP ≥ TBN_p ordering and the degradation-with-p trends are observable.
+//!
+//! Generation is fully deterministic in (kind, seed); train/test splits use
+//! disjoint RNG streams of the same distribution.
+
+mod images;
+mod pointcloud;
+mod timeseries;
+
+use crate::util::Rng;
+
+/// Task family (decides which label buffer is populated).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Task {
+    Cls,
+    Seg,
+    Forecast,
+}
+
+/// An in-memory dataset: flattened row-major samples plus labels.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub n: usize,
+    /// Per-sample input element count (prod of the input shape).
+    pub x_elems: usize,
+    /// Flattened inputs, length n * x_elems.
+    pub x: Vec<f32>,
+    /// Integer labels: len n (cls) or n * points (seg); empty for forecast.
+    pub y_int: Vec<i32>,
+    /// Float targets: len n * channels for forecasting; empty otherwise.
+    pub y_float: Vec<f32>,
+    /// Per-sample float-target width (forecast channels), 0 otherwise.
+    pub y_elems: usize,
+    /// Per-sample int-label width (1 for cls, points for seg).
+    pub y_int_elems: usize,
+    pub task: Task,
+}
+
+impl Dataset {
+    /// Gather a batch by indices into contiguous buffers.
+    pub fn gather(&self, idxs: &[usize]) -> (Vec<f32>, Vec<i32>, Vec<f32>) {
+        let mut x = Vec::with_capacity(idxs.len() * self.x_elems);
+        let mut yi = Vec::with_capacity(idxs.len() * self.y_int_elems);
+        let mut yf = Vec::with_capacity(idxs.len() * self.y_elems);
+        for &i in idxs {
+            debug_assert!(i < self.n);
+            x.extend_from_slice(&self.x[i * self.x_elems..(i + 1) * self.x_elems]);
+            if self.y_int_elems > 0 && !self.y_int.is_empty() {
+                yi.extend_from_slice(
+                    &self.y_int[i * self.y_int_elems..(i + 1) * self.y_int_elems]);
+            }
+            if self.y_elems > 0 && !self.y_float.is_empty() {
+                yf.extend_from_slice(&self.y_float[i * self.y_elems..(i + 1) * self.y_elems]);
+            }
+        }
+        (x, yi, yf)
+    }
+}
+
+/// Deterministic epoch shuffler: yields batches of exactly `batch` indices
+/// (the trailing partial batch is dropped — graphs have static batch dims).
+pub struct BatchIter {
+    order: Vec<usize>,
+    batch: usize,
+    pos: usize,
+}
+
+impl BatchIter {
+    pub fn new(n: usize, batch: usize, rng: &mut Rng) -> BatchIter {
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        BatchIter { order, batch, pos: 0 }
+    }
+}
+
+impl Iterator for BatchIter {
+    type Item = Vec<usize>;
+
+    fn next(&mut self) -> Option<Vec<usize>> {
+        if self.pos + self.batch > self.order.len() {
+            return None;
+        }
+        let b = self.order[self.pos..self.pos + self.batch].to_vec();
+        self.pos += self.batch;
+        Some(b)
+    }
+}
+
+/// Generate a dataset by config kind. `input` is the per-sample shape from
+/// the manifest (e.g. [3,16,16], [128,3], [48,32]).
+pub fn generate(kind: &str, input: &[usize], classes: usize, n: usize,
+                seed: u64) -> Result<Dataset, String> {
+    let mut rng = Rng::new(seed ^ 0xD47A5E7);
+    match kind {
+        "synth_mnist" => Ok(images::synth_mnist(input, classes, n, &mut rng)),
+        "synth_cifar" => Ok(images::synth_cifar(input, classes, n, &mut rng)),
+        "synth_modelnet" => Ok(pointcloud::synth_modelnet(input, classes, n, &mut rng)),
+        "synth_shapenet" => Ok(pointcloud::synth_shapenet(input, classes, n, &mut rng)),
+        "synth_electricity" => Ok(timeseries::synth_series(input, n, &mut rng, 0.25)),
+        "synth_weather" => Ok(timeseries::synth_series(input, n, &mut rng, 0.1)),
+        k => Err(format!("unknown dataset kind {k:?}")),
+    }
+}
+
+/// Train/test pair with disjoint streams.
+pub fn generate_split(kind: &str, input: &[usize], classes: usize,
+                      n_train: usize, n_test: usize, seed: u64)
+                      -> Result<(Dataset, Dataset), String> {
+    let train = generate(kind, input, classes, n_train, seed.wrapping_mul(2).wrapping_add(1))?;
+    let test = generate(kind, input, classes, n_test, seed.wrapping_mul(2).wrapping_add(2))?;
+    Ok((train, test))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_kinds_generate() {
+        let cases: [(&str, Vec<usize>, usize); 6] = [
+            ("synth_mnist", vec![256], 10),
+            ("synth_cifar", vec![3, 16, 16], 10),
+            ("synth_modelnet", vec![64, 3], 8),
+            ("synth_shapenet", vec![64, 3], 4),
+            ("synth_electricity", vec![48, 32], 0),
+            ("synth_weather", vec![48, 8], 0),
+        ];
+        for (kind, input, classes) in cases {
+            let d = generate(kind, &input, classes, 32, 7).unwrap();
+            assert_eq!(d.n, 32, "{kind}");
+            assert_eq!(d.x.len(), 32 * d.x_elems, "{kind}");
+            assert!(d.x.iter().all(|v| v.is_finite()), "{kind}");
+            match d.task {
+                Task::Cls => {
+                    assert_eq!(d.y_int.len(), 32);
+                    assert!(d.y_int.iter().all(|&y| (y as usize) < classes));
+                }
+                Task::Seg => {
+                    assert_eq!(d.y_int.len(), 32 * d.y_int_elems);
+                    assert!(d.y_int.iter().all(|&y| (y as usize) < classes));
+                }
+                Task::Forecast => {
+                    assert_eq!(d.y_float.len(), 32 * d.y_elems);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = generate("synth_cifar", &[3, 16, 16], 10, 16, 5).unwrap();
+        let b = generate("synth_cifar", &[3, 16, 16], 10, 16, 5).unwrap();
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y_int, b.y_int);
+        let c = generate("synth_cifar", &[3, 16, 16], 10, 16, 6).unwrap();
+        assert_ne!(a.x, c.x);
+    }
+
+    #[test]
+    fn split_streams_disjoint() {
+        let (tr, te) = generate_split("synth_mnist", &[256], 10, 64, 32, 1).unwrap();
+        assert_eq!(tr.n, 64);
+        assert_eq!(te.n, 32);
+        assert_ne!(&tr.x[..256], &te.x[..256]);
+    }
+
+    #[test]
+    fn classes_are_balancedish() {
+        let d = generate("synth_cifar", &[3, 16, 16], 10, 1000, 3).unwrap();
+        let mut counts = [0usize; 10];
+        for &y in &d.y_int {
+            counts[y as usize] += 1;
+        }
+        for c in counts {
+            assert!(c > 50, "class count {c} too low: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn batch_iter_exact_batches_no_dups() {
+        let mut rng = Rng::new(1);
+        let it = BatchIter::new(100, 32, &mut rng);
+        let batches: Vec<_> = it.collect();
+        assert_eq!(batches.len(), 3); // 100/32 -> 3 full batches
+        let mut seen = std::collections::HashSet::new();
+        for b in &batches {
+            assert_eq!(b.len(), 32);
+            for &i in b {
+                assert!(seen.insert(i), "duplicate index {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn gather_layout() {
+        let d = generate("synth_mnist", &[256], 10, 8, 2).unwrap();
+        let (x, yi, _) = d.gather(&[3, 1]);
+        assert_eq!(x.len(), 2 * 256);
+        assert_eq!(&x[..256], &d.x[3 * 256..4 * 256]);
+        assert_eq!(yi, vec![d.y_int[3], d.y_int[1]]);
+    }
+
+    /// Separability sanity: a nearest-class-mean classifier must beat chance
+    /// comfortably on the classification sets (they're meant to be learnable).
+    #[test]
+    fn images_are_separable() {
+        for kind in ["synth_mnist", "synth_cifar"] {
+            let input: Vec<usize> = if kind == "synth_mnist" { vec![256] } else { vec![3, 16, 16] };
+            let (tr, te) = generate_split(kind, &input, 10, 512, 256, 9).unwrap();
+            let d = tr.x_elems;
+            let mut means = vec![vec![0.0f64; d]; 10];
+            let mut counts = [0usize; 10];
+            for i in 0..tr.n {
+                let c = tr.y_int[i] as usize;
+                counts[c] += 1;
+                for j in 0..d {
+                    means[c][j] += tr.x[i * d + j] as f64;
+                }
+            }
+            for c in 0..10 {
+                for j in 0..d {
+                    means[c][j] /= counts[c].max(1) as f64;
+                }
+            }
+            let mut correct = 0;
+            for i in 0..te.n {
+                let xs = &te.x[i * d..(i + 1) * d];
+                let best = (0..10)
+                    .min_by(|&a, &b| {
+                        let da: f64 = xs.iter().zip(&means[a])
+                            .map(|(x, m)| (*x as f64 - m).powi(2)).sum();
+                        let db: f64 = xs.iter().zip(&means[b])
+                            .map(|(x, m)| (*x as f64 - m).powi(2)).sum();
+                        da.partial_cmp(&db).unwrap()
+                    })
+                    .unwrap();
+                if best == te.y_int[i] as usize {
+                    correct += 1;
+                }
+            }
+            let acc = correct as f64 / te.n as f64;
+            assert!(acc > 0.5, "{kind}: NCM accuracy {acc} too low");
+        }
+    }
+}

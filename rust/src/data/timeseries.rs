@@ -1,0 +1,110 @@
+//! Synthetic multivariate series (ECL / Weather stand-ins): seasonal + AR(2)
+//! + cross-channel mixing + noise.  The forecasting target is the next step
+//! of every channel.
+
+use crate::util::Rng;
+use super::{Dataset, Task};
+
+/// Generate `n` windows of shape [seq, channels] with next-step targets.
+///
+/// One long latent series is synthesized and windows are sliced from it (so
+/// neighbouring windows share dynamics, like real load/weather data).
+/// `noise` controls the irreducible target noise (ECL noisier than Weather).
+pub fn synth_series(input: &[usize], n: usize, rng: &mut Rng, noise: f32) -> Dataset {
+    assert_eq!(input.len(), 2, "series wants [seq, channels]");
+    let (seq, ch) = (input[0], input[1]);
+    let total = n + seq + 1;
+
+    // latent drivers: a few seasonal components + AR(2)
+    let n_latent = 4.min(ch);
+    let mut latents = vec![vec![0.0f32; total]; n_latent];
+    for (li, lat) in latents.iter_mut().enumerate() {
+        let period = 12.0 + 10.0 * li as f32 + 6.0 * rng.next_f32();
+        let phase = std::f32::consts::TAU * rng.next_f32();
+        let (a1, a2) = (0.6 + 0.2 * rng.next_f32(), -0.3 + 0.1 * rng.next_f32());
+        let mut e1 = 0.0f32;
+        let mut e2 = 0.0f32;
+        for (t, v) in lat.iter_mut().enumerate() {
+            let season = (std::f32::consts::TAU * t as f32 / period + phase).sin();
+            let ar = a1 * e1 + a2 * e2 + 0.3 * rng.gauss_f32();
+            e2 = e1;
+            e1 = ar;
+            *v = season + ar;
+        }
+    }
+
+    // channel mixing: each channel is a sparse combination of latents
+    let mix: Vec<Vec<f32>> = (0..ch)
+        .map(|_| (0..n_latent).map(|_| rng.gauss_f32() * 0.8).collect())
+        .collect();
+    let mut series = vec![0.0f32; total * ch];
+    for t in 0..total {
+        for c in 0..ch {
+            let mut v = 0.0;
+            for l in 0..n_latent {
+                v += mix[c][l] * latents[l][t];
+            }
+            series[t * ch + c] = v + noise * rng.gauss_f32();
+        }
+    }
+
+    let mut x = Vec::with_capacity(n * seq * ch);
+    let mut y = Vec::with_capacity(n * ch);
+    for w in 0..n {
+        let start = w; // sliding windows, stride 1
+        x.extend_from_slice(&series[start * ch..(start + seq) * ch]);
+        y.extend_from_slice(&series[(start + seq) * ch..(start + seq + 1) * ch]);
+    }
+    Dataset { n, x_elems: seq * ch, x, y_int: vec![], y_float: y, y_elems: ch,
+              y_int_elems: 0, task: Task::Forecast }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_shapes() {
+        let mut rng = Rng::new(6);
+        let d = synth_series(&[48, 32], 10, &mut rng, 0.25);
+        assert_eq!(d.x.len(), 10 * 48 * 32);
+        assert_eq!(d.y_float.len(), 10 * 32);
+        assert_eq!(d.task, Task::Forecast);
+    }
+
+    #[test]
+    fn target_is_next_step_of_window() {
+        // window w+1's last row equals window w's target when stride is 1:
+        let mut rng = Rng::new(7);
+        let (seq, ch) = (16usize, 4usize);
+        let d = synth_series(&[seq, ch], 5, &mut rng, 0.1);
+        for w in 0..4 {
+            let y_w = &d.y_float[w * ch..(w + 1) * ch];
+            let next_last = &d.x[((w + 1) * seq * ch + (seq - 1) * ch)..((w + 1) * seq * ch + seq * ch)];
+            assert_eq!(y_w, next_last, "window {w}");
+        }
+    }
+
+    #[test]
+    fn persistence_beats_nothing_autocorrelated() {
+        // series must be autocorrelated: last-value persistence predicts the
+        // target much better than the series variance (else forecasting is
+        // unlearnable noise)
+        let mut rng = Rng::new(8);
+        let d = synth_series(&[48, 8], 200, &mut rng, 0.1);
+        let ch = 8;
+        let mut mse_persist = 0.0f64;
+        let mut var = 0.0f64;
+        let mean: f64 = d.y_float.iter().map(|v| *v as f64).sum::<f64>()
+            / d.y_float.len() as f64;
+        for w in 0..d.n {
+            for c in 0..ch {
+                let last = d.x[w * d.x_elems + 47 * ch + c] as f64;
+                let y = d.y_float[w * ch + c] as f64;
+                mse_persist += (y - last) * (y - last);
+                var += (y - mean) * (y - mean);
+            }
+        }
+        assert!(mse_persist < 0.5 * var, "persistence {mse_persist} vs var {var}");
+    }
+}

@@ -1,0 +1,40 @@
+//! # tiledbits — Tiled Bit Networks (CIKM 2024) in Rust + JAX + Pallas
+//!
+//! A three-layer reproduction of *"Tiled Bit Networks: Sub-Bit Neural Network
+//! Compression Through Reuse of Learnable Binary Vectors"* (Gorbett, Shirazi,
+//! Ray — CIKM 2024):
+//!
+//! * **Layer 1 (Pallas)** — tile-reusing matmul + tile-construction kernels,
+//!   authored in `python/compile/kernels/` and AOT-lowered to HLO text.
+//! * **Layer 2 (JAX)** — the model zoo and train/eval graphs, lowered once by
+//!   `python/compile/aot.py` into `artifacts/`.
+//! * **Layer 3 (this crate)** — everything that runs: the PJRT runtime, the
+//!   training coordinator, the native sub-bit inference engine (the paper's
+//!   Algorithm 1), the TBNZ model format, dataset substrates, the serving
+//!   stack, and the benchmark harness that regenerates every table and
+//!   figure in the paper.
+//!
+//! Python never runs on the request path: after `make artifacts` the `tbn`
+//! binary is self-contained.
+
+pub mod arch;
+pub mod baselines;
+pub mod bench_util;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod nn;
+pub mod runtime;
+pub mod serve;
+pub mod tbn;
+pub mod tensor;
+pub mod train;
+pub mod util;
+
+/// Repo-relative default artifact directory (override with `--artifacts`).
+pub const DEFAULT_ARTIFACTS: &str = "artifacts";
+/// Repo-relative default experiment config (single source of truth with aot.py).
+pub const DEFAULT_CONFIG: &str = "configs/experiments.json";
+/// Where the coordinator records completed runs.
+pub const DEFAULT_RUNS_DIR: &str = "runs";

@@ -1,0 +1,159 @@
+//! `tbn` — the leader binary: CLI entry for training, reporting, exporting
+//! and serving Tiled Bit Networks.
+
+use anyhow::{anyhow, Result};
+
+use tiledbits::cli::{Cli, USAGE};
+use tiledbits::config::Manifest;
+use tiledbits::coordinator::{self, report, TABLES};
+use tiledbits::nn::{MlpEngine, Nonlin};
+use tiledbits::runtime::Runtime;
+use tiledbits::serve::{BatchPolicy, Server};
+use tiledbits::train::{export, TrainOptions};
+use tiledbits::util::log;
+use tiledbits::{data, info};
+
+fn main() {
+    let cli = Cli::from_env();
+    if cli.has_flag("quiet") {
+        log::set_level(log::ERROR);
+    }
+    if let Err(e) = dispatch(&cli) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn train_opts(cli: &Cli) -> TrainOptions {
+    TrainOptions {
+        steps: cli.opt_usize("steps"),
+        eval_every: cli.opt_usize("eval-every").unwrap_or(100),
+        log_every: 50,
+        seed: cli.opt_usize("seed").map(|s| s as u64),
+    }
+}
+
+fn dispatch(cli: &Cli) -> Result<()> {
+    let artifacts = cli.opt_or("artifacts", "artifacts").to_string();
+    let runs_dir = cli.opt_or("runs", "runs").to_string();
+    match cli.command.as_str() {
+        "list" => {
+            let manifest = Manifest::load(&artifacts).map_err(|e| anyhow!(e))?;
+            for e in &manifest.experiments {
+                println!("{:32} {:14} [{}]", e.id, e.model_family, e.tables.join(","));
+            }
+            Ok(())
+        }
+        "info" => {
+            let rt = Runtime::new(&artifacts)?;
+            println!("platform: {}", rt.platform());
+            let manifest = Manifest::load(&artifacts).map_err(|e| anyhow!(e))?;
+            println!("experiments: {}", manifest.experiments.len());
+            print!("{}", report::composition_table().render());
+            Ok(())
+        }
+        "train" => {
+            let id = cli.positional.first().ok_or_else(|| anyhow!("train needs <exp_id>"))?;
+            let manifest = Manifest::load(&artifacts).map_err(|e| anyhow!(e))?;
+            let rt = Runtime::new(&artifacts)?;
+            let rec = coordinator::run_or_load(&rt, &manifest, id, &train_opts(cli), &runs_dir)?;
+            println!("{}", rec.to_json().to_string_pretty());
+            Ok(())
+        }
+        "run-table" => {
+            let table = cli.positional.first().ok_or_else(|| anyhow!("run-table needs an id"))?;
+            let manifest = Manifest::load(&artifacts).map_err(|e| anyhow!(e))?;
+            let rt = Runtime::new(&artifacts)?;
+            let ids: Vec<String> = coordinator::experiments_for(&manifest, table)
+                .into_iter().map(String::from).collect();
+            if ids.is_empty() {
+                return Err(anyhow!("no experiments map to {table}"));
+            }
+            for id in &ids {
+                let rec = coordinator::run_or_load(&rt, &manifest, id, &train_opts(cli), &runs_dir)?;
+                println!("{:32} metric {:.4}  bit-width {:.3}", id, rec.metric, rec.bit_width);
+            }
+            Ok(())
+        }
+        "run-all" => {
+            let manifest = Manifest::load(&artifacts).map_err(|e| anyhow!(e))?;
+            let rt = Runtime::new(&artifacts)?;
+            for e in &manifest.experiments {
+                let rec = coordinator::run_or_load(&rt, &manifest, &e.id, &train_opts(cli), &runs_dir)?;
+                println!("{:32} metric {:.4}  bit-width {:.3}", e.id, rec.metric, rec.bit_width);
+            }
+            Ok(())
+        }
+        "report" => {
+            print!("{}", report::bitops_table().render());
+            print!("{}", report::memory_table(4).render());
+            print!("{}", report::composition_table().render());
+            // cached accuracy runs, grouped by table
+            if let Ok(manifest) = Manifest::load(&artifacts).map_err(|e| anyhow!(e)) {
+                for (table, title) in TABLES {
+                    let mut cached = Vec::new();
+                    for e in manifest.for_table(table) {
+                        if let Some(rec) = coordinator::load_run(&runs_dir, &e.id) {
+                            cached.push((e.id.clone(), rec));
+                        }
+                    }
+                    if !cached.is_empty() {
+                        println!("-- {table}: {title} (cached runs) --");
+                        for (id, rec) in cached {
+                            println!("  {:32} metric {:.4}  bit-width {:.3}  ({} steps)",
+                                     id, rec.metric, rec.bit_width, rec.steps);
+                        }
+                    }
+                }
+            }
+            Ok(())
+        }
+        "export" => {
+            let id = cli.positional.first().ok_or_else(|| anyhow!("export needs <exp_id>"))?;
+            let manifest = Manifest::load(&artifacts).map_err(|e| anyhow!(e))?;
+            let exp = manifest.by_id(id).ok_or_else(|| anyhow!("unknown experiment {id}"))?;
+            let rt = Runtime::new(&artifacts)?;
+            let trainer = tiledbits::train::Trainer::new(&rt, exp)?;
+            let (_, model) = trainer.run(&train_opts(cli))?;
+            let tbnz = export::to_tbnz(exp, &model)?;
+            let out = cli.opt_or("out", &format!("{id}.tbnz")).to_string();
+            tbnz.save(&out)?;
+            let (params, bits, bw) = export::export_summary(&tbnz);
+            println!("wrote {out}: {params} params, {} bytes, bit-width {bw:.3}",
+                     bits / 8);
+            Ok(())
+        }
+        "serve" => {
+            let id = cli.positional.first().ok_or_else(|| anyhow!("serve needs <exp_id>"))?;
+            let manifest = Manifest::load(&artifacts).map_err(|e| anyhow!(e))?;
+            let exp = manifest.by_id(id).ok_or_else(|| anyhow!("unknown experiment {id}"))?;
+            if exp.model_family != "mlp" {
+                return Err(anyhow!("the native serving demo requires an mlp experiment"));
+            }
+            let rt = Runtime::new(&artifacts)?;
+            let trainer = tiledbits::train::Trainer::new(&rt, exp)?;
+            let (_, model) = trainer.run(&train_opts(cli))?;
+            let tbnz = export::to_tbnz(exp, &model)?;
+            let engine = MlpEngine::new(tbnz, Nonlin::Relu).map_err(|e| anyhow!(e))?;
+            let server = Server::start(engine, BatchPolicy::default());
+            // demo load: classify a synthetic batch
+            let ds = data::generate(&exp.dataset_kind, &exp.io.x, exp.dataset_classes,
+                                    256, 99).map_err(|e| anyhow!(e))?;
+            let t0 = std::time::Instant::now();
+            for i in 0..ds.n {
+                let x = ds.x[i * ds.x_elems..(i + 1) * ds.x_elems].to_vec();
+                let _ = server.infer(x).map_err(|e| anyhow!(e))?;
+            }
+            let stats = server.stats();
+            info!("serve", "{} requests in {:.3}s, mean latency {:.0}us, mean batch {:.1}",
+                  stats.served, t0.elapsed().as_secs_f64(),
+                  stats.mean_latency_us(), stats.mean_batch());
+            Ok(())
+        }
+        "" | "help" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command {other:?}\n\n{USAGE}")),
+    }
+}

@@ -1,0 +1,307 @@
+//! Native sub-bit inference engine — the paper's §5.1 microcontroller kernel
+//! (Algorithm 1), in Rust.
+//!
+//! The engine runs entirely from a `TbnzModel`: a tiled FC layer computes
+//! `y = ReLU(x · expand(t, α)ᵀ)` while touching only the q-length packed
+//! tile and the α scalars — the full weight matrix never exists in memory.
+//! The tile index cycles modulo q through the flattened weight tensor and
+//! the α index advances every q elements, exactly Algorithm 1's pointer
+//! arithmetic.
+//!
+//! `fc_tiled_forward` is the readable reference; `fc_tiled_forward_fast`
+//! is the optimized hot path measured in EXPERIMENTS.md §Perf.
+
+mod engine;
+
+pub use engine::{MlpEngine, Nonlin};
+
+use crate::tbn::{LayerRecord, WeightPayload};
+use crate::tensor::BitVec;
+
+/// Algorithm 1 (reference form): tiled FC forward for one sample.
+///
+/// * `tile` — packed q-length binary vector.
+/// * `alphas` — 1 (layer-wide) or p (per-tile) scalars.
+/// * `x` — input of length `n`; output has length `m`; `m*n = p*q`.
+pub fn fc_tiled_forward(tile: &BitVec, alphas: &[f32], x: &[f32], m: usize,
+                        relu: bool) -> Vec<f32> {
+    let n = x.len();
+    let q = tile.len();
+    debug_assert_eq!((m * n) % q, 0);
+    let mut y = vec![0.0f32; m];
+    let mut ti = 0usize; // tile index (cycles mod q)
+    let mut ai = 0usize; // alpha index (advances every q elements)
+    let single = alphas.len() == 1;
+    for yi in y.iter_mut() {
+        let mut acc = 0.0f32;
+        for &xj in x {
+            let a = if single { alphas[0] } else { alphas[ai] };
+            acc += tile.get(ti) * xj * a;
+            ti += 1;
+            if ti == q {
+                ti = 0;
+                if !single {
+                    ai += 1;
+                    if ai == alphas.len() {
+                        ai = 0;
+                    }
+                }
+            }
+        }
+        *yi = if relu { acc.max(0.0) } else { acc };
+    }
+    y
+}
+
+/// Optimized Algorithm 1: hoists the α multiply out of the inner loop.
+///
+/// Within one run of the inner loop the α only changes at tile boundaries,
+/// so we split the j-range into q-aligned segments, accumulate the raw
+/// sign-dot per segment with `BitVec::dot_range`, and scale once per
+/// segment. This removes a multiply + two branches per weight and lets the
+/// sign-dot kernel run over contiguous bits.
+pub fn fc_tiled_forward_fast(tile: &BitVec, alphas: &[f32], x: &[f32], m: usize,
+                             relu: bool) -> Vec<f32> {
+    let n = x.len();
+    let q = tile.len();
+    debug_assert_eq!((m * n) % q, 0);
+    let single = alphas.len() == 1;
+    let mut y = vec![0.0f32; m];
+    for (i, yi) in y.iter_mut().enumerate() {
+        let mut acc = 0.0f32;
+        let row_start = i * n; // flat index of this row's first weight
+        let mut j = 0usize;
+        while j < n {
+            let flat = row_start + j;
+            let ti = flat % q;
+            let seg = (q - ti).min(n - j); // run length until tile wrap
+            let a = if single { alphas[0] } else { alphas[(flat / q) % alphas.len()] };
+            acc += a * tile.dot_range(ti, &x[j..j + seg]);
+            j += seg;
+        }
+        *yi = if relu { acc.max(0.0) } else { acc };
+    }
+    y
+}
+
+/// Optimized Algorithm 1 with **row replication** (paper §4.1): when the
+/// tile length `q` is a whole multiple of the row length `n`, rows repeat
+/// with period `q/n` — row `i` and row `i + q/n` have identical sign
+/// patterns and differ only in their per-tile α.  Only the `q/n` unique
+/// sign-dots are computed; the remaining `m - q/n` outputs are α-scaled
+/// replicas.  This is the kernel-level realization of the paper's Table 2
+/// bit-ops reduction ("only one of the tile computations need to be
+/// executed, and we can replicate output channels from the other tiles").
+///
+/// Falls back to `fc_tiled_forward_fast` when `n` does not divide `q`.
+pub fn fc_tiled_forward_replicated(tile: &BitVec, alphas: &[f32], x: &[f32],
+                                   m: usize, relu: bool) -> Vec<f32> {
+    let n = x.len();
+    let q = tile.len();
+    if q % n != 0 {
+        return fc_tiled_forward_fast(tile, alphas, x, m, relu);
+    }
+    let rows_per_tile = q / n; // unique rows
+    let single = alphas.len() == 1;
+    // raw sign-dots of the unique rows (unscaled)
+    let mut raw = Vec::with_capacity(rows_per_tile.min(m));
+    for r in 0..rows_per_tile.min(m) {
+        raw.push(tile.dot_range(r * n, x));
+    }
+    let mut y = Vec::with_capacity(m);
+    for i in 0..m {
+        let a = if single { alphas[0] } else { alphas[(i * n / q) % alphas.len()] };
+        let v = a * raw[i % rows_per_tile];
+        y.push(if relu { v.max(0.0) } else { v });
+    }
+    y
+}
+
+/// BWNN FC forward from packed bits: `y = α · (sign(W) x)`.
+pub fn fc_bwnn_forward(bits: &BitVec, alpha: f32, x: &[f32], m: usize,
+                       relu: bool) -> Vec<f32> {
+    let n = x.len();
+    debug_assert_eq!(bits.len(), m * n);
+    let mut y = vec![0.0f32; m];
+    for (i, yi) in y.iter_mut().enumerate() {
+        let acc = alpha * bits.dot_range(i * n, x);
+        *yi = if relu { acc.max(0.0) } else { acc };
+    }
+    y
+}
+
+/// Full-precision FC forward: `y = W x` with row-major `(m, n)` weights.
+pub fn fc_fp_forward(w: &[f32], x: &[f32], m: usize, relu: bool) -> Vec<f32> {
+    let n = x.len();
+    debug_assert_eq!(w.len(), m * n);
+    let mut y = vec![0.0f32; m];
+    for (i, yi) in y.iter_mut().enumerate() {
+        let row = &w[i * n..(i + 1) * n];
+        let mut acc = 0.0f32;
+        for (wk, xk) in row.iter().zip(x) {
+            acc += wk * xk;
+        }
+        *yi = if relu { acc.max(0.0) } else { acc };
+    }
+    y
+}
+
+/// Dispatch one layer of a TBNZ model (FC semantics; shape `[m, n]`).
+pub fn fc_layer_forward(layer: &LayerRecord, x: &[f32], relu: bool) -> Vec<f32> {
+    let m = layer.shape[0];
+    match &layer.payload {
+        WeightPayload::Fp(w) => fc_fp_forward(w, x, m, relu),
+        WeightPayload::Bwnn { bits, alpha } => fc_bwnn_forward(bits, *alpha, x, m, relu),
+        WeightPayload::Tiled { tile, alphas, .. } => {
+            fc_tiled_forward_replicated(tile, alphas, x, m, relu)
+        }
+    }
+}
+
+/// Weight bytes this layer keeps resident during its forward (Table 6's
+/// memory model): tiles/bits stay packed, fp stays 4 bytes per weight.
+pub fn layer_resident_bytes(layer: &LayerRecord) -> usize {
+    match &layer.payload {
+        WeightPayload::Fp(w) => 4 * w.len(),
+        WeightPayload::Bwnn { bits, .. } => bits.storage_bytes() + 4,
+        WeightPayload::Tiled { tile, alphas, .. } => {
+            tile.storage_bytes() + 4 * alphas.len()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tbn::{expand_tile, tile_from_weights};
+    use crate::util::Rng;
+
+    fn random_case(seed: u64, m: usize, n: usize, p: usize)
+                   -> (BitVec, Vec<f32>, Vec<f32>) {
+        let mut r = Rng::new(seed);
+        let w: Vec<f32> = (0..m * n).map(|_| r.gauss_f32()).collect();
+        let tile = tile_from_weights(&w, p);
+        let alphas: Vec<f32> = (0..p).map(|_| r.next_f32() + 0.1).collect();
+        let x: Vec<f32> = (0..n).map(|_| r.gauss_f32()).collect();
+        (tile, alphas, x)
+    }
+
+    /// Algorithm 1 must equal the dense matmul over the expanded weights.
+    #[test]
+    fn tiled_forward_matches_expanded_dense() {
+        for (m, n, p) in [(8, 16, 4), (16, 8, 4), (4, 4, 2), (10, 12, 8), (6, 7, 1)] {
+            if (m * n) % p != 0 {
+                continue;
+            }
+            let (tile, alphas, x) = random_case(m as u64 * 31 + n as u64, m, n, p);
+            let got = fc_tiled_forward(&tile, &alphas, &x, m, false);
+            let w = expand_tile(&tile, &alphas, m * n);
+            let want = fc_fp_forward(&w, &x, m, false);
+            for (g, w_) in got.iter().zip(&want) {
+                assert!((g - w_).abs() < 1e-3, "m={m} n={n} p={p}: {g} vs {w_}");
+            }
+        }
+    }
+
+    #[test]
+    fn replicated_path_matches_reference() {
+        // q % n == 0 cases (replication applies) and fallback cases
+        for (m, n, p) in [(16, 8, 4), (32, 16, 4), (128, 256, 4), (12, 5, 4), (64, 32, 8)] {
+            if (m * n) % p != 0 {
+                continue;
+            }
+            let (tile, alphas, x) = random_case(101 + m as u64, m, n, p);
+            let want = fc_tiled_forward(&tile, &alphas, &x, m, false);
+            let got = fc_tiled_forward_replicated(&tile, &alphas, &x, m, false);
+            for (g, w_) in got.iter().zip(&want) {
+                assert!((g - w_).abs() < 1e-2, "m={m} n={n} p={p}: {g} vs {w_}");
+            }
+        }
+    }
+
+    #[test]
+    fn replicated_outputs_actually_replicate() {
+        // with a single alpha, rows i and i + q/n are byte-identical
+        let (m, n, p) = (32usize, 16usize, 4usize);
+        let (tile, _, x) = random_case(55, m, n, p);
+        let q = tile.len();
+        let y = fc_tiled_forward_replicated(&tile, &[1.0], &x, m, false);
+        let period = q / n;
+        for i in 0..m - period {
+            assert_eq!(y[i], y[i + period], "row {i}");
+        }
+    }
+
+    #[test]
+    fn fast_path_matches_reference() {
+        for (m, n, p) in [(8, 16, 4), (16, 8, 2), (32, 48, 8), (12, 5, 4), (3, 40, 6)] {
+            if (m * n) % p != 0 {
+                continue;
+            }
+            let (tile, alphas, x) = random_case(7 + p as u64, m, n, p);
+            let a = fc_tiled_forward(&tile, &alphas, &x, m, false);
+            let b = fc_tiled_forward_fast(&tile, &alphas, &x, m, false);
+            for (u, v) in a.iter().zip(&b) {
+                assert!((u - v).abs() < 1e-3, "m={m} n={n} p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_alpha_variant() {
+        let (tile, _, x) = random_case(3, 8, 8, 4);
+        let a = fc_tiled_forward(&tile, &[0.7], &x, 8, false);
+        let b = fc_tiled_forward_fast(&tile, &[0.7], &x, 8, false);
+        let w = expand_tile(&tile, &[0.7], 64);
+        let want = fc_fp_forward(&w, &x, 8, false);
+        for i in 0..8 {
+            assert!((a[i] - want[i]).abs() < 1e-3);
+            assert!((b[i] - want[i]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn relu_fuses() {
+        let (tile, alphas, x) = random_case(9, 16, 16, 4);
+        let y = fc_tiled_forward_fast(&tile, &alphas, &x, 16, true);
+        assert!(y.iter().all(|&v| v >= 0.0));
+        let lin = fc_tiled_forward_fast(&tile, &alphas, &x, 16, false);
+        assert!(lin.iter().any(|&v| v < 0.0)); // ReLU actually did something
+    }
+
+    #[test]
+    fn bwnn_matches_dense() {
+        let mut r = Rng::new(11);
+        let (m, n) = (12, 20);
+        let w: Vec<f32> = (0..m * n).map(|_| r.gauss_f32()).collect();
+        let bits = BitVec::from_signs(&w);
+        let alpha = 0.42;
+        let x: Vec<f32> = (0..n).map(|_| r.gauss_f32()).collect();
+        let got = fc_bwnn_forward(&bits, alpha, &x, m, false);
+        let dense: Vec<f32> = bits.to_signs().iter().map(|s| s * alpha).collect();
+        let want = fc_fp_forward(&dense, &x, m, false);
+        for (g, w_) in got.iter().zip(&want) {
+            assert!((g - w_).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn resident_bytes_ordering() {
+        use crate::tbn::{LayerRecord, WeightPayload};
+        let n = 1024usize;
+        let fp = LayerRecord { name: "a".into(), shape: vec![32, 32],
+                               payload: WeightPayload::Fp(vec![0.0; n]) };
+        let bw = LayerRecord { name: "b".into(), shape: vec![32, 32],
+                               payload: WeightPayload::Bwnn {
+                                   bits: BitVec::zeros(n), alpha: 1.0 } };
+        let tb = LayerRecord { name: "c".into(), shape: vec![32, 32],
+                               payload: WeightPayload::Tiled {
+                                   p: 4, tile: BitVec::zeros(n / 4),
+                                   alphas: vec![1.0; 4] } };
+        assert!(layer_resident_bytes(&fp) > layer_resident_bytes(&bw));
+        assert!(layer_resident_bytes(&bw) > layer_resident_bytes(&tb));
+        assert_eq!(layer_resident_bytes(&fp), 4096);
+        assert_eq!(layer_resident_bytes(&bw), 128 + 4);
+        assert_eq!(layer_resident_bytes(&tb), 32 + 16);
+    }
+}

@@ -1,0 +1,138 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1 / PJRT C API). Graphs arrive
+//! as HLO *text* — the text parser reassigns instruction ids, which is what
+//! makes jax >= 0.5 output loadable on this XLA (see aot.py).
+//!
+//! All lowered graphs return a tuple (aot.py lowers with return_tuple=True);
+//! `Executable::run` decomposes it into one `Literal` per logical output.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::tensor::Tensor;
+
+/// A compiled graph ready to execute on the CPU PJRT client.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with literal inputs (owned or borrowed — pass `&Literal`s in
+    /// hot loops; cloning a literal deep-copies its buffer); returns the
+    /// decomposed output tuple.
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self, inputs: &[L]) -> Result<Vec<xla::Literal>> {
+        let bufs = self
+            .exe
+            .execute::<L>(inputs)
+            .with_context(|| format!("execute {}", self.name))?;
+        let root = bufs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetch result of {}", self.name))?;
+        Ok(root.to_tuple()?)
+    }
+
+    /// Execute with device-resident buffers (used by the trainer hot loop to
+    /// avoid host round-trips on inputs that don't change).
+    pub fn run_b(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let bufs = self
+            .exe
+            .execute_b(inputs)
+            .with_context(|| format!("execute_b {}", self.name))?;
+        let root = bufs[0][0].to_literal_sync()?;
+        Ok(root.to_tuple()?)
+    }
+}
+
+/// The PJRT client + compile cache over an artifacts directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts_dir: String,
+    cache: std::cell::RefCell<HashMap<String, std::rc::Rc<Executable>>>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &str) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            artifacts_dir: artifacts_dir.to_string(),
+            cache: std::cell::RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact (cached by file name).
+    pub fn load(&self, file: &str) -> Result<std::rc::Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(file) {
+            return Ok(e.clone());
+        }
+        let path = format!("{}/{}", self.artifacts_dir, file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parse HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {file}"))?;
+        let e = std::rc::Rc::new(Executable { exe, name: file.to_string() });
+        self.cache.borrow_mut().insert(file.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Upload a literal to the device (for `run_b` steady-state inputs).
+    pub fn to_device(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_literal(None, lit)
+            .map_err(|e| anyhow!("to_device: {e}"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal <-> host conversions
+// ---------------------------------------------------------------------------
+
+/// f32 literal from a host tensor.
+pub fn literal_f32(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(&t.data).reshape(&dims)?)
+}
+
+/// i32 literal from indices.
+pub fn literal_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Scalar literals.
+pub fn scalar_f32(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+pub fn scalar_i32(x: i32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// Host tensor from an f32 literal.
+pub fn tensor_from_literal(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>()?;
+    Ok(Tensor::new(dims, data))
+}
+
+/// i32 host vector from a literal.
+pub fn i32_from_literal(lit: &xla::Literal) -> Result<Vec<i32>> {
+    Ok(lit.to_vec::<i32>()?)
+}
+
+/// f32 scalar from a 0-d literal.
+pub fn f32_scalar_from_literal(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}

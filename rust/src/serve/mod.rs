@@ -1,0 +1,262 @@
+//! Serving stack: request queue + dynamic batcher + worker thread.
+//!
+//! TBN is a compression paper, so the serving layer is deliberately thin
+//! (DESIGN.md §1): a threaded inference server that batches concurrent
+//! requests up to `max_batch` within a `window`, runs them through a
+//! `BatchModel`, and reports latency/throughput stats.  It serves the
+//! *native* sub-bit engine (`nn::MlpEngine`) — the memory-saving deployment
+//! path of §5.1 — and is exercised end-to-end by `examples/serving_demo.rs`.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Anything that can run a batch of flat f32 samples to output vectors.
+pub trait BatchModel: Send + 'static {
+    fn infer_batch(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>>;
+    fn in_dim(&self) -> usize;
+}
+
+impl BatchModel for crate::nn::MlpEngine {
+    fn infer_batch(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        xs.iter().map(|x| self.forward(x)).collect()
+    }
+
+    fn in_dim(&self) -> usize {
+        crate::nn::MlpEngine::in_dim(self)
+    }
+}
+
+struct Request {
+    x: Vec<f32>,
+    enqueued: Instant,
+    resp: mpsc::Sender<Response>,
+}
+
+/// A completed inference with its timing breakdown.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub y: Vec<f32>,
+    pub queue_us: u64,
+    pub total_us: u64,
+    pub batch_size: usize,
+}
+
+/// Aggregate serving statistics.
+#[derive(Debug, Clone, Default)]
+pub struct ServerStats {
+    pub served: usize,
+    pub batches: usize,
+    pub total_latency_us: u64,
+    pub max_latency_us: u64,
+    pub batch_size_sum: usize,
+}
+
+impl ServerStats {
+    pub fn mean_latency_us(&self) -> f64 {
+        self.total_latency_us as f64 / self.served.max(1) as f64
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        self.batch_size_sum as f64 / self.batches.max(1) as f64
+    }
+}
+
+/// Dynamic batching policy.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    /// How long the batcher waits for more requests after the first arrives.
+    pub window: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 32, window: Duration::from_micros(200) }
+    }
+}
+
+/// Handle to a running server. Dropping it shuts the worker down.
+pub struct Server {
+    tx: Option<mpsc::Sender<Request>>,
+    worker: Option<thread::JoinHandle<()>>,
+    stats: Arc<Mutex<ServerStats>>,
+    in_dim: usize,
+}
+
+impl Server {
+    /// Spawn the worker thread around a model.
+    pub fn start<M: BatchModel>(model: M, policy: BatchPolicy) -> Server {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let stats = Arc::new(Mutex::new(ServerStats::default()));
+        let stats_w = stats.clone();
+        let in_dim = model.in_dim();
+        let worker = thread::spawn(move || {
+            loop {
+                // block for the first request of a batch
+                let first = match rx.recv() {
+                    Ok(r) => r,
+                    Err(_) => break, // all senders dropped: shutdown
+                };
+                let mut batch = vec![first];
+                let deadline = Instant::now() + policy.window;
+                while batch.len() < policy.max_batch {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(r) => batch.push(r),
+                        Err(mpsc::RecvTimeoutError::Timeout) => break,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+                let run_start = Instant::now();
+                let xs: Vec<Vec<f32>> = batch.iter().map(|r| r.x.clone()).collect();
+                let ys = model.infer_batch(&xs);
+                let bsz = batch.len();
+                let mut s = stats_w.lock().unwrap();
+                s.batches += 1;
+                s.batch_size_sum += bsz;
+                for (req, y) in batch.into_iter().zip(ys) {
+                    let queue_us = (run_start - req.enqueued).as_micros() as u64;
+                    let total_us = req.enqueued.elapsed().as_micros() as u64;
+                    s.served += 1;
+                    s.total_latency_us += total_us;
+                    s.max_latency_us = s.max_latency_us.max(total_us);
+                    let _ = req.resp.send(Response { y, queue_us, total_us, batch_size: bsz });
+                }
+            }
+        });
+        Server { tx: Some(tx), worker: Some(worker), stats, in_dim }
+    }
+
+    /// Submit a request; returns a receiver for the response.
+    pub fn submit(&self, x: Vec<f32>) -> Result<mpsc::Receiver<Response>, String> {
+        if x.len() != self.in_dim {
+            return Err(format!("input dim {} != model dim {}", x.len(), self.in_dim));
+        }
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .expect("server running")
+            .send(Request { x, enqueued: Instant::now(), resp: rtx })
+            .map_err(|_| "server shut down".to_string())?;
+        Ok(rrx)
+    }
+
+    /// Blocking single-request convenience.
+    pub fn infer(&self, x: Vec<f32>) -> Result<Response, String> {
+        self.submit(x)?
+            .recv()
+            .map_err(|_| "server dropped response".to_string())
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        self.stats.lock().unwrap().clone()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the channel -> worker exits
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Toy model: y = [sum(x)], records batch sizes implicitly via stats.
+    struct SumModel {
+        dim: usize,
+        delay: Duration,
+    }
+
+    impl BatchModel for SumModel {
+        fn infer_batch(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+            if !self.delay.is_zero() {
+                thread::sleep(self.delay);
+            }
+            xs.iter().map(|x| vec![x.iter().sum()]).collect()
+        }
+
+        fn in_dim(&self) -> usize {
+            self.dim
+        }
+    }
+
+    #[test]
+    fn serves_correct_results() {
+        let server = Server::start(SumModel { dim: 4, delay: Duration::ZERO },
+                                   BatchPolicy::default());
+        let r = server.infer(vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(r.y, vec![10.0]);
+    }
+
+    #[test]
+    fn rejects_wrong_dim() {
+        let server = Server::start(SumModel { dim: 4, delay: Duration::ZERO },
+                                   BatchPolicy::default());
+        assert!(server.submit(vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn no_request_lost_under_concurrency() {
+        let server = Arc::new(Server::start(
+            SumModel { dim: 2, delay: Duration::from_micros(100) },
+            BatchPolicy { max_batch: 8, window: Duration::from_micros(500) },
+        ));
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let s = server.clone();
+            handles.push(thread::spawn(move || {
+                let mut got = Vec::new();
+                for i in 0..25 {
+                    let v = (t * 100 + i) as f32;
+                    let r = s.infer(vec![v, 1.0]).unwrap();
+                    got.push((v, r.y[0]));
+                }
+                got
+            }));
+        }
+        let mut total = 0;
+        for h in handles {
+            for (v, y) in h.join().unwrap() {
+                assert_eq!(y, v + 1.0);
+                total += 1;
+            }
+        }
+        assert_eq!(total, 100);
+        let stats = server.stats();
+        assert_eq!(stats.served, 100);
+        assert!(stats.batches <= 100);
+    }
+
+    #[test]
+    fn batching_actually_batches() {
+        let server = Arc::new(Server::start(
+            SumModel { dim: 1, delay: Duration::from_millis(2) },
+            BatchPolicy { max_batch: 16, window: Duration::from_millis(4) },
+        ));
+        // submit 16 requests as fast as possible, then await all
+        let rxs: Vec<_> = (0..16).map(|i| server.submit(vec![i as f32]).unwrap()).collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let stats = server.stats();
+        assert!(stats.mean_batch() > 1.5, "mean batch {}", stats.mean_batch());
+    }
+
+    #[test]
+    fn shutdown_joins_cleanly() {
+        let server = Server::start(SumModel { dim: 1, delay: Duration::ZERO },
+                                   BatchPolicy::default());
+        let _ = server.infer(vec![1.0]).unwrap();
+        drop(server); // must not hang
+    }
+}

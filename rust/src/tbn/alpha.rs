@@ -1,0 +1,85 @@
+//! Eqs. 7 & 9: layer-wide and per-tile scaling factors.
+
+/// Whether a layer carries one alpha (Eq. 7) or one per tile (Eq. 9).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlphaMode {
+    Single,
+    PerTile,
+}
+
+impl AlphaMode {
+    pub fn from_str(s: &str) -> AlphaMode {
+        match s {
+            "single" => AlphaMode::Single,
+            _ => AlphaMode::PerTile,
+        }
+    }
+
+    pub fn count(&self, p: usize) -> usize {
+        match self {
+            AlphaMode::Single => 1,
+            AlphaMode::PerTile => p,
+        }
+    }
+}
+
+/// Compute alphas from the scaling source tensor `a` (W itself or the
+/// independent parameter A): mean absolute value over the whole layer
+/// (Single) or over each length-q tile segment (PerTile).
+pub fn alphas_from(a: &[f32], p: usize, mode: AlphaMode) -> Vec<f32> {
+    assert!(p > 0 && a.len() % p == 0);
+    match mode {
+        AlphaMode::Single => {
+            let n = a.len().max(1);
+            vec![a.iter().map(|x| x.abs()).sum::<f32>() / n as f32]
+        }
+        AlphaMode::PerTile => {
+            let q = a.len() / p;
+            (0..p)
+                .map(|i| {
+                    a[i * q..(i + 1) * q].iter().map(|x| x.abs()).sum::<f32>() / q as f32
+                })
+                .collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_is_mean_abs() {
+        let a = alphas_from(&[1.0, -2.0, 3.0, -4.0], 2, AlphaMode::Single);
+        assert_eq!(a, vec![2.5]);
+    }
+
+    #[test]
+    fn per_tile_segments() {
+        let a = alphas_from(&[1.0, -2.0, 3.0, -5.0], 2, AlphaMode::PerTile);
+        assert_eq!(a, vec![1.5, 4.0]);
+    }
+
+    #[test]
+    fn per_tile_reduces_to_single_when_p_is_one() {
+        let xs = [0.5f32, -1.5, 2.5];
+        let s = alphas_from(&xs, 1, AlphaMode::Single);
+        let t = alphas_from(&xs, 1, AlphaMode::PerTile);
+        assert_eq!(s, t);
+    }
+
+    #[test]
+    fn alphas_nonnegative() {
+        let a = alphas_from(&[-1.0; 64], 8, AlphaMode::PerTile);
+        assert!(a.iter().all(|&x| x >= 0.0));
+        assert_eq!(a.len(), 8);
+    }
+
+    #[test]
+    fn mode_count() {
+        assert_eq!(AlphaMode::Single.count(16), 1);
+        assert_eq!(AlphaMode::PerTile.count(16), 16);
+        assert_eq!(AlphaMode::from_str("single"), AlphaMode::Single);
+        assert_eq!(AlphaMode::from_str("per_tile"), AlphaMode::PerTile);
+    }
+}

@@ -1,0 +1,181 @@
+//! Compression accounting: the Bit-Width / #Params (M-bit) / savings columns
+//! of Tables 1, 3, 4, 5 — computed over the full-size architecture specs.
+
+use crate::arch::{ArchSpec, Kind};
+use super::policy::{decide, Quant, TilingPolicy};
+
+/// Accounting result for one (architecture, policy) pair.
+#[derive(Debug, Clone)]
+pub struct Accounting {
+    pub arch: String,
+    pub mode: String,
+    pub total_params: usize,
+    pub total_bits: f64,
+    /// Per-layer decisions: (layer, quant, bits, params).
+    pub layers: Vec<(String, Quant, f64, usize)>,
+}
+
+impl Accounting {
+    /// Bits stored per model parameter (the paper's Bit-Width column).
+    pub fn bit_width(&self) -> f64 {
+        self.total_bits / self.total_params.max(1) as f64
+    }
+
+    /// #Params column in M-bit.
+    pub fn mbit(&self) -> f64 {
+        self.total_bits / 1e6
+    }
+
+    /// Savings factor vs a 1-bit binary-weight model (blue column).
+    pub fn savings_vs_binary(&self) -> f64 {
+        1.0 / self.bit_width()
+    }
+
+    /// Fraction of parameters living in tiled layers.
+    pub fn tiled_fraction(&self) -> f64 {
+        let tiled: usize = self
+            .layers
+            .iter()
+            .filter(|(_, q, _, _)| matches!(q, Quant::Tiled { .. }))
+            .map(|(_, _, _, n)| *n)
+            .sum();
+        tiled as f64 / self.total_params.max(1) as f64
+    }
+}
+
+/// Bits to store one layer of `n` params under `quant` (storage model used
+/// consistently across the paper's tables: tiles are 1-bit packed, alphas
+/// and fp weights are 32-bit).
+pub fn layer_bits(n: usize, quant: Quant, policy: &TilingPolicy) -> f64 {
+    match quant {
+        Quant::Tiled { p } => {
+            let q = n / p;
+            q as f64 + 32.0 * policy.alpha.count(p) as f64
+        }
+        Quant::Bwnn => n as f64 + 32.0,
+        Quant::Fp => 32.0 * n as f64,
+    }
+}
+
+/// Apply a tiling policy to a full-size architecture.
+///
+/// Per the paper's accounting, only conv/FC *weight* parameters enter the
+/// bit-width and #Params columns (norm scales / position embeddings are
+/// excluded — e.g. ResNet18-CIFAR is 10.99M weight params, ViT-CIFAR 9.49M).
+pub fn accounting(arch: &ArchSpec, policy: &TilingPolicy) -> Accounting {
+    let mut total_bits = 0.0;
+    let mut total_params = 0usize;
+    let mut layers = Vec::with_capacity(arch.layers.len());
+    for l in &arch.layers {
+        let quant = match l.kind {
+            Kind::Conv { .. } | Kind::Fc { .. } => decide(policy, l.params),
+            Kind::Other => continue,
+        };
+        let bits = layer_bits(l.params, quant, policy);
+        total_bits += bits;
+        total_params += l.params;
+        layers.push((l.name.clone(), quant, bits, l.params));
+    }
+    Accounting {
+        arch: arch.name.clone(),
+        mode: policy.mode.clone(),
+        total_params,
+        total_bits,
+        layers,
+    }
+}
+
+/// Convenience: the (bit_width, mbit, savings) triple for a table row.
+pub fn table_row(arch: &ArchSpec, policy: &TilingPolicy) -> (f64, f64, f64) {
+    let acc = accounting(arch, policy);
+    (acc.bit_width(), acc.mbit(), acc.savings_vs_binary())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch;
+
+    #[test]
+    fn fp_is_exactly_32_bits() {
+        let a = accounting(&arch::resnet18_cifar(), &TilingPolicy::fp());
+        assert!((a.bit_width() - 32.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bwnn_close_to_one_bit() {
+        let a = accounting(&arch::resnet18_cifar(), &TilingPolicy::bwnn(0));
+        assert!(a.bit_width() > 1.0 && a.bit_width() < 1.01);
+    }
+
+    /// Table 1 sanity: TBN_p bit-widths on ResNet18-CIFAR near the paper's
+    /// column (0.256 / 0.131 / 0.069 at p = 4 / 8 / 16 with lambda = 64k).
+    #[test]
+    fn resnet18_cifar_bitwidths_match_table1() {
+        let arch = arch::resnet18_cifar();
+        for (p, want, tol) in [(4usize, 0.256, 0.02), (8, 0.131, 0.012), (16, 0.069, 0.015)] {
+            let pol = TilingPolicy::tbn(p, 64_000);
+            let a = accounting(&arch, &pol);
+            let got = a.bit_width();
+            assert!((got - want).abs() < tol,
+                    "p={p}: got {got:.3}, paper {want} (lambda 64k)");
+        }
+    }
+
+    #[test]
+    fn resnet50_cifar_bitwidths_match_table1() {
+        let arch = arch::resnet50_cifar();
+        for (p, want, tol) in [(4usize, 0.259, 0.03), (8, 0.136, 0.02), (16, 0.075, 0.015)] {
+            let a = accounting(&arch, &TilingPolicy::tbn(p, 64_000));
+            assert!((a.bit_width() - want).abs() < tol,
+                    "p={p}: got {:.3}, paper {want}", a.bit_width());
+        }
+    }
+
+    #[test]
+    fn imagenet_resnet34_tbn2_matches() {
+        // Table 1: TBN_2 bit-width 0.53 with lambda = 150k
+        let a = accounting(&arch::resnet34_imagenet(), &TilingPolicy::tbn(2, 150_000));
+        assert!((a.bit_width() - 0.53).abs() < 0.05, "got {}", a.bit_width());
+    }
+
+    #[test]
+    fn vit_cifar_tbn_matches_table4() {
+        let arch = arch::vit_cifar();
+        for (p, want, tol) in [(4usize, 0.253, 0.02), (8, 0.129, 0.012)] {
+            let a = accounting(&arch, &TilingPolicy::tbn(p, 64_000));
+            assert!((a.bit_width() - want).abs() < tol,
+                    "p={p}: got {:.3}, paper {want}", a.bit_width());
+        }
+    }
+
+    #[test]
+    fn savings_monotone_in_p() {
+        let arch = arch::vit_cifar();
+        let mut prev = 0.0;
+        for p in [2usize, 4, 8, 16] {
+            let s = accounting(&arch, &TilingPolicy::tbn(p, 64_000)).savings_vs_binary();
+            assert!(s > prev, "p={p}");
+            prev = s;
+        }
+    }
+
+    #[test]
+    fn lambda_global_tiles_more_than_default() {
+        let arch = arch::resnet18_cifar();
+        let global = accounting(&arch, &TilingPolicy::tbn(4, 0));
+        let lam = accounting(&arch, &TilingPolicy::tbn(4, 64_000));
+        assert!(global.total_bits < lam.total_bits);
+    }
+
+    #[test]
+    fn single_alpha_costs_less_than_per_tile() {
+        let arch = arch::vit_cifar();
+        let mut per_tile = TilingPolicy::tbn(16, 64_000);
+        let mut single = TilingPolicy::tbn(16, 64_000);
+        single.alpha = crate::tbn::AlphaMode::Single;
+        per_tile.alpha = crate::tbn::AlphaMode::PerTile;
+        assert!(accounting(&arch, &single).total_bits
+                < accounting(&arch, &per_tile).total_bits);
+    }
+}

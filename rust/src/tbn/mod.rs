@@ -1,0 +1,20 @@
+//! Core TBN library: the paper's method (Eqs. 1-9) as host-side Rust, plus
+//! the sub-bit model format, compression/bit-ops accounting and the
+//! inference memory model.
+//!
+//! Semantics are byte-for-byte aligned with `python/compile/kernels/ref.py`
+//! (the canonical oracle) and verified against it through the exported-model
+//! parity tests in `rust/tests/native_parity.rs`.
+
+pub mod alpha;
+pub mod bitops;
+pub mod compress;
+pub mod format;
+pub mod memory;
+pub mod policy;
+pub mod tile;
+
+pub use alpha::{alphas_from, AlphaMode};
+pub use format::{LayerRecord, TbnzModel, WeightPayload};
+pub use policy::{decide, Quant, TilingPolicy};
+pub use tile::{expand_tile, tile_from_weights};

@@ -1,0 +1,127 @@
+//! Eqs. 1-5: tile construction from trained weights and tile expansion.
+//!
+//! Layout convention (identical to `ref.py`): weights flatten row-major to
+//! length `N = p*q`; viewing as a `p x q` matrix, summing over `p` and
+//! thresholding gives the tile `t`; element `k` of the expanded tensor is
+//! `t[k mod q] * alpha[k div q]`.
+
+use crate::tensor::BitVec;
+
+/// Eqs. 1-3: aggregate flattened weights into a q-length binary tile.
+///
+/// Returns the packed tile; `w.len()` must be divisible by `p`.
+/// Sign convention: `s > 0 -> +1`, else `-1` (zero maps to -1).
+pub fn tile_from_weights(w: &[f32], p: usize) -> BitVec {
+    assert!(p > 0 && w.len() % p == 0,
+            "layer size {} not divisible by p={p}", w.len());
+    let q = w.len() / p;
+    let mut s = vec![0.0f32; q];
+    for tile_idx in 0..p {
+        let row = &w[tile_idx * q..(tile_idx + 1) * q];
+        for (sj, &wj) in s.iter_mut().zip(row) {
+            *sj += wj;
+        }
+    }
+    BitVec::from_signs(&s)
+}
+
+/// The pre-threshold aggregate `s` (Eq. 2) — used by tests and diagnostics.
+pub fn tile_sums(w: &[f32], p: usize) -> Vec<f32> {
+    assert!(w.len() % p == 0);
+    let q = w.len() / p;
+    let mut s = vec![0.0f32; q];
+    for tile_idx in 0..p {
+        for j in 0..q {
+            s[j] += w[tile_idx * q + j];
+        }
+    }
+    s
+}
+
+/// Eqs. 4-5 + scaling: expand a tile into the full flat weight vector.
+///
+/// `alphas` has length 1 (layer-wide, Eq. 7) or `p` (per-tile, Eq. 9).
+pub fn expand_tile(tile: &BitVec, alphas: &[f32], n: usize) -> Vec<f32> {
+    let q = tile.len();
+    assert!(n % q == 0, "tile length {q} does not divide layer size {n}");
+    let p = n / q;
+    assert!(alphas.len() == 1 || alphas.len() == p,
+            "alphas len {} != 1 or p={p}", alphas.len());
+    let mut out = Vec::with_capacity(n);
+    for tile_idx in 0..p {
+        let a = if alphas.len() == 1 { alphas[0] } else { alphas[tile_idx] };
+        for j in 0..q {
+            out.push(tile.get(j) * a);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn simple_sum_case() {
+        // p=2, q=2: rows [1,-3],[2,1] -> s=[3,-2] -> t=[+1,-1]
+        let t = tile_from_weights(&[1.0, -3.0, 2.0, 1.0], 2);
+        assert_eq!(t.to_signs(), vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn zero_sum_maps_to_minus_one() {
+        let t = tile_from_weights(&[0.0, 0.0, 0.0, 0.0], 2);
+        assert_eq!(t.to_signs(), vec![-1.0, -1.0]);
+    }
+
+    #[test]
+    fn p_equals_one_is_plain_sign() {
+        let w = [0.5, -0.5, 2.0];
+        let t = tile_from_weights(&w, 1);
+        assert_eq!(t.to_signs(), vec![1.0, -1.0, 1.0]);
+    }
+
+    #[test]
+    fn expand_per_tile_alphas() {
+        let t = BitVec::from_signs(&[1.0, -1.0, 1.0]);
+        let out = expand_tile(&t, &[2.0, 0.5], 6);
+        assert_eq!(out, vec![2.0, -2.0, 2.0, 0.5, -0.5, 0.5]);
+    }
+
+    #[test]
+    fn expand_single_alpha() {
+        let t = BitVec::from_signs(&[1.0, -1.0]);
+        let out = expand_tile(&t, &[3.0], 4);
+        assert_eq!(out, vec![3.0, -3.0, 3.0, -3.0]);
+    }
+
+    #[test]
+    fn construct_expand_consistency() {
+        // expand(construct(w)) must have p identical sign-blocks
+        let mut r = Rng::new(4);
+        let w: Vec<f32> = (0..96).map(|_| r.gauss_f32()).collect();
+        let t = tile_from_weights(&w, 4);
+        let out = expand_tile(&t, &[1.0], 96);
+        for blk in 1..4 {
+            assert_eq!(&out[..24], &out[blk * 24..(blk + 1) * 24]);
+        }
+    }
+
+    #[test]
+    fn sums_match_construct() {
+        let mut r = Rng::new(5);
+        let w: Vec<f32> = (0..64).map(|_| r.gauss_f32()).collect();
+        let s = tile_sums(&w, 8);
+        let t = tile_from_weights(&w, 8);
+        for (j, &sj) in s.iter().enumerate() {
+            assert_eq!(t.get(j) > 0.0, sj > 0.0);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn indivisible_panics() {
+        tile_from_weights(&[1.0, 2.0, 3.0], 2);
+    }
+}

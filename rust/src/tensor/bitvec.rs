@@ -1,0 +1,260 @@
+//! Bit-packed {-1,+1} vectors: the paper's 8-bit-integer weight packing
+//! ("we develop a fully binarized kernel by packing binary weights into
+//! unsigned 8-bit integers"), generalized to u64 words for host speed.
+//!
+//! Convention: bit = 1 encodes +1, bit = 0 encodes -1. Element `i` lives in
+//! word `i / 64`, bit `i % 64` (LSB-first) — the same order Algorithm 1's
+//! pointer walks.
+
+/// A packed sequence of {-1, +1} values, one bit each.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BitVec {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl BitVec {
+    pub fn zeros(len: usize) -> BitVec {
+        BitVec { words: vec![0; len.div_ceil(64)], len }
+    }
+
+    /// Pack from sign values: x > 0 -> +1 (bit set), else -1.
+    pub fn from_signs(xs: &[f32]) -> BitVec {
+        let mut v = BitVec::zeros(xs.len());
+        for (i, &x) in xs.iter().enumerate() {
+            if x > 0.0 {
+                v.words[i / 64] |= 1u64 << (i % 64);
+            }
+        }
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Storage in bytes (ceil to whole bytes, as stored in TBNZ).
+    pub fn storage_bytes(&self) -> usize {
+        self.len.div_ceil(8)
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> f32 {
+        debug_assert!(i < self.len);
+        if (self.words[i / 64] >> (i % 64)) & 1 == 1 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    #[inline]
+    pub fn get_bit(&self, i: usize) -> bool {
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    pub fn set(&mut self, i: usize, plus_one: bool) {
+        debug_assert!(i < self.len);
+        if plus_one {
+            self.words[i / 64] |= 1u64 << (i % 64);
+        } else {
+            self.words[i / 64] &= !(1u64 << (i % 64));
+        }
+    }
+
+    /// Unpack to f32 {-1,+1}.
+    pub fn to_signs(&self) -> Vec<f32> {
+        (0..self.len).map(|i| self.get(i)).collect()
+    }
+
+    /// Number of +1 entries (popcount over the packed words).
+    pub fn count_plus(&self) -> usize {
+        let mut total: u32 = 0;
+        for (wi, w) in self.words.iter().enumerate() {
+            let mut w = *w;
+            if (wi + 1) * 64 > self.len {
+                let valid = self.len - wi * 64;
+                w &= (1u64 << valid) - 1;
+            }
+            total += w.count_ones();
+        }
+        total as usize
+    }
+
+    /// Sign-dot: sum_i sign_i * x_i over a same-length f32 slice.
+    ///
+    /// This is the scalar hot loop of the native engine; `nn::` carries the
+    /// word-level optimized variants measured in EXPERIMENTS.md §Perf.
+    pub fn dot(&self, xs: &[f32]) -> f32 {
+        assert_eq!(xs.len(), self.len);
+        let mut acc = 0.0f32;
+        for (i, &x) in xs.iter().enumerate() {
+            acc += self.get(i) * x;
+        }
+        acc
+    }
+
+    /// Sign-dot against a sub-range [start, start+xs.len()) of this vector.
+    ///
+    /// Word-level branchless form: for each 64-bit word the result is
+    /// `2 * sum(x where bit set) - sum(x)`; the selected sum walks set bits
+    /// with `trailing_zeros`, the full sum autovectorizes.  ~2x the naive
+    /// per-bit loop (EXPERIMENTS.md §Perf).
+    pub fn dot_range(&self, start: usize, xs: &[f32]) -> f32 {
+        debug_assert!(start + xs.len() <= self.len);
+        let mut acc = 0.0f32;
+        let mut i = 0usize;
+        while i < xs.len() {
+            let bit = start + i;
+            let word_idx = bit / 64;
+            let bit_off = bit % 64;
+            let take = (64 - bit_off).min(xs.len() - i);
+            let chunk = &xs[i..i + take];
+            // bits of this word covering the chunk, shifted to position 0
+            let mut w = (self.words[word_idx] >> bit_off)
+                & if take == 64 { u64::MAX } else { (1u64 << take) - 1 };
+            let total: f32 = chunk.iter().sum();
+            let mut sel = 0.0f32;
+            while w != 0 {
+                let k = w.trailing_zeros() as usize;
+                sel += chunk[k];
+                w &= w - 1;
+            }
+            acc += 2.0 * sel - total;
+            i += take;
+        }
+        acc
+    }
+
+    /// XNOR-popcount dot with another BitVec (both ±1): returns the integer
+    /// dot product = len - 2 * hamming_distance.
+    pub fn xnor_dot(&self, other: &BitVec) -> i64 {
+        assert_eq!(self.len, other.len);
+        let mut same: i64 = 0;
+        for (wi, (a, b)) in self.words.iter().zip(&other.words).enumerate() {
+            let mut agree = !(a ^ b);
+            if (wi + 1) * 64 > self.len {
+                let valid = self.len - wi * 64;
+                agree &= (1u64 << valid) - 1;
+            } else if self.len >= (wi + 1) * 64 {
+                // full word
+            }
+            same += agree.count_ones() as i64;
+        }
+        2 * same - self.len as i64
+    }
+
+    /// Raw packed bytes, LSB-first (for TBNZ serialization).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.storage_bytes());
+        for i in 0..self.storage_bytes() {
+            let w = self.words[i / 8];
+            out.push((w >> (8 * (i % 8))) as u8);
+        }
+        out
+    }
+
+    pub fn from_bytes(bytes: &[u8], len: usize) -> BitVec {
+        assert!(bytes.len() >= len.div_ceil(8));
+        let mut v = BitVec::zeros(len);
+        for i in 0..len {
+            if (bytes[i / 8] >> (i % 8)) & 1 == 1 {
+                v.words[i / 64] |= 1u64 << (i % 64);
+            }
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let xs = [0.5, -0.1, 0.0, 2.0, -3.0, 1e-9];
+        let v = BitVec::from_signs(&xs);
+        // sign convention: >0 -> +1, <=0 -> -1 (zero maps to -1, Eq. 3)
+        assert_eq!(v.to_signs(), vec![1.0, -1.0, -1.0, 1.0, -1.0, 1.0]);
+    }
+
+    #[test]
+    fn bytes_roundtrip_various_lengths() {
+        let mut r = Rng::new(1);
+        for len in [1, 7, 8, 9, 63, 64, 65, 200] {
+            let xs: Vec<f32> = (0..len).map(|_| r.gauss_f32()).collect();
+            let v = BitVec::from_signs(&xs);
+            let v2 = BitVec::from_bytes(&v.to_bytes(), len);
+            assert_eq!(v, v2, "len={len}");
+        }
+    }
+
+    #[test]
+    fn storage_is_one_bit_per_element() {
+        assert_eq!(BitVec::zeros(16).storage_bytes(), 2);
+        assert_eq!(BitVec::zeros(17).storage_bytes(), 3);
+    }
+
+    #[test]
+    fn dot_matches_unpacked() {
+        let mut r = Rng::new(2);
+        let signs: Vec<f32> = (0..130).map(|_| r.gauss_f32()).collect();
+        let xs: Vec<f32> = (0..130).map(|_| r.gauss_f32()).collect();
+        let v = BitVec::from_signs(&signs);
+        let want: f32 = signs
+            .iter()
+            .zip(&xs)
+            .map(|(s, x)| if *s > 0.0 { *x } else { -*x })
+            .sum();
+        assert!((v.dot(&xs) - want).abs() < 1e-3);
+    }
+
+    #[test]
+    fn dot_range_slices() {
+        let signs = [1.0, -1.0, 1.0, 1.0, -1.0, -1.0];
+        let v = BitVec::from_signs(&signs);
+        let xs = [2.0, 3.0];
+        // range starting at 2: signs [1, 1] -> 2+3
+        assert_eq!(v.dot_range(2, &xs), 5.0);
+        // range starting at 4: signs [-1,-1] -> -5
+        assert_eq!(v.dot_range(4, &xs), -5.0);
+    }
+
+    #[test]
+    fn xnor_dot_matches_float() {
+        let mut r = Rng::new(3);
+        for len in [5, 64, 100] {
+            let a: Vec<f32> = (0..len).map(|_| r.gauss_f32()).collect();
+            let b: Vec<f32> = (0..len).map(|_| r.gauss_f32()).collect();
+            let va = BitVec::from_signs(&a);
+            let vb = BitVec::from_signs(&b);
+            let want: i64 = (0..len)
+                .map(|i| (va.get(i) * vb.get(i)) as i64)
+                .sum();
+            assert_eq!(va.xnor_dot(&vb), want, "len={len}");
+        }
+    }
+
+    #[test]
+    fn count_plus_with_partial_word() {
+        let xs: Vec<f32> = (0..70).map(|i| if i % 3 == 0 { 1.0 } else { -1.0 }).collect();
+        let v = BitVec::from_signs(&xs);
+        assert_eq!(v.count_plus(), (0..70).filter(|i| i % 3 == 0).count());
+    }
+
+    #[test]
+    fn set_get() {
+        let mut v = BitVec::zeros(10);
+        v.set(3, true);
+        v.set(9, true);
+        v.set(3, false);
+        assert!(!v.get_bit(3));
+        assert!(v.get_bit(9));
+        assert_eq!(v.count_plus(), 1);
+    }
+}

@@ -1,0 +1,125 @@
+//! Host tensor type and bit-packed binary storage.
+//!
+//! `Tensor` is a shape + contiguous f32 buffer (row-major) — the host-side
+//! mirror of a PJRT literal. `BitVec` stores {-1,+1} sequences at one bit per
+//! element with sign-dot kernels; it is the storage substrate of the TBNZ
+//! format and the native inference engine.
+
+mod bitvec;
+
+pub use bitvec::BitVec;
+
+/// Row-major f32 tensor on the host.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape {:?} != data len {}", shape, data.len());
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn full(shape: Vec<usize>, v: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![v; n] }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Reinterpret with a new shape of equal element count.
+    pub fn reshaped(mut self, shape: Vec<usize>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape;
+        self
+    }
+
+    /// Mean absolute value (the XNOR-Net alpha, Eq. 7).
+    pub fn mean_abs(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().map(|x| x.abs()).sum::<f32>() / self.data.len() as f32
+    }
+
+    /// argmax over the last axis; returns indices of shape[..rank-1].
+    pub fn argmax_last(&self) -> Vec<usize> {
+        let k = *self.shape.last().expect("argmax over scalar");
+        self.data
+            .chunks_exact(k)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_shape() {
+        let t = Tensor::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.rank(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn new_rejects_mismatch() {
+        Tensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn mean_abs() {
+        let t = Tensor::new(vec![4], vec![1.0, -2.0, 3.0, -4.0]);
+        assert!((t.mean_abs() - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn argmax_last_rows() {
+        let t = Tensor::new(vec![2, 3], vec![0.1, 0.9, 0.0, 5.0, -1.0, 2.0]);
+        assert_eq!(t.argmax_last(), vec![1, 0]);
+    }
+
+    #[test]
+    fn scalar_tensor() {
+        let t = Tensor::scalar(3.5);
+        assert_eq!(t.rank(), 0);
+        assert_eq!(t.data, vec![3.5]);
+    }
+
+    #[test]
+    fn reshape_keeps_data() {
+        let t = Tensor::new(vec![6], (0..6).map(|i| i as f32).collect()).reshaped(vec![2, 3]);
+        assert_eq!(t.shape, vec![2, 3]);
+        assert_eq!(t.data[5], 5.0);
+    }
+}

@@ -1,0 +1,228 @@
+//! Exporter: trained parameters → sub-bit inference artifacts.
+//!
+//! Two consumers:
+//! * `to_tbnz` builds the TBNZ serialized model (native engine / deployment);
+//! * `forward_inputs` builds the positional literal list for the AOT
+//!   `forward` graph (PJRT serving path — tiled FC layers run through the
+//!   Pallas tile-reuse kernel lowered into that graph).
+//!
+//! Both derive tiles and alphas natively in Rust (`tbn::tile` / `tbn::alpha`),
+//! exercising the same math the Python oracle pins down; parity is asserted
+//! in `rust/tests/native_parity.rs`.
+
+use anyhow::{anyhow, Result};
+
+use crate::config::Experiment;
+use crate::runtime;
+use crate::tbn::{alphas_from, tile_from_weights, AlphaMode, LayerRecord,
+                 TbnzModel, WeightPayload};
+use crate::tensor::{BitVec, Tensor};
+use super::TrainedModel;
+
+fn alpha_mode(n_alphas: usize) -> AlphaMode {
+    if n_alphas <= 1 { AlphaMode::Single } else { AlphaMode::PerTile }
+}
+
+/// Find the alpha-source tensor for a tiled weight: the sibling `<name>.A`
+/// when the experiment trains an independent A, otherwise the weight itself.
+fn alpha_source<'m>(exp: &Experiment, model: &'m TrainedModel, name: &str,
+                    w: &'m Tensor, alpha_src: &str) -> &'m Tensor {
+    if alpha_src == "A" {
+        if let Some(a) = model.param(exp, &format!("{name}.A")) {
+            return a;
+        }
+    }
+    w
+}
+
+/// Serialize a trained model to the TBNZ sub-bit format.
+///
+/// Weight layers are stored per their manifest quant decision; `other`
+/// params (norms, embeddings) are stored full-precision; the alpha source A
+/// never ships (it only exists to compute alphas).
+pub fn to_tbnz(exp: &Experiment, model: &TrainedModel) -> Result<TbnzModel> {
+    let mut layers = Vec::new();
+    for (info, tensor) in exp.params.iter().zip(&model.params) {
+        if info.role == "alpha_src" {
+            continue;
+        }
+        let payload = match info.quant.as_str() {
+            "tiled" => {
+                let tile = tile_from_weights(&tensor.data, info.p);
+                let src = alpha_source(exp, model, &info.name, tensor, &info.alpha_src);
+                let alphas = alphas_from(&src.data, info.p, alpha_mode(info.n_alphas));
+                WeightPayload::Tiled { p: info.p, tile, alphas }
+            }
+            "bwnn" => WeightPayload::Bwnn {
+                bits: BitVec::from_signs(&tensor.data),
+                alpha: tensor.mean_abs(),
+            },
+            _ => WeightPayload::Fp(tensor.data.clone()),
+        };
+        layers.push(LayerRecord {
+            name: info.name.clone(),
+            shape: info.shape.clone(),
+            payload,
+        });
+    }
+    Ok(TbnzModel { layers })
+}
+
+/// Build the forward graph's positional inputs (after `x`) from trained
+/// parameters, in the manifest's `infer_params` order.
+pub fn forward_inputs(exp: &Experiment, model: &TrainedModel) -> Result<Vec<xla::Literal>> {
+    let mut out = Vec::with_capacity(exp.infer_params.len());
+    for ip in &exp.infer_params {
+        let src_info = exp
+            .params
+            .iter()
+            .position(|p| p.name == ip.source)
+            .ok_or_else(|| anyhow!("infer param {} has unknown source {}", ip.name, ip.source))?;
+        let w = &model.params[src_info];
+        let info = &exp.params[src_info];
+        let lit = match ip.kind.as_str() {
+            "tile" => {
+                let tile = tile_from_weights(&w.data, info.p);
+                runtime::literal_f32(&Tensor::new(vec![tile.len()], tile.to_signs()))?
+            }
+            "alphas" => {
+                let src = alpha_source(exp, model, &info.name, w, &info.alpha_src);
+                let alphas = alphas_from(&src.data, info.p, alpha_mode(info.n_alphas));
+                runtime::literal_f32(&Tensor::new(vec![alphas.len()], alphas))?
+            }
+            "bwnn_bin" => {
+                let signs = BitVec::from_signs(&w.data).to_signs();
+                runtime::literal_f32(&Tensor::new(info.shape.clone(), signs))?
+            }
+            "bwnn_alpha" => {
+                runtime::literal_f32(&Tensor::new(vec![1], vec![w.mean_abs()]))?
+            }
+            "fp" => runtime::literal_f32(w)?,
+            k => return Err(anyhow!("unknown infer param kind {k:?}")),
+        };
+        out.push(lit);
+    }
+    Ok(out)
+}
+
+/// Summarize the exported model: (params, storage bits, bit-width).
+pub fn export_summary(model: &TbnzModel) -> (usize, usize, f64) {
+    (model.total_params(), model.storage_bits(), model.bit_width())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Experiment, InferParamInfo, IoInfo, ParamInfo};
+    use crate::tbn::TilingPolicy;
+    use crate::util::Rng;
+
+    fn mini_exp() -> Experiment {
+        Experiment {
+            id: "t".into(),
+            tables: vec![],
+            model_family: "mlp".into(),
+            dataset_kind: "synth_mnist".into(),
+            dataset_classes: 10,
+            dataset_n_train: 64,
+            dataset_n_test: 64,
+            tiling: TilingPolicy::tbn(4, 0),
+            opt_kind: "sgd".into(),
+            opt_slots: 1,
+            train_steps: 1,
+            lr: 0.1,
+            warmup: 0,
+            schedule: "constant".into(),
+            seed: 1,
+            params: vec![
+                ParamInfo { name: "fc".into(), shape: vec![8, 8], role: "weight".into(),
+                            quant: "tiled".into(), p: 4, q: 16, n_alphas: 4,
+                            alpha_src: "A".into() },
+                ParamInfo { name: "fc.A".into(), shape: vec![8, 8],
+                            role: "alpha_src".into(), quant: "aux".into(),
+                            p: 1, q: 0, n_alphas: 0, alpha_src: "".into() },
+                ParamInfo { name: "head".into(), shape: vec![2, 8], role: "weight".into(),
+                            quant: "fp".into(), p: 1, q: 0, n_alphas: 0,
+                            alpha_src: "".into() },
+            ],
+            infer_params: vec![
+                InferParamInfo { name: "fc.tile".into(), kind: "tile".into(),
+                                 shape: vec![16], source: "fc".into() },
+                InferParamInfo { name: "fc.alphas".into(), kind: "alphas".into(),
+                                 shape: vec![4], source: "fc".into() },
+                InferParamInfo { name: "head".into(), kind: "fp".into(),
+                                 shape: vec![2, 8], source: "head".into() },
+            ],
+            io: IoInfo { task: "cls".into(), train_batch: 4, eval_batch: 4,
+                         serve_batch: 4, x: vec![8], y_train: vec![4],
+                         y_eval: vec![4], y_is_int: true },
+            graph_files: vec![],
+        }
+    }
+
+    fn mini_model() -> TrainedModel {
+        let mut r = Rng::new(3);
+        TrainedModel {
+            id: "t".into(),
+            params: vec![
+                Tensor::new(vec![8, 8], r.normal_vec(64, 1.0)),
+                Tensor::new(vec![8, 8], r.normal_vec(64, 1.0)),
+                Tensor::new(vec![2, 8], r.normal_vec(16, 1.0)),
+            ],
+        }
+    }
+
+    #[test]
+    fn tbnz_skips_alpha_source_and_tiles() {
+        let exp = mini_exp();
+        let model = mini_model();
+        let tbnz = to_tbnz(&exp, &model).unwrap();
+        assert_eq!(tbnz.layers.len(), 2);
+        assert!(matches!(tbnz.layers[0].payload, WeightPayload::Tiled { p: 4, .. }));
+        assert!(matches!(tbnz.layers[1].payload, WeightPayload::Fp(_)));
+    }
+
+    #[test]
+    fn tbnz_alphas_come_from_a() {
+        let exp = mini_exp();
+        let model = mini_model();
+        let tbnz = to_tbnz(&exp, &model).unwrap();
+        if let WeightPayload::Tiled { alphas, .. } = &tbnz.layers[0].payload {
+            let want = alphas_from(&model.params[1].data, 4, AlphaMode::PerTile);
+            assert_eq!(alphas, &want);
+        } else {
+            panic!("not tiled");
+        }
+    }
+
+    #[test]
+    fn forward_inputs_positional() {
+        let exp = mini_exp();
+        let model = mini_model();
+        let lits = forward_inputs(&exp, &model).unwrap();
+        assert_eq!(lits.len(), 3);
+        assert_eq!(lits[0].element_count(), 16); // tile
+        assert_eq!(lits[1].element_count(), 4); // alphas
+        assert_eq!(lits[2].element_count(), 16); // fp head
+    }
+
+    #[test]
+    fn tile_values_are_signs() {
+        let exp = mini_exp();
+        let model = mini_model();
+        let lits = forward_inputs(&exp, &model).unwrap();
+        let v = lits[0].to_vec::<f32>().unwrap();
+        assert!(v.iter().all(|&x| x == 1.0 || x == -1.0));
+    }
+
+    #[test]
+    fn summary_subbit() {
+        let exp = mini_exp();
+        let model = mini_model();
+        let tbnz = to_tbnz(&exp, &model).unwrap();
+        let (params, bits, bw) = export_summary(&tbnz);
+        assert_eq!(params, 64 + 16);
+        assert_eq!(bits, (16 + 4 * 32) + 32 * 16);
+        assert!(bw < 32.0);
+    }
+}

@@ -1,0 +1,142 @@
+//! Evaluation metrics: accuracy, MSE, and the IoU family used by the
+//! PointNet segmentation benchmarks (Table 3).
+
+/// Classification accuracy from predictions and labels.
+pub fn accuracy(preds: &[i32], labels: &[i32]) -> f64 {
+    assert_eq!(preds.len(), labels.len());
+    if preds.is_empty() {
+        return 0.0;
+    }
+    let correct = preds.iter().zip(labels).filter(|(p, l)| p == l).count();
+    correct as f64 / preds.len() as f64
+}
+
+/// Mean squared error.
+pub fn mse(pred: &[f32], target: &[f32]) -> f64 {
+    assert_eq!(pred.len(), target.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    pred.iter()
+        .zip(target)
+        .map(|(p, t)| ((p - t) as f64).powi(2))
+        .sum::<f64>()
+        / pred.len() as f64
+}
+
+/// Per-class IoU over a flat prediction/label pair.
+///
+/// Classes absent from both prediction and ground truth are skipped in the
+/// averages (the PointNet convention).
+pub fn per_class_iou(preds: &[i32], labels: &[i32], classes: usize) -> Vec<Option<f64>> {
+    assert_eq!(preds.len(), labels.len());
+    let mut inter = vec![0usize; classes];
+    let mut union = vec![0usize; classes];
+    for (&p, &l) in preds.iter().zip(labels) {
+        let (p, l) = (p as usize, l as usize);
+        if p < classes {
+            union[p] += 1;
+        }
+        if l < classes {
+            union[l] += 1;
+        }
+        if p == l && p < classes {
+            inter[p] += 1;
+            union[p] -= 1; // counted twice above
+        }
+    }
+    (0..classes)
+        .map(|c| {
+            if union[c] == 0 {
+                None
+            } else {
+                Some(inter[c] as f64 / union[c] as f64)
+            }
+        })
+        .collect()
+}
+
+/// Class-average IoU (mIoU): mean over classes present anywhere.
+pub fn class_avg_iou(preds: &[i32], labels: &[i32], classes: usize) -> f64 {
+    let per = per_class_iou(preds, labels, classes);
+    let present: Vec<f64> = per.into_iter().flatten().collect();
+    if present.is_empty() {
+        0.0
+    } else {
+        present.iter().sum::<f64>() / present.len() as f64
+    }
+}
+
+/// Instance-average IoU: per-sample mIoU averaged over samples (ShapeNet's
+/// "Instance Avg" column). `points` is the per-sample point count.
+pub fn instance_avg_iou(preds: &[i32], labels: &[i32], classes: usize,
+                        points: usize) -> f64 {
+    assert_eq!(preds.len(), labels.len());
+    assert!(points > 0 && preds.len() % points == 0);
+    let n = preds.len() / points;
+    let mut total = 0.0;
+    for s in 0..n {
+        total += class_avg_iou(&preds[s * points..(s + 1) * points],
+                               &labels[s * points..(s + 1) * points], classes);
+    }
+    total / n.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(accuracy(&[1, 2, 3], &[1, 2, 0]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn mse_basic() {
+        assert_eq!(mse(&[1.0, 3.0], &[0.0, 0.0]), 5.0);
+    }
+
+    #[test]
+    fn iou_perfect_is_one() {
+        let p = [0, 1, 2, 0, 1, 2];
+        assert_eq!(class_avg_iou(&p, &p, 3), 1.0);
+    }
+
+    #[test]
+    fn iou_disjoint_is_zero() {
+        let p = [0, 0, 0];
+        let l = [1, 1, 1];
+        assert_eq!(class_avg_iou(&p, &l, 2), 0.0);
+    }
+
+    #[test]
+    fn iou_half_overlap() {
+        // class 0: pred {0,1}, label {0,2} -> inter 1, union 3
+        let p = [0, 0, 1, 1];
+        let l = [0, 1, 0, 1];
+        let per = per_class_iou(&p, &l, 2);
+        assert_eq!(per[0], Some(1.0 / 3.0));
+        assert_eq!(per[1], Some(1.0 / 3.0));
+    }
+
+    #[test]
+    fn absent_class_skipped() {
+        let p = [0, 0];
+        let l = [0, 0];
+        let per = per_class_iou(&p, &l, 3);
+        assert_eq!(per[0], Some(1.0));
+        assert_eq!(per[1], None);
+        assert_eq!(per[2], None);
+        assert_eq!(class_avg_iou(&p, &l, 3), 1.0);
+    }
+
+    #[test]
+    fn instance_avg_differs_from_global() {
+        // sample 1 perfect, sample 2 all-wrong: instance avg = 0.5
+        let p = [0, 1, 0, 1];
+        let l = [0, 1, 1, 0];
+        let inst = instance_avg_iou(&p, &l, 2, 2);
+        assert!((inst - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,248 @@
+//! The training coordinator: drives the AOT train/eval graphs from Rust.
+//!
+//! The loop is entirely Rust-owned: Rust holds every parameter and optimizer
+//! tensor as a PJRT literal, computes the LR schedule, synthesizes batches
+//! from the dataset substrates, feeds the `train_step` graph positionally and
+//! swaps the returned tensors in place.  Python is never invoked.
+
+pub mod export;
+pub mod metrics;
+pub mod schedule;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::Experiment;
+use crate::data::{self, BatchIter, Dataset};
+use crate::info;
+use crate::runtime::{self, Runtime};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+use schedule::Schedule;
+
+/// One point of the training history.
+#[derive(Debug, Clone)]
+pub struct HistPoint {
+    pub step: usize,
+    pub loss: f64,
+    pub metric: f64,
+    pub lr: f64,
+}
+
+/// One evaluation snapshot.
+#[derive(Debug, Clone, Default)]
+pub struct EvalPoint {
+    pub step: usize,
+    pub loss: f64,
+    /// Accuracy (cls/seg) or MSE (forecast).
+    pub metric: f64,
+    /// Class-average IoU (seg tasks only).
+    pub class_iou: Option<f64>,
+    /// Instance-average IoU (seg tasks only).
+    pub instance_iou: Option<f64>,
+}
+
+/// Everything a finished run produces.
+#[derive(Debug, Clone)]
+pub struct TrainResult {
+    pub id: String,
+    pub steps: usize,
+    pub train_history: Vec<HistPoint>,
+    pub eval_history: Vec<EvalPoint>,
+    pub final_eval: EvalPoint,
+    pub duration_s: f64,
+}
+
+/// Trained parameters, positionally aligned with `exp.params`.
+pub struct TrainedModel {
+    pub id: String,
+    pub params: Vec<Tensor>,
+}
+
+impl TrainedModel {
+    pub fn param(&self, exp: &Experiment, name: &str) -> Option<&Tensor> {
+        exp.params.iter().position(|p| p.name == name).map(|i| &self.params[i])
+    }
+}
+
+/// Runtime knobs (the config holds the science; these hold the mechanics).
+#[derive(Debug, Clone)]
+pub struct TrainOptions {
+    /// Override the configured step count (benches use short runs).
+    pub steps: Option<usize>,
+    pub eval_every: usize,
+    pub log_every: usize,
+    pub seed: Option<u64>,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        TrainOptions { steps: None, eval_every: 100, log_every: 50, seed: None }
+    }
+}
+
+pub struct Trainer<'a> {
+    rt: &'a Runtime,
+    exp: &'a Experiment,
+    pub train_ds: Dataset,
+    pub test_ds: Dataset,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(rt: &'a Runtime, exp: &'a Experiment) -> Result<Trainer<'a>> {
+        let (train_ds, test_ds) = data::generate_split(
+            &exp.dataset_kind, &exp.io.x, exp.dataset_classes,
+            exp.dataset_n_train.max(exp.io.train_batch),
+            exp.dataset_n_test.max(exp.io.eval_batch),
+            exp.seed,
+        )
+        .map_err(|e| anyhow!("{}: {e}", exp.id))?;
+        Ok(Trainer { rt, exp, train_ds, test_ds })
+    }
+
+    /// Run `init` to get deterministic initial parameters.
+    pub fn init_params(&self, seed: i32) -> Result<Vec<xla::Literal>> {
+        let init = self.rt.load(self.exp.graph_file("init").context("no init graph")?)?;
+        let out = init.run(&[runtime::scalar_i32(seed)])?;
+        if out.len() != self.exp.n_params() {
+            return Err(anyhow!("init returned {} tensors, manifest says {}",
+                               out.len(), self.exp.n_params()));
+        }
+        Ok(out)
+    }
+
+    fn zeros_like_params(&self) -> Result<Vec<xla::Literal>> {
+        let mut out = Vec::with_capacity(self.exp.n_opt());
+        for p in &self.exp.params {
+            for _ in 0..self.exp.opt_slots {
+                out.push(runtime::literal_f32(&Tensor::zeros(p.shape.clone()))?);
+            }
+        }
+        Ok(out)
+    }
+
+    fn batch_literals(&self, ds: &Dataset, idxs: &[usize], batch: usize)
+                      -> Result<(xla::Literal, xla::Literal)> {
+        let (x, yi, yf) = ds.gather(idxs);
+        let mut x_shape = vec![batch];
+        x_shape.extend_from_slice(&self.exp.io.x);
+        let xl = runtime::literal_f32(&Tensor::new(x_shape, x))?;
+        let yl = if self.exp.io.y_is_int {
+            let shape = if self.exp.io.task == "seg" {
+                vec![batch, ds.y_int_elems]
+            } else {
+                vec![batch]
+            };
+            runtime::literal_i32(&shape, &yi)?
+        } else {
+            runtime::literal_f32(&Tensor::new(vec![batch, ds.y_elems], yf))?
+        };
+        Ok((xl, yl))
+    }
+
+    /// Evaluate current training params on the held-out set.
+    pub fn evaluate(&self, params: &[xla::Literal], step: usize) -> Result<EvalPoint> {
+        let exe = self.rt.load(self.exp.graph_file("eval_step").context("no eval graph")?)?;
+        let batch = self.exp.io.eval_batch;
+        let idxs: Vec<usize> = (0..batch).collect();
+        let (xl, yl) = self.batch_literals(&self.test_ds, &idxs, batch)?;
+        // pass by reference: Literal::clone deep-copies device buffers
+        let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+        inputs.push(&xl);
+        inputs.push(&yl);
+        let out = exe.run(&inputs)?;
+        let loss = runtime::f32_scalar_from_literal(&out[0])? as f64;
+        let metric = runtime::f32_scalar_from_literal(&out[1])? as f64;
+        let mut point = EvalPoint { step, loss, metric, ..Default::default() };
+        if self.exp.io.task == "seg" {
+            let preds = runtime::i32_from_literal(&out[2])?;
+            let (_, labels, _) = self.test_ds.gather(&idxs);
+            let classes = self.exp.dataset_classes;
+            let points = self.test_ds.y_int_elems;
+            point.class_iou = Some(metrics::class_avg_iou(&preds, &labels, classes));
+            point.instance_iou =
+                Some(metrics::instance_avg_iou(&preds, &labels, classes, points));
+        }
+        Ok(point)
+    }
+
+    /// Full training run: init → step loop → periodic eval → final eval.
+    pub fn run(&self, opts: &TrainOptions) -> Result<(TrainResult, TrainedModel)> {
+        let t0 = std::time::Instant::now();
+        let exp = self.exp;
+        let steps = opts.steps.unwrap_or(exp.train_steps);
+        let seed = opts.seed.unwrap_or(exp.seed);
+        let sched = Schedule::from_config(&exp.schedule, exp.lr, exp.warmup, steps);
+        let train_exe = self.rt.load(exp.graph_file("train_step").context("no train graph")?)?;
+
+        let mut params = self.init_params(seed as i32)?;
+        let mut opt = self.zeros_like_params()?;
+        let mut rng = Rng::new(seed.wrapping_mul(0x9E3779B9).wrapping_add(7));
+
+        let mut train_history = Vec::new();
+        let mut eval_history = Vec::new();
+        let mut batches = BatchIter::new(self.train_ds.n, exp.io.train_batch, &mut rng);
+        for step in 0..steps {
+            let idxs = match batches.next() {
+                Some(b) => b,
+                None => {
+                    batches = BatchIter::new(self.train_ds.n, exp.io.train_batch, &mut rng);
+                    batches.next().context("dataset smaller than one batch")?
+                }
+            };
+            let (xl, yl) = self.batch_literals(&self.train_ds, &idxs, exp.io.train_batch)?;
+            let lr = sched.at(step);
+
+            // hot loop: everything is passed by reference — Literal::clone
+            // deep-copies the underlying buffer (124 -> 116 ms/step on
+            // ResNet-mini; EXPERIMENTS.md §Perf).
+            let step_lit = runtime::scalar_f32((step + 1) as f32);
+            let lr_lit = runtime::scalar_f32(lr as f32);
+            let mut inputs: Vec<&xla::Literal> =
+                Vec::with_capacity(2 + params.len() + opt.len() + 2);
+            inputs.push(&step_lit);
+            inputs.push(&lr_lit);
+            inputs.extend(params.iter());
+            inputs.extend(opt.iter());
+            inputs.push(&xl);
+            inputs.push(&yl);
+
+            let mut out = train_exe.run(&inputs)?;
+            let metric = runtime::f32_scalar_from_literal(&out.pop().unwrap())? as f64;
+            let loss = runtime::f32_scalar_from_literal(&out.pop().unwrap())? as f64;
+            opt = out.split_off(exp.n_params());
+            params = out;
+
+            if step % opts.log_every == 0 || step + 1 == steps {
+                info!("train", "{} step {step}/{steps} loss {loss:.4} metric {metric:.4} lr {lr:.5}",
+                      exp.id);
+            }
+            train_history.push(HistPoint { step, loss, metric, lr });
+
+            if opts.eval_every > 0 && (step + 1) % opts.eval_every == 0 && step + 1 != steps {
+                eval_history.push(self.evaluate(&params, step + 1)?);
+            }
+        }
+
+        let final_eval = self.evaluate(&params, steps)?;
+        info!("train", "{} final: loss {:.4} metric {:.4}{}",
+              exp.id, final_eval.loss, final_eval.metric,
+              final_eval.class_iou.map(|i| format!(" mIoU {i:.3}")).unwrap_or_default());
+        eval_history.push(final_eval.clone());
+
+        let tensors = params
+            .iter()
+            .map(runtime::tensor_from_literal)
+            .collect::<Result<Vec<_>>>()?;
+        Ok((
+            TrainResult {
+                id: exp.id.clone(),
+                steps,
+                train_history,
+                eval_history,
+                final_eval,
+                duration_s: t0.elapsed().as_secs_f64(),
+            },
+            TrainedModel { id: exp.id.clone(), params: tensors },
+        ))
+    }
+}

@@ -1,0 +1,96 @@
+//! Learning-rate schedules — computed by the Rust coordinator and fed into
+//! the train-step graph as a scalar input (L3 owns scheduling; the HLO never
+//! bakes in a schedule).
+
+/// Schedule kind + hyperparameters.
+#[derive(Debug, Clone)]
+pub enum Schedule {
+    Constant { lr: f64 },
+    /// Linear warmup for `warmup` steps, then cosine decay to ~0 at `total`.
+    CosineWarmup { lr: f64, warmup: usize, total: usize },
+    /// Multiply by `gamma` every `every` steps.
+    StepDecay { lr: f64, gamma: f64, every: usize },
+}
+
+impl Schedule {
+    pub fn from_config(name: &str, lr: f64, warmup: usize, total: usize) -> Schedule {
+        match name {
+            "constant" => Schedule::Constant { lr },
+            "step" => Schedule::StepDecay { lr, gamma: 0.5, every: total.max(1) / 5 },
+            _ => Schedule::CosineWarmup { lr, warmup, total },
+        }
+    }
+
+    /// LR at 0-based step `t`.
+    pub fn at(&self, t: usize) -> f64 {
+        match *self {
+            Schedule::Constant { lr } => lr,
+            Schedule::CosineWarmup { lr, warmup, total } => {
+                if warmup > 0 && t < warmup {
+                    lr * (t + 1) as f64 / warmup as f64
+                } else {
+                    let span = total.saturating_sub(warmup).max(1) as f64;
+                    let prog = (t - warmup.min(t)) as f64 / span;
+                    0.5 * lr * (1.0 + (std::f64::consts::PI * prog.min(1.0)).cos())
+                }
+            }
+            Schedule::StepDecay { lr, gamma, every } => {
+                lr * gamma.powi((t / every.max(1)) as i32)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_flat() {
+        let s = Schedule::Constant { lr: 0.1 };
+        assert_eq!(s.at(0), 0.1);
+        assert_eq!(s.at(999), 0.1);
+    }
+
+    #[test]
+    fn cosine_warms_up_then_decays() {
+        let s = Schedule::CosineWarmup { lr: 1.0, warmup: 10, total: 110 };
+        assert!((s.at(0) - 0.1).abs() < 1e-9);
+        assert!((s.at(9) - 1.0).abs() < 1e-9);
+        assert!(s.at(10) > s.at(60));
+        assert!(s.at(60) > s.at(109));
+        assert!(s.at(109) < 0.01);
+    }
+
+    #[test]
+    fn cosine_no_warmup_starts_at_peak() {
+        let s = Schedule::CosineWarmup { lr: 0.5, warmup: 0, total: 100 };
+        assert!((s.at(0) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn step_decay_halves() {
+        let s = Schedule::StepDecay { lr: 0.8, gamma: 0.5, every: 10 };
+        assert_eq!(s.at(0), 0.8);
+        assert_eq!(s.at(10), 0.4);
+        assert_eq!(s.at(25), 0.2);
+    }
+
+    #[test]
+    fn from_config_dispatch() {
+        assert!(matches!(Schedule::from_config("cosine", 0.1, 5, 100),
+                         Schedule::CosineWarmup { .. }));
+        assert!(matches!(Schedule::from_config("constant", 0.1, 0, 100),
+                         Schedule::Constant { .. }));
+        assert!(matches!(Schedule::from_config("step", 0.1, 0, 100),
+                         Schedule::StepDecay { .. }));
+    }
+
+    #[test]
+    fn lr_never_negative() {
+        let s = Schedule::CosineWarmup { lr: 1.0, warmup: 0, total: 50 };
+        for t in 0..200 {
+            assert!(s.at(t) >= 0.0, "t={t}");
+        }
+    }
+}

@@ -1,0 +1,81 @@
+//! Minimal leveled logger writing to stderr, controlled by `TBN_LOG`
+//! (error|warn|info|debug; default info). No env_logger in the vendor set.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+pub const ERROR: u8 = 0;
+pub const WARN: u8 = 1;
+pub const INFO: u8 = 2;
+pub const DEBUG: u8 = 3;
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
+
+fn level() -> u8 {
+    let l = LEVEL.load(Ordering::Relaxed);
+    if l != u8::MAX {
+        return l;
+    }
+    let from_env = match std::env::var("TBN_LOG").as_deref() {
+        Ok("error") => ERROR,
+        Ok("warn") => WARN,
+        Ok("debug") => DEBUG,
+        _ => INFO,
+    };
+    LEVEL.store(from_env, Ordering::Relaxed);
+    from_env
+}
+
+pub fn set_level(l: u8) {
+    LEVEL.store(l, Ordering::Relaxed);
+}
+
+pub fn enabled(l: u8) -> bool {
+    l <= level()
+}
+
+pub fn log(l: u8, target: &str, msg: &str) {
+    if !enabled(l) {
+        return;
+    }
+    let t = SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default();
+    let name = ["ERROR", "WARN", "INFO", "DEBUG"][l as usize];
+    eprintln!("[{:>10}.{:03} {name:5} {target}] {msg}", t.as_secs(), t.subsec_millis());
+}
+
+#[macro_export]
+macro_rules! info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::INFO, $target, &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warn_ {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::WARN, $target, &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::DEBUG, $target, &format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(WARN);
+        assert!(enabled(ERROR));
+        assert!(enabled(WARN));
+        assert!(!enabled(INFO));
+        set_level(INFO);
+        assert!(enabled(INFO));
+        assert!(!enabled(DEBUG));
+    }
+}

@@ -1,0 +1,58 @@
+//! Hand-rolled substrates the offline vendor set forced us to build:
+//! JSON (parser + writer), a SplitMix64 RNG with Gaussian sampling, and a
+//! tiny leveled logger. No serde / rand / env_logger in the image.
+
+pub mod json;
+pub mod log;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;
+
+/// Format a byte count in human units (used by memory reports).
+pub fn human_bytes(b: f64) -> String {
+    if b >= 1e9 {
+        format!("{:.2}GB", b / 1e9)
+    } else if b >= 1e6 {
+        format!("{:.2}MB", b / 1e6)
+    } else if b >= 1e3 {
+        format!("{:.2}KB", b / 1e3)
+    } else {
+        format!("{b:.0}B")
+    }
+}
+
+/// Mean and (population) standard deviation of a slice.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let m = xs.iter().sum::<f64>() / xs.len() as f64;
+    let v = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64;
+    (m, v.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512.0), "512B");
+        assert_eq!(human_bytes(2048.0), "2.05KB");
+        assert_eq!(human_bytes(3.5e6), "3.50MB");
+        assert_eq!(human_bytes(1.2e9), "1.20GB");
+    }
+
+    #[test]
+    fn mean_std_basic() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((m - 2.5).abs() < 1e-12);
+        assert!((s - (1.25f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_std_empty() {
+        assert_eq!(mean_std(&[]), (0.0, 0.0));
+    }
+}

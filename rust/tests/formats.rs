@@ -1,0 +1,166 @@
+//! Format/contract tests: the real experiment config parses and is
+//! internally consistent with the Rust-side policy mirror; TBNZ files
+//! survive disk round-trips; run records round-trip.
+
+use tiledbits::config::Manifest;
+use tiledbits::coordinator::RunRecord;
+use tiledbits::tbn::{decide, Quant, TilingPolicy};
+use tiledbits::util::Json;
+
+const CONFIG: &str = "configs/experiments.json";
+
+#[test]
+fn experiments_config_parses() {
+    let j = Json::parse_file(CONFIG).expect("configs/experiments.json must parse");
+    let exps = j.get("experiments").and_then(Json::as_arr).expect("experiments array");
+    assert!(exps.len() >= 40, "expected a full experiment grid, got {}", exps.len());
+    let mut ids = std::collections::HashSet::new();
+    for e in exps {
+        let id = e.str_or("id", "");
+        assert!(!id.is_empty());
+        assert!(ids.insert(id.to_string()), "duplicate id {id}");
+        assert!(e.get("tables").is_some(), "{id}: unmapped to any table");
+        let tiling = e.get("tiling").expect("tiling");
+        let mode = tiling.str_or("mode", "");
+        assert!(["fp", "bwnn", "tbn"].contains(&mode), "{id}: bad mode {mode}");
+        if mode == "tbn" {
+            assert!(tiling.usize_or("p", 0) >= 2, "{id}: tbn needs p >= 2");
+        }
+    }
+}
+
+#[test]
+fn config_covers_every_table_and_figure() {
+    let j = Json::parse_file(CONFIG).unwrap();
+    let exps = j.get("experiments").and_then(Json::as_arr).unwrap();
+    let mut covered = std::collections::HashSet::new();
+    for e in exps {
+        for t in e.get("tables").and_then(Json::as_arr).unwrap_or(&[]) {
+            covered.insert(t.as_str().unwrap_or("").to_string());
+        }
+    }
+    // tables with trained experiments behind them (T2/T7/F2/F5 are analytic)
+    for t in ["T1", "T3", "T4", "T5", "T6", "F6", "F7", "F8"] {
+        assert!(covered.contains(t), "no experiment covers {t}");
+    }
+}
+
+#[test]
+fn manifest_matches_config_when_built() {
+    let Ok(manifest) = Manifest::load("artifacts") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let j = Json::parse_file(CONFIG).unwrap();
+    let exps = j.get("experiments").and_then(Json::as_arr).unwrap();
+    assert_eq!(manifest.experiments.len(), exps.len());
+    for e in &manifest.experiments {
+        // every graph file must exist
+        for (name, file) in &e.graph_files {
+            let path = format!("artifacts/{file}");
+            assert!(std::path::Path::new(&path).exists(), "{}: missing {name} ({path})", e.id);
+        }
+        // param table consistency
+        for p in &e.params {
+            if p.quant == "tiled" {
+                assert_eq!(p.p * p.q, p.n(), "{}: {}", e.id, p.name);
+                assert!(p.n_alphas == 1 || p.n_alphas == p.p);
+            }
+        }
+        // Rust policy mirror agrees with the Python-decided quant for
+        // weight params
+        for p in e.params.iter().filter(|p| p.role == "weight") {
+            let want = match p.quant.as_str() {
+                "tiled" => Quant::Tiled { p: e.tiling.p },
+                "bwnn" => Quant::Bwnn,
+                _ => Quant::Fp,
+            };
+            assert_eq!(decide(&e.tiling, p.n()), want,
+                       "{}: {} ({} elems)", e.id, p.name, p.n());
+        }
+        // infer params: A never ships; every tile has alphas
+        let names: Vec<&str> = e.infer_params.iter().map(|ip| ip.name.as_str()).collect();
+        assert!(!names.iter().any(|n| n.ends_with(".A")), "{}: A leaked", e.id);
+        for ip in &e.infer_params {
+            if ip.kind == "tile" {
+                let alpha_name = format!("{}.alphas", ip.source);
+                assert!(names.contains(&alpha_name.as_str()), "{}: {} missing alphas",
+                        e.id, ip.source);
+            }
+        }
+    }
+}
+
+#[test]
+fn policy_decisions_cover_config_lambdas() {
+    // every tbn config in the file produces at least one tiled decision on
+    // a layer the size of its model family's biggest layer
+    let j = Json::parse_file(CONFIG).unwrap();
+    for e in j.get("experiments").and_then(Json::as_arr).unwrap() {
+        let t = e.get("tiling").unwrap();
+        if t.str_or("mode", "") != "tbn" {
+            continue;
+        }
+        let policy = TilingPolicy::tbn(t.usize_or("p", 4), t.usize_or("lambda", 0));
+        // a comfortably-large layer must tile
+        let big = (policy.lambda.max(1)) * policy.p;
+        assert_eq!(decide(&policy, big * policy.p), Quant::Tiled { p: policy.p },
+                   "{}", e.str_or("id", "?"));
+    }
+}
+
+#[test]
+fn run_record_roundtrip() {
+    let rec = RunRecord {
+        id: "x".into(),
+        steps: 100,
+        loss: 0.5,
+        metric: 0.91,
+        class_iou: Some(0.4),
+        instance_iou: None,
+        bit_width: 0.26,
+        storage_bits: 1234,
+        total_params: 4000,
+        duration_s: 1.5,
+        forward_agreement: 0.99,
+        eval_curve: vec![(50, 0.7, 0.8), (100, 0.5, 0.91)],
+        train_curve: vec![(0, 2.3), (50, 1.0)],
+    };
+    let dir = std::env::temp_dir().join("tbn_fmt_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("x.json");
+    rec.save(path.to_str().unwrap()).unwrap();
+    let rt = RunRecord::load(path.to_str().unwrap()).unwrap();
+    assert_eq!(rt.id, "x");
+    assert_eq!(rt.steps, 100);
+    assert!((rt.metric - 0.91).abs() < 1e-9);
+    assert_eq!(rt.class_iou, Some(0.4));
+    assert_eq!(rt.instance_iou, None);
+    assert_eq!(rt.eval_curve.len(), 2);
+    assert_eq!(rt.train_curve[1], (50, 1.0));
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn tbnz_file_roundtrip_through_disk() {
+    use tiledbits::tbn::{tile_from_weights, LayerRecord, TbnzModel, WeightPayload};
+    use tiledbits::util::Rng;
+    let mut rng = Rng::new(77);
+    let w = rng.normal_vec(256, 1.0);
+    let model = TbnzModel {
+        layers: vec![LayerRecord {
+            name: "only".into(),
+            shape: vec![16, 16],
+            payload: WeightPayload::Tiled {
+                p: 4,
+                tile: tile_from_weights(&w, 4),
+                alphas: vec![0.1, 0.2, 0.3, 0.4],
+            },
+        }],
+    };
+    let path = std::env::temp_dir().join("fmt_roundtrip.tbnz");
+    let path = path.to_str().unwrap();
+    model.save(path).unwrap();
+    assert_eq!(TbnzModel::load(path).unwrap(), model);
+    let _ = std::fs::remove_file(path);
+}

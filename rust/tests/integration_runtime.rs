@@ -1,0 +1,99 @@
+//! Runtime integration: load real AOT artifacts via PJRT and exercise every
+//! graph kind (init / train_step / eval_step / forward) of the micro MLP
+//! experiments.  Skips (with a notice) when `make artifacts` hasn't run.
+
+use tiledbits::config::Manifest;
+use tiledbits::runtime::{self, Runtime};
+use tiledbits::tensor::Tensor;
+use tiledbits::train::{Trainer, TrainOptions};
+
+fn setup() -> Option<(Runtime, Manifest)> {
+    let manifest = match Manifest::load("artifacts") {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping runtime tests: {e}");
+            return None;
+        }
+    };
+    let rt = Runtime::new("artifacts").expect("PJRT CPU client");
+    Some((rt, manifest))
+}
+
+#[test]
+fn init_is_deterministic_and_shaped() {
+    let Some((rt, manifest)) = setup() else { return };
+    let exp = manifest.by_id("mlp_micro_tbn4").expect("mlp_micro_tbn4");
+    let trainer = Trainer::new(&rt, exp).unwrap();
+    let a = trainer.init_params(7).unwrap();
+    let b = trainer.init_params(7).unwrap();
+    let c = trainer.init_params(8).unwrap();
+    assert_eq!(a.len(), exp.n_params());
+    for ((la, lb), info) in a.iter().zip(&b).zip(&exp.params) {
+        let ta = runtime::tensor_from_literal(la).unwrap();
+        let tb = runtime::tensor_from_literal(lb).unwrap();
+        assert_eq!(ta.shape, info.shape, "{}", info.name);
+        assert_eq!(ta.data, tb.data, "{} not deterministic", info.name);
+    }
+    let t0a = runtime::tensor_from_literal(&a[0]).unwrap();
+    let t0c = runtime::tensor_from_literal(&c[0]).unwrap();
+    assert_ne!(t0a.data, t0c.data, "seed must change init");
+}
+
+#[test]
+fn train_step_decreases_loss_on_fixed_batch() {
+    let Some((rt, manifest)) = setup() else { return };
+    let exp = manifest.by_id("mlp_micro_tbn4").unwrap();
+    let trainer = Trainer::new(&rt, exp).unwrap();
+    let (result, _) = trainer
+        .run(&TrainOptions { steps: Some(30), eval_every: 0, log_every: 1000, seed: Some(3) })
+        .unwrap();
+    let first = result.train_history.first().unwrap().loss;
+    let last = result.train_history.last().unwrap().loss;
+    assert!(last < first, "loss {first} -> {last} did not decrease");
+}
+
+#[test]
+fn eval_metric_consistent_with_task() {
+    let Some((rt, manifest)) = setup() else { return };
+    for id in ["mlp_micro_fp", "mlp_micro_bwnn", "mlp_micro_tbn4"] {
+        let exp = manifest.by_id(id).unwrap();
+        let trainer = Trainer::new(&rt, exp).unwrap();
+        let params = trainer.init_params(1).unwrap();
+        let point = trainer.evaluate(&params, 0).unwrap();
+        // untrained model: accuracy near chance, loss near ln(10)
+        assert!(point.metric >= 0.0 && point.metric <= 1.0, "{id}: {point:?}");
+        assert!(point.loss > 1.0 && point.loss < 6.0, "{id}: loss {}", point.loss);
+    }
+}
+
+#[test]
+fn forward_graph_runs_from_exported_params() {
+    let Some((rt, manifest)) = setup() else { return };
+    let exp = manifest.by_id("mlp_micro_tbn4").unwrap();
+    let trainer = Trainer::new(&rt, exp).unwrap();
+    let (_, model) = trainer
+        .run(&TrainOptions { steps: Some(10), eval_every: 0, log_every: 1000, seed: Some(1) })
+        .unwrap();
+    let exe = rt.load(exp.graph_file("forward").unwrap()).unwrap();
+    let batch = exp.io.serve_batch;
+    let idxs: Vec<usize> = (0..batch).collect();
+    let (x, _, _) = trainer.test_ds.gather(&idxs);
+    let mut x_shape = vec![batch];
+    x_shape.extend_from_slice(&exp.io.x);
+    let mut inputs = vec![runtime::literal_f32(&Tensor::new(x_shape, x)).unwrap()];
+    inputs.extend(tiledbits::train::export::forward_inputs(exp, &model).unwrap());
+    let out = exe.run(&inputs).unwrap();
+    let logits = runtime::tensor_from_literal(&out[0]).unwrap();
+    assert_eq!(logits.shape, vec![batch, exp.dataset_classes]);
+    assert!(logits.data.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn compile_cache_reuses_executables() {
+    let Some((rt, manifest)) = setup() else { return };
+    let exp = manifest.by_id("mlp_micro_fp").unwrap();
+    let file = exp.graph_file("init").unwrap();
+    let a = rt.load(file).unwrap();
+    let b = rt.load(file).unwrap();
+    assert!(std::rc::Rc::ptr_eq(&a, &b), "second load must hit the cache");
+}

@@ -1,0 +1,157 @@
+//! Native parity: the Rust-side tile/alpha export and the Algorithm 1 engine
+//! must agree with the AOT graphs end to end.
+//!
+//! Chain checked (on the micro MLP, real artifacts):
+//!   training params --eval_step graph-->         predictions A
+//!   training params --Rust export--> forward graph (Pallas tiled kernel)
+//!                                                 predictions B
+//!   training params --Rust export--> TBNZ --> native MlpEngine
+//!                                                 predictions C
+//! A == B == C (up to f32 tie-breaking on a tiny fraction of samples).
+
+use tiledbits::config::Manifest;
+use tiledbits::nn::{MlpEngine, Nonlin};
+use tiledbits::runtime::{self, Runtime};
+use tiledbits::tensor::Tensor;
+use tiledbits::train::{export, Trainer, TrainOptions};
+
+fn trained(id: &str, steps: usize)
+           -> Option<(Runtime, Manifest, String)> {
+    let manifest = match Manifest::load("artifacts") {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping parity tests: {e}");
+            return None;
+        }
+    };
+    let rt = Runtime::new("artifacts").unwrap();
+    let _ = steps;
+    Some((rt, manifest, id.to_string()))
+}
+
+#[test]
+fn eval_forward_native_predictions_agree() {
+    let Some((rt, manifest, id)) = trained("mlp_micro_tbn4", 40) else { return };
+    let exp = manifest.by_id(&id).unwrap();
+    let trainer = Trainer::new(&rt, exp).unwrap();
+    let (_, model) = trainer
+        .run(&TrainOptions { steps: Some(40), eval_every: 0, log_every: 1000, seed: Some(5) })
+        .unwrap();
+
+    let batch = exp.io.serve_batch;
+    let idxs: Vec<usize> = (0..batch).collect();
+    let (x, _, _) = trainer.test_ds.gather(&idxs);
+
+    // A: eval graph predictions (training-path math, STE from W)
+    let eval_exe = rt.load(exp.graph_file("eval_step").unwrap()).unwrap();
+    let eb = exp.io.eval_batch;
+    let eidx: Vec<usize> = (0..eb).collect();
+    let (ex, ey, _) = trainer.test_ds.gather(&eidx);
+    let mut ex_shape = vec![eb];
+    ex_shape.extend_from_slice(&exp.io.x);
+    let mut inputs: Vec<xla::Literal> = model
+        .params
+        .iter()
+        .map(|t| runtime::literal_f32(t).unwrap())
+        .collect();
+    inputs.push(runtime::literal_f32(&Tensor::new(ex_shape, ex)).unwrap());
+    inputs.push(runtime::literal_i32(&[eb], &ey).unwrap());
+    let eval_out = eval_exe.run(&inputs).unwrap();
+    let preds_a: Vec<i32> = runtime::i32_from_literal(&eval_out[2]).unwrap()[..batch].to_vec();
+
+    // B: forward graph (Pallas tiled kernel) from Rust-exported tiles
+    let fwd_exe = rt.load(exp.graph_file("forward").unwrap()).unwrap();
+    let mut x_shape = vec![batch];
+    x_shape.extend_from_slice(&exp.io.x);
+    let mut finputs = vec![runtime::literal_f32(&Tensor::new(x_shape, x.clone())).unwrap()];
+    finputs.extend(export::forward_inputs(exp, &model).unwrap());
+    let fwd_out = fwd_exe.run(&finputs).unwrap();
+    let logits = runtime::tensor_from_literal(&fwd_out[0]).unwrap();
+    let preds_b: Vec<i32> = logits.argmax_last().iter().map(|&i| i as i32).collect();
+
+    // C: native Algorithm 1 engine over the TBNZ export
+    let tbnz = export::to_tbnz(exp, &model).unwrap();
+    let engine = MlpEngine::new(tbnz, Nonlin::Relu).unwrap();
+    let xs: Vec<Vec<f32>> = (0..batch)
+        .map(|i| x[i * trainer.test_ds.x_elems..(i + 1) * trainer.test_ds.x_elems].to_vec())
+        .collect();
+    let preds_c: Vec<i32> = engine.classify_batch(&xs).iter().map(|&i| i as i32).collect();
+
+    let agree = |u: &[i32], v: &[i32]| -> f64 {
+        u.iter().zip(v).filter(|(a, b)| a == b).count() as f64 / u.len() as f64
+    };
+    let ab = agree(&preds_a, &preds_b);
+    let bc = agree(&preds_b, &preds_c);
+    let ac = agree(&preds_a, &preds_c);
+    assert!(ab >= 0.95, "eval vs forward agreement {ab}");
+    assert!(bc >= 0.95, "forward vs native agreement {bc}");
+    assert!(ac >= 0.95, "eval vs native agreement {ac}");
+}
+
+#[test]
+fn native_logits_match_forward_graph_numerically() {
+    let Some((rt, manifest, id)) = trained("mlp_micro_tbn4", 15) else { return };
+    let exp = manifest.by_id(&id).unwrap();
+    let trainer = Trainer::new(&rt, exp).unwrap();
+    let (_, model) = trainer
+        .run(&TrainOptions { steps: Some(15), eval_every: 0, log_every: 1000, seed: Some(9) })
+        .unwrap();
+
+    let batch = exp.io.serve_batch;
+    let idxs: Vec<usize> = (0..batch).collect();
+    let (x, _, _) = trainer.test_ds.gather(&idxs);
+
+    let fwd_exe = rt.load(exp.graph_file("forward").unwrap()).unwrap();
+    let mut x_shape = vec![batch];
+    x_shape.extend_from_slice(&exp.io.x);
+    let mut finputs = vec![runtime::literal_f32(&Tensor::new(x_shape, x.clone())).unwrap()];
+    finputs.extend(export::forward_inputs(exp, &model).unwrap());
+    let logits = runtime::tensor_from_literal(&fwd_exe.run(&finputs).unwrap()[0]).unwrap();
+
+    let tbnz = export::to_tbnz(exp, &model).unwrap();
+    let engine = MlpEngine::new(tbnz, Nonlin::Relu).unwrap();
+    let d = trainer.test_ds.x_elems;
+    let classes = exp.dataset_classes;
+    let mut max_err = 0.0f32;
+    for i in 0..batch {
+        let y = engine.forward(&x[i * d..(i + 1) * d]);
+        for c in 0..classes {
+            let err = (y[c] - logits.data[i * classes + c]).abs();
+            let scale = logits.data[i * classes + c].abs().max(1.0);
+            max_err = max_err.max(err / scale);
+        }
+    }
+    assert!(max_err < 5e-3, "relative logit error {max_err}");
+}
+
+#[test]
+fn bwnn_native_parity() {
+    let Some((rt, manifest, id)) = trained("mlp_micro_bwnn", 15) else { return };
+    let exp = manifest.by_id(&id).unwrap();
+    let trainer = Trainer::new(&rt, exp).unwrap();
+    let (_, model) = trainer
+        .run(&TrainOptions { steps: Some(15), eval_every: 0, log_every: 1000, seed: Some(2) })
+        .unwrap();
+    let batch = exp.io.serve_batch;
+    let idxs: Vec<usize> = (0..batch).collect();
+    let (x, _, _) = trainer.test_ds.gather(&idxs);
+
+    let fwd_exe = rt.load(exp.graph_file("forward").unwrap()).unwrap();
+    let mut x_shape = vec![batch];
+    x_shape.extend_from_slice(&exp.io.x);
+    let mut finputs = vec![runtime::literal_f32(&Tensor::new(x_shape, x.clone())).unwrap()];
+    finputs.extend(export::forward_inputs(exp, &model).unwrap());
+    let logits = runtime::tensor_from_literal(&fwd_exe.run(&finputs).unwrap()[0]).unwrap();
+
+    let tbnz = export::to_tbnz(exp, &model).unwrap();
+    let engine = MlpEngine::new(tbnz, Nonlin::Relu).unwrap();
+    let d = trainer.test_ds.x_elems;
+    for i in 0..batch.min(8) {
+        let y = engine.forward(&x[i * d..(i + 1) * d]);
+        for c in 0..exp.dataset_classes {
+            let want = logits.data[i * exp.dataset_classes + c];
+            assert!((y[c] - want).abs() / want.abs().max(1.0) < 5e-3,
+                    "sample {i} class {c}: {} vs {want}", y[c]);
+        }
+    }
+}

@@ -1,0 +1,248 @@
+//! Property-based tests (proptest is not vendored; `prop` is a minimal
+//! fixed-seed generator/shrink-free harness over the crate's own RNG).
+//!
+//! Invariants covered: pack/unpack identities, tile construct/expand laws,
+//! alpha math, compression monotonicity, TBNZ round-trips, JSON round-trips,
+//! batcher conservation, Algorithm 1 vs dense equivalence.
+
+use tiledbits::tbn::{alphas_from, expand_tile, tile_from_weights, AlphaMode,
+                     LayerRecord, TbnzModel, TilingPolicy, WeightPayload};
+use tiledbits::tbn::compress::accounting;
+use tiledbits::arch;
+use tiledbits::nn;
+use tiledbits::tensor::BitVec;
+use tiledbits::util::{Json, Rng};
+
+/// Run `f` over `cases` random cases with a per-case RNG; reports the failing
+/// case seed on panic.
+fn prop<F: Fn(&mut Rng)>(name: &str, cases: usize, f: F) {
+    for case in 0..cases {
+        let seed = 0xBEEF ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng);
+        }));
+        if let Err(e) = result {
+            eprintln!("property {name} failed at case {case} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+fn rand_pq(rng: &mut Rng) -> (usize, usize) {
+    let p = [1, 2, 4, 8, 16][rng.below(5)];
+    let q = 1 + rng.below(200);
+    (p, q)
+}
+
+#[test]
+fn prop_bitvec_pack_roundtrip() {
+    prop("bitvec_roundtrip", 50, |rng| {
+        let len = 1 + rng.below(500);
+        let xs = rng.normal_vec(len, 1.0);
+        let v = BitVec::from_signs(&xs);
+        let v2 = BitVec::from_bytes(&v.to_bytes(), len);
+        assert_eq!(v, v2);
+        // unpacked signs match the sign convention
+        for (i, &x) in xs.iter().enumerate() {
+            assert_eq!(v.get(i) > 0.0, x > 0.0);
+        }
+    });
+}
+
+#[test]
+fn prop_expand_has_p_replicated_blocks() {
+    prop("expand_blocks", 40, |rng| {
+        let (p, q) = rand_pq(rng);
+        let w = rng.normal_vec(p * q, 1.0);
+        let t = tile_from_weights(&w, p);
+        let out = expand_tile(&t, &[1.0], p * q);
+        for blk in 1..p {
+            assert_eq!(&out[..q], &out[blk * q..(blk + 1) * q]);
+        }
+    });
+}
+
+#[test]
+fn prop_expand_scales_by_alpha() {
+    prop("expand_alpha", 40, |rng| {
+        let (p, q) = rand_pq(rng);
+        let w = rng.normal_vec(p * q, 1.0);
+        let t = tile_from_weights(&w, p);
+        let alphas = alphas_from(&w, p, AlphaMode::PerTile);
+        let out = expand_tile(&t, &alphas, p * q);
+        for (k, &v) in out.iter().enumerate() {
+            let a = alphas[k / q];
+            assert!((v.abs() - a).abs() < 1e-6, "element {k}");
+        }
+    });
+}
+
+#[test]
+fn prop_alpha_single_is_mean_of_per_tile() {
+    // with equal-size tiles, mean of per-tile alphas == single alpha
+    prop("alpha_mean", 40, |rng| {
+        let (p, q) = rand_pq(rng);
+        let a = rng.normal_vec(p * q, 2.0);
+        let single = alphas_from(&a, p, AlphaMode::Single)[0];
+        let per = alphas_from(&a, p, AlphaMode::PerTile);
+        let mean: f32 = per.iter().sum::<f32>() / p as f32;
+        assert!((single - mean).abs() < 1e-4, "{single} vs {mean}");
+    });
+}
+
+#[test]
+fn prop_compression_bits_monotone_in_p() {
+    // on a fixed arch, total stored bits never increase as p doubles
+    let archs = [arch::vit_cifar(), arch::resnet18_cifar()];
+    for a in &archs {
+        let mut prev = f64::INFINITY;
+        for p in [2usize, 4, 8, 16] {
+            let acc = accounting(a, &TilingPolicy::tbn(p, 64_000));
+            assert!(acc.total_bits <= prev, "{} p={p}", a.name);
+            prev = acc.total_bits;
+        }
+    }
+}
+
+#[test]
+fn prop_tbnz_roundtrip_random_models() {
+    prop("tbnz_roundtrip", 25, |rng| {
+        let n_layers = 1 + rng.below(5);
+        let mut layers = Vec::new();
+        for i in 0..n_layers {
+            let m = 1 + rng.below(12);
+            let n = 1 + rng.below(12);
+            let w = rng.normal_vec(m * n, 1.0);
+            let payload = match rng.below(3) {
+                0 => WeightPayload::Fp(w),
+                1 => WeightPayload::Bwnn {
+                    bits: BitVec::from_signs(&w),
+                    alpha: rng.next_f32() + 0.01,
+                },
+                _ => {
+                    let total = m * n;
+                    let mut p = [1, 2, 4][rng.below(3)];
+                    while total % p != 0 {
+                        p /= 2;
+                    }
+                    WeightPayload::Tiled {
+                        p,
+                        tile: tile_from_weights(&w, p),
+                        alphas: alphas_from(&w, p, AlphaMode::PerTile),
+                    }
+                }
+            };
+            layers.push(LayerRecord { name: format!("l{i}"), shape: vec![m, n], payload });
+        }
+        let model = TbnzModel { layers };
+        let rt = TbnzModel::from_bytes(&model.to_bytes()).unwrap();
+        assert_eq!(model, rt);
+    });
+}
+
+#[test]
+fn prop_algorithm1_equals_dense_expansion() {
+    prop("alg1_dense", 30, |rng| {
+        let m = 1 + rng.below(24);
+        let n = 1 + rng.below(24);
+        let total = m * n;
+        let mut p = [1, 2, 4, 8][rng.below(4)];
+        while total % p != 0 {
+            p /= 2;
+        }
+        let w = rng.normal_vec(total, 1.0);
+        let tile = tile_from_weights(&w, p);
+        let alphas = alphas_from(&w, p, AlphaMode::PerTile);
+        let x = rng.normal_vec(n, 1.0);
+        let dense = expand_tile(&tile, &alphas, total);
+        let want = nn::fc_fp_forward(&dense, &x, m, false);
+        let slow = nn::fc_tiled_forward(&tile, &alphas, &x, m, false);
+        let fast = nn::fc_tiled_forward_fast(&tile, &alphas, &x, m, false);
+        for i in 0..m {
+            assert!((slow[i] - want[i]).abs() < 1e-2, "slow row {i}");
+            assert!((fast[i] - want[i]).abs() < 1e-2, "fast row {i}");
+        }
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn rand_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.next_f64() < 0.5),
+            2 => Json::Num((rng.next_f64() * 2000.0 - 1000.0).round() / 8.0),
+            3 => Json::Str(format!("s{}-\"quoted\"\n", rng.below(1000))),
+            4 => Json::Arr((0..rng.below(5)).map(|_| rand_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), rand_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    prop("json_roundtrip", 60, |rng| {
+        let j = rand_json(rng, 3);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(j, parsed);
+        let pretty = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(j, pretty);
+    });
+}
+
+#[test]
+fn prop_storage_bits_never_exceed_fp() {
+    prop("storage_bound", 30, |rng| {
+        let m = 2 + rng.below(20);
+        let n = 2 + rng.below(20);
+        let total = m * n;
+        let mut p = [2, 4][rng.below(2)];
+        while total % p != 0 {
+            p -= 1;
+            if p == 1 {
+                break;
+            }
+        }
+        let w = rng.normal_vec(total, 1.0);
+        let rec = if p > 1 {
+            LayerRecord {
+                name: "w".into(),
+                shape: vec![m, n],
+                payload: WeightPayload::Tiled {
+                    p,
+                    tile: tile_from_weights(&w, p),
+                    alphas: alphas_from(&w, p, AlphaMode::PerTile),
+                },
+            }
+        } else {
+            LayerRecord {
+                name: "w".into(),
+                shape: vec![m, n],
+                payload: WeightPayload::Bwnn { bits: BitVec::from_signs(&w), alpha: 1.0 },
+            }
+        };
+        assert!(rec.storage_bits() < 32 * total);
+    });
+}
+
+#[test]
+fn prop_batcher_conserves_requests() {
+    use tiledbits::data::BatchIter;
+    prop("batcher", 30, |rng| {
+        let n = 1 + rng.below(300);
+        let batch = 1 + rng.below(40);
+        let it = BatchIter::new(n, batch, rng);
+        let mut seen = std::collections::HashSet::new();
+        let mut count = 0;
+        for b in it {
+            assert_eq!(b.len(), batch);
+            for i in b {
+                assert!(i < n);
+                assert!(seen.insert(i), "duplicate {i}");
+                count += 1;
+            }
+        }
+        assert_eq!(count, (n / batch) * batch);
+    });
+}

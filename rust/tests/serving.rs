@@ -1,0 +1,97 @@
+//! Serving-stack integration: the native sub-bit engine behind the dynamic
+//! batcher, fed from a real trained + exported model.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use tiledbits::config::Manifest;
+use tiledbits::nn::{MlpEngine, Nonlin};
+use tiledbits::runtime::Runtime;
+use tiledbits::serve::{BatchPolicy, Server};
+use tiledbits::train::{export, metrics, Trainer, TrainOptions};
+
+fn trained_engine() -> Option<(MlpEngine, Vec<Vec<f32>>, Vec<i32>)> {
+    let manifest = match Manifest::load("artifacts") {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping serving tests: {e}");
+            return None;
+        }
+    };
+    let rt = Runtime::new("artifacts").unwrap();
+    let exp = manifest.by_id("mlp_micro_tbn4").unwrap();
+    let trainer = Trainer::new(&rt, exp).unwrap();
+    let (_, model) = trainer
+        .run(&TrainOptions { steps: Some(120), eval_every: 0, log_every: 10_000, seed: Some(4) })
+        .unwrap();
+    let tbnz = export::to_tbnz(exp, &model).unwrap();
+    let engine = MlpEngine::new(tbnz, Nonlin::Relu).unwrap();
+    let d = trainer.test_ds.x_elems;
+    let n = 128.min(trainer.test_ds.n);
+    let idxs: Vec<usize> = (0..n).collect();
+    let (x, y, _) = trainer.test_ds.gather(&idxs);
+    let xs = (0..n).map(|i| x[i * d..(i + 1) * d].to_vec()).collect();
+    Some((engine, xs, y))
+}
+
+#[test]
+fn served_accuracy_matches_direct_inference() {
+    let Some((engine, xs, labels)) = trained_engine() else { return };
+    let direct: Vec<i32> = engine.classify_batch(&xs).iter().map(|&i| i as i32).collect();
+    let direct_acc = metrics::accuracy(&direct, &labels);
+    assert!(direct_acc > 0.4, "trained TBN should beat chance, got {direct_acc}");
+
+    let server = Arc::new(Server::start(engine, BatchPolicy {
+        max_batch: 16,
+        window: Duration::from_micros(300),
+    }));
+    // concurrent clients
+    let mut handles = Vec::new();
+    for t in 0..4 {
+        let s = server.clone();
+        let xs = xs.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut preds = Vec::new();
+            for i in (t..xs.len()).step_by(4) {
+                let r = s.infer(xs[i].clone()).unwrap();
+                let arg = r.y.iter().enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(k, _)| k as i32).unwrap();
+                preds.push((i, arg));
+            }
+            preds
+        }));
+    }
+    let mut served = vec![0i32; xs.len()];
+    let mut count = 0;
+    for h in handles {
+        for (i, p) in h.join().unwrap() {
+            served[i] = p;
+            count += 1;
+        }
+    }
+    assert_eq!(count, xs.len(), "no request may be dropped");
+    assert_eq!(served, direct, "served predictions must equal direct inference");
+
+    let stats = server.stats();
+    assert_eq!(stats.served, xs.len());
+    assert!(stats.mean_batch() >= 1.0);
+    assert!(stats.mean_latency_us() > 0.0);
+}
+
+#[test]
+fn throughput_improves_with_batching_pressure() {
+    let Some((engine, xs, _)) = trained_engine() else { return };
+    let server = Arc::new(Server::start(engine, BatchPolicy {
+        max_batch: 32,
+        window: Duration::from_micros(500),
+    }));
+    // flood the queue, then drain
+    let rxs: Vec<_> = xs.iter().map(|x| server.submit(x.clone()).unwrap()).collect();
+    let mut max_batch_seen = 0;
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        max_batch_seen = max_batch_seen.max(resp.batch_size);
+    }
+    assert!(max_batch_seen >= 2, "burst traffic should form batches, saw {max_batch_seen}");
+}

@@ -1,0 +1,56 @@
+#!/usr/bin/env python3
+"""Recompute runs/<id>.json bit_width under the weight-only convention.
+
+The bit-width column is deterministic given the manifest's parameter table
+(independent of training), so records written by an older binary can be
+patched in place: tiled -> q + 32*n_alphas bits; bwnn -> n + 32; fp -> 32n,
+summed over role=="weight" parameters only.
+"""
+
+import json
+import os
+import sys
+
+
+def weight_bits(param: dict) -> tuple:
+    import math
+    n = math.prod(param["shape"])
+    q = param.get("q", 0)
+    if param["quant"] == "tiled":
+        return q + 32 * param.get("n_alphas", 1), n
+    if param["quant"] == "bwnn":
+        return n + 32, n
+    return 32 * n, n
+
+
+def main(artifacts="artifacts", runs="runs"):
+    with open(os.path.join(artifacts, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_id = {e["id"]: e for e in manifest["experiments"]}
+    patched = 0
+    for fname in os.listdir(runs):
+        if not fname.endswith(".json"):
+            continue
+        exp_id = fname[:-5]
+        if exp_id not in by_id:
+            continue
+        path = os.path.join(runs, fname)
+        with open(path) as f:
+            rec = json.load(f)
+        bits = 0
+        params = 0
+        for p in by_id[exp_id]["params"]:
+            if p["role"] != "weight":
+                continue
+            b, n = weight_bits(p)
+            bits += b
+            params += n
+        rec["bit_width"] = bits / max(params, 1)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        patched += 1
+    print(f"patched {patched} run records")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])
