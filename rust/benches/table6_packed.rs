@@ -1,0 +1,99 @@
+//! Table 6 companion: the bit-packed XNOR-popcount fast path vs the f32
+//! reference engine on the deployment micro MLP (256 -> 128 -> 10, the
+//! Table 6 model shape), plus the Table 7-style weight-residency numbers for
+//! both paths.
+//!
+//! Artifact-free: models are built from a seeded RNG exactly like the engine
+//! unit tests, so this bench runs on a bare checkout
+//! (`cargo bench --bench table6_packed`).
+
+use tiledbits::bench_util::{bench, header};
+use tiledbits::nn::{EnginePath, MlpEngine, Nonlin};
+use tiledbits::tbn::{alphas_from, tile_from_weights, AlphaMode, LayerRecord,
+                     TbnzModel, WeightPayload};
+use tiledbits::tensor::BitVec;
+use tiledbits::util::Rng;
+
+/// The paper's deployment MLP: 256 -> 128 tiled at p, 128 -> 10 stored 1-bit.
+fn micro_model(p: usize) -> TbnzModel {
+    let mut r = Rng::new(42);
+    let w1: Vec<f32> = r.normal_vec(128 * 256, 1.0);
+    let w2: Vec<f32> = r.normal_vec(10 * 128, 1.0);
+    TbnzModel {
+        layers: vec![
+            LayerRecord {
+                name: "fc0".into(),
+                shape: vec![128, 256],
+                payload: WeightPayload::Tiled {
+                    p,
+                    tile: tile_from_weights(&w1, p),
+                    alphas: alphas_from(&w1, p, AlphaMode::PerTile),
+                },
+            },
+            LayerRecord {
+                name: "head".into(),
+                shape: vec![10, 128],
+                payload: WeightPayload::Bwnn {
+                    bits: BitVec::from_signs(&w2),
+                    alpha: w2.iter().map(|x| x.abs()).sum::<f32>() / w2.len() as f32,
+                },
+            },
+        ],
+    }
+}
+
+fn main() {
+    header("Table 6 companion: packed XNOR path vs f32 reference (micro MLP)");
+
+    let p = 4usize;
+    let model = micro_model(p);
+    let reference =
+        MlpEngine::with_path(model.clone(), Nonlin::Relu, EnginePath::Reference).unwrap();
+    let packed = MlpEngine::with_path(model, Nonlin::Relu, EnginePath::Packed).unwrap();
+
+    let mut r = Rng::new(7);
+    let x = r.normal_vec(256, 1.0);
+    let batch: Vec<Vec<f32>> = (0..32).map(|_| r.normal_vec(256, 1.0)).collect();
+
+    // single-sample latency
+    let r_ref = bench("reference forward (1 sample)", 20, 200, || {
+        std::hint::black_box(reference.forward(&x));
+    });
+    let r_refq = bench("reference quantized oracle (1 sample)", 20, 200, || {
+        std::hint::black_box(reference.forward_quantized(&x));
+    });
+    let r_pkd = bench("packed xnor forward (1 sample)", 20, 200, || {
+        std::hint::black_box(packed.forward(&x));
+    });
+
+    // batched throughput (the serving path)
+    let b_ref = bench("reference forward_batch (32)", 5, 60, || {
+        std::hint::black_box(reference.forward_batch(&batch));
+    });
+    let b_pkd = bench("packed forward_batch (32)", 5, 60, || {
+        std::hint::black_box(packed.forward_batch(&batch));
+    });
+
+    for r in [&r_ref, &r_refq, &r_pkd, &b_ref, &b_pkd] {
+        println!("{}", r.report());
+    }
+
+    println!("\n-- throughput (samples/s) --");
+    println!("reference single: {:>12.0}", r_ref.per_sec());
+    println!("packed single:    {:>12.0}  ({:.2}x vs reference quantized oracle)",
+             r_pkd.per_sec(), r_pkd.per_sec() / r_refq.per_sec());
+    println!("reference batch:  {:>12.0}", b_ref.throughput(batch.len()));
+    println!("packed batch:     {:>12.0}", b_pkd.throughput(batch.len()));
+
+    println!("\n-- Table 6/7-style memory (bytes) --");
+    println!("{:28} {:>12} {:>12} {:>12}", "engine", "resident W", "peak mem",
+             "storage");
+    for (name, e) in [("reference (sub-bit tiles)", &reference),
+                      ("packed (1-bit rows)", &packed)] {
+        println!("{:28} {:>12} {:>12} {:>12}", name, e.resident_weight_bytes(),
+                 e.peak_memory_bytes(), e.storage_bytes());
+    }
+    println!("\nnote: the packed path trades tile-level storage for 1 bit/weight");
+    println!("resident rows so hidden layers run as pure XNOR+popcount; storage");
+    println!("on disk (TBNZ) is unchanged.");
+}

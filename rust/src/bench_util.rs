@@ -21,6 +21,12 @@ impl BenchResult {
         1.0 / self.mean_s.max(1e-12)
     }
 
+    /// Items per second when each iteration processes `items` samples
+    /// (batched-throughput reporting for the packed-path benches).
+    pub fn throughput(&self, items: usize) -> f64 {
+        items as f64 * self.per_sec()
+    }
+
     pub fn report(&self) -> String {
         format!("{:40} {:>12} {:>12} {:>12}  ({} iters)",
                 self.name,
@@ -80,10 +86,17 @@ pub fn bench_steps(default: usize) -> usize {
         .unwrap_or(default)
 }
 
-/// Shared bench entry boilerplate: artifacts + runs dirs.
+/// Shared bench entry boilerplate: artifacts + runs dirs. Defaults resolve
+/// upwards (benches run with `rust/` as cwd; assets live at the repo root).
 pub fn bench_dirs() -> (String, String) {
-    let artifacts = std::env::var("TBN_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-    let runs = std::env::var("TBN_RUNS").unwrap_or_else(|_| "runs".into());
+    let artifacts = std::env::var("TBN_ARTIFACTS")
+        .ok()
+        .or_else(|| crate::util::locate_upwards("artifacts"))
+        .unwrap_or_else(|| "artifacts".into());
+    let runs = std::env::var("TBN_RUNS")
+        .ok()
+        .or_else(|| crate::util::locate_upwards("runs"))
+        .unwrap_or_else(|| "runs".into());
     (artifacts, runs)
 }
 
@@ -113,5 +126,18 @@ mod tests {
     fn bench_steps_default() {
         std::env::remove_var("TBN_BENCH_STEPS");
         assert_eq!(bench_steps(60), 60);
+    }
+
+    #[test]
+    fn throughput_scales_per_sec() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_s: 0.5,
+            std_s: 0.0,
+            min_s: 0.5,
+        };
+        assert!((r.per_sec() - 2.0).abs() < 1e-9);
+        assert!((r.throughput(32) - 64.0).abs() < 1e-6);
     }
 }

@@ -84,6 +84,8 @@ OPTIONS:
   --eval-every <n>          evaluation period             [default: 100]
   --seed <n>                override the experiment seed
   --out <path>              output path (export)
+  --engine <path>           serve engine: packed|reference [default: packed]
+  --workers <n>             serve worker threads          [default: 2]
   --quiet                   errors only
 ";
 

@@ -10,12 +10,37 @@
 //!   `python/compile/aot.py` into `artifacts/`.
 //! * **Layer 3 (this crate)** — everything that runs: the PJRT runtime, the
 //!   training coordinator, the native sub-bit inference engine (the paper's
-//!   Algorithm 1), the TBNZ model format, dataset substrates, the serving
-//!   stack, and the benchmark harness that regenerates every table and
-//!   figure in the paper.
+//!   Algorithm 1 plus the bit-packed XNOR-popcount fast path), the TBNZ
+//!   model format, dataset substrates, the serving stack, and the benchmark
+//!   harness that regenerates every table and figure in the paper.
 //!
 //! Python never runs on the request path: after `make artifacts` the `tbn`
 //! binary is self-contained.
+//!
+//! ## Inference paths
+//!
+//! `nn::MlpEngine` serves a TBNZ model through one of two implementations,
+//! selected with `nn::EnginePath`:
+//!
+//! * `Reference` — f32 Algorithm 1 (tile reuse, never expands weights); the
+//!   oracle for everything else.
+//! * `Packed` — the deployment fast path: expanded sign rows packed into
+//!   `u64` words at load time, hidden activations sign-binarized with an
+//!   XNOR-Net scale, FC layers computed as XNOR + popcount with per-run
+//!   alpha rescaling (`nn::packed`).  `serve::Server::start_pool` shares one
+//!   packed model across N batching workers.
+//!
+//! ## Test tiers
+//!
+//! * **Artifact-free** (always run, what CI gates on): unit tests, property
+//!   tests (`tests/properties.rs`), packed/reference parity
+//!   (`tests/packed_parity.rs`), serving-pool tests, format/config tests.
+//! * **Artifact-dependent** (`tests/native_parity.rs`, runtime/pipeline
+//!   integration, the trained halves of the benches): need `make artifacts`
+//!   and a real PJRT runtime; they skip with a notice when either is
+//!   missing.  The vendored `xla` crate in `rust/vendor/` is an offline
+//!   stub — host-side literal ops are real, graph execution reports
+//!   unavailable — so a bare checkout still builds and tests everywhere.
 
 pub mod arch;
 pub mod baselines;

@@ -3,10 +3,12 @@
 
 use anyhow::{anyhow, Result};
 
+use std::sync::Arc;
+
 use tiledbits::cli::{Cli, USAGE};
 use tiledbits::config::Manifest;
 use tiledbits::coordinator::{self, report, TABLES};
-use tiledbits::nn::{MlpEngine, Nonlin};
+use tiledbits::nn::{EnginePath, MlpEngine, Nonlin};
 use tiledbits::runtime::Runtime;
 use tiledbits::serve::{BatchPolicy, Server};
 use tiledbits::train::{export, TrainOptions};
@@ -134,15 +136,39 @@ fn dispatch(cli: &Cli) -> Result<()> {
             let trainer = tiledbits::train::Trainer::new(&rt, exp)?;
             let (_, model) = trainer.run(&train_opts(cli))?;
             let tbnz = export::to_tbnz(exp, &model)?;
-            let engine = MlpEngine::new(tbnz, Nonlin::Relu).map_err(|e| anyhow!(e))?;
-            let server = Server::start(engine, BatchPolicy::default());
-            // demo load: classify a synthetic batch
+            let path = match cli.opt_or("engine", "packed") {
+                "reference" => EnginePath::Reference,
+                _ => EnginePath::Packed,
+            };
+            let workers = cli.opt_usize("workers").unwrap_or(2);
+            let engine = MlpEngine::with_path(tbnz, Nonlin::Relu, path)
+                .map_err(|e| anyhow!(e))?;
+            info!("serve", "{path:?} engine, {workers} workers, {} resident weight bytes",
+                  engine.resident_weight_bytes());
+            let server = Arc::new(Server::start_pool(Arc::new(engine),
+                                                     BatchPolicy::default(), workers));
+            // demo load: classify a synthetic batch from concurrent clients
             let ds = data::generate(&exp.dataset_kind, &exp.io.x, exp.dataset_classes,
                                     256, 99).map_err(|e| anyhow!(e))?;
             let t0 = std::time::Instant::now();
-            for i in 0..ds.n {
-                let x = ds.x[i * ds.x_elems..(i + 1) * ds.x_elems].to_vec();
-                let _ = server.infer(x).map_err(|e| anyhow!(e))?;
+            let clients = 4usize;
+            let mut handles = Vec::new();
+            for c in 0..clients {
+                let s = server.clone();
+                let xs: Vec<Vec<f32>> = (c..ds.n)
+                    .step_by(clients)
+                    .map(|i| ds.x[i * ds.x_elems..(i + 1) * ds.x_elems].to_vec())
+                    .collect();
+                handles.push(std::thread::spawn(move || -> Result<(), String> {
+                    for x in xs {
+                        s.infer(x)?;
+                    }
+                    Ok(())
+                }));
+            }
+            for h in handles {
+                h.join().map_err(|_| anyhow!("client thread panicked"))?
+                    .map_err(|e| anyhow!(e))?;
             }
             let stats = server.stats();
             info!("serve", "{} requests in {:.3}s, mean latency {:.0}us, mean batch {:.1}",

@@ -4,8 +4,20 @@
 //! fused nonlinearity between layers (ReLU in the paper's deployment).  The
 //! engine also carries the byte-exact memory/storage accounting used for the
 //! Table 6 comparison against the BWNN baseline.
+//!
+//! Two implementations sit behind the [`EnginePath`] selector:
+//!
+//! * `Reference` — the f32 Algorithm 1 path (tile reuse, expand-free), the
+//!   crate's oracle.  `forward` runs the exact paper math on f32
+//!   activations; `forward_quantized` runs the f32 oracle of the deployment
+//!   forward with sign-binarized hidden activations.
+//! * `Packed` — the XNOR-popcount fast path (`nn::packed`): expanded sign
+//!   rows packed to `u64` words at load time, hidden activations
+//!   sign-binarized with an XNOR-Net scale.  `forward` and
+//!   `forward_quantized` coincide on this path.
 
 use crate::tbn::TbnzModel;
+use super::packed::{forward_quantized_reference, EnginePath, PackedModel};
 use super::{fc_layer_forward, layer_resident_bytes};
 
 /// Hidden-layer nonlinearity (fused into the FC kernel).
@@ -19,10 +31,21 @@ pub enum Nonlin {
 pub struct MlpEngine {
     pub model: TbnzModel,
     pub nonlin: Nonlin,
+    path: EnginePath,
+    /// Built eagerly at construction when `path == Packed`.
+    packed: Option<PackedModel>,
 }
 
 impl MlpEngine {
+    /// Reference-path engine (the original constructor).
     pub fn new(model: TbnzModel, nonlin: Nonlin) -> Result<MlpEngine, String> {
+        MlpEngine::with_path(model, nonlin, EnginePath::Reference)
+    }
+
+    /// Engine with an explicit implementation path. `Packed` pays the
+    /// row-packing cost here, once, so the serve path never packs weights.
+    pub fn with_path(model: TbnzModel, nonlin: Nonlin, path: EnginePath)
+                     -> Result<MlpEngine, String> {
         for l in &model.layers {
             if l.shape.len() != 2 {
                 return Err(format!("{}: MlpEngine requires 2-D FC layers", l.name));
@@ -35,7 +58,15 @@ impl MlpEngine {
                                    w[0].name, w[1].name, w[0].shape[0], w[1].shape[1]));
             }
         }
-        Ok(MlpEngine { model, nonlin })
+        let packed = match path {
+            EnginePath::Packed => Some(PackedModel::from_tbnz(&model)?),
+            EnginePath::Reference => None,
+        };
+        Ok(MlpEngine { model, nonlin, path, packed })
+    }
+
+    pub fn path(&self) -> EnginePath {
+        self.path
     }
 
     pub fn in_dim(&self) -> usize {
@@ -46,9 +77,19 @@ impl MlpEngine {
         self.model.layers.last().map(|l| l.shape[0]).unwrap_or(0)
     }
 
-    /// Forward one sample. The final layer is always linear (logits).
+    /// Forward one sample through the active path. The final layer is always
+    /// linear (logits). On `Packed` this is the XNOR fast path (hidden
+    /// activations sign-binarized); on `Reference` it is the exact f32
+    /// Algorithm 1 math.
     pub fn forward(&self, x: &[f32]) -> Vec<f32> {
         assert_eq!(x.len(), self.in_dim());
+        match &self.packed {
+            Some(p) => p.forward(x, self.nonlin == Nonlin::Relu),
+            None => self.forward_reference(x),
+        }
+    }
+
+    fn forward_reference(&self, x: &[f32]) -> Vec<f32> {
         let last = self.model.layers.len() - 1;
         let mut h = x.to_vec();
         for (i, layer) in self.model.layers.iter().enumerate() {
@@ -58,11 +99,33 @@ impl MlpEngine {
         h
     }
 
+    /// The quantized deployment forward regardless of path: on a `Packed`
+    /// engine this is the XNOR fast path itself; on a `Reference` engine it
+    /// is the f32 oracle of the identical math (`nn::packed` module docs).
+    /// `rust/tests/packed_parity.rs` pins the two against each other.
+    pub fn forward_quantized(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.in_dim());
+        match &self.packed {
+            Some(p) => p.forward(x, self.nonlin == Nonlin::Relu),
+            None => forward_quantized_reference(&self.model, x, self.nonlin == Nonlin::Relu),
+        }
+    }
+
+    /// Forward a whole batch. On the `Packed` path the batch runs
+    /// layer-major (each layer's packed rows stay cache-warm across the
+    /// batch) and the bit-packing scratch buffer is reused across samples.
+    pub fn forward_batch(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        match &self.packed {
+            Some(p) => p.forward_batch(xs, self.nonlin == Nonlin::Relu),
+            None => xs.iter().map(|x| self.forward_reference(x)).collect(),
+        }
+    }
+
     /// Forward a batch (rows of `xs`), returning argmax labels.
     pub fn classify_batch(&self, xs: &[Vec<f32>]) -> Vec<usize> {
-        xs.iter()
-            .map(|x| {
-                let y = self.forward(x);
+        self.forward_batch(xs)
+            .iter()
+            .map(|y| {
                 y.iter()
                     .enumerate()
                     .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
@@ -72,21 +135,38 @@ impl MlpEngine {
             .collect()
     }
 
-    /// Max memory at any layer: weights resident for that layer + input and
-    /// output activation buffers (f32) — the Table 6 "Max Memory Usage"
-    /// model (the paper's peak lands on the first FC layer).
+    /// Max memory at any layer: weights resident for that layer *on the
+    /// active path* + input and output activation buffers (f32) — the
+    /// Table 6 "Max Memory Usage" model (the paper's peak lands on the
+    /// first FC layer).  On the packed path the per-layer weight term is
+    /// the expanded packed rows, not the sub-bit tile.
     pub fn peak_memory_bytes(&self) -> usize {
-        self.model
-            .layers
-            .iter()
-            .map(|l| layer_resident_bytes(l) + 4 * (l.shape[0] + l.shape[1]))
-            .max()
-            .unwrap_or(0)
+        match &self.packed {
+            Some(p) => p.peak_memory_bytes(),
+            None => self
+                .model
+                .layers
+                .iter()
+                .map(|l| layer_resident_bytes(l) + 4 * (l.shape[0] + l.shape[1]))
+                .max()
+                .unwrap_or(0),
+        }
     }
 
     /// Total storage for the serialized model (Table 6 "Storage").
     pub fn storage_bytes(&self) -> usize {
         self.model.storage_bytes()
+    }
+
+    /// Weight bytes resident for the *active* path: sub-bit tiles on the
+    /// reference path, expanded packed rows (1 bit per weight plus alpha-run
+    /// metadata) on the packed path — the storage/speed trade the fast path
+    /// makes explicit.
+    pub fn resident_weight_bytes(&self) -> usize {
+        match &self.packed {
+            Some(p) => p.resident_bytes(),
+            None => self.model.layers.iter().map(layer_resident_bytes).sum(),
+        }
     }
 
     /// Measure frames/second over `iters` runs of one sample (Table 6 FPS).
@@ -198,5 +278,65 @@ mod tests {
         let e = tbn_mlp(4);
         let x = vec![0.5f32; 256];
         assert!(e.measure_fps(&x, 20) > 0.0);
+    }
+
+    #[test]
+    fn forward_batch_matches_forward_on_reference_path() {
+        let e = tbn_mlp(4);
+        let mut r = Rng::new(5);
+        let xs: Vec<Vec<f32>> = (0..4).map(|_| r.normal_vec(256, 1.0)).collect();
+        let batch = e.forward_batch(&xs);
+        for (x, y) in xs.iter().zip(&batch) {
+            assert_eq!(&e.forward(x), y);
+        }
+    }
+
+    #[test]
+    fn packed_path_builds_and_matches_quantized_oracle() {
+        let model = tbn_mlp(4).model;
+        let reference = MlpEngine::new(model.clone(), Nonlin::Relu).unwrap();
+        let packed = MlpEngine::with_path(model, Nonlin::Relu, EnginePath::Packed).unwrap();
+        assert_eq!(packed.path(), EnginePath::Packed);
+        assert_eq!(reference.path(), EnginePath::Reference);
+
+        let mut r = Rng::new(77);
+        let xs: Vec<Vec<f32>> = (0..6).map(|_| r.normal_vec(256, 1.0)).collect();
+        assert_eq!(packed.forward(&xs[0]).len(), 10);
+        // classify_batch must be the argmax of the per-sample packed forward
+        let argmax: Vec<usize> = xs
+            .iter()
+            .map(|x| {
+                let y = packed.forward(x);
+                y.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap()
+            })
+            .collect();
+        assert_eq!(packed.classify_batch(&xs), argmax);
+        for (k, x) in xs.iter().enumerate() {
+            let a = packed.forward(x);
+            let b = reference.forward_quantized(x);
+            for (i, (u, v)) in a.iter().zip(&b).enumerate() {
+                assert!((u - v).abs() < 1e-3 * v.abs().max(1.0),
+                        "sample {k} logit {i}: {u} vs {v}");
+            }
+            // on the packed path, forward and forward_quantized coincide
+            assert_eq!(a, packed.forward_quantized(x));
+        }
+    }
+
+    #[test]
+    fn packed_residency_stays_sub_fp() {
+        let tbn = tbn_mlp(4);
+        let packed =
+            MlpEngine::with_path(tbn.model.clone(), Nonlin::Relu, EnginePath::Packed).unwrap();
+        let fp_bytes = 4 * tbn.model.total_params();
+        // packed rows cost ~1 bit/weight (plus run metadata): far below f32
+        assert!(packed.resident_weight_bytes() < fp_bytes / 8,
+                "packed {} vs fp {}", packed.resident_weight_bytes(), fp_bytes);
+        // reference residency reports the sub-bit tiles
+        assert!(tbn.resident_weight_bytes() < packed.resident_weight_bytes() * 8);
     }
 }

@@ -10,10 +10,22 @@
 //!
 //! `fc_tiled_forward` is the readable reference; `fc_tiled_forward_fast`
 //! is the optimized hot path measured in EXPERIMENTS.md §Perf.
+//!
+//! On top of the f32 kernels sits the bit-packed XNOR-popcount fast path
+//! (`packed` module): expanded sign rows are packed into `u64` words at
+//! model-load time, hidden activations are sign-binarized with an XNOR-Net
+//! scale, and each FC layer reduces to XNOR + popcount with one multiply per
+//! constant-alpha run.  `MlpEngine` selects between the two implementations
+//! with `EnginePath::{Reference, Packed}`; the reference path doubles as the
+//! oracle the packed path is parity-tested against
+//! (`rust/tests/packed_parity.rs`).
 
 mod engine;
+mod packed;
 
 pub use engine::{MlpEngine, Nonlin};
+pub use packed::{binarize_activations, forward_quantized_reference, AlphaRun,
+                 EnginePath, PackedLayer, PackedModel, PackedPayload};
 
 use crate::tbn::{LayerRecord, WeightPayload};
 use crate::tensor::BitVec;

@@ -1,0 +1,520 @@
+//! Bit-packed XNOR-popcount inference fast path (§5 deployment kernels).
+//!
+//! The reference engine expands each tile lazily and multiplies in f32.  The
+//! fast path instead materializes, **once at model-load time**, every FC
+//! layer's expanded sign matrix as `u64`-packed rows plus per-row runs of
+//! constant alpha, then runs the deployment forward of the BNN literature
+//! (Kim & Smaragdis 2016; XNOR-Net):
+//!
+//! * layer 0 consumes the raw f32 input through the reference Algorithm 1
+//!   kernels (first layers stay higher precision, the standard BNN practice);
+//! * every later layer sign-binarizes its input activations (`h > 0`, the
+//!   crate-wide `BitVec::from_signs` convention) with an XNOR-Net scale
+//!   `gamma = mean |h|`, and computes `y = gamma * sum_runs alpha_run *
+//!   xnor_popcount(row_bits, x_bits)` — pure word ops plus one multiply per
+//!   alpha run.
+//!
+//! Because hidden activations are quantized, this computes a *different
+//! function* from `MlpEngine::forward` on the `Reference` path.  Its oracle
+//! is [`forward_quantized_reference`]: the same math in plain f32 over the
+//! expanded weights, which `rust/tests/packed_parity.rs` pins the bit
+//! kernels against (agreement up to f32 accumulation order and sign
+//! tie-breaks at exactly-zero activations).
+
+use crate::tbn::bitops::xnor_dot_words_range;
+use crate::tbn::{LayerRecord, TbnzModel, WeightPayload};
+use super::{fc_fp_forward, fc_layer_forward};
+
+/// Which implementation serves `MlpEngine::forward`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EnginePath {
+    /// Expand-and-multiply f32 path (the oracle; exact Algorithm 1 math).
+    #[default]
+    Reference,
+    /// Bit-packed XNOR-popcount path with sign-binarized hidden activations.
+    Packed,
+}
+
+/// One run of constant alpha inside a packed row: `[start, start + len)`
+/// bits scaled by `alpha`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AlphaRun {
+    pub start: u32,
+    pub len: u32,
+    pub alpha: f32,
+}
+
+/// Payload of one packed layer.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PackedPayload {
+    /// Binary-weight layer: expanded sign rows packed into `u64` words.
+    Bits {
+        /// Words per row (`ceil(n / 64)`, at least 1).
+        words_per_row: usize,
+        /// `m * words_per_row` words; row `i` starts at `i * words_per_row`.
+        /// Bits at positions `>= n` within a row are zero.
+        row_words: Vec<u64>,
+        /// Constant-alpha runs of all rows, concatenated.
+        runs: Vec<AlphaRun>,
+        /// Row `i` owns `runs[run_offsets[i] .. run_offsets[i + 1]]`.
+        run_offsets: Vec<u32>,
+    },
+    /// Full-precision layer: dense row-major weights (nothing to pack).
+    Dense(Vec<f32>),
+}
+
+/// One FC layer prepared for the packed forward.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedLayer {
+    pub name: String,
+    /// Output features.
+    pub m: usize,
+    /// Input features.
+    pub n: usize,
+    pub payload: PackedPayload,
+}
+
+fn pack_rows<F: Fn(usize) -> bool>(m: usize, n: usize, bit_at_flat: F) -> (usize, Vec<u64>) {
+    let wpr = n.div_ceil(64).max(1);
+    let mut words = vec![0u64; m * wpr];
+    for i in 0..m {
+        let base = i * wpr;
+        let row_start = i * n;
+        for j in 0..n {
+            if bit_at_flat(row_start + j) {
+                words[base + j / 64] |= 1u64 << (j % 64);
+            }
+        }
+    }
+    (wpr, words)
+}
+
+impl PackedLayer {
+    /// Pack one TBNZ layer record (2-D FC layers only).
+    pub fn from_record(l: &LayerRecord) -> Result<PackedLayer, String> {
+        if l.shape.len() != 2 {
+            return Err(format!("{}: packed engine requires 2-D FC layers", l.name));
+        }
+        let (m, n) = (l.shape[0], l.shape[1]);
+        let payload = match &l.payload {
+            WeightPayload::Fp(w) => {
+                if w.len() != m * n {
+                    return Err(format!("{}: fp payload size mismatch", l.name));
+                }
+                PackedPayload::Dense(w.clone())
+            }
+            WeightPayload::Bwnn { bits, alpha } => {
+                if bits.len() != m * n {
+                    return Err(format!("{}: bwnn payload size mismatch", l.name));
+                }
+                let (words_per_row, row_words) = pack_rows(m, n, |flat| bits.get_bit(flat));
+                let runs = (0..m)
+                    .map(|_| AlphaRun { start: 0, len: n as u32, alpha: *alpha })
+                    .collect();
+                let run_offsets = (0..=m as u32).collect();
+                PackedPayload::Bits { words_per_row, row_words, runs, run_offsets }
+            }
+            WeightPayload::Tiled { tile, alphas, .. } => {
+                let q = tile.len();
+                if q == 0 || (m * n) % q != 0 || alphas.is_empty() {
+                    return Err(format!("{}: invalid tiled payload (q={q})", l.name));
+                }
+                let (words_per_row, row_words) = pack_rows(m, n, |flat| tile.get_bit(flat % q));
+                let single = alphas.len() == 1;
+                let mut runs = Vec::new();
+                let mut run_offsets = Vec::with_capacity(m + 1);
+                run_offsets.push(0u32);
+                for i in 0..m {
+                    let row_start = i * n;
+                    let mut j = 0usize;
+                    while j < n {
+                        let flat = row_start + j;
+                        // run until the tile wraps (alpha can only change there)
+                        let len = (q - flat % q).min(n - j);
+                        let alpha = if single {
+                            alphas[0]
+                        } else {
+                            alphas[(flat / q) % alphas.len()]
+                        };
+                        runs.push(AlphaRun { start: j as u32, len: len as u32, alpha });
+                        j += len;
+                    }
+                    run_offsets.push(runs.len() as u32);
+                }
+                PackedPayload::Bits { words_per_row, row_words, runs, run_offsets }
+            }
+        };
+        Ok(PackedLayer { name: l.name.clone(), m, n, payload })
+    }
+
+    /// Weight bytes resident for this layer on the packed path.
+    pub fn resident_bytes(&self) -> usize {
+        match &self.payload {
+            PackedPayload::Bits { row_words, runs, run_offsets, .. } => {
+                8 * row_words.len()
+                    + std::mem::size_of::<AlphaRun>() * runs.len()
+                    + 4 * run_offsets.len()
+            }
+            PackedPayload::Dense(w) => 4 * w.len(),
+        }
+    }
+
+    /// Forward this layer over a sign-binarized input: `xw` holds the packed
+    /// sign bits of the input activations (bits `>= n` zero) and `gamma` is
+    /// their XNOR-Net scale.  The multiply count is one per alpha run.
+    pub fn forward_binarized(&self, xw: &[u64], gamma: f32, relu: bool) -> Vec<f32> {
+        let mut y = Vec::with_capacity(self.m);
+        match &self.payload {
+            PackedPayload::Bits { words_per_row, row_words, runs, run_offsets } => {
+                for i in 0..self.m {
+                    let row = &row_words[i * words_per_row..(i + 1) * words_per_row];
+                    let mut acc = 0.0f32;
+                    let (lo, hi) = (run_offsets[i] as usize, run_offsets[i + 1] as usize);
+                    for run in &runs[lo..hi] {
+                        let dot = xnor_dot_words_range(
+                            row, xw, run.start as usize, run.len as usize);
+                        acc += run.alpha * dot as f32;
+                    }
+                    let v = gamma * acc;
+                    y.push(if relu { v.max(0.0) } else { v });
+                }
+            }
+            PackedPayload::Dense(w) => {
+                // fp weights against ±1 inputs: add or subtract each weight
+                for i in 0..self.m {
+                    let row = &w[i * self.n..(i + 1) * self.n];
+                    let mut acc = 0.0f32;
+                    for (j, &wj) in row.iter().enumerate() {
+                        if (xw[j / 64] >> (j % 64)) & 1 == 1 {
+                            acc += wj;
+                        } else {
+                            acc -= wj;
+                        }
+                    }
+                    let v = gamma * acc;
+                    y.push(if relu { v.max(0.0) } else { v });
+                }
+            }
+        }
+        y
+    }
+}
+
+/// Sign-binarize an activation vector into `words` (bit j set iff
+/// `h[j] > 0`, the `BitVec::from_signs` convention; tail bits zero) and
+/// return the XNOR-Net activation scale `gamma = mean |h|`.
+///
+/// `words` is a scratch buffer so batch loops can reuse one allocation.
+pub fn binarize_activations(h: &[f32], words: &mut Vec<u64>) -> f32 {
+    let wpr = h.len().div_ceil(64).max(1);
+    words.clear();
+    words.resize(wpr, 0);
+    let mut sum = 0.0f32;
+    for (j, &v) in h.iter().enumerate() {
+        sum += v.abs();
+        if v > 0.0 {
+            words[j / 64] |= 1u64 << (j % 64);
+        }
+    }
+    if h.is_empty() {
+        0.0
+    } else {
+        sum / h.len() as f32
+    }
+}
+
+/// A whole model prepared for the packed forward. Layer 0 keeps its TBNZ
+/// record (it runs on the raw f32 input through the reference kernels);
+/// every later layer is bit-packed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedModel {
+    first: LayerRecord,
+    rest: Vec<PackedLayer>,
+}
+
+impl PackedModel {
+    /// Pack every FC layer of a TBNZ model. Fails on non-2-D layers or
+    /// malformed payloads; shape-chain validation is `MlpEngine::new`'s job.
+    pub fn from_tbnz(model: &TbnzModel) -> Result<PackedModel, String> {
+        let Some(first) = model.layers.first() else {
+            return Err("packed engine requires at least one layer".to_string());
+        };
+        if first.shape.len() != 2 {
+            return Err(format!("{}: packed engine requires 2-D FC layers", first.name));
+        }
+        let rest = model.layers[1..]
+            .iter()
+            .map(PackedLayer::from_record)
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(PackedModel { first: first.clone(), rest })
+    }
+
+    /// Packed layers after the f32 entry layer.
+    pub fn packed_layers(&self) -> &[PackedLayer] {
+        &self.rest
+    }
+
+    /// Weight bytes resident on the packed path (entry layer at its TBNZ
+    /// residency + packed rows for the rest).
+    pub fn resident_bytes(&self) -> usize {
+        super::layer_resident_bytes(&self.first)
+            + self.rest.iter().map(PackedLayer::resident_bytes).sum::<usize>()
+    }
+
+    /// Max memory at any layer on the packed path: that layer's resident
+    /// weights (packed rows after layer 0) + f32 input/output activation
+    /// buffers — the Table 6 "Max Memory Usage" model applied to the fast
+    /// path's row storage.
+    pub fn peak_memory_bytes(&self) -> usize {
+        let first = super::layer_resident_bytes(&self.first)
+            + 4 * (self.first.shape[0] + self.first.shape[1]);
+        self.rest
+            .iter()
+            .map(|l| l.resident_bytes() + 4 * (l.m + l.n))
+            .fold(first, usize::max)
+    }
+
+    /// Quantized deployment forward for one sample (see module docs).
+    pub fn forward(&self, x: &[f32], relu_hidden: bool) -> Vec<f32> {
+        let mut scratch = Vec::new();
+        self.forward_with_scratch(x, relu_hidden, &mut scratch)
+    }
+
+    fn forward_with_scratch(&self, x: &[f32], relu_hidden: bool, xw: &mut Vec<u64>)
+                            -> Vec<f32> {
+        let mut h = fc_layer_forward(&self.first, x, relu_hidden && !self.rest.is_empty());
+        for (k, layer) in self.rest.iter().enumerate() {
+            let gamma = binarize_activations(&h, xw);
+            let relu = relu_hidden && k + 1 < self.rest.len();
+            h = layer.forward_binarized(xw, gamma, relu);
+        }
+        h
+    }
+
+    /// Batched quantized forward, layer-major: all samples pass through a
+    /// layer before the next layer starts, so one layer's packed rows are
+    /// touched consecutively (cache-warm across the batch) and the
+    /// bit-packing scratch buffer is allocated once for the whole batch.
+    /// Each sample still walks every row; a row-major blocked kernel is a
+    /// ROADMAP item.  Results are bit-identical to per-sample [`Self::forward`].
+    pub fn forward_batch(&self, xs: &[Vec<f32>], relu_hidden: bool) -> Vec<Vec<f32>> {
+        let relu0 = relu_hidden && !self.rest.is_empty();
+        let mut hs: Vec<Vec<f32>> = xs
+            .iter()
+            .map(|x| fc_layer_forward(&self.first, x, relu0))
+            .collect();
+        let mut xw = Vec::new();
+        for (k, layer) in self.rest.iter().enumerate() {
+            let relu = relu_hidden && k + 1 < self.rest.len();
+            for h in hs.iter_mut() {
+                let gamma = binarize_activations(h, &mut xw);
+                *h = layer.forward_binarized(&xw, gamma, relu);
+            }
+        }
+        hs
+    }
+}
+
+/// f32 oracle of the quantized deployment forward: identical math to
+/// [`PackedModel::forward`] — sign binarization, gamma scaling, expanded
+/// dense multiply — with no bit tricks.  `Reference`-path engines serve this
+/// from `MlpEngine::forward_quantized`, and the parity suite compares the
+/// packed path against it.
+pub fn forward_quantized_reference(model: &TbnzModel, x: &[f32], relu_hidden: bool)
+                                   -> Vec<f32> {
+    assert!(!model.layers.is_empty(), "empty model");
+    let last = model.layers.len() - 1;
+    let mut h = fc_layer_forward(&model.layers[0], x, relu_hidden && last > 0);
+    for (li, layer) in model.layers.iter().enumerate().skip(1) {
+        let gamma = if h.is_empty() {
+            0.0
+        } else {
+            h.iter().map(|v| v.abs()).sum::<f32>() / h.len() as f32
+        };
+        let signs: Vec<f32> = h.iter().map(|&v| if v > 0.0 { 1.0 } else { -1.0 }).collect();
+        let w = layer.expand();
+        let m = layer.shape[0];
+        let mut y = fc_fp_forward(&w, &signs, m, false);
+        let relu = relu_hidden && li < last;
+        for v in y.iter_mut() {
+            let s = gamma * *v;
+            *v = if relu { s.max(0.0) } else { s };
+        }
+        h = y;
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tbn::{alphas_from, tile_from_weights, AlphaMode};
+    use crate::tensor::BitVec;
+    use crate::util::Rng;
+
+    fn tiled_record(name: &str, m: usize, n: usize, p: usize, mode: AlphaMode,
+                    rng: &mut Rng) -> LayerRecord {
+        let w = rng.normal_vec(m * n, 1.0);
+        LayerRecord {
+            name: name.into(),
+            shape: vec![m, n],
+            payload: WeightPayload::Tiled {
+                p,
+                tile: tile_from_weights(&w, p),
+                alphas: alphas_from(&w, p, mode),
+            },
+        }
+    }
+
+    fn bwnn_record(name: &str, m: usize, n: usize, rng: &mut Rng) -> LayerRecord {
+        let w = rng.normal_vec(m * n, 1.0);
+        LayerRecord {
+            name: name.into(),
+            shape: vec![m, n],
+            payload: WeightPayload::Bwnn { bits: BitVec::from_signs(&w), alpha: 0.4 },
+        }
+    }
+
+    #[test]
+    fn binarize_matches_bitvec_convention() {
+        let h = [0.5f32, -0.1, 0.0, 2.0, -3.0];
+        let mut words = Vec::new();
+        let gamma = binarize_activations(&h, &mut words);
+        let v = BitVec::from_signs(&h);
+        assert_eq!(&words[..], v.words());
+        let want = h.iter().map(|x| x.abs()).sum::<f32>() / h.len() as f32;
+        assert!((gamma - want).abs() < 1e-7);
+    }
+
+    #[test]
+    fn binarize_empty_and_reuse() {
+        let mut words = vec![u64::MAX; 4]; // stale scratch must be cleared
+        assert_eq!(binarize_activations(&[], &mut words), 0.0);
+        assert_eq!(words, vec![0u64]);
+        let g = binarize_activations(&[1.0, 1.0], &mut words);
+        assert_eq!(words, vec![0b11u64]);
+        assert!((g - 1.0).abs() < 1e-7);
+    }
+
+    /// A packed Bwnn layer over ±1 inputs must equal the dense computation.
+    #[test]
+    fn bits_layer_matches_dense_on_signs() {
+        let mut rng = Rng::new(31);
+        let (m, n) = (7, 70); // non-multiple-of-64 width
+        let rec = bwnn_record("l", m, n, &mut rng);
+        let packed = PackedLayer::from_record(&rec).unwrap();
+        let h = rng.normal_vec(n, 1.0);
+        let mut xw = Vec::new();
+        let gamma = binarize_activations(&h, &mut xw);
+        let got = packed.forward_binarized(&xw, gamma, false);
+
+        let signs: Vec<f32> = h.iter().map(|&v| if v > 0.0 { 1.0 } else { -1.0 }).collect();
+        let w = rec.expand();
+        let want = fc_fp_forward(&w, &signs, m, false);
+        for i in 0..m {
+            assert!((got[i] - gamma * want[i]).abs() < 1e-3 * want[i].abs().max(1.0),
+                    "row {i}: {} vs {}", got[i], gamma * want[i]);
+        }
+    }
+
+    /// Tiled rows with per-tile alphas: alpha runs must follow the flat
+    /// alpha index `(flat / q) % p` exactly.
+    #[test]
+    fn tiled_layer_alpha_runs_match_expansion() {
+        let mut rng = Rng::new(32);
+        // q = m*n/p = 5*12/4 = 15, so runs split mid-row
+        let rec = tiled_record("t", 5, 12, 4, AlphaMode::PerTile, &mut rng);
+        let packed = PackedLayer::from_record(&rec).unwrap();
+        let h = rng.normal_vec(12, 1.0);
+        let mut xw = Vec::new();
+        let gamma = binarize_activations(&h, &mut xw);
+        let got = packed.forward_binarized(&xw, gamma, false);
+
+        let signs: Vec<f32> = h.iter().map(|&v| if v > 0.0 { 1.0 } else { -1.0 }).collect();
+        let want = fc_fp_forward(&rec.expand(), &signs, 5, false);
+        for i in 0..5 {
+            assert!((got[i] - gamma * want[i]).abs() < 1e-3 * want[i].abs().max(1.0),
+                    "row {i}");
+        }
+    }
+
+    #[test]
+    fn packed_model_matches_reference_oracle() {
+        let mut rng = Rng::new(33);
+        let model = TbnzModel {
+            layers: vec![
+                tiled_record("fc0", 48, 70, 4, AlphaMode::PerTile, &mut rng),
+                bwnn_record("fc1", 33, 48, &mut rng),
+                tiled_record("head", 10, 33, 2, AlphaMode::Single, &mut rng),
+            ],
+        };
+        let packed = PackedModel::from_tbnz(&model).unwrap();
+        for s in 0..4 {
+            let mut r = Rng::new(100 + s);
+            let x = r.normal_vec(70, 1.0);
+            let a = packed.forward(&x, true);
+            let b = forward_quantized_reference(&model, &x, true);
+            assert_eq!(a.len(), b.len());
+            for i in 0..a.len() {
+                assert!((a[i] - b[i]).abs() < 1e-3 * b[i].abs().max(1.0),
+                        "sample {s} out {i}: {} vs {}", a[i], b[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn forward_batch_equals_per_sample() {
+        let mut rng = Rng::new(34);
+        let model = TbnzModel {
+            layers: vec![
+                tiled_record("fc0", 32, 65, 4, AlphaMode::PerTile, &mut rng),
+                bwnn_record("head", 6, 32, &mut rng),
+            ],
+        };
+        let packed = PackedModel::from_tbnz(&model).unwrap();
+        let xs: Vec<Vec<f32>> = (0..5).map(|_| rng.normal_vec(65, 1.0)).collect();
+        let batch = packed.forward_batch(&xs, true);
+        for (x, y) in xs.iter().zip(&batch) {
+            assert_eq!(&packed.forward(x, true), y);
+        }
+    }
+
+    #[test]
+    fn single_layer_model_is_exactly_reference() {
+        let mut rng = Rng::new(35);
+        let model = TbnzModel {
+            layers: vec![tiled_record("only", 9, 20, 4, AlphaMode::PerTile, &mut rng)],
+        };
+        let packed = PackedModel::from_tbnz(&model).unwrap();
+        let x = rng.normal_vec(20, 1.0);
+        // one layer: no binarization anywhere, bit-exact against the oracle
+        assert_eq!(packed.forward(&x, true),
+                   forward_quantized_reference(&model, &x, true));
+    }
+
+    #[test]
+    fn resident_bytes_scale_with_rows() {
+        let mut rng = Rng::new(36);
+        let model = TbnzModel {
+            layers: vec![
+                tiled_record("fc0", 16, 64, 4, AlphaMode::Single, &mut rng),
+                bwnn_record("fc1", 64, 16, &mut rng),
+            ],
+        };
+        let packed = PackedModel::from_tbnz(&model).unwrap();
+        // fc1 packed rows: 64 rows x 1 word = 512 bytes of words at least
+        assert!(packed.resident_bytes() >= 512);
+        assert_eq!(packed.packed_layers().len(), 1);
+    }
+
+    #[test]
+    fn rejects_non_2d_layers() {
+        let rec = LayerRecord {
+            name: "conv".into(),
+            shape: vec![4, 4, 3, 3],
+            payload: WeightPayload::Fp(vec![0.0; 144]),
+        };
+        assert!(PackedLayer::from_record(&rec).is_err());
+        assert!(PackedModel::from_tbnz(&TbnzModel { layers: vec![] }).is_err());
+    }
+}

@@ -1,14 +1,21 @@
-//! Serving stack: request queue + dynamic batcher + worker thread.
+//! Serving stack: request queue + dynamic batcher + worker pool.
 //!
 //! TBN is a compression paper, so the serving layer is deliberately thin
 //! (DESIGN.md §1): a threaded inference server that batches concurrent
 //! requests up to `max_batch` within a `window`, runs them through a
 //! `BatchModel`, and reports latency/throughput stats.  It serves the
-//! *native* sub-bit engine (`nn::MlpEngine`) — the memory-saving deployment
-//! path of §5.1 — and is exercised end-to-end by `examples/serving_demo.rs`.
+//! *native* sub-bit engine (`nn::MlpEngine`) — including the bit-packed
+//! XNOR fast path — and is exercised end-to-end by `tbn serve` and
+//! `rust/tests/serving.rs`.
+//!
+//! Concurrency model: one shared `Mutex`+`Condvar` request queue feeds N
+//! worker threads (`Server::start_pool`), each of which independently forms
+//! dynamic batches.  The model is shared through an `Arc`, so a packed
+//! `MlpEngine` is packed once and served by every worker.
 
+use std::collections::VecDeque;
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -20,7 +27,8 @@ pub trait BatchModel: Send + 'static {
 
 impl BatchModel for crate::nn::MlpEngine {
     fn infer_batch(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
-        xs.iter().map(|x| self.forward(x)).collect()
+        // batched entry point: amortizes bit-packing on the packed path
+        self.forward_batch(xs)
     }
 
     fn in_dim(&self) -> usize {
@@ -51,6 +59,8 @@ pub struct ServerStats {
     pub total_latency_us: u64,
     pub max_latency_us: u64,
     pub batch_size_sum: usize,
+    /// Worker threads serving the queue.
+    pub workers: usize,
 }
 
 impl ServerStats {
@@ -77,59 +87,154 @@ impl Default for BatchPolicy {
     }
 }
 
-/// Handle to a running server. Dropping it shuts the worker down.
+// ---------------------------------------------------------------------------
+// Shared request queue
+// ---------------------------------------------------------------------------
+
+enum Pop {
+    Got(Request),
+    TimedOut,
+    Closed,
+}
+
+/// MPMC request queue: any number of submitters, N batching workers.
+/// Closing lets workers drain what is already queued, then exit — no request
+/// that was accepted is ever dropped.
+struct Queue {
+    state: Mutex<(VecDeque<Request>, bool)>,
+    cv: Condvar,
+}
+
+impl Queue {
+    fn new() -> Queue {
+        Queue { state: Mutex::new((VecDeque::new(), false)), cv: Condvar::new() }
+    }
+
+    /// Enqueue; fails (returning the request) after `close`.
+    fn push(&self, r: Request) -> Result<(), Request> {
+        let mut s = self.state.lock().unwrap();
+        if s.1 {
+            return Err(r);
+        }
+        s.0.push_back(r);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    fn close(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.1 = true;
+        self.cv.notify_all();
+    }
+
+    /// Block until a request is available or the queue is closed and empty.
+    fn pop_blocking(&self) -> Option<Request> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(r) = s.0.pop_front() {
+                return Some(r);
+            }
+            if s.1 {
+                return None;
+            }
+            s = self.cv.wait(s).unwrap();
+        }
+    }
+
+    /// Wait until `deadline` for one more request (used to fill a batch).
+    fn pop_until(&self, deadline: Instant) -> Pop {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(r) = s.0.pop_front() {
+                return Pop::Got(r);
+            }
+            if s.1 {
+                return Pop::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Pop::TimedOut;
+            }
+            let (guard, timeout) = self.cv.wait_timeout(s, deadline - now).unwrap();
+            s = guard;
+            if timeout.timed_out() {
+                // a request may have raced in right at the deadline
+                if let Some(r) = s.0.pop_front() {
+                    return Pop::Got(r);
+                }
+                return Pop::TimedOut;
+            }
+        }
+    }
+}
+
+fn worker_loop<M: BatchModel>(queue: &Queue, model: &M, stats: &Mutex<ServerStats>,
+                              policy: &BatchPolicy) {
+    loop {
+        let Some(first) = queue.pop_blocking() else { return };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + policy.window;
+        while batch.len() < policy.max_batch {
+            match queue.pop_until(deadline) {
+                Pop::Got(r) => batch.push(r),
+                Pop::TimedOut | Pop::Closed => break,
+            }
+        }
+        let run_start = Instant::now();
+        let xs: Vec<Vec<f32>> = batch.iter().map(|r| r.x.clone()).collect();
+        let ys = model.infer_batch(&xs);
+        let bsz = batch.len();
+        let mut s = stats.lock().unwrap();
+        s.batches += 1;
+        s.batch_size_sum += bsz;
+        for (req, y) in batch.into_iter().zip(ys) {
+            let queue_us = run_start.saturating_duration_since(req.enqueued).as_micros() as u64;
+            let total_us = req.enqueued.elapsed().as_micros() as u64;
+            s.served += 1;
+            s.total_latency_us += total_us;
+            s.max_latency_us = s.max_latency_us.max(total_us);
+            let _ = req.resp.send(Response { y, queue_us, total_us, batch_size: bsz });
+        }
+    }
+}
+
+/// Handle to a running server. Dropping it shuts the workers down after they
+/// drain the queue.
 pub struct Server {
-    tx: Option<mpsc::Sender<Request>>,
-    worker: Option<thread::JoinHandle<()>>,
+    queue: Arc<Queue>,
+    workers: Vec<thread::JoinHandle<()>>,
     stats: Arc<Mutex<ServerStats>>,
     in_dim: usize,
 }
 
 impl Server {
-    /// Spawn the worker thread around a model.
-    pub fn start<M: BatchModel>(model: M, policy: BatchPolicy) -> Server {
-        let (tx, rx) = mpsc::channel::<Request>();
-        let stats = Arc::new(Mutex::new(ServerStats::default()));
-        let stats_w = stats.clone();
+    /// Single-worker server owning its model (the original API).
+    pub fn start<M: BatchModel + Sync>(model: M, policy: BatchPolicy) -> Server {
+        Server::start_pool(Arc::new(model), policy, 1)
+    }
+
+    /// `workers` batching threads sharing one `Arc`'d model over a single
+    /// request queue. With a packed `MlpEngine` the rows are packed once and
+    /// every worker serves from the same packed weights.
+    pub fn start_pool<M: BatchModel + Sync>(model: Arc<M>, policy: BatchPolicy,
+                                            workers: usize) -> Server {
+        let n_workers = workers.max(1);
+        let queue = Arc::new(Queue::new());
+        let stats = Arc::new(Mutex::new(ServerStats {
+            workers: n_workers,
+            ..ServerStats::default()
+        }));
         let in_dim = model.in_dim();
-        let worker = thread::spawn(move || {
-            loop {
-                // block for the first request of a batch
-                let first = match rx.recv() {
-                    Ok(r) => r,
-                    Err(_) => break, // all senders dropped: shutdown
-                };
-                let mut batch = vec![first];
-                let deadline = Instant::now() + policy.window;
-                while batch.len() < policy.max_batch {
-                    let now = Instant::now();
-                    if now >= deadline {
-                        break;
-                    }
-                    match rx.recv_timeout(deadline - now) {
-                        Ok(r) => batch.push(r),
-                        Err(mpsc::RecvTimeoutError::Timeout) => break,
-                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
-                    }
-                }
-                let run_start = Instant::now();
-                let xs: Vec<Vec<f32>> = batch.iter().map(|r| r.x.clone()).collect();
-                let ys = model.infer_batch(&xs);
-                let bsz = batch.len();
-                let mut s = stats_w.lock().unwrap();
-                s.batches += 1;
-                s.batch_size_sum += bsz;
-                for (req, y) in batch.into_iter().zip(ys) {
-                    let queue_us = (run_start - req.enqueued).as_micros() as u64;
-                    let total_us = req.enqueued.elapsed().as_micros() as u64;
-                    s.served += 1;
-                    s.total_latency_us += total_us;
-                    s.max_latency_us = s.max_latency_us.max(total_us);
-                    let _ = req.resp.send(Response { y, queue_us, total_us, batch_size: bsz });
-                }
-            }
-        });
-        Server { tx: Some(tx), worker: Some(worker), stats, in_dim }
+        let handles = (0..n_workers)
+            .map(|_| {
+                let q = queue.clone();
+                let m = model.clone();
+                let st = stats.clone();
+                let pol = policy.clone();
+                thread::spawn(move || worker_loop(&q, &*m, &st, &pol))
+            })
+            .collect();
+        Server { queue, workers: handles, stats, in_dim }
     }
 
     /// Submit a request; returns a receiver for the response.
@@ -138,10 +243,8 @@ impl Server {
             return Err(format!("input dim {} != model dim {}", x.len(), self.in_dim));
         }
         let (rtx, rrx) = mpsc::channel();
-        self.tx
-            .as_ref()
-            .expect("server running")
-            .send(Request { x, enqueued: Instant::now(), resp: rtx })
+        self.queue
+            .push(Request { x, enqueued: Instant::now(), resp: rtx })
             .map_err(|_| "server shut down".to_string())?;
         Ok(rrx)
     }
@@ -160,8 +263,8 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        drop(self.tx.take()); // close the channel -> worker exits
-        if let Some(w) = self.worker.take() {
+        self.queue.close(); // workers drain the queue, then exit
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
@@ -235,6 +338,7 @@ mod tests {
         let stats = server.stats();
         assert_eq!(stats.served, 100);
         assert!(stats.batches <= 100);
+        assert_eq!(stats.workers, 1);
     }
 
     #[test]
@@ -258,5 +362,47 @@ mod tests {
                                    BatchPolicy::default());
         let _ = server.infer(vec![1.0]).unwrap();
         drop(server); // must not hang
+    }
+
+    #[test]
+    fn pool_shares_one_model_across_workers() {
+        let model = Arc::new(SumModel { dim: 2, delay: Duration::from_micros(200) });
+        let server = Arc::new(Server::start_pool(
+            model,
+            BatchPolicy { max_batch: 4, window: Duration::from_micros(300) },
+            3,
+        ));
+        assert_eq!(server.stats().workers, 3);
+        let mut handles = Vec::new();
+        for t in 0..6 {
+            let s = server.clone();
+            handles.push(thread::spawn(move || {
+                for i in 0..20 {
+                    let v = (t * 1000 + i) as f32;
+                    let r = s.infer(vec![v, 2.0]).unwrap();
+                    assert_eq!(r.y[0], v + 2.0);
+                    assert!(r.batch_size >= 1 && r.batch_size <= 4);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let stats = server.stats();
+        assert_eq!(stats.served, 120);
+        assert_eq!(stats.batch_size_sum, 120);
+        assert!(stats.batches >= 120 / 4);
+        drop(server); // pool must join cleanly
+    }
+
+    #[test]
+    fn pool_of_zero_workers_clamps_to_one() {
+        let server = Server::start_pool(
+            Arc::new(SumModel { dim: 1, delay: Duration::ZERO }),
+            BatchPolicy::default(),
+            0,
+        );
+        assert_eq!(server.stats().workers, 1);
+        assert_eq!(server.infer(vec![5.0]).unwrap().y, vec![5.0]);
     }
 }

@@ -1,4 +1,6 @@
-//! Bit-operation accounting (Table 2).
+//! Bit operations: the Table 2 accounting model *and* the measured kernels
+//! it models — word-level XNOR + popcount dot products over `u64`-packed
+//! sign vectors, the arithmetic the `nn::packed` fast path runs on.
 //!
 //! Unit convention (standard in the BNN literature and consistent with the
 //! paper's numbers — FP/IR-Net = 64x exactly): one full-precision MAC costs
@@ -14,6 +16,51 @@
 
 use crate::arch::{ArchSpec, Kind};
 use super::policy::{decide, Quant, TilingPolicy};
+
+// ---------------------------------------------------------------------------
+// Word-level XNOR-popcount kernels
+// ---------------------------------------------------------------------------
+//
+// Layout convention is `tensor::BitVec`'s: bit k of a packed slice lives in
+// word k / 64 at position k % 64 (LSB-first); bit = 1 encodes +1.
+
+/// XNOR-popcount dot product over the bit range `[start, start + len)` of
+/// two packed sign slices: returns `sum_i a_i * b_i` over that range, i.e.
+/// `2 * agreements - len`.
+///
+/// This is the one bit-op the whole packed inference path reduces to; the
+/// per-layer alpha scaling happens outside, once per constant-alpha run.
+#[inline]
+pub fn xnor_dot_words_range(a: &[u64], b: &[u64], start: usize, len: usize) -> i64 {
+    if len == 0 {
+        return 0;
+    }
+    let end = start + len;
+    debug_assert!(end <= a.len() * 64 && end <= b.len() * 64);
+    let first_w = start / 64;
+    let last_w = (end - 1) / 64;
+    let mut same: i64 = 0;
+    for w in first_w..=last_w {
+        let mut mask = u64::MAX;
+        if w == first_w {
+            mask &= u64::MAX << (start % 64);
+        }
+        if w == last_w {
+            let valid = end - w * 64; // 1..=64 bits of this word are in range
+            if valid < 64 {
+                mask &= (1u64 << valid) - 1;
+            }
+        }
+        same += ((!(a[w] ^ b[w])) & mask).count_ones() as i64;
+    }
+    2 * same - len as i64
+}
+
+/// XNOR-popcount dot over the first `bits` bits of two packed sign slices.
+#[inline]
+pub fn xnor_dot_words(a: &[u64], b: &[u64], bits: usize) -> i64 {
+    xnor_dot_words_range(a, b, 0, bits)
+}
 
 /// Bit-ops per fp MAC.
 pub const FP_MAC_BITOPS: f64 = 64.0;
@@ -91,6 +138,57 @@ pub fn table2_row(arch: &ArchSpec, p: usize, lambda: usize) -> (f64, f64, f64, f
 mod tests {
     use super::*;
     use crate::arch;
+    use crate::tensor::BitVec;
+    use crate::util::Rng;
+
+    fn naive_sign_dot(a: &BitVec, b: &BitVec, start: usize, len: usize) -> i64 {
+        (start..start + len)
+            .map(|i| if a.get_bit(i) == b.get_bit(i) { 1i64 } else { -1i64 })
+            .sum()
+    }
+
+    #[test]
+    fn xnor_words_matches_naive_full_width() {
+        let mut r = Rng::new(21);
+        for len in [1usize, 5, 63, 64, 65, 128, 130, 200] {
+            let a = BitVec::from_signs(&r.normal_vec(len, 1.0));
+            let b = BitVec::from_signs(&r.normal_vec(len, 1.0));
+            assert_eq!(
+                xnor_dot_words(a.words(), b.words(), len),
+                naive_sign_dot(&a, &b, 0, len),
+                "len={len}"
+            );
+            assert_eq!(xnor_dot_words(a.words(), b.words(), len), a.xnor_dot(&b));
+        }
+    }
+
+    #[test]
+    fn xnor_words_range_matches_naive_subranges() {
+        let mut r = Rng::new(22);
+        let len = 300;
+        let a = BitVec::from_signs(&r.normal_vec(len, 1.0));
+        let b = BitVec::from_signs(&r.normal_vec(len, 1.0));
+        for _ in 0..200 {
+            let start = r.below(len);
+            let l = 1 + r.below(len - start);
+            assert_eq!(
+                xnor_dot_words_range(a.words(), b.words(), start, l),
+                naive_sign_dot(&a, &b, start, l),
+                "start={start} len={l}"
+            );
+        }
+        assert_eq!(xnor_dot_words_range(a.words(), b.words(), 17, 0), 0);
+    }
+
+    #[test]
+    fn xnor_words_single_word_masks() {
+        // start and end inside the same word
+        let a = BitVec::from_signs(&[1.0; 10]);
+        let b = BitVec::from_signs(&[-1.0; 10]);
+        assert_eq!(xnor_dot_words_range(a.words(), b.words(), 3, 5), -5);
+        let b2 = BitVec::from_signs(&[1.0; 10]);
+        assert_eq!(xnor_dot_words_range(a.words(), b2.words(), 3, 5), 5);
+    }
 
     #[test]
     fn fp_to_bwnn_is_64x() {

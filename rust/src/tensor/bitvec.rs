@@ -148,6 +148,26 @@ impl BitVec {
         2 * same - self.len as i64
     }
 
+    /// Backing `u64` words, LSB-first. Invariant: bits at positions `>= len`
+    /// are zero, so word-level kernels (`tbn::bitops`) can XNOR/popcount the
+    /// last word without re-masking as long as both operands share a length.
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Build from raw words (tail bits beyond `len` are masked to zero to
+    /// uphold the `words()` invariant). `words.len()` must be
+    /// `len.div_ceil(64)`.
+    pub fn from_words(mut words: Vec<u64>, len: usize) -> BitVec {
+        assert_eq!(words.len(), len.div_ceil(64), "word count mismatch for len {len}");
+        if len % 64 != 0 {
+            if let Some(last) = words.last_mut() {
+                *last &= (1u64 << (len % 64)) - 1;
+            }
+        }
+        BitVec { words, len }
+    }
+
     /// Raw packed bytes, LSB-first (for TBNZ serialization).
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(self.storage_bytes());
@@ -245,6 +265,32 @@ mod tests {
         let xs: Vec<f32> = (0..70).map(|i| if i % 3 == 0 { 1.0 } else { -1.0 }).collect();
         let v = BitVec::from_signs(&xs);
         assert_eq!(v.count_plus(), (0..70).filter(|i| i % 3 == 0).count());
+    }
+
+    #[test]
+    fn words_tail_bits_are_zero() {
+        let xs: Vec<f32> = (0..70).map(|_| 1.0).collect();
+        let v = BitVec::from_signs(&xs);
+        let last = *v.words().last().unwrap();
+        // bits 6..64 of the second word must be clear (70 = 64 + 6)
+        assert_eq!(last >> 6, 0);
+        assert_eq!(last, (1u64 << 6) - 1);
+    }
+
+    #[test]
+    fn from_words_roundtrip_and_masking() {
+        let mut r = Rng::new(9);
+        for len in [1usize, 63, 64, 65, 127, 128, 200] {
+            let xs: Vec<f32> = (0..len).map(|_| r.gauss_f32()).collect();
+            let v = BitVec::from_signs(&xs);
+            let v2 = BitVec::from_words(v.words().to_vec(), len);
+            assert_eq!(v, v2, "len={len}");
+        }
+        // tail garbage is masked away
+        let v = BitVec::from_words(vec![u64::MAX], 3);
+        assert_eq!(v.len(), 3);
+        assert_eq!(v.count_plus(), 3);
+        assert_eq!(v.words()[0], 0b111);
     }
 
     #[test]

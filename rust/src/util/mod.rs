@@ -9,6 +9,25 @@ pub mod rng;
 pub use json::Json;
 pub use rng::Rng;
 
+/// Find `rel` in the current directory or up to two parent directories.
+///
+/// Cargo runs tests and benches with the *crate* root (`rust/`) as the
+/// working directory, while shared assets — `configs/`, `artifacts/`,
+/// `runs/` — live at the *repository* root one level up.  Returns the first
+/// existing candidate, or `None` (callers treat that as "asset not built"
+/// and skip).
+pub fn locate_upwards(rel: &str) -> Option<String> {
+    let mut prefix = String::new();
+    for _ in 0..3 {
+        let cand = format!("{prefix}{rel}");
+        if std::path::Path::new(&cand).exists() {
+            return Some(cand);
+        }
+        prefix.push_str("../");
+    }
+    None
+}
+
 /// Format a byte count in human units (used by memory reports).
 pub fn human_bytes(b: f64) -> String {
     if b >= 1e9 {
@@ -54,5 +73,13 @@ mod tests {
     #[test]
     fn mean_std_empty() {
         assert_eq!(mean_std(&[]), (0.0, 0.0));
+    }
+
+    #[test]
+    fn locate_upwards_finds_cwd_entries() {
+        // "src" exists relative to the crate root (tests run with cwd there)
+        // and "." always exists at the first probe.
+        assert_eq!(locate_upwards("."), Some(".".to_string()));
+        assert!(locate_upwards("definitely_not_a_real_dir_42").is_none());
     }
 }

@@ -5,13 +5,18 @@
 use tiledbits::config::Manifest;
 use tiledbits::coordinator::RunRecord;
 use tiledbits::tbn::{decide, Quant, TilingPolicy};
-use tiledbits::util::Json;
+use tiledbits::util::{locate_upwards, Json};
 
-const CONFIG: &str = "configs/experiments.json";
+/// The experiment grid is committed at the repository root; tests run with
+/// the crate root as cwd, so resolve it upward.
+fn config_path() -> String {
+    locate_upwards("configs/experiments.json")
+        .expect("configs/experiments.json must exist (committed config)")
+}
 
 #[test]
 fn experiments_config_parses() {
-    let j = Json::parse_file(CONFIG).expect("configs/experiments.json must parse");
+    let j = Json::parse_file(&config_path()).expect("configs/experiments.json must parse");
     let exps = j.get("experiments").and_then(Json::as_arr).expect("experiments array");
     assert!(exps.len() >= 40, "expected a full experiment grid, got {}", exps.len());
     let mut ids = std::collections::HashSet::new();
@@ -31,7 +36,7 @@ fn experiments_config_parses() {
 
 #[test]
 fn config_covers_every_table_and_figure() {
-    let j = Json::parse_file(CONFIG).unwrap();
+    let j = Json::parse_file(&config_path()).unwrap();
     let exps = j.get("experiments").and_then(Json::as_arr).unwrap();
     let mut covered = std::collections::HashSet::new();
     for e in exps {
@@ -47,17 +52,21 @@ fn config_covers_every_table_and_figure() {
 
 #[test]
 fn manifest_matches_config_when_built() {
-    let Ok(manifest) = Manifest::load("artifacts") else {
+    let Some(artifacts) = locate_upwards("artifacts") else {
         eprintln!("skipping: artifacts not built");
         return;
     };
-    let j = Json::parse_file(CONFIG).unwrap();
+    let Ok(manifest) = Manifest::load(&artifacts) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let j = Json::parse_file(&config_path()).unwrap();
     let exps = j.get("experiments").and_then(Json::as_arr).unwrap();
     assert_eq!(manifest.experiments.len(), exps.len());
     for e in &manifest.experiments {
         // every graph file must exist
         for (name, file) in &e.graph_files {
-            let path = format!("artifacts/{file}");
+            let path = format!("{artifacts}/{file}");
             assert!(std::path::Path::new(&path).exists(), "{}: missing {name} ({path})", e.id);
         }
         // param table consistency
@@ -95,7 +104,7 @@ fn manifest_matches_config_when_built() {
 fn policy_decisions_cover_config_lambdas() {
     // every tbn config in the file produces at least one tiled decision on
     // a layer the size of its model family's biggest layer
-    let j = Json::parse_file(CONFIG).unwrap();
+    let j = Json::parse_file(&config_path()).unwrap();
     for e in j.get("experiments").and_then(Json::as_arr).unwrap() {
         let t = e.get("tiling").unwrap();
         if t.str_or("mode", "") != "tbn" {

@@ -8,14 +8,25 @@ use tiledbits::runtime::Runtime;
 use tiledbits::train::TrainOptions;
 
 fn setup() -> Option<(Runtime, Manifest)> {
-    let manifest = match Manifest::load("artifacts") {
+    let Some(artifacts) = tiledbits::util::locate_upwards("artifacts") else {
+        eprintln!("skipping pipeline tests: artifacts/ not built");
+        return None;
+    };
+    let manifest = match Manifest::load(&artifacts) {
         Ok(m) => m,
         Err(e) => {
             eprintln!("skipping pipeline tests: {e}");
             return None;
         }
     };
-    Some((Runtime::new("artifacts").unwrap(), manifest))
+    let rt = match Runtime::new(&artifacts) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping pipeline tests: {e:#}");
+            return None;
+        }
+    };
+    Some((rt, manifest))
 }
 
 fn opts(steps: usize) -> TrainOptions {

@@ -8,14 +8,24 @@ use tiledbits::tensor::Tensor;
 use tiledbits::train::{Trainer, TrainOptions};
 
 fn setup() -> Option<(Runtime, Manifest)> {
-    let manifest = match Manifest::load("artifacts") {
+    let Some(artifacts) = tiledbits::util::locate_upwards("artifacts") else {
+        eprintln!("skipping runtime tests: artifacts/ not built");
+        return None;
+    };
+    let manifest = match Manifest::load(&artifacts) {
         Ok(m) => m,
         Err(e) => {
             eprintln!("skipping runtime tests: {e}");
             return None;
         }
     };
-    let rt = Runtime::new("artifacts").expect("PJRT CPU client");
+    let rt = match Runtime::new(&artifacts) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping runtime tests: {e:#}");
+            return None;
+        }
+    };
     Some((rt, manifest))
 }
 

@@ -17,14 +17,24 @@ use tiledbits::train::{export, Trainer, TrainOptions};
 
 fn trained(id: &str, steps: usize)
            -> Option<(Runtime, Manifest, String)> {
-    let manifest = match Manifest::load("artifacts") {
+    let Some(artifacts) = tiledbits::util::locate_upwards("artifacts") else {
+        eprintln!("skipping parity tests: artifacts/ not built");
+        return None;
+    };
+    let manifest = match Manifest::load(&artifacts) {
         Ok(m) => m,
         Err(e) => {
             eprintln!("skipping parity tests: {e}");
             return None;
         }
     };
-    let rt = Runtime::new("artifacts").unwrap();
+    let rt = match Runtime::new(&artifacts) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping parity tests: {e:#}");
+            return None;
+        }
+    };
     let _ = steps;
     Some((rt, manifest, id.to_string()))
 }

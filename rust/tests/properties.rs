@@ -7,9 +7,11 @@
 
 use tiledbits::tbn::{alphas_from, expand_tile, tile_from_weights, AlphaMode,
                      LayerRecord, TbnzModel, TilingPolicy, WeightPayload};
+use tiledbits::tbn::bitops::{xnor_dot_words, xnor_dot_words_range};
 use tiledbits::tbn::compress::accounting;
 use tiledbits::arch;
 use tiledbits::nn;
+use tiledbits::nn::binarize_activations;
 use tiledbits::tensor::BitVec;
 use tiledbits::util::{Json, Rng};
 
@@ -47,6 +49,63 @@ fn prop_bitvec_pack_roundtrip() {
         for (i, &x) in xs.iter().enumerate() {
             assert_eq!(v.get(i) > 0.0, x > 0.0);
         }
+    });
+}
+
+#[test]
+fn prop_bitvec_words_roundtrip() {
+    // from_signs -> words() -> from_words is the identity, and the tail
+    // bits of the last word are always zero (the kernels rely on it).
+    prop("words_roundtrip", 50, |rng| {
+        let len = 1 + rng.below(400);
+        let xs = rng.normal_vec(len, 1.0);
+        let v = BitVec::from_signs(&xs);
+        let v2 = BitVec::from_words(v.words().to_vec(), len);
+        assert_eq!(v, v2);
+        if len % 64 != 0 {
+            let last = *v.words().last().unwrap();
+            assert_eq!(last >> (len % 64), 0, "tail bits must be zero");
+        }
+    });
+}
+
+#[test]
+fn prop_xnor_popcount_equals_naive_sign_dot() {
+    // the packed path's one kernel: word-level XNOR + popcount must equal
+    // the naive +-1 dot product, over full vectors and random subranges
+    prop("xnor_popcount", 50, |rng| {
+        let len = 1 + rng.below(400);
+        let a_s = rng.normal_vec(len, 1.0);
+        let b_s = rng.normal_vec(len, 1.0);
+        let a = BitVec::from_signs(&a_s);
+        let b = BitVec::from_signs(&b_s);
+        let naive = |lo: usize, n: usize| -> i64 {
+            (lo..lo + n)
+                .map(|i| if a.get_bit(i) == b.get_bit(i) { 1i64 } else { -1i64 })
+                .sum()
+        };
+        assert_eq!(xnor_dot_words(a.words(), b.words(), len), naive(0, len));
+        assert_eq!(xnor_dot_words(a.words(), b.words(), len), a.xnor_dot(&b));
+        let start = rng.below(len);
+        let n = 1 + rng.below(len - start);
+        assert_eq!(xnor_dot_words_range(a.words(), b.words(), start, n),
+                   naive(start, n), "start={start} n={n}");
+    });
+}
+
+#[test]
+fn prop_binarize_activations_matches_from_signs() {
+    // activation binarization uses the exact BitVec sign convention, and
+    // gamma is the mean absolute value
+    prop("binarize", 40, |rng| {
+        let len = 1 + rng.below(300);
+        let h = rng.normal_vec(len, 2.0);
+        let mut words = Vec::new();
+        let gamma = binarize_activations(&h, &mut words);
+        let v = BitVec::from_signs(&h);
+        assert_eq!(&words[..], v.words());
+        let want = h.iter().map(|x| x.abs()).sum::<f32>() / len as f32;
+        assert!((gamma - want).abs() <= 1e-6 * want.abs().max(1.0));
     });
 }
 

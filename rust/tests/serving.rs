@@ -1,24 +1,44 @@
-//! Serving-stack integration: the native sub-bit engine behind the dynamic
-//! batcher, fed from a real trained + exported model.
+//! Serving-stack integration, in two tiers:
+//!
+//! * **artifact-free** (always run): the multi-worker pool over synthetic
+//!   engines — request conservation, batch-size bounds, stats consistency,
+//!   packed-path serving;
+//! * **artifact-dependent** (skip cleanly when `artifacts/` is absent or the
+//!   PJRT runtime is unavailable): the batcher fed from a real trained +
+//!   exported model.
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use tiledbits::config::Manifest;
-use tiledbits::nn::{MlpEngine, Nonlin};
+use tiledbits::nn::{EnginePath, MlpEngine, Nonlin};
 use tiledbits::runtime::Runtime;
 use tiledbits::serve::{BatchPolicy, Server};
+use tiledbits::tbn::{alphas_from, tile_from_weights, AlphaMode, LayerRecord,
+                     TbnzModel, WeightPayload};
+use tiledbits::tensor::BitVec;
 use tiledbits::train::{export, metrics, Trainer, TrainOptions};
+use tiledbits::util::{locate_upwards, Rng};
 
 fn trained_engine() -> Option<(MlpEngine, Vec<Vec<f32>>, Vec<i32>)> {
-    let manifest = match Manifest::load("artifacts") {
+    let Some(artifacts) = locate_upwards("artifacts") else {
+        eprintln!("skipping serving tests: artifacts/ not built");
+        return None;
+    };
+    let manifest = match Manifest::load(&artifacts) {
         Ok(m) => m,
         Err(e) => {
             eprintln!("skipping serving tests: {e}");
             return None;
         }
     };
-    let rt = Runtime::new("artifacts").unwrap();
+    let rt = match Runtime::new(&artifacts) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping serving tests: {e:#}");
+            return None;
+        }
+    };
     let exp = manifest.by_id("mlp_micro_tbn4").unwrap();
     let trainer = Trainer::new(&rt, exp).unwrap();
     let (_, model) = trainer
@@ -94,4 +114,140 @@ fn throughput_improves_with_batching_pressure() {
         max_batch_seen = max_batch_seen.max(resp.batch_size);
     }
     assert!(max_batch_seen >= 2, "burst traffic should form batches, saw {max_batch_seen}");
+}
+
+// ---------------------------------------------------------------------------
+// Artifact-free tier: multi-worker pool over synthetic engines
+// ---------------------------------------------------------------------------
+
+/// Deployment-shaped synthetic model (64 -> 48 tiled, 48 -> 10 bwnn),
+/// deterministic in `seed` — the same construction the engine unit tests use.
+fn synthetic_engine(seed: u64, path: EnginePath) -> MlpEngine {
+    let mut r = Rng::new(seed);
+    let w1: Vec<f32> = r.normal_vec(48 * 64, 1.0);
+    let w2: Vec<f32> = r.normal_vec(10 * 48, 1.0);
+    let model = TbnzModel {
+        layers: vec![
+            LayerRecord {
+                name: "fc0".into(),
+                shape: vec![48, 64],
+                payload: WeightPayload::Tiled {
+                    p: 4,
+                    tile: tile_from_weights(&w1, 4),
+                    alphas: alphas_from(&w1, 4, AlphaMode::PerTile),
+                },
+            },
+            LayerRecord {
+                name: "head".into(),
+                shape: vec![10, 48],
+                payload: WeightPayload::Bwnn {
+                    bits: BitVec::from_signs(&w2),
+                    alpha: w2.iter().map(|x| x.abs()).sum::<f32>() / w2.len() as f32,
+                },
+            },
+        ],
+    };
+    MlpEngine::with_path(model, Nonlin::Relu, path).unwrap()
+}
+
+#[test]
+fn multi_worker_pool_answers_every_request_exactly_once() {
+    let engine = Arc::new(synthetic_engine(11, EnginePath::Packed));
+    let direct: Vec<Vec<f32>> = {
+        let mut r = Rng::new(99);
+        let xs: Vec<Vec<f32>> = (0..160).map(|_| r.normal_vec(64, 1.0)).collect();
+        engine.forward_batch(&xs)
+    };
+    let mut r = Rng::new(99);
+    let xs: Vec<Vec<f32>> = (0..160).map(|_| r.normal_vec(64, 1.0)).collect();
+
+    let max_batch = 8;
+    let server = Arc::new(Server::start_pool(
+        engine,
+        BatchPolicy { max_batch, window: Duration::from_micros(300) },
+        4,
+    ));
+    assert_eq!(server.stats().workers, 4);
+
+    // 8 concurrent senders, striped over the request set
+    let mut handles = Vec::new();
+    for t in 0..8usize {
+        let s = server.clone();
+        let xs = xs.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut out = Vec::new();
+            for i in (t..xs.len()).step_by(8) {
+                let resp = s.infer(xs[i].clone()).unwrap();
+                assert!(resp.batch_size >= 1 && resp.batch_size <= max_batch,
+                        "batch size {} out of bounds", resp.batch_size);
+                assert!(resp.total_us >= resp.queue_us);
+                out.push((i, resp.y));
+            }
+            out
+        }));
+    }
+    let mut answered = vec![false; xs.len()];
+    for h in handles {
+        for (i, y) in h.join().unwrap() {
+            assert!(!answered[i], "request {i} answered twice");
+            answered[i] = true;
+            assert_eq!(y, direct[i], "served output {i} must equal direct inference");
+        }
+    }
+    assert!(answered.iter().all(|&a| a), "every request must be answered");
+
+    let stats = server.stats();
+    assert_eq!(stats.served, xs.len());
+    assert_eq!(stats.batch_size_sum, xs.len(),
+               "every request is in exactly one batch");
+    assert!(stats.batches >= xs.len() / max_batch);
+    assert!(stats.batches <= xs.len());
+    assert!(stats.mean_batch() >= 1.0 && stats.mean_batch() <= max_batch as f64);
+    assert!(stats.mean_latency_us() > 0.0);
+    assert!(stats.max_latency_us as f64 >= stats.mean_latency_us());
+}
+
+#[test]
+fn pool_serves_packed_and_reference_paths_consistently() {
+    // same weights behind both paths; each server must reproduce its own
+    // engine's direct outputs exactly
+    for path in [EnginePath::Reference, EnginePath::Packed] {
+        let engine = Arc::new(synthetic_engine(5, path));
+        let mut r = Rng::new(123);
+        let xs: Vec<Vec<f32>> = (0..24).map(|_| r.normal_vec(64, 1.0)).collect();
+        let direct: Vec<Vec<f32>> = xs.iter().map(|x| engine.forward(x)).collect();
+        let server = Server::start_pool(
+            engine,
+            BatchPolicy { max_batch: 4, window: Duration::from_micros(200) },
+            3,
+        );
+        for (x, want) in xs.iter().zip(&direct) {
+            let got = server.infer(x.clone()).unwrap();
+            assert_eq!(&got.y, want, "path {path:?}");
+        }
+        let stats = server.stats();
+        assert_eq!(stats.served, xs.len());
+        assert_eq!(stats.workers, 3);
+    }
+}
+
+#[test]
+fn pool_drains_queue_on_shutdown() {
+    // flood, then drop the server handle from this thread after collecting
+    // receivers: every accepted request must still be answered
+    let engine = Arc::new(synthetic_engine(7, EnginePath::Packed));
+    let server = Server::start_pool(
+        engine,
+        BatchPolicy { max_batch: 16, window: Duration::from_micros(100) },
+        2,
+    );
+    let mut r = Rng::new(8);
+    let rxs: Vec<_> = (0..64)
+        .map(|_| server.submit(r.normal_vec(64, 1.0)).unwrap())
+        .collect();
+    drop(server); // close + join: workers drain the queue first
+    for rx in rxs {
+        let resp = rx.recv().expect("accepted request dropped at shutdown");
+        assert_eq!(resp.y.len(), 10);
+    }
 }

@@ -1,0 +1,161 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The container this repository builds in has no crates.io access, so the
+//! workspace vendors the small subset of `anyhow` it actually uses: the
+//! string-backed [`Error`] type, the [`Result`] alias, the [`anyhow!`] /
+//! [`bail!`] macros, and the [`Context`] extension trait for `Result` and
+//! `Option`.  Semantics match the real crate for this subset, except that
+//! source-error chains are flattened into the message eagerly.
+
+use std::fmt;
+
+/// A string-backed error. Like `anyhow::Error`, it deliberately does *not*
+/// implement `std::error::Error`, which is what makes the blanket
+/// `From<E: Error>` conversion below coherent.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error { msg: msg.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+/// `anyhow::Result`: defaults the error type to [`Error`] but still allows
+/// `Result<T, OtherError>` spellings.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to an error (`anyhow::Context` subset).
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error>;
+    /// Wrap the error with a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a message, a displayable value, or a format
+/// string with arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn macro_forms() {
+        let a = anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let owned = String::from("owned message");
+        let b = anyhow!(owned);
+        assert_eq!(b.to_string(), "owned message");
+        let c = anyhow!("x = {}, y = {y}", 1, y = 2);
+        assert_eq!(c.to_string(), "x = 1, y = 2");
+    }
+
+    #[test]
+    fn bail_returns_err() {
+        fn f(flag: bool) -> Result<u32> {
+            if flag {
+                bail!("flagged {}", 7);
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(f(true).unwrap_err().to_string(), "flagged 7");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(f().unwrap_err().to_string().contains("gone"));
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), String> = Err("inner".into());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+
+        let o: Option<u8> = None;
+        let e = o.with_context(|| format!("missing {}", "thing")).unwrap_err();
+        assert_eq!(e.to_string(), "missing thing");
+
+        assert_eq!(Some(3u8).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn debug_and_alternate_display() {
+        let e = anyhow!("msg");
+        assert_eq!(format!("{e:?}"), "msg");
+        assert_eq!(format!("{e:#}"), "msg");
+    }
+}

@@ -1,0 +1,164 @@
+#!/usr/bin/env python3
+"""Generate configs/experiments.json — the single source of truth shared by
+python/compile/aot.py (graph lowering) and the Rust coordinator/benches.
+
+The grid covers every paper table/figure with trained experiments behind it
+(T1, T3, T4, T5, T6, F6, F7, F8) at mini scale, with the id naming scheme the
+benches expect (`<family>_<variant>`, plus the Fig-7/8 hyperparameter
+ablation suffixes `_global`, `_wonly`, `_single_alpha`).
+
+Deterministic: re-running produces byte-identical output.
+"""
+
+import json
+import os
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT = os.path.join(ROOT, "configs", "experiments.json")
+
+
+def tiling(mode, p=1, lam=0, alpha="per_tile", alpha_src="A"):
+    return {"mode": mode, "p": p, "lambda": lam, "alpha": alpha,
+            "alpha_src": alpha_src}
+
+
+def variants(base_lambda, ps=(4, 8)):
+    """Standard fp / bwnn / tbn_p tiling variants for one family."""
+    out = {"fp": tiling("fp"), "bwnn": tiling("bwnn")}
+    for p in ps:
+        out[f"tbn{p}"] = tiling("tbn", p, base_lambda)
+    return out
+
+
+def ablations(base_lambda, p=4):
+    """Fig 7/8 hyperparameter ablations of the default tbn_p config."""
+    return {
+        f"tbn{p}_global": tiling("tbn", p, 0),
+        f"tbn{p}_wonly": tiling("tbn", p, base_lambda, alpha_src="W"),
+        f"tbn{p}_single_alpha": tiling("tbn", p, base_lambda, alpha="single"),
+    }
+
+
+def exp(eid, tables, model, dataset, til, train=None):
+    e = {"id": eid, "tables": tables, "model": model, "dataset": dataset,
+         "tiling": til}
+    if train:
+        e["train"] = train
+    return e
+
+
+def family(eid_prefix, tables, model, dataset, tilings, train=None):
+    return [exp(f"{eid_prefix}_{v}", tables, model, dataset, t, train)
+            for v, t in tilings.items()]
+
+
+def build():
+    exps = []
+
+    # ---- T6/F7: deployment micro MLP (the Table 6 model) ------------------
+    mlp_model = {"family": "mlp", "in_dim": 256, "hidden": [128], "classes": 10}
+    mlp_ds = {"kind": "synth_mnist", "input": [256], "classes": 10,
+              "n_train": 1024, "n_test": 256}
+    mlp_tilings = variants(2048, ps=(2, 4, 8))
+    exps += family("mlp_micro", ["T6", "F7"], mlp_model, mlp_ds, mlp_tilings)
+
+    # ---- T1/F7/F8: CNN minis on SynthCIFAR --------------------------------
+    cifar_ds = {"kind": "synth_cifar", "input": [3, 16, 16], "classes": 10,
+                "n_train": 1024, "n_test": 256}
+    resnet_model = {"family": "resnet_mini", "width": 16, "classes": 10}
+    resnet_tilings = variants(1024, ps=(4, 8, 16))
+    resnet_tilings.update(ablations(1024))
+    exps += family("resnet_mini", ["T1", "F7", "F8"], resnet_model, cifar_ds,
+                   resnet_tilings)
+
+    vgg_model = {"family": "vgg_mini", "width": 16, "classes": 10}
+    exps += family("vgg_mini", ["T1"], vgg_model, cifar_ds, variants(1024))
+
+    # ---- T4: ViT-tiny on SynthCIFAR ---------------------------------------
+    vit_model = {"family": "vit_tiny", "dim": 64, "depth": 2, "heads": 4,
+                 "mlp_dim": 128, "patch": 4, "classes": 10, "img": 16,
+                 "in_channels": 3}
+    exps += family("vit_tiny", ["T4"], vit_model, cifar_ds, variants(2048))
+
+    # ---- T3: PointNet cls + part seg --------------------------------------
+    pn_cls_model = {"family": "pointnet_cls", "classes": 8}
+    pn_cls_ds = {"kind": "synth_modelnet", "input": [64, 3], "classes": 8,
+                 "n_train": 1024, "n_test": 256}
+    exps += family("pointnet_cls", ["T3"], pn_cls_model, pn_cls_ds,
+                   variants(4096))
+
+    pn_seg_model = {"family": "pointnet_seg", "classes": 4}
+    pn_seg_ds = {"kind": "synth_shapenet", "input": [64, 3], "classes": 4,
+                 "n_train": 512, "n_test": 128}
+    exps += family("pointnet_seg", ["T3"], pn_seg_model, pn_seg_ds,
+                   variants(4096))
+
+    # ---- T5: time-series transformers -------------------------------------
+    tst_train = {"steps": 300, "lr": 0.01}
+    elec_model = {"family": "tst", "dim": 64, "depth": 2, "heads": 4,
+                  "mlp_dim": 128, "seq": 48, "channels": 32}
+    elec_ds = {"kind": "synth_electricity", "input": [48, 32], "channels": 32,
+               "n_train": 1024, "n_test": 256}
+    exps += family("tst_elec", ["T5"], elec_model, elec_ds,
+                   variants(2048, ps=(4,)), train=tst_train)
+
+    weather_model = {"family": "tst", "dim": 32, "depth": 2, "heads": 4,
+                     "mlp_dim": 64, "seq": 48, "channels": 8}
+    weather_ds = {"kind": "synth_weather", "input": [48, 8], "channels": 8,
+                  "n_train": 1024, "n_test": 256}
+    exps += family("tst_weather", ["T5"], weather_model, weather_ds,
+                   variants(1024, ps=(4,)), train=tst_train)
+
+    # ---- F6/F7: mixers (accuracy-vs-compression sweeps) -------------------
+    mixer_model = {"family": "mlpmixer", "dim": 64, "depth": 2, "patch": 4,
+                   "token_mlp": 32, "channel_mlp": 128, "classes": 10,
+                   "img": 16, "in_channels": 3}
+    mixer_tilings = {"fp": tiling("fp")}
+    for p in (2, 4, 8, 16, 32):
+        mixer_tilings[f"tbn{p}"] = tiling("tbn", p, 2048)
+    mixer_tilings.update(ablations(2048))
+    exps += family("mlpmixer", ["F6", "F7"], mixer_model, cifar_ds,
+                   mixer_tilings)
+
+    convmixer_model = {"family": "convmixer", "dim": 32, "depth": 2,
+                       "kernel": 3, "patch": 2, "classes": 10, "img": 16,
+                       "in_channels": 3}
+    conv_tilings = {"fp": tiling("fp")}
+    for p in (2, 4, 8, 16):
+        conv_tilings[f"tbn{p}"] = tiling("tbn", p, 512)
+    exps += family("convmixer", ["F6"], convmixer_model, cifar_ds,
+                   conv_tilings)
+
+    return {
+        "defaults": {
+            "train": {"batch": 32, "steps": 400, "lr": 0.05, "warmup": 5,
+                      "schedule": "cosine", "opt": "sgd"},
+            "eval_batch": 128,
+            "serve_batch": 32,
+        },
+        "experiments": exps,
+    }
+
+
+def main():
+    cfg = build()
+    ids = [e["id"] for e in cfg["experiments"]]
+    assert len(ids) == len(set(ids)), "duplicate experiment ids"
+    assert len(ids) >= 40, f"grid too small: {len(ids)}"
+    covered = {t for e in cfg["experiments"] for t in e["tables"]}
+    for t in ["T1", "T3", "T4", "T5", "T6", "F6", "F7", "F8"]:
+        assert t in covered, f"table {t} uncovered"
+    for e in cfg["experiments"]:
+        m = e["tiling"]["mode"]
+        assert m in ("fp", "bwnn", "tbn")
+        if m == "tbn":
+            assert e["tiling"]["p"] >= 2
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        json.dump(cfg, f, indent=2, sort_keys=False)
+        f.write("\n")
+    print(f"wrote {OUT}: {len(ids)} experiments, tables {sorted(covered)}")
+
+
+if __name__ == "__main__":
+    main()
