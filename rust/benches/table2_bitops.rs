@@ -8,6 +8,7 @@ use tiledbits::arch;
 use tiledbits::bench_util::{bench, header};
 use tiledbits::coordinator::report;
 use tiledbits::nn;
+use tiledbits::tbn::bitops::{xnor_dot_words_range, xnor_dot_words_range_scalar};
 use tiledbits::tbn::{alphas_from, tile_from_weights, AlphaMode};
 use tiledbits::tensor::BitVec;
 use tiledbits::util::Rng;
@@ -44,4 +45,23 @@ fn main() {
     }
     println!("\nweight bytes touched: fp {}  bwnn {}  tbn {}",
              4 * m * n, bits.storage_bytes(), tile.storage_bytes());
+
+    // the packed path's one inner loop: scalar popcount vs the 4-wide
+    // unrolled count_ones accumulation, reported as words/second
+    let words = 1usize << 15; // 32k words = 2M bits per call
+    let nbits = words * 64;
+    let wa: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
+    let wb: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
+    let r_sc = bench("xnor popcount scalar (32k words)", 5, 200, || {
+        std::hint::black_box(xnor_dot_words_range_scalar(&wa, &wb, 0, nbits));
+    });
+    let r_un = bench("xnor popcount 4-wide (32k words)", 5, 200, || {
+        std::hint::black_box(xnor_dot_words_range(&wa, &wb, 0, nbits));
+    });
+    println!("{}", r_sc.report());
+    println!("{}", r_un.report());
+    let wps_sc = words as f64 * r_sc.per_sec();
+    let wps_un = words as f64 * r_un.per_sec();
+    println!("\npopcount throughput: scalar {wps_sc:.3e} words/s  4-wide {wps_un:.3e} \
+              words/s  ({:.2}x)", wps_un / wps_sc);
 }

@@ -285,6 +285,42 @@ pub fn convmixer_cifar() -> ArchSpec {
 }
 
 // ---------------------------------------------------------------------------
+// Native-engine demo minis (not paper architectures; excluded from
+// `all_archs` so the analytic tables stay paper-only)
+// ---------------------------------------------------------------------------
+
+/// Tiny CNN sized so the full forward runs in the artifact-free test tier on
+/// both engine paths: two convs (the second stride-2), an implied global
+/// pool, and an FC head.  `nn::lower_arch_spec` turns this into a native
+/// layer graph; `tests/conv_parity.rs` runs it end-to-end.
+pub fn cnn_micro() -> ArchSpec {
+    ArchSpec {
+        name: "cnn_micro".into(),
+        layers: vec![
+            LayerSpec::conv("conv0", 3, 8, 3, 16, 16, 16, 16),
+            LayerSpec::conv("conv1", 8, 16, 3, 8, 8, 16, 16),
+            LayerSpec::fc("head", 16, 10),
+        ],
+    }
+}
+
+/// PointNet-style shared-MLP backbone mini: token-wise 1x1 convs
+/// (`fc_tok`) over 64 points, a global pool, and FC layers — exercises the
+/// native lowering of the paper's point-cloud shared MLPs.
+pub fn pointnet_micro() -> ArchSpec {
+    let n = 64;
+    ArchSpec {
+        name: "pointnet_micro".into(),
+        layers: vec![
+            LayerSpec::fc_tok("conv1", 3, 16, n),
+            LayerSpec::fc_tok("conv2", 16, 32, n),
+            LayerSpec::fc("fc1", 32, 16),
+            LayerSpec::fc("head", 16, 10),
+        ],
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Time-series Transformers (Table 5)
 // ---------------------------------------------------------------------------
 

@@ -84,8 +84,11 @@ OPTIONS:
   --eval-every <n>          evaluation period             [default: 100]
   --seed <n>                override the experiment seed
   --out <path>              output path (export)
-  --engine <path>           serve engine: packed|reference [default: packed]
+  --engine <path>           serve engine: packed|packed-int8|reference
+                                                          [default: packed]
   --workers <n>             serve worker threads          [default: 2]
+  --queue-cap <n>           serve queue bound             [default: 1024]
+  --overflow <policy>       full-queue behavior: block|reject [default: block]
   --quiet                   errors only
 ";
 

@@ -17,24 +17,42 @@
 //! Python never runs on the request path: after `make artifacts` the `tbn`
 //! binary is self-contained.
 //!
-//! ## Inference paths
+//! ## Inference architecture
 //!
-//! `nn::MlpEngine` serves a TBNZ model through one of two implementations,
-//! selected with `nn::EnginePath`:
+//! The native engine is a **layer graph**: `nn::Engine` executes a
+//! sequential chain of typed nodes (`nn::layers::Node`) — `Fc`, `Conv2d`
+//! (im2col over the same bit kernels as FC, incl. grouped/depthwise),
+//! `Pool2d`, `GlobalPool`, `Flatten`.  `nn::lower_arch_spec` turns
+//! sequential `arch::models` CNN specs (`vgg_small_cifar`,
+//! `convmixer_cifar`, the `cnn_micro`/`pointnet_micro` minis, PointNet-style
+//! shared-MLP token convs) into runnable node chains; branching specs
+//! (ResNet residuals, T-Nets) are rejected.  `nn::MlpEngine` wraps an
+//! FC-chain `Engine` built from a TBNZ model and keeps the original
+//! deployable-runner API.
+//!
+//! Every engine runs one of three `nn::EnginePath`s:
 //!
 //! * `Reference` — f32 Algorithm 1 (tile reuse, never expands weights); the
 //!   oracle for everything else.
 //! * `Packed` — the deployment fast path: expanded sign rows packed into
-//!   `u64` words at load time, hidden activations sign-binarized with an
-//!   XNOR-Net scale, FC layers computed as XNOR + popcount with per-run
-//!   alpha rescaling (`nn::packed`).  `serve::Server::start_pool` shares one
-//!   packed model across N batching workers.
+//!   `u64` words at load time, hidden activations (FC vectors and conv
+//!   im2col patches alike) sign-binarized with an XNOR-Net scale, weight
+//!   layers computed as XNOR + popcount with per-run alpha rescaling
+//!   (`nn::packed`).  `serve::Server::start_pool` shares one packed model
+//!   across N batching workers behind a bounded queue
+//!   (`serve::ServePolicy`: reject-or-block backpressure, per-worker
+//!   counters).
+//! * `PackedInt8` — `Packed` with the first weight layer's input quantized
+//!   to 8-bit integers (the paper's microcontroller input packing) instead
+//!   of running layer 0 in f32; parity-gated by the quantization bound in
+//!   `tests/conv_parity.rs`.
 //!
 //! ## Test tiers
 //!
 //! * **Artifact-free** (always run, what CI gates on): unit tests, property
 //!   tests (`tests/properties.rs`), packed/reference parity
-//!   (`tests/packed_parity.rs`), serving-pool tests, format/config tests.
+//!   (`tests/packed_parity.rs`), conv parity + CNN graph smoke tests
+//!   (`tests/conv_parity.rs`), serving-pool tests, format/config tests.
 //! * **Artifact-dependent** (`tests/native_parity.rs`, runtime/pipeline
 //!   integration, the trained halves of the benches): need `make artifacts`
 //!   and a real PJRT runtime; they skip with a notice when either is

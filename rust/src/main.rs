@@ -10,7 +10,7 @@ use tiledbits::config::Manifest;
 use tiledbits::coordinator::{self, report, TABLES};
 use tiledbits::nn::{EnginePath, MlpEngine, Nonlin};
 use tiledbits::runtime::Runtime;
-use tiledbits::serve::{BatchPolicy, Server};
+use tiledbits::serve::{BatchPolicy, OverflowPolicy, ServePolicy, Server};
 use tiledbits::train::{export, TrainOptions};
 use tiledbits::util::log;
 use tiledbits::{data, info};
@@ -138,15 +138,25 @@ fn dispatch(cli: &Cli) -> Result<()> {
             let tbnz = export::to_tbnz(exp, &model)?;
             let path = match cli.opt_or("engine", "packed") {
                 "reference" => EnginePath::Reference,
+                "packed-int8" | "int8" => EnginePath::PackedInt8,
                 _ => EnginePath::Packed,
             };
             let workers = cli.opt_usize("workers").unwrap_or(2);
+            let policy = ServePolicy {
+                batch: BatchPolicy::default(),
+                queue_cap: cli.opt_usize("queue-cap").unwrap_or(1024),
+                on_full: match cli.opt_or("overflow", "block") {
+                    "reject" => OverflowPolicy::Reject,
+                    _ => OverflowPolicy::Block,
+                },
+            };
             let engine = MlpEngine::with_path(tbnz, Nonlin::Relu, path)
                 .map_err(|e| anyhow!(e))?;
-            info!("serve", "{path:?} engine, {workers} workers, {} resident weight bytes",
-                  engine.resident_weight_bytes());
-            let server = Arc::new(Server::start_pool(Arc::new(engine),
-                                                     BatchPolicy::default(), workers));
+            info!("serve", "{path:?} engine, {workers} workers, queue cap {} ({:?}), \
+                   {} resident weight bytes",
+                  policy.queue_cap, policy.on_full, engine.resident_weight_bytes());
+            let server = Arc::new(Server::start_pool_with(Arc::new(engine),
+                                                          policy, workers));
             // demo load: classify a synthetic batch from concurrent clients
             let ds = data::generate(&exp.dataset_kind, &exp.io.x, exp.dataset_classes,
                                     256, 99).map_err(|e| anyhow!(e))?;
@@ -161,7 +171,13 @@ fn dispatch(cli: &Cli) -> Result<()> {
                     .collect();
                 handles.push(std::thread::spawn(move || -> Result<(), String> {
                     for x in xs {
-                        s.infer(x)?;
+                        match s.infer(x) {
+                            Ok(_) => {}
+                            // shed requests are the Reject policy working as
+                            // intended: count them (server stats) and go on
+                            Err(e) if e.contains("queue full") => {}
+                            Err(e) => return Err(e),
+                        }
                     }
                     Ok(())
                 }));
@@ -171,9 +187,14 @@ fn dispatch(cli: &Cli) -> Result<()> {
                     .map_err(|e| anyhow!(e))?;
             }
             let stats = server.stats();
-            info!("serve", "{} requests in {:.3}s, mean latency {:.0}us, mean batch {:.1}",
-                  stats.served, t0.elapsed().as_secs_f64(),
+            info!("serve", "{} requests in {:.3}s ({} rejected), mean latency {:.0}us, \
+                   mean batch {:.1}",
+                  stats.served, t0.elapsed().as_secs_f64(), stats.rejected,
                   stats.mean_latency_us(), stats.mean_batch());
+            for (w, ws) in stats.per_worker.iter().enumerate() {
+                info!("serve", "  worker {w}: {} requests in {} batches",
+                      ws.served, ws.batches);
+            }
             Ok(())
         }
         "" | "help" => {

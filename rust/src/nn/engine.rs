@@ -1,39 +1,245 @@
-//! `MlpEngine` — the deployable model runner of §5.1 (Table 6).
+//! The layer-graph inference engine and its FC-chain wrapper.
 //!
-//! Wraps a `TbnzModel` whose layers are FC weights applied in order, with a
-//! fused nonlinearity between layers (ReLU in the paper's deployment).  The
-//! engine also carries the byte-exact memory/storage accounting used for the
-//! Table 6 comparison against the BWNN baseline.
-//!
-//! Two implementations sit behind the [`EnginePath`] selector:
+//! [`Engine`] executes a sequential chain of [`Node`]s (FC, Conv2d, pooling,
+//! flatten — `nn::layers`) behind the [`EnginePath`] selector:
 //!
 //! * `Reference` — the f32 Algorithm 1 path (tile reuse, expand-free), the
 //!   crate's oracle.  `forward` runs the exact paper math on f32
 //!   activations; `forward_quantized` runs the f32 oracle of the deployment
 //!   forward with sign-binarized hidden activations.
-//! * `Packed` — the XNOR-popcount fast path (`nn::packed`): expanded sign
-//!   rows packed to `u64` words at load time, hidden activations
+//! * `Packed` — the XNOR-popcount fast path: every weight layer after the
+//!   first is packed to `u64` rows at construction (`PackedLayer`), hidden
+//!   activations (FC vectors and conv im2col patches alike) are
 //!   sign-binarized with an XNOR-Net scale.  `forward` and
 //!   `forward_quantized` coincide on this path.
+//! * `PackedInt8` — `Packed` with the *first* weight layer's input
+//!   quantized to 8-bit integers (the paper's microcontroller input
+//!   packing) instead of running layer 0 in f32.
+//!
+//! [`MlpEngine`] wraps an `Engine` built from a `TbnzModel`'s FC chain and
+//! preserves the original deployable-runner API of §5.1 (Table 6),
+//! including the byte-exact memory/storage accounting used for the Table 6
+//! comparison against the BWNN baseline.
 
+use super::layers::{Node, Scratch};
+use super::packed::{EnginePath, PackedLayer};
 use crate::tbn::TbnzModel;
-use super::packed::{forward_quantized_reference, EnginePath, PackedModel};
-use super::{fc_layer_forward, layer_resident_bytes};
+use super::layers::FcLayer;
 
-/// Hidden-layer nonlinearity (fused into the FC kernel).
+/// Hidden-layer nonlinearity (fused into the weight-layer kernels).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Nonlin {
     Relu,
     None,
 }
 
-/// Feed-forward inference engine over a TBNZ model.
+/// Sequential layer-graph engine over typed nodes.
+#[derive(Debug, Clone)]
+pub struct Engine {
+    nodes: Vec<Node>,
+    nonlin: Nonlin,
+    path: EnginePath,
+    /// Parallel to `nodes`: packed state for every weight node that runs
+    /// binarized (all weight nodes after the first) when `path.is_packed()`.
+    packed: Vec<Option<PackedLayer>>,
+    first_weight: Option<usize>,
+    last_weight: Option<usize>,
+}
+
+impl Engine {
+    /// Validate the node chain and (on the packed paths) build per-layer
+    /// packed state — paid once here so the serve path never packs weights.
+    pub fn new(nodes: Vec<Node>, nonlin: Nonlin, path: EnginePath)
+               -> Result<Engine, String> {
+        if nodes.is_empty() {
+            return Err("engine requires at least one node".to_string());
+        }
+        for w in nodes.windows(2) {
+            if w[1].in_len() != w[0].out_len() {
+                return Err(format!("{} -> {}: shape chain broken ({} != {})",
+                                   w[0].name(), w[1].name(),
+                                   w[0].out_len(), w[1].in_len()));
+            }
+        }
+        let weight_idx: Vec<usize> = nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.is_weight())
+            .map(|(i, _)| i)
+            .collect();
+        if weight_idx.is_empty() {
+            return Err("engine requires at least one weight layer".to_string());
+        }
+        let first_weight = weight_idx.first().copied();
+        let last_weight = weight_idx.last().copied();
+        let mut packed: Vec<Option<PackedLayer>> = vec![None; nodes.len()];
+        if path.is_packed() {
+            // the first weight layer stays f32 (or int8-input); later weight
+            // layers run binarized from packed rows
+            for &i in weight_idx.iter().skip(1) {
+                packed[i] = nodes[i].build_packed()?;
+            }
+        }
+        Ok(Engine { nodes, nonlin, path, packed, first_weight, last_weight })
+    }
+
+    /// Build an FC-chain engine from a TBNZ model (one `Fc` node per layer).
+    pub fn from_tbnz(model: &TbnzModel, nonlin: Nonlin, path: EnginePath)
+                     -> Result<Engine, String> {
+        if model.layers.is_empty() {
+            return Err("engine requires at least one layer".to_string());
+        }
+        let nodes = model
+            .layers
+            .iter()
+            .map(|l| FcLayer::from_record(l.clone()).map(Node::Fc))
+            .collect::<Result<Vec<_>, String>>()?;
+        Engine::new(nodes, nonlin, path)
+    }
+
+    pub fn path(&self) -> EnginePath {
+        self.path
+    }
+
+    pub fn nonlin(&self) -> Nonlin {
+        self.nonlin
+    }
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    pub fn in_len(&self) -> usize {
+        self.nodes.first().map(Node::in_len).unwrap_or(0)
+    }
+
+    pub fn out_len(&self) -> usize {
+        self.nodes.last().map(Node::out_len).unwrap_or(0)
+    }
+
+    /// ReLU applies after every weight node except the last (logits stay
+    /// linear); weightless nodes never activate.
+    fn relu_after(&self, idx: usize) -> bool {
+        self.nonlin == Nonlin::Relu
+            && self.nodes[idx].is_weight()
+            && Some(idx) != self.last_weight
+    }
+
+    /// Run one node on the active path.
+    fn node_forward(&self, idx: usize, h: &[f32], scratch: &mut Scratch) -> Vec<f32> {
+        let relu = self.relu_after(idx);
+        let node = &self.nodes[idx];
+        if let Some(p) = &self.packed[idx] {
+            return match node {
+                Node::Fc(fc) => fc.forward_packed(p, h, relu, scratch),
+                Node::Conv2d(c) => c.forward_packed(p, h, relu, scratch),
+                _ => unreachable!("packed state only exists for weight nodes"),
+            };
+        }
+        if self.path == EnginePath::PackedInt8 && Some(idx) == self.first_weight {
+            return match node {
+                Node::Fc(fc) => fc.forward_int8(h, relu, scratch),
+                Node::Conv2d(c) => c.forward_int8(h, relu, scratch),
+                _ => unreachable!("first weight index always names a weight node"),
+            };
+        }
+        node.forward_reference(h, relu, scratch)
+    }
+
+    /// Forward one sample through the active path.
+    pub fn forward(&self, x: &[f32]) -> Vec<f32> {
+        let mut scratch = Scratch::default();
+        self.forward_with_scratch(x, &mut scratch)
+    }
+
+    /// Forward with caller-owned scratch buffers (serve workers and batch
+    /// loops reuse one allocation across samples).
+    pub fn forward_with_scratch(&self, x: &[f32], scratch: &mut Scratch) -> Vec<f32> {
+        assert_eq!(x.len(), self.in_len());
+        let mut h = x.to_vec();
+        for idx in 0..self.nodes.len() {
+            h = self.node_forward(idx, &h, scratch);
+        }
+        h
+    }
+
+    /// Forward a whole batch, layer-major: all samples pass through a node
+    /// before the next node starts, so one layer's packed rows stay
+    /// cache-warm across the batch and the scratch buffers are allocated
+    /// once.  Results are bit-identical to per-sample [`Engine::forward`].
+    pub fn forward_batch(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let mut scratch = Scratch::default();
+        let mut hs: Vec<Vec<f32>> = xs.to_vec();
+        for idx in 0..self.nodes.len() {
+            for h in hs.iter_mut() {
+                *h = self.node_forward(idx, h, &mut scratch);
+            }
+        }
+        hs
+    }
+
+    /// The quantized deployment forward regardless of path: on the packed
+    /// paths this is the fast path itself; on a `Reference` engine it is
+    /// the f32 oracle of the identical math — per-node sign/gamma
+    /// binarization over expanded weights, no bit tricks.
+    pub fn forward_quantized(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.in_len());
+        if self.path.is_packed() {
+            return self.forward(x);
+        }
+        let mut scratch = Scratch::default();
+        let mut h = x.to_vec();
+        for idx in 0..self.nodes.len() {
+            let relu = self.relu_after(idx);
+            let node = &self.nodes[idx];
+            h = if node.is_weight() && Some(idx) != self.first_weight {
+                match node {
+                    Node::Fc(fc) => fc.forward_quantized_oracle(&h, relu),
+                    Node::Conv2d(c) => c.forward_quantized_oracle(&h, relu, &mut scratch),
+                    _ => unreachable!("weight nodes are Fc or Conv2d"),
+                }
+            } else {
+                node.forward_reference(&h, relu, &mut scratch)
+            };
+        }
+        h
+    }
+
+    fn node_resident_bytes(&self, idx: usize) -> usize {
+        match &self.packed[idx] {
+            Some(p) => p.resident_bytes(),
+            None => self.nodes[idx].resident_bytes_reference(),
+        }
+    }
+
+    /// Weight bytes resident for the *active* path: sub-bit tiles on the
+    /// reference path (and for the f32/int8 entry layer), expanded packed
+    /// rows (1 bit per weight plus alpha-run metadata) elsewhere on the
+    /// packed paths.
+    pub fn resident_weight_bytes(&self) -> usize {
+        (0..self.nodes.len()).map(|i| self.node_resident_bytes(i)).sum()
+    }
+
+    /// Max memory at any node: weights resident for that node *on the
+    /// active path* + input and output activation buffers (f32) — the
+    /// Table 6 "Max Memory Usage" model.
+    pub fn peak_memory_bytes(&self) -> usize {
+        (0..self.nodes.len())
+            .map(|i| {
+                let n = &self.nodes[i];
+                self.node_resident_bytes(i) + 4 * (n.in_len() + n.out_len())
+            })
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Feed-forward FC-chain engine over a TBNZ model — a thin wrapper around
+/// [`Engine`] preserving the original deployable-runner API.
 pub struct MlpEngine {
     pub model: TbnzModel,
     pub nonlin: Nonlin,
-    path: EnginePath,
-    /// Built eagerly at construction when `path == Packed`.
-    packed: Option<PackedModel>,
+    engine: Engine,
 }
 
 impl MlpEngine {
@@ -42,31 +248,28 @@ impl MlpEngine {
         MlpEngine::with_path(model, nonlin, EnginePath::Reference)
     }
 
-    /// Engine with an explicit implementation path. `Packed` pays the
+    /// Engine with an explicit implementation path. The packed paths pay the
     /// row-packing cost here, once, so the serve path never packs weights.
+    /// 2-D/shape-chain validation happens inside `Engine::from_tbnz`
+    /// (`FcLayer::from_record` + the node-chain check).
+    ///
+    /// Note: the wrapper retains the TBNZ model (the `pub model` API)
+    /// alongside the engine's per-node records — for tiled payloads the
+    /// duplication is sub-bit tiles (bytes); fp-heavy models pay ~2x and
+    /// should drive [`Engine`] directly (ROADMAP: share records via `Arc`).
     pub fn with_path(model: TbnzModel, nonlin: Nonlin, path: EnginePath)
                      -> Result<MlpEngine, String> {
-        for l in &model.layers {
-            if l.shape.len() != 2 {
-                return Err(format!("{}: MlpEngine requires 2-D FC layers", l.name));
-            }
-        }
-        // check chain: layer i input = layer i-1 output
-        for w in model.layers.windows(2) {
-            if w[1].shape[1] != w[0].shape[0] {
-                return Err(format!("{} -> {}: shape chain broken ({} != {})",
-                                   w[0].name, w[1].name, w[0].shape[0], w[1].shape[1]));
-            }
-        }
-        let packed = match path {
-            EnginePath::Packed => Some(PackedModel::from_tbnz(&model)?),
-            EnginePath::Reference => None,
-        };
-        Ok(MlpEngine { model, nonlin, path, packed })
+        let engine = Engine::from_tbnz(&model, nonlin, path)?;
+        Ok(MlpEngine { model, nonlin, engine })
+    }
+
+    /// The underlying layer-graph engine.
+    pub fn engine(&self) -> &Engine {
+        &self.engine
     }
 
     pub fn path(&self) -> EnginePath {
-        self.path
+        self.engine.path()
     }
 
     pub fn in_dim(&self) -> usize {
@@ -78,47 +281,27 @@ impl MlpEngine {
     }
 
     /// Forward one sample through the active path. The final layer is always
-    /// linear (logits). On `Packed` this is the XNOR fast path (hidden
-    /// activations sign-binarized); on `Reference` it is the exact f32
-    /// Algorithm 1 math.
+    /// linear (logits). On the packed paths this is the XNOR fast path
+    /// (hidden activations sign-binarized); on `Reference` it is the exact
+    /// f32 Algorithm 1 math.
     pub fn forward(&self, x: &[f32]) -> Vec<f32> {
         assert_eq!(x.len(), self.in_dim());
-        match &self.packed {
-            Some(p) => p.forward(x, self.nonlin == Nonlin::Relu),
-            None => self.forward_reference(x),
-        }
+        self.engine.forward(x)
     }
 
-    fn forward_reference(&self, x: &[f32]) -> Vec<f32> {
-        let last = self.model.layers.len() - 1;
-        let mut h = x.to_vec();
-        for (i, layer) in self.model.layers.iter().enumerate() {
-            let relu = i < last && self.nonlin == Nonlin::Relu;
-            h = fc_layer_forward(layer, &h, relu);
-        }
-        h
-    }
-
-    /// The quantized deployment forward regardless of path: on a `Packed`
-    /// engine this is the XNOR fast path itself; on a `Reference` engine it
-    /// is the f32 oracle of the identical math (`nn::packed` module docs).
+    /// The quantized deployment forward regardless of path: on a packed
+    /// engine this is the fast path itself; on a `Reference` engine it is
+    /// the f32 oracle of the identical math (`nn::packed` module docs).
     /// `rust/tests/packed_parity.rs` pins the two against each other.
     pub fn forward_quantized(&self, x: &[f32]) -> Vec<f32> {
         assert_eq!(x.len(), self.in_dim());
-        match &self.packed {
-            Some(p) => p.forward(x, self.nonlin == Nonlin::Relu),
-            None => forward_quantized_reference(&self.model, x, self.nonlin == Nonlin::Relu),
-        }
+        self.engine.forward_quantized(x)
     }
 
-    /// Forward a whole batch. On the `Packed` path the batch runs
-    /// layer-major (each layer's packed rows stay cache-warm across the
-    /// batch) and the bit-packing scratch buffer is reused across samples.
+    /// Forward a whole batch, layer-major (each layer's packed rows stay
+    /// cache-warm across the batch; scratch buffers are reused).
     pub fn forward_batch(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
-        match &self.packed {
-            Some(p) => p.forward_batch(xs, self.nonlin == Nonlin::Relu),
-            None => xs.iter().map(|x| self.forward_reference(x)).collect(),
-        }
+        self.engine.forward_batch(xs)
     }
 
     /// Forward a batch (rows of `xs`), returning argmax labels.
@@ -138,19 +321,10 @@ impl MlpEngine {
     /// Max memory at any layer: weights resident for that layer *on the
     /// active path* + input and output activation buffers (f32) — the
     /// Table 6 "Max Memory Usage" model (the paper's peak lands on the
-    /// first FC layer).  On the packed path the per-layer weight term is
+    /// first FC layer).  On the packed paths the per-layer weight term is
     /// the expanded packed rows, not the sub-bit tile.
     pub fn peak_memory_bytes(&self) -> usize {
-        match &self.packed {
-            Some(p) => p.peak_memory_bytes(),
-            None => self
-                .model
-                .layers
-                .iter()
-                .map(|l| layer_resident_bytes(l) + 4 * (l.shape[0] + l.shape[1]))
-                .max()
-                .unwrap_or(0),
-        }
+        self.engine.peak_memory_bytes()
     }
 
     /// Total storage for the serialized model (Table 6 "Storage").
@@ -160,13 +334,10 @@ impl MlpEngine {
 
     /// Weight bytes resident for the *active* path: sub-bit tiles on the
     /// reference path, expanded packed rows (1 bit per weight plus alpha-run
-    /// metadata) on the packed path — the storage/speed trade the fast path
+    /// metadata) on the packed paths — the storage/speed trade the fast path
     /// makes explicit.
     pub fn resident_weight_bytes(&self) -> usize {
-        match &self.packed {
-            Some(p) => p.resident_bytes(),
-            None => self.model.layers.iter().map(layer_resident_bytes).sum(),
-        }
+        self.engine.resident_weight_bytes()
     }
 
     /// Measure frames/second over `iters` runs of one sample (Table 6 FPS).
@@ -186,6 +357,7 @@ impl MlpEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::nn::packed::forward_quantized_reference;
     use crate::tbn::{alphas_from, tile_from_weights, AlphaMode, LayerRecord,
                      TbnzModel, WeightPayload};
     use crate::tensor::BitVec;
@@ -234,6 +406,29 @@ mod tests {
         MlpEngine::new(model, Nonlin::Relu).unwrap()
     }
 
+    fn tiled_record(name: &str, m: usize, n: usize, p: usize, mode: AlphaMode,
+                    rng: &mut Rng) -> LayerRecord {
+        let w = rng.normal_vec(m * n, 1.0);
+        LayerRecord {
+            name: name.into(),
+            shape: vec![m, n],
+            payload: WeightPayload::Tiled {
+                p,
+                tile: tile_from_weights(&w, p),
+                alphas: alphas_from(&w, p, mode),
+            },
+        }
+    }
+
+    fn bwnn_record(name: &str, m: usize, n: usize, rng: &mut Rng) -> LayerRecord {
+        let w = rng.normal_vec(m * n, 1.0);
+        LayerRecord {
+            name: name.into(),
+            shape: vec![m, n],
+            payload: WeightPayload::Bwnn { bits: BitVec::from_signs(&w), alpha: 0.4 },
+        }
+    }
+
     #[test]
     fn forward_shapes() {
         let e = tbn_mlp(4);
@@ -241,6 +436,8 @@ mod tests {
         assert_eq!(e.forward(&x).len(), 10);
         assert_eq!(e.in_dim(), 256);
         assert_eq!(e.out_dim(), 10);
+        assert_eq!(e.engine().in_len(), 256);
+        assert_eq!(e.engine().out_len(), 10);
     }
 
     #[test]
@@ -338,5 +535,113 @@ mod tests {
                 "packed {} vs fp {}", packed.resident_weight_bytes(), fp_bytes);
         // reference residency reports the sub-bit tiles
         assert!(tbn.resident_weight_bytes() < packed.resident_weight_bytes() * 8);
+    }
+
+    // -- ported from the old `PackedModel` suite: the same guarantees now
+    //    hold at the Engine level ------------------------------------------
+
+    #[test]
+    fn engine_packed_matches_reference_oracle() {
+        let mut rng = Rng::new(33);
+        let model = TbnzModel {
+            layers: vec![
+                tiled_record("fc0", 48, 70, 4, AlphaMode::PerTile, &mut rng),
+                bwnn_record("fc1", 33, 48, &mut rng),
+                tiled_record("head", 10, 33, 2, AlphaMode::Single, &mut rng),
+            ],
+        };
+        let packed = Engine::from_tbnz(&model, Nonlin::Relu, EnginePath::Packed).unwrap();
+        for s in 0..4 {
+            let mut r = Rng::new(100 + s);
+            let x = r.normal_vec(70, 1.0);
+            let a = packed.forward(&x);
+            let b = forward_quantized_reference(&model, &x, true);
+            assert_eq!(a.len(), b.len());
+            for i in 0..a.len() {
+                assert!((a[i] - b[i]).abs() < 1e-3 * b[i].abs().max(1.0),
+                        "sample {s} out {i}: {} vs {}", a[i], b[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn engine_forward_batch_equals_per_sample() {
+        let mut rng = Rng::new(34);
+        let model = TbnzModel {
+            layers: vec![
+                tiled_record("fc0", 32, 65, 4, AlphaMode::PerTile, &mut rng),
+                bwnn_record("head", 6, 32, &mut rng),
+            ],
+        };
+        let packed = Engine::from_tbnz(&model, Nonlin::Relu, EnginePath::Packed).unwrap();
+        let xs: Vec<Vec<f32>> = (0..5).map(|_| rng.normal_vec(65, 1.0)).collect();
+        let batch = packed.forward_batch(&xs);
+        for (x, y) in xs.iter().zip(&batch) {
+            assert_eq!(&packed.forward(x), y);
+        }
+    }
+
+    #[test]
+    fn single_layer_model_is_exactly_reference() {
+        let mut rng = Rng::new(35);
+        let model = TbnzModel {
+            layers: vec![tiled_record("only", 9, 20, 4, AlphaMode::PerTile, &mut rng)],
+        };
+        let packed = Engine::from_tbnz(&model, Nonlin::Relu, EnginePath::Packed).unwrap();
+        let x = rng.normal_vec(20, 1.0);
+        // one layer: no binarization anywhere, bit-exact against the oracle
+        assert_eq!(packed.forward(&x), forward_quantized_reference(&model, &x, true));
+    }
+
+    #[test]
+    fn engine_resident_bytes_scale_with_rows() {
+        let mut rng = Rng::new(36);
+        let model = TbnzModel {
+            layers: vec![
+                tiled_record("fc0", 16, 64, 4, AlphaMode::Single, &mut rng),
+                bwnn_record("fc1", 64, 16, &mut rng),
+            ],
+        };
+        let packed = Engine::from_tbnz(&model, Nonlin::Relu, EnginePath::Packed).unwrap();
+        // fc1 packed rows: 64 rows x 1 word = 512 bytes of words at least
+        assert!(packed.resident_weight_bytes() >= 512);
+    }
+
+    #[test]
+    fn rejects_empty_models() {
+        let empty = TbnzModel { layers: vec![] };
+        for path in [EnginePath::Reference, EnginePath::Packed, EnginePath::PackedInt8] {
+            assert!(Engine::from_tbnz(&empty, Nonlin::Relu, path).is_err());
+        }
+        assert!(Engine::new(vec![], Nonlin::Relu, EnginePath::Reference).is_err());
+        // a weightless chain is not an engine either
+        let pool = Node::Flatten { len: 8 };
+        assert!(Engine::new(vec![pool], Nonlin::Relu, EnginePath::Reference).is_err());
+    }
+
+    #[test]
+    fn int8_path_close_to_packed_on_mlp() {
+        let model = tbn_mlp(4).model;
+        let packed =
+            MlpEngine::with_path(model.clone(), Nonlin::Relu, EnginePath::Packed).unwrap();
+        let int8 =
+            MlpEngine::with_path(model, Nonlin::Relu, EnginePath::PackedInt8).unwrap();
+        assert_eq!(int8.path(), EnginePath::PackedInt8);
+        // residency matches the packed path (same rows; layer 0 stays a tile)
+        assert_eq!(int8.resident_weight_bytes(), packed.resident_weight_bytes());
+        let mut r = Rng::new(88);
+        let mut agree = 0usize;
+        let n = 32;
+        for _ in 0..n {
+            let x = r.normal_vec(256, 1.0);
+            let a = packed.classify_batch(&[x.clone()])[0];
+            let b = int8.classify_batch(&[x])[0];
+            if a == b {
+                agree += 1;
+            }
+        }
+        // int8 input quantization perturbs layer 0 by <1% — argmax stays
+        // stable for the large majority of samples
+        assert!(agree * 10 >= n * 7, "argmax agreement {agree}/{n}");
     }
 }

@@ -1,0 +1,417 @@
+//! 2-D convolution graph node, lowered to im2col patches over the FC bit
+//! kernels.
+//!
+//! A conv layer with weights `[co, ci/groups, kh, kw]` is, per output
+//! position, an FC layer of shape `(co/groups, ci/groups * kh * kw)` applied
+//! to the im2col patch at that position — so the Packed path reuses the
+//! exact `PackedLayer` row state and `tbn::bitops` XNOR-popcount kernels the
+//! FC path runs on (SNN / XNOR-Net lowering).  Patches are staged in the
+//! shared [`Scratch`] buffers; zero padding stays exact across the f32, ±1
+//! and int8 domains (0 quantizes to 0).
+//!
+//! Per-patch binarization uses one XNOR-Net scale `gamma = mean |patch|`
+//! per position/group (the scalar simplification of XNOR-Net's K matrix);
+//! the f32 oracle in [`Conv2dLayer::forward_quantized_oracle`] mirrors this
+//! exactly, and `tests/conv_parity.rs` pins the two against each other and
+//! against a naive nested-loop convolution.
+
+use super::Scratch;
+use crate::nn::packed::{
+    binarize_activations, payload_row_dot_i8, quantize_input_i8, PackedLayer,
+};
+use crate::nn::payload_row_dot;
+use crate::tbn::LayerRecord;
+
+/// A 2-D convolution over a channel-major `(c, h, w)` activation map.
+#[derive(Debug, Clone)]
+pub struct Conv2dLayer {
+    /// Weight record with shape `[co, ci/groups, kh, kw]` (row-major).
+    pub record: LayerRecord,
+    pub co: usize,
+    /// Total input channels (across all groups).
+    pub ci: usize,
+    pub kh: usize,
+    pub kw: usize,
+    /// Channel groups: 1 = dense conv, `ci` = depthwise.
+    pub groups: usize,
+    pub stride: usize,
+    /// Leading (top/left) zero padding; the trailing pad is implied by
+    /// `h_out`/`w_out` and may differ by one ("same" padding of even
+    /// kernels).
+    pub pad: usize,
+    pub h_in: usize,
+    pub w_in: usize,
+    pub h_out: usize,
+    pub w_out: usize,
+}
+
+impl Conv2dLayer {
+    /// Conv with symmetric padding: output size follows the standard floor
+    /// arithmetic `h_out = (h_in + 2*pad - kh) / stride + 1`.
+    pub fn new(record: LayerRecord, input: (usize, usize, usize), stride: usize,
+               pad: usize, groups: usize) -> Result<Conv2dLayer, String> {
+        let (_, h_in, w_in) = input;
+        if record.shape.len() != 4 {
+            return Err(format!(
+                "{}: Conv2d requires a 4-D [co, ci/g, kh, kw] shape", record.name));
+        }
+        let (kh, kw) = (record.shape[2], record.shape[3]);
+        if stride == 0 {
+            return Err(format!("{}: stride must be positive", record.name));
+        }
+        if h_in + 2 * pad < kh || w_in + 2 * pad < kw {
+            return Err(format!(
+                "{}: kernel {kh}x{kw} larger than padded input", record.name));
+        }
+        let h_out = (h_in + 2 * pad - kh) / stride + 1;
+        let w_out = (w_in + 2 * pad - kw) / stride + 1;
+        Conv2dLayer::with_output(record, input, stride, pad, (h_out, w_out), groups)
+    }
+
+    /// Conv with an explicit output size (asymmetric "same" padding of even
+    /// kernels: the trailing pad is whatever `h_out` implies).
+    pub fn with_output(record: LayerRecord, input: (usize, usize, usize), stride: usize,
+                       pad: usize, out: (usize, usize), groups: usize)
+                       -> Result<Conv2dLayer, String> {
+        let (ci, h_in, w_in) = input;
+        if record.shape.len() != 4 {
+            return Err(format!(
+                "{}: Conv2d requires a 4-D [co, ci/g, kh, kw] shape", record.name));
+        }
+        let (co, cig, kh, kw) = (
+            record.shape[0], record.shape[1], record.shape[2], record.shape[3]);
+        let (h_out, w_out) = out;
+        if groups == 0 || ci % groups != 0 || co % groups != 0 {
+            return Err(format!(
+                "{}: groups {groups} must divide channels ({ci} in, {co} out)",
+                record.name));
+        }
+        if cig != ci / groups {
+            return Err(format!(
+                "{}: weight ci/g {cig} != {} ({ci} ch / {groups} groups)",
+                record.name, ci / groups));
+        }
+        if stride == 0 || h_in == 0 || w_in == 0 || h_out == 0 || w_out == 0 {
+            return Err(format!("{}: degenerate conv geometry", record.name));
+        }
+        // every patch must start inside the padded input (the trailing pad
+        // absorbs at most one extra position for even "same" kernels)
+        if (h_out - 1) * stride > h_in + 2 * pad || (w_out - 1) * stride > w_in + 2 * pad {
+            return Err(format!(
+                "{}: output {h_out}x{w_out} does not fit input {h_in}x{w_in} \
+                 (stride {stride}, pad {pad})", record.name));
+        }
+        Ok(Conv2dLayer {
+            record, co, ci, kh, kw, groups, stride, pad, h_in, w_in, h_out, w_out,
+        })
+    }
+
+    pub fn in_len(&self) -> usize {
+        self.ci * self.h_in * self.w_in
+    }
+
+    pub fn out_len(&self) -> usize {
+        self.co * self.h_out * self.w_out
+    }
+
+    /// im2col row length: weights per output channel.
+    pub fn patch_len(&self) -> usize {
+        (self.ci / self.groups) * self.kh * self.kw
+    }
+
+    pub(crate) fn build_packed(&self) -> Result<PackedLayer, String> {
+        PackedLayer::from_record_mn(&self.record, self.co, self.patch_len())
+    }
+
+    /// Stage the im2col patch of group `g` at output position `(oy, ox)`
+    /// into `patch` (length `patch_len`); out-of-bounds taps are zero.
+    fn extract_patch(&self, x: &[f32], g: usize, oy: usize, ox: usize,
+                     patch: &mut [f32]) {
+        let cig = self.ci / self.groups;
+        let y0 = (oy * self.stride) as isize - self.pad as isize;
+        let x0 = (ox * self.stride) as isize - self.pad as isize;
+        let mut idx = 0usize;
+        for c in g * cig..(g + 1) * cig {
+            let plane = &x[c * self.h_in * self.w_in..(c + 1) * self.h_in * self.w_in];
+            for ky in 0..self.kh {
+                let yy = y0 + ky as isize;
+                let row_ok = yy >= 0 && (yy as usize) < self.h_in;
+                for kx in 0..self.kw {
+                    let xx = x0 + kx as isize;
+                    patch[idx] = if row_ok && xx >= 0 && (xx as usize) < self.w_in {
+                        plane[yy as usize * self.w_in + xx as usize]
+                    } else {
+                        0.0
+                    };
+                    idx += 1;
+                }
+            }
+        }
+    }
+
+    /// Int8 twin of [`Conv2dLayer::extract_patch`] (padding is exact 0).
+    fn extract_patch_i8(&self, xq: &[i8], g: usize, oy: usize, ox: usize,
+                        patch: &mut [i8]) {
+        let cig = self.ci / self.groups;
+        let y0 = (oy * self.stride) as isize - self.pad as isize;
+        let x0 = (ox * self.stride) as isize - self.pad as isize;
+        let mut idx = 0usize;
+        for c in g * cig..(g + 1) * cig {
+            let plane = &xq[c * self.h_in * self.w_in..(c + 1) * self.h_in * self.w_in];
+            for ky in 0..self.kh {
+                let yy = y0 + ky as isize;
+                let row_ok = yy >= 0 && (yy as usize) < self.h_in;
+                for kx in 0..self.kw {
+                    let xx = x0 + kx as isize;
+                    patch[idx] = if row_ok && xx >= 0 && (xx as usize) < self.w_in {
+                        plane[yy as usize * self.w_in + xx as usize]
+                    } else {
+                        0
+                    };
+                    idx += 1;
+                }
+            }
+        }
+    }
+
+    /// f32 reference forward: per-position im2col patches against the
+    /// payload's row dots (tile reuse — the full weight matrix never
+    /// materializes).
+    pub fn forward_reference(&self, x: &[f32], relu: bool, scratch: &mut Scratch)
+                             -> Vec<f32> {
+        debug_assert_eq!(x.len(), self.in_len());
+        let n = self.patch_len();
+        scratch.patch.clear();
+        scratch.patch.resize(n, 0.0);
+        let cog = self.co / self.groups;
+        let area = self.h_out * self.w_out;
+        let mut y = vec![0.0f32; self.co * area];
+        for oy in 0..self.h_out {
+            for ox in 0..self.w_out {
+                for g in 0..self.groups {
+                    self.extract_patch(x, g, oy, ox, &mut scratch.patch);
+                    for oc in 0..cog {
+                        let o = g * cog + oc;
+                        let v = payload_row_dot(
+                            &self.record.payload, o * n, &scratch.patch);
+                        y[(o * self.h_out + oy) * self.w_out + ox] =
+                            if relu { v.max(0.0) } else { v };
+                    }
+                }
+            }
+        }
+        y
+    }
+
+    /// Packed forward: binarize each patch with its XNOR-Net scale, then
+    /// XNOR-popcount the packed filter rows — the same kernels as packed FC.
+    pub fn forward_packed(&self, packed: &PackedLayer, x: &[f32], relu: bool,
+                          scratch: &mut Scratch) -> Vec<f32> {
+        debug_assert_eq!(x.len(), self.in_len());
+        let n = self.patch_len();
+        scratch.patch.clear();
+        scratch.patch.resize(n, 0.0);
+        let cog = self.co / self.groups;
+        let area = self.h_out * self.w_out;
+        let mut y = vec![0.0f32; self.co * area];
+        for oy in 0..self.h_out {
+            for ox in 0..self.w_out {
+                for g in 0..self.groups {
+                    self.extract_patch(x, g, oy, ox, &mut scratch.patch);
+                    let gamma = binarize_activations(&scratch.patch, &mut scratch.words);
+                    for oc in 0..cog {
+                        let o = g * cog + oc;
+                        let v = gamma * packed.row_dot_binarized(o, &scratch.words);
+                        y[(o * self.h_out + oy) * self.w_out + ox] =
+                            if relu { v.max(0.0) } else { v };
+                    }
+                }
+            }
+        }
+        y
+    }
+
+    /// Layer-0 forward on the `PackedInt8` path: quantize the whole input
+    /// map once, then run integer row dots over int8 im2col patches.
+    pub fn forward_int8(&self, x: &[f32], relu: bool, scratch: &mut Scratch) -> Vec<f32> {
+        debug_assert_eq!(x.len(), self.in_len());
+        let scale = quantize_input_i8(x, &mut scratch.qi8);
+        let n = self.patch_len();
+        scratch.patch_i8.clear();
+        scratch.patch_i8.resize(n, 0);
+        let cog = self.co / self.groups;
+        let area = self.h_out * self.w_out;
+        let mut y = vec![0.0f32; self.co * area];
+        for oy in 0..self.h_out {
+            for ox in 0..self.w_out {
+                for g in 0..self.groups {
+                    self.extract_patch_i8(&scratch.qi8, g, oy, ox, &mut scratch.patch_i8);
+                    for oc in 0..cog {
+                        let o = g * cog + oc;
+                        let v = payload_row_dot_i8(
+                            &self.record.payload, o * n, &scratch.patch_i8, scale);
+                        y[(o * self.h_out + oy) * self.w_out + ox] =
+                            if relu { v.max(0.0) } else { v };
+                    }
+                }
+            }
+        }
+        y
+    }
+
+    /// f32 oracle of [`Conv2dLayer::forward_packed`]: per-patch sign/gamma
+    /// math over the expanded weights, no bit tricks.
+    pub fn forward_quantized_oracle(&self, x: &[f32], relu: bool, scratch: &mut Scratch)
+                                    -> Vec<f32> {
+        debug_assert_eq!(x.len(), self.in_len());
+        let n = self.patch_len();
+        scratch.patch.clear();
+        scratch.patch.resize(n, 0.0);
+        let dense = self.record.expand();
+        let cog = self.co / self.groups;
+        let area = self.h_out * self.w_out;
+        let mut y = vec![0.0f32; self.co * area];
+        let mut signs = vec![0.0f32; n];
+        for oy in 0..self.h_out {
+            for ox in 0..self.w_out {
+                for g in 0..self.groups {
+                    self.extract_patch(x, g, oy, ox, &mut scratch.patch);
+                    let gamma = if n == 0 {
+                        0.0
+                    } else {
+                        scratch.patch.iter().map(|v| v.abs()).sum::<f32>() / n as f32
+                    };
+                    for (s, &v) in signs.iter_mut().zip(scratch.patch.iter()) {
+                        *s = if v > 0.0 { 1.0 } else { -1.0 };
+                    }
+                    for oc in 0..cog {
+                        let o = g * cog + oc;
+                        let row = &dense[o * n..(o + 1) * n];
+                        let dot: f32 = row.iter().zip(&signs).map(|(a, b)| a * b).sum();
+                        let v = gamma * dot;
+                        y[(o * self.h_out + oy) * self.w_out + ox] =
+                            if relu { v.max(0.0) } else { v };
+                    }
+                }
+            }
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tbn::WeightPayload;
+    use crate::util::Rng;
+
+    fn fp_conv(co: usize, ci: usize, k: usize, input: (usize, usize, usize),
+               stride: usize, pad: usize, groups: usize, seed: u64)
+               -> Conv2dLayer {
+        let mut rng = Rng::new(seed);
+        let cig = ci / groups;
+        let record = LayerRecord {
+            name: "conv".into(),
+            shape: vec![co, cig, k, k],
+            payload: WeightPayload::Fp(rng.normal_vec(co * cig * k * k, 1.0)),
+        };
+        Conv2dLayer::new(record, input, stride, pad, groups).unwrap()
+    }
+
+    #[test]
+    fn geometry_follows_floor_arithmetic() {
+        let c = fp_conv(4, 3, 3, (3, 8, 8), 1, 1, 1, 1);
+        assert_eq!((c.h_out, c.w_out), (8, 8));
+        assert_eq!(c.in_len(), 3 * 64);
+        assert_eq!(c.out_len(), 4 * 64);
+        assert_eq!(c.patch_len(), 27);
+        let s = fp_conv(4, 3, 3, (3, 9, 9), 2, 0, 1, 2);
+        assert_eq!((s.h_out, s.w_out), (4, 4));
+    }
+
+    #[test]
+    fn identity_1x1_conv_passes_values_through() {
+        // co = ci = 1, weight 1.0, k=1: output == input
+        let record = LayerRecord {
+            name: "id".into(),
+            shape: vec![1, 1, 1, 1],
+            payload: WeightPayload::Fp(vec![1.0]),
+        };
+        let conv = Conv2dLayer::new(record, (1, 3, 3), 1, 0, 1).unwrap();
+        let x: Vec<f32> = (0..9).map(|i| i as f32 - 4.0).collect();
+        let mut s = Scratch::default();
+        assert_eq!(conv.forward_reference(&x, false, &mut s), x);
+        let y = conv.forward_reference(&x, true, &mut s);
+        assert!(y.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn depthwise_groups_partition_channels() {
+        // 2 channels, depthwise 1x1 with weights [2.0, 3.0]: scales per channel
+        let record = LayerRecord {
+            name: "dw".into(),
+            shape: vec![2, 1, 1, 1],
+            payload: WeightPayload::Fp(vec![2.0, 3.0]),
+        };
+        let conv = Conv2dLayer::new(record, (2, 2, 2), 1, 0, 2).unwrap();
+        let x = vec![1.0f32, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0];
+        let mut s = Scratch::default();
+        let y = conv.forward_reference(&x, false, &mut s);
+        assert_eq!(y, vec![2.0, 2.0, 2.0, 2.0, 3.0, 3.0, 3.0, 3.0]);
+    }
+
+    #[test]
+    fn padding_zero_fills() {
+        // 1x1 input, 3x3 kernel, pad 1: only the center tap lands on data
+        let mut rng = Rng::new(5);
+        let w = rng.normal_vec(9, 1.0);
+        let record = LayerRecord {
+            name: "p".into(),
+            shape: vec![1, 1, 3, 3],
+            payload: WeightPayload::Fp(w.clone()),
+        };
+        let conv = Conv2dLayer::new(record, (1, 1, 1), 1, 1, 1).unwrap();
+        let mut s = Scratch::default();
+        let y = conv.forward_reference(&[2.0], false, &mut s);
+        assert_eq!(y.len(), 1);
+        assert!((y[0] - 2.0 * w[4]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_bad_geometry() {
+        let record = LayerRecord {
+            name: "bad".into(),
+            shape: vec![4, 3, 3, 3],
+            payload: WeightPayload::Fp(vec![0.0; 108]),
+        };
+        // kernel larger than padded input
+        assert!(Conv2dLayer::new(record.clone(), (3, 2, 2), 1, 0, 1).is_err());
+        // groups not dividing channels
+        assert!(Conv2dLayer::new(record.clone(), (3, 8, 8), 1, 1, 2).is_err());
+        // zero stride
+        assert!(Conv2dLayer::new(record.clone(), (3, 8, 8), 0, 1, 1).is_err());
+        // 2-D record
+        let fc = LayerRecord {
+            name: "fc".into(),
+            shape: vec![4, 27],
+            payload: WeightPayload::Fp(vec![0.0; 108]),
+        };
+        assert!(Conv2dLayer::new(fc, (3, 8, 8), 1, 1, 1).is_err());
+    }
+
+    #[test]
+    fn packed_matches_oracle_on_one_layer() {
+        let mut rng = Rng::new(21);
+        let conv = fp_conv(5, 3, 3, (3, 6, 6), 1, 1, 1, 22);
+        let packed = conv.build_packed().unwrap();
+        let x = rng.normal_vec(conv.in_len(), 1.0);
+        let mut s = Scratch::default();
+        let got = conv.forward_packed(&packed, &x, false, &mut s);
+        let want = conv.forward_quantized_oracle(&x, false, &mut s);
+        assert_eq!(got.len(), want.len());
+        for i in 0..got.len() {
+            assert!((got[i] - want[i]).abs() < 1e-3 * want[i].abs().max(1.0),
+                    "out {i}: {} vs {}", got[i], want[i]);
+        }
+    }
+}

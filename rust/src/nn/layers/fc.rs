@@ -1,0 +1,162 @@
+//! Fully-connected graph node: the Algorithm 1 FC kernels behind the
+//! [`super::Node`] abstraction, with Reference, Packed and layer-0 int8
+//! entry points.
+
+use super::Scratch;
+use crate::nn::packed::{
+    binarize_activations, payload_row_dot_i8, quantize_input_i8, PackedLayer,
+};
+use crate::nn::{fc_fp_forward, fc_layer_forward};
+use crate::tbn::LayerRecord;
+
+/// A `[m, n]` weight layer: `y = W x` with an optional fused ReLU.
+#[derive(Debug, Clone)]
+pub struct FcLayer {
+    pub record: LayerRecord,
+    /// Output features.
+    pub m: usize,
+    /// Input features.
+    pub n: usize,
+}
+
+impl FcLayer {
+    pub fn from_record(record: LayerRecord) -> Result<FcLayer, String> {
+        if record.shape.len() != 2 {
+            return Err(format!("{}: Fc node requires a 2-D shape", record.name));
+        }
+        let (m, n) = (record.shape[0], record.shape[1]);
+        Ok(FcLayer { record, m, n })
+    }
+
+    pub(crate) fn build_packed(&self) -> Result<PackedLayer, String> {
+        PackedLayer::from_record_mn(&self.record, self.m, self.n)
+    }
+
+    /// f32 Algorithm 1 forward (tile reuse, expand-free — the oracle).
+    pub fn forward_reference(&self, x: &[f32], relu: bool) -> Vec<f32> {
+        debug_assert_eq!(x.len(), self.n);
+        fc_layer_forward(&self.record, x, relu)
+    }
+
+    /// Packed forward: sign-binarize the input with an XNOR-Net scale, then
+    /// XNOR-popcount every row.
+    pub fn forward_packed(&self, packed: &PackedLayer, x: &[f32], relu: bool,
+                          scratch: &mut Scratch) -> Vec<f32> {
+        debug_assert_eq!(x.len(), self.n);
+        let gamma = binarize_activations(x, &mut scratch.words);
+        packed.forward_binarized(&scratch.words, gamma, relu)
+    }
+
+    /// Layer-0 forward on the `PackedInt8` path: quantize the input to i8
+    /// once, run integer MACs per row, rescale.
+    pub fn forward_int8(&self, x: &[f32], relu: bool, scratch: &mut Scratch) -> Vec<f32> {
+        debug_assert_eq!(x.len(), self.n);
+        let scale = quantize_input_i8(x, &mut scratch.qi8);
+        (0..self.m)
+            .map(|i| {
+                let v = payload_row_dot_i8(
+                    &self.record.payload, i * self.n, &scratch.qi8, scale);
+                if relu { v.max(0.0) } else { v }
+            })
+            .collect()
+    }
+
+    /// f32 oracle of [`FcLayer::forward_packed`] — the same sign/gamma math
+    /// over the expanded weights, no bit tricks.  `Engine::forward_quantized`
+    /// runs this on the Reference path.
+    pub fn forward_quantized_oracle(&self, x: &[f32], relu: bool) -> Vec<f32> {
+        let gamma = if x.is_empty() {
+            0.0
+        } else {
+            x.iter().map(|v| v.abs()).sum::<f32>() / x.len() as f32
+        };
+        let signs: Vec<f32> = x.iter().map(|&v| if v > 0.0 { 1.0 } else { -1.0 }).collect();
+        let w = self.record.expand();
+        let mut y = fc_fp_forward(&w, &signs, self.m, false);
+        for v in y.iter_mut() {
+            let s = gamma * *v;
+            *v = if relu { s.max(0.0) } else { s };
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tbn::{alphas_from, tile_from_weights, AlphaMode, WeightPayload};
+    use crate::util::Rng;
+
+    fn tiled_fc(m: usize, n: usize, p: usize, seed: u64) -> FcLayer {
+        let mut rng = Rng::new(seed);
+        let w = rng.normal_vec(m * n, 1.0);
+        FcLayer::from_record(LayerRecord {
+            name: "fc".into(),
+            shape: vec![m, n],
+            payload: WeightPayload::Tiled {
+                p,
+                tile: tile_from_weights(&w, p),
+                alphas: alphas_from(&w, p, AlphaMode::PerTile),
+            },
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn rejects_non_2d() {
+        let rec = LayerRecord {
+            name: "x".into(),
+            shape: vec![2, 2, 2, 2],
+            payload: WeightPayload::Fp(vec![0.0; 16]),
+        };
+        assert!(FcLayer::from_record(rec).is_err());
+    }
+
+    #[test]
+    fn packed_matches_oracle() {
+        let fc = tiled_fc(12, 40, 4, 9);
+        let packed = fc.build_packed().unwrap();
+        let mut rng = Rng::new(10);
+        let x = rng.normal_vec(40, 1.0);
+        let mut scratch = Scratch::default();
+        let got = fc.forward_packed(&packed, &x, false, &mut scratch);
+        let want = fc.forward_quantized_oracle(&x, false);
+        for i in 0..12 {
+            assert!((got[i] - want[i]).abs() < 1e-3 * want[i].abs().max(1.0), "row {i}");
+        }
+    }
+
+    #[test]
+    fn int8_close_to_reference_on_layer0() {
+        let fc = tiled_fc(16, 60, 4, 11);
+        let mut rng = Rng::new(12);
+        let x = rng.normal_vec(60, 1.0);
+        let mut scratch = Scratch::default();
+        let got = fc.forward_int8(&x, false, &mut scratch);
+        let want = fc.forward_reference(&x, false);
+        // documented bound: scale/2 * sum|w_row| per output
+        let scale = x.iter().fold(0.0f32, |m, v| m.max(v.abs())) / 127.0;
+        let dense = fc.record.expand();
+        for i in 0..16 {
+            let bound = 0.5 * scale
+                * dense[i * 60..(i + 1) * 60].iter().map(|w| w.abs()).sum::<f32>()
+                * 1.05
+                + 1e-4;
+            assert!((got[i] - want[i]).abs() <= bound,
+                    "row {i}: {} vs {} (bound {bound})", got[i], want[i]);
+        }
+    }
+
+    #[test]
+    fn relu_applies_on_all_paths() {
+        let fc = tiled_fc(8, 24, 4, 13);
+        let packed = fc.build_packed().unwrap();
+        let mut rng = Rng::new(14);
+        let x = rng.normal_vec(24, 1.0);
+        let mut s = Scratch::default();
+        assert!(fc.forward_reference(&x, true).iter().all(|&v| v >= 0.0));
+        assert!(fc.forward_packed(&packed, &x, true, &mut s).iter().all(|&v| v >= 0.0));
+        assert!(fc.forward_int8(&x, true, &mut s).iter().all(|&v| v >= 0.0));
+        assert!(fc.forward_quantized_oracle(&x, true).iter().all(|&v| v >= 0.0));
+    }
+}

@@ -1,0 +1,484 @@
+//! Layer graph of the native engine: typed nodes with per-layer Reference
+//! and Packed kernels.
+//!
+//! The paper applies tiling to "both fully-connected and convolutional
+//! layers"; this module is where both meet the native engine.  A [`Node`] is
+//! one step of a sequential inference graph:
+//!
+//! * [`FcLayer`] — a `[m, n]` weight layer served by the Algorithm 1 f32
+//!   kernels (Reference) or the XNOR-popcount row kernels (Packed);
+//! * [`Conv2dLayer`] — a 2-D convolution lowered to im2col patches that
+//!   dispatch into the *same* packed row kernels, so conv and FC share one
+//!   inner loop (`tbn::bitops::xnor_dot_words_range`);
+//! * `Pool2d` / `GlobalPool` / `Flatten` — weightless shape plumbing that
+//!   lets whole CNN specs (`arch::models`) run natively.
+//!
+//! [`lower_arch_spec`] converts a sequential `arch::ArchSpec` into a node
+//! chain, inferring conv stride/padding from the spec's activation shapes
+//! and inserting pooling nodes where consecutive specs imply spatial
+//! reduction.  Branching specs (ResNet residuals, PointNet T-Nets) are
+//! rejected with an error.  `nn::Engine` executes the chain.
+
+mod conv;
+mod fc;
+
+pub use conv::Conv2dLayer;
+pub use fc::FcLayer;
+
+use super::layer_resident_bytes;
+use super::packed::PackedLayer;
+use crate::arch::{ArchSpec, Kind};
+use crate::tbn::{alphas_from, tile_from_weights, AlphaMode, LayerRecord, WeightPayload};
+use crate::tensor::BitVec;
+use crate::util::Rng;
+
+/// Pooling flavor for the weightless pool nodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolKind {
+    Avg,
+    Max,
+}
+
+/// Reusable scratch buffers shared by the packed FC and conv kernels, so a
+/// batch (or a serve worker) allocates them once:
+///
+/// * `words` — packed sign bits of the current activation / im2col patch;
+/// * `patch` — f32 im2col staging buffer;
+/// * `qi8` / `patch_i8` — layer-0 int8 input and its im2col staging.
+#[derive(Debug, Clone, Default)]
+pub struct Scratch {
+    pub words: Vec<u64>,
+    pub patch: Vec<f32>,
+    pub qi8: Vec<i8>,
+    pub patch_i8: Vec<i8>,
+}
+
+/// One node of the inference layer graph.  Activations flow through as flat
+/// f32 vectors; conv/pool nodes interpret them channel-major `(c, h, w)`.
+#[derive(Debug, Clone)]
+pub enum Node {
+    Fc(FcLayer),
+    Conv2d(Conv2dLayer),
+    /// Square-window pool with window = stride = `f` over a `(c, h, w)` map
+    /// (`h` and `w` must be multiples of `f`).
+    Pool2d { kind: PoolKind, c: usize, h: usize, w: usize, f: usize },
+    /// Pool over all spatial/token positions: `(c, positions)` -> `(c,)`.
+    GlobalPool { kind: PoolKind, c: usize, positions: usize },
+    /// Shape bookkeeping only: activations are already flat.
+    Flatten { len: usize },
+}
+
+impl Node {
+    pub fn name(&self) -> &str {
+        match self {
+            Node::Fc(l) => &l.record.name,
+            Node::Conv2d(l) => &l.record.name,
+            Node::Pool2d { .. } => "pool2d",
+            Node::GlobalPool { .. } => "global_pool",
+            Node::Flatten { .. } => "flatten",
+        }
+    }
+
+    pub fn in_len(&self) -> usize {
+        match self {
+            Node::Fc(l) => l.n,
+            Node::Conv2d(l) => l.in_len(),
+            Node::Pool2d { c, h, w, .. } => c * h * w,
+            Node::GlobalPool { c, positions, .. } => c * positions,
+            Node::Flatten { len } => *len,
+        }
+    }
+
+    pub fn out_len(&self) -> usize {
+        match self {
+            Node::Fc(l) => l.m,
+            Node::Conv2d(l) => l.out_len(),
+            Node::Pool2d { c, h, w, f, .. } => c * (h / f) * (w / f),
+            Node::GlobalPool { c, .. } => *c,
+            Node::Flatten { len } => *len,
+        }
+    }
+
+    /// Weight-bearing nodes (the ones ReLU and packing apply to).
+    pub fn is_weight(&self) -> bool {
+        matches!(self, Node::Fc(_) | Node::Conv2d(_))
+    }
+
+    /// The TBNZ record behind a weight node.
+    pub fn record(&self) -> Option<&LayerRecord> {
+        match self {
+            Node::Fc(l) => Some(&l.record),
+            Node::Conv2d(l) => Some(&l.record),
+            _ => None,
+        }
+    }
+
+    /// Weight bytes resident on the reference path (sub-bit tiles stay
+    /// packed); weightless nodes are free.
+    pub fn resident_bytes_reference(&self) -> usize {
+        self.record().map(layer_resident_bytes).unwrap_or(0)
+    }
+
+    /// Build the packed per-layer state for a weight node (`None` for
+    /// weightless nodes).
+    pub(crate) fn build_packed(&self) -> Result<Option<PackedLayer>, String> {
+        match self {
+            Node::Fc(l) => l.build_packed().map(Some),
+            Node::Conv2d(l) => l.build_packed().map(Some),
+            _ => Ok(None),
+        }
+    }
+
+    /// Reference (f32) forward of this node.
+    pub fn forward_reference(&self, x: &[f32], relu: bool, scratch: &mut Scratch) -> Vec<f32> {
+        match self {
+            Node::Fc(l) => l.forward_reference(x, relu),
+            Node::Conv2d(l) => l.forward_reference(x, relu, scratch),
+            Node::Pool2d { kind, c, h, w, f } => pool2d(*kind, *c, *h, *w, *f, x),
+            Node::GlobalPool { kind, c, positions } => global_pool(*kind, *c, *positions, x),
+            Node::Flatten { .. } => x.to_vec(),
+        }
+    }
+}
+
+fn pool2d(kind: PoolKind, c: usize, h: usize, w: usize, f: usize, x: &[f32]) -> Vec<f32> {
+    debug_assert!(f > 0 && h % f == 0 && w % f == 0);
+    debug_assert_eq!(x.len(), c * h * w);
+    let (ho, wo) = (h / f, w / f);
+    let mut y = vec![0.0f32; c * ho * wo];
+    for ch in 0..c {
+        let plane = &x[ch * h * w..(ch + 1) * h * w];
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let mut acc = match kind {
+                    PoolKind::Avg => 0.0f32,
+                    PoolKind::Max => f32::NEG_INFINITY,
+                };
+                for ky in 0..f {
+                    for kx in 0..f {
+                        let v = plane[(oy * f + ky) * w + ox * f + kx];
+                        match kind {
+                            PoolKind::Avg => acc += v,
+                            PoolKind::Max => acc = acc.max(v),
+                        }
+                    }
+                }
+                if kind == PoolKind::Avg {
+                    acc /= (f * f) as f32;
+                }
+                y[(ch * ho + oy) * wo + ox] = acc;
+            }
+        }
+    }
+    y
+}
+
+fn global_pool(kind: PoolKind, c: usize, positions: usize, x: &[f32]) -> Vec<f32> {
+    debug_assert!(positions > 0);
+    debug_assert_eq!(x.len(), c * positions);
+    (0..c)
+        .map(|ch| {
+            let plane = &x[ch * positions..(ch + 1) * positions];
+            match kind {
+                PoolKind::Avg => plane.iter().sum::<f32>() / positions as f32,
+                PoolKind::Max => plane.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v)),
+            }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// ArchSpec lowering
+// ---------------------------------------------------------------------------
+
+/// Options for lowering an `arch::ArchSpec` into a native layer graph.
+#[derive(Debug, Clone)]
+pub struct LowerOptions {
+    /// Input tensor as `(channels, height, width)`; use `(c, n, 1)` for
+    /// point-cloud / token inputs.
+    pub input: (usize, usize, usize),
+    /// Tiles per layer for the synthesized Tiled payloads (layers whose
+    /// param count `p` does not divide fall back to 1-bit Bwnn, mirroring
+    /// the exporter).
+    pub p: usize,
+    pub alpha_mode: AlphaMode,
+    /// Seed for the synthesized weights: the graph structure is exact, the
+    /// weights are drawn (no trained conv checkpoints exist natively yet).
+    pub seed: u64,
+}
+
+impl Default for LowerOptions {
+    fn default() -> Self {
+        LowerOptions {
+            input: (3, 32, 32),
+            p: 4,
+            alpha_mode: AlphaMode::PerTile,
+            seed: 0,
+        }
+    }
+}
+
+fn isqrt(x: usize) -> usize {
+    (x as f64).sqrt().round() as usize
+}
+
+/// Synthesize a payload for `params` drawn weights: Tiled at `p` when it
+/// divides, else 1-bit Bwnn (the exporter's binarize fallback).
+fn synth_payload(params: usize, opts: &LowerOptions, rng: &mut Rng) -> WeightPayload {
+    let w = rng.normal_vec(params, 1.0);
+    if opts.p > 1 && params % opts.p == 0 {
+        WeightPayload::Tiled {
+            p: opts.p,
+            tile: tile_from_weights(&w, opts.p),
+            alphas: alphas_from(&w, opts.p, opts.alpha_mode),
+        }
+    } else {
+        WeightPayload::Bwnn {
+            bits: BitVec::from_signs(&w),
+            alpha: w.iter().map(|x| x.abs()).sum::<f32>() / params.max(1) as f32,
+        }
+    }
+}
+
+/// Insert pooling so the current `(c, h, w)` activation matches the next
+/// layer's expected flat input length `want`.
+fn reconcile(
+    nodes: &mut Vec<Node>,
+    c: &mut usize,
+    h: &mut usize,
+    w: &mut usize,
+    want: usize,
+    at: &str,
+) -> Result<(), String> {
+    let cur = *c * *h * *w;
+    if cur == want {
+        return Ok(());
+    }
+    if want == *c && *h * *w > 1 {
+        nodes.push(Node::GlobalPool { kind: PoolKind::Avg, c: *c, positions: *h * *w });
+        *h = 1;
+        *w = 1;
+        return Ok(());
+    }
+    if want % *c == 0 {
+        let next_pos = want / *c;
+        let cur_pos = *h * *w;
+        if next_pos > 0 && cur_pos % next_pos == 0 {
+            let factor = cur_pos / next_pos;
+            let f = isqrt(factor);
+            if f > 1 && f * f == factor && *h % f == 0 && *w % f == 0 {
+                nodes.push(Node::Pool2d { kind: PoolKind::Avg, c: *c, h: *h, w: *w, f });
+                *h /= f;
+                *w /= f;
+                return Ok(());
+            }
+        }
+    }
+    Err(format!(
+        "{at}: cannot reconcile activation ({c} x {h} x {w} = {cur}) with expected \
+         input {want} — non-sequential spec (residual/branching) or unsupported pooling"
+    ))
+}
+
+/// Infer `(stride, pad_lo, pad_hi)` mapping `h_in -> h_out` with kernel `k`
+/// under the standard floor conv arithmetic
+/// `h_out = (h_in + pad_lo + pad_hi - k) / s + 1`.
+fn infer_stride_pad(h_in: usize, h_out: usize, k: usize)
+                    -> Option<(usize, usize, usize)> {
+    for s in 1..=8usize {
+        for pad_lo in 0..=k {
+            for pad_hi in [pad_lo, pad_lo + 1] {
+                let padded = h_in + pad_lo + pad_hi;
+                if padded < k {
+                    continue;
+                }
+                if (padded - k) / s + 1 == h_out {
+                    return Some((s, pad_lo, pad_hi));
+                }
+            }
+        }
+    }
+    None
+}
+
+/// Lower a sequential `arch::ArchSpec` into a native layer-graph node chain.
+///
+/// Supported: plain conv stacks (square spatial maps, symmetric or
+/// "same"-style asymmetric padding, grouped/depthwise convs), token-wise FC
+/// layers (`fc_tok`, lowered to 1x1 convs over the token axis — PointNet's
+/// shared MLPs), FC heads (global/spatial pooling plus a `Flatten` are
+/// inserted automatically), and `Kind::Other` records (skipped — they carry
+/// no MACs).  Branching specs (ResNet residual/downsample forks, T-Nets)
+/// return an error from the shape reconciliation.
+pub fn lower_arch_spec(spec: &ArchSpec, opts: &LowerOptions) -> Result<Vec<Node>, String> {
+    let mut rng = Rng::new(opts.seed ^ 0x7B1E5);
+    let (mut c, mut h, mut w) = opts.input;
+    if c * h * w == 0 {
+        return Err(format!("{}: empty lowering input", spec.name));
+    }
+    let mut nodes: Vec<Node> = Vec::new();
+    for l in &spec.layers {
+        let at = format!("{}::{}", spec.name, l.name);
+        match l.kind {
+            Kind::Other => continue,
+            Kind::Conv { co, ci, kh, kw } => {
+                reconcile(&mut nodes, &mut c, &mut h, &mut w, l.in_act, &at)?;
+                if ci == 0 || c % ci != 0 {
+                    return Err(format!("{at}: weight ci {ci} does not divide {c} channels"));
+                }
+                let groups = c / ci;
+                if co % groups != 0 {
+                    return Err(format!("{at}: co {co} not a multiple of {groups} groups"));
+                }
+                if l.out_act % co != 0 {
+                    return Err(format!("{at}: out_act {} not a multiple of co {co}", l.out_act));
+                }
+                let area = l.out_act / co;
+                let (h_out, w_out) = if w == 1 {
+                    (area, 1)
+                } else {
+                    let s = isqrt(area);
+                    if s * s != area {
+                        return Err(format!("{at}: non-square output area {area}"));
+                    }
+                    (s, s)
+                };
+                let (stride, pad_lo, _pad_hi) = infer_stride_pad(h, h_out, kh)
+                    .ok_or_else(|| {
+                        format!("{at}: no stride/padding maps {h} -> {h_out} with k={kh}")
+                    })?;
+                let record = LayerRecord {
+                    name: l.name.clone(),
+                    shape: vec![co, ci, kh, kw],
+                    payload: synth_payload(l.params, opts, &mut rng),
+                };
+                let conv = Conv2dLayer::with_output(
+                    record, (c, h, w), stride, pad_lo, (h_out, w_out), groups)?;
+                nodes.push(Node::Conv2d(conv));
+                c = co;
+                h = h_out;
+                w = w_out;
+            }
+            Kind::Fc { co, ci } => {
+                if ci == 0 || l.in_act % ci != 0 {
+                    return Err(format!("{at}: in_act {} not a multiple of ci {ci}", l.in_act));
+                }
+                let tokens = l.in_act / ci;
+                reconcile(&mut nodes, &mut c, &mut h, &mut w, l.in_act, &at)?;
+                let record_payload = synth_payload(l.params, opts, &mut rng);
+                if tokens == 1 {
+                    // plain FC over the flattened activation
+                    if h * w > 1 {
+                        nodes.push(Node::Flatten { len: ci });
+                    }
+                    let record = LayerRecord {
+                        name: l.name.clone(),
+                        shape: vec![co, ci],
+                        payload: record_payload,
+                    };
+                    nodes.push(Node::Fc(FcLayer::from_record(record)?));
+                    c = co;
+                    h = 1;
+                    w = 1;
+                } else {
+                    // token-wise shared MLP: a 1x1 conv over the token axis
+                    if c != ci || h * w != tokens {
+                        return Err(format!(
+                            "{at}: token FC expects ({ci} ch x {tokens} pos), have \
+                             ({c} x {h} x {w}) — token-mixing layers are unsupported"
+                        ));
+                    }
+                    let record = LayerRecord {
+                        name: l.name.clone(),
+                        shape: vec![co, ci, 1, 1],
+                        payload: record_payload,
+                    };
+                    let conv = Conv2dLayer::with_output(
+                        record, (c, h, w), 1, 0, (h, w), 1)?;
+                    nodes.push(Node::Conv2d(conv));
+                    c = co;
+                }
+            }
+        }
+    }
+    if nodes.is_empty() {
+        return Err(format!("{}: nothing to lower", spec.name));
+    }
+    Ok(nodes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn pool2d_avg_and_max() {
+        // one channel, 4x4, f=2
+        let x: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let avg = pool2d(PoolKind::Avg, 1, 4, 4, 2, &x);
+        assert_eq!(avg, vec![2.5, 4.5, 10.5, 12.5]);
+        let max = pool2d(PoolKind::Max, 1, 4, 4, 2, &x);
+        assert_eq!(max, vec![5.0, 7.0, 13.0, 15.0]);
+    }
+
+    #[test]
+    fn pool2d_channel_major() {
+        // two channels pool independently
+        let mut x = vec![1.0f32; 4];
+        x.extend(vec![3.0f32; 4]);
+        let y = pool2d(PoolKind::Avg, 2, 2, 2, 2, &x);
+        assert_eq!(y, vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn global_pool_avg_and_max() {
+        let x = vec![1.0f32, 2.0, 3.0, -1.0, -2.0, -3.0];
+        assert_eq!(global_pool(PoolKind::Avg, 2, 3, &x), vec![2.0, -2.0]);
+        assert_eq!(global_pool(PoolKind::Max, 2, 3, &x), vec![3.0, -1.0]);
+    }
+
+    #[test]
+    fn infer_stride_pad_paper_cases() {
+        // resnet stem on cifar: 3x3, 32 -> 32 => stride 1 pad 1
+        assert_eq!(infer_stride_pad(32, 32, 3), Some((1, 1, 1)));
+        // imagenet stem: 7x7, 224 -> 112 => stride 2 (minimal pads: 2 + 3)
+        assert_eq!(infer_stride_pad(224, 112, 7), Some((2, 2, 3)));
+        // vgg downsampling conv: 3x3, 32 -> 16 => stride 2, trailing pad 1
+        assert_eq!(infer_stride_pad(32, 16, 3), Some((2, 0, 1)));
+        // 1x1 downsample, 32 -> 16 => stride 2 pad 0
+        assert_eq!(infer_stride_pad(32, 16, 1), Some((2, 0, 0)));
+        // convmixer depthwise: 8x8 "same" => asymmetric (3, 4)
+        assert_eq!(infer_stride_pad(32, 32, 8), Some((1, 3, 4)));
+        // impossible mapping: upsampling beyond what padding can reach
+        assert_eq!(infer_stride_pad(32, 1, 3), None);
+    }
+
+    #[test]
+    fn node_shape_bookkeeping() {
+        let n = Node::Pool2d { kind: PoolKind::Avg, c: 8, h: 4, w: 4, f: 2 };
+        assert_eq!((n.in_len(), n.out_len()), (128, 32));
+        assert!(!n.is_weight());
+        assert_eq!(n.resident_bytes_reference(), 0);
+        let g = Node::GlobalPool { kind: PoolKind::Max, c: 16, positions: 64 };
+        assert_eq!((g.in_len(), g.out_len()), (1024, 16));
+        let f = Node::Flatten { len: 40 };
+        assert_eq!((f.in_len(), f.out_len()), (40, 40));
+        let mut s = Scratch::default();
+        assert_eq!(f.forward_reference(&[1.0; 40], false, &mut s), vec![1.0; 40]);
+    }
+
+    #[test]
+    fn synth_payload_tiles_when_divisible() {
+        let mut rng = Rng::new(1);
+        let opts = LowerOptions::default();
+        match synth_payload(64, &opts, &mut rng) {
+            WeightPayload::Tiled { p, .. } => assert_eq!(p, 4),
+            other => panic!("expected tiled, got {other:?}"),
+        }
+        match synth_payload(63, &opts, &mut rng) {
+            WeightPayload::Bwnn { .. } => {}
+            other => panic!("expected bwnn fallback, got {other:?}"),
+        }
+    }
+}

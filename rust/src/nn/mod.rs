@@ -1,31 +1,45 @@
 //! Native sub-bit inference engine — the paper's §5.1 microcontroller kernel
-//! (Algorithm 1), in Rust.
+//! (Algorithm 1), in Rust, generalized to a layer graph.
 //!
-//! The engine runs entirely from a `TbnzModel`: a tiled FC layer computes
+//! The FC kernels run entirely from a `TbnzModel`: a tiled FC layer computes
 //! `y = ReLU(x · expand(t, α)ᵀ)` while touching only the q-length packed
 //! tile and the α scalars — the full weight matrix never exists in memory.
 //! The tile index cycles modulo q through the flattened weight tensor and
 //! the α index advances every q elements, exactly Algorithm 1's pointer
-//! arithmetic.
+//! arithmetic.  `fc_tiled_forward` is the readable reference;
+//! `fc_tiled_forward_fast` is the optimized hot path measured in
+//! EXPERIMENTS.md §Perf, and [`tiled_row_dot`] / [`payload_row_dot`] are the
+//! per-row forms the conv im2col path shares.
 //!
-//! `fc_tiled_forward` is the readable reference; `fc_tiled_forward_fast`
-//! is the optimized hot path measured in EXPERIMENTS.md §Perf.
+//! The module is organized in three tiers:
 //!
-//! On top of the f32 kernels sits the bit-packed XNOR-popcount fast path
-//! (`packed` module): expanded sign rows are packed into `u64` words at
-//! model-load time, hidden activations are sign-binarized with an XNOR-Net
-//! scale, and each FC layer reduces to XNOR + popcount with one multiply per
-//! constant-alpha run.  `MlpEngine` selects between the two implementations
-//! with `EnginePath::{Reference, Packed}`; the reference path doubles as the
-//! oracle the packed path is parity-tested against
-//! (`rust/tests/packed_parity.rs`).
+//! * **kernels** (this file) — per-row and per-layer FC math over every
+//!   `WeightPayload`;
+//! * **[`layers`]** — the layer-graph node types (`Fc`, `Conv2d`, pooling,
+//!   flatten) with per-node Reference and Packed forwards, plus
+//!   [`layers::lower_arch_spec`] which turns sequential `arch::ArchSpec`
+//!   CNNs into runnable node chains;
+//! * **[`Engine`]** (`engine` module) — executes a node chain on one of the
+//!   [`EnginePath`]s; [`MlpEngine`] is the thin FC-chain wrapper `serve`,
+//!   the CLI and the benches construct from a `TbnzModel`.
+//!
+//! The bit-packed fast path (`packed` module) materializes expanded sign
+//! rows as `u64` words at load time, sign-binarizes hidden activations with
+//! an XNOR-Net scale, and reduces every weight layer — FC rows and conv
+//! im2col patches alike — to XNOR + popcount with one multiply per
+//! constant-alpha run.  The reference path doubles as the oracle the packed
+//! paths are parity-tested against (`rust/tests/packed_parity.rs`,
+//! `rust/tests/conv_parity.rs`).
 
 mod engine;
+pub mod layers;
 mod packed;
 
-pub use engine::{MlpEngine, Nonlin};
-pub use packed::{binarize_activations, forward_quantized_reference, AlphaRun,
-                 EnginePath, PackedLayer, PackedModel, PackedPayload};
+pub use engine::{Engine, MlpEngine, Nonlin};
+pub use layers::{lower_arch_spec, Conv2dLayer, FcLayer, LowerOptions, Node, PoolKind,
+                 Scratch};
+pub use packed::{binarize_activations, forward_quantized_reference, payload_row_dot_i8,
+                 quantize_input_i8, AlphaRun, EnginePath, PackedLayer, PackedPayload};
 
 use crate::tbn::{LayerRecord, WeightPayload};
 use crate::tensor::BitVec;
@@ -77,23 +91,49 @@ pub fn fc_tiled_forward_fast(tile: &BitVec, alphas: &[f32], x: &[f32], m: usize,
     let n = x.len();
     let q = tile.len();
     debug_assert_eq!((m * n) % q, 0);
-    let single = alphas.len() == 1;
     let mut y = vec![0.0f32; m];
     for (i, yi) in y.iter_mut().enumerate() {
-        let mut acc = 0.0f32;
-        let row_start = i * n; // flat index of this row's first weight
-        let mut j = 0usize;
-        while j < n {
-            let flat = row_start + j;
-            let ti = flat % q;
-            let seg = (q - ti).min(n - j); // run length until tile wrap
-            let a = if single { alphas[0] } else { alphas[(flat / q) % alphas.len()] };
-            acc += a * tile.dot_range(ti, &x[j..j + seg]);
-            j += seg;
-        }
+        let acc = tiled_row_dot(tile, alphas, i * n, x);
         *yi = if relu { acc.max(0.0) } else { acc };
     }
     y
+}
+
+/// One row of the tiled forward: sign-dot of `x` against the weights at flat
+/// indices `[flat_start, flat_start + x.len())`, split into q-aligned
+/// segments so the α multiply hoists out of the inner loop.  FC rows pass
+/// `flat_start = i * n`; the conv im2col path passes `o * patch_len` —
+/// both walk the same Algorithm 1 pointer arithmetic.
+pub fn tiled_row_dot(tile: &BitVec, alphas: &[f32], flat_start: usize, x: &[f32]) -> f32 {
+    let q = tile.len();
+    let single = alphas.len() == 1;
+    let mut acc = 0.0f32;
+    let mut j = 0usize;
+    while j < x.len() {
+        let flat = flat_start + j;
+        let ti = flat % q;
+        let seg = (q - ti).min(x.len() - j); // run length until tile wrap
+        let a = if single { alphas[0] } else { alphas[(flat / q) % alphas.len()] };
+        acc += a * tile.dot_range(ti, &x[j..j + seg]);
+        j += seg;
+    }
+    acc
+}
+
+/// Sign-dot of one payload row against `x`: the row's weights start at flat
+/// index `flat_start` and span `x.len()` elements.  This is the per-row form
+/// of [`fc_layer_forward`] the conv im2col lowering dispatches into.
+pub fn payload_row_dot(payload: &WeightPayload, flat_start: usize, x: &[f32]) -> f32 {
+    match payload {
+        WeightPayload::Fp(w) => {
+            let row = &w[flat_start..flat_start + x.len()];
+            row.iter().zip(x).map(|(wj, xj)| wj * xj).sum()
+        }
+        WeightPayload::Bwnn { bits, alpha } => alpha * bits.dot_range(flat_start, x),
+        WeightPayload::Tiled { tile, alphas, .. } => {
+            tiled_row_dot(tile, alphas, flat_start, x)
+        }
+    }
 }
 
 /// Optimized Algorithm 1 with **row replication** (paper §4.1): when the
@@ -294,6 +334,36 @@ mod tests {
         let want = fc_fp_forward(&dense, &x, m, false);
         for (g, w_) in got.iter().zip(&want) {
             assert!((g - w_).abs() < 1e-3);
+        }
+    }
+
+    /// The per-row dispatch must agree with the whole-layer forward for
+    /// every payload kind (the conv path relies on this equivalence).
+    #[test]
+    fn payload_row_dot_matches_layer_forward() {
+        use crate::tbn::{LayerRecord, WeightPayload};
+        let mut r = Rng::new(17);
+        let (m, n) = (6usize, 21usize);
+        let w: Vec<f32> = (0..m * n).map(|_| r.gauss_f32()).collect();
+        let x: Vec<f32> = (0..n).map(|_| r.gauss_f32()).collect();
+        let records = [
+            LayerRecord { name: "fp".into(), shape: vec![m, n],
+                          payload: WeightPayload::Fp(w.clone()) },
+            LayerRecord { name: "bw".into(), shape: vec![m, n],
+                          payload: WeightPayload::Bwnn {
+                              bits: BitVec::from_signs(&w), alpha: 0.37 } },
+            LayerRecord { name: "tl".into(), shape: vec![m, n],
+                          payload: WeightPayload::Tiled {
+                              p: 6, tile: tile_from_weights(&w, 6),
+                              alphas: (0..6).map(|i| 0.1 + i as f32 * 0.2).collect() } },
+        ];
+        for rec in &records {
+            let whole = fc_layer_forward(rec, &x, false);
+            for i in 0..m {
+                let row = payload_row_dot(&rec.payload, i * n, &x);
+                assert!((row - whole[i]).abs() < 1e-3 * whole[i].abs().max(1.0),
+                        "{} row {i}: {row} vs {}", rec.name, whole[i]);
+            }
         }
     }
 

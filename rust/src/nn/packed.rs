@@ -1,38 +1,62 @@
-//! Bit-packed XNOR-popcount inference fast path (§5 deployment kernels).
+//! Bit-packed XNOR-popcount layer state (§5 deployment kernels).
 //!
-//! The reference engine expands each tile lazily and multiplies in f32.  The
-//! fast path instead materializes, **once at model-load time**, every FC
+//! The reference kernels expand each tile lazily and multiply in f32.  The
+//! fast path instead materializes, **once at model-load time**, every weight
 //! layer's expanded sign matrix as `u64`-packed rows plus per-row runs of
-//! constant alpha, then runs the deployment forward of the BNN literature
-//! (Kim & Smaragdis 2016; XNOR-Net):
+//! constant alpha ([`PackedLayer`]), then runs the deployment forward of the
+//! BNN literature (Kim & Smaragdis 2016; XNOR-Net):
 //!
-//! * layer 0 consumes the raw f32 input through the reference Algorithm 1
-//!   kernels (first layers stay higher precision, the standard BNN practice);
-//! * every later layer sign-binarizes its input activations (`h > 0`, the
-//!   crate-wide `BitVec::from_signs` convention) with an XNOR-Net scale
+//! * the first weight layer consumes the raw f32 input through the reference
+//!   Algorithm 1 kernels (first layers stay higher precision, the standard
+//!   BNN practice) — or, on [`EnginePath::PackedInt8`], the input quantized
+//!   to 8-bit integers ([`quantize_input_i8`], the paper's
+//!   microcontroller-style input packing) with pure integer MACs;
+//! * every later weight layer sign-binarizes its input activations (`h > 0`,
+//!   the crate-wide `BitVec::from_signs` convention) with an XNOR-Net scale
 //!   `gamma = mean |h|`, and computes `y = gamma * sum_runs alpha_run *
 //!   xnor_popcount(row_bits, x_bits)` — pure word ops plus one multiply per
 //!   alpha run.
 //!
-//! Because hidden activations are quantized, this computes a *different
-//! function* from `MlpEngine::forward` on the `Reference` path.  Its oracle
+//! A `PackedLayer` is a plain `(m, n)` row matrix over the layer's row-major
+//! flat weights: FC layers pack their `[m, n]` shape directly, Conv2d layers
+//! pack `(co, ci/groups * kh * kw)` rows and feed im2col patches through the
+//! same kernels (`nn::layers::Conv2dLayer`).  The graph-level orchestration
+//! lives in `nn::Engine`; this module owns only per-layer state and the
+//! scalar/bit kernels it runs on.
+//!
+//! Because hidden activations are quantized, the packed paths compute a
+//! *different function* from the `Reference` forward.  The FC-chain oracle
 //! is [`forward_quantized_reference`]: the same math in plain f32 over the
 //! expanded weights, which `rust/tests/packed_parity.rs` pins the bit
 //! kernels against (agreement up to f32 accumulation order and sign
 //! tie-breaks at exactly-zero activations).
 
+use super::{fc_fp_forward, fc_layer_forward};
 use crate::tbn::bitops::xnor_dot_words_range;
 use crate::tbn::{LayerRecord, TbnzModel, WeightPayload};
-use super::{fc_fp_forward, fc_layer_forward};
 
-/// Which implementation serves `MlpEngine::forward`.
+/// Which implementation serves `MlpEngine::forward` / `Engine::forward`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum EnginePath {
     /// Expand-and-multiply f32 path (the oracle; exact Algorithm 1 math).
     #[default]
     Reference,
-    /// Bit-packed XNOR-popcount path with sign-binarized hidden activations.
+    /// Bit-packed XNOR-popcount path with sign-binarized hidden activations;
+    /// the first weight layer runs on the raw f32 input.
     Packed,
+    /// `Packed` with the first weight layer's *input* quantized to 8-bit
+    /// integers (symmetric, [`quantize_input_i8`]) so layer 0 runs integer
+    /// MACs — the paper's microcontroller deployment.  Differs from the
+    /// f32 oracle by the input quantization error; `tests/conv_parity.rs`
+    /// documents and gates the tolerance.
+    PackedInt8,
+}
+
+impl EnginePath {
+    /// True for every path that builds packed per-layer state.
+    pub fn is_packed(&self) -> bool {
+        !matches!(self, EnginePath::Reference)
+    }
 }
 
 /// One run of constant alpha inside a packed row: `[start, start + len)`
@@ -63,13 +87,14 @@ pub enum PackedPayload {
     Dense(Vec<f32>),
 }
 
-/// One FC layer prepared for the packed forward.
+/// One weight layer prepared for the packed forward: an `(m, n)` row matrix
+/// over the layer's row-major flat weights.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PackedLayer {
     pub name: String,
-    /// Output features.
+    /// Rows (output features / conv output channels).
     pub m: usize,
-    /// Input features.
+    /// Row length (input features / im2col patch length).
     pub n: usize,
     pub payload: PackedPayload,
 }
@@ -90,12 +115,27 @@ fn pack_rows<F: Fn(usize) -> bool>(m: usize, n: usize, bit_at_flat: F) -> (usize
 }
 
 impl PackedLayer {
-    /// Pack one TBNZ layer record (2-D FC layers only).
+    /// Pack one TBNZ layer record (2-D FC layers; conv layers use
+    /// [`PackedLayer::from_record_mn`] with their im2col row view).
     pub fn from_record(l: &LayerRecord) -> Result<PackedLayer, String> {
         if l.shape.len() != 2 {
-            return Err(format!("{}: packed engine requires 2-D FC layers", l.name));
+            return Err(format!("{}: packed FC view requires a 2-D shape", l.name));
         }
-        let (m, n) = (l.shape[0], l.shape[1]);
+        PackedLayer::from_record_mn(l, l.shape[0], l.shape[1])
+    }
+
+    /// Pack any payload viewed as an `(m, n)` row matrix over its row-major
+    /// flat weights.  FC layers pass their shape directly; Conv2d passes
+    /// `(co, ci/groups * kh * kw)` so each row is one output channel's
+    /// im2col filter.
+    pub fn from_record_mn(l: &LayerRecord, m: usize, n: usize) -> Result<PackedLayer, String> {
+        if m * n != l.n() {
+            return Err(format!(
+                "{}: {m}x{n} row view does not cover {} params",
+                l.name,
+                l.n()
+            ));
+        }
         let payload = match &l.payload {
             WeightPayload::Fp(w) => {
                 if w.len() != m * n {
@@ -159,44 +199,50 @@ impl PackedLayer {
         }
     }
 
-    /// Forward this layer over a sign-binarized input: `xw` holds the packed
-    /// sign bits of the input activations (bits `>= n` zero) and `gamma` is
-    /// their XNOR-Net scale.  The multiply count is one per alpha run.
-    pub fn forward_binarized(&self, xw: &[u64], gamma: f32, relu: bool) -> Vec<f32> {
-        let mut y = Vec::with_capacity(self.m);
+    /// Binarized dot of row `i` against the packed input bits `xw` (no gamma
+    /// scale or nonlinearity applied): `sum_runs alpha_run *
+    /// xnor_popcount(row, xw)` for bit rows; add/subtract per weight for
+    /// dense rows.  The shared inner kernel of the packed FC *and* conv
+    /// forwards.
+    pub fn row_dot_binarized(&self, i: usize, xw: &[u64]) -> f32 {
         match &self.payload {
             PackedPayload::Bits { words_per_row, row_words, runs, run_offsets } => {
-                for i in 0..self.m {
-                    let row = &row_words[i * words_per_row..(i + 1) * words_per_row];
-                    let mut acc = 0.0f32;
-                    let (lo, hi) = (run_offsets[i] as usize, run_offsets[i + 1] as usize);
-                    for run in &runs[lo..hi] {
-                        let dot = xnor_dot_words_range(
-                            row, xw, run.start as usize, run.len as usize);
-                        acc += run.alpha * dot as f32;
-                    }
-                    let v = gamma * acc;
-                    y.push(if relu { v.max(0.0) } else { v });
+                let row = &row_words[i * words_per_row..(i + 1) * words_per_row];
+                let (lo, hi) = (run_offsets[i] as usize, run_offsets[i + 1] as usize);
+                let mut acc = 0.0f32;
+                for run in &runs[lo..hi] {
+                    let dot =
+                        xnor_dot_words_range(row, xw, run.start as usize, run.len as usize);
+                    acc += run.alpha * dot as f32;
                 }
+                acc
             }
             PackedPayload::Dense(w) => {
                 // fp weights against ±1 inputs: add or subtract each weight
-                for i in 0..self.m {
-                    let row = &w[i * self.n..(i + 1) * self.n];
-                    let mut acc = 0.0f32;
-                    for (j, &wj) in row.iter().enumerate() {
-                        if (xw[j / 64] >> (j % 64)) & 1 == 1 {
-                            acc += wj;
-                        } else {
-                            acc -= wj;
-                        }
+                let row = &w[i * self.n..(i + 1) * self.n];
+                let mut acc = 0.0f32;
+                for (j, &wj) in row.iter().enumerate() {
+                    if (xw[j / 64] >> (j % 64)) & 1 == 1 {
+                        acc += wj;
+                    } else {
+                        acc -= wj;
                     }
-                    let v = gamma * acc;
-                    y.push(if relu { v.max(0.0) } else { v });
                 }
+                acc
             }
         }
-        y
+    }
+
+    /// Forward all rows over a sign-binarized input: `xw` holds the packed
+    /// sign bits of the input activations (bits `>= n` zero) and `gamma` is
+    /// their XNOR-Net scale.  The multiply count is one per alpha run.
+    pub fn forward_binarized(&self, xw: &[u64], gamma: f32, relu: bool) -> Vec<f32> {
+        (0..self.m)
+            .map(|i| {
+                let v = gamma * self.row_dot_binarized(i, xw);
+                if relu { v.max(0.0) } else { v }
+            })
+            .collect()
     }
 }
 
@@ -223,103 +269,84 @@ pub fn binarize_activations(h: &[f32], words: &mut Vec<u64>) -> f32 {
     }
 }
 
-/// A whole model prepared for the packed forward. Layer 0 keeps its TBNZ
-/// record (it runs on the raw f32 input through the reference kernels);
-/// every later layer is bit-packed.
-#[derive(Debug, Clone, PartialEq)]
-pub struct PackedModel {
-    first: LayerRecord,
-    rest: Vec<PackedLayer>,
+/// Symmetric 8-bit input quantization (the paper's microcontroller input
+/// packing): `scale = max|x| / 127`, `xq[j] = round(x[j] / scale)` clamped
+/// to `[-127, 127]`.  Returns the scale (0.0 for an all-zero input, with
+/// `out` all zeros).  `out` is a scratch buffer reused across samples.
+///
+/// Per-element quantization error is at most `scale / 2`, so a dot with a
+/// weight row `w` is off by at most `scale / 2 * sum_j |w_j|` — the bound
+/// `tests/conv_parity.rs` gates the int8 kernels against.
+pub fn quantize_input_i8(x: &[f32], out: &mut Vec<i8>) -> f32 {
+    out.clear();
+    let maxabs = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    if maxabs == 0.0 || !maxabs.is_finite() {
+        out.resize(x.len(), 0);
+        return 0.0;
+    }
+    let scale = maxabs / 127.0;
+    out.extend(x.iter().map(|&v| (v / scale).round().clamp(-127.0, 127.0) as i8));
+    scale
 }
 
-impl PackedModel {
-    /// Pack every FC layer of a TBNZ model. Fails on non-2-D layers or
-    /// malformed payloads; shape-chain validation is `MlpEngine::new`'s job.
-    pub fn from_tbnz(model: &TbnzModel) -> Result<PackedModel, String> {
-        let Some(first) = model.layers.first() else {
-            return Err("packed engine requires at least one layer".to_string());
-        };
-        if first.shape.len() != 2 {
-            return Err(format!("{}: packed engine requires 2-D FC layers", first.name));
+/// One row of the layer-0 int8 kernel: dot of the row's weights (flat offset
+/// `flat_start`, spanning `xq.len()` elements) with the quantized input,
+/// rescaled by `scale`.  Binary payloads accumulate in i32 — pure integer
+/// MACs, the microcontroller inner loop — and apply alpha/scale once per
+/// run; fp payloads dequantize on the fly.
+pub fn payload_row_dot_i8(
+    payload: &WeightPayload,
+    flat_start: usize,
+    xq: &[i8],
+    scale: f32,
+) -> f32 {
+    match payload {
+        WeightPayload::Fp(w) => {
+            let row = &w[flat_start..flat_start + xq.len()];
+            scale * row.iter().zip(xq).map(|(wj, &q)| wj * q as f32).sum::<f32>()
         }
-        let rest = model.layers[1..]
-            .iter()
-            .map(PackedLayer::from_record)
-            .collect::<Result<Vec<_>, String>>()?;
-        Ok(PackedModel { first: first.clone(), rest })
-    }
-
-    /// Packed layers after the f32 entry layer.
-    pub fn packed_layers(&self) -> &[PackedLayer] {
-        &self.rest
-    }
-
-    /// Weight bytes resident on the packed path (entry layer at its TBNZ
-    /// residency + packed rows for the rest).
-    pub fn resident_bytes(&self) -> usize {
-        super::layer_resident_bytes(&self.first)
-            + self.rest.iter().map(PackedLayer::resident_bytes).sum::<usize>()
-    }
-
-    /// Max memory at any layer on the packed path: that layer's resident
-    /// weights (packed rows after layer 0) + f32 input/output activation
-    /// buffers — the Table 6 "Max Memory Usage" model applied to the fast
-    /// path's row storage.
-    pub fn peak_memory_bytes(&self) -> usize {
-        let first = super::layer_resident_bytes(&self.first)
-            + 4 * (self.first.shape[0] + self.first.shape[1]);
-        self.rest
-            .iter()
-            .map(|l| l.resident_bytes() + 4 * (l.m + l.n))
-            .fold(first, usize::max)
-    }
-
-    /// Quantized deployment forward for one sample (see module docs).
-    pub fn forward(&self, x: &[f32], relu_hidden: bool) -> Vec<f32> {
-        let mut scratch = Vec::new();
-        self.forward_with_scratch(x, relu_hidden, &mut scratch)
-    }
-
-    fn forward_with_scratch(&self, x: &[f32], relu_hidden: bool, xw: &mut Vec<u64>)
-                            -> Vec<f32> {
-        let mut h = fc_layer_forward(&self.first, x, relu_hidden && !self.rest.is_empty());
-        for (k, layer) in self.rest.iter().enumerate() {
-            let gamma = binarize_activations(&h, xw);
-            let relu = relu_hidden && k + 1 < self.rest.len();
-            h = layer.forward_binarized(xw, gamma, relu);
-        }
-        h
-    }
-
-    /// Batched quantized forward, layer-major: all samples pass through a
-    /// layer before the next layer starts, so one layer's packed rows are
-    /// touched consecutively (cache-warm across the batch) and the
-    /// bit-packing scratch buffer is allocated once for the whole batch.
-    /// Each sample still walks every row; a row-major blocked kernel is a
-    /// ROADMAP item.  Results are bit-identical to per-sample [`Self::forward`].
-    pub fn forward_batch(&self, xs: &[Vec<f32>], relu_hidden: bool) -> Vec<Vec<f32>> {
-        let relu0 = relu_hidden && !self.rest.is_empty();
-        let mut hs: Vec<Vec<f32>> = xs
-            .iter()
-            .map(|x| fc_layer_forward(&self.first, x, relu0))
-            .collect();
-        let mut xw = Vec::new();
-        for (k, layer) in self.rest.iter().enumerate() {
-            let relu = relu_hidden && k + 1 < self.rest.len();
-            for h in hs.iter_mut() {
-                let gamma = binarize_activations(h, &mut xw);
-                *h = layer.forward_binarized(&xw, gamma, relu);
+        WeightPayload::Bwnn { bits, alpha } => {
+            let mut acc = 0i32;
+            for (j, &q) in xq.iter().enumerate() {
+                if bits.get_bit(flat_start + j) {
+                    acc += q as i32;
+                } else {
+                    acc -= q as i32;
+                }
             }
+            alpha * scale * acc as f32
         }
-        hs
+        WeightPayload::Tiled { tile, alphas, .. } => {
+            let qlen = tile.len();
+            let single = alphas.len() == 1;
+            let mut total = 0.0f32;
+            let mut j = 0usize;
+            while j < xq.len() {
+                let flat = flat_start + j;
+                let ti = flat % qlen;
+                let seg = (qlen - ti).min(xq.len() - j);
+                let a = if single { alphas[0] } else { alphas[(flat / qlen) % alphas.len()] };
+                let mut acc = 0i32;
+                for k in 0..seg {
+                    if tile.get_bit(ti + k) {
+                        acc += xq[j + k] as i32;
+                    } else {
+                        acc -= xq[j + k] as i32;
+                    }
+                }
+                total += a * acc as f32;
+                j += seg;
+            }
+            scale * total
+        }
     }
 }
 
-/// f32 oracle of the quantized deployment forward: identical math to
-/// [`PackedModel::forward`] — sign binarization, gamma scaling, expanded
-/// dense multiply — with no bit tricks.  `Reference`-path engines serve this
-/// from `MlpEngine::forward_quantized`, and the parity suite compares the
-/// packed path against it.
+/// f32 oracle of the quantized deployment forward over an FC chain:
+/// identical math to the packed path — sign binarization, gamma scaling,
+/// expanded dense multiply — with no bit tricks.  `Reference`-path engines
+/// serve this from `MlpEngine::forward_quantized`, and the parity suite
+/// compares the packed path against it.
 pub fn forward_quantized_reference(model: &TbnzModel, x: &[f32], relu_hidden: bool)
                                    -> Vec<f32> {
     assert!(!model.layers.is_empty(), "empty model");
@@ -438,83 +465,115 @@ mod tests {
         }
     }
 
+    /// `row_dot_binarized` is the kernel `forward_binarized` sums from.
     #[test]
-    fn packed_model_matches_reference_oracle() {
-        let mut rng = Rng::new(33);
-        let model = TbnzModel {
-            layers: vec![
-                tiled_record("fc0", 48, 70, 4, AlphaMode::PerTile, &mut rng),
-                bwnn_record("fc1", 33, 48, &mut rng),
-                tiled_record("head", 10, 33, 2, AlphaMode::Single, &mut rng),
-            ],
+    fn row_dot_consistent_with_forward() {
+        let mut rng = Rng::new(37);
+        let rec = tiled_record("t", 6, 40, 4, AlphaMode::PerTile, &mut rng);
+        let packed = PackedLayer::from_record(&rec).unwrap();
+        let h = rng.normal_vec(40, 1.0);
+        let mut xw = Vec::new();
+        let gamma = binarize_activations(&h, &mut xw);
+        let fwd = packed.forward_binarized(&xw, gamma, false);
+        for i in 0..6 {
+            assert_eq!(fwd[i], gamma * packed.row_dot_binarized(i, &xw), "row {i}");
+        }
+    }
+
+    /// A 4-D conv record packs through the `(m, n)` view: each row is one
+    /// output channel's filter, and alpha runs follow the same flat index.
+    #[test]
+    fn conv_record_packs_via_mn_view() {
+        let mut rng = Rng::new(38);
+        let (co, cig, kh, kw) = (4usize, 3usize, 3usize, 3usize);
+        let w = rng.normal_vec(co * cig * kh * kw, 1.0);
+        let rec = LayerRecord {
+            name: "conv".into(),
+            shape: vec![co, cig, kh, kw],
+            payload: WeightPayload::Tiled {
+                p: 4,
+                tile: tile_from_weights(&w, 4),
+                alphas: alphas_from(&w, 4, AlphaMode::PerTile),
+            },
         };
-        let packed = PackedModel::from_tbnz(&model).unwrap();
-        for s in 0..4 {
-            let mut r = Rng::new(100 + s);
-            let x = r.normal_vec(70, 1.0);
-            let a = packed.forward(&x, true);
-            let b = forward_quantized_reference(&model, &x, true);
-            assert_eq!(a.len(), b.len());
-            for i in 0..a.len() {
-                assert!((a[i] - b[i]).abs() < 1e-3 * b[i].abs().max(1.0),
-                        "sample {s} out {i}: {} vs {}", a[i], b[i]);
+        // 2-D constructor refuses; the explicit row view packs
+        assert!(PackedLayer::from_record(&rec).is_err());
+        let n = cig * kh * kw;
+        let packed = PackedLayer::from_record_mn(&rec, co, n).unwrap();
+        assert_eq!((packed.m, packed.n), (co, n));
+        // parity against the expanded dense rows over a ±1 patch
+        let patch = rng.normal_vec(n, 1.0);
+        let mut xw = Vec::new();
+        let gamma = binarize_activations(&patch, &mut xw);
+        let signs: Vec<f32> =
+            patch.iter().map(|&v| if v > 0.0 { 1.0 } else { -1.0 }).collect();
+        let dense = rec.expand();
+        for o in 0..co {
+            let want: f32 =
+                dense[o * n..(o + 1) * n].iter().zip(&signs).map(|(a, b)| a * b).sum();
+            let got = gamma * packed.row_dot_binarized(o, &xw);
+            assert!((got - gamma * want).abs() < 1e-3 * want.abs().max(1.0), "row {o}");
+        }
+        // a wrong row view is rejected
+        assert!(PackedLayer::from_record_mn(&rec, co, n + 1).is_err());
+    }
+
+    #[test]
+    fn quantize_i8_bounds_and_zero() {
+        let mut out = Vec::new();
+        assert_eq!(quantize_input_i8(&[0.0, 0.0], &mut out), 0.0);
+        assert_eq!(out, vec![0i8, 0]);
+
+        let x = [1.0f32, -2.0, 0.5, 2.0];
+        let scale = quantize_input_i8(&x, &mut out);
+        assert!((scale - 2.0 / 127.0).abs() < 1e-7);
+        // extremes map to ±127, everything reconstructs within scale/2
+        assert_eq!(out[1], -127);
+        assert_eq!(out[3], 127);
+        for (j, &v) in x.iter().enumerate() {
+            assert!((out[j] as f32 * scale - v).abs() <= scale / 2.0 + 1e-6, "elem {j}");
+        }
+    }
+
+    /// The int8 row kernel is within the documented quantization bound of
+    /// the exact f32 row dot: `scale/2 * sum_j |w_j|` plus f32 slack.
+    #[test]
+    fn int8_row_dot_within_quantization_bound() {
+        let mut rng = Rng::new(39);
+        for rec in [
+            tiled_record("t", 8, 50, 4, AlphaMode::PerTile, &mut rng),
+            bwnn_record("b", 8, 50, &mut rng),
+            LayerRecord {
+                name: "fp".into(),
+                shape: vec![8, 50],
+                payload: WeightPayload::Fp(rng.normal_vec(400, 1.0)),
+            },
+        ] {
+            let x = rng.normal_vec(50, 1.0);
+            let mut xq = Vec::new();
+            let scale = quantize_input_i8(&x, &mut xq);
+            let dense = rec.expand();
+            for i in 0..8 {
+                let row = &dense[i * 50..(i + 1) * 50];
+                let exact: f32 = row.iter().zip(&x).map(|(w, v)| w * v).sum();
+                let got = payload_row_dot_i8(&rec.payload, i * 50, &xq, scale);
+                let bound =
+                    0.5 * scale * row.iter().map(|w| w.abs()).sum::<f32>() * 1.05 + 1e-4;
+                assert!((got - exact).abs() <= bound,
+                        "{} row {i}: {got} vs {exact} (bound {bound})", rec.name);
             }
         }
     }
 
     #[test]
-    fn forward_batch_equals_per_sample() {
-        let mut rng = Rng::new(34);
-        let model = TbnzModel {
-            layers: vec![
-                tiled_record("fc0", 32, 65, 4, AlphaMode::PerTile, &mut rng),
-                bwnn_record("head", 6, 32, &mut rng),
-            ],
-        };
-        let packed = PackedModel::from_tbnz(&model).unwrap();
-        let xs: Vec<Vec<f32>> = (0..5).map(|_| rng.normal_vec(65, 1.0)).collect();
-        let batch = packed.forward_batch(&xs, true);
-        for (x, y) in xs.iter().zip(&batch) {
-            assert_eq!(&packed.forward(x, true), y);
-        }
-    }
-
-    #[test]
-    fn single_layer_model_is_exactly_reference() {
-        let mut rng = Rng::new(35);
-        let model = TbnzModel {
-            layers: vec![tiled_record("only", 9, 20, 4, AlphaMode::PerTile, &mut rng)],
-        };
-        let packed = PackedModel::from_tbnz(&model).unwrap();
-        let x = rng.normal_vec(20, 1.0);
-        // one layer: no binarization anywhere, bit-exact against the oracle
-        assert_eq!(packed.forward(&x, true),
-                   forward_quantized_reference(&model, &x, true));
-    }
-
-    #[test]
-    fn resident_bytes_scale_with_rows() {
-        let mut rng = Rng::new(36);
-        let model = TbnzModel {
-            layers: vec![
-                tiled_record("fc0", 16, 64, 4, AlphaMode::Single, &mut rng),
-                bwnn_record("fc1", 64, 16, &mut rng),
-            ],
-        };
-        let packed = PackedModel::from_tbnz(&model).unwrap();
-        // fc1 packed rows: 64 rows x 1 word = 512 bytes of words at least
-        assert!(packed.resident_bytes() >= 512);
-        assert_eq!(packed.packed_layers().len(), 1);
-    }
-
-    #[test]
-    fn rejects_non_2d_layers() {
+    fn rejects_non_2d_layers_and_bad_views() {
         let rec = LayerRecord {
             name: "conv".into(),
             shape: vec![4, 4, 3, 3],
             payload: WeightPayload::Fp(vec![0.0; 144]),
         };
         assert!(PackedLayer::from_record(&rec).is_err());
-        assert!(PackedModel::from_tbnz(&TbnzModel { layers: vec![] }).is_err());
+        assert!(PackedLayer::from_record_mn(&rec, 4, 4).is_err());
+        assert!(PackedLayer::from_record_mn(&rec, 4, 36).is_ok());
     }
 }

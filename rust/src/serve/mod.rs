@@ -1,4 +1,4 @@
-//! Serving stack: request queue + dynamic batcher + worker pool.
+//! Serving stack: bounded request queue + dynamic batcher + worker pool.
 //!
 //! TBN is a compression paper, so the serving layer is deliberately thin
 //! (DESIGN.md §1): a threaded inference server that batches concurrent
@@ -12,6 +12,13 @@
 //! worker threads (`Server::start_pool`), each of which independently forms
 //! dynamic batches.  The model is shared through an `Arc`, so a packed
 //! `MlpEngine` is packed once and served by every worker.
+//!
+//! Backpressure: the queue is bounded by [`ServePolicy::queue_cap`]; when
+//! full, [`OverflowPolicy`] selects between shedding the request
+//! (`Reject` — `submit` returns an error and `ServerStats::rejected`
+//! counts it) and blocking the submitter until a worker drains space
+//! (`Block`).  Per-worker request/batch counters live in
+//! [`ServerStats::per_worker`].
 
 use std::collections::VecDeque;
 use std::sync::mpsc;
@@ -51,16 +58,27 @@ pub struct Response {
     pub batch_size: usize,
 }
 
+/// Per-worker serving counters.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerStats {
+    pub served: usize,
+    pub batches: usize,
+}
+
 /// Aggregate serving statistics.
 #[derive(Debug, Clone, Default)]
 pub struct ServerStats {
     pub served: usize,
     pub batches: usize,
+    /// Requests shed by the `Reject` overflow policy (never enqueued).
+    pub rejected: usize,
     pub total_latency_us: u64,
     pub max_latency_us: u64,
     pub batch_size_sum: usize,
     /// Worker threads serving the queue.
     pub workers: usize,
+    /// One entry per worker thread; sums match `served` / `batches`.
+    pub per_worker: Vec<WorkerStats>,
 }
 
 impl ServerStats {
@@ -87,6 +105,42 @@ impl Default for BatchPolicy {
     }
 }
 
+/// What `submit` does when the queue is at capacity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OverflowPolicy {
+    /// Shed the request: `submit` returns an error, `stats.rejected` counts it.
+    Reject,
+    /// Block the submitter until a worker drains space (or the server closes).
+    Block,
+}
+
+/// Full serving policy: batching + queue bound + overflow behavior.
+#[derive(Debug, Clone)]
+pub struct ServePolicy {
+    pub batch: BatchPolicy,
+    /// Max requests waiting in the queue (in-flight batches not counted);
+    /// clamped to at least 1.
+    pub queue_cap: usize,
+    pub on_full: OverflowPolicy,
+}
+
+impl Default for ServePolicy {
+    fn default() -> Self {
+        ServePolicy {
+            batch: BatchPolicy::default(),
+            queue_cap: 1024,
+            on_full: OverflowPolicy::Block,
+        }
+    }
+}
+
+impl ServePolicy {
+    /// The pre-backpressure behavior: an effectively unbounded queue.
+    pub fn unbounded(batch: BatchPolicy) -> ServePolicy {
+        ServePolicy { batch, queue_cap: usize::MAX, on_full: OverflowPolicy::Block }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Shared request queue
 // ---------------------------------------------------------------------------
@@ -97,34 +151,56 @@ enum Pop {
     Closed,
 }
 
-/// MPMC request queue: any number of submitters, N batching workers.
+/// Why a push was refused (the request is dropped either way).
+enum PushRefusal {
+    Full,
+    Closed,
+}
+
+/// Bounded MPMC request queue: any number of submitters, N batching workers.
 /// Closing lets workers drain what is already queued, then exit — no request
-/// that was accepted is ever dropped.
+/// that was accepted is ever dropped.  Submitters blocked on a full queue
+/// are woken by pops (space) and by close (shutdown error).
 struct Queue {
     state: Mutex<(VecDeque<Request>, bool)>,
-    cv: Condvar,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
 }
 
 impl Queue {
-    fn new() -> Queue {
-        Queue { state: Mutex::new((VecDeque::new(), false)), cv: Condvar::new() }
+    fn new(cap: usize) -> Queue {
+        Queue {
+            state: Mutex::new((VecDeque::new(), false)),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap: cap.max(1),
+        }
     }
 
-    /// Enqueue; fails (returning the request) after `close`.
-    fn push(&self, r: Request) -> Result<(), Request> {
+    /// Enqueue; refuses after `close`, and on a full queue either refuses
+    /// (`block_on_full = false`) or waits for space.
+    fn push(&self, r: Request, block_on_full: bool) -> Result<(), PushRefusal> {
         let mut s = self.state.lock().unwrap();
+        while !s.1 && s.0.len() >= self.cap {
+            if !block_on_full {
+                return Err(PushRefusal::Full);
+            }
+            s = self.not_full.wait(s).unwrap();
+        }
         if s.1 {
-            return Err(r);
+            return Err(PushRefusal::Closed);
         }
         s.0.push_back(r);
-        self.cv.notify_one();
+        self.not_empty.notify_one();
         Ok(())
     }
 
     fn close(&self) {
         let mut s = self.state.lock().unwrap();
         s.1 = true;
-        self.cv.notify_all();
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
     }
 
     /// Block until a request is available or the queue is closed and empty.
@@ -132,12 +208,13 @@ impl Queue {
         let mut s = self.state.lock().unwrap();
         loop {
             if let Some(r) = s.0.pop_front() {
+                self.not_full.notify_one();
                 return Some(r);
             }
             if s.1 {
                 return None;
             }
-            s = self.cv.wait(s).unwrap();
+            s = self.not_empty.wait(s).unwrap();
         }
     }
 
@@ -146,6 +223,7 @@ impl Queue {
         let mut s = self.state.lock().unwrap();
         loop {
             if let Some(r) = s.0.pop_front() {
+                self.not_full.notify_one();
                 return Pop::Got(r);
             }
             if s.1 {
@@ -155,11 +233,12 @@ impl Queue {
             if now >= deadline {
                 return Pop::TimedOut;
             }
-            let (guard, timeout) = self.cv.wait_timeout(s, deadline - now).unwrap();
+            let (guard, timeout) = self.not_empty.wait_timeout(s, deadline - now).unwrap();
             s = guard;
             if timeout.timed_out() {
                 // a request may have raced in right at the deadline
                 if let Some(r) = s.0.pop_front() {
+                    self.not_full.notify_one();
                     return Pop::Got(r);
                 }
                 return Pop::TimedOut;
@@ -168,8 +247,8 @@ impl Queue {
     }
 }
 
-fn worker_loop<M: BatchModel>(queue: &Queue, model: &M, stats: &Mutex<ServerStats>,
-                              policy: &BatchPolicy) {
+fn worker_loop<M: BatchModel>(worker: usize, queue: &Queue, model: &M,
+                              stats: &Mutex<ServerStats>, policy: &BatchPolicy) {
     loop {
         let Some(first) = queue.pop_blocking() else { return };
         let mut batch = vec![first];
@@ -187,6 +266,8 @@ fn worker_loop<M: BatchModel>(queue: &Queue, model: &M, stats: &Mutex<ServerStat
         let mut s = stats.lock().unwrap();
         s.batches += 1;
         s.batch_size_sum += bsz;
+        s.per_worker[worker].batches += 1;
+        s.per_worker[worker].served += bsz;
         for (req, y) in batch.into_iter().zip(ys) {
             let queue_us = run_start.saturating_duration_since(req.enqueued).as_micros() as u64;
             let total_us = req.enqueued.elapsed().as_micros() as u64;
@@ -204,49 +285,66 @@ pub struct Server {
     queue: Arc<Queue>,
     workers: Vec<thread::JoinHandle<()>>,
     stats: Arc<Mutex<ServerStats>>,
+    on_full: OverflowPolicy,
     in_dim: usize,
 }
 
 impl Server {
-    /// Single-worker server owning its model (the original API).
+    /// Single-worker server owning its model (the original API; unbounded
+    /// queue).
     pub fn start<M: BatchModel + Sync>(model: M, policy: BatchPolicy) -> Server {
         Server::start_pool(Arc::new(model), policy, 1)
     }
 
     /// `workers` batching threads sharing one `Arc`'d model over a single
-    /// request queue. With a packed `MlpEngine` the rows are packed once and
-    /// every worker serves from the same packed weights.
+    /// request queue (unbounded, the pre-backpressure behavior). With a
+    /// packed `MlpEngine` the rows are packed once and every worker serves
+    /// from the same packed weights.
     pub fn start_pool<M: BatchModel + Sync>(model: Arc<M>, policy: BatchPolicy,
                                             workers: usize) -> Server {
+        Server::start_pool_with(model, ServePolicy::unbounded(policy), workers)
+    }
+
+    /// Worker pool with the full serving policy: bounded queue +
+    /// backpressure behavior.
+    pub fn start_pool_with<M: BatchModel + Sync>(model: Arc<M>, policy: ServePolicy,
+                                                 workers: usize) -> Server {
         let n_workers = workers.max(1);
-        let queue = Arc::new(Queue::new());
+        let queue = Arc::new(Queue::new(policy.queue_cap));
         let stats = Arc::new(Mutex::new(ServerStats {
             workers: n_workers,
+            per_worker: vec![WorkerStats::default(); n_workers],
             ..ServerStats::default()
         }));
         let in_dim = model.in_dim();
         let handles = (0..n_workers)
-            .map(|_| {
+            .map(|w| {
                 let q = queue.clone();
                 let m = model.clone();
                 let st = stats.clone();
-                let pol = policy.clone();
-                thread::spawn(move || worker_loop(&q, &*m, &st, &pol))
+                let pol = policy.batch.clone();
+                thread::spawn(move || worker_loop(w, &q, &*m, &st, &pol))
             })
             .collect();
-        Server { queue, workers: handles, stats, in_dim }
+        Server { queue, workers: handles, stats, on_full: policy.on_full, in_dim }
     }
 
-    /// Submit a request; returns a receiver for the response.
+    /// Submit a request; returns a receiver for the response.  On a full
+    /// queue this sheds (`Reject`) or blocks (`Block`) per the policy.
     pub fn submit(&self, x: Vec<f32>) -> Result<mpsc::Receiver<Response>, String> {
         if x.len() != self.in_dim {
             return Err(format!("input dim {} != model dim {}", x.len(), self.in_dim));
         }
         let (rtx, rrx) = mpsc::channel();
-        self.queue
-            .push(Request { x, enqueued: Instant::now(), resp: rtx })
-            .map_err(|_| "server shut down".to_string())?;
-        Ok(rrx)
+        let block = self.on_full == OverflowPolicy::Block;
+        match self.queue.push(Request { x, enqueued: Instant::now(), resp: rtx }, block) {
+            Ok(()) => Ok(rrx),
+            Err(PushRefusal::Full) => {
+                self.stats.lock().unwrap().rejected += 1;
+                Err("server queue full (backpressure: rejected)".to_string())
+            }
+            Err(PushRefusal::Closed) => Err("server shut down".to_string()),
+        }
     }
 
     /// Blocking single-request convenience.
@@ -404,5 +502,92 @@ mod tests {
         );
         assert_eq!(server.stats().workers, 1);
         assert_eq!(server.infer(vec![5.0]).unwrap().y, vec![5.0]);
+    }
+
+    #[test]
+    fn reject_policy_sheds_load_and_counts_it() {
+        // one slow worker, queue of 1, no batching: a fast burst must shed
+        let server = Server::start_pool_with(
+            Arc::new(SumModel { dim: 1, delay: Duration::from_millis(30) }),
+            ServePolicy {
+                batch: BatchPolicy { max_batch: 1, window: Duration::ZERO },
+                queue_cap: 1,
+                on_full: OverflowPolicy::Reject,
+            },
+            1,
+        );
+        let total = 12usize;
+        let mut accepted = Vec::new();
+        let mut rejected = 0usize;
+        for i in 0..total {
+            match server.submit(vec![i as f32]) {
+                Ok(rx) => accepted.push(rx),
+                Err(e) => {
+                    assert!(e.contains("queue full"), "unexpected error: {e}");
+                    rejected += 1;
+                }
+            }
+        }
+        assert!(rejected >= 1, "a 12-deep instant burst must overflow cap 1");
+        // every accepted request is still answered
+        for rx in accepted {
+            rx.recv().expect("accepted request dropped");
+        }
+        let stats = server.stats();
+        assert_eq!(stats.rejected, rejected);
+        assert_eq!(stats.served + stats.rejected, total);
+    }
+
+    #[test]
+    fn block_policy_never_drops() {
+        let server = Arc::new(Server::start_pool_with(
+            Arc::new(SumModel { dim: 1, delay: Duration::from_micros(300) }),
+            ServePolicy {
+                batch: BatchPolicy { max_batch: 4, window: Duration::from_micros(100) },
+                queue_cap: 2,
+                on_full: OverflowPolicy::Block,
+            },
+            2,
+        ));
+        let mut handles = Vec::new();
+        for t in 0..4usize {
+            let s = server.clone();
+            handles.push(thread::spawn(move || {
+                for i in 0..15 {
+                    let v = (t * 100 + i) as f32;
+                    let r = s.infer(vec![v]).unwrap(); // blocks, never rejects
+                    assert_eq!(r.y[0], v);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let stats = server.stats();
+        assert_eq!(stats.served, 60);
+        assert_eq!(stats.rejected, 0);
+    }
+
+    #[test]
+    fn per_worker_counters_sum_to_totals() {
+        let server = Arc::new(Server::start_pool_with(
+            Arc::new(SumModel { dim: 1, delay: Duration::from_micros(200) }),
+            ServePolicy {
+                batch: BatchPolicy { max_batch: 4, window: Duration::from_micros(200) },
+                queue_cap: 64,
+                on_full: OverflowPolicy::Block,
+            },
+            3,
+        ));
+        let rxs: Vec<_> = (0..48).map(|i| server.submit(vec![i as f32]).unwrap()).collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let stats = server.stats();
+        assert_eq!(stats.per_worker.len(), 3);
+        assert_eq!(stats.per_worker.iter().map(|w| w.served).sum::<usize>(), stats.served);
+        assert_eq!(stats.per_worker.iter().map(|w| w.batches).sum::<usize>(),
+                   stats.batches);
+        assert_eq!(stats.served, 48);
     }
 }

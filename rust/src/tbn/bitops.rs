@@ -30,8 +30,69 @@ use super::policy::{decide, Quant, TilingPolicy};
 ///
 /// This is the one bit-op the whole packed inference path reduces to; the
 /// per-layer alpha scaling happens outside, once per constant-alpha run.
+///
+/// The interior full words run through a 4-wide unrolled `count_ones`
+/// accumulation (four independent chains the CPU can retire in parallel);
+/// only the boundary words pay the masking.
+/// `benches/table2_bitops.rs` reports the words-per-second delta against
+/// [`xnor_dot_words_range_scalar`].
 #[inline]
 pub fn xnor_dot_words_range(a: &[u64], b: &[u64], start: usize, len: usize) -> i64 {
+    if len == 0 {
+        return 0;
+    }
+    let end = start + len;
+    debug_assert!(end <= a.len() * 64 && end <= b.len() * 64);
+    let first_w = start / 64;
+    let last_w = (end - 1) / 64;
+    // whole range inside one word: mask both ends at once
+    if first_w == last_w {
+        let mut mask = u64::MAX << (start % 64);
+        let valid = end - last_w * 64; // 1..=64 bits of this word are in range
+        if valid < 64 {
+            mask &= (1u64 << valid) - 1;
+        }
+        let same = ((!(a[first_w] ^ b[first_w])) & mask).count_ones() as i64;
+        return 2 * same - len as i64;
+    }
+    let mut same: u64 = 0;
+    let mut w = first_w;
+    if start % 64 != 0 {
+        // leading partial word
+        let mask = u64::MAX << (start % 64);
+        same += ((!(a[w] ^ b[w])) & mask).count_ones() as u64;
+        w += 1;
+    }
+    // full words: [w, full_end)
+    let full_end = if end % 64 == 0 { last_w + 1 } else { last_w };
+    let (mut s0, mut s1, mut s2, mut s3) = (0u64, 0u64, 0u64, 0u64);
+    while w + 4 <= full_end {
+        s0 += (!(a[w] ^ b[w])).count_ones() as u64;
+        s1 += (!(a[w + 1] ^ b[w + 1])).count_ones() as u64;
+        s2 += (!(a[w + 2] ^ b[w + 2])).count_ones() as u64;
+        s3 += (!(a[w + 3] ^ b[w + 3])).count_ones() as u64;
+        w += 4;
+    }
+    same += s0 + s1 + s2 + s3;
+    while w < full_end {
+        same += (!(a[w] ^ b[w])).count_ones() as u64;
+        w += 1;
+    }
+    if end % 64 != 0 {
+        // trailing partial word
+        let valid = end - last_w * 64;
+        let mask = (1u64 << valid) - 1;
+        same += ((!(a[last_w] ^ b[last_w])) & mask).count_ones() as u64;
+    }
+    2 * same as i64 - len as i64
+}
+
+/// Scalar (one-word-at-a-time) form of [`xnor_dot_words_range`] — the
+/// pre-unroll baseline, kept for the before/after words-per-second
+/// comparison in `benches/table2_bitops.rs` and as a second oracle for the
+/// property tests.
+#[inline]
+pub fn xnor_dot_words_range_scalar(a: &[u64], b: &[u64], start: usize, len: usize) -> i64 {
     if len == 0 {
         return 0;
     }
@@ -178,6 +239,31 @@ mod tests {
             );
         }
         assert_eq!(xnor_dot_words_range(a.words(), b.words(), 17, 0), 0);
+    }
+
+    /// The 4-wide unrolled kernel and the scalar baseline are the same
+    /// function — over long word runs (where the unroll engages), ragged
+    /// boundaries and sub-word ranges.
+    #[test]
+    fn unrolled_matches_scalar_baseline() {
+        let mut r = Rng::new(23);
+        let len = 64 * 40 + 17; // > 4-word unroll body plus ragged tail
+        let a = BitVec::from_signs(&r.normal_vec(len, 1.0));
+        let b = BitVec::from_signs(&r.normal_vec(len, 1.0));
+        for _ in 0..300 {
+            let start = r.below(len);
+            let l = 1 + r.below(len - start);
+            assert_eq!(
+                xnor_dot_words_range(a.words(), b.words(), start, l),
+                xnor_dot_words_range_scalar(a.words(), b.words(), start, l),
+                "start={start} len={l}"
+            );
+        }
+        // word-aligned full-width run (pure unroll body)
+        assert_eq!(
+            xnor_dot_words_range(a.words(), b.words(), 0, 64 * 40),
+            xnor_dot_words_range_scalar(a.words(), b.words(), 0, 64 * 40),
+        );
     }
 
     #[test]

@@ -1,0 +1,422 @@
+//! Native Conv2d parity (artifact-free).
+//!
+//! Three oracles pin the conv lowering:
+//!
+//! * the **naive nested-loop convolution** over expanded f32 weights checks
+//!   the Reference im2col path across randomized shapes (stride, padding,
+//!   channels, groups, payload kinds);
+//! * the **f32 quantized oracle** (per-patch sign/gamma math,
+//!   `Engine::forward_quantized` on a Reference engine) checks the Packed
+//!   XNOR-popcount path, with the same f32-rounding tolerance and sign-tie
+//!   outlier budget as `packed_parity.rs`;
+//! * the **int8 quantization bound** checks the `PackedInt8` layer-0
+//!   kernels: per output, the deviation from the exact f32 forward is at
+//!   most `scale/2 * sum_j |w_j|` (`scale = max|x|/127`), the documented
+//!   tolerance of the microcontroller-style input packing.
+//!
+//! On top sit end-to-end smoke tests: `arch::cnn_micro` and
+//! `arch::pointnet_micro` lowered through `nn::lower_arch_spec` and run on
+//! every `EnginePath`, plus graph-construction checks for the full-size
+//! `vgg_small_cifar` / `convmixer_cifar` specs (their forwards run in the
+//! `#[ignore]`d tier — too slow for the default debug test run).
+
+use tiledbits::arch;
+use tiledbits::nn::{
+    lower_arch_spec, Conv2dLayer, Engine, EnginePath, LowerOptions, Node, Nonlin, Scratch,
+};
+use tiledbits::tbn::{alphas_from, tile_from_weights, AlphaMode, LayerRecord, WeightPayload};
+use tiledbits::tensor::BitVec;
+use tiledbits::util::Rng;
+
+// ---------------------------------------------------------------------------
+// Helpers
+// ---------------------------------------------------------------------------
+
+fn random_payload(rng: &mut Rng, params: usize) -> WeightPayload {
+    let w = rng.normal_vec(params, 1.0);
+    match rng.below(4) {
+        // tiled dominates the draw: it is the payload under test
+        0 | 1 => {
+            let mut p = [2usize, 4, 8][rng.below(3)];
+            while params % p != 0 && p > 1 {
+                p /= 2;
+            }
+            if params % p != 0 {
+                return WeightPayload::Fp(w);
+            }
+            let mode = if rng.below(2) == 0 { AlphaMode::Single } else { AlphaMode::PerTile };
+            WeightPayload::Tiled {
+                p,
+                tile: tile_from_weights(&w, p),
+                alphas: alphas_from(&w, p, mode),
+            }
+        }
+        2 => WeightPayload::Bwnn { bits: BitVec::from_signs(&w), alpha: 0.05 + rng.next_f32() },
+        _ => WeightPayload::Fp(w),
+    }
+}
+
+fn conv_record(rng: &mut Rng, name: &str, co: usize, cig: usize, kh: usize, kw: usize)
+               -> LayerRecord {
+    LayerRecord {
+        name: name.into(),
+        shape: vec![co, cig, kh, kw],
+        payload: random_payload(rng, co * cig * kh * kw),
+    }
+}
+
+/// Plain nested-loop convolution over expanded row-major weights
+/// `[co, ci/groups, kh, kw]` — the shape-by-shape oracle.
+#[allow(clippy::too_many_arguments)]
+fn naive_conv(x: &[f32], w: &[f32], ci: usize, co: usize, kh: usize, kw: usize,
+              groups: usize, stride: usize, pad: usize, h_in: usize, w_in: usize,
+              h_out: usize, w_out: usize) -> Vec<f32> {
+    let cig = ci / groups;
+    let cog = co / groups;
+    let mut y = vec![0.0f32; co * h_out * w_out];
+    for o in 0..co {
+        let g = o / cog;
+        for oy in 0..h_out {
+            for ox in 0..w_out {
+                let mut acc = 0.0f32;
+                for cc in 0..cig {
+                    let c = g * cig + cc;
+                    for ky in 0..kh {
+                        for kx in 0..kw {
+                            let yy = (oy * stride + ky) as isize - pad as isize;
+                            let xx = (ox * stride + kx) as isize - pad as isize;
+                            if yy >= 0 && (yy as usize) < h_in
+                                && xx >= 0 && (xx as usize) < w_in {
+                                let wv = w[((o * cig + cc) * kh + ky) * kw + kx];
+                                acc += wv * x[(c * h_in + yy as usize) * w_in + xx as usize];
+                            }
+                        }
+                    }
+                }
+                y[(o * h_out + oy) * w_out + ox] = acc;
+            }
+        }
+    }
+    y
+}
+
+fn argmax(y: &[f32]) -> usize {
+    y.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+/// Compare outputs with an f32 tolerance and a small sign-tie outlier budget.
+fn assert_close(a: &[f32], b: &[f32], allowed_outliers: usize, ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length mismatch");
+    let scale = a.iter().chain(b.iter()).fold(1.0f32, |m, v| m.max(v.abs()));
+    let tol = 1e-3 * scale;
+    let bad: Vec<String> = (0..a.len())
+        .filter(|&i| (a[i] - b[i]).abs() > tol)
+        .map(|i| format!("[{i}] {} vs {}", a[i], b[i]))
+        .collect();
+    assert!(bad.len() <= allowed_outliers,
+            "{ctx}: {}/{} outputs beyond tol {tol}: {}",
+            bad.len(), a.len(), bad.join(", "));
+}
+
+// ---------------------------------------------------------------------------
+// Reference path vs the naive oracle
+// ---------------------------------------------------------------------------
+
+#[test]
+fn reference_conv_matches_naive_oracle_across_shapes() {
+    let mut cases = 0usize;
+    for case in 0..40u64 {
+        let mut rng = Rng::new(0xC0214 ^ case.wrapping_mul(0x9E3779B97F4A7C15));
+        let groups_pick = rng.below(3);
+        let (ci, co) = match groups_pick {
+            0 => (1 + rng.below(4), 1 + rng.below(6)),       // groups = 1
+            1 => { let c = 1 + rng.below(4); (c, c) }        // depthwise
+            _ => { let c = 2 * (1 + rng.below(2)); (c, 2 * c) } // grouped, cog = 2..
+        };
+        let groups = match groups_pick {
+            0 => 1,
+            _ => ci,
+        };
+        let k = [1usize, 2, 3][rng.below(3)];
+        let h_in = k + 3 + rng.below(6);
+        let w_in = k + 3 + rng.below(6);
+        let stride = 1 + rng.below(2);
+        let pad = rng.below(k + 1);
+        if h_in + 2 * pad < k || w_in + 2 * pad < k {
+            continue;
+        }
+        let cig = ci / groups;
+        let rec = conv_record(&mut rng, &format!("c{case}"), co, cig, k, k);
+        let conv = Conv2dLayer::new(rec.clone(), (ci, h_in, w_in), stride, pad, groups)
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+        let x = rng.normal_vec(ci * h_in * w_in, 1.0);
+        let mut scratch = Scratch::default();
+        for relu in [false, true] {
+            let got = conv.forward_reference(&x, relu, &mut scratch);
+            let mut want = naive_conv(&x, &rec.expand(), ci, co, k, k, groups, stride,
+                                      pad, h_in, w_in, conv.h_out, conv.w_out);
+            if relu {
+                for v in want.iter_mut() {
+                    *v = v.max(0.0);
+                }
+            }
+            assert_close(&got, &want, 0,
+                         &format!("case {case}: ci={ci} co={co} k={k} s={stride} \
+                                   pad={pad} g={groups} relu={relu}"));
+        }
+        cases += 1;
+    }
+    assert!(cases >= 30, "conv parity must cover at least 30 shape configs, got {cases}");
+}
+
+// ---------------------------------------------------------------------------
+// Packed path vs the f32 quantized oracle
+// ---------------------------------------------------------------------------
+
+/// Two stacked convs: the second runs binarized on the packed path, so this
+/// exercises the XNOR conv kernels (a single conv layer would run layer-0
+/// f32 on every path).
+fn two_conv_nodes(rng: &mut Rng, ci: usize, h: usize, w: usize) -> Vec<Node> {
+    let mid = 3 + rng.below(4);
+    let co = 2 + rng.below(5);
+    let rec0 = conv_record(rng, "conv0", mid, ci, 3, 3);
+    let conv0 = Conv2dLayer::new(rec0, (ci, h, w), 1, 1, 1).unwrap();
+    let (h1, w1) = (conv0.h_out, conv0.w_out);
+    let rec1 = conv_record(rng, "conv1", co, mid, 3, 3);
+    let conv1 = Conv2dLayer::new(rec1, (mid, h1, w1), 1, 1, 1).unwrap();
+    vec![Node::Conv2d(conv0), Node::Conv2d(conv1)]
+}
+
+#[test]
+fn packed_conv_matches_quantized_oracle() {
+    for case in 0..8u64 {
+        let mut rng = Rng::new(0xFACADE ^ case.wrapping_mul(0x9E3779B97F4A7C15));
+        let (ci, h, w) = (1 + rng.below(3), 6 + rng.below(4), 6 + rng.below(4));
+        let nodes = two_conv_nodes(&mut rng, ci, h, w);
+        let reference = Engine::new(nodes.clone(), Nonlin::Relu, EnginePath::Reference)
+            .unwrap();
+        let packed = Engine::new(nodes, Nonlin::Relu, EnginePath::Packed).unwrap();
+        let budget = 1 + packed.out_len() / 50; // sign-tie outlier budget
+        for s in 0..3 {
+            let x = rng.normal_vec(reference.in_len(), 1.0);
+            let a = reference.forward_quantized(&x);
+            let b = packed.forward(&x);
+            assert_close(&a, &b, budget, &format!("case {case} sample {s}"));
+            // on the packed path, forward and forward_quantized coincide
+            assert_eq!(b, packed.forward_quantized(&x));
+        }
+    }
+}
+
+#[test]
+fn packed_conv_batch_equals_per_sample() {
+    let mut rng = Rng::new(515);
+    let nodes = two_conv_nodes(&mut rng, 2, 7, 7);
+    let packed = Engine::new(nodes, Nonlin::Relu, EnginePath::Packed).unwrap();
+    let xs: Vec<Vec<f32>> = (0..5).map(|_| rng.normal_vec(packed.in_len(), 1.0)).collect();
+    let batch = packed.forward_batch(&xs);
+    for (x, y) in xs.iter().zip(&batch) {
+        assert_eq!(&packed.forward(x), y, "batch and single-sample must be bit-equal");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Int8 layer-0 parity: the documented quantization bound
+// ---------------------------------------------------------------------------
+
+#[test]
+fn int8_conv_layer0_within_quantization_bound() {
+    for case in 0..6u64 {
+        let mut rng = Rng::new(0x18 ^ case.wrapping_mul(0x9E3779B97F4A7C15));
+        let (ci, h, w) = (1 + rng.below(3), 6, 7);
+        let co = 2 + rng.below(4);
+        let rec = conv_record(&mut rng, "conv0", co, ci, 3, 3);
+        let conv = Conv2dLayer::new(rec.clone(), (ci, h, w), 1, 1, 1).unwrap();
+        let node = vec![Node::Conv2d(conv.clone())];
+        // single weight layer: PackedInt8 runs the int8 kernel, Reference the
+        // exact f32 math — the difference is pure input-quantization error
+        let int8 = Engine::new(node.clone(), Nonlin::None, EnginePath::PackedInt8).unwrap();
+        let exact = Engine::new(node, Nonlin::None, EnginePath::Reference).unwrap();
+        let x = rng.normal_vec(int8.in_len(), 1.0);
+        let a = int8.forward(&x);
+        let b = exact.forward(&x);
+        let scale = x.iter().fold(0.0f32, |m, v| m.max(v.abs())) / 127.0;
+        let dense = rec.expand();
+        let n = conv.patch_len();
+        let area = conv.h_out * conv.w_out;
+        for o in 0..co {
+            let bound = 0.5 * scale
+                * dense[o * n..(o + 1) * n].iter().map(|v| v.abs()).sum::<f32>()
+                * 1.05
+                + 1e-4;
+            for pos in 0..area {
+                let i = o * area + pos;
+                assert!((a[i] - b[i]).abs() <= bound,
+                        "case {case} out {i}: {} vs {} (bound {bound})", a[i], b[i]);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end CNN smoke tests through the lowered layer graph
+// ---------------------------------------------------------------------------
+
+fn micro_opts(c: usize, hw: (usize, usize), seed: u64) -> LowerOptions {
+    LowerOptions { input: (c, hw.0, hw.1), p: 4, alpha_mode: AlphaMode::PerTile, seed }
+}
+
+#[test]
+fn cnn_micro_runs_natively_on_every_path() {
+    let spec = arch::cnn_micro();
+    let nodes = lower_arch_spec(&spec, &micro_opts(3, (16, 16), 7)).unwrap();
+    // conv0, conv1, global pool, head
+    assert_eq!(nodes.len(), 4);
+    assert!(matches!(nodes[0], Node::Conv2d(_)));
+    assert!(matches!(nodes[1], Node::Conv2d(_)));
+    assert!(matches!(nodes[2], Node::GlobalPool { .. }));
+    assert!(matches!(nodes[3], Node::Fc(_)));
+
+    let reference = Engine::new(nodes.clone(), Nonlin::Relu, EnginePath::Reference).unwrap();
+    let packed = Engine::new(nodes.clone(), Nonlin::Relu, EnginePath::Packed).unwrap();
+    let int8 = Engine::new(nodes, Nonlin::Relu, EnginePath::PackedInt8).unwrap();
+    assert_eq!(reference.in_len(), 3 * 16 * 16);
+    assert_eq!(reference.out_len(), 10);
+
+    // the strict per-output parity lives in the two-conv tests above (where
+    // the binarized layer sees bit-identical inputs on both paths); through
+    // a deep net a sign tie-break can legitimately flip a hidden unit, so
+    // the end-to-end gate is argmax agreement over a sample set
+    let mut rng = Rng::new(99);
+    let n_samples = 8usize;
+    let mut agree = 0usize;
+    for _ in 0..n_samples {
+        let x = rng.normal_vec(reference.in_len(), 1.0);
+        let y_ref = reference.forward(&x);
+        assert_eq!(y_ref.len(), 10);
+        assert!(y_ref.iter().all(|v| v.is_finite()));
+        let a = argmax(&reference.forward_quantized(&x));
+        let b = argmax(&packed.forward(&x));
+        if a == b {
+            agree += 1;
+        }
+        // on the packed path, forward and forward_quantized coincide exactly
+        let y_packed = packed.forward(&x);
+        assert_eq!(y_packed, packed.forward_quantized(&x));
+        // int8 stays finite and the batch path is bit-identical
+        let y8 = int8.forward(&x);
+        assert!(y8.iter().all(|v| v.is_finite()));
+        assert_eq!(int8.forward_batch(&[x.clone()])[0], y8);
+    }
+    assert!(agree * 10 >= n_samples * 6,
+            "packed/oracle argmax agreement {agree}/{n_samples}");
+    // packed residency stays below fp on the binarized layers
+    assert!(packed.resident_weight_bytes() < 4 * spec.total_params());
+    assert!(packed.peak_memory_bytes() > 0);
+}
+
+#[test]
+fn pointnet_micro_shared_mlp_lowers_to_token_convs() {
+    let spec = arch::pointnet_micro();
+    let nodes = lower_arch_spec(&spec, &micro_opts(3, (64, 1), 8)).unwrap();
+    // conv1, conv2 (1x1 token convs), global pool, fc1, head
+    assert_eq!(nodes.len(), 5);
+    assert!(matches!(&nodes[0], Node::Conv2d(c) if (c.kh, c.kw) == (1, 1) && c.h_out == 64));
+    assert!(matches!(&nodes[1], Node::Conv2d(c) if c.co == 32));
+    assert!(matches!(nodes[2], Node::GlobalPool { positions: 64, .. }));
+    assert!(matches!(nodes[3], Node::Fc(_)));
+    assert!(matches!(nodes[4], Node::Fc(_)));
+
+    let reference = Engine::new(nodes.clone(), Nonlin::Relu, EnginePath::Reference).unwrap();
+    let packed = Engine::new(nodes, Nonlin::Relu, EnginePath::Packed).unwrap();
+    let mut rng = Rng::new(111);
+    let n_samples = 8usize;
+    let mut agree = 0usize;
+    for _ in 0..n_samples {
+        let x = rng.normal_vec(reference.in_len(), 1.0);
+        if argmax(&reference.forward_quantized(&x)) == argmax(&packed.forward(&x)) {
+            agree += 1;
+        }
+    }
+    assert!(agree * 10 >= n_samples * 6,
+            "packed/oracle argmax agreement {agree}/{n_samples}");
+}
+
+// ---------------------------------------------------------------------------
+// Full-size paper specs: graph construction (forwards are #[ignore]d)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn vgg_small_lowers_to_expected_graph() {
+    let spec = arch::vgg_small_cifar();
+    let nodes = lower_arch_spec(&spec, &micro_opts(3, (32, 32), 5)).unwrap();
+    // 6 convs + avg-pool (8x8 -> 4x4) + flatten + fc head
+    assert_eq!(nodes.len(), 9);
+    let convs: Vec<&Conv2dLayer> = nodes
+        .iter()
+        .filter_map(|n| match n {
+            Node::Conv2d(c) => Some(c),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(convs.len(), 6);
+    // spatial-reduction convs land on stride 2
+    assert_eq!((convs[0].stride, convs[2].stride, convs[4].stride), (1, 2, 2));
+    assert_eq!((convs[5].h_out, convs[5].w_out), (8, 8));
+    assert!(matches!(nodes[6], Node::Pool2d { f: 2, .. }));
+    assert!(matches!(nodes[7], Node::Flatten { len: 8192 }));
+    assert!(matches!(&nodes[8], Node::Fc(fc) if fc.m == 10 && fc.n == 8192));
+    // chain validates end-to-end on the reference path (no packing cost)
+    let engine = Engine::new(nodes, Nonlin::Relu, EnginePath::Reference).unwrap();
+    assert_eq!(engine.in_len(), 3 * 32 * 32);
+    assert_eq!(engine.out_len(), 10);
+}
+
+#[test]
+fn convmixer_lowers_with_depthwise_groups_and_same_padding() {
+    let spec = arch::convmixer_cifar();
+    let nodes = lower_arch_spec(&spec, &micro_opts(3, (32, 32), 6)).unwrap();
+    // patch embed + 16 * (dw + pw) + global pool + head
+    assert_eq!(nodes.len(), 1 + 32 + 2);
+    match &nodes[1] {
+        Node::Conv2d(dw) => {
+            assert_eq!(dw.groups, 256);
+            assert_eq!((dw.kh, dw.kw), (8, 8));
+            assert_eq!(dw.pad, 3); // "same" even kernel: lead 3, trail 4
+            assert_eq!((dw.h_out, dw.w_out), (32, 32));
+        }
+        other => panic!("expected depthwise conv, got {other:?}"),
+    }
+    assert!(matches!(nodes[33], Node::GlobalPool { positions: 1024, .. }));
+    let engine = Engine::new(nodes, Nonlin::Relu, EnginePath::Reference).unwrap();
+    assert_eq!(engine.out_len(), 10);
+}
+
+#[test]
+fn resnet_branching_is_rejected_with_a_shape_error() {
+    let err = lower_arch_spec(&arch::resnet18_cifar(), &micro_opts(3, (32, 32), 4))
+        .unwrap_err();
+    assert!(err.contains("cannot reconcile"), "unexpected error: {err}");
+}
+
+/// Full-size VGG-Small forward on the packed path — minutes in debug mode,
+/// so it runs only with `cargo test -- --ignored`.
+#[test]
+#[ignore]
+fn vgg_small_full_forward_packed_vs_oracle() {
+    let spec = arch::vgg_small_cifar();
+    let nodes = lower_arch_spec(&spec, &micro_opts(3, (32, 32), 5)).unwrap();
+    let reference = Engine::new(nodes.clone(), Nonlin::Relu, EnginePath::Reference).unwrap();
+    let packed = Engine::new(nodes, Nonlin::Relu, EnginePath::Packed).unwrap();
+    let mut rng = Rng::new(2024);
+    let x = rng.normal_vec(reference.in_len(), 1.0);
+    let a = reference.forward_quantized(&x);
+    let b = packed.forward(&x);
+    assert_eq!(a.len(), 10);
+    assert!(b.iter().all(|v| v.is_finite()));
+    assert_eq!(argmax(&a), argmax(&b), "vgg_small full forward: {a:?} vs {b:?}");
+}
