@@ -1,11 +1,15 @@
 //! Figure 5: GPU memory allocated during model inference, layer by layer —
 //! the allocator-model trace for the ImageNet ViT and PointNet, standard vs
-//! tiled kernels, rendered as an ASCII profile.
+//! tiled kernels, rendered as an ASCII profile; plus a measured per-layer
+//! trace of the weight words the packed engine touches per forward,
+//! expanded rows vs the tile-resident layout.
 
 use tiledbits::arch;
 use tiledbits::bench_util::header;
+use tiledbits::nn::{lower_arch_spec, Engine, EnginePath, LowerOptions, Node, Nonlin,
+                    PackedLayout};
 use tiledbits::tbn::memory::{simulate, KernelKind, MemoryReport};
-use tiledbits::tbn::TilingPolicy;
+use tiledbits::tbn::{AlphaMode, TilingPolicy};
 
 fn sparkline(r: &MemoryReport, width: usize) -> String {
     let max = r.trace.iter().map(|(_, b)| *b).fold(0.0, f64::max).max(1.0);
@@ -58,4 +62,37 @@ fn main() {
              vit_bw.peak_bytes / 1e6, vit_tbn.peak_bytes / 1e6,
              vit_bw.peak_bytes / vit_tbn.peak_bytes);
     println!("\nshape check: ViT reduction >> PointNet reduction, as in the paper.");
+
+    // measured per-layer weight-word trace on the native packed engine:
+    // how many distinct u64 weight words each binarized layer touches per
+    // forward under the expanded rows vs the tile-resident layout (the
+    // total word *reads* are identical; residency is the delta)
+    for (name, spec, input) in [
+        ("cnn_micro", arch::cnn_micro(), (3usize, 16usize, 16usize)),
+        ("vgg_small_cifar", arch::vgg_small_cifar(), (3, 32, 32)),
+    ] {
+        let opts = LowerOptions { input, p: 4, alpha_mode: AlphaMode::PerTile, seed: 5 };
+        let nodes = lower_arch_spec(&spec, &opts).expect("sequential paper spec");
+        let expanded = Engine::with_layout(nodes.clone(), Nonlin::Relu,
+                                           EnginePath::Packed, PackedLayout::Expanded)
+            .unwrap();
+        let tile = Engine::with_layout(nodes, Nonlin::Relu, EnginePath::Packed,
+                                       PackedLayout::TileResident)
+            .unwrap();
+        println!("\n-- {name}: weight words touched per forward (binarized layers) --");
+        println!("{:14} {:>10} {:>12} {:>14} {:>8}", "layer", "row passes",
+                 "expanded w", "tile-resident", "ratio");
+        for idx in 0..expanded.nodes().len() {
+            let Some(pe) = expanded.packed_layer(idx) else { continue };
+            let pt = tile.packed_layer(idx).expect("same packed node set");
+            let passes = match &expanded.nodes()[idx] {
+                Node::Conv2d(c) => c.h_out * c.w_out,
+                _ => 1,
+            };
+            let (we, wt) = (pe.weight_words(), pt.weight_words());
+            println!("{:14} {passes:>10} {we:>12} {wt:>14} {:>7.1}x",
+                     expanded.nodes()[idx].name(),
+                     we as f64 / wt.max(1) as f64);
+        }
+    }
 }

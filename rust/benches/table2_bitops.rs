@@ -8,7 +8,10 @@ use tiledbits::arch;
 use tiledbits::bench_util::{bench, header};
 use tiledbits::coordinator::report;
 use tiledbits::nn;
-use tiledbits::tbn::bitops::{xnor_dot_words_range, xnor_dot_words_range_scalar};
+use tiledbits::tbn::bitops::{
+    xnor_dot_words_offset, xnor_dot_words_range, xnor_dot_words_range_scalar,
+    xnor_dot_words_range_u64x4,
+};
 use tiledbits::tbn::{alphas_from, tile_from_weights, AlphaMode};
 use tiledbits::tensor::BitVec;
 use tiledbits::util::Rng;
@@ -46,8 +49,9 @@ fn main() {
     println!("\nweight bytes touched: fp {}  bwnn {}  tbn {}",
              4 * m * n, bits.storage_bytes(), tile.storage_bytes());
 
-    // the packed path's one inner loop: scalar popcount vs the 4-wide
-    // unrolled count_ones accumulation, reported as words/second
+    // the packed path's one inner loop, three generations: one-word scalar,
+    // the 4-wide unrolled u64 accumulation, and the current u128 lanes —
+    // reported as words/second
     let words = 1usize << 15; // 32k words = 2M bits per call
     let nbits = words * 64;
     let wa: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
@@ -55,13 +59,27 @@ fn main() {
     let r_sc = bench("xnor popcount scalar (32k words)", 5, 200, || {
         std::hint::black_box(xnor_dot_words_range_scalar(&wa, &wb, 0, nbits));
     });
-    let r_un = bench("xnor popcount 4-wide (32k words)", 5, 200, || {
+    let r_u4 = bench("xnor popcount 4-wide u64 (32k words)", 5, 200, || {
+        std::hint::black_box(xnor_dot_words_range_u64x4(&wa, &wb, 0, nbits));
+    });
+    let r_wide = bench("xnor popcount u128 lanes (32k words)", 5, 200, || {
         std::hint::black_box(xnor_dot_words_range(&wa, &wb, 0, nbits));
     });
-    println!("{}", r_sc.report());
-    println!("{}", r_un.report());
+    // the tile-resident inner loop: same dot at a misaligned tile phase
+    // (shift-stitched fetches) — the price of O(q) weight residency
+    let r_off = bench("xnor popcount shift-stitched (32k words)", 5, 200, || {
+        std::hint::black_box(xnor_dot_words_offset(&wa, 1, &wb, 0, nbits - 64));
+    });
+    for r in [&r_sc, &r_u4, &r_wide, &r_off] {
+        println!("{}", r.report());
+    }
     let wps_sc = words as f64 * r_sc.per_sec();
-    let wps_un = words as f64 * r_un.per_sec();
-    println!("\npopcount throughput: scalar {wps_sc:.3e} words/s  4-wide {wps_un:.3e} \
-              words/s  ({:.2}x)", wps_un / wps_sc);
+    let wps_u4 = words as f64 * r_u4.per_sec();
+    let wps_wide = words as f64 * r_wide.per_sec();
+    let wps_off = words as f64 * r_off.per_sec();
+    println!("\npopcount throughput: scalar {wps_sc:.3e}  4-wide {wps_u4:.3e}  \
+              u128 {wps_wide:.3e} words/s");
+    println!("u128 lanes vs scalar {:.2}x, vs 4-wide {:.2}x; shift-stitched \
+              (tile-resident) {wps_off:.3e} words/s ({:.2}x of aligned u128)",
+             wps_wide / wps_sc, wps_wide / wps_u4, wps_off / wps_wide);
 }

@@ -89,11 +89,13 @@ fn main() {
     println!("{:28} {:>12} {:>12} {:>12}", "engine", "resident W", "peak mem",
              "storage");
     for (name, e) in [("reference (sub-bit tiles)", &reference),
-                      ("packed (1-bit rows)", &packed)] {
+                      ("packed (tile-resident)", &packed)] {
         println!("{:28} {:>12} {:>12} {:>12}", name, e.resident_weight_bytes(),
                  e.peak_memory_bytes(), e.storage_bytes());
     }
-    println!("\nnote: the packed path trades tile-level storage for 1 bit/weight");
-    println!("resident rows so hidden layers run as pure XNOR+popcount; storage");
-    println!("on disk (TBNZ) is unchanged.");
+    println!("\nnote: the packed path keeps one q-bit tile (plus alphas) resident per");
+    println!("binarized tiled layer (PackedLayout::TileResident; this model's only");
+    println!("tiled layer is the f32 entry layer, which stays a reference tile).");
+    println!("benches/table7_memory.rs carries the expanded-vs-tile-resident A/B;");
+    println!("storage on disk (TBNZ) is unchanged.");
 }

@@ -1,12 +1,14 @@
 //! Table 7: inference memory on the ImageNet ViT — peak memory, parameter
 //! memory and %-of-peak for the four kernel variants, from the allocator
-//! model, plus a measured host-side weight-residency check on the native
-//! engine's layer records.
+//! model, plus measured host-side weight residency on the native engine:
+//! per layer record, and expanded-vs-tile-resident packed layouts across
+//! the natively-lowered paper architectures (the tentpole A/B).
 
 use tiledbits::arch;
 use tiledbits::bench_util::header;
 use tiledbits::coordinator::report;
-use tiledbits::nn::layer_resident_bytes;
+use tiledbits::nn::{layer_resident_bytes, lower_arch_spec, Engine, EnginePath,
+                    LowerOptions, Nonlin, PackedLayout};
 use tiledbits::tbn::{alphas_from, tile_from_weights, AlphaMode, LayerRecord,
                      TilingPolicy, WeightPayload};
 use tiledbits::tbn::memory::{simulate, KernelKind};
@@ -50,4 +52,37 @@ fn main() {
         println!("p={p:<2} peak {:7.2} MB  params {:6.2} MB  ({:.1}% of peak)",
                  r.peak_bytes / 1e6, r.param_bytes / 1e6, 100.0 * r.param_fraction());
     }
+
+    // measured packed-engine residency: expanded rows vs the tile-resident
+    // layout on the natively-lowered paper architectures (binarized layers
+    // only differ; the entry layer stays a reference tile on both)
+    println!("\n-- packed weight residency: expanded vs tile-resident (measured) --");
+    println!("{:22} {:>14} {:>14} {:>8}", "architecture", "expanded B",
+             "tile-resident B", "ratio");
+    let specs: [(&str, arch::ArchSpec, (usize, usize, usize)); 4] = [
+        ("cnn_micro", arch::cnn_micro(), (3, 16, 16)),
+        ("pointnet_micro", arch::pointnet_micro(), (3, 64, 1)),
+        ("vgg_small_cifar", arch::vgg_small_cifar(), (3, 32, 32)),
+        ("convmixer_cifar", arch::convmixer_cifar(), (3, 32, 32)),
+    ];
+    for (name, spec, input) in specs {
+        let opts = LowerOptions { input, p: 4, alpha_mode: AlphaMode::PerTile, seed: 9 };
+        let nodes = match lower_arch_spec(&spec, &opts) {
+            Ok(n) => n,
+            Err(e) => {
+                println!("{name:22} (not lowerable: {e})");
+                continue;
+            }
+        };
+        let expanded = Engine::with_layout(nodes.clone(), Nonlin::Relu,
+                                           EnginePath::Packed, PackedLayout::Expanded)
+            .unwrap();
+        let tile = Engine::with_layout(nodes, Nonlin::Relu, EnginePath::Packed,
+                                       PackedLayout::TileResident)
+            .unwrap();
+        let (eb, tb) = (expanded.resident_weight_bytes(), tile.resident_weight_bytes());
+        println!("{name:22} {eb:>14} {tb:>14} {:>7.1}x", eb as f64 / tb as f64);
+    }
+    println!("(tile-resident keeps q bits + alphas per tiled layer: the paper's");
+    println!(" 'single tile per layer in memory' deployment kernel)");
 }

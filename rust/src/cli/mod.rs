@@ -27,7 +27,7 @@ impl Cli {
                 // --key=value, --key value, or bare flag
                 if let Some((k, v)) = name.split_once('=') {
                     cli.options.insert(k.to_string(), v.to_string());
-                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
                     cli.options.insert(name.to_string(), it.next().unwrap());
                 } else {
                     cli.flags.push(name.to_string());
@@ -86,6 +86,8 @@ OPTIONS:
   --out <path>              output path (export)
   --engine <path>           serve engine: packed|packed-int8|reference
                                                           [default: packed]
+  --layout <layout>         packed weight layout: tile|expanded (A/B)
+                                                          [default: tile]
   --workers <n>             serve worker threads          [default: 2]
   --queue-cap <n>           serve queue bound             [default: 1024]
   --overflow <policy>       full-queue behavior: block|reject [default: block]

@@ -41,7 +41,7 @@ pub fn run_or_load(rt: &Runtime, manifest: &Manifest, id: &str,
                    -> anyhow::Result<RunRecord> {
     if let Some(rec) = load_run(runs_dir, id) {
         // only reuse records trained for at least as many steps
-        if opts.steps.map_or(true, |s| rec.steps >= s) {
+        if opts.steps.is_none_or(|s| rec.steps >= s) {
             return Ok(rec);
         }
     }

@@ -34,14 +34,21 @@
 //!
 //! * `Reference` — f32 Algorithm 1 (tile reuse, never expands weights); the
 //!   oracle for everything else.
-//! * `Packed` — the deployment fast path: expanded sign rows packed into
-//!   `u64` words at load time, hidden activations (FC vectors and conv
-//!   im2col patches alike) sign-binarized with an XNOR-Net scale, weight
-//!   layers computed as XNOR + popcount with per-run alpha rescaling
-//!   (`nn::packed`).  `serve::Server::start_pool` shares one packed model
-//!   across N batching workers behind a bounded queue
-//!   (`serve::ServePolicy`: reject-or-block backpressure, per-worker
-//!   counters).
+//! * `Packed` — the deployment fast path: hidden activations (FC vectors
+//!   and conv im2col patches alike) sign-binarized with an XNOR-Net scale,
+//!   weight layers computed as XNOR + popcount with per-run alpha rescaling
+//!   (`nn::packed`).  Tiled layers default to the **tile-resident** layout
+//!   (`nn::PackedLayout::TileResident`): exactly one packed `q`-bit tile
+//!   plus its alphas stays resident per layer — `O(q)` weight residency,
+//!   the paper's "single tile per layer in memory" inference kernel — and
+//!   row dots walk constant-alpha runs as offsets into the tile through
+//!   shift-stitched u128-lane popcount kernels (`tbn::bitops`).  The
+//!   expanded `O(m·n)` row layout stays available behind
+//!   `PackedLayout::Expanded` for A/B measurement, and batched forwards
+//!   walk each row's weight state once across the whole batch.
+//!   `serve::Server::start_pool` shares one packed model across N batching
+//!   workers behind a bounded queue (`serve::ServePolicy`: reject-or-block
+//!   backpressure, per-worker counters, p50/p95/p99 latency report).
 //! * `PackedInt8` — `Packed` with the first weight layer's input quantized
 //!   to 8-bit integers (the paper's microcontroller input packing) instead
 //!   of running layer 0 in f32; parity-gated by the quantization bound in

@@ -8,7 +8,7 @@ use std::sync::Arc;
 use tiledbits::cli::{Cli, USAGE};
 use tiledbits::config::Manifest;
 use tiledbits::coordinator::{self, report, TABLES};
-use tiledbits::nn::{EnginePath, MlpEngine, Nonlin};
+use tiledbits::nn::{EnginePath, MlpEngine, Nonlin, PackedLayout};
 use tiledbits::runtime::Runtime;
 use tiledbits::serve::{BatchPolicy, OverflowPolicy, ServePolicy, Server};
 use tiledbits::train::{export, TrainOptions};
@@ -141,6 +141,10 @@ fn dispatch(cli: &Cli) -> Result<()> {
                 "packed-int8" | "int8" => EnginePath::PackedInt8,
                 _ => EnginePath::Packed,
             };
+            let layout = match cli.opt_or("layout", "tile") {
+                "expanded" => PackedLayout::Expanded,
+                _ => PackedLayout::TileResident,
+            };
             let workers = cli.opt_usize("workers").unwrap_or(2);
             let policy = ServePolicy {
                 batch: BatchPolicy::default(),
@@ -150,10 +154,10 @@ fn dispatch(cli: &Cli) -> Result<()> {
                     _ => OverflowPolicy::Block,
                 },
             };
-            let engine = MlpEngine::with_path(tbnz, Nonlin::Relu, path)
+            let engine = MlpEngine::with_path_layout(tbnz, Nonlin::Relu, path, layout)
                 .map_err(|e| anyhow!(e))?;
-            info!("serve", "{path:?} engine, {workers} workers, queue cap {} ({:?}), \
-                   {} resident weight bytes",
+            info!("serve", "{path:?} engine ({layout:?} weights), {workers} workers, \
+                   queue cap {} ({:?}), {} resident weight bytes",
                   policy.queue_cap, policy.on_full, engine.resident_weight_bytes());
             let server = Arc::new(Server::start_pool_with(Arc::new(engine),
                                                           policy, workers));
@@ -191,6 +195,11 @@ fn dispatch(cli: &Cli) -> Result<()> {
                    mean batch {:.1}",
                   stats.served, t0.elapsed().as_secs_f64(), stats.rejected,
                   stats.mean_latency_us(), stats.mean_batch());
+            if let Some(p) = stats.latency_percentiles() {
+                info!("serve", "latency percentiles over last {} requests: \
+                       p50 {}us  p95 {}us  p99 {}us  (lifetime max {}us)",
+                      p.samples, p.p50_us, p.p95_us, p.p99_us, stats.max_latency_us);
+            }
             for (w, ws) in stats.per_worker.iter().enumerate() {
                 info!("serve", "  worker {w}: {} requests in {} batches",
                       ws.served, ws.batches);

@@ -8,10 +8,15 @@
 //!   activations; `forward_quantized` runs the f32 oracle of the deployment
 //!   forward with sign-binarized hidden activations.
 //! * `Packed` — the XNOR-popcount fast path: every weight layer after the
-//!   first is packed to `u64` rows at construction (`PackedLayer`), hidden
+//!   first builds packed state at construction (`PackedLayer`), hidden
 //!   activations (FC vectors and conv im2col patches alike) are
-//!   sign-binarized with an XNOR-Net scale.  `forward` and
-//!   `forward_quantized` coincide on this path.
+//!   sign-binarized with an XNOR-Net scale.  Tiled layers default to the
+//!   **tile-resident** weight layout ([`PackedLayout::TileResident`]:
+//!   `O(q)` bits resident per layer); [`Engine::with_layout`] selects
+//!   [`PackedLayout::Expanded`] for A/B measurement.  `forward` and
+//!   `forward_quantized` coincide on this path, and `forward_batch` runs
+//!   packed FC layers batched (all samples per row pass) with bit-identical
+//!   results.
 //! * `PackedInt8` — `Packed` with the *first* weight layer's input
 //!   quantized to 8-bit integers (the paper's microcontroller input
 //!   packing) instead of running layer 0 in f32.
@@ -19,12 +24,15 @@
 //! [`MlpEngine`] wraps an `Engine` built from a `TbnzModel`'s FC chain and
 //! preserves the original deployable-runner API of §5.1 (Table 6),
 //! including the byte-exact memory/storage accounting used for the Table 6
-//! comparison against the BWNN baseline.
+//! comparison against the BWNN baseline.  The wrapper consumes the model:
+//! its layer records live once, behind `Arc`s inside the engine's nodes
+//! (no duplicate payload copy — the ROADMAP's `Arc`-sharing item).
 
-use super::layers::{Node, Scratch};
-use super::packed::{EnginePath, PackedLayer};
-use crate::tbn::TbnzModel;
-use super::layers::FcLayer;
+use std::sync::Arc;
+
+use super::layers::{FcLayer, Node, Scratch};
+use super::packed::{EnginePath, PackedLayer, PackedLayout};
+use crate::tbn::{LayerRecord, TbnzModel};
 
 /// Hidden-layer nonlinearity (fused into the weight-layer kernels).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -39,6 +47,7 @@ pub struct Engine {
     nodes: Vec<Node>,
     nonlin: Nonlin,
     path: EnginePath,
+    layout: PackedLayout,
     /// Parallel to `nodes`: packed state for every weight node that runs
     /// binarized (all weight nodes after the first) when `path.is_packed()`.
     packed: Vec<Option<PackedLayer>>,
@@ -47,10 +56,20 @@ pub struct Engine {
 }
 
 impl Engine {
-    /// Validate the node chain and (on the packed paths) build per-layer
-    /// packed state — paid once here so the serve path never packs weights.
+    /// [`Engine::with_layout`] under the default (tile-resident) weight
+    /// layout.
     pub fn new(nodes: Vec<Node>, nonlin: Nonlin, path: EnginePath)
                -> Result<Engine, String> {
+        Engine::with_layout(nodes, nonlin, path, PackedLayout::default())
+    }
+
+    /// Validate the node chain and (on the packed paths) build per-layer
+    /// packed state — paid once here so the serve path never packs weights.
+    /// `layout` selects how tiled layers keep their packed weights:
+    /// tile-resident (`O(q)` bits per layer, the default) or fully expanded
+    /// rows (the A/B baseline).
+    pub fn with_layout(nodes: Vec<Node>, nonlin: Nonlin, path: EnginePath,
+                       layout: PackedLayout) -> Result<Engine, String> {
         if nodes.is_empty() {
             return Err("engine requires at least one node".to_string());
         }
@@ -75,30 +94,50 @@ impl Engine {
         let mut packed: Vec<Option<PackedLayer>> = vec![None; nodes.len()];
         if path.is_packed() {
             // the first weight layer stays f32 (or int8-input); later weight
-            // layers run binarized from packed rows
+            // layers run binarized from packed state
             for &i in weight_idx.iter().skip(1) {
-                packed[i] = nodes[i].build_packed()?;
+                packed[i] = nodes[i].build_packed(layout)?;
             }
         }
-        Ok(Engine { nodes, nonlin, path, packed, first_weight, last_weight })
+        Ok(Engine { nodes, nonlin, path, layout, packed, first_weight, last_weight })
     }
 
-    /// Build an FC-chain engine from a TBNZ model (one `Fc` node per layer).
+    /// Build an FC-chain engine from a borrowed TBNZ model (one `Fc` node
+    /// per layer; records are copied once into the nodes' `Arc`s).
     pub fn from_tbnz(model: &TbnzModel, nonlin: Nonlin, path: EnginePath)
                      -> Result<Engine, String> {
-        if model.layers.is_empty() {
+        Engine::from_records(model.layers.iter().cloned().map(Arc::new).collect(),
+                             nonlin, path, PackedLayout::default())
+    }
+
+    /// Build an FC-chain engine from shared layer records without copying
+    /// any payload — the single-copy entry point `MlpEngine` uses.
+    pub fn from_records(layers: Vec<Arc<LayerRecord>>, nonlin: Nonlin,
+                        path: EnginePath, layout: PackedLayout)
+                        -> Result<Engine, String> {
+        if layers.is_empty() {
             return Err("engine requires at least one layer".to_string());
         }
-        let nodes = model
-            .layers
-            .iter()
-            .map(|l| FcLayer::from_record(l.clone()).map(Node::Fc))
+        let nodes = layers
+            .into_iter()
+            .map(|l| FcLayer::from_record_shared(l).map(Node::Fc))
             .collect::<Result<Vec<_>, String>>()?;
-        Engine::new(nodes, nonlin, path)
+        Engine::with_layout(nodes, nonlin, path, layout)
     }
 
     pub fn path(&self) -> EnginePath {
         self.path
+    }
+
+    /// The weight layout tiled layers were packed with.
+    pub fn layout(&self) -> PackedLayout {
+        self.layout
+    }
+
+    /// Packed per-layer state of node `idx` (`None` on the reference path,
+    /// for weightless nodes and for the entry weight layer).
+    pub fn packed_layer(&self, idx: usize) -> Option<&PackedLayer> {
+        self.packed.get(idx).and_then(Option::as_ref)
     }
 
     pub fn nonlin(&self) -> Nonlin {
@@ -164,13 +203,21 @@ impl Engine {
     }
 
     /// Forward a whole batch, layer-major: all samples pass through a node
-    /// before the next node starts, so one layer's packed rows stay
-    /// cache-warm across the batch and the scratch buffers are allocated
-    /// once.  Results are bit-identical to per-sample [`Engine::forward`].
+    /// before the next node starts, so one layer's packed weight state
+    /// stays cache-warm across the batch and the scratch buffers are
+    /// allocated once.  Packed FC nodes take the batched row kernel
+    /// (`FcLayer::forward_packed_batch`: every row walked once over all
+    /// samples, amortizing the per-run alpha/popcount bookkeeping); packed
+    /// conv nodes batch their output positions internally.  Results are
+    /// bit-identical to per-sample [`Engine::forward`].
     pub fn forward_batch(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
         let mut scratch = Scratch::default();
         let mut hs: Vec<Vec<f32>> = xs.to_vec();
         for idx in 0..self.nodes.len() {
+            if let (Some(p), Node::Fc(fc)) = (&self.packed[idx], &self.nodes[idx]) {
+                hs = fc.forward_packed_batch(p, &hs, self.relu_after(idx), &mut scratch);
+                continue;
+            }
             for h in hs.iter_mut() {
                 *h = self.node_forward(idx, h, &mut scratch);
             }
@@ -213,21 +260,40 @@ impl Engine {
     }
 
     /// Weight bytes resident for the *active* path: sub-bit tiles on the
-    /// reference path (and for the f32/int8 entry layer), expanded packed
-    /// rows (1 bit per weight plus alpha-run metadata) elsewhere on the
-    /// packed paths.
+    /// reference path (and for the f32/int8 entry layer); on the packed
+    /// paths, the true per-layout number — `O(q)` tile words + alphas on
+    /// the tile-resident layout, expanded packed rows (1 bit per weight
+    /// plus alpha-run metadata) on the expanded layout.
     pub fn resident_weight_bytes(&self) -> usize {
         (0..self.nodes.len()).map(|i| self.node_resident_bytes(i)).sum()
     }
 
+    /// Serialized-model bits across all weight nodes (the TBNZ storage
+    /// accounting, summed from the shared records).
+    pub fn storage_bits(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter_map(Node::record)
+            .map(LayerRecord::storage_bits)
+            .sum()
+    }
+
     /// Max memory at any node: weights resident for that node *on the
     /// active path* + input and output activation buffers (f32) — the
-    /// Table 6 "Max Memory Usage" model.
+    /// Table 6 "Max Memory Usage" model — plus, for nodes that run packed,
+    /// the scratch the batched packed forward stages (a conv's binarized
+    /// im2col map and position-major output copy;
+    /// `Node::packed_scratch_bytes`).
     pub fn peak_memory_bytes(&self) -> usize {
         (0..self.nodes.len())
             .map(|i| {
                 let n = &self.nodes[i];
-                self.node_resident_bytes(i) + 4 * (n.in_len() + n.out_len())
+                let scratch = if self.packed[i].is_some() {
+                    n.packed_scratch_bytes()
+                } else {
+                    0
+                };
+                self.node_resident_bytes(i) + 4 * (n.in_len() + n.out_len()) + scratch
             })
             .max()
             .unwrap_or(0)
@@ -236,9 +302,13 @@ impl Engine {
 
 /// Feed-forward FC-chain engine over a TBNZ model — a thin wrapper around
 /// [`Engine`] preserving the original deployable-runner API.
+///
+/// The constructor consumes the `TbnzModel`: each layer record is moved
+/// into an `Arc` shared with the engine's nodes, so the wrapper holds
+/// exactly **one** copy of every payload (the ROADMAP's `Arc`-sharing
+/// item; the PR 2 wrapper kept two).  Model-level accounting
+/// (`storage_bytes`) is served from the shared records.
 pub struct MlpEngine {
-    pub model: TbnzModel,
-    pub nonlin: Nonlin,
     engine: Engine,
 }
 
@@ -248,19 +318,23 @@ impl MlpEngine {
         MlpEngine::with_path(model, nonlin, EnginePath::Reference)
     }
 
-    /// Engine with an explicit implementation path. The packed paths pay the
-    /// row-packing cost here, once, so the serve path never packs weights.
-    /// 2-D/shape-chain validation happens inside `Engine::from_tbnz`
-    /// (`FcLayer::from_record` + the node-chain check).
-    ///
-    /// Note: the wrapper retains the TBNZ model (the `pub model` API)
-    /// alongside the engine's per-node records — for tiled payloads the
-    /// duplication is sub-bit tiles (bytes); fp-heavy models pay ~2x and
-    /// should drive [`Engine`] directly (ROADMAP: share records via `Arc`).
+    /// Engine with an explicit implementation path and the default
+    /// (tile-resident) weight layout. The packed paths pay the packing cost
+    /// here, once, so the serve path never packs weights.
+    /// 2-D/shape-chain validation happens inside `Engine::from_records`
+    /// (`FcLayer::from_record_shared` + the node-chain check).
     pub fn with_path(model: TbnzModel, nonlin: Nonlin, path: EnginePath)
                      -> Result<MlpEngine, String> {
-        let engine = Engine::from_tbnz(&model, nonlin, path)?;
-        Ok(MlpEngine { model, nonlin, engine })
+        MlpEngine::with_path_layout(model, nonlin, path, PackedLayout::default())
+    }
+
+    /// [`MlpEngine::with_path`] with an explicit tiled-weight layout
+    /// (tile-resident vs expanded — the A/B toggle the benches measure).
+    pub fn with_path_layout(model: TbnzModel, nonlin: Nonlin, path: EnginePath,
+                            layout: PackedLayout) -> Result<MlpEngine, String> {
+        let records = model.layers.into_iter().map(Arc::new).collect();
+        let engine = Engine::from_records(records, nonlin, path, layout)?;
+        Ok(MlpEngine { engine })
     }
 
     /// The underlying layer-graph engine.
@@ -272,12 +346,16 @@ impl MlpEngine {
         self.engine.path()
     }
 
+    pub fn nonlin(&self) -> Nonlin {
+        self.engine.nonlin()
+    }
+
     pub fn in_dim(&self) -> usize {
-        self.model.layers.first().map(|l| l.shape[1]).unwrap_or(0)
+        self.engine.in_len()
     }
 
     pub fn out_dim(&self) -> usize {
-        self.model.layers.last().map(|l| l.shape[0]).unwrap_or(0)
+        self.engine.out_len()
     }
 
     /// Forward one sample through the active path. The final layer is always
@@ -321,21 +399,21 @@ impl MlpEngine {
     /// Max memory at any layer: weights resident for that layer *on the
     /// active path* + input and output activation buffers (f32) — the
     /// Table 6 "Max Memory Usage" model (the paper's peak lands on the
-    /// first FC layer).  On the packed paths the per-layer weight term is
-    /// the expanded packed rows, not the sub-bit tile.
+    /// first FC layer).
     pub fn peak_memory_bytes(&self) -> usize {
         self.engine.peak_memory_bytes()
     }
 
-    /// Total storage for the serialized model (Table 6 "Storage").
+    /// Total storage for the serialized model (Table 6 "Storage"), summed
+    /// from the shared layer records.
     pub fn storage_bytes(&self) -> usize {
-        self.model.storage_bytes()
+        self.engine.storage_bits().div_ceil(8)
     }
 
     /// Weight bytes resident for the *active* path: sub-bit tiles on the
-    /// reference path, expanded packed rows (1 bit per weight plus alpha-run
-    /// metadata) on the packed paths — the storage/speed trade the fast path
-    /// makes explicit.
+    /// reference path; on the packed paths the per-layout number —
+    /// `O(q)` tile words on the tile-resident layout, expanded packed rows
+    /// on the expanded layout.
     pub fn resident_weight_bytes(&self) -> usize {
         self.engine.resident_weight_bytes()
     }
@@ -363,15 +441,15 @@ mod tests {
     use crate::tensor::BitVec;
     use crate::util::Rng;
 
-    /// Build the paper's deployment model: in 256 -> hidden 128 -> 10.
-    fn tbn_mlp(p: usize) -> MlpEngine {
+    /// The paper's deployment model: in 256 -> hidden 128 -> 10.
+    fn tbn_mlp_model(p: usize) -> TbnzModel {
         let mut r = Rng::new(42);
         let w1: Vec<f32> = (0..128 * 256).map(|_| r.gauss_f32()).collect();
         let tile = tile_from_weights(&w1, p);
         let alphas = alphas_from(&w1, p, AlphaMode::PerTile);
         let w2: Vec<f32> = (0..10 * 128).map(|_| r.gauss_f32()).collect();
         // untiled layers ship 1-bit (the exporter's binarize fallback)
-        let model = TbnzModel {
+        TbnzModel {
             layers: vec![
                 LayerRecord { name: "fc0".into(), shape: vec![128, 256],
                               payload: WeightPayload::Tiled { p, tile, alphas } },
@@ -381,8 +459,11 @@ mod tests {
                                   alpha: w2.iter().map(|x| x.abs()).sum::<f32>()
                                       / w2.len() as f32 } },
             ],
-        };
-        MlpEngine::new(model, Nonlin::Relu).unwrap()
+        }
+    }
+
+    fn tbn_mlp(p: usize) -> MlpEngine {
+        MlpEngine::new(tbn_mlp_model(p), Nonlin::Relu).unwrap()
     }
 
     fn bwnn_mlp() -> MlpEngine {
@@ -442,8 +523,7 @@ mod tests {
 
     #[test]
     fn chain_validation() {
-        let e = tbn_mlp(4);
-        let mut broken = e.model.clone();
+        let mut broken = tbn_mlp_model(4);
         broken.layers[1].shape = vec![10, 64];
         assert!(MlpEngine::new(broken, Nonlin::Relu).is_err());
     }
@@ -490,7 +570,7 @@ mod tests {
 
     #[test]
     fn packed_path_builds_and_matches_quantized_oracle() {
-        let model = tbn_mlp(4).model;
+        let model = tbn_mlp_model(4);
         let reference = MlpEngine::new(model.clone(), Nonlin::Relu).unwrap();
         let packed = MlpEngine::with_path(model, Nonlin::Relu, EnginePath::Packed).unwrap();
         assert_eq!(packed.path(), EnginePath::Packed);
@@ -526,15 +606,58 @@ mod tests {
 
     #[test]
     fn packed_residency_stays_sub_fp() {
-        let tbn = tbn_mlp(4);
+        let model = tbn_mlp_model(4);
+        let fp_bytes = 4 * model.total_params();
+        let tbn = MlpEngine::new(model.clone(), Nonlin::Relu).unwrap();
         let packed =
-            MlpEngine::with_path(tbn.model.clone(), Nonlin::Relu, EnginePath::Packed).unwrap();
-        let fp_bytes = 4 * tbn.model.total_params();
-        // packed rows cost ~1 bit/weight (plus run metadata): far below f32
+            MlpEngine::with_path(model, Nonlin::Relu, EnginePath::Packed).unwrap();
+        // packed state costs at most ~1 bit/weight (plus metadata): far
+        // below f32
         assert!(packed.resident_weight_bytes() < fp_bytes / 8,
                 "packed {} vs fp {}", packed.resident_weight_bytes(), fp_bytes);
         // reference residency reports the sub-bit tiles
         assert!(tbn.resident_weight_bytes() < packed.resident_weight_bytes() * 8);
+    }
+
+    /// The tile-resident and expanded layouts are bit-exact against each
+    /// other, and the tile-resident engine keeps `O(q)` weight bytes for
+    /// its tiled layers.
+    #[test]
+    fn layouts_agree_and_tile_residency_is_o_q() {
+        let mut rng = Rng::new(40);
+        // fc0 runs f32 (entry layer); fc1/head run packed — fc1 is tiled,
+        // so the layouts actually differ in state
+        let model = TbnzModel {
+            layers: vec![
+                bwnn_record("fc0", 48, 70, &mut rng),
+                tiled_record("fc1", 40, 48, 4, AlphaMode::PerTile, &mut rng),
+                tiled_record("head", 10, 40, 2, AlphaMode::Single, &mut rng),
+            ],
+        };
+        let tile = MlpEngine::with_path_layout(
+            model.clone(), Nonlin::Relu, EnginePath::Packed,
+            PackedLayout::TileResident).unwrap();
+        let expanded = MlpEngine::with_path_layout(
+            model.clone(), Nonlin::Relu, EnginePath::Packed,
+            PackedLayout::Expanded).unwrap();
+        assert_eq!(tile.engine().layout(), PackedLayout::TileResident);
+        assert_eq!(expanded.engine().layout(), PackedLayout::Expanded);
+        for s in 0..4 {
+            let mut r = Rng::new(700 + s);
+            let x = r.normal_vec(70, 1.0);
+            assert_eq!(tile.forward(&x), expanded.forward(&x), "sample {s}");
+        }
+        // residency: fc1 keeps q = 40*48/4 = 480 bits + 4 alphas; the
+        // expanded layout keeps 40 x 48 bits + run metadata
+        assert!(tile.resident_weight_bytes() < expanded.resident_weight_bytes(),
+                "tile {} vs expanded {}", tile.resident_weight_bytes(),
+                expanded.resident_weight_bytes());
+        let fc1_tile = tile.engine().packed_layer(1).unwrap();
+        let q = 480usize;
+        assert_eq!(fc1_tile.resident_bytes(), 8 * q.div_ceil(64) + 4 * 4);
+        // storage accounting is unchanged by layout and matches the model's
+        assert_eq!(tile.storage_bytes(), model.storage_bytes());
+        assert_eq!(expanded.storage_bytes(), model.storage_bytes());
     }
 
     // -- ported from the old `PackedModel` suite: the same guarantees now
@@ -621,7 +744,7 @@ mod tests {
 
     #[test]
     fn int8_path_close_to_packed_on_mlp() {
-        let model = tbn_mlp(4).model;
+        let model = tbn_mlp_model(4);
         let packed =
             MlpEngine::with_path(model.clone(), Nonlin::Relu, EnginePath::Packed).unwrap();
         let int8 =

@@ -15,18 +15,24 @@
 //! exactly, and `tests/conv_parity.rs` pins the two against each other and
 //! against a naive nested-loop convolution.
 
+use std::sync::Arc;
+
 use super::Scratch;
 use crate::nn::packed::{
-    binarize_activations, payload_row_dot_i8, quantize_input_i8, PackedLayer,
+    binarize_activations_into, payload_row_dot_i8, quantize_input_i8, PackedLayer,
+    PackedLayout,
 };
 use crate::nn::payload_row_dot;
 use crate::tbn::LayerRecord;
 
 /// A 2-D convolution over a channel-major `(c, h, w)` activation map.
+///
+/// The record is held behind an `Arc` so a node and any model-level owner
+/// share one payload copy instead of duplicating it.
 #[derive(Debug, Clone)]
 pub struct Conv2dLayer {
     /// Weight record with shape `[co, ci/groups, kh, kw]` (row-major).
-    pub record: LayerRecord,
+    pub record: Arc<LayerRecord>,
     pub co: usize,
     /// Total input channels (across all groups).
     pub ci: usize,
@@ -102,7 +108,8 @@ impl Conv2dLayer {
                  (stride {stride}, pad {pad})", record.name));
         }
         Ok(Conv2dLayer {
-            record, co, ci, kh, kw, groups, stride, pad, h_in, w_in, h_out, w_out,
+            record: Arc::new(record),
+            co, ci, kh, kw, groups, stride, pad, h_in, w_in, h_out, w_out,
         })
     }
 
@@ -119,8 +126,8 @@ impl Conv2dLayer {
         (self.ci / self.groups) * self.kh * self.kw
     }
 
-    pub(crate) fn build_packed(&self) -> Result<PackedLayer, String> {
-        PackedLayer::from_record_mn(&self.record, self.co, self.patch_len())
+    pub(crate) fn build_packed(&self, layout: PackedLayout) -> Result<PackedLayer, String> {
+        PackedLayer::from_record_mn_layout(&self.record, self.co, self.patch_len(), layout)
     }
 
     /// Stage the im2col patch of group `g` at output position `(oy, ox)`
@@ -205,26 +212,46 @@ impl Conv2dLayer {
 
     /// Packed forward: binarize each patch with its XNOR-Net scale, then
     /// XNOR-popcount the packed filter rows — the same kernels as packed FC.
+    ///
+    /// All of a group's output positions are packed side by side and run as
+    /// one batch through `PackedLayer::forward_batch_binarized_rows`
+    /// (rows outer, positions inner), so each filter row's weight state —
+    /// and on the tile-resident layout the one shared tile — is walked
+    /// while hot across the whole spatial map.  Outputs are bit-identical
+    /// to the per-position form `gamma * row_dot_binarized`.
     pub fn forward_packed(&self, packed: &PackedLayer, x: &[f32], relu: bool,
                           scratch: &mut Scratch) -> Vec<f32> {
         debug_assert_eq!(x.len(), self.in_len());
         let n = self.patch_len();
+        let stride = n.div_ceil(64).max(1);
         scratch.patch.clear();
         scratch.patch.resize(n, 0.0);
         let cog = self.co / self.groups;
         let area = self.h_out * self.w_out;
+        scratch.batch_words.clear();
+        scratch.batch_words.resize(area * stride, 0);
+        scratch.gammas.clear();
+        scratch.gammas.resize(area, 0.0);
+        scratch.batch_out.clear();
+        scratch.batch_out.resize(area * cog, 0.0);
         let mut y = vec![0.0f32; self.co * area];
-        for oy in 0..self.h_out {
-            for ox in 0..self.w_out {
-                for g in 0..self.groups {
+        for g in 0..self.groups {
+            for oy in 0..self.h_out {
+                for ox in 0..self.w_out {
+                    let pos = oy * self.w_out + ox;
                     self.extract_patch(x, g, oy, ox, &mut scratch.patch);
-                    let gamma = binarize_activations(&scratch.patch, &mut scratch.words);
-                    for oc in 0..cog {
-                        let o = g * cog + oc;
-                        let v = gamma * packed.row_dot_binarized(o, &scratch.words);
-                        y[(o * self.h_out + oy) * self.w_out + ox] =
-                            if relu { v.max(0.0) } else { v };
-                    }
+                    scratch.gammas[pos] = binarize_activations_into(
+                        &scratch.patch,
+                        &mut scratch.batch_words[pos * stride..(pos + 1) * stride]);
+                }
+            }
+            packed.forward_batch_binarized_rows(g * cog, (g + 1) * cog,
+                                                &scratch.batch_words, stride,
+                                                &scratch.gammas, relu,
+                                                &mut scratch.batch_out);
+            for pos in 0..area {
+                for oc in 0..cog {
+                    y[(g * cog + oc) * area + pos] = scratch.batch_out[pos * cog + oc];
                 }
             }
         }
@@ -399,19 +426,64 @@ mod tests {
         assert!(Conv2dLayer::new(fc, (3, 8, 8), 1, 1, 1).is_err());
     }
 
+    /// The batched packed forward's staging (binarized im2col map, gammas,
+    /// position-major output copy) is what `Node::packed_scratch_bytes`
+    /// charges to the Table 6 peak.
+    #[test]
+    fn packed_scratch_bytes_cover_batched_staging() {
+        let conv = fp_conv(4, 3, 3, (3, 8, 8), 1, 1, 1, 30);
+        // area 64, patch_len 27 -> 1 word/patch, cog 4
+        let node = crate::nn::layers::Node::Conv2d(conv);
+        assert_eq!(node.packed_scratch_bytes(), 8 * 64 + 4 * 64 + 4 * 64 * 4);
+        let fc = crate::nn::layers::Node::Flatten { len: 9 };
+        assert_eq!(fc.packed_scratch_bytes(), 0);
+    }
+
     #[test]
     fn packed_matches_oracle_on_one_layer() {
         let mut rng = Rng::new(21);
         let conv = fp_conv(5, 3, 3, (3, 6, 6), 1, 1, 1, 22);
-        let packed = conv.build_packed().unwrap();
         let x = rng.normal_vec(conv.in_len(), 1.0);
         let mut s = Scratch::default();
-        let got = conv.forward_packed(&packed, &x, false, &mut s);
         let want = conv.forward_quantized_oracle(&x, false, &mut s);
-        assert_eq!(got.len(), want.len());
-        for i in 0..got.len() {
-            assert!((got[i] - want[i]).abs() < 1e-3 * want[i].abs().max(1.0),
-                    "out {i}: {} vs {}", got[i], want[i]);
+        for layout in [PackedLayout::TileResident, PackedLayout::Expanded] {
+            let packed = conv.build_packed(layout).unwrap();
+            let got = conv.forward_packed(&packed, &x, false, &mut s);
+            assert_eq!(got.len(), want.len());
+            for i in 0..got.len() {
+                assert!((got[i] - want[i]).abs() < 1e-3 * want[i].abs().max(1.0),
+                        "{layout:?} out {i}: {} vs {}", got[i], want[i]);
+            }
         }
+    }
+
+    /// A tiled conv under both weight layouts is bit-exact — including a
+    /// grouped conv, whose batch runs cover row sub-ranges.
+    #[test]
+    fn tile_resident_conv_matches_expanded_bit_exact() {
+        let mut rng = Rng::new(23);
+        // grouped: ci=4, groups=2, co=6 -> cog=3; patch_len = 2*3*3 = 18
+        let (co, ci, k, groups) = (6usize, 4usize, 3usize, 2usize);
+        let cig = ci / groups;
+        let params = co * cig * k * k; // 108 -> p=4 divides, q=27
+        let w = rng.normal_vec(params, 1.0);
+        let record = LayerRecord {
+            name: "gc".into(),
+            shape: vec![co, cig, k, k],
+            payload: crate::tbn::WeightPayload::Tiled {
+                p: 4,
+                tile: crate::tbn::tile_from_weights(&w, 4),
+                alphas: crate::tbn::alphas_from(&w, 4, crate::tbn::AlphaMode::PerTile),
+            },
+        };
+        let conv = Conv2dLayer::new(record, (ci, 7, 7), 1, 1, groups).unwrap();
+        let tile = conv.build_packed(PackedLayout::TileResident).unwrap();
+        let expanded = conv.build_packed(PackedLayout::Expanded).unwrap();
+        assert!(tile.resident_bytes() < expanded.resident_bytes());
+        let mut s = Scratch::default();
+        let x = rng.normal_vec(conv.in_len(), 1.0);
+        let a = conv.forward_packed(&tile, &x, true, &mut s);
+        let b = conv.forward_packed(&expanded, &x, true, &mut s);
+        assert_eq!(a, b, "layouts must agree bit-exactly");
     }
 }

@@ -1,18 +1,25 @@
 //! Fully-connected graph node: the Algorithm 1 FC kernels behind the
-//! [`super::Node`] abstraction, with Reference, Packed and layer-0 int8
-//! entry points.
+//! [`super::Node`] abstraction, with Reference, Packed (single and batched)
+//! and layer-0 int8 entry points.
+
+use std::sync::Arc;
 
 use super::Scratch;
 use crate::nn::packed::{
-    binarize_activations, payload_row_dot_i8, quantize_input_i8, PackedLayer,
+    binarize_activations, binarize_activations_into, payload_row_dot_i8,
+    quantize_input_i8, PackedLayer, PackedLayout,
 };
 use crate::nn::{fc_fp_forward, fc_layer_forward};
 use crate::tbn::LayerRecord;
 
 /// A `[m, n]` weight layer: `y = W x` with an optional fused ReLU.
+///
+/// The record is held behind an `Arc` so a node and any model-level owner
+/// (e.g. the engine builders consuming a `TbnzModel`) share one payload
+/// copy instead of duplicating it.
 #[derive(Debug, Clone)]
 pub struct FcLayer {
-    pub record: LayerRecord,
+    pub record: Arc<LayerRecord>,
     /// Output features.
     pub m: usize,
     /// Input features.
@@ -21,6 +28,11 @@ pub struct FcLayer {
 
 impl FcLayer {
     pub fn from_record(record: LayerRecord) -> Result<FcLayer, String> {
+        FcLayer::from_record_shared(Arc::new(record))
+    }
+
+    /// Build from an already-shared record without copying the payload.
+    pub fn from_record_shared(record: Arc<LayerRecord>) -> Result<FcLayer, String> {
         if record.shape.len() != 2 {
             return Err(format!("{}: Fc node requires a 2-D shape", record.name));
         }
@@ -28,8 +40,8 @@ impl FcLayer {
         Ok(FcLayer { record, m, n })
     }
 
-    pub(crate) fn build_packed(&self) -> Result<PackedLayer, String> {
-        PackedLayer::from_record_mn(&self.record, self.m, self.n)
+    pub(crate) fn build_packed(&self, layout: PackedLayout) -> Result<PackedLayer, String> {
+        PackedLayer::from_record_mn_layout(&self.record, self.m, self.n, layout)
     }
 
     /// f32 Algorithm 1 forward (tile reuse, expand-free — the oracle).
@@ -45,6 +57,31 @@ impl FcLayer {
         debug_assert_eq!(x.len(), self.n);
         let gamma = binarize_activations(x, &mut scratch.words);
         packed.forward_binarized(&scratch.words, gamma, relu)
+    }
+
+    /// Batched packed forward: binarize all `B` inputs side by side into
+    /// one scratch buffer, then run every row over the whole batch in one
+    /// pass (`PackedLayer::forward_batch_binarized_rows`), so per-row
+    /// weight state — and on the tile-resident layout the one shared tile —
+    /// stays hot across the batch.  Outputs are bit-identical to per-sample
+    /// [`FcLayer::forward_packed`].
+    pub fn forward_packed_batch(&self, packed: &PackedLayer, xs: &[Vec<f32>],
+                                relu: bool, scratch: &mut Scratch) -> Vec<Vec<f32>> {
+        let stride = self.n.div_ceil(64).max(1);
+        let bsz = xs.len();
+        scratch.batch_words.clear();
+        scratch.batch_words.resize(bsz * stride, 0);
+        scratch.gammas.clear();
+        for (b, x) in xs.iter().enumerate() {
+            debug_assert_eq!(x.len(), self.n);
+            let g = binarize_activations_into(
+                x, &mut scratch.batch_words[b * stride..(b + 1) * stride]);
+            scratch.gammas.push(g);
+        }
+        let mut out = vec![0.0f32; bsz * self.m];
+        packed.forward_batch_binarized_rows(0, self.m, &scratch.batch_words, stride,
+                                            &scratch.gammas, relu, &mut out);
+        out.chunks(self.m).map(|row| row.to_vec()).collect()
     }
 
     /// Layer-0 forward on the `PackedInt8` path: quantize the input to i8
@@ -115,14 +152,36 @@ mod tests {
     #[test]
     fn packed_matches_oracle() {
         let fc = tiled_fc(12, 40, 4, 9);
-        let packed = fc.build_packed().unwrap();
         let mut rng = Rng::new(10);
         let x = rng.normal_vec(40, 1.0);
-        let mut scratch = Scratch::default();
-        let got = fc.forward_packed(&packed, &x, false, &mut scratch);
         let want = fc.forward_quantized_oracle(&x, false);
-        for i in 0..12 {
-            assert!((got[i] - want[i]).abs() < 1e-3 * want[i].abs().max(1.0), "row {i}");
+        for layout in [PackedLayout::TileResident, PackedLayout::Expanded] {
+            let packed = fc.build_packed(layout).unwrap();
+            let mut scratch = Scratch::default();
+            let got = fc.forward_packed(&packed, &x, false, &mut scratch);
+            for i in 0..12 {
+                assert!((got[i] - want[i]).abs() < 1e-3 * want[i].abs().max(1.0),
+                        "{layout:?} row {i}");
+            }
+        }
+    }
+
+    /// Batched and per-sample packed forwards must be bit-identical, on
+    /// both weight layouts.
+    #[test]
+    fn packed_batch_is_bit_identical_to_single() {
+        let fc = tiled_fc(9, 70, 7, 15); // ragged width, mid-row alpha splits
+        let mut rng = Rng::new(16);
+        let xs: Vec<Vec<f32>> = (0..6).map(|_| rng.normal_vec(70, 1.0)).collect();
+        for layout in [PackedLayout::TileResident, PackedLayout::Expanded] {
+            let packed = fc.build_packed(layout).unwrap();
+            let mut scratch = Scratch::default();
+            let batch = fc.forward_packed_batch(&packed, &xs, true, &mut scratch);
+            assert_eq!(batch.len(), xs.len());
+            for (b, x) in xs.iter().enumerate() {
+                let single = fc.forward_packed(&packed, x, true, &mut scratch);
+                assert_eq!(batch[b], single, "{layout:?} sample {b}");
+            }
         }
     }
 
@@ -150,7 +209,7 @@ mod tests {
     #[test]
     fn relu_applies_on_all_paths() {
         let fc = tiled_fc(8, 24, 4, 13);
-        let packed = fc.build_packed().unwrap();
+        let packed = fc.build_packed(PackedLayout::default()).unwrap();
         let mut rng = Rng::new(14);
         let x = rng.normal_vec(24, 1.0);
         let mut s = Scratch::default();

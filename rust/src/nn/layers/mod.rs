@@ -26,7 +26,7 @@ pub use conv::Conv2dLayer;
 pub use fc::FcLayer;
 
 use super::layer_resident_bytes;
-use super::packed::PackedLayer;
+use super::packed::{PackedLayer, PackedLayout};
 use crate::arch::{ArchSpec, Kind};
 use crate::tbn::{alphas_from, tile_from_weights, AlphaMode, LayerRecord, WeightPayload};
 use crate::tensor::BitVec;
@@ -44,13 +44,20 @@ pub enum PoolKind {
 ///
 /// * `words` — packed sign bits of the current activation / im2col patch;
 /// * `patch` — f32 im2col staging buffer;
-/// * `qi8` / `patch_i8` — layer-0 int8 input and its im2col staging.
+/// * `qi8` / `patch_i8` — layer-0 int8 input and its im2col staging;
+/// * `batch_words` / `gammas` / `batch_out` — the batched packed path:
+///   `B` packed activation-bit vectors side by side, their XNOR-Net
+///   scales, and the per-batch output staging (conv scatters it back into
+///   channel-major order).
 #[derive(Debug, Clone, Default)]
 pub struct Scratch {
     pub words: Vec<u64>,
     pub patch: Vec<f32>,
     pub qi8: Vec<i8>,
     pub patch_i8: Vec<i8>,
+    pub batch_words: Vec<u64>,
+    pub gammas: Vec<f32>,
+    pub batch_out: Vec<f32>,
 }
 
 /// One node of the inference layer graph.  Activations flow through as flat
@@ -107,8 +114,8 @@ impl Node {
     /// The TBNZ record behind a weight node.
     pub fn record(&self) -> Option<&LayerRecord> {
         match self {
-            Node::Fc(l) => Some(&l.record),
-            Node::Conv2d(l) => Some(&l.record),
+            Node::Fc(l) => Some(l.record.as_ref()),
+            Node::Conv2d(l) => Some(l.record.as_ref()),
             _ => None,
         }
     }
@@ -119,12 +126,31 @@ impl Node {
         self.record().map(layer_resident_bytes).unwrap_or(0)
     }
 
-    /// Build the packed per-layer state for a weight node (`None` for
-    /// weightless nodes).
-    pub(crate) fn build_packed(&self) -> Result<Option<PackedLayer>, String> {
+    /// Scratch staging bytes this node's *packed* batch-1 forward holds
+    /// live on top of weights and in/out activations: a packed conv stages
+    /// the whole binarized im2col map (`area` packed patch vectors), its
+    /// per-position gammas and a position-major output copy; a packed FC
+    /// stages one packed activation vector.  `Engine::peak_memory_bytes`
+    /// adds this term for nodes that run packed.
+    pub fn packed_scratch_bytes(&self) -> usize {
         match self {
-            Node::Fc(l) => l.build_packed().map(Some),
-            Node::Conv2d(l) => l.build_packed().map(Some),
+            Node::Fc(l) => 8 * l.n.div_ceil(64).max(1),
+            Node::Conv2d(c) => {
+                let area = c.h_out * c.w_out;
+                let stride = c.patch_len().div_ceil(64).max(1);
+                8 * area * stride + 4 * area + 4 * area * (c.co / c.groups)
+            }
+            _ => 0,
+        }
+    }
+
+    /// Build the packed per-layer state for a weight node (`None` for
+    /// weightless nodes) under the given weight layout.
+    pub(crate) fn build_packed(&self, layout: PackedLayout)
+                               -> Result<Option<PackedLayer>, String> {
+        match self {
+            Node::Fc(l) => l.build_packed(layout).map(Some),
+            Node::Conv2d(l) => l.build_packed(layout).map(Some),
             _ => Ok(None),
         }
     }

@@ -23,11 +23,19 @@
 //!   [`EnginePath`]s; [`MlpEngine`] is the thin FC-chain wrapper `serve`,
 //!   the CLI and the benches construct from a `TbnzModel`.
 //!
-//! The bit-packed fast path (`packed` module) materializes expanded sign
-//! rows as `u64` words at load time, sign-binarizes hidden activations with
-//! an XNOR-Net scale, and reduces every weight layer — FC rows and conv
-//! im2col patches alike — to XNOR + popcount with one multiply per
-//! constant-alpha run.  The reference path doubles as the oracle the packed
+//! The bit-packed fast path (`packed` module) sign-binarizes hidden
+//! activations with an XNOR-Net scale and reduces every weight layer — FC
+//! rows and conv im2col patches alike — to XNOR + popcount with one
+//! multiply per constant-alpha run.  Tiled layers default to the
+//! **tile-resident** layout (`PackedLayout::TileResident`): exactly one
+//! packed `q`-bit tile plus its alphas stays resident per layer, and row
+//! dots walk constant-alpha runs as offsets into the tile (shift-stitched
+//! word views where the phases disagree mod 64) — `O(q)` weight residency
+//! and traffic instead of the expanded `O(m·n)` layout, which remains
+//! available behind `PackedLayout::Expanded` for A/B measurement.  Batched
+//! forwards (`Engine::forward_batch` / `PackedLayer::
+//! forward_batch_binarized_rows`) walk each row's weight state once across
+//! the whole batch.  The reference path doubles as the oracle the packed
 //! paths are parity-tested against (`rust/tests/packed_parity.rs`,
 //! `rust/tests/conv_parity.rs`).
 
@@ -38,8 +46,9 @@ mod packed;
 pub use engine::{Engine, MlpEngine, Nonlin};
 pub use layers::{lower_arch_spec, Conv2dLayer, FcLayer, LowerOptions, Node, PoolKind,
                  Scratch};
-pub use packed::{binarize_activations, forward_quantized_reference, payload_row_dot_i8,
-                 quantize_input_i8, AlphaRun, EnginePath, PackedLayer, PackedPayload};
+pub use packed::{binarize_activations, binarize_activations_into,
+                 forward_quantized_reference, payload_row_dot_i8, quantize_input_i8,
+                 AlphaRun, EnginePath, PackedLayer, PackedLayout, PackedPayload};
 
 use crate::tbn::{LayerRecord, WeightPayload};
 use crate::tensor::BitVec;

@@ -1,10 +1,9 @@
 //! Bit-packed XNOR-popcount layer state (§5 deployment kernels).
 //!
 //! The reference kernels expand each tile lazily and multiply in f32.  The
-//! fast path instead materializes, **once at model-load time**, every weight
-//! layer's expanded sign matrix as `u64`-packed rows plus per-row runs of
-//! constant alpha ([`PackedLayer`]), then runs the deployment forward of the
-//! BNN literature (Kim & Smaragdis 2016; XNOR-Net):
+//! fast path instead prepares, **once at model-load time**, per-layer packed
+//! state ([`PackedLayer`]) and runs the deployment forward of the BNN
+//! literature (Kim & Smaragdis 2016; XNOR-Net):
 //!
 //! * the first weight layer consumes the raw f32 input through the reference
 //!   Algorithm 1 kernels (first layers stay higher precision, the standard
@@ -16,6 +15,23 @@
 //!   `gamma = mean |h|`, and computes `y = gamma * sum_runs alpha_run *
 //!   xnor_popcount(row_bits, x_bits)` — pure word ops plus one multiply per
 //!   alpha run.
+//!
+//! **Tile-resident layout** (the default, [`PackedLayout::TileResident`]):
+//! a tiled layer keeps exactly *one* packed tile — `q` bits in `~q/64`
+//! `u64` words — plus its alpha scalars resident
+//! ([`PackedPayload::Tile`]).  Every row of the expanded `m x n` sign
+//! matrix is a window into the endlessly repeated tile stream, so row dots
+//! walk the row's constant-alpha runs as *offsets into the tile*:
+//! word-aligned views when the tile phase and the activation phase agree
+//! mod 64, shift-stitched views otherwise
+//! (`tbn::bitops::xnor_dot_words_offset`).  Weight residency and weight
+//! traffic per layer drop from `O(m·n)` bits to `O(q)` — the paper's
+//! "single tile per layer in memory" inference kernel — and the tile stays
+//! L1-resident across all `m` rows and a whole batch.
+//! [`PackedLayout::Expanded`] keeps the PR 1 behavior (every row expanded
+//! into its own packed words) for A/B measurement; the two layouts are
+//! bit-exact against each other because both accumulate the same exact
+//! integer dot per alpha run in the same order.
 //!
 //! A `PackedLayer` is a plain `(m, n)` row matrix over the layer's row-major
 //! flat weights: FC layers pack their `[m, n]` shape directly, Conv2d layers
@@ -32,7 +48,7 @@
 //! tie-breaks at exactly-zero activations).
 
 use super::{fc_fp_forward, fc_layer_forward};
-use crate::tbn::bitops::xnor_dot_words_range;
+use crate::tbn::bitops::{xnor_dot_words_offset, xnor_dot_words_range};
 use crate::tbn::{LayerRecord, TbnzModel, WeightPayload};
 
 /// Which implementation serves `MlpEngine::forward` / `Engine::forward`.
@@ -59,6 +75,20 @@ impl EnginePath {
     }
 }
 
+/// How tiled layers lay out their packed weight state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PackedLayout {
+    /// Keep exactly one packed tile (`q` bits) per tiled layer and compute
+    /// row dots as offsets into it — `O(q)` weight residency, the paper's
+    /// GPU/microcontroller tile-reuse kernel.  The default.
+    #[default]
+    TileResident,
+    /// Expand every row of the `m x n` sign matrix into its own packed
+    /// words (the PR 1 layout) — `O(m·n)` residency, kept behind this
+    /// explicit toggle for A/B measurement.
+    Expanded,
+}
+
 /// One run of constant alpha inside a packed row: `[start, start + len)`
 /// bits scaled by `alpha`.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -82,6 +112,19 @@ pub enum PackedPayload {
         runs: Vec<AlphaRun>,
         /// Row `i` owns `runs[run_offsets[i] .. run_offsets[i + 1]]`.
         run_offsets: Vec<u32>,
+    },
+    /// Tiled layer, tile-resident: one packed `q`-bit tile shared by every
+    /// row.  Row `i`'s weight bit at column `j` is
+    /// `tile[(i*n + j) % q]` and its alpha is
+    /// `alphas[((i*n + j) / q) % alphas.len()]`, so the per-row alpha runs
+    /// are derived arithmetically — no per-row metadata is stored at all.
+    Tile {
+        /// Tile length in bits.
+        q: usize,
+        /// `ceil(q / 64)` packed words, LSB-first, tail bits zero.
+        tile_words: Vec<u64>,
+        /// 1 (layer-wide) or p (per-tile) scalars.
+        alphas: Vec<f32>,
     },
     /// Full-precision layer: dense row-major weights (nothing to pack).
     Dense(Vec<f32>),
@@ -124,11 +167,19 @@ impl PackedLayer {
         PackedLayer::from_record_mn(l, l.shape[0], l.shape[1])
     }
 
+    /// [`PackedLayer::from_record_mn_layout`] with the default
+    /// (tile-resident) layout.
+    pub fn from_record_mn(l: &LayerRecord, m: usize, n: usize) -> Result<PackedLayer, String> {
+        PackedLayer::from_record_mn_layout(l, m, n, PackedLayout::default())
+    }
+
     /// Pack any payload viewed as an `(m, n)` row matrix over its row-major
     /// flat weights.  FC layers pass their shape directly; Conv2d passes
     /// `(co, ci/groups * kh * kw)` so each row is one output channel's
-    /// im2col filter.
-    pub fn from_record_mn(l: &LayerRecord, m: usize, n: usize) -> Result<PackedLayer, String> {
+    /// im2col filter.  `layout` selects the weight layout for tiled
+    /// payloads (Bwnn and Fp payloads are unaffected).
+    pub fn from_record_mn_layout(l: &LayerRecord, m: usize, n: usize,
+                                 layout: PackedLayout) -> Result<PackedLayer, String> {
         if m * n != l.n() {
             return Err(format!(
                 "{}: {m}x{n} row view does not cover {} params",
@@ -159,35 +210,52 @@ impl PackedLayer {
                 if q == 0 || (m * n) % q != 0 || alphas.is_empty() {
                     return Err(format!("{}: invalid tiled payload (q={q})", l.name));
                 }
-                let (words_per_row, row_words) = pack_rows(m, n, |flat| tile.get_bit(flat % q));
-                let single = alphas.len() == 1;
-                let mut runs = Vec::new();
-                let mut run_offsets = Vec::with_capacity(m + 1);
-                run_offsets.push(0u32);
-                for i in 0..m {
-                    let row_start = i * n;
-                    let mut j = 0usize;
-                    while j < n {
-                        let flat = row_start + j;
-                        // run until the tile wraps (alpha can only change there)
-                        let len = (q - flat % q).min(n - j);
-                        let alpha = if single {
-                            alphas[0]
-                        } else {
-                            alphas[(flat / q) % alphas.len()]
-                        };
-                        runs.push(AlphaRun { start: j as u32, len: len as u32, alpha });
-                        j += len;
+                match layout {
+                    PackedLayout::TileResident => PackedPayload::Tile {
+                        q,
+                        tile_words: tile.words().to_vec(),
+                        alphas: alphas.clone(),
+                    },
+                    PackedLayout::Expanded => {
+                        let (words_per_row, row_words) =
+                            pack_rows(m, n, |flat| tile.get_bit(flat % q));
+                        let single = alphas.len() == 1;
+                        let mut runs = Vec::new();
+                        let mut run_offsets = Vec::with_capacity(m + 1);
+                        run_offsets.push(0u32);
+                        for i in 0..m {
+                            let row_start = i * n;
+                            let mut j = 0usize;
+                            while j < n {
+                                let flat = row_start + j;
+                                // run until the tile wraps (alpha can only
+                                // change there)
+                                let len = (q - flat % q).min(n - j);
+                                let alpha = if single {
+                                    alphas[0]
+                                } else {
+                                    alphas[(flat / q) % alphas.len()]
+                                };
+                                runs.push(AlphaRun {
+                                    start: j as u32,
+                                    len: len as u32,
+                                    alpha,
+                                });
+                                j += len;
+                            }
+                            run_offsets.push(runs.len() as u32);
+                        }
+                        PackedPayload::Bits { words_per_row, row_words, runs, run_offsets }
                     }
-                    run_offsets.push(runs.len() as u32);
                 }
-                PackedPayload::Bits { words_per_row, row_words, runs, run_offsets }
             }
         };
         Ok(PackedLayer { name: l.name.clone(), m, n, payload })
     }
 
-    /// Weight bytes resident for this layer on the packed path.
+    /// Weight bytes resident for this layer on the packed path.  A
+    /// tile-resident layer reports the true sub-bit number: the packed
+    /// tile words plus the alpha table, independent of `m` and `n`.
     pub fn resident_bytes(&self) -> usize {
         match &self.payload {
             PackedPayload::Bits { row_words, runs, run_offsets, .. } => {
@@ -195,7 +263,22 @@ impl PackedLayer {
                     + std::mem::size_of::<AlphaRun>() * runs.len()
                     + 4 * run_offsets.len()
             }
+            PackedPayload::Tile { tile_words, alphas, .. } => {
+                8 * tile_words.len() + 4 * alphas.len()
+            }
             PackedPayload::Dense(w) => 4 * w.len(),
+        }
+    }
+
+    /// Resident `u64` weight words behind this layer's packed bit state
+    /// (what the inner loops stream from; 0 for dense fp payloads, which
+    /// keep f32 weights instead).  `benches/fig5_memtrace.rs` traces this
+    /// per layer.
+    pub fn weight_words(&self) -> usize {
+        match &self.payload {
+            PackedPayload::Bits { row_words, .. } => row_words.len(),
+            PackedPayload::Tile { tile_words, .. } => tile_words.len(),
+            PackedPayload::Dense(_) => 0,
         }
     }
 
@@ -204,6 +287,14 @@ impl PackedLayer {
     /// xnor_popcount(row, xw)` for bit rows; add/subtract per weight for
     /// dense rows.  The shared inner kernel of the packed FC *and* conv
     /// forwards.
+    ///
+    /// On the tile-resident layout the row never materializes: each
+    /// constant-alpha run is a dot of the activation bits `[j, j+len)`
+    /// against the tile bits `[ti, ti+len)` at the row's tile phase
+    /// `ti = (i*n + j) % q`, via the misaligned shift-stitch kernel.  Runs
+    /// are derived arithmetically (a run ends where the tile wraps), so
+    /// the two layouts accumulate the same exact integer dots in the same
+    /// order — bit-exact agreement.
     pub fn row_dot_binarized(&self, i: usize, xw: &[u64]) -> f32 {
         match &self.payload {
             PackedPayload::Bits { words_per_row, row_words, runs, run_offsets } => {
@@ -214,6 +305,25 @@ impl PackedLayer {
                     let dot =
                         xnor_dot_words_range(row, xw, run.start as usize, run.len as usize);
                     acc += run.alpha * dot as f32;
+                }
+                acc
+            }
+            PackedPayload::Tile { q, tile_words, alphas } => {
+                let q = *q;
+                let single = alphas.len() == 1;
+                let row_start = i * self.n;
+                let mut acc = 0.0f32;
+                let mut j = 0usize;
+                while j < self.n {
+                    let flat = row_start + j;
+                    let ti = flat % q;
+                    // run until the tile wraps (alpha can only change there)
+                    let len = (q - ti).min(self.n - j);
+                    let alpha =
+                        if single { alphas[0] } else { alphas[(flat / q) % alphas.len()] };
+                    let dot = xnor_dot_words_offset(tile_words, ti, xw, j, len);
+                    acc += alpha * dot as f32;
+                    j += len;
                 }
                 acc
             }
@@ -244,6 +354,40 @@ impl PackedLayer {
             })
             .collect()
     }
+
+    /// Batched binarized forward of rows `[row_lo, row_hi)` over `B` packed
+    /// inputs: `xws` holds `B` activation-bit vectors of `stride` words
+    /// each (input `b` at `xws[b*stride .. (b+1)*stride]`, bits `>= n`
+    /// zero), `gammas` their XNOR-Net scales (`B = gammas.len()`).
+    ///
+    /// Row-major loop order: each row's weight state — its packed words and
+    /// alpha runs, or the one shared tile — is walked while hot across the
+    /// whole batch, which is where the batched path earns its keep (the
+    /// tile-resident layout keeps `O(q)` weight bytes hot across all rows
+    /// *and* all samples).  Outputs land at
+    /// `out[b * (row_hi - row_lo) + (i - row_lo)]`, each exactly equal to
+    /// the single-sample path: `gamma_b * row_dot_binarized(i, xw_b)`
+    /// (+ ReLU).
+    ///
+    /// FC layers pass all rows and one vector per batch sample; Conv2d
+    /// passes one group's row range and one vector per output position.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_batch_binarized_rows(&self, row_lo: usize, row_hi: usize,
+                                        xws: &[u64], stride: usize, gammas: &[f32],
+                                        relu: bool, out: &mut [f32]) {
+        let bsz = gammas.len();
+        debug_assert!(row_lo <= row_hi && row_hi <= self.m);
+        debug_assert!(xws.len() >= bsz * stride);
+        let nrows = row_hi - row_lo;
+        debug_assert!(out.len() >= bsz * nrows);
+        for i in row_lo..row_hi {
+            for b in 0..bsz {
+                let xw = &xws[b * stride..(b + 1) * stride];
+                let v = gammas[b] * self.row_dot_binarized(i, xw);
+                out[b * nrows + (i - row_lo)] = if relu { v.max(0.0) } else { v };
+            }
+        }
+    }
 }
 
 /// Sign-binarize an activation vector into `words` (bit j set iff
@@ -255,6 +399,17 @@ pub fn binarize_activations(h: &[f32], words: &mut Vec<u64>) -> f32 {
     let wpr = h.len().div_ceil(64).max(1);
     words.clear();
     words.resize(wpr, 0);
+    binarize_activations_into(h, words)
+}
+
+/// [`binarize_activations`] into a caller-placed word slice (at least
+/// `ceil(len/64)` words; fully overwritten, tail bits zeroed).  Batch loops
+/// pack `B` inputs side by side in one buffer through this entry point.
+pub fn binarize_activations_into(h: &[f32], words: &mut [u64]) -> f32 {
+    debug_assert!(words.len() * 64 >= h.len());
+    for w in words.iter_mut() {
+        *w = 0;
+    }
     let mut sum = 0.0f32;
     for (j, &v) in h.iter().enumerate() {
         sum += v.abs();
@@ -516,6 +671,113 @@ mod tests {
         }
         // a wrong row view is rejected
         assert!(PackedLayer::from_record_mn(&rec, co, n + 1).is_err());
+    }
+
+    /// The tile-resident layout is bit-exact against the expanded layout:
+    /// same integer dots per run, same f32 accumulation order — across
+    /// ragged widths (n % 64 != 0), mid-row alpha splits and q % 64 != 0
+    /// tiles (the shift-stitched cases).
+    #[test]
+    fn tile_resident_matches_expanded_bit_exact() {
+        let mut rng = Rng::new(41);
+        for (m, n, p) in [(7, 70, 7), (5, 12, 4), (16, 64, 4), (13, 33, 3),
+                          (6, 130, 4), (9, 65, 5), (4, 100, 8)] {
+            if (m * n) % p != 0 {
+                panic!("bad test shape {m}x{n} p={p}");
+            }
+            for mode in [AlphaMode::Single, AlphaMode::PerTile] {
+                let rec = tiled_record("t", m, n, p, mode, &mut rng);
+                let expanded = PackedLayer::from_record_mn_layout(
+                    &rec, m, n, PackedLayout::Expanded).unwrap();
+                let tile = PackedLayer::from_record_mn_layout(
+                    &rec, m, n, PackedLayout::TileResident).unwrap();
+                assert!(matches!(expanded.payload, PackedPayload::Bits { .. }));
+                assert!(matches!(tile.payload, PackedPayload::Tile { .. }));
+                let h = rng.normal_vec(n, 1.0);
+                let mut xw = Vec::new();
+                let gamma = binarize_activations(&h, &mut xw);
+                assert_eq!(
+                    tile.forward_binarized(&xw, gamma, false),
+                    expanded.forward_binarized(&xw, gamma, false),
+                    "m={m} n={n} p={p} mode={mode:?}"
+                );
+            }
+        }
+    }
+
+    /// Tile-resident residency is the sub-bit number — q bits + alphas —
+    /// and at least 8x below the expanded rows once m*n/q >= 8.
+    #[test]
+    fn tile_resident_residency_is_o_q() {
+        let mut rng = Rng::new(43);
+        let (m, n, p) = (64usize, 96usize, 8usize); // q = 768, m*n/q = 8
+        let rec = tiled_record("t", m, n, p, AlphaMode::PerTile, &mut rng);
+        let q = m * n / p;
+        let tile = PackedLayer::from_record_mn_layout(
+            &rec, m, n, PackedLayout::TileResident).unwrap();
+        let expanded = PackedLayer::from_record_mn_layout(
+            &rec, m, n, PackedLayout::Expanded).unwrap();
+        assert_eq!(tile.resident_bytes(), 8 * q.div_ceil(64) + 4 * p);
+        assert!(tile.resident_bytes() <= q / 8 + 8 + 4 * p,
+                "tile residency {} vs q/8 = {}", tile.resident_bytes(), q / 8);
+        assert!(expanded.resident_bytes() >= 8 * tile.resident_bytes(),
+                "expanded {} vs tile {}", expanded.resident_bytes(),
+                tile.resident_bytes());
+        assert_eq!(tile.weight_words(), q.div_ceil(64));
+        assert_eq!(expanded.weight_words(), m * n.div_ceil(64));
+    }
+
+    /// The batched row kernel is exactly the single-sample kernel in a
+    /// different loop order.
+    #[test]
+    fn batch_binarized_rows_match_single_path() {
+        let mut rng = Rng::new(44);
+        for layout in [PackedLayout::TileResident, PackedLayout::Expanded] {
+            let (m, n) = (11usize, 70usize);
+            let rec = tiled_record("t", m, n, 7, AlphaMode::PerTile, &mut rng);
+            let packed = PackedLayer::from_record_mn_layout(&rec, m, n, layout).unwrap();
+            let stride = n.div_ceil(64).max(1);
+            let bsz = 5usize;
+            let mut xws = vec![0u64; bsz * stride];
+            let mut gammas = Vec::with_capacity(bsz);
+            let mut singles = Vec::with_capacity(bsz);
+            for b in 0..bsz {
+                let h = rng.normal_vec(n, 1.0);
+                let g = binarize_activations_into(
+                    &h, &mut xws[b * stride..(b + 1) * stride]);
+                gammas.push(g);
+                singles.push(packed.forward_binarized(
+                    &xws[b * stride..(b + 1) * stride], g, true));
+            }
+            let mut out = vec![0.0f32; bsz * m];
+            packed.forward_batch_binarized_rows(0, m, &xws, stride, &gammas, true,
+                                                &mut out);
+            for b in 0..bsz {
+                assert_eq!(&out[b * m..(b + 1) * m], &singles[b][..],
+                           "{layout:?} sample {b}");
+            }
+            // a row sub-range lands at the same values, re-based
+            let (lo, hi) = (3usize, 8usize);
+            let mut sub = vec![0.0f32; bsz * (hi - lo)];
+            packed.forward_batch_binarized_rows(lo, hi, &xws, stride, &gammas, true,
+                                                &mut sub);
+            for b in 0..bsz {
+                assert_eq!(&sub[b * (hi - lo)..(b + 1) * (hi - lo)],
+                           &singles[b][lo..hi], "{layout:?} rows {lo}..{hi}");
+            }
+        }
+    }
+
+    #[test]
+    fn binarize_into_matches_vec_entry_point() {
+        let mut rng = Rng::new(45);
+        let h = rng.normal_vec(130, 1.0);
+        let mut words = Vec::new();
+        let g1 = binarize_activations(&h, &mut words);
+        let mut slice = vec![u64::MAX; 3]; // stale bits must be cleared
+        let g2 = binarize_activations_into(&h, &mut slice);
+        assert_eq!(g1, g2);
+        assert_eq!(&words[..], &slice[..]);
     }
 
     #[test]

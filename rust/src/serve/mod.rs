@@ -18,7 +18,10 @@
 //! (`Reject` — `submit` returns an error and `ServerStats::rejected`
 //! counts it) and blocking the submitter until a worker drains space
 //! (`Block`).  Per-worker request/batch counters live in
-//! [`ServerStats::per_worker`].
+//! [`ServerStats::per_worker`], and a ring buffer of recent request
+//! durations feeds the tail-latency report
+//! ([`ServerStats::latency_percentiles`]: p50/p95/p99, printed by
+//! `tbn serve`).
 
 use std::collections::VecDeque;
 use std::sync::mpsc;
@@ -65,6 +68,20 @@ pub struct WorkerStats {
     pub batches: usize,
 }
 
+/// Capacity of the recent-latency ring buffer behind
+/// [`ServerStats::latency_percentiles`].
+pub const LATENCY_RING_CAP: usize = 4096;
+
+/// Latency percentiles over the most recent [`LATENCY_RING_CAP`] requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LatencyPercentiles {
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    /// Requests the report was computed over (`<= LATENCY_RING_CAP`).
+    pub samples: usize,
+}
+
 /// Aggregate serving statistics.
 #[derive(Debug, Clone, Default)]
 pub struct ServerStats {
@@ -79,6 +96,10 @@ pub struct ServerStats {
     pub workers: usize,
     /// One entry per worker thread; sums match `served` / `batches`.
     pub per_worker: Vec<WorkerStats>,
+    /// End-to-end latencies (us) of the most recent requests, oldest
+    /// first, capacity [`LATENCY_RING_CAP`] — the window behind the
+    /// percentile report.
+    pub latency_ring: VecDeque<u64>,
 }
 
 impl ServerStats {
@@ -88,6 +109,40 @@ impl ServerStats {
 
     pub fn mean_batch(&self) -> f64 {
         self.batch_size_sum as f64 / self.batches.max(1) as f64
+    }
+
+    /// Record one completed request's end-to-end latency: aggregate
+    /// counters plus the bounded percentile ring (oldest entry evicted at
+    /// capacity).  The single write path the workers and the ring-bound
+    /// test share.
+    pub fn record_latency(&mut self, total_us: u64) {
+        self.served += 1;
+        self.total_latency_us += total_us;
+        self.max_latency_us = self.max_latency_us.max(total_us);
+        if self.latency_ring.len() == LATENCY_RING_CAP {
+            self.latency_ring.pop_front();
+        }
+        self.latency_ring.push_back(total_us);
+    }
+
+    /// p50/p95/p99 over the latency ring (nearest-rank on the sorted
+    /// window); `None` before the first completed request.
+    pub fn latency_percentiles(&self) -> Option<LatencyPercentiles> {
+        if self.latency_ring.is_empty() {
+            return None;
+        }
+        let mut v: Vec<u64> = self.latency_ring.iter().copied().collect();
+        v.sort_unstable();
+        let pick = |p: f64| {
+            let idx = (p * (v.len() - 1) as f64).round() as usize;
+            v[idx.min(v.len() - 1)]
+        };
+        Some(LatencyPercentiles {
+            p50_us: pick(0.50),
+            p95_us: pick(0.95),
+            p99_us: pick(0.99),
+            samples: v.len(),
+        })
     }
 }
 
@@ -271,9 +326,7 @@ fn worker_loop<M: BatchModel>(worker: usize, queue: &Queue, model: &M,
         for (req, y) in batch.into_iter().zip(ys) {
             let queue_us = run_start.saturating_duration_since(req.enqueued).as_micros() as u64;
             let total_us = req.enqueued.elapsed().as_micros() as u64;
-            s.served += 1;
-            s.total_latency_us += total_us;
-            s.max_latency_us = s.max_latency_us.max(total_us);
+            s.record_latency(total_us);
             let _ = req.resp.send(Response { y, queue_us, total_us, batch_size: bsz });
         }
     }
@@ -566,6 +619,42 @@ mod tests {
         let stats = server.stats();
         assert_eq!(stats.served, 60);
         assert_eq!(stats.rejected, 0);
+    }
+
+    #[test]
+    fn latency_percentiles_report_tail_order() {
+        // empty stats: no report
+        assert!(ServerStats::default().latency_percentiles().is_none());
+
+        let server = Server::start(SumModel { dim: 1, delay: Duration::from_micros(50) },
+                                   BatchPolicy { max_batch: 4, window: Duration::ZERO });
+        let rxs: Vec<_> = (0..40).map(|i| server.submit(vec![i as f32]).unwrap()).collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let stats = server.stats();
+        assert_eq!(stats.latency_ring.len(), 40);
+        let p = stats.latency_percentiles().expect("served requests -> report");
+        assert_eq!(p.samples, 40);
+        assert!(p.p50_us <= p.p95_us && p.p95_us <= p.p99_us,
+                "percentiles must be ordered: {p:?}");
+        assert!(p.p99_us <= stats.max_latency_us);
+        assert!(p.p50_us > 0, "a 50us model cannot have zero p50");
+    }
+
+    #[test]
+    fn latency_ring_is_bounded() {
+        let mut stats = ServerStats::default();
+        for i in 0..(LATENCY_RING_CAP as u64 + 100) {
+            stats.record_latency(i); // the same path worker_loop uses
+        }
+        assert_eq!(stats.latency_ring.len(), LATENCY_RING_CAP);
+        // oldest entries evicted first
+        assert_eq!(*stats.latency_ring.front().unwrap(), 100);
+        assert_eq!(stats.served, LATENCY_RING_CAP + 100);
+        assert_eq!(stats.max_latency_us, LATENCY_RING_CAP as u64 + 99);
+        let p = stats.latency_percentiles().unwrap();
+        assert_eq!(p.samples, LATENCY_RING_CAP);
     }
 
     #[test]

@@ -24,6 +24,16 @@ use super::policy::{decide, Quant, TilingPolicy};
 // Layout convention is `tensor::BitVec`'s: bit k of a packed slice lives in
 // word k / 64 at position k % 64 (LSB-first); bit = 1 encodes +1.
 
+/// Low `count` bits set (`count` in `0..=64`).
+#[inline]
+fn mask_low(count: usize) -> u64 {
+    if count >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << count) - 1
+    }
+}
+
 /// XNOR-popcount dot product over the bit range `[start, start + len)` of
 /// two packed sign slices: returns `sum_i a_i * b_i` over that range, i.e.
 /// `2 * agreements - len`.
@@ -31,10 +41,11 @@ use super::policy::{decide, Quant, TilingPolicy};
 /// This is the one bit-op the whole packed inference path reduces to; the
 /// per-layer alpha scaling happens outside, once per constant-alpha run.
 ///
-/// The interior full words run through a 4-wide unrolled `count_ones`
-/// accumulation (four independent chains the CPU can retire in parallel);
-/// only the boundary words pay the masking.
+/// The interior full words run through two `u128` lanes (four `u64` words
+/// per iteration, two independent popcount chains the CPU can retire in
+/// parallel); only the boundary words pay the masking.
 /// `benches/table2_bitops.rs` reports the words-per-second delta against
+/// [`xnor_dot_words_range_u64x4`] (the previous 4-wide scalar unroll) and
 /// [`xnor_dot_words_range_scalar`].
 #[inline]
 pub fn xnor_dot_words_range(a: &[u64], b: &[u64], start: usize, len: usize) -> i64 {
@@ -63,7 +74,61 @@ pub fn xnor_dot_words_range(a: &[u64], b: &[u64], start: usize, len: usize) -> i
         same += ((!(a[w] ^ b[w])) & mask).count_ones() as u64;
         w += 1;
     }
-    // full words: [w, full_end)
+    // full words: [w, full_end), two u128 lanes at a time
+    let full_end = if end % 64 == 0 { last_w + 1 } else { last_w };
+    let (mut s0, mut s1) = (0u64, 0u64);
+    while w + 4 <= full_end {
+        let a01 = a[w] as u128 | ((a[w + 1] as u128) << 64);
+        let b01 = b[w] as u128 | ((b[w + 1] as u128) << 64);
+        let a23 = a[w + 2] as u128 | ((a[w + 3] as u128) << 64);
+        let b23 = b[w + 2] as u128 | ((b[w + 3] as u128) << 64);
+        s0 += (!(a01 ^ b01)).count_ones() as u64;
+        s1 += (!(a23 ^ b23)).count_ones() as u64;
+        w += 4;
+    }
+    same += s0 + s1;
+    while w < full_end {
+        same += (!(a[w] ^ b[w])).count_ones() as u64;
+        w += 1;
+    }
+    if end % 64 != 0 {
+        // trailing partial word
+        let valid = end - last_w * 64;
+        let mask = (1u64 << valid) - 1;
+        same += ((!(a[last_w] ^ b[last_w])) & mask).count_ones() as u64;
+    }
+    2 * same as i64 - len as i64
+}
+
+/// The pre-u128 inner loop: a 4-wide unrolled scalar `count_ones`
+/// accumulation over `u64` words.  Kept as the bench baseline for the
+/// u128-lane widening (`benches/table2_bitops.rs`) and as a third oracle
+/// for the property tests.
+#[inline]
+pub fn xnor_dot_words_range_u64x4(a: &[u64], b: &[u64], start: usize, len: usize) -> i64 {
+    if len == 0 {
+        return 0;
+    }
+    let end = start + len;
+    debug_assert!(end <= a.len() * 64 && end <= b.len() * 64);
+    let first_w = start / 64;
+    let last_w = (end - 1) / 64;
+    if first_w == last_w {
+        let mut mask = u64::MAX << (start % 64);
+        let valid = end - last_w * 64;
+        if valid < 64 {
+            mask &= (1u64 << valid) - 1;
+        }
+        let same = ((!(a[first_w] ^ b[first_w])) & mask).count_ones() as i64;
+        return 2 * same - len as i64;
+    }
+    let mut same: u64 = 0;
+    let mut w = first_w;
+    if start % 64 != 0 {
+        let mask = u64::MAX << (start % 64);
+        same += ((!(a[w] ^ b[w])) & mask).count_ones() as u64;
+        w += 1;
+    }
     let full_end = if end % 64 == 0 { last_w + 1 } else { last_w };
     let (mut s0, mut s1, mut s2, mut s3) = (0u64, 0u64, 0u64, 0u64);
     while w + 4 <= full_end {
@@ -79,10 +144,90 @@ pub fn xnor_dot_words_range(a: &[u64], b: &[u64], start: usize, len: usize) -> i
         w += 1;
     }
     if end % 64 != 0 {
-        // trailing partial word
         let valid = end - last_w * 64;
         let mask = (1u64 << valid) - 1;
         same += ((!(a[last_w] ^ b[last_w])) & mask).count_ones() as u64;
+    }
+    2 * same as i64 - len as i64
+}
+
+/// Read `count` (1..=64) bits at `[start, start + count)` from a packed
+/// slice into the low bits.  Caller guarantees
+/// `start + count <= a.len() * 64`.
+#[inline]
+fn fetch_bits(a: &[u64], start: usize, count: usize) -> u64 {
+    debug_assert!(count >= 1 && count <= 64);
+    let wi = start / 64;
+    let off = start % 64;
+    let in_word = 64 - off; // bits available from word wi
+    let v = if count <= in_word {
+        a[wi] >> off
+    } else {
+        (a[wi] >> off) | (a[wi + 1] << in_word)
+    };
+    v & mask_low(count)
+}
+
+/// XNOR-popcount dot of two bit ranges at **independent offsets**:
+/// `sum_k a[a_start + k] * b[b_start + k]` for `k in 0..len`, with both
+/// slices packed LSB-first.
+///
+/// This is the tile-resident inner loop: the tile keeps exactly `q` bits
+/// resident and every row of the expanded matrix is a window into the
+/// repeated tile stream, so row dots need dots at a tile phase that
+/// generally differs from the activation's word phase.  When the two phases
+/// agree mod 64 this delegates to the aligned kernel over shifted word
+/// views; otherwise the `a` side is shift-stitched to `b`'s word grid with
+/// the previous high word carried across iterations — one fresh load plus
+/// two shifts per 64 bits of `a`.
+#[inline]
+pub fn xnor_dot_words_offset(a: &[u64], a_start: usize, b: &[u64], b_start: usize,
+                             len: usize) -> i64 {
+    if len == 0 {
+        return 0;
+    }
+    debug_assert!(a_start + len <= a.len() * 64);
+    debug_assert!(b_start + len <= b.len() * 64);
+    if a_start % 64 == b_start % 64 {
+        // congruent phases: one aligned walk over word-shifted views
+        return xnor_dot_words_range(&a[a_start / 64..], &b[b_start / 64..],
+                                    a_start % 64, len);
+    }
+    let mut same: u64 = 0;
+    let mut done = 0usize;
+    // leading partial: advance to b's next word boundary
+    let b_off = b_start % 64;
+    if b_off != 0 {
+        let take = (64 - b_off).min(len);
+        let av = fetch_bits(a, a_start, take);
+        let bv = (b[b_start / 64] >> b_off) & mask_low(take);
+        same += ((!(av ^ bv)) & mask_low(take)).count_ones() as u64;
+        done = take;
+    }
+    // full b words: carried-word stitch of a onto b's grid.  Once b is
+    // word-aligned, a's in-word offset is constant — and nonzero, because
+    // the congruent case was handled above.
+    let mut bw = (b_start + done) / 64;
+    if done + 64 <= len {
+        let off = (a_start + done) % 64;
+        debug_assert!(off != 0, "congruent phases must take the aligned path");
+        let mut wi = (a_start + done) / 64;
+        let mut lo = a[wi] >> off;
+        while done + 64 <= len {
+            let hi = a[wi + 1];
+            let av = lo | (hi << (64 - off));
+            same += (!(av ^ b[bw])).count_ones() as u64;
+            lo = hi >> off;
+            wi += 1;
+            bw += 1;
+            done += 64;
+        }
+    }
+    if done < len {
+        let take = len - done;
+        let av = fetch_bits(a, a_start + done, take);
+        let bv = b[bw] & mask_low(take);
+        same += ((!(av ^ bv)) & mask_low(take)).count_ones() as u64;
     }
     2 * same as i64 - len as i64
 }
@@ -241,29 +386,93 @@ mod tests {
         assert_eq!(xnor_dot_words_range(a.words(), b.words(), 17, 0), 0);
     }
 
-    /// The 4-wide unrolled kernel and the scalar baseline are the same
-    /// function — over long word runs (where the unroll engages), ragged
-    /// boundaries and sub-word ranges.
+    /// The u128-lane kernel, the 4-wide u64 unroll and the scalar baseline
+    /// are the same function — over long word runs (where the wide bodies
+    /// engage), ragged boundaries and sub-word ranges.
     #[test]
     fn unrolled_matches_scalar_baseline() {
         let mut r = Rng::new(23);
-        let len = 64 * 40 + 17; // > 4-word unroll body plus ragged tail
+        let len = 64 * 40 + 17; // > wide-lane body plus ragged tail
         let a = BitVec::from_signs(&r.normal_vec(len, 1.0));
         let b = BitVec::from_signs(&r.normal_vec(len, 1.0));
         for _ in 0..300 {
             let start = r.below(len);
             let l = 1 + r.below(len - start);
-            assert_eq!(
-                xnor_dot_words_range(a.words(), b.words(), start, l),
-                xnor_dot_words_range_scalar(a.words(), b.words(), start, l),
-                "start={start} len={l}"
-            );
+            let scalar = xnor_dot_words_range_scalar(a.words(), b.words(), start, l);
+            assert_eq!(xnor_dot_words_range(a.words(), b.words(), start, l), scalar,
+                       "u128 lanes, start={start} len={l}");
+            assert_eq!(xnor_dot_words_range_u64x4(a.words(), b.words(), start, l), scalar,
+                       "u64x4, start={start} len={l}");
         }
-        // word-aligned full-width run (pure unroll body)
+        // word-aligned full-width run (pure wide-lane body)
         assert_eq!(
             xnor_dot_words_range(a.words(), b.words(), 0, 64 * 40),
             xnor_dot_words_range_scalar(a.words(), b.words(), 0, 64 * 40),
         );
+    }
+
+    /// The misaligned-offset kernel must agree with the naive per-bit dot
+    /// for arbitrary (a_start, b_start, len) triples — including congruent
+    /// phases (the aligned delegation) and sub-word ranges.
+    #[test]
+    fn offset_kernel_matches_naive_at_all_phases() {
+        let mut r = Rng::new(24);
+        let (alen, blen) = (5 * 64 + 23, 7 * 64 + 41);
+        let a = BitVec::from_signs(&r.normal_vec(alen, 1.0));
+        let b = BitVec::from_signs(&r.normal_vec(blen, 1.0));
+        let naive = |a_start: usize, b_start: usize, len: usize| -> i64 {
+            (0..len)
+                .map(|k| {
+                    if a.get_bit(a_start + k) == b.get_bit(b_start + k) { 1i64 } else { -1 }
+                })
+                .sum()
+        };
+        for _ in 0..400 {
+            let a_start = r.below(alen);
+            let b_start = r.below(blen);
+            let l = 1 + r.below((alen - a_start).min(blen - b_start));
+            assert_eq!(
+                xnor_dot_words_offset(a.words(), a_start, b.words(), b_start, l),
+                naive(a_start, b_start, l),
+                "a_start={a_start} b_start={b_start} len={l}"
+            );
+        }
+        // forced congruent-phase cases exercise the aligned delegation
+        for phase in [0usize, 1, 17, 63] {
+            let l = 200.min(alen - (64 + phase)).min(blen - (128 + phase));
+            assert_eq!(
+                xnor_dot_words_offset(a.words(), 64 + phase, b.words(), 128 + phase, l),
+                naive(64 + phase, 128 + phase, l),
+                "congruent phase {phase}"
+            );
+        }
+        assert_eq!(xnor_dot_words_offset(a.words(), 9, b.words(), 70, 0), 0);
+    }
+
+    /// A tile window that wraps nowhere: dotting the repeated-tile stream
+    /// window `[s, s+len)` against an aligned activation equals expanding
+    /// the window first — the identity the tile-resident packed layer rests
+    /// on.
+    #[test]
+    fn offset_kernel_reads_tile_windows_exactly() {
+        let mut r = Rng::new(25);
+        let q = 3 * 64 + 9;
+        let tile = BitVec::from_signs(&r.normal_vec(q, 1.0));
+        let n = 100;
+        let x = BitVec::from_signs(&r.normal_vec(n, 1.0));
+        for s in [0usize, 1, 63, 64, 65, q - n] {
+            let len = n.min(q - s);
+            // expanded window, re-packed at offset 0
+            let window: Vec<f32> =
+                (0..len).map(|k| if tile.get_bit(s + k) { 1.0 } else { -1.0 }).collect();
+            let wv = BitVec::from_signs(&window);
+            let want = xnor_dot_words_range(wv.words(), x.words(), 0, len);
+            assert_eq!(
+                xnor_dot_words_offset(tile.words(), s, x.words(), 0, len),
+                want,
+                "tile offset {s}"
+            );
+        }
     }
 
     #[test]

@@ -5,6 +5,13 @@
 //! allocates/deallocates activations layer by layer.  The tiled kernel
 //! changes only the weight term: a tiled layer keeps just its tile (f32 or
 //! bit-packed) and alphas resident instead of the expanded matrix.
+//!
+//! Since PR 3 the `TbnPacked` row is no longer only a model: the native
+//! engine's tile-resident layout (`nn::PackedLayout::TileResident`,
+//! `nn::PackedLayer::resident_bytes`) keeps exactly the `q`-bit tile +
+//! alpha table this accounting predicts, up to `u64`-word rounding —
+//! pinned by `analytic_model_matches_native_tile_residency` below and
+//! measured per architecture in `benches/table7_memory.rs`.
 
 use crate::arch::{ArchSpec, Kind};
 use super::policy::{decide, Quant, TilingPolicy};
@@ -176,6 +183,41 @@ mod tests {
         let max_act = a.layers.iter().map(|l| 4.0 * (l.in_act + l.out_act) as f64)
             .fold(0.0, f64::max);
         assert!((r.peak_bytes - (r.param_bytes + max_act)).abs() < 1.0);
+    }
+
+    /// The Table 7 `TbnPacked` weight term is what the native tile-resident
+    /// packed layer actually keeps resident, up to u64-word rounding of the
+    /// tile bits.
+    #[test]
+    fn analytic_model_matches_native_tile_residency() {
+        use crate::nn::{PackedLayer, PackedLayout};
+        use crate::tbn::{alphas_from, tile_from_weights, AlphaMode, LayerRecord,
+                         WeightPayload};
+        use crate::util::Rng;
+
+        let (m, n, p) = (96usize, 200usize, 4usize); // q = 4800
+        let mut rng = Rng::new(70);
+        let w = rng.normal_vec(m * n, 1.0);
+        let rec = LayerRecord {
+            name: "fc".into(),
+            shape: vec![m, n],
+            payload: WeightPayload::Tiled {
+                p,
+                tile: tile_from_weights(&w, p),
+                alphas: alphas_from(&w, p, AlphaMode::PerTile),
+            },
+        };
+        let native = PackedLayer::from_record_mn_layout(
+            &rec, m, n, PackedLayout::TileResident).unwrap();
+        let policy = TilingPolicy::tbn(p, 0);
+        let quant = decide(&policy, m * n);
+        assert_eq!(quant, Quant::Tiled { p });
+        let analytic =
+            layer_weight_bytes(m * n, n, quant, &policy, KernelKind::TbnPacked);
+        let diff = native.resident_bytes() as f64 - analytic;
+        assert!(diff.abs() <= 8.0,
+                "native {} vs analytic {analytic} (word rounding only)",
+                native.resident_bytes());
     }
 
     #[test]

@@ -22,7 +22,8 @@
 
 use tiledbits::arch;
 use tiledbits::nn::{
-    lower_arch_spec, Conv2dLayer, Engine, EnginePath, LowerOptions, Node, Nonlin, Scratch,
+    lower_arch_spec, Conv2dLayer, Engine, EnginePath, LowerOptions, Node, Nonlin,
+    PackedLayout, Scratch,
 };
 use tiledbits::tbn::{alphas_from, tile_from_weights, AlphaMode, LayerRecord, WeightPayload};
 use tiledbits::tensor::BitVec;
@@ -216,11 +217,46 @@ fn packed_conv_matches_quantized_oracle() {
 fn packed_conv_batch_equals_per_sample() {
     let mut rng = Rng::new(515);
     let nodes = two_conv_nodes(&mut rng, 2, 7, 7);
-    let packed = Engine::new(nodes, Nonlin::Relu, EnginePath::Packed).unwrap();
-    let xs: Vec<Vec<f32>> = (0..5).map(|_| rng.normal_vec(packed.in_len(), 1.0)).collect();
-    let batch = packed.forward_batch(&xs);
-    for (x, y) in xs.iter().zip(&batch) {
-        assert_eq!(&packed.forward(x), y, "batch and single-sample must be bit-equal");
+    for layout in [PackedLayout::TileResident, PackedLayout::Expanded] {
+        let packed =
+            Engine::with_layout(nodes.clone(), Nonlin::Relu, EnginePath::Packed, layout)
+                .unwrap();
+        let xs: Vec<Vec<f32>> =
+            (0..5).map(|_| rng.normal_vec(packed.in_len(), 1.0)).collect();
+        let batch = packed.forward_batch(&xs);
+        for (x, y) in xs.iter().zip(&batch) {
+            assert_eq!(&packed.forward(x), y,
+                       "{layout:?}: batch and single-sample must be bit-equal");
+        }
+    }
+}
+
+/// The tile-resident conv layout is bit-exact against the expanded layout
+/// across randomized conv stacks — ragged im2col patch lengths
+/// (patch_len % 64 != 0), grouped/depthwise convs, strides and padding all
+/// land on the shift-stitched tile-offset kernel.
+#[test]
+fn tile_resident_conv_matches_expanded_across_shapes() {
+    for case in 0..10u64 {
+        let mut rng = Rng::new(0x7C0214 ^ case.wrapping_mul(0x9E3779B97F4A7C15));
+        let (ci, h, w) = (1 + rng.below(3), 6 + rng.below(4), 6 + rng.below(4));
+        let nodes = two_conv_nodes(&mut rng, ci, h, w);
+        let tile = Engine::with_layout(nodes.clone(), Nonlin::Relu, EnginePath::Packed,
+                                       PackedLayout::TileResident)
+            .unwrap();
+        let expanded = Engine::with_layout(nodes, Nonlin::Relu, EnginePath::Packed,
+                                           PackedLayout::Expanded)
+            .unwrap();
+        assert!(tile.resident_weight_bytes() <= expanded.resident_weight_bytes(),
+                "case {case}: tile residency above expanded");
+        for s in 0..3 {
+            let x = rng.normal_vec(tile.in_len(), 1.0);
+            assert_eq!(tile.forward(&x), expanded.forward(&x), "case {case} sample {s}");
+        }
+        let xs: Vec<Vec<f32>> =
+            (0..4).map(|_| rng.normal_vec(tile.in_len(), 1.0)).collect();
+        assert_eq!(tile.forward_batch(&xs), expanded.forward_batch(&xs),
+                   "case {case} batched");
     }
 }
 

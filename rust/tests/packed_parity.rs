@@ -1,19 +1,24 @@
 //! Packed-vs-reference engine parity (artifact-free).
 //!
 //! The packed path computes the quantized deployment forward with XNOR +
-//! popcount over `u64`-packed rows; the reference path computes the *same
-//! math* in plain f32 (`MlpEngine::forward_quantized` on a `Reference`
-//! engine).  These tests pin the two against each other across randomized
-//! model configurations: tile sizes, layer widths including
-//! non-multiple-of-64 values, alpha modes, and mixed tiled/bwnn/fp chains.
+//! popcount; the reference path computes the *same math* in plain f32
+//! (`MlpEngine::forward_quantized` on a `Reference` engine).  These tests
+//! pin the two against each other across randomized model configurations:
+//! tile sizes, layer widths including non-multiple-of-64 values, alpha
+//! modes, and mixed tiled/bwnn/fp chains — and pin the **tile-resident**
+//! weight layout (one `q`-bit tile resident per layer, row dots as
+//! shift-stitched offsets into it) bit-exactly against the **expanded**
+//! layout across the same configurations, batched and single-sample.
 //!
-//! Tolerance: the packed path accumulates exact integer dots per alpha run
-//! while the oracle accumulates elementwise f32, so values differ by f32
-//! rounding.  A sign tie-break (an activation within rounding distance of
-//! zero binarizing differently) can additionally knock out individual
-//! outputs, so a small outlier budget is allowed per configuration.
+//! Tolerance vs the oracle: the packed path accumulates exact integer dots
+//! per alpha run while the oracle accumulates elementwise f32, so values
+//! differ by f32 rounding.  A sign tie-break (an activation within rounding
+//! distance of zero binarizing differently) can additionally knock out
+//! individual outputs, so a small outlier budget is allowed per
+//! configuration.  The two packed layouts accumulate identical exact dots
+//! in identical order, so their comparison is `assert_eq!` — no tolerance.
 
-use tiledbits::nn::{EnginePath, MlpEngine, Nonlin};
+use tiledbits::nn::{EnginePath, MlpEngine, Nonlin, PackedLayout};
 use tiledbits::tbn::{alphas_from, tile_from_weights, AlphaMode, LayerRecord,
                      TbnzModel, WeightPayload};
 use tiledbits::tensor::BitVec;
@@ -162,11 +167,98 @@ fn packed_handles_ragged_widths_and_split_alpha_runs() {
 fn packed_batch_equals_packed_single() {
     let mut rng = Rng::new(77);
     let model = random_model(&mut rng);
-    let packed = MlpEngine::with_path(model, Nonlin::Relu, EnginePath::Packed).unwrap();
-    let xs: Vec<Vec<f32>> = (0..7).map(|_| rng.normal_vec(packed.in_dim(), 1.0)).collect();
-    let batch = packed.forward_batch(&xs);
-    for (x, y) in xs.iter().zip(&batch) {
-        assert_eq!(&packed.forward(x), y, "batch and single-sample paths must be bit-equal");
+    for layout in [PackedLayout::TileResident, PackedLayout::Expanded] {
+        let packed = MlpEngine::with_path_layout(
+            model.clone(), Nonlin::Relu, EnginePath::Packed, layout).unwrap();
+        let xs: Vec<Vec<f32>> =
+            (0..7).map(|_| rng.normal_vec(packed.in_dim(), 1.0)).collect();
+        let batch = packed.forward_batch(&xs);
+        for (x, y) in xs.iter().zip(&batch) {
+            assert_eq!(&packed.forward(x), y,
+                       "{layout:?}: batch and single-sample paths must be bit-equal");
+        }
+    }
+}
+
+/// The tile-resident layout is bit-exact against the expanded layout across
+/// randomized (m, n, q) model configurations — both walk the same
+/// constant-alpha runs and accumulate the same exact integer dots in the
+/// same order — for single samples and batches alike.
+#[test]
+fn tile_resident_layout_matches_expanded_across_random_configs() {
+    let mut configs = 0usize;
+    for case in 0..16u64 {
+        let mut rng = Rng::new(0x711E ^ case.wrapping_mul(0x9E3779B97F4A7C15));
+        let model = random_model(&mut rng);
+        let ctx = format!(
+            "case {case}: dims {:?}",
+            model.layers.iter().map(|l| l.shape.clone()).collect::<Vec<_>>()
+        );
+        let tile = MlpEngine::with_path_layout(
+            model.clone(), Nonlin::Relu, EnginePath::Packed,
+            PackedLayout::TileResident).unwrap();
+        let expanded = MlpEngine::with_path_layout(
+            model, Nonlin::Relu, EnginePath::Packed, PackedLayout::Expanded).unwrap();
+        // a tiled layer after the first makes the layouts differ in state;
+        // either way the outputs must agree exactly
+        assert!(tile.resident_weight_bytes() <= expanded.resident_weight_bytes(),
+                "{ctx}: tile residency above expanded");
+        for s in 0..3 {
+            let x = rng.normal_vec(tile.in_dim(), 1.0);
+            assert_eq!(tile.forward(&x), expanded.forward(&x), "{ctx} sample {s}");
+        }
+        let xs: Vec<Vec<f32>> =
+            (0..5).map(|_| rng.normal_vec(tile.in_dim(), 1.0)).collect();
+        assert_eq!(tile.forward_batch(&xs), expanded.forward_batch(&xs),
+                   "{ctx} batched");
+        configs += 1;
+    }
+    assert!(configs >= 16);
+}
+
+/// Shift-stitched hard case: ragged widths (n % 64 != 0) with tile lengths
+/// that are not multiples of 64 either, so every row dot on the
+/// tile-resident layout runs at a misaligned tile phase.
+#[test]
+fn tile_resident_handles_shift_stitched_phases() {
+    let mut rng = Rng::new(9191);
+    let w0 = rng.normal_vec(54 * 70, 1.0);
+    let w1 = rng.normal_vec(27 * 54, 1.0);
+    let model = TbnzModel {
+        layers: vec![
+            LayerRecord {
+                name: "fc0".into(),
+                shape: vec![54, 70],
+                payload: WeightPayload::Tiled {
+                    p: 4, // q = 945, 945 % 64 = 49
+                    tile: tile_from_weights(&w0, 4),
+                    alphas: alphas_from(&w0, 4, AlphaMode::PerTile),
+                },
+            },
+            LayerRecord {
+                name: "head".into(),
+                shape: vec![27, 54],
+                payload: WeightPayload::Tiled {
+                    p: 6, // q = 243, 243 % 54 = 27 -> mid-row alpha splits
+                    tile: tile_from_weights(&w1, 6),
+                    alphas: alphas_from(&w1, 6, AlphaMode::PerTile),
+                },
+            },
+        ],
+    };
+    let reference =
+        MlpEngine::with_path(model.clone(), Nonlin::Relu, EnginePath::Reference).unwrap();
+    let tile = MlpEngine::with_path_layout(
+        model.clone(), Nonlin::Relu, EnginePath::Packed,
+        PackedLayout::TileResident).unwrap();
+    let expanded = MlpEngine::with_path_layout(
+        model, Nonlin::Relu, EnginePath::Packed, PackedLayout::Expanded).unwrap();
+    for s in 0..8 {
+        let mut r = Rng::new(3300 + s);
+        let x = r.normal_vec(70, 1.0);
+        assert_eq!(tile.forward(&x), expanded.forward(&x), "layout sample {s}");
+        assert_close(&reference.forward_quantized(&x), &tile.forward(&x), 1,
+                     &format!("oracle sample {s}"));
     }
 }
 

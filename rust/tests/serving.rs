@@ -11,7 +11,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use tiledbits::config::Manifest;
-use tiledbits::nn::{EnginePath, MlpEngine, Nonlin};
+use tiledbits::nn::{EnginePath, MlpEngine, Nonlin, PackedLayout};
 use tiledbits::runtime::Runtime;
 use tiledbits::serve::{BatchPolicy, Server};
 use tiledbits::tbn::{alphas_from, tile_from_weights, AlphaMode, LayerRecord,
@@ -120,13 +120,15 @@ fn throughput_improves_with_batching_pressure() {
 // Artifact-free tier: multi-worker pool over synthetic engines
 // ---------------------------------------------------------------------------
 
-/// Deployment-shaped synthetic model (64 -> 48 tiled, 48 -> 10 bwnn),
-/// deterministic in `seed` — the same construction the engine unit tests use.
-fn synthetic_engine(seed: u64, path: EnginePath) -> MlpEngine {
+/// Deployment-shaped synthetic model (64 -> 48 tiled, 48 -> 32 tiled,
+/// 32 -> 10 bwnn; the middle layer runs packed-tiled), deterministic in
+/// `seed` — the same construction the engine unit tests use.
+fn synthetic_model(seed: u64) -> TbnzModel {
     let mut r = Rng::new(seed);
     let w1: Vec<f32> = r.normal_vec(48 * 64, 1.0);
-    let w2: Vec<f32> = r.normal_vec(10 * 48, 1.0);
-    let model = TbnzModel {
+    let w2: Vec<f32> = r.normal_vec(32 * 48, 1.0);
+    let w3: Vec<f32> = r.normal_vec(10 * 32, 1.0);
+    TbnzModel {
         layers: vec![
             LayerRecord {
                 name: "fc0".into(),
@@ -138,16 +140,28 @@ fn synthetic_engine(seed: u64, path: EnginePath) -> MlpEngine {
                 },
             },
             LayerRecord {
+                name: "fc1".into(),
+                shape: vec![32, 48],
+                payload: WeightPayload::Tiled {
+                    p: 4,
+                    tile: tile_from_weights(&w2, 4),
+                    alphas: alphas_from(&w2, 4, AlphaMode::PerTile),
+                },
+            },
+            LayerRecord {
                 name: "head".into(),
-                shape: vec![10, 48],
+                shape: vec![10, 32],
                 payload: WeightPayload::Bwnn {
-                    bits: BitVec::from_signs(&w2),
-                    alpha: w2.iter().map(|x| x.abs()).sum::<f32>() / w2.len() as f32,
+                    bits: BitVec::from_signs(&w3),
+                    alpha: w3.iter().map(|x| x.abs()).sum::<f32>() / w3.len() as f32,
                 },
             },
         ],
-    };
-    MlpEngine::with_path(model, Nonlin::Relu, path).unwrap()
+    }
+}
+
+fn synthetic_engine(seed: u64, path: EnginePath) -> MlpEngine {
+    MlpEngine::with_path(synthetic_model(seed), Nonlin::Relu, path).unwrap()
 }
 
 #[test]
@@ -228,6 +242,55 @@ fn pool_serves_packed_and_reference_paths_consistently() {
         let stats = server.stats();
         assert_eq!(stats.served, xs.len());
         assert_eq!(stats.workers, 3);
+    }
+}
+
+#[test]
+fn serving_reports_latency_percentiles() {
+    let engine = Arc::new(synthetic_engine(13, EnginePath::Packed));
+    let server = Server::start_pool(
+        engine,
+        BatchPolicy { max_batch: 8, window: Duration::from_micros(200) },
+        2,
+    );
+    let mut r = Rng::new(21);
+    let rxs: Vec<_> = (0..50)
+        .map(|_| server.submit(r.normal_vec(64, 1.0)).unwrap())
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    let stats = server.stats();
+    let p = stats.latency_percentiles().expect("50 served requests -> report");
+    assert_eq!(p.samples, 50);
+    assert!(p.p50_us <= p.p95_us && p.p95_us <= p.p99_us,
+            "tail ordering violated: {p:?}");
+    assert!(p.p99_us <= stats.max_latency_us);
+}
+
+/// The serve stack returns identical outputs under both packed weight
+/// layouts (the tile-resident layout is bit-exact vs expanded), while the
+/// tile-resident engine keeps strictly fewer weight bytes resident.
+#[test]
+fn pool_serves_identically_across_weight_layouts() {
+    let model = synthetic_model(5);
+    let tile = Arc::new(MlpEngine::with_path_layout(
+        model.clone(), Nonlin::Relu, EnginePath::Packed,
+        PackedLayout::TileResident).unwrap());
+    let expanded = Arc::new(MlpEngine::with_path_layout(
+        model, Nonlin::Relu, EnginePath::Packed, PackedLayout::Expanded).unwrap());
+    assert!(tile.resident_weight_bytes() < expanded.resident_weight_bytes(),
+            "tile {} vs expanded {}", tile.resident_weight_bytes(),
+            expanded.resident_weight_bytes());
+    let mut r = Rng::new(77);
+    let xs: Vec<Vec<f32>> = (0..16).map(|_| r.normal_vec(64, 1.0)).collect();
+    let policy = BatchPolicy { max_batch: 4, window: Duration::from_micros(150) };
+    let srv_tile = Server::start_pool(tile, policy.clone(), 2);
+    let srv_exp = Server::start_pool(expanded, policy, 2);
+    for x in &xs {
+        let a = srv_tile.infer(x.clone()).unwrap();
+        let b = srv_exp.infer(x.clone()).unwrap();
+        assert_eq!(a.y, b.y, "layouts must serve bit-identical outputs");
     }
 }
 
