@@ -66,32 +66,36 @@ fn main() {
     // measured per-layer weight-word trace on the native packed engine:
     // how many distinct u64 weight words each binarized layer touches per
     // forward under the expanded rows vs the tile-resident layout (the
-    // total word *reads* are identical; residency is the delta)
+    // total word *reads* are identical; residency is the delta).  The list
+    // now includes a branching graph — resnet_micro's residual joins are
+    // weightless, so the trace covers exactly the weight nodes.
     for (name, spec, input) in [
         ("cnn_micro", arch::cnn_micro(), (3usize, 16usize, 16usize)),
+        ("resnet_micro", arch::resnet_micro(), (3, 7, 7)),
         ("vgg_small_cifar", arch::vgg_small_cifar(), (3, 32, 32)),
     ] {
         let opts = LowerOptions { input, p: 4, alpha_mode: AlphaMode::PerTile, seed: 5 };
-        let nodes = lower_arch_spec(&spec, &opts).expect("sequential paper spec");
-        let expanded = Engine::with_layout(nodes.clone(), Nonlin::Relu,
-                                           EnginePath::Packed, PackedLayout::Expanded)
+        let graph = lower_arch_spec(&spec, &opts).expect("lowerable paper spec");
+        let expanded = Engine::with_layout_graph(graph.clone(), Nonlin::Relu,
+                                                 EnginePath::Packed,
+                                                 PackedLayout::Expanded)
             .unwrap();
-        let tile = Engine::with_layout(nodes, Nonlin::Relu, EnginePath::Packed,
-                                       PackedLayout::TileResident)
+        let tile = Engine::with_layout_graph(graph, Nonlin::Relu, EnginePath::Packed,
+                                             PackedLayout::TileResident)
             .unwrap();
         println!("\n-- {name}: weight words touched per forward (binarized layers) --");
         println!("{:14} {:>10} {:>12} {:>14} {:>8}", "layer", "row passes",
                  "expanded w", "tile-resident", "ratio");
-        for idx in 0..expanded.nodes().len() {
+        for idx in 0..expanded.graph().len() {
             let Some(pe) = expanded.packed_layer(idx) else { continue };
             let pt = tile.packed_layer(idx).expect("same packed node set");
-            let passes = match &expanded.nodes()[idx] {
+            let passes = match expanded.node(idx) {
                 Node::Conv2d(c) => c.h_out * c.w_out,
                 _ => 1,
             };
             let (we, wt) = (pe.weight_words(), pt.weight_words());
             println!("{:14} {passes:>10} {we:>12} {wt:>14} {:>7.1}x",
-                     expanded.nodes()[idx].name(),
+                     expanded.node(idx).name(),
                      we as f64 / wt.max(1) as f64);
         }
     }

@@ -15,8 +15,10 @@ use tiledbits::baselines;
 use tiledbits::bench_util::{bench_dirs, bench_steps, header};
 use tiledbits::config::Manifest;
 use tiledbits::coordinator::run_or_load;
+use tiledbits::nn::{lower_arch_spec, Engine, EnginePath, LowerOptions, Nonlin,
+                    PackedLayout};
 use tiledbits::runtime::Runtime;
-use tiledbits::tbn::{compress, TilingPolicy};
+use tiledbits::tbn::{compress, AlphaMode, TilingPolicy};
 use tiledbits::train::TrainOptions;
 
 fn main() {
@@ -43,6 +45,32 @@ fn main() {
                 .map(|r| format!("(paper: {:.3} / {:.2})", r.bit_width, r.mbit))
                 .unwrap_or_default();
             println!("  TBN_{p:<2} bit-width {bw:.3}  {mbit:8.2} M-bit  {sav:4.1}x  {pub_str}");
+        }
+    }
+
+    // ---- native lowering of the Table 1 branching graphs -------------------
+    // ResNet18/50 lower to residual DAGs (identity + 1x1-projection skips)
+    // and run on the tile-resident packed engine; VGG-Small stays the
+    // sequential baseline.
+    println!("\n-- native layer-graph lowering (residual joins, packed residency) --");
+    for (name, input) in [("resnet18_cifar", (3usize, 32usize, 32usize)),
+                          ("resnet50_cifar", (3, 32, 32)),
+                          ("vgg_small_cifar", (3, 32, 32))] {
+        let spec = arch::arch_by_name(name).unwrap();
+        let opts = LowerOptions { input, p: 4, alpha_mode: AlphaMode::PerTile, seed: 3 };
+        match lower_arch_spec(&spec, &opts) {
+            Ok(graph) => {
+                let joins = graph.nodes.iter().filter(|gn| gn.node.is_join()).count();
+                let n_nodes = graph.len();
+                let tile = Engine::with_layout_graph(graph, Nonlin::Relu,
+                                                     EnginePath::Packed,
+                                                     PackedLayout::TileResident)
+                    .unwrap();
+                println!("{name:18} {n_nodes:3} nodes  {joins:2} residual joins  \
+                          {:>12} tile-resident weight bytes",
+                         tile.resident_weight_bytes());
+            }
+            Err(e) => println!("{name:18} not lowerable: {e}"),
         }
     }
 

@@ -6,8 +6,10 @@ use tiledbits::arch;
 use tiledbits::bench_util::{bench_dirs, bench_steps, header};
 use tiledbits::config::Manifest;
 use tiledbits::coordinator::run_or_load;
+use tiledbits::nn::{lower_arch_spec, Engine, EnginePath, LowerOptions, Node, Nonlin,
+                    PackedLayout};
 use tiledbits::runtime::Runtime;
-use tiledbits::tbn::{compress, TilingPolicy};
+use tiledbits::tbn::{compress, AlphaMode, TilingPolicy};
 use tiledbits::train::TrainOptions;
 
 fn main() {
@@ -23,6 +25,38 @@ fn main() {
             let (bw, mbit, sav) = compress::table_row(&a, &TilingPolicy::tbn(p, lam));
             println!("  TBN_{p}: bit-width {bw:.3}  {mbit:.2} M-bit  ({sav:.1}x)");
         }
+    }
+
+    // native T-Net lowering: pointnet_cls runs as a branching layer graph
+    // (two MatMulFeature joins) on the tile-resident packed engine
+    println!("\n-- native T-Net lowering (pointnet_cls, 1024 points) --");
+    let spec = arch::pointnet_cls();
+    let opts = LowerOptions {
+        input: (3, 1024, 1),
+        p: 4,
+        alpha_mode: AlphaMode::PerTile,
+        seed: 3,
+    };
+    match lower_arch_spec(&spec, &opts) {
+        Ok(graph) => {
+            let tnets: Vec<(usize, usize)> = graph
+                .nodes
+                .iter()
+                .filter_map(|gn| match gn.node {
+                    Node::MatMulFeature { k, positions } => Some((k, positions)),
+                    _ => None,
+                })
+                .collect();
+            let n_nodes = graph.len();
+            let tile = Engine::with_layout_graph(graph, Nonlin::Relu,
+                                                 EnginePath::Packed,
+                                                 PackedLayout::TileResident)
+                .unwrap();
+            println!("{n_nodes} nodes, feature transforms {tnets:?}, \
+                      {} tile-resident weight bytes",
+                     tile.resident_weight_bytes());
+        }
+        Err(e) => println!("not lowerable: {e}"),
     }
 
     let (artifacts, runs) = bench_dirs();

@@ -55,33 +55,42 @@ fn main() {
 
     // measured packed-engine residency: expanded rows vs the tile-resident
     // layout on the natively-lowered paper architectures (binarized layers
-    // only differ; the entry layer stays a reference tile on both)
+    // only differ; the entry layer stays a reference tile on both).  Since
+    // the DAG lowering, the list includes the branching Table 1 / Table 3
+    // architectures: ResNet18/50 (residual joins) and PointNet-cls
+    // (T-Nets) lower natively.
     println!("\n-- packed weight residency: expanded vs tile-resident (measured) --");
     println!("{:22} {:>14} {:>14} {:>8}", "architecture", "expanded B",
              "tile-resident B", "ratio");
-    let specs: [(&str, arch::ArchSpec, (usize, usize, usize)); 4] = [
+    let specs: [(&str, arch::ArchSpec, (usize, usize, usize)); 7] = [
         ("cnn_micro", arch::cnn_micro(), (3, 16, 16)),
         ("pointnet_micro", arch::pointnet_micro(), (3, 64, 1)),
         ("vgg_small_cifar", arch::vgg_small_cifar(), (3, 32, 32)),
         ("convmixer_cifar", arch::convmixer_cifar(), (3, 32, 32)),
+        ("resnet18_cifar", arch::resnet18_cifar(), (3, 32, 32)),
+        ("resnet50_cifar", arch::resnet50_cifar(), (3, 32, 32)),
+        ("pointnet_cls", arch::pointnet_cls(), (3, 1024, 1)),
     ];
     for (name, spec, input) in specs {
         let opts = LowerOptions { input, p: 4, alpha_mode: AlphaMode::PerTile, seed: 9 };
-        let nodes = match lower_arch_spec(&spec, &opts) {
-            Ok(n) => n,
+        let graph = match lower_arch_spec(&spec, &opts) {
+            Ok(g) => g,
             Err(e) => {
                 println!("{name:22} (not lowerable: {e})");
                 continue;
             }
         };
-        let expanded = Engine::with_layout(nodes.clone(), Nonlin::Relu,
-                                           EnginePath::Packed, PackedLayout::Expanded)
+        let joins = graph.nodes.iter().filter(|gn| gn.node.is_join()).count();
+        let expanded = Engine::with_layout_graph(graph.clone(), Nonlin::Relu,
+                                                 EnginePath::Packed,
+                                                 PackedLayout::Expanded)
             .unwrap();
-        let tile = Engine::with_layout(nodes, Nonlin::Relu, EnginePath::Packed,
-                                       PackedLayout::TileResident)
+        let tile = Engine::with_layout_graph(graph, Nonlin::Relu, EnginePath::Packed,
+                                             PackedLayout::TileResident)
             .unwrap();
         let (eb, tb) = (expanded.resident_weight_bytes(), tile.resident_weight_bytes());
-        println!("{name:22} {eb:>14} {tb:>14} {:>7.1}x", eb as f64 / tb as f64);
+        println!("{name:22} {eb:>14} {tb:>14} {:>7.1}x  ({joins} joins)",
+                 eb as f64 / tb as f64);
     }
     println!("(tile-resident keeps q bits + alphas per tiled layer: the paper's");
     println!(" 'single tile per layer in memory' deployment kernel)");

@@ -26,6 +26,39 @@ pub enum Kind {
     Other,
 }
 
+/// Block-boundary annotation marking the branching construct a layer belongs
+/// to.  Plain sequential layers carry no annotation; `nn::lower_arch_spec`
+/// uses consecutive runs of equal `id`s to rebuild the graph edges the flat
+/// `Vec<LayerSpec>` cannot express (ResNet skip connections, PointNet T-Net
+/// subgraphs).  The annotations change nothing about the analytic
+/// accounting — params/MACs stay per-layer sums.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BlockRole {
+    /// Residual-block body layer.  The activation entering the block's first
+    /// body layer is the skip operand; the last body layer's output joins it
+    /// through an elementwise `Add` (ReLU after the join, per ResNet).
+    ResidualBody { id: String },
+    /// The block's 1x1 projection shortcut: lowers from the block input and
+    /// replaces the identity as the skip operand of the join.
+    ResidualDown { id: String },
+    /// T-Net subgraph layer (PointNet): the subgraph branches off the
+    /// current `(k, points)` features, ends in a `k*k` transform vector, and
+    /// the transform left-multiplies the features it branched from
+    /// (`MatMulFeature`).
+    Tnet { id: String, k: usize },
+}
+
+impl BlockRole {
+    /// The block id this annotation groups under.
+    pub fn id(&self) -> &str {
+        match self {
+            BlockRole::ResidualBody { id }
+            | BlockRole::ResidualDown { id }
+            | BlockRole::Tnet { id, .. } => id,
+        }
+    }
+}
+
 /// One weight-bearing layer of a full-size architecture.
 #[derive(Debug, Clone)]
 pub struct LayerSpec {
@@ -39,6 +72,8 @@ pub struct LayerSpec {
     pub in_act: usize,
     /// Output activation elements (batch 1).
     pub out_act: usize,
+    /// Branching-construct membership (`None` for the sequential trunk).
+    pub block: Option<BlockRole>,
 }
 
 impl LayerSpec {
@@ -52,6 +87,7 @@ impl LayerSpec {
             macs: (co * ci * k * k * h_out * w_out) as u64,
             in_act: ci * h_in * w_in,
             out_act: co * h_out * w_out,
+            block: None,
         }
     }
 
@@ -63,6 +99,7 @@ impl LayerSpec {
             macs: (co * ci) as u64,
             in_act: ci,
             out_act: co,
+            block: None,
         }
     }
 
@@ -75,12 +112,19 @@ impl LayerSpec {
             macs: (co * ci * tokens) as u64,
             in_act: ci * tokens,
             out_act: co * tokens,
+            block: None,
         }
     }
 
     pub fn other(name: &str, params: usize) -> LayerSpec {
         LayerSpec { name: name.into(), kind: Kind::Other, params, macs: 0,
-                    in_act: 0, out_act: 0 }
+                    in_act: 0, out_act: 0, block: None }
+    }
+
+    /// Tag this layer as part of a branching construct (builder-style).
+    pub fn in_block(mut self, role: BlockRole) -> LayerSpec {
+        self.block = Some(role);
+        self
     }
 
     pub fn is_conv(&self) -> bool {
@@ -215,8 +259,45 @@ mod tests {
         assert_eq!(c.params, 64 * 3 * 9);
         assert_eq!(c.macs, (64 * 3 * 9 * 32 * 32) as u64);
         assert_eq!(c.per_channel(), 27);
+        assert!(c.block.is_none());
         let f = LayerSpec::fc_tok("f", 512, 512, 64);
         assert_eq!(f.params, 512 * 512);
         assert_eq!(f.macs, (512 * 512 * 64) as u64);
+    }
+
+    /// The block-boundary annotations the graph lowering consumes: every
+    /// residual body/downsample conv and T-Net layer is tagged, the
+    /// sequential trunk is not, and the analytic totals ignore the tags.
+    #[test]
+    fn branching_annotations_group_blocks() {
+        let r18 = resnet18_cifar();
+        let bodies = r18
+            .layers
+            .iter()
+            .filter(|l| matches!(&l.block, Some(BlockRole::ResidualBody { .. })))
+            .count();
+        let downs = r18
+            .layers
+            .iter()
+            .filter(|l| matches!(&l.block, Some(BlockRole::ResidualDown { .. })))
+            .count();
+        assert_eq!(bodies, 16, "8 basic blocks x 2 convs");
+        assert_eq!(downs, 3, "stages 1..3 open with a projection");
+        assert!(r18.layers[0].block.is_none(), "stem is trunk");
+        assert!(r18.layers.last().unwrap().block.is_none(), "fc head is trunk");
+
+        let pn = pointnet_cls();
+        let ks: Vec<usize> = pn
+            .layers
+            .iter()
+            .filter_map(|l| match &l.block {
+                Some(BlockRole::Tnet { k, .. }) => Some(*k),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(ks.len(), 12, "two 6-layer T-Nets");
+        assert!(ks[..6].iter().all(|&k| k == 3));
+        assert!(ks[6..].iter().all(|&k| k == 64));
+        assert_eq!(pn.layers[0].block.as_ref().unwrap().id(), "tnet3");
     }
 }

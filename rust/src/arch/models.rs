@@ -1,10 +1,22 @@
 //! Builders for every paper architecture (see mod.rs for calibration notes).
+//!
+//! Branching topologies (ResNet skips, PointNet T-Nets) carry [`BlockRole`]
+//! annotations so `nn::lower_arch_spec` can rebuild the graph edges from
+//! the flat layer list; the analytic accounting ignores them.
 
-use super::{ArchSpec, LayerSpec};
+use super::{ArchSpec, BlockRole, LayerSpec};
 
 // ---------------------------------------------------------------------------
 // ResNets
 // ---------------------------------------------------------------------------
+
+fn body(l: LayerSpec, id: &str) -> LayerSpec {
+    l.in_block(BlockRole::ResidualBody { id: id.into() })
+}
+
+fn down(l: LayerSpec, id: &str) -> LayerSpec {
+    l.in_block(BlockRole::ResidualDown { id: id.into() })
+}
 
 /// Basic-block ResNet (18/34-style). `stage_blocks` per stage, widths
 /// doubling from `width0`; `img` is the input spatial size after the stem.
@@ -21,12 +33,13 @@ fn basic_resnet(name: &str, stage_blocks: [usize; 4], width0: usize, img: usize,
                 sp /= 2;
             }
             let pre = format!("s{si}b{bi}");
-            layers.push(LayerSpec::conv(&format!("{pre}.conv1"), cin, ch, 3, sp, sp,
-                                        sp * stride, sp * stride));
-            layers.push(LayerSpec::conv(&format!("{pre}.conv2"), ch, ch, 3, sp, sp, sp, sp));
+            layers.push(body(LayerSpec::conv(&format!("{pre}.conv1"), cin, ch, 3, sp, sp,
+                                             sp * stride, sp * stride), &pre));
+            layers.push(body(LayerSpec::conv(&format!("{pre}.conv2"), ch, ch, 3, sp, sp,
+                                             sp, sp), &pre));
             if stride != 1 || cin != ch {
-                layers.push(LayerSpec::conv(&format!("{pre}.down"), cin, ch, 1, sp, sp,
-                                            sp * stride, sp * stride));
+                layers.push(down(LayerSpec::conv(&format!("{pre}.down"), cin, ch, 1, sp, sp,
+                                                 sp * stride, sp * stride), &pre));
             }
             cin = ch;
         }
@@ -50,13 +63,15 @@ fn bottleneck_resnet(name: &str, stage_blocks: [usize; 4], width0: usize, img: u
                 sp /= 2;
             }
             let pre = format!("s{si}b{bi}");
-            layers.push(LayerSpec::conv(&format!("{pre}.conv1"), cin, mid, 1, sp, sp,
-                                        sp * stride, sp * stride));
-            layers.push(LayerSpec::conv(&format!("{pre}.conv2"), mid, mid, 3, sp, sp, sp, sp));
-            layers.push(LayerSpec::conv(&format!("{pre}.conv3"), mid, out, 1, sp, sp, sp, sp));
+            layers.push(body(LayerSpec::conv(&format!("{pre}.conv1"), cin, mid, 1, sp, sp,
+                                             sp * stride, sp * stride), &pre));
+            layers.push(body(LayerSpec::conv(&format!("{pre}.conv2"), mid, mid, 3, sp, sp,
+                                             sp, sp), &pre));
+            layers.push(body(LayerSpec::conv(&format!("{pre}.conv3"), mid, out, 1, sp, sp,
+                                             sp, sp), &pre));
             if stride != 1 || cin != out {
-                layers.push(LayerSpec::conv(&format!("{pre}.down"), cin, out, 1, sp, sp,
-                                            sp * stride, sp * stride));
+                layers.push(down(LayerSpec::conv(&format!("{pre}.down"), cin, out, 1, sp, sp,
+                                                 sp * stride, sp * stride), &pre));
             }
             cin = out;
         }
@@ -185,12 +200,13 @@ pub fn mobilevit() -> ArchSpec {
 // ---------------------------------------------------------------------------
 
 fn tnet(layers: &mut Vec<LayerSpec>, pre: &str, k: usize, points: usize) {
-    layers.push(LayerSpec::fc_tok(&format!("{pre}.conv1"), k, 64, points));
-    layers.push(LayerSpec::fc_tok(&format!("{pre}.conv2"), 64, 128, points));
-    layers.push(LayerSpec::fc_tok(&format!("{pre}.conv3"), 128, 1024, points));
-    layers.push(LayerSpec::fc(&format!("{pre}.fc1"), 1024, 512));
-    layers.push(LayerSpec::fc(&format!("{pre}.fc2"), 512, 256));
-    layers.push(LayerSpec::fc(&format!("{pre}.fc3"), 256, k * k));
+    let t = |l: LayerSpec| l.in_block(BlockRole::Tnet { id: pre.into(), k });
+    layers.push(t(LayerSpec::fc_tok(&format!("{pre}.conv1"), k, 64, points)));
+    layers.push(t(LayerSpec::fc_tok(&format!("{pre}.conv2"), 64, 128, points)));
+    layers.push(t(LayerSpec::fc_tok(&format!("{pre}.conv3"), 128, 1024, points)));
+    layers.push(t(LayerSpec::fc(&format!("{pre}.fc1"), 1024, 512)));
+    layers.push(t(LayerSpec::fc(&format!("{pre}.fc2"), 512, 256)));
+    layers.push(t(LayerSpec::fc(&format!("{pre}.fc3"), 256, k * k)));
 }
 
 pub fn pointnet_cls() -> ArchSpec {
@@ -277,6 +293,7 @@ pub fn convmixer_cifar() -> ArchSpec {
             macs: (dim * k * k * sp * sp) as u64,
             in_act: dim * sp * sp,
             out_act: dim * sp * sp,
+            block: None,
         });
         layers.push(LayerSpec::conv(&format!("{pre}.pw"), dim, dim, 1, sp, sp, sp, sp));
     }
@@ -315,6 +332,44 @@ pub fn pointnet_micro() -> ArchSpec {
             LayerSpec::fc_tok("conv1", 3, 16, n),
             LayerSpec::fc_tok("conv2", 16, 32, n),
             LayerSpec::fc("fc1", 32, 16),
+            LayerSpec::fc("head", 16, 10),
+        ],
+    }
+}
+
+/// Two-block residual mini on a 7x7 input: one identity-skip block and one
+/// stride-2 block with a 1x1 projection shortcut.  The 7x7 map makes the
+/// first residual join `8 * 7 * 7 = 392` elements wide (`392 % 64 != 0`),
+/// so the packed join path exercises ragged activation widths end-to-end.
+pub fn resnet_micro() -> ArchSpec {
+    let mut layers = vec![LayerSpec::conv("stem", 3, 8, 3, 7, 7, 7, 7)];
+    layers.push(body(LayerSpec::conv("b0.conv1", 8, 8, 3, 7, 7, 7, 7), "b0"));
+    layers.push(body(LayerSpec::conv("b0.conv2", 8, 8, 3, 7, 7, 7, 7), "b0"));
+    layers.push(body(LayerSpec::conv("b1.conv1", 8, 12, 3, 4, 4, 7, 7), "b1"));
+    layers.push(body(LayerSpec::conv("b1.conv2", 12, 12, 3, 4, 4, 4, 4), "b1"));
+    layers.push(down(LayerSpec::conv("b1.down", 8, 12, 1, 4, 4, 7, 7), "b1"));
+    layers.push(LayerSpec::fc("head", 12, 10));
+    ArchSpec { name: "resnet_micro".into(), layers }
+}
+
+/// PointNet mini **with T-Nets**: a 3x3 input transform and an 8x8 feature
+/// transform, each a shared-MLP subgraph ending in a `k*k` matrix that
+/// multiplies the features it branched from (`MatMulFeature` joins).
+pub fn pointnet_tnet_micro() -> ArchSpec {
+    let n = 16; // points
+    let t3 = |l: LayerSpec| l.in_block(BlockRole::Tnet { id: "tnet3".into(), k: 3 });
+    let t8 = |l: LayerSpec| l.in_block(BlockRole::Tnet { id: "tnet8".into(), k: 8 });
+    ArchSpec {
+        name: "pointnet_tnet_micro".into(),
+        layers: vec![
+            t3(LayerSpec::fc_tok("tnet3.conv1", 3, 8, n)),
+            t3(LayerSpec::fc_tok("tnet3.conv2", 8, 16, n)),
+            t3(LayerSpec::fc("tnet3.fc1", 16, 8)),
+            t3(LayerSpec::fc("tnet3.fc2", 8, 9)),
+            LayerSpec::fc_tok("conv1", 3, 8, n),
+            t8(LayerSpec::fc_tok("tnet8.conv1", 8, 16, n)),
+            t8(LayerSpec::fc("tnet8.fc1", 16, 64)),
+            LayerSpec::fc_tok("conv2", 8, 16, n),
             LayerSpec::fc("head", 16, 10),
         ],
     }

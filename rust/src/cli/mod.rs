@@ -87,7 +87,7 @@ OPTIONS:
   --engine <path>           serve engine: packed|packed-int8|reference
                                                           [default: packed]
   --layout <layout>         packed weight layout: tile|expanded (A/B)
-                                                          [default: tile]
+                                        [default: tile, or $TBN_LAYOUT if set]
   --workers <n>             serve worker threads          [default: 2]
   --queue-cap <n>           serve queue bound             [default: 1024]
   --overflow <policy>       full-queue behavior: block|reject [default: block]

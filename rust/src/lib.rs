@@ -19,16 +19,21 @@
 //!
 //! ## Inference architecture
 //!
-//! The native engine is a **layer graph**: `nn::Engine` executes a
-//! sequential chain of typed nodes (`nn::layers::Node`) — `Fc`, `Conv2d`
-//! (im2col over the same bit kernels as FC, incl. grouped/depthwise),
-//! `Pool2d`, `GlobalPool`, `Flatten`.  `nn::lower_arch_spec` turns
-//! sequential `arch::models` CNN specs (`vgg_small_cifar`,
-//! `convmixer_cifar`, the `cnn_micro`/`pointnet_micro` minis, PointNet-style
-//! shared-MLP token convs) into runnable node chains; branching specs
-//! (ResNet residuals, T-Nets) are rejected.  `nn::MlpEngine` wraps an
-//! FC-chain `Engine` built from a TBNZ model and keeps the original
-//! deployable-runner API.
+//! The native engine is a **layer DAG**: `nn::Engine` executes an
+//! `nn::Graph` of typed nodes (`nn::layers::Node`) — `Fc`, `Conv2d` (im2col
+//! over the same bit kernels as FC, incl. grouped/depthwise), `Pool2d`,
+//! `GlobalPool`, `Flatten`, plus the two-input join nodes `Add` (residual
+//! skip) and `MatMulFeature` (PointNet T-Net feature transform) — with a
+//! value-table walker: activations are addressable by node id and freed
+//! after their last consumer.  `nn::lower_arch_spec` turns `arch::models`
+//! specs into runnable graphs: sequential CNN stacks (`vgg_small_cifar`,
+//! `convmixer_cifar`, the minis, PointNet-style shared-MLP token convs)
+//! *and* the annotated branching architectures — `resnet18_cifar` /
+//! `resnet50_cifar` residual graphs (identity + 1x1-projection skips, ReLU
+//! after the join) and `pointnet_cls` T-Nets (transform subgraph →
+//! `MatMulFeature` apply) — per the `arch::BlockRole` block-boundary
+//! annotations.  `nn::MlpEngine` wraps an FC-chain `Engine` built from a
+//! TBNZ model and keeps the original deployable-runner API.
 //!
 //! Every engine runs one of three `nn::EnginePath`s:
 //!
@@ -56,10 +61,14 @@
 //!
 //! ## Test tiers
 //!
-//! * **Artifact-free** (always run, what CI gates on): unit tests, property
+//! * **Artifact-free** (always run, what CI gates on — once per packed
+//!   weight layout via the `TBN_LAYOUT` env override): unit tests, property
 //!   tests (`tests/properties.rs`), packed/reference parity
 //!   (`tests/packed_parity.rs`), conv parity + CNN graph smoke tests
-//!   (`tests/conv_parity.rs`), serving-pool tests, format/config tests.
+//!   (`tests/conv_parity.rs`), branching-graph parity
+//!   (`tests/graph_parity.rs`), serving-pool tests, format/config tests.
+//!   CI also compiles every bench binary (`cargo bench --no-run`) and runs
+//!   the release-mode `--ignored` tier.
 //! * **Artifact-dependent** (`tests/native_parity.rs`, runtime/pipeline
 //!   integration, the trained halves of the benches): need `make artifacts`
 //!   and a real PJRT runtime; they skip with a notice when either is

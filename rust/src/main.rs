@@ -141,9 +141,17 @@ fn dispatch(cli: &Cli) -> Result<()> {
                 "packed-int8" | "int8" => EnginePath::PackedInt8,
                 _ => EnginePath::Packed,
             };
-            let layout = match cli.opt_or("layout", "tile") {
-                "expanded" => PackedLayout::Expanded,
-                _ => PackedLayout::TileResident,
+            // --layout wins; without it the TBN_LAYOUT env override (the CI
+            // A/B hook) picks the default.  Unknown values fail loudly: this
+            // flag exists for A/B measurement, so a typo must not silently
+            // benchmark the wrong layout.
+            let layout = match cli.opt("layout") {
+                Some("expanded") => PackedLayout::Expanded,
+                Some("tile") | Some("tile-resident") => PackedLayout::TileResident,
+                Some(other) => {
+                    return Err(anyhow!("unknown --layout {other:?} (tile|expanded)"))
+                }
+                None => PackedLayout::from_env(),
             };
             let workers = cli.opt_usize("workers").unwrap_or(2);
             let policy = ServePolicy {

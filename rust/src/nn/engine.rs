@@ -1,7 +1,8 @@
 //! The layer-graph inference engine and its FC-chain wrapper.
 //!
-//! [`Engine`] executes a sequential chain of [`Node`]s (FC, Conv2d, pooling,
-//! flatten — `nn::layers`) behind the [`EnginePath`] selector:
+//! [`Engine`] executes a layer [`Graph`] — a DAG of [`Node`]s (FC, Conv2d,
+//! pooling, flatten, plus the `Add`/`MatMulFeature` join nodes of
+//! `nn::layers`) in topological order — behind the [`EnginePath`] selector:
 //!
 //! * `Reference` — the f32 Algorithm 1 path (tile reuse, expand-free), the
 //!   crate's oracle.  `forward` runs the exact paper math on f32
@@ -21,6 +22,17 @@
 //!   quantized to 8-bit integers (the paper's microcontroller input
 //!   packing) instead of running layer 0 in f32.
 //!
+//! **Execution model.**  The engine walks the graph with a per-node value
+//! table: every node's output is addressable by node id while any later
+//! node still reads it, and is freed as soon as its last consumer has run
+//! (consumer counts are precomputed at construction).  Join nodes fetch
+//! both input slots from the table; a residual skip simply keeps its
+//! producer's activation alive across the block body.  Joins are weightless
+//! and run in f32 on every path, so the branching executor changes nothing
+//! about packed-vs-reference parity of the weight layers.  `forward_batch`
+//! runs the same walk over per-node activation *batches* (packed FC nodes
+//! keep the batched row kernel, packed convs batch positions internally).
+//!
 //! [`MlpEngine`] wraps an `Engine` built from a `TbnzModel`'s FC chain and
 //! preserves the original deployable-runner API of §5.1 (Table 6),
 //! including the byte-exact memory/storage accounting used for the Table 6
@@ -30,7 +42,7 @@
 
 use std::sync::Arc;
 
-use super::layers::{FcLayer, Node, Scratch};
+use super::layers::{FcLayer, Graph, GraphNode, Node, Scratch, Slot};
 use super::packed::{EnginePath, PackedLayer, PackedLayout};
 use crate::tbn::{LayerRecord, TbnzModel};
 
@@ -41,18 +53,25 @@ pub enum Nonlin {
     None,
 }
 
-/// Sequential layer-graph engine over typed nodes.
+/// Layer-graph engine over typed nodes wired into a DAG (see the module
+/// docs for the execution model).
 #[derive(Debug, Clone)]
 pub struct Engine {
-    nodes: Vec<Node>,
+    graph: Vec<GraphNode>,
     nonlin: Nonlin,
     path: EnginePath,
     layout: PackedLayout,
-    /// Parallel to `nodes`: packed state for every weight node that runs
+    /// Parallel to the graph: packed state for every weight node that runs
     /// binarized (all weight nodes after the first) when `path.is_packed()`.
     packed: Vec<Option<PackedLayer>>,
     first_weight: Option<usize>,
-    last_weight: Option<usize>,
+    /// Precomputed per-node ReLU decision (overrides + default policy,
+    /// gated on `nonlin`).
+    relu_after: Vec<bool>,
+    /// Consumer count per node (the graph output counts as one consumer):
+    /// the executor frees a node's activation when this many readers ran.
+    uses: Vec<usize>,
+    in_len: usize,
 }
 
 impl Engine {
@@ -63,27 +82,78 @@ impl Engine {
         Engine::with_layout(nodes, nonlin, path, PackedLayout::default())
     }
 
-    /// Validate the node chain and (on the packed paths) build per-layer
-    /// packed state — paid once here so the serve path never packs weights.
-    /// `layout` selects how tiled layers keep their packed weights:
-    /// tile-resident (`O(q)` bits per layer, the default) or fully expanded
-    /// rows (the A/B baseline).
+    /// Sequential-chain engine (node `i` reads node `i - 1`) with an
+    /// explicit tiled-weight layout.
     pub fn with_layout(nodes: Vec<Node>, nonlin: Nonlin, path: EnginePath,
                        layout: PackedLayout) -> Result<Engine, String> {
-        if nodes.is_empty() {
+        Engine::with_layout_graph(Graph::sequential(nodes), nonlin, path, layout)
+    }
+
+    /// [`Engine::with_layout_graph`] under the default (tile-resident)
+    /// weight layout.
+    pub fn from_graph(graph: Graph, nonlin: Nonlin, path: EnginePath)
+                      -> Result<Engine, String> {
+        Engine::with_layout_graph(graph, nonlin, path, PackedLayout::default())
+    }
+
+    /// Validate the graph wiring (arity, topological order, per-slot shape
+    /// agreement, a consistent source width) and (on the packed paths)
+    /// build per-layer packed state — paid once here so the serve path
+    /// never packs weights.  `layout` selects how tiled layers keep their
+    /// packed weights: tile-resident (`O(q)` bits per layer, the default)
+    /// or fully expanded rows (the A/B baseline).
+    pub fn with_layout_graph(graph: Graph, nonlin: Nonlin, path: EnginePath,
+                             layout: PackedLayout) -> Result<Engine, String> {
+        let graph = graph.nodes;
+        if graph.is_empty() {
             return Err("engine requires at least one node".to_string());
         }
-        for w in nodes.windows(2) {
-            if w[1].in_len() != w[0].out_len() {
-                return Err(format!("{} -> {}: shape chain broken ({} != {})",
-                                   w[0].name(), w[1].name(),
-                                   w[0].out_len(), w[1].in_len()));
+        let mut in_len: Option<usize> = None;
+        for (i, gn) in graph.iter().enumerate() {
+            if gn.inputs.len() != gn.node.arity() {
+                return Err(format!("{}: {} input slots, expected {}",
+                                   gn.node.name(), gn.inputs.len(), gn.node.arity()));
+            }
+            for (s, slot) in gn.inputs.iter().enumerate() {
+                let want = gn.node.slot_in_len(s);
+                match *slot {
+                    Slot::Source => match in_len {
+                        None => in_len = Some(want),
+                        Some(l) if l == want => {}
+                        Some(l) => {
+                            return Err(format!(
+                                "{}: reads the source as {want} elements but the \
+                                 graph input is {l}",
+                                gn.node.name()
+                            ));
+                        }
+                    },
+                    Slot::Node(j) => {
+                        if j >= i {
+                            return Err(format!(
+                                "{}: input slot {s} reads node {j}, which does not \
+                                 precede node {i} (graphs must be topologically \
+                                 ordered)",
+                                gn.node.name()
+                            ));
+                        }
+                        if graph[j].node.out_len() != want {
+                            return Err(format!(
+                                "{} -> {}: shape chain broken ({} != {})",
+                                graph[j].node.name(), gn.node.name(),
+                                graph[j].node.out_len(), want
+                            ));
+                        }
+                    }
+                }
             }
         }
-        let weight_idx: Vec<usize> = nodes
+        let in_len =
+            in_len.ok_or_else(|| "graph never reads the engine input".to_string())?;
+        let weight_idx: Vec<usize> = graph
             .iter()
             .enumerate()
-            .filter(|(_, n)| n.is_weight())
+            .filter(|(_, gn)| gn.node.is_weight())
             .map(|(i, _)| i)
             .collect();
         if weight_idx.is_empty() {
@@ -91,15 +161,37 @@ impl Engine {
         }
         let first_weight = weight_idx.first().copied();
         let last_weight = weight_idx.last().copied();
-        let mut packed: Vec<Option<PackedLayer>> = vec![None; nodes.len()];
+        // ReLU applies after every weight node except the last (logits stay
+        // linear); overrides move the activation (residual joins activate,
+        // the body conv and T-Net head in front of a join stay linear).
+        let relu_after: Vec<bool> = graph
+            .iter()
+            .enumerate()
+            .map(|(i, gn)| {
+                let default = gn.node.is_weight() && Some(i) != last_weight;
+                gn.relu.unwrap_or(default) && nonlin == Nonlin::Relu
+            })
+            .collect();
+        let mut uses = vec![0usize; graph.len()];
+        for gn in &graph {
+            for slot in &gn.inputs {
+                if let Slot::Node(j) = slot {
+                    uses[*j] += 1;
+                }
+            }
+        }
+        *uses.last_mut().expect("non-empty graph") += 1; // the caller reads the output
+        let mut packed: Vec<Option<PackedLayer>> = vec![None; graph.len()];
         if path.is_packed() {
             // the first weight layer stays f32 (or int8-input); later weight
             // layers run binarized from packed state
             for &i in weight_idx.iter().skip(1) {
-                packed[i] = nodes[i].build_packed(layout)?;
+                packed[i] = graph[i].node.build_packed(layout)?;
             }
         }
-        Ok(Engine { nodes, nonlin, path, layout, packed, first_weight, last_weight })
+        Ok(Engine {
+            graph, nonlin, path, layout, packed, first_weight, relu_after, uses, in_len,
+        })
     }
 
     /// Build an FC-chain engine from a borrowed TBNZ model (one `Fc` node
@@ -144,30 +236,29 @@ impl Engine {
         self.nonlin
     }
 
-    pub fn nodes(&self) -> &[Node] {
-        &self.nodes
+    /// The wired graph (topological order; the last node is the output).
+    pub fn graph(&self) -> &[GraphNode] {
+        &self.graph
     }
 
+    /// The compute node behind graph id `idx`.
+    pub fn node(&self, idx: usize) -> &Node {
+        &self.graph[idx].node
+    }
+
+    /// Input width: the element count every `Slot::Source` reader expects.
     pub fn in_len(&self) -> usize {
-        self.nodes.first().map(Node::in_len).unwrap_or(0)
+        self.in_len
     }
 
     pub fn out_len(&self) -> usize {
-        self.nodes.last().map(Node::out_len).unwrap_or(0)
+        self.graph.last().map(|gn| gn.node.out_len()).unwrap_or(0)
     }
 
-    /// ReLU applies after every weight node except the last (logits stay
-    /// linear); weightless nodes never activate.
-    fn relu_after(&self, idx: usize) -> bool {
-        self.nonlin == Nonlin::Relu
-            && self.nodes[idx].is_weight()
-            && Some(idx) != self.last_weight
-    }
-
-    /// Run one node on the active path.
+    /// Run one unary node on the active path.
     fn node_forward(&self, idx: usize, h: &[f32], scratch: &mut Scratch) -> Vec<f32> {
-        let relu = self.relu_after(idx);
-        let node = &self.nodes[idx];
+        let relu = self.relu_after[idx];
+        let node = &self.graph[idx].node;
         if let Some(p) = &self.packed[idx] {
             return match node {
                 Node::Fc(fc) => fc.forward_packed(p, h, relu, scratch),
@@ -185,6 +276,71 @@ impl Engine {
         node.forward_reference(h, relu, scratch)
     }
 
+    /// Walk the graph with a value table: every node's activation is
+    /// addressable by node id while a later node still reads it, and is
+    /// freed after its last consumer ran (`uses` counts).  `apply` computes
+    /// one node from its fetched input slots (`b` is `Some` exactly for the
+    /// two-input join nodes).  The single walker behind both the per-sample
+    /// and the batched forwards, so the liveness/ordering logic exists
+    /// once.
+    fn walk<V, F>(&self, source: &V, mut apply: F) -> V
+    where
+        F: FnMut(usize, &V, Option<&V>) -> V,
+    {
+        fn get<'a, V>(slot: Slot, source: &'a V, values: &'a [Option<V>]) -> &'a V {
+            match slot {
+                Slot::Source => source,
+                Slot::Node(j) => {
+                    values[j].as_ref().expect("freed before last consumer")
+                }
+            }
+        }
+        let n = self.graph.len();
+        let mut values: Vec<Option<V>> = (0..n).map(|_| None).collect();
+        let mut remaining = self.uses.clone();
+        for idx in 0..n {
+            let gn = &self.graph[idx];
+            let out = {
+                let a = get(gn.inputs[0], source, &values);
+                let b = gn.inputs.get(1).map(|&s| get(s, source, &values));
+                apply(idx, a, b)
+            };
+            for slot in &gn.inputs {
+                if let Slot::Node(j) = slot {
+                    remaining[*j] -= 1;
+                    if remaining[*j] == 0 {
+                        values[*j] = None;
+                    }
+                }
+            }
+            values[idx] = Some(out);
+        }
+        values[n - 1].take().expect("the output node is never freed early")
+    }
+
+    /// Per-sample walk.  With `quantized` set (Reference path only), weight
+    /// nodes after the entry layer run the f32 sign/gamma oracle of the
+    /// packed math.
+    fn exec(&self, x: &[f32], scratch: &mut Scratch, quantized: bool) -> Vec<f32> {
+        let source = x.to_vec();
+        self.walk(&source, |idx, a: &Vec<f32>, b| {
+            let gn = &self.graph[idx];
+            if let Some(b) = b {
+                return gn.node.forward_join(a, b, self.relu_after[idx]);
+            }
+            if quantized && gn.node.is_weight() && Some(idx) != self.first_weight {
+                return match &gn.node {
+                    Node::Fc(fc) => fc.forward_quantized_oracle(a, self.relu_after[idx]),
+                    Node::Conv2d(c) => {
+                        c.forward_quantized_oracle(a, self.relu_after[idx], scratch)
+                    }
+                    _ => unreachable!("weight nodes are Fc or Conv2d"),
+                };
+            }
+            self.node_forward(idx, a, scratch)
+        })
+    }
+
     /// Forward one sample through the active path.
     pub fn forward(&self, x: &[f32]) -> Vec<f32> {
         let mut scratch = Scratch::default();
@@ -194,35 +350,37 @@ impl Engine {
     /// Forward with caller-owned scratch buffers (serve workers and batch
     /// loops reuse one allocation across samples).
     pub fn forward_with_scratch(&self, x: &[f32], scratch: &mut Scratch) -> Vec<f32> {
-        assert_eq!(x.len(), self.in_len());
-        let mut h = x.to_vec();
-        for idx in 0..self.nodes.len() {
-            h = self.node_forward(idx, &h, scratch);
-        }
-        h
+        assert_eq!(x.len(), self.in_len);
+        self.exec(x, scratch, false)
     }
 
-    /// Forward a whole batch, layer-major: all samples pass through a node
+    /// Forward a whole batch, node-major: all samples pass through a node
     /// before the next node starts, so one layer's packed weight state
     /// stays cache-warm across the batch and the scratch buffers are
-    /// allocated once.  Packed FC nodes take the batched row kernel
+    /// allocated once.  The value table holds per-node activation batches;
+    /// packed FC nodes take the batched row kernel
     /// (`FcLayer::forward_packed_batch`: every row walked once over all
-    /// samples, amortizing the per-run alpha/popcount bookkeeping); packed
-    /// conv nodes batch their output positions internally.  Results are
-    /// bit-identical to per-sample [`Engine::forward`].
+    /// samples, amortizing the per-run alpha/popcount bookkeeping), packed
+    /// conv nodes batch their output positions internally, and join nodes
+    /// join per sample.  Results are bit-identical to per-sample
+    /// [`Engine::forward`].
     pub fn forward_batch(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
         let mut scratch = Scratch::default();
-        let mut hs: Vec<Vec<f32>> = xs.to_vec();
-        for idx in 0..self.nodes.len() {
-            if let (Some(p), Node::Fc(fc)) = (&self.packed[idx], &self.nodes[idx]) {
-                hs = fc.forward_packed_batch(p, &hs, self.relu_after(idx), &mut scratch);
-                continue;
+        let source = xs.to_vec();
+        self.walk(&source, |idx, a: &Vec<Vec<f32>>, b| {
+            let gn = &self.graph[idx];
+            if let Some(b) = b {
+                return a
+                    .iter()
+                    .zip(b.iter())
+                    .map(|(u, v)| gn.node.forward_join(u, v, self.relu_after[idx]))
+                    .collect();
             }
-            for h in hs.iter_mut() {
-                *h = self.node_forward(idx, h, &mut scratch);
+            if let (Some(p), Node::Fc(fc)) = (&self.packed[idx], &gn.node) {
+                return fc.forward_packed_batch(p, a, self.relu_after[idx], &mut scratch);
             }
-        }
-        hs
+            a.iter().map(|h| self.node_forward(idx, h, &mut scratch)).collect()
+        })
     }
 
     /// The quantized deployment forward regardless of path: on the packed
@@ -230,32 +388,18 @@ impl Engine {
     /// the f32 oracle of the identical math — per-node sign/gamma
     /// binarization over expanded weights, no bit tricks.
     pub fn forward_quantized(&self, x: &[f32]) -> Vec<f32> {
-        assert_eq!(x.len(), self.in_len());
+        assert_eq!(x.len(), self.in_len);
         if self.path.is_packed() {
             return self.forward(x);
         }
         let mut scratch = Scratch::default();
-        let mut h = x.to_vec();
-        for idx in 0..self.nodes.len() {
-            let relu = self.relu_after(idx);
-            let node = &self.nodes[idx];
-            h = if node.is_weight() && Some(idx) != self.first_weight {
-                match node {
-                    Node::Fc(fc) => fc.forward_quantized_oracle(&h, relu),
-                    Node::Conv2d(c) => c.forward_quantized_oracle(&h, relu, &mut scratch),
-                    _ => unreachable!("weight nodes are Fc or Conv2d"),
-                }
-            } else {
-                node.forward_reference(&h, relu, &mut scratch)
-            };
-        }
-        h
+        self.exec(x, &mut scratch, true)
     }
 
     fn node_resident_bytes(&self, idx: usize) -> usize {
         match &self.packed[idx] {
             Some(p) => p.resident_bytes(),
-            None => self.nodes[idx].resident_bytes_reference(),
+            None => self.graph[idx].node.resident_bytes_reference(),
         }
     }
 
@@ -265,35 +409,69 @@ impl Engine {
     /// the tile-resident layout, expanded packed rows (1 bit per weight
     /// plus alpha-run metadata) on the expanded layout.
     pub fn resident_weight_bytes(&self) -> usize {
-        (0..self.nodes.len()).map(|i| self.node_resident_bytes(i)).sum()
+        (0..self.graph.len()).map(|i| self.node_resident_bytes(i)).sum()
     }
 
     /// Serialized-model bits across all weight nodes (the TBNZ storage
     /// accounting, summed from the shared records).
     pub fn storage_bits(&self) -> usize {
-        self.nodes
+        self.graph
             .iter()
-            .filter_map(Node::record)
+            .filter_map(|gn| gn.node.record())
             .map(LayerRecord::storage_bits)
             .sum()
     }
 
-    /// Max memory at any node: weights resident for that node *on the
-    /// active path* + input and output activation buffers (f32) — the
-    /// Table 6 "Max Memory Usage" model — plus, for nodes that run packed,
-    /// the scratch the batched packed forward stages (a conv's binarized
-    /// im2col map and position-major output copy;
-    /// `Node::packed_scratch_bytes`).
+    /// Max memory at any node, following the executor's own liveness model:
+    /// weights resident for that node *on the active path* + all input-slot
+    /// and output activation buffers (f32) — the Table 6 "Max Memory Usage"
+    /// model — plus, for nodes that run packed, the scratch the batched
+    /// packed forward stages (a conv's binarized im2col map and
+    /// position-major output copy; `Node::packed_scratch_bytes`), plus any
+    /// earlier activation the value table still holds for a *later*
+    /// consumer (a residual skip stays live across the whole block body and
+    /// is charged to every node it spans).  On a linear chain the held term
+    /// is always zero, so the original Table 6 numbers are unchanged.
     pub fn peak_memory_bytes(&self) -> usize {
-        (0..self.nodes.len())
+        let n = self.graph.len();
+        // last consumer of each node's activation (the executor frees after
+        // this index; an unconsumed/output activation never spans past
+        // itself for the purposes of the per-node max below), and of the
+        // engine input (live until its last reader — e.g. across a T-Net
+        // subgraph whose MatMulFeature reads the source features)
+        let mut last_use: Vec<usize> = (0..n).collect();
+        let mut src_last_use = 0usize;
+        for (i, gn) in self.graph.iter().enumerate() {
+            for slot in &gn.inputs {
+                match slot {
+                    Slot::Node(j) => last_use[*j] = i,
+                    Slot::Source => src_last_use = i,
+                }
+            }
+        }
+        (0..n)
             .map(|i| {
-                let n = &self.nodes[i];
+                let gn = &self.graph[i];
                 let scratch = if self.packed[i].is_some() {
-                    n.packed_scratch_bytes()
+                    gn.node.packed_scratch_bytes()
                 } else {
                     0
                 };
-                self.node_resident_bytes(i) + 4 * (n.in_len() + n.out_len()) + scratch
+                let in_elems: usize =
+                    (0..gn.inputs.len()).map(|s| gn.node.slot_in_len(s)).sum();
+                // activations produced earlier, not read here, but still
+                // held for a later consumer (e.g. the skip during the body,
+                // or the source across a subgraph branching off it)
+                let mut held_elems: usize = (0..i)
+                    .filter(|&j| last_use[j] > i && !gn.inputs.contains(&Slot::Node(j)))
+                    .map(|j| self.graph[j].node.out_len())
+                    .sum();
+                if src_last_use > i && !gn.inputs.contains(&Slot::Source) {
+                    held_elems += self.in_len;
+                }
+                self.node_resident_bytes(i)
+                    + 4 * (in_elems + gn.node.out_len() + held_elems)
+                    + scratch
             })
             .max()
             .unwrap_or(0)
@@ -435,6 +613,7 @@ impl MlpEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::nn::layers::PoolKind;
     use crate::nn::packed::forward_quantized_reference;
     use crate::tbn::{alphas_from, tile_from_weights, AlphaMode, LayerRecord,
                      TbnzModel, WeightPayload};
@@ -740,6 +919,189 @@ mod tests {
         // a weightless chain is not an engine either
         let pool = Node::Flatten { len: 8 };
         assert!(Engine::new(vec![pool], Nonlin::Relu, EnginePath::Reference).is_err());
+    }
+
+    // -- DAG executor ------------------------------------------------------
+
+    /// Residual FC graph over shared helpers:
+    /// `x -> fc0 -> fc1 -(Add with fc0's output)-> head`, ReLU moved after
+    /// the join (fc1 forced linear), the standard residual placement.
+    fn residual_fc_graph(m: usize, n: usize, classes: usize, seed: u64)
+                         -> (Graph, FcLayer, FcLayer, FcLayer) {
+        let mut rng = Rng::new(seed);
+        let fc0 = FcLayer::from_record(tiled_record("fc0", m, n, 4, AlphaMode::PerTile,
+                                                    &mut rng))
+            .unwrap();
+        let fc1 = FcLayer::from_record(bwnn_record("fc1", m, m, &mut rng)).unwrap();
+        let head = FcLayer::from_record(tiled_record("head", classes, m, 2,
+                                                     AlphaMode::Single, &mut rng))
+            .unwrap();
+        let mut g = Graph::new();
+        let trunk = g.push(Node::Fc(fc0.clone()), vec![Slot::Source]);
+        let body = g.push_with_relu(Node::Fc(fc1.clone()), vec![trunk], Some(false));
+        let join = g.push_with_relu(Node::Add { len: m }, vec![body, trunk], Some(true));
+        g.push(Node::Fc(head.clone()), vec![join]);
+        (g, fc0, fc1, head)
+    }
+
+    #[test]
+    fn dag_executor_matches_handrolled_residual_math() {
+        let (m, n, classes) = (24usize, 40usize, 10usize);
+        let (g, fc0, fc1, head) = residual_fc_graph(m, n, classes, 50);
+        let engine = Engine::from_graph(g, Nonlin::Relu, EnginePath::Reference).unwrap();
+        assert_eq!(engine.in_len(), n);
+        assert_eq!(engine.out_len(), classes);
+        let mut rng = Rng::new(51);
+        for _ in 0..4 {
+            let x = rng.normal_vec(n, 1.0);
+            // hand-rolled: fc0 (ReLU) -> fc1 (linear) -> add + ReLU -> head
+            let t = fc0.forward_reference(&x, true);
+            let b = fc1.forward_reference(&t, false);
+            let joined: Vec<f32> =
+                b.iter().zip(&t).map(|(u, v)| (u + v).max(0.0)).collect();
+            let want = head.forward_reference(&joined, false);
+            assert_eq!(engine.forward(&x), want, "DAG walk must be bit-exact");
+        }
+    }
+
+    #[test]
+    fn dag_relu_overrides_gate_on_engine_nonlin() {
+        let (g, fc0, fc1, head) = residual_fc_graph(16, 30, 6, 52);
+        // Nonlin::None: every override is gated off — all nodes linear
+        let engine = Engine::from_graph(g, Nonlin::None, EnginePath::Reference).unwrap();
+        let mut rng = Rng::new(53);
+        let x = rng.normal_vec(30, 1.0);
+        let t = fc0.forward_reference(&x, false);
+        let b = fc1.forward_reference(&t, false);
+        let joined: Vec<f32> = b.iter().zip(&t).map(|(u, v)| u + v).collect();
+        assert_eq!(engine.forward(&x), head.forward_reference(&joined, false));
+    }
+
+    #[test]
+    fn dag_batch_equals_per_sample_on_packed_paths() {
+        let (g, ..) = residual_fc_graph(24, 40, 10, 54);
+        for path in [EnginePath::Reference, EnginePath::Packed, EnginePath::PackedInt8] {
+            let engine = Engine::from_graph(g.clone(), Nonlin::Relu, path).unwrap();
+            let mut rng = Rng::new(55);
+            let xs: Vec<Vec<f32>> = (0..5).map(|_| rng.normal_vec(40, 1.0)).collect();
+            let batch = engine.forward_batch(&xs);
+            for (x, y) in xs.iter().zip(&batch) {
+                assert_eq!(&engine.forward(x), y, "{path:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn dag_peak_memory_charges_both_join_operands() {
+        let (g, ..) = residual_fc_graph(64, 16, 4, 56);
+        let engine = Engine::from_graph(g, Nonlin::Relu, EnginePath::Reference).unwrap();
+        // the Add node holds two 64-wide operands + a 64-wide output
+        assert!(engine.peak_memory_bytes() >= 4 * (64 + 64 + 64));
+    }
+
+    /// The liveness model charges a residual skip to the body nodes it
+    /// spans: a two-FC body peaks exactly `4 * m` bytes above the identical
+    /// chain without the skip (the held trunk activation).
+    #[test]
+    fn dag_peak_memory_charges_held_skip_across_body() {
+        let mut rng = Rng::new(59);
+        let (m, n) = (256usize, 8usize);
+        let fc0 = FcLayer::from_record(bwnn_record("fc0", m, n, &mut rng)).unwrap();
+        let b1 = FcLayer::from_record(bwnn_record("b1", m, m, &mut rng)).unwrap();
+        let b2 = FcLayer::from_record(bwnn_record("b2", m, m, &mut rng)).unwrap();
+        let head = FcLayer::from_record(bwnn_record("head", 4, m, &mut rng)).unwrap();
+        let mut g = Graph::new();
+        let trunk = g.push(Node::Fc(fc0.clone()), vec![Slot::Source]);
+        let x1 = g.push(Node::Fc(b1.clone()), vec![trunk]);
+        let x2 = g.push_with_relu(Node::Fc(b2.clone()), vec![x1], Some(false));
+        let j = g.push_with_relu(Node::Add { len: m }, vec![x2, trunk], Some(true));
+        g.push(Node::Fc(head.clone()), vec![j]);
+        let residual = Engine::from_graph(g, Nonlin::Relu, EnginePath::Reference).unwrap();
+        let chain = Engine::new(
+            vec![Node::Fc(fc0), Node::Fc(b1), Node::Fc(b2), Node::Fc(head)],
+            Nonlin::Relu, EnginePath::Reference)
+            .unwrap();
+        // both peak on the m x m body FCs; the residual version additionally
+        // holds the m-wide trunk there (b2 does not read it, the join does)
+        assert_eq!(residual.peak_memory_bytes(),
+                   chain.peak_memory_bytes() + 4 * m);
+    }
+
+    #[test]
+    fn dag_rejects_malformed_wiring() {
+        let mut rng = Rng::new(57);
+        let fc = FcLayer::from_record(bwnn_record("fc", 8, 8, &mut rng)).unwrap();
+        // wrong arity: a join with one input
+        let mut g = Graph::new();
+        let a = g.push(Node::Fc(fc.clone()), vec![Slot::Source]);
+        g.push(Node::Add { len: 8 }, vec![a]);
+        assert!(Engine::from_graph(g, Nonlin::Relu, EnginePath::Reference)
+            .unwrap_err()
+            .contains("input slots"));
+        // forward reference: topological order violated
+        let mut g = Graph::new();
+        g.push(Node::Add { len: 8 }, vec![Slot::Node(1), Slot::Source]);
+        g.push(Node::Fc(fc.clone()), vec![Slot::Source]);
+        assert!(Engine::from_graph(g, Nonlin::Relu, EnginePath::Reference)
+            .unwrap_err()
+            .contains("topologically"));
+        // join shape mismatch: Add reads an 8-wide and a 6-wide producer
+        // (both branches read the source consistently at 8)
+        let fc6 = FcLayer::from_record(bwnn_record("fc6", 6, 8, &mut rng)).unwrap();
+        let mut g = Graph::new();
+        let a = g.push(Node::Fc(fc.clone()), vec![Slot::Source]);
+        let b = g.push(Node::Fc(fc6), vec![Slot::Source]);
+        g.push(Node::Add { len: 8 }, vec![a, b]);
+        let err = Engine::from_graph(g, Nonlin::Relu, EnginePath::Reference).unwrap_err();
+        assert!(err.contains("shape chain broken"), "{err}");
+        // inconsistent source width: 8-wide fc and a 6-wide flatten both
+        // read the engine input
+        let mut g = Graph::new();
+        let a = g.push(Node::Fc(fc), vec![Slot::Source]);
+        let b = g.push(Node::Flatten { len: 6 }, vec![Slot::Source]);
+        let _ = (a, b);
+        let err = Engine::from_graph(g, Nonlin::Relu, EnginePath::Reference).unwrap_err();
+        assert!(err.contains("graph input"), "{err}");
+    }
+
+    /// A transform branch (MatMulFeature) through the DAG equals the
+    /// hand-rolled math: per-position matmul of the branch's k*k output.
+    #[test]
+    fn dag_matmul_feature_matches_handrolled_math() {
+        let (k, positions) = (4usize, 10usize);
+        let mut rng = Rng::new(58);
+        // branch: pool the (k, positions) features then predict k*k
+        let tfc = FcLayer::from_record(bwnn_record("tnet.fc", k * k, k, &mut rng))
+            .unwrap();
+        let head = FcLayer::from_record(
+            tiled_record("head", 5, k * positions, 4, AlphaMode::PerTile, &mut rng))
+            .unwrap();
+        let mut g = Graph::new();
+        let pooled = g.push(Node::GlobalPool { kind: PoolKind::Avg, c: k, positions },
+                            vec![Slot::Source]);
+        let transform = g.push_with_relu(Node::Fc(tfc.clone()), vec![pooled], Some(false));
+        let applied = g.push_with_relu(Node::MatMulFeature { k, positions },
+                                       vec![Slot::Source, transform], Some(false));
+        g.push(Node::Fc(head.clone()), vec![applied]);
+        let engine = Engine::from_graph(g, Nonlin::Relu, EnginePath::Reference).unwrap();
+        assert_eq!(engine.in_len(), k * positions);
+        let x = rng.normal_vec(k * positions, 1.0);
+        let pooled_v: Vec<f32> = (0..k)
+            .map(|c| x[c * positions..(c + 1) * positions].iter().sum::<f32>()
+                / positions as f32)
+            .collect();
+        let t = tfc.forward_reference(&pooled_v, false);
+        let mut applied_v = vec![0.0f32; k * positions];
+        for co in 0..k {
+            for ci in 0..k {
+                for p in 0..positions {
+                    applied_v[co * positions + p] +=
+                        t[co * k + ci] * x[ci * positions + p];
+                }
+            }
+        }
+        let want = head.forward_reference(&applied_v, false);
+        assert_eq!(engine.forward(&x), want);
     }
 
     #[test]

@@ -14,6 +14,11 @@
 //! the f32 oracle in [`Conv2dLayer::forward_quantized_oracle`] mirrors this
 //! exactly, and `tests/conv_parity.rs` pins the two against each other and
 //! against a naive nested-loop convolution.
+//!
+//! In a branching [`super::Graph`] (ResNet blocks), a conv node is an
+//! ordinary unary node: the residual body's final conv is forced linear by
+//! the lowering and the activation moves after the `Add` join — the conv
+//! kernels themselves are branch-agnostic.
 
 use std::sync::Arc;
 

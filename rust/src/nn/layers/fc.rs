@@ -1,6 +1,8 @@
 //! Fully-connected graph node: the Algorithm 1 FC kernels behind the
 //! [`super::Node`] abstraction, with Reference, Packed (single and batched)
-//! and layer-0 int8 entry points.
+//! and layer-0 int8 entry points.  In a branching [`super::Graph`] an FC
+//! node is an ordinary unary node — T-Net transform heads are plain `Fc`
+//! nodes whose output feeds the `MatMulFeature` join's second slot.
 
 use std::sync::Arc;
 

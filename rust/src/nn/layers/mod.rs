@@ -1,9 +1,9 @@
 //! Layer graph of the native engine: typed nodes with per-layer Reference
-//! and Packed kernels.
+//! and Packed kernels, wired into a small DAG.
 //!
 //! The paper applies tiling to "both fully-connected and convolutional
 //! layers"; this module is where both meet the native engine.  A [`Node`] is
-//! one step of a sequential inference graph:
+//! one step of an inference graph:
 //!
 //! * [`FcLayer`] — a `[m, n]` weight layer served by the Algorithm 1 f32
 //!   kernels (Reference) or the XNOR-popcount row kernels (Packed);
@@ -11,13 +11,25 @@
 //!   dispatch into the *same* packed row kernels, so conv and FC share one
 //!   inner loop (`tbn::bitops::xnor_dot_words_range`);
 //! * `Pool2d` / `GlobalPool` / `Flatten` — weightless shape plumbing that
-//!   lets whole CNN specs (`arch::models`) run natively.
+//!   lets whole CNN specs (`arch::models`) run natively;
+//! * `Add` / `MatMulFeature` — the two-input **join** nodes: an elementwise
+//!   residual join (ResNet skip connections) and the PointNet T-Net
+//!   feature-transform apply (a `k x k` matrix from one branch multiplying
+//!   the `(k, positions)` features of the other).
 //!
-//! [`lower_arch_spec`] converts a sequential `arch::ArchSpec` into a node
-//! chain, inferring conv stride/padding from the spec's activation shapes
-//! and inserting pooling nodes where consecutive specs imply spatial
-//! reduction.  Branching specs (ResNet residuals, PointNet T-Nets) are
-//! rejected with an error.  `nn::Engine` executes the chain.
+//! Nodes are wired into a [`Graph`]: each [`GraphNode`] names where every
+//! input slot reads from ([`Slot::Source`] for the engine input,
+//! [`Slot::Node`] for an earlier node's output), so activations are
+//! addressable by node id and branches/skips are ordinary edges.  A linear
+//! chain is the special case [`Graph::sequential`].
+//!
+//! [`lower_arch_spec`] converts an `arch::ArchSpec` into a graph, inferring
+//! conv stride/padding from the spec's activation shapes and inserting
+//! pooling nodes where consecutive specs imply spatial reduction.  Branching
+//! constructs are rebuilt from the spec's `arch::BlockRole` annotations:
+//! residual blocks (identity or 1x1-downsample skips, ReLU after the join)
+//! and T-Net subgraphs (transform head kept linear, then a `MatMulFeature`
+//! join).  `nn::Engine` executes the graph with a value-table walker.
 
 mod conv;
 mod fc;
@@ -27,7 +39,7 @@ pub use fc::FcLayer;
 
 use super::layer_resident_bytes;
 use super::packed::{PackedLayer, PackedLayout};
-use crate::arch::{ArchSpec, Kind};
+use crate::arch::{ArchSpec, BlockRole, Kind, LayerSpec};
 use crate::tbn::{alphas_from, tile_from_weights, AlphaMode, LayerRecord, WeightPayload};
 use crate::tensor::BitVec;
 use crate::util::Rng;
@@ -62,6 +74,12 @@ pub struct Scratch {
 
 /// One node of the inference layer graph.  Activations flow through as flat
 /// f32 vectors; conv/pool nodes interpret them channel-major `(c, h, w)`.
+///
+/// `Add` and `MatMulFeature` are the two-input **join** nodes: they take two
+/// input slots (see [`GraphNode`]) and run through [`Node::forward_join`]
+/// instead of [`Node::forward_reference`].  Joins are weightless and run in
+/// f32 on every `EnginePath` — the packed paths binarize only weight-layer
+/// inputs, so joins are exactly shared between the paths.
 #[derive(Debug, Clone)]
 pub enum Node {
     Fc(FcLayer),
@@ -73,6 +91,15 @@ pub enum Node {
     GlobalPool { kind: PoolKind, c: usize, positions: usize },
     /// Shape bookkeeping only: activations are already flat.
     Flatten { len: usize },
+    /// Elementwise residual join of two equal-length activations (slot 0:
+    /// block body, slot 1: skip).  ResNet applies ReLU *after* the join, so
+    /// the lowering forces the body's last conv linear and activates here.
+    Add { len: usize },
+    /// T-Net feature-transform apply: slot 0 carries `(k, positions)`
+    /// channel-major features, slot 1 a row-major `k x k` transform matrix;
+    /// the output is the transformed `(k, positions)` map
+    /// `y[c', pos] = sum_c T[c', c] * x[c, pos]`.
+    MatMulFeature { k: usize, positions: usize },
 }
 
 impl Node {
@@ -83,6 +110,8 @@ impl Node {
             Node::Pool2d { .. } => "pool2d",
             Node::GlobalPool { .. } => "global_pool",
             Node::Flatten { .. } => "flatten",
+            Node::Add { .. } => "add",
+            Node::MatMulFeature { .. } => "matmul_feature",
         }
     }
 
@@ -93,6 +122,8 @@ impl Node {
             Node::Pool2d { c, h, w, .. } => c * h * w,
             Node::GlobalPool { c, positions, .. } => c * positions,
             Node::Flatten { len } => *len,
+            Node::Add { len } => *len,
+            Node::MatMulFeature { k, positions } => k * positions,
         }
     }
 
@@ -103,6 +134,31 @@ impl Node {
             Node::Pool2d { c, h, w, f, .. } => c * (h / f) * (w / f),
             Node::GlobalPool { c, .. } => *c,
             Node::Flatten { len } => *len,
+            Node::Add { len } => *len,
+            Node::MatMulFeature { k, positions } => k * positions,
+        }
+    }
+
+    /// Number of input slots: 1 for the chain nodes, 2 for the joins.
+    pub fn arity(&self) -> usize {
+        match self {
+            Node::Add { .. } | Node::MatMulFeature { .. } => 2,
+            _ => 1,
+        }
+    }
+
+    /// True for the two-input join nodes (`Add` / `MatMulFeature`).
+    pub fn is_join(&self) -> bool {
+        self.arity() == 2
+    }
+
+    /// Expected input length of slot `slot` (join nodes have per-slot
+    /// shapes; unary nodes answer [`Node::in_len`] for slot 0).
+    pub fn slot_in_len(&self, slot: usize) -> usize {
+        match self {
+            Node::MatMulFeature { k, positions } if slot == 0 => k * positions,
+            Node::MatMulFeature { k, .. } => k * k,
+            _ => self.in_len(),
         }
     }
 
@@ -155,7 +211,8 @@ impl Node {
         }
     }
 
-    /// Reference (f32) forward of this node.
+    /// Reference (f32) forward of this node.  Join nodes take two inputs
+    /// and run through [`Node::forward_join`] instead.
     pub fn forward_reference(&self, x: &[f32], relu: bool, scratch: &mut Scratch) -> Vec<f32> {
         match self {
             Node::Fc(l) => l.forward_reference(x, relu),
@@ -163,7 +220,131 @@ impl Node {
             Node::Pool2d { kind, c, h, w, f } => pool2d(*kind, *c, *h, *w, *f, x),
             Node::GlobalPool { kind, c, positions } => global_pool(*kind, *c, *positions, x),
             Node::Flatten { .. } => x.to_vec(),
+            Node::Add { .. } | Node::MatMulFeature { .. } => {
+                unreachable!("join nodes take two inputs; use Node::forward_join")
+            }
         }
+    }
+
+    /// Forward of a two-input join node (identical on every `EnginePath`:
+    /// joins are weightless, so there is nothing to binarize or pack).
+    pub fn forward_join(&self, a: &[f32], b: &[f32], relu: bool) -> Vec<f32> {
+        match self {
+            Node::Add { len } => {
+                debug_assert_eq!(a.len(), *len);
+                debug_assert_eq!(b.len(), *len);
+                a.iter()
+                    .zip(b)
+                    .map(|(u, v)| {
+                        let s = u + v;
+                        if relu { s.max(0.0) } else { s }
+                    })
+                    .collect()
+            }
+            Node::MatMulFeature { k, positions } => {
+                let (k, positions) = (*k, *positions);
+                debug_assert_eq!(a.len(), k * positions);
+                debug_assert_eq!(b.len(), k * k);
+                let mut y = vec![0.0f32; k * positions];
+                for co in 0..k {
+                    let row = &b[co * k..(co + 1) * k];
+                    let out = &mut y[co * positions..(co + 1) * positions];
+                    for (ci, &t) in row.iter().enumerate() {
+                        let plane = &a[ci * positions..(ci + 1) * positions];
+                        for (o, &v) in out.iter_mut().zip(plane) {
+                            *o += t * v;
+                        }
+                    }
+                    if relu {
+                        for o in out.iter_mut() {
+                            *o = o.max(0.0);
+                        }
+                    }
+                }
+                y
+            }
+            _ => unreachable!("forward_join is only defined for join nodes"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Graph wiring
+// ---------------------------------------------------------------------------
+
+/// Where a graph node reads one input slot from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Slot {
+    /// The engine's input sample.
+    Source,
+    /// The output of graph node `id` (which must precede the consumer).
+    Node(usize),
+}
+
+/// One node of a layer DAG: the compute [`Node`] plus where each of its
+/// input slots reads from and an optional ReLU override.
+#[derive(Debug, Clone)]
+pub struct GraphNode {
+    pub node: Node,
+    /// One entry per input slot (`node.arity()` of them; for
+    /// `MatMulFeature`: `[features, transform]`, for `Add`:
+    /// `[body, skip]`).
+    pub inputs: Vec<Slot>,
+    /// ReLU policy: `None` follows the engine default (activate after every
+    /// weight node except the final weight layer); `Some(true)` activates
+    /// here (still gated on the engine's nonlinearity); `Some(false)`
+    /// forces the node linear (e.g. a residual body's last conv, whose
+    /// activation moves after the join).
+    pub relu: Option<bool>,
+}
+
+/// A layer DAG in topological order: node `i` may only read `Slot::Node(j)`
+/// with `j < i`; the last node's output is the graph output.  `nn::Engine`
+/// validates the wiring and executes the graph.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub nodes: Vec<GraphNode>,
+}
+
+impl Graph {
+    pub fn new() -> Graph {
+        Graph { nodes: Vec::new() }
+    }
+
+    /// Wrap a linear chain: node 0 reads the source, node `i` reads node
+    /// `i - 1` — the sequential special case every pre-DAG engine ran.
+    pub fn sequential(nodes: Vec<Node>) -> Graph {
+        let nodes = nodes
+            .into_iter()
+            .enumerate()
+            .map(|(i, node)| GraphNode {
+                node,
+                inputs: vec![if i == 0 { Slot::Source } else { Slot::Node(i - 1) }],
+                relu: None,
+            })
+            .collect();
+        Graph { nodes }
+    }
+
+    /// Append a node reading `inputs` under the default ReLU policy;
+    /// returns the new node's output slot.
+    pub fn push(&mut self, node: Node, inputs: Vec<Slot>) -> Slot {
+        self.push_with_relu(node, inputs, None)
+    }
+
+    /// [`Graph::push`] with an explicit ReLU override.
+    pub fn push_with_relu(&mut self, node: Node, inputs: Vec<Slot>,
+                          relu: Option<bool>) -> Slot {
+        self.nodes.push(GraphNode { node, inputs, relu });
+        Slot::Node(self.nodes.len() - 1)
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
     }
 }
 
@@ -266,43 +447,62 @@ fn synth_payload(params: usize, opts: &LowerOptions, rng: &mut Rng) -> WeightPay
     }
 }
 
-/// Insert pooling so the current `(c, h, w)` activation matches the next
+/// Shape-tracking cursor of the lowering: the slot holding the current
+/// activation and its `(c, h, w)` interpretation.  Branch lowering clones
+/// the cursor at a block entry and walks each branch independently.
+#[derive(Debug, Clone, Copy)]
+struct Cursor {
+    slot: Slot,
+    c: usize,
+    h: usize,
+    w: usize,
+}
+
+impl Cursor {
+    fn len(&self) -> usize {
+        self.c * self.h * self.w
+    }
+
+    fn shape(&self) -> (usize, usize, usize) {
+        (self.c, self.h, self.w)
+    }
+}
+
+/// Insert pooling so the cursor's `(c, h, w)` activation matches the next
 /// layer's expected flat input length `want`.
-fn reconcile(
-    nodes: &mut Vec<Node>,
-    c: &mut usize,
-    h: &mut usize,
-    w: &mut usize,
-    want: usize,
-    at: &str,
-) -> Result<(), String> {
-    let cur = *c * *h * *w;
-    if cur == want {
+fn reconcile(graph: &mut Graph, cur: &mut Cursor, want: usize, at: &str)
+             -> Result<(), String> {
+    if cur.len() == want {
         return Ok(());
     }
-    if want == *c && *h * *w > 1 {
-        nodes.push(Node::GlobalPool { kind: PoolKind::Avg, c: *c, positions: *h * *w });
-        *h = 1;
-        *w = 1;
+    if want == cur.c && cur.h * cur.w > 1 {
+        cur.slot = graph.push(
+            Node::GlobalPool { kind: PoolKind::Avg, c: cur.c, positions: cur.h * cur.w },
+            vec![cur.slot]);
+        cur.h = 1;
+        cur.w = 1;
         return Ok(());
     }
-    if want % *c == 0 {
-        let next_pos = want / *c;
-        let cur_pos = *h * *w;
+    if want % cur.c == 0 {
+        let next_pos = want / cur.c;
+        let cur_pos = cur.h * cur.w;
         if next_pos > 0 && cur_pos % next_pos == 0 {
             let factor = cur_pos / next_pos;
             let f = isqrt(factor);
-            if f > 1 && f * f == factor && *h % f == 0 && *w % f == 0 {
-                nodes.push(Node::Pool2d { kind: PoolKind::Avg, c: *c, h: *h, w: *w, f });
-                *h /= f;
-                *w /= f;
+            if f > 1 && f * f == factor && cur.h % f == 0 && cur.w % f == 0 {
+                cur.slot = graph.push(
+                    Node::Pool2d { kind: PoolKind::Avg, c: cur.c, h: cur.h, w: cur.w, f },
+                    vec![cur.slot]);
+                cur.h /= f;
+                cur.w /= f;
                 return Ok(());
             }
         }
     }
     Err(format!(
-        "{at}: cannot reconcile activation ({c} x {h} x {w} = {cur}) with expected \
-         input {want} — non-sequential spec (residual/branching) or unsupported pooling"
+        "{at}: cannot reconcile activation ({} x {} x {} = {}) with expected \
+         input {want} — unannotated non-sequential spec or unsupported pooling",
+        cur.c, cur.h, cur.w, cur.len()
     ))
 }
 
@@ -327,110 +527,285 @@ fn infer_stride_pad(h_in: usize, h_out: usize, k: usize)
     None
 }
 
-/// Lower a sequential `arch::ArchSpec` into a native layer-graph node chain.
+/// Lower one weight layer (plus any implied pooling/flatten plumbing) onto
+/// the cursor's branch.
+fn lower_layer(graph: &mut Graph, rng: &mut Rng, opts: &LowerOptions, cur: &mut Cursor,
+               spec_name: &str, l: &LayerSpec) -> Result<(), String> {
+    let at = format!("{spec_name}::{}", l.name);
+    match l.kind {
+        Kind::Other => Ok(()),
+        Kind::Conv { co, ci, kh, kw } => {
+            reconcile(graph, cur, l.in_act, &at)?;
+            if ci == 0 || cur.c % ci != 0 {
+                return Err(format!("{at}: weight ci {ci} does not divide {} channels", cur.c));
+            }
+            let groups = cur.c / ci;
+            if co % groups != 0 {
+                return Err(format!("{at}: co {co} not a multiple of {groups} groups"));
+            }
+            if l.out_act % co != 0 {
+                return Err(format!("{at}: out_act {} not a multiple of co {co}", l.out_act));
+            }
+            let area = l.out_act / co;
+            let (h_out, w_out) = if cur.w == 1 {
+                (area, 1)
+            } else {
+                let s = isqrt(area);
+                if s * s != area {
+                    return Err(format!("{at}: non-square output area {area}"));
+                }
+                (s, s)
+            };
+            let (stride, pad_lo, _pad_hi) = infer_stride_pad(cur.h, h_out, kh)
+                .ok_or_else(|| {
+                    format!("{at}: no stride/padding maps {} -> {h_out} with k={kh}", cur.h)
+                })?;
+            let record = LayerRecord {
+                name: l.name.clone(),
+                shape: vec![co, ci, kh, kw],
+                payload: synth_payload(l.params, opts, rng),
+            };
+            let conv = Conv2dLayer::with_output(
+                record, cur.shape(), stride, pad_lo, (h_out, w_out), groups)?;
+            cur.slot = graph.push(Node::Conv2d(conv), vec![cur.slot]);
+            cur.c = co;
+            cur.h = h_out;
+            cur.w = w_out;
+            Ok(())
+        }
+        Kind::Fc { co, ci } => {
+            if ci == 0 || l.in_act % ci != 0 {
+                return Err(format!("{at}: in_act {} not a multiple of ci {ci}", l.in_act));
+            }
+            let tokens = l.in_act / ci;
+            reconcile(graph, cur, l.in_act, &at)?;
+            let record_payload = synth_payload(l.params, opts, rng);
+            if tokens == 1 {
+                // plain FC over the flattened activation
+                if cur.h * cur.w > 1 {
+                    cur.slot = graph.push(Node::Flatten { len: ci }, vec![cur.slot]);
+                }
+                let record = LayerRecord {
+                    name: l.name.clone(),
+                    shape: vec![co, ci],
+                    payload: record_payload,
+                };
+                cur.slot = graph.push(Node::Fc(FcLayer::from_record(record)?),
+                                      vec![cur.slot]);
+                cur.c = co;
+                cur.h = 1;
+                cur.w = 1;
+            } else {
+                // token-wise shared MLP: a 1x1 conv over the token axis
+                if cur.c != ci || cur.h * cur.w != tokens {
+                    return Err(format!(
+                        "{at}: token FC expects ({ci} ch x {tokens} pos), have \
+                         ({} x {} x {}) — token-mixing layers are unsupported",
+                        cur.c, cur.h, cur.w
+                    ));
+                }
+                let record = LayerRecord {
+                    name: l.name.clone(),
+                    shape: vec![co, ci, 1, 1],
+                    payload: record_payload,
+                };
+                let conv = Conv2dLayer::with_output(
+                    record, cur.shape(), 1, 0, (cur.h, cur.w), 1)?;
+                cur.slot = graph.push(Node::Conv2d(conv), vec![cur.slot]);
+                cur.c = co;
+            }
+            Ok(())
+        }
+    }
+}
+
+/// Force the last weight node pushed at-or-after `start` linear (its
+/// activation moves after a join), returning whether one was found.
+fn suppress_relu_after_last_weight(graph: &mut Graph, start: usize) -> bool {
+    for gn in graph.nodes[start..].iter_mut().rev() {
+        if gn.node.is_weight() {
+            gn.relu = Some(false);
+            return true;
+        }
+    }
+    false
+}
+
+/// Lower one residual block: the body chains from the block entry, the
+/// optional downsample projection branches from the same entry, and an
+/// `Add` joins the two (ReLU after the join, body's last conv linear — the
+/// standard ResNet placement).
+#[allow(clippy::too_many_arguments)]
+fn lower_residual_block(graph: &mut Graph, rng: &mut Rng, opts: &LowerOptions,
+                        cur: &mut Cursor, spec_name: &str, id: &str,
+                        body: &[&LayerSpec], downsample: Option<&LayerSpec>)
+                        -> Result<(), String> {
+    let entry = *cur;
+    let body_start = graph.len();
+    for &l in body {
+        lower_layer(graph, rng, opts, cur, spec_name, l)?;
+    }
+    if !suppress_relu_after_last_weight(graph, body_start) {
+        return Err(format!("{spec_name}::{id}: residual block has no weight layers"));
+    }
+    let skip = match downsample {
+        Some(l) => {
+            let mut dcur = entry;
+            let down_start = graph.len();
+            lower_layer(graph, rng, opts, &mut dcur, spec_name, l)?;
+            // the projection shortcut is linear too: both join operands
+            // activate only after the Add (standard ResNet placement)
+            suppress_relu_after_last_weight(graph, down_start);
+            if dcur.shape() != cur.shape() {
+                return Err(format!(
+                    "{spec_name}::{id}: skip shape mismatch — downsample produced \
+                     {}x{}x{}, body {}x{}x{}",
+                    dcur.c, dcur.h, dcur.w, cur.c, cur.h, cur.w
+                ));
+            }
+            dcur.slot
+        }
+        None => {
+            if entry.shape() != cur.shape() {
+                return Err(format!(
+                    "{spec_name}::{id}: skip shape mismatch — identity skip is \
+                     {}x{}x{} but the body produces {}x{}x{} (the block needs a \
+                     downsample projection)",
+                    entry.c, entry.h, entry.w, cur.c, cur.h, cur.w
+                ));
+            }
+            entry.slot
+        }
+    };
+    cur.slot = graph.push_with_relu(Node::Add { len: cur.len() },
+                                    vec![cur.slot, skip], Some(true));
+    Ok(())
+}
+
+/// Lower one T-Net: the subgraph branches off the current `(k, positions)`
+/// features, must end in a `k*k` transform vector (its head kept linear),
+/// and a `MatMulFeature` applies the transform to the entry features.
+#[allow(clippy::too_many_arguments)]
+fn lower_tnet(graph: &mut Graph, rng: &mut Rng, opts: &LowerOptions, cur: &mut Cursor,
+              spec_name: &str, id: &str, k: usize, body: &[&LayerSpec])
+              -> Result<(), String> {
+    let entry = *cur;
+    if entry.c != k {
+        return Err(format!(
+            "{spec_name}::{id}: T-Net k mismatch — transform is {k}x{k} but the \
+             features entering the subgraph have {} channels",
+            entry.c
+        ));
+    }
+    let positions = entry.h * entry.w;
+    let body_start = graph.len();
+    let mut tcur = entry;
+    for &l in body {
+        lower_layer(graph, rng, opts, &mut tcur, spec_name, l)?;
+    }
+    if !suppress_relu_after_last_weight(graph, body_start) {
+        return Err(format!("{spec_name}::{id}: T-Net subgraph has no weight layers"));
+    }
+    if tcur.len() != k * k {
+        return Err(format!(
+            "{spec_name}::{id}: T-Net k mismatch — the subgraph ends in {} values \
+             but a {k}x{k} transform needs {}",
+            tcur.len(),
+            k * k
+        ));
+    }
+    cur.slot = graph.push_with_relu(Node::MatMulFeature { k, positions },
+                                    vec![entry.slot, tcur.slot], Some(false));
+    cur.c = k;
+    cur.h = entry.h;
+    cur.w = entry.w;
+    Ok(())
+}
+
+/// Lower an `arch::ArchSpec` into a native layer [`Graph`].
 ///
 /// Supported: plain conv stacks (square spatial maps, symmetric or
 /// "same"-style asymmetric padding, grouped/depthwise convs), token-wise FC
 /// layers (`fc_tok`, lowered to 1x1 convs over the token axis — PointNet's
 /// shared MLPs), FC heads (global/spatial pooling plus a `Flatten` are
-/// inserted automatically), and `Kind::Other` records (skipped — they carry
-/// no MACs).  Branching specs (ResNet residual/downsample forks, T-Nets)
-/// return an error from the shape reconciliation.
-pub fn lower_arch_spec(spec: &ArchSpec, opts: &LowerOptions) -> Result<Vec<Node>, String> {
+/// inserted automatically), `Kind::Other` records (skipped — they carry no
+/// MACs), and the two annotated branching constructs
+/// (`arch::BlockRole`):
+///
+/// * **residual blocks** — consecutive `ResidualBody` layers chain from the
+///   block entry; a `ResidualDown` layer (if present) lowers the 1x1
+///   projection from the same entry; an `Add` node joins body and skip with
+///   ReLU after the join (the body's final conv stays linear);
+/// * **T-Nets** — consecutive `Tnet` layers form a subgraph from the
+///   current `(k, positions)` features, ending in a linear `k*k` transform
+///   that a `MatMulFeature` node applies back onto the entry features.
+///
+/// Mis-annotated specs fail with shape errors (mismatched skip shapes,
+/// transform size != `k*k`, entry channels != `k`); unannotated branching
+/// (e.g. segmentation-head feature concats) still fails at the shape
+/// reconciliation.
+pub fn lower_arch_spec(spec: &ArchSpec, opts: &LowerOptions) -> Result<Graph, String> {
     let mut rng = Rng::new(opts.seed ^ 0x7B1E5);
-    let (mut c, mut h, mut w) = opts.input;
+    let (c, h, w) = opts.input;
     if c * h * w == 0 {
         return Err(format!("{}: empty lowering input", spec.name));
     }
-    let mut nodes: Vec<Node> = Vec::new();
-    for l in &spec.layers {
-        let at = format!("{}::{}", spec.name, l.name);
-        match l.kind {
-            Kind::Other => continue,
-            Kind::Conv { co, ci, kh, kw } => {
-                reconcile(&mut nodes, &mut c, &mut h, &mut w, l.in_act, &at)?;
-                if ci == 0 || c % ci != 0 {
-                    return Err(format!("{at}: weight ci {ci} does not divide {c} channels"));
-                }
-                let groups = c / ci;
-                if co % groups != 0 {
-                    return Err(format!("{at}: co {co} not a multiple of {groups} groups"));
-                }
-                if l.out_act % co != 0 {
-                    return Err(format!("{at}: out_act {} not a multiple of co {co}", l.out_act));
-                }
-                let area = l.out_act / co;
-                let (h_out, w_out) = if w == 1 {
-                    (area, 1)
-                } else {
-                    let s = isqrt(area);
-                    if s * s != area {
-                        return Err(format!("{at}: non-square output area {area}"));
-                    }
-                    (s, s)
-                };
-                let (stride, pad_lo, _pad_hi) = infer_stride_pad(h, h_out, kh)
-                    .ok_or_else(|| {
-                        format!("{at}: no stride/padding maps {h} -> {h_out} with k={kh}")
-                    })?;
-                let record = LayerRecord {
-                    name: l.name.clone(),
-                    shape: vec![co, ci, kh, kw],
-                    payload: synth_payload(l.params, opts, &mut rng),
-                };
-                let conv = Conv2dLayer::with_output(
-                    record, (c, h, w), stride, pad_lo, (h_out, w_out), groups)?;
-                nodes.push(Node::Conv2d(conv));
-                c = co;
-                h = h_out;
-                w = w_out;
+    let mut graph = Graph::new();
+    let mut cur = Cursor { slot: Slot::Source, c, h, w };
+    let layers = &spec.layers;
+    let mut i = 0usize;
+    while i < layers.len() {
+        match &layers[i].block {
+            None => {
+                lower_layer(&mut graph, &mut rng, opts, &mut cur, &spec.name, &layers[i])?;
+                i += 1;
             }
-            Kind::Fc { co, ci } => {
-                if ci == 0 || l.in_act % ci != 0 {
-                    return Err(format!("{at}: in_act {} not a multiple of ci {ci}", l.in_act));
-                }
-                let tokens = l.in_act / ci;
-                reconcile(&mut nodes, &mut c, &mut h, &mut w, l.in_act, &at)?;
-                let record_payload = synth_payload(l.params, opts, &mut rng);
-                if tokens == 1 {
-                    // plain FC over the flattened activation
-                    if h * w > 1 {
-                        nodes.push(Node::Flatten { len: ci });
+            Some(BlockRole::ResidualBody { id }) | Some(BlockRole::ResidualDown { id }) => {
+                let id = id.clone();
+                let mut body: Vec<&LayerSpec> = Vec::new();
+                let mut downsample: Option<&LayerSpec> = None;
+                while i < layers.len() {
+                    match &layers[i].block {
+                        Some(BlockRole::ResidualBody { id: j }) if *j == id => {
+                            body.push(&layers[i]);
+                            i += 1;
+                        }
+                        Some(BlockRole::ResidualDown { id: j }) if *j == id => {
+                            if downsample.replace(&layers[i]).is_some() {
+                                return Err(format!(
+                                    "{}::{id}: residual block has two downsample layers",
+                                    spec.name
+                                ));
+                            }
+                            i += 1;
+                        }
+                        _ => break,
                     }
-                    let record = LayerRecord {
-                        name: l.name.clone(),
-                        shape: vec![co, ci],
-                        payload: record_payload,
-                    };
-                    nodes.push(Node::Fc(FcLayer::from_record(record)?));
-                    c = co;
-                    h = 1;
-                    w = 1;
-                } else {
-                    // token-wise shared MLP: a 1x1 conv over the token axis
-                    if c != ci || h * w != tokens {
-                        return Err(format!(
-                            "{at}: token FC expects ({ci} ch x {tokens} pos), have \
-                             ({c} x {h} x {w}) — token-mixing layers are unsupported"
-                        ));
-                    }
-                    let record = LayerRecord {
-                        name: l.name.clone(),
-                        shape: vec![co, ci, 1, 1],
-                        payload: record_payload,
-                    };
-                    let conv = Conv2dLayer::with_output(
-                        record, (c, h, w), 1, 0, (h, w), 1)?;
-                    nodes.push(Node::Conv2d(conv));
-                    c = co;
                 }
+                lower_residual_block(&mut graph, &mut rng, opts, &mut cur, &spec.name,
+                                     &id, &body, downsample)?;
+            }
+            Some(BlockRole::Tnet { id, k }) => {
+                let (id, k) = (id.clone(), *k);
+                let mut body: Vec<&LayerSpec> = Vec::new();
+                while i < layers.len() {
+                    match &layers[i].block {
+                        Some(BlockRole::Tnet { id: j, k: kj }) if *j == id && *kj == k => {
+                            body.push(&layers[i]);
+                            i += 1;
+                        }
+                        _ => break,
+                    }
+                }
+                lower_tnet(&mut graph, &mut rng, opts, &mut cur, &spec.name, &id, k,
+                           &body)?;
             }
         }
     }
-    if nodes.is_empty() {
+    if graph.is_empty() {
         return Err(format!("{}: nothing to lower", spec.name));
     }
-    Ok(nodes)
+    Ok(graph)
 }
 
 #[cfg(test)]
@@ -506,5 +881,62 @@ mod tests {
             WeightPayload::Bwnn { .. } => {}
             other => panic!("expected bwnn fallback, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn add_join_math_and_shape() {
+        let add = Node::Add { len: 4 };
+        assert_eq!(add.arity(), 2);
+        assert!(add.is_join() && !add.is_weight());
+        assert_eq!((add.in_len(), add.out_len()), (4, 4));
+        assert_eq!((add.slot_in_len(0), add.slot_in_len(1)), (4, 4));
+        assert_eq!(add.resident_bytes_reference(), 0);
+        assert_eq!(add.packed_scratch_bytes(), 0);
+        let a = [1.0f32, -2.0, 3.0, 0.5];
+        let b = [1.0f32, 1.0, -4.0, 0.5];
+        assert_eq!(add.forward_join(&a, &b, false), vec![2.0, -1.0, -1.0, 1.0]);
+        assert_eq!(add.forward_join(&a, &b, true), vec![2.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn matmul_feature_applies_transform_per_position() {
+        // 2x2 transform over 3 positions: y[c', p] = sum_c T[c', c] x[c, p]
+        let mm = Node::MatMulFeature { k: 2, positions: 3 };
+        assert_eq!(mm.arity(), 2);
+        assert_eq!((mm.slot_in_len(0), mm.slot_in_len(1)), (6, 4));
+        assert_eq!((mm.in_len(), mm.out_len()), (6, 6));
+        let x = [1.0f32, 2.0, 3.0, // channel 0
+                 4.0, 5.0, 6.0]; // channel 1
+        let t = [1.0f32, 0.0, // row 0: identity on channel 0
+                 1.0, 1.0]; // row 1: channel 0 + channel 1
+        assert_eq!(mm.forward_join(&x, &t, false),
+                   vec![1.0, 2.0, 3.0, 5.0, 7.0, 9.0]);
+        let neg_t = [-1.0f32, 0.0, 0.0, -1.0];
+        let y = mm.forward_join(&x, &neg_t, true);
+        assert!(y.iter().all(|&v| v == 0.0), "relu clamps the negated map");
+    }
+
+    #[test]
+    fn graph_sequential_wires_a_chain() {
+        let g = Graph::sequential(vec![
+            Node::Flatten { len: 8 },
+            Node::GlobalPool { kind: PoolKind::Avg, c: 4, positions: 2 },
+        ]);
+        assert_eq!(g.len(), 2);
+        assert_eq!(g.nodes[0].inputs, vec![Slot::Source]);
+        assert_eq!(g.nodes[1].inputs, vec![Slot::Node(0)]);
+        assert!(g.nodes.iter().all(|gn| gn.relu.is_none()));
+    }
+
+    #[test]
+    fn graph_push_returns_addressable_slots() {
+        let mut g = Graph::new();
+        let a = g.push(Node::Flatten { len: 6 }, vec![Slot::Source]);
+        let b = g.push(Node::Flatten { len: 6 }, vec![a]);
+        let j = g.push_with_relu(Node::Add { len: 6 }, vec![b, a], Some(true));
+        assert_eq!(a, Slot::Node(0));
+        assert_eq!(j, Slot::Node(2));
+        assert_eq!(g.nodes[2].inputs, vec![Slot::Node(1), Slot::Node(0)]);
+        assert_eq!(g.nodes[2].relu, Some(true));
     }
 }

@@ -16,12 +16,17 @@
 //! * **kernels** (this file) — per-row and per-layer FC math over every
 //!   `WeightPayload`;
 //! * **[`layers`]** — the layer-graph node types (`Fc`, `Conv2d`, pooling,
-//!   flatten) with per-node Reference and Packed forwards, plus
-//!   [`layers::lower_arch_spec`] which turns sequential `arch::ArchSpec`
-//!   CNNs into runnable node chains;
-//! * **[`Engine`]** (`engine` module) — executes a node chain on one of the
-//!   [`EnginePath`]s; [`MlpEngine`] is the thin FC-chain wrapper `serve`,
-//!   the CLI and the benches construct from a `TbnzModel`.
+//!   flatten, and the `Add`/`MatMulFeature` join nodes) with per-node
+//!   Reference and Packed forwards, the [`Graph`]/[`GraphNode`]/[`Slot`]
+//!   DAG wiring, and [`layers::lower_arch_spec`] which turns
+//!   `arch::ArchSpec`s — sequential CNN stacks *and* the annotated
+//!   branching topologies (ResNet residual blocks, PointNet T-Nets) — into
+//!   runnable graphs;
+//! * **[`Engine`]** (`engine` module) — executes a graph on one of the
+//!   [`EnginePath`]s with a value-table walker (activations addressable by
+//!   node id, freed after their last consumer); [`MlpEngine`] is the thin
+//!   FC-chain wrapper `serve`, the CLI and the benches construct from a
+//!   `TbnzModel`.
 //!
 //! The bit-packed fast path (`packed` module) sign-binarizes hidden
 //! activations with an XNOR-Net scale and reduces every weight layer — FC
@@ -44,8 +49,8 @@ pub mod layers;
 mod packed;
 
 pub use engine::{Engine, MlpEngine, Nonlin};
-pub use layers::{lower_arch_spec, Conv2dLayer, FcLayer, LowerOptions, Node, PoolKind,
-                 Scratch};
+pub use layers::{lower_arch_spec, Conv2dLayer, FcLayer, Graph, GraphNode, LowerOptions,
+                 Node, PoolKind, Scratch, Slot};
 pub use packed::{binarize_activations, binarize_activations_into,
                  forward_quantized_reference, payload_row_dot_i8, quantize_input_i8,
                  AlphaRun, EnginePath, PackedLayer, PackedLayout, PackedPayload};

@@ -89,6 +89,20 @@ pub enum PackedLayout {
     Expanded,
 }
 
+impl PackedLayout {
+    /// Layout selected by the `TBN_LAYOUT` environment variable:
+    /// `expanded` picks [`PackedLayout::Expanded`], anything else (or
+    /// unset) the tile-resident default.  This is the CI A/B hook — the
+    /// parity suites build their "default" packed engines through it, and
+    /// the workflow runs the test job once per layout.
+    pub fn from_env() -> PackedLayout {
+        match std::env::var("TBN_LAYOUT") {
+            Ok(v) if v.eq_ignore_ascii_case("expanded") => PackedLayout::Expanded,
+            _ => PackedLayout::TileResident,
+        }
+    }
+}
+
 /// One run of constant alpha inside a packed row: `[start, start + len)`
 /// bits scaled by `alpha`.
 #[derive(Debug, Clone, Copy, PartialEq)]

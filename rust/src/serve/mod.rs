@@ -46,6 +46,19 @@ impl BatchModel for crate::nn::MlpEngine {
     }
 }
 
+/// A raw layer-graph engine serves directly, so lowered branching
+/// architectures (ResNet residual graphs, T-Net PointNets) run behind the
+/// same batching pool as the FC-chain wrapper.
+impl BatchModel for crate::nn::Engine {
+    fn infer_batch(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        self.forward_batch(xs)
+    }
+
+    fn in_dim(&self) -> usize {
+        self.in_len()
+    }
+}
+
 struct Request {
     x: Vec<f32>,
     enqueued: Instant,

@@ -18,7 +18,12 @@
 //! `arch::pointnet_micro` lowered through `nn::lower_arch_spec` and run on
 //! every `EnginePath`, plus graph-construction checks for the full-size
 //! `vgg_small_cifar` / `convmixer_cifar` specs (their forwards run in the
-//! `#[ignore]`d tier — too slow for the default debug test run).
+//! `#[ignore]`d tier — too slow for the default debug test run).  Branching
+//! specs (residual joins, T-Nets) live in `tests/graph_parity.rs`.
+//!
+//! Engines that exercise "the default" packed layout are built through
+//! `PackedLayout::from_env()` so the CI matrix can re-run this suite under
+//! `TBN_LAYOUT=expanded`.
 
 use tiledbits::arch;
 use tiledbits::nn::{
@@ -200,7 +205,9 @@ fn packed_conv_matches_quantized_oracle() {
         let nodes = two_conv_nodes(&mut rng, ci, h, w);
         let reference = Engine::new(nodes.clone(), Nonlin::Relu, EnginePath::Reference)
             .unwrap();
-        let packed = Engine::new(nodes, Nonlin::Relu, EnginePath::Packed).unwrap();
+        let packed = Engine::with_layout(nodes, Nonlin::Relu, EnginePath::Packed,
+                                         PackedLayout::from_env())
+            .unwrap();
         let budget = 1 + packed.out_len() / 50; // sign-tie outlier budget
         for s in 0..3 {
             let x = rng.normal_vec(reference.in_len(), 1.0);
@@ -309,17 +316,21 @@ fn micro_opts(c: usize, hw: (usize, usize), seed: u64) -> LowerOptions {
 #[test]
 fn cnn_micro_runs_natively_on_every_path() {
     let spec = arch::cnn_micro();
-    let nodes = lower_arch_spec(&spec, &micro_opts(3, (16, 16), 7)).unwrap();
-    // conv0, conv1, global pool, head
-    assert_eq!(nodes.len(), 4);
-    assert!(matches!(nodes[0], Node::Conv2d(_)));
-    assert!(matches!(nodes[1], Node::Conv2d(_)));
-    assert!(matches!(nodes[2], Node::GlobalPool { .. }));
-    assert!(matches!(nodes[3], Node::Fc(_)));
+    let graph = lower_arch_spec(&spec, &micro_opts(3, (16, 16), 7)).unwrap();
+    // conv0, conv1, global pool, head — a pure chain: every node reads its
+    // predecessor
+    assert_eq!(graph.len(), 4);
+    assert!(matches!(graph.nodes[0].node, Node::Conv2d(_)));
+    assert!(matches!(graph.nodes[1].node, Node::Conv2d(_)));
+    assert!(matches!(graph.nodes[2].node, Node::GlobalPool { .. }));
+    assert!(matches!(graph.nodes[3].node, Node::Fc(_)));
 
-    let reference = Engine::new(nodes.clone(), Nonlin::Relu, EnginePath::Reference).unwrap();
-    let packed = Engine::new(nodes.clone(), Nonlin::Relu, EnginePath::Packed).unwrap();
-    let int8 = Engine::new(nodes, Nonlin::Relu, EnginePath::PackedInt8).unwrap();
+    let reference =
+        Engine::from_graph(graph.clone(), Nonlin::Relu, EnginePath::Reference).unwrap();
+    let packed = Engine::with_layout_graph(graph.clone(), Nonlin::Relu,
+                                           EnginePath::Packed, PackedLayout::from_env())
+        .unwrap();
+    let int8 = Engine::from_graph(graph, Nonlin::Relu, EnginePath::PackedInt8).unwrap();
     assert_eq!(reference.in_len(), 3 * 16 * 16);
     assert_eq!(reference.out_len(), 10);
 
@@ -358,17 +369,21 @@ fn cnn_micro_runs_natively_on_every_path() {
 #[test]
 fn pointnet_micro_shared_mlp_lowers_to_token_convs() {
     let spec = arch::pointnet_micro();
-    let nodes = lower_arch_spec(&spec, &micro_opts(3, (64, 1), 8)).unwrap();
+    let graph = lower_arch_spec(&spec, &micro_opts(3, (64, 1), 8)).unwrap();
     // conv1, conv2 (1x1 token convs), global pool, fc1, head
-    assert_eq!(nodes.len(), 5);
-    assert!(matches!(&nodes[0], Node::Conv2d(c) if (c.kh, c.kw) == (1, 1) && c.h_out == 64));
-    assert!(matches!(&nodes[1], Node::Conv2d(c) if c.co == 32));
-    assert!(matches!(nodes[2], Node::GlobalPool { positions: 64, .. }));
-    assert!(matches!(nodes[3], Node::Fc(_)));
-    assert!(matches!(nodes[4], Node::Fc(_)));
+    assert_eq!(graph.len(), 5);
+    assert!(matches!(&graph.nodes[0].node,
+                     Node::Conv2d(c) if (c.kh, c.kw) == (1, 1) && c.h_out == 64));
+    assert!(matches!(&graph.nodes[1].node, Node::Conv2d(c) if c.co == 32));
+    assert!(matches!(graph.nodes[2].node, Node::GlobalPool { positions: 64, .. }));
+    assert!(matches!(graph.nodes[3].node, Node::Fc(_)));
+    assert!(matches!(graph.nodes[4].node, Node::Fc(_)));
 
-    let reference = Engine::new(nodes.clone(), Nonlin::Relu, EnginePath::Reference).unwrap();
-    let packed = Engine::new(nodes, Nonlin::Relu, EnginePath::Packed).unwrap();
+    let reference =
+        Engine::from_graph(graph.clone(), Nonlin::Relu, EnginePath::Reference).unwrap();
+    let packed = Engine::with_layout_graph(graph, Nonlin::Relu, EnginePath::Packed,
+                                           PackedLayout::from_env())
+        .unwrap();
     let mut rng = Rng::new(111);
     let n_samples = 8usize;
     let mut agree = 0usize;
@@ -389,12 +404,13 @@ fn pointnet_micro_shared_mlp_lowers_to_token_convs() {
 #[test]
 fn vgg_small_lowers_to_expected_graph() {
     let spec = arch::vgg_small_cifar();
-    let nodes = lower_arch_spec(&spec, &micro_opts(3, (32, 32), 5)).unwrap();
+    let graph = lower_arch_spec(&spec, &micro_opts(3, (32, 32), 5)).unwrap();
     // 6 convs + avg-pool (8x8 -> 4x4) + flatten + fc head
-    assert_eq!(nodes.len(), 9);
-    let convs: Vec<&Conv2dLayer> = nodes
+    assert_eq!(graph.len(), 9);
+    let convs: Vec<&Conv2dLayer> = graph
+        .nodes
         .iter()
-        .filter_map(|n| match n {
+        .filter_map(|gn| match &gn.node {
             Node::Conv2d(c) => Some(c),
             _ => None,
         })
@@ -403,11 +419,11 @@ fn vgg_small_lowers_to_expected_graph() {
     // spatial-reduction convs land on stride 2
     assert_eq!((convs[0].stride, convs[2].stride, convs[4].stride), (1, 2, 2));
     assert_eq!((convs[5].h_out, convs[5].w_out), (8, 8));
-    assert!(matches!(nodes[6], Node::Pool2d { f: 2, .. }));
-    assert!(matches!(nodes[7], Node::Flatten { len: 8192 }));
-    assert!(matches!(&nodes[8], Node::Fc(fc) if fc.m == 10 && fc.n == 8192));
+    assert!(matches!(graph.nodes[6].node, Node::Pool2d { f: 2, .. }));
+    assert!(matches!(graph.nodes[7].node, Node::Flatten { len: 8192 }));
+    assert!(matches!(&graph.nodes[8].node, Node::Fc(fc) if fc.m == 10 && fc.n == 8192));
     // chain validates end-to-end on the reference path (no packing cost)
-    let engine = Engine::new(nodes, Nonlin::Relu, EnginePath::Reference).unwrap();
+    let engine = Engine::from_graph(graph, Nonlin::Relu, EnginePath::Reference).unwrap();
     assert_eq!(engine.in_len(), 3 * 32 * 32);
     assert_eq!(engine.out_len(), 10);
 }
@@ -415,10 +431,10 @@ fn vgg_small_lowers_to_expected_graph() {
 #[test]
 fn convmixer_lowers_with_depthwise_groups_and_same_padding() {
     let spec = arch::convmixer_cifar();
-    let nodes = lower_arch_spec(&spec, &micro_opts(3, (32, 32), 6)).unwrap();
+    let graph = lower_arch_spec(&spec, &micro_opts(3, (32, 32), 6)).unwrap();
     // patch embed + 16 * (dw + pw) + global pool + head
-    assert_eq!(nodes.len(), 1 + 32 + 2);
-    match &nodes[1] {
+    assert_eq!(graph.len(), 1 + 32 + 2);
+    match &graph.nodes[1].node {
         Node::Conv2d(dw) => {
             assert_eq!(dw.groups, 256);
             assert_eq!((dw.kh, dw.kw), (8, 8));
@@ -427,14 +443,17 @@ fn convmixer_lowers_with_depthwise_groups_and_same_padding() {
         }
         other => panic!("expected depthwise conv, got {other:?}"),
     }
-    assert!(matches!(nodes[33], Node::GlobalPool { positions: 1024, .. }));
-    let engine = Engine::new(nodes, Nonlin::Relu, EnginePath::Reference).unwrap();
+    assert!(matches!(graph.nodes[33].node, Node::GlobalPool { positions: 1024, .. }));
+    let engine = Engine::from_graph(graph, Nonlin::Relu, EnginePath::Reference).unwrap();
     assert_eq!(engine.out_len(), 10);
 }
 
+/// Branching the lowering is NOT annotated for — the segmentation head's
+/// per-point feature concat — still fails at the shape reconciliation
+/// (residual/T-Net branching now lowers; see `tests/graph_parity.rs`).
 #[test]
-fn resnet_branching_is_rejected_with_a_shape_error() {
-    let err = lower_arch_spec(&arch::resnet18_cifar(), &micro_opts(3, (32, 32), 4))
+fn unannotated_branching_is_rejected_with_a_shape_error() {
+    let err = lower_arch_spec(&arch::pointnet_part_seg(), &micro_opts(3, (2048, 1), 4))
         .unwrap_err();
     assert!(err.contains("cannot reconcile"), "unexpected error: {err}");
 }
@@ -445,9 +464,12 @@ fn resnet_branching_is_rejected_with_a_shape_error() {
 #[ignore]
 fn vgg_small_full_forward_packed_vs_oracle() {
     let spec = arch::vgg_small_cifar();
-    let nodes = lower_arch_spec(&spec, &micro_opts(3, (32, 32), 5)).unwrap();
-    let reference = Engine::new(nodes.clone(), Nonlin::Relu, EnginePath::Reference).unwrap();
-    let packed = Engine::new(nodes, Nonlin::Relu, EnginePath::Packed).unwrap();
+    let graph = lower_arch_spec(&spec, &micro_opts(3, (32, 32), 5)).unwrap();
+    let reference =
+        Engine::from_graph(graph.clone(), Nonlin::Relu, EnginePath::Reference).unwrap();
+    let packed = Engine::with_layout_graph(graph, Nonlin::Relu, EnginePath::Packed,
+                                           PackedLayout::from_env())
+        .unwrap();
     let mut rng = Rng::new(2024);
     let x = rng.normal_vec(reference.in_len(), 1.0);
     let a = reference.forward_quantized(&x);

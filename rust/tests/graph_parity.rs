@@ -1,0 +1,545 @@
+//! Branching layer-graph parity (artifact-free): the DAG executor and the
+//! residual/T-Net lowering, pinned three ways.
+//!
+//! * **Reference-graph oracle** — an independent test-side evaluator walks
+//!   the lowered graph (per-node `forward_reference`/`forward_join` calls
+//!   over an explicit value table) and must agree **bit-exactly** with
+//!   `Engine::forward` on the Reference path: this pins the engine's
+//!   executor (slot fetch, liveness, ReLU placement) against a second
+//!   implementation.
+//! * **Layout bit-exactness** — on the Packed path, the tile-resident
+//!   layout must agree **bit-exactly** with the expanded layout across
+//!   randomized branching configs (both accumulate identical integer dots
+//!   in identical order), including residual joins whose activation width
+//!   is not a multiple of 64, and batched vs single-sample forwards.
+//! * **Quantized-oracle closeness** — the packed forward tracks the f32
+//!   sign/gamma oracle (`forward_quantized` on a Reference engine) with the
+//!   usual f32 tolerance per binarized layer and argmax agreement end to
+//!   end (sign tie-breaks can flip individual hidden units through deep
+//!   stacks, exactly as in `tests/conv_parity.rs`).
+//!
+//! Plus the lowering failure modes: mismatched skip shapes (projection and
+//! identity), T-Net entry-channel and transform-size mismatches.
+//!
+//! Packed engines built "at the default layout" go through
+//! `PackedLayout::from_env()`, so the CI matrix re-runs this suite under
+//! `TBN_LAYOUT=expanded`.
+
+use tiledbits::arch::{self, ArchSpec, BlockRole, LayerSpec};
+use tiledbits::nn::{
+    lower_arch_spec, Engine, EnginePath, Graph, LowerOptions, Node, Nonlin,
+    PackedLayout, Scratch, Slot,
+};
+use tiledbits::tbn::AlphaMode;
+use tiledbits::util::Rng;
+
+fn opts(input: (usize, usize, usize), p: usize, seed: u64) -> LowerOptions {
+    LowerOptions { input, p, alpha_mode: AlphaMode::PerTile, seed }
+}
+
+fn argmax(y: &[f32]) -> usize {
+    y.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+fn count_nodes(graph: &Graph, pred: impl Fn(&Node) -> bool) -> usize {
+    graph.nodes.iter().filter(|gn| pred(&gn.node)).count()
+}
+
+/// Independent reference-graph evaluator: walk the graph with an explicit
+/// value table, calling the per-node Reference kernels directly.  ReLU
+/// placement mirrors the engine contract (weight nodes except the last
+/// weight node; overrides win; everything gated on `relu_on`).
+fn handrolled_reference_forward(graph: &Graph, x: &[f32], relu_on: bool) -> Vec<f32> {
+    fn fetch<'a>(slot: Slot, x: &'a [f32], values: &'a [Vec<f32>]) -> &'a [f32] {
+        match slot {
+            Slot::Source => x,
+            Slot::Node(j) => &values[j],
+        }
+    }
+    let last_weight = graph
+        .nodes
+        .iter()
+        .enumerate()
+        .filter(|(_, gn)| gn.node.is_weight())
+        .map(|(i, _)| i)
+        .last();
+    let mut values: Vec<Vec<f32>> = Vec::with_capacity(graph.len());
+    let mut scratch = Scratch::default();
+    for (i, gn) in graph.nodes.iter().enumerate() {
+        let default = gn.node.is_weight() && Some(i) != last_weight;
+        let relu = gn.relu.unwrap_or(default) && relu_on;
+        let out = if gn.node.is_join() {
+            gn.node.forward_join(fetch(gn.inputs[0], x, &values),
+                                 fetch(gn.inputs[1], x, &values), relu)
+        } else {
+            gn.node.forward_reference(fetch(gn.inputs[0], x, &values), relu, &mut scratch)
+        };
+        values.push(out);
+    }
+    values.pop().unwrap()
+}
+
+/// Randomized annotated branching spec: either a small residual net (stem +
+/// 1..2 blocks, optionally channel-growing with a 1x1 projection skip) or a
+/// small T-Net pointnet.  Widths/spatial sizes are drawn so most joins land
+/// on activation widths that are not multiples of 64.
+fn random_branching_spec(rng: &mut Rng, case: u64)
+                         -> (ArchSpec, (usize, usize, usize)) {
+    if rng.below(3) < 2 {
+        // residual CNN
+        let c_in = 1 + rng.below(3);
+        let hw = 5 + rng.below(4); // 5..8 -> join widths mostly % 64 != 0
+        let w0 = 4 + rng.below(5);
+        let mut layers = vec![LayerSpec::conv("stem", c_in, w0, 3, hw, hw, hw, hw)];
+        let blocks = 1 + rng.below(2);
+        let mut c = w0;
+        for b in 0..blocks {
+            let id = format!("b{b}");
+            let grow = rng.below(2) == 1;
+            let co = if grow { c + 1 + rng.below(4) } else { c };
+            layers.push(
+                LayerSpec::conv(&format!("{id}.conv1"), c, co, 3, hw, hw, hw, hw)
+                    .in_block(BlockRole::ResidualBody { id: id.clone() }));
+            layers.push(
+                LayerSpec::conv(&format!("{id}.conv2"), co, co, 3, hw, hw, hw, hw)
+                    .in_block(BlockRole::ResidualBody { id: id.clone() }));
+            if grow {
+                layers.push(
+                    LayerSpec::conv(&format!("{id}.down"), c, co, 1, hw, hw, hw, hw)
+                        .in_block(BlockRole::ResidualDown { id: id.clone() }));
+            }
+            c = co;
+        }
+        layers.push(LayerSpec::fc("head", c, 4 + rng.below(6)));
+        (ArchSpec { name: format!("residual_rand_{case}"), layers }, (c_in, hw, hw))
+    } else {
+        // T-Net pointnet
+        let k = 2 + rng.below(3);
+        let points = 9 + rng.below(8); // 9..16 positions
+        let mid = 6 + rng.below(6);
+        let t = |l: LayerSpec| l.in_block(BlockRole::Tnet { id: "t".into(), k });
+        let c2 = 5 + rng.below(6);
+        let layers = vec![
+            t(LayerSpec::fc_tok("t.conv1", k, mid, points)),
+            t(LayerSpec::fc("t.fc1", mid, k * k)),
+            LayerSpec::fc_tok("conv1", k, c2, points),
+            LayerSpec::fc("head", c2, 4 + rng.below(6)),
+        ];
+        (ArchSpec { name: format!("tnet_rand_{case}"), layers }, (k, points, 1))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Randomized branching configs: executor oracle + layout bit-exactness
+// ---------------------------------------------------------------------------
+
+/// The acceptance sweep: >= 8 randomized branching configs where (a) the
+/// Reference DAG walk is bit-exact against the independent evaluator, (b)
+/// the tile-resident packed forward is bit-exact against the expanded
+/// layout (single and batched), and (c) the packed forward tracks the
+/// quantized f32 oracle at the argmax level.
+#[test]
+fn branching_configs_layouts_bit_exact_and_track_oracle() {
+    let mut ragged_joins = 0usize;
+    let mut agree = 0usize;
+    let mut total = 0usize;
+    // two fixed minis (resnet_micro's first join is 392 wide, 392 % 64 != 0)
+    // plus 10 randomized branching specs
+    let mut configs: Vec<(ArchSpec, (usize, usize, usize), usize, u64)> = vec![
+        (arch::resnet_micro(), (3, 7, 7), 4, 900),
+        (arch::pointnet_tnet_micro(), (3, 16, 1), 4, 901),
+    ];
+    for case in 0..10u64 {
+        let mut rng = Rng::new(0xD06E ^ case.wrapping_mul(0x9E3779B97F4A7C15));
+        let (spec, input) = random_branching_spec(&mut rng, case);
+        let p = [2usize, 4][rng.below(2)];
+        configs.push((spec, input, p, 1000 + case));
+    }
+    for (case, (spec, input, p, seed)) in configs.into_iter().enumerate() {
+        let mut rng = Rng::new(0xE4E ^ seed);
+        let graph = lower_arch_spec(&spec, &opts(input, p, seed))
+            .unwrap_or_else(|e| panic!("case {case} ({}): {e}", spec.name));
+        assert!(count_nodes(&graph, Node::is_join) >= 1, "case {case} has no join");
+        for gn in &graph.nodes {
+            if let Node::Add { len } = gn.node {
+                if len % 64 != 0 {
+                    ragged_joins += 1;
+                }
+            }
+        }
+        let reference =
+            Engine::from_graph(graph.clone(), Nonlin::Relu, EnginePath::Reference)
+                .unwrap();
+        let tile = Engine::with_layout_graph(graph.clone(), Nonlin::Relu,
+                                             EnginePath::Packed,
+                                             PackedLayout::TileResident)
+            .unwrap();
+        let expanded = Engine::with_layout_graph(graph.clone(), Nonlin::Relu,
+                                                 EnginePath::Packed,
+                                                 PackedLayout::Expanded)
+            .unwrap();
+        assert!(tile.resident_weight_bytes() <= expanded.resident_weight_bytes(),
+                "case {case}: tile residency above expanded");
+        for s in 0..3 {
+            let x = rng.normal_vec(reference.in_len(), 1.0);
+            // (a) executor vs the independent reference-graph evaluator
+            assert_eq!(reference.forward(&x), handrolled_reference_forward(&graph, &x, true),
+                       "case {case} sample {s}: Reference DAG walk not bit-exact");
+            // (b) tile-resident vs expanded, bit-exact
+            let yt = tile.forward(&x);
+            assert_eq!(yt, expanded.forward(&x),
+                       "case {case} sample {s}: layouts disagree");
+            // (c) argmax tracking of the f32 quantized oracle
+            total += 1;
+            if argmax(&reference.forward_quantized(&x)) == argmax(&yt) {
+                agree += 1;
+            }
+            // packed forward and forward_quantized coincide on packed engines
+            assert_eq!(yt, tile.forward_quantized(&x));
+        }
+        let xs: Vec<Vec<f32>> =
+            (0..4).map(|_| rng.normal_vec(tile.in_len(), 1.0)).collect();
+        let batch = tile.forward_batch(&xs);
+        assert_eq!(batch, expanded.forward_batch(&xs), "case {case}: batched layouts");
+        for (x, y) in xs.iter().zip(&batch) {
+            assert_eq!(&tile.forward(x), y, "case {case}: batch != single");
+        }
+    }
+    assert!(ragged_joins >= 1,
+            "the sweep must include at least one residual join with n % 64 != 0");
+    // sign tie-breaks may flip individual samples; the bulk must agree
+    assert!(agree * 10 >= total * 6, "packed/oracle argmax agreement {agree}/{total}");
+}
+
+/// Explicit ragged residual: a 5-channel 5x5 block joins 125-element
+/// activations (125 % 64 != 0), with a channel-growing projection block on
+/// top — the acceptance criterion's named hard case, bit-exact across
+/// layouts and batch modes.
+#[test]
+fn residual_join_with_ragged_width_is_bit_exact_across_layouts() {
+    let id0 = || BlockRole::ResidualBody { id: "b0".into() };
+    let id1 = || BlockRole::ResidualBody { id: "b1".into() };
+    let spec = ArchSpec {
+        name: "ragged_residual".into(),
+        layers: vec![
+            LayerSpec::conv("stem", 2, 5, 3, 5, 5, 5, 5),
+            LayerSpec::conv("b0.conv1", 5, 5, 3, 5, 5, 5, 5).in_block(id0()),
+            LayerSpec::conv("b0.conv2", 5, 5, 3, 5, 5, 5, 5).in_block(id0()),
+            LayerSpec::conv("b1.conv1", 5, 9, 3, 5, 5, 5, 5).in_block(id1()),
+            LayerSpec::conv("b1.conv2", 9, 9, 3, 5, 5, 5, 5).in_block(id1()),
+            LayerSpec::conv("b1.down", 5, 9, 1, 5, 5, 5, 5)
+                .in_block(BlockRole::ResidualDown { id: "b1".into() }),
+            LayerSpec::fc("head", 9, 6),
+        ],
+    };
+    let graph = lower_arch_spec(&spec, &opts((2, 5, 5), 5, 77)).unwrap();
+    let adds: Vec<usize> = graph
+        .nodes
+        .iter()
+        .filter_map(|gn| match gn.node {
+            Node::Add { len } => Some(len),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(adds, vec![125, 225], "join widths (125 % 64 = 61, ragged)");
+    let tile = Engine::with_layout_graph(graph.clone(), Nonlin::Relu,
+                                         EnginePath::Packed,
+                                         PackedLayout::TileResident)
+        .unwrap();
+    let expanded = Engine::with_layout_graph(graph.clone(), Nonlin::Relu,
+                                             EnginePath::Packed,
+                                             PackedLayout::Expanded)
+        .unwrap();
+    let reference =
+        Engine::from_graph(graph, Nonlin::Relu, EnginePath::Reference).unwrap();
+    let mut rng = Rng::new(78);
+    for s in 0..8 {
+        let x = rng.normal_vec(tile.in_len(), 1.0);
+        assert_eq!(tile.forward(&x), expanded.forward(&x), "sample {s}");
+        assert!(reference.forward(&x).iter().all(|v| v.is_finite()));
+    }
+    let xs: Vec<Vec<f32>> = (0..5).map(|_| rng.normal_vec(tile.in_len(), 1.0)).collect();
+    assert_eq!(tile.forward_batch(&xs), expanded.forward_batch(&xs));
+    for (x, y) in xs.iter().zip(&tile.forward_batch(&xs)) {
+        assert_eq!(&tile.forward(x), y);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The annotated minis, end to end on every path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn resnet_micro_lowers_to_expected_graph() {
+    let spec = arch::resnet_micro();
+    let graph = lower_arch_spec(&spec, &opts((3, 7, 7), 4, 11)).unwrap();
+    // stem, b0.conv1, b0.conv2, add, b1.conv1, b1.conv2, b1.down, add,
+    // global pool, head
+    assert_eq!(graph.len(), 10);
+    assert!(matches!(graph.nodes[3].node, Node::Add { len: 392 })); // 8*7*7, ragged
+    assert_eq!(graph.nodes[3].inputs, vec![Slot::Node(2), Slot::Node(0)]);
+    assert_eq!(graph.nodes[3].relu, Some(true), "ReLU moves after the join");
+    assert_eq!(graph.nodes[2].relu, Some(false), "body's last conv stays linear");
+    // the projection block: down reads the block entry (the first add) and
+    // stays linear — both operands activate only after the join
+    assert_eq!(graph.nodes[6].inputs, vec![Slot::Node(3)]);
+    assert_eq!(graph.nodes[6].relu, Some(false));
+    assert!(matches!(graph.nodes[7].node, Node::Add { len: 192 }));
+    assert_eq!(graph.nodes[7].inputs, vec![Slot::Node(5), Slot::Node(6)]);
+    assert!(matches!(graph.nodes[8].node, Node::GlobalPool { positions: 16, .. }));
+    assert!(matches!(&graph.nodes[9].node, Node::Fc(fc) if fc.m == 10 && fc.n == 12));
+
+    let reference =
+        Engine::from_graph(graph.clone(), Nonlin::Relu, EnginePath::Reference).unwrap();
+    let packed = Engine::with_layout_graph(graph.clone(), Nonlin::Relu,
+                                           EnginePath::Packed, PackedLayout::from_env())
+        .unwrap();
+    let int8 =
+        Engine::from_graph(graph.clone(), Nonlin::Relu, EnginePath::PackedInt8).unwrap();
+    assert_eq!(reference.in_len(), 3 * 7 * 7);
+    assert_eq!(reference.out_len(), 10);
+    let mut rng = Rng::new(12);
+    let mut agree = 0usize;
+    let n_samples = 8usize;
+    for _ in 0..n_samples {
+        let x = rng.normal_vec(reference.in_len(), 1.0);
+        assert_eq!(reference.forward(&x),
+                   handrolled_reference_forward(&graph, &x, true));
+        let y = packed.forward(&x);
+        assert_eq!(y, packed.forward_quantized(&x));
+        if argmax(&reference.forward_quantized(&x)) == argmax(&y) {
+            agree += 1;
+        }
+        assert!(int8.forward(&x).iter().all(|v| v.is_finite()));
+        assert_eq!(int8.forward_batch(&[x.clone()])[0], int8.forward(&x));
+    }
+    assert!(agree * 10 >= n_samples * 6, "argmax agreement {agree}/{n_samples}");
+    assert!(packed.resident_weight_bytes() < 4 * spec.total_params());
+}
+
+#[test]
+fn pointnet_tnet_micro_lowers_with_feature_transforms() {
+    let spec = arch::pointnet_tnet_micro();
+    let graph = lower_arch_spec(&spec, &opts((3, 16, 1), 4, 13)).unwrap();
+    // tnet3: conv1, conv2, pool, fc1, fc2, matmul;
+    // conv1; tnet8: conv1, pool, fc1, matmul; conv2, pool, head
+    assert_eq!(count_nodes(&graph, |n| matches!(n, Node::MatMulFeature { .. })), 2);
+    let mm_params: Vec<(usize, usize)> = graph
+        .nodes
+        .iter()
+        .filter_map(|gn| match gn.node {
+            Node::MatMulFeature { k, positions } => Some((k, positions)),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(mm_params, vec![(3, 16), (8, 16)]);
+    // the first T-Net branches straight off the source features
+    let first_mm = graph
+        .nodes
+        .iter()
+        .find(|gn| matches!(gn.node, Node::MatMulFeature { .. }))
+        .unwrap();
+    assert_eq!(first_mm.inputs[0], Slot::Source);
+    assert_eq!(first_mm.relu, Some(false));
+
+    let reference =
+        Engine::from_graph(graph.clone(), Nonlin::Relu, EnginePath::Reference).unwrap();
+    let tile = Engine::with_layout_graph(graph.clone(), Nonlin::Relu,
+                                         EnginePath::Packed,
+                                         PackedLayout::TileResident)
+        .unwrap();
+    let expanded = Engine::with_layout_graph(graph.clone(), Nonlin::Relu,
+                                             EnginePath::Packed,
+                                             PackedLayout::Expanded)
+        .unwrap();
+    assert_eq!(reference.in_len(), 3 * 16);
+    assert_eq!(reference.out_len(), 10);
+    let mut rng = Rng::new(14);
+    for s in 0..6 {
+        let x = rng.normal_vec(reference.in_len(), 1.0);
+        assert_eq!(reference.forward(&x),
+                   handrolled_reference_forward(&graph, &x, true), "sample {s}");
+        assert_eq!(tile.forward(&x), expanded.forward(&x), "sample {s}");
+    }
+    let xs: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_vec(tile.in_len(), 1.0)).collect();
+    let batch = tile.forward_batch(&xs);
+    for (x, y) in xs.iter().zip(&batch) {
+        assert_eq!(&tile.forward(x), y);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lowering failure modes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mismatched_projection_skip_shape_is_rejected() {
+    let b = || BlockRole::ResidualBody { id: "b0".into() };
+    let spec = ArchSpec {
+        name: "bad_down".into(),
+        layers: vec![
+            LayerSpec::conv("stem", 3, 8, 3, 6, 6, 6, 6),
+            LayerSpec::conv("b0.conv1", 8, 12, 3, 6, 6, 6, 6).in_block(b()),
+            LayerSpec::conv("b0.conv2", 12, 12, 3, 6, 6, 6, 6).in_block(b()),
+            // projection to 10 channels cannot join the 12-channel body
+            LayerSpec::conv("b0.down", 8, 10, 1, 6, 6, 6, 6)
+                .in_block(BlockRole::ResidualDown { id: "b0".into() }),
+            LayerSpec::fc("head", 12, 4),
+        ],
+    };
+    let err = lower_arch_spec(&spec, &opts((3, 6, 6), 4, 15)).unwrap_err();
+    assert!(err.contains("skip shape mismatch"), "unexpected error: {err}");
+}
+
+#[test]
+fn channel_changing_identity_skip_is_rejected() {
+    let b = || BlockRole::ResidualBody { id: "b0".into() };
+    let spec = ArchSpec {
+        name: "bad_identity".into(),
+        layers: vec![
+            LayerSpec::conv("stem", 3, 8, 3, 6, 6, 6, 6),
+            // body grows 8 -> 12 channels but ships no projection
+            LayerSpec::conv("b0.conv1", 8, 12, 3, 6, 6, 6, 6).in_block(b()),
+            LayerSpec::conv("b0.conv2", 12, 12, 3, 6, 6, 6, 6).in_block(b()),
+            LayerSpec::fc("head", 12, 4),
+        ],
+    };
+    let err = lower_arch_spec(&spec, &opts((3, 6, 6), 4, 16)).unwrap_err();
+    assert!(err.contains("skip shape mismatch") && err.contains("downsample projection"),
+            "unexpected error: {err}");
+}
+
+#[test]
+fn tnet_entry_channel_mismatch_is_rejected() {
+    // transform claims k = 4, but the features entering it have 3 channels
+    let t = |l: LayerSpec| l.in_block(BlockRole::Tnet { id: "t".into(), k: 4 });
+    let spec = ArchSpec {
+        name: "bad_tnet_entry".into(),
+        layers: vec![
+            t(LayerSpec::fc_tok("t.conv1", 4, 8, 12)),
+            t(LayerSpec::fc("t.fc1", 8, 16)),
+            LayerSpec::fc_tok("conv1", 3, 8, 12),
+            LayerSpec::fc("head", 8, 4),
+        ],
+    };
+    let err = lower_arch_spec(&spec, &opts((3, 12, 1), 4, 17)).unwrap_err();
+    assert!(err.contains("T-Net k mismatch"), "unexpected error: {err}");
+}
+
+#[test]
+fn tnet_transform_size_mismatch_is_rejected() {
+    // subgraph ends in 10 values, not k*k = 9
+    let t = |l: LayerSpec| l.in_block(BlockRole::Tnet { id: "t".into(), k: 3 });
+    let spec = ArchSpec {
+        name: "bad_tnet_head".into(),
+        layers: vec![
+            t(LayerSpec::fc_tok("t.conv1", 3, 8, 12)),
+            t(LayerSpec::fc("t.fc1", 8, 10)),
+            LayerSpec::fc_tok("conv1", 3, 8, 12),
+            LayerSpec::fc("head", 8, 4),
+        ],
+    };
+    let err = lower_arch_spec(&spec, &opts((3, 12, 1), 4, 18)).unwrap_err();
+    assert!(err.contains("T-Net k mismatch"), "unexpected error: {err}");
+}
+
+// ---------------------------------------------------------------------------
+// Full-size paper specs: graph construction (forwards stay out of the
+// default tier — debug-mode full-size forwards take minutes)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn resnet18_cifar_lowers_with_residual_joins() {
+    let spec = arch::resnet18_cifar();
+    let graph = lower_arch_spec(&spec, &opts((3, 32, 32), 4, 19)).unwrap();
+    // 8 basic blocks -> 8 residual joins; stages 1..3 open with a projection
+    assert_eq!(count_nodes(&graph, |n| matches!(n, Node::Add { .. })), 8);
+    let downs = graph
+        .nodes
+        .iter()
+        .filter(|gn| gn.node.name().ends_with(".down"))
+        .count();
+    assert_eq!(downs, 3);
+    let engine =
+        Engine::from_graph(graph, Nonlin::Relu, EnginePath::Reference).unwrap();
+    assert_eq!(engine.in_len(), 3 * 32 * 32);
+    assert_eq!(engine.out_len(), 10);
+}
+
+#[test]
+fn pointnet_cls_lowers_with_two_tnets() {
+    let spec = arch::pointnet_cls();
+    let graph = lower_arch_spec(&spec, &opts((3, 1024, 1), 4, 20)).unwrap();
+    let mm_params: Vec<(usize, usize)> = graph
+        .nodes
+        .iter()
+        .filter_map(|gn| match gn.node {
+            Node::MatMulFeature { k, positions } => Some((k, positions)),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(mm_params, vec![(3, 1024), (64, 1024)]);
+    let engine =
+        Engine::from_graph(graph, Nonlin::Relu, EnginePath::Reference).unwrap();
+    assert_eq!(engine.in_len(), 3 * 1024);
+    assert_eq!(engine.out_len(), 40);
+}
+
+/// ResNet50's bottleneck lowering — 23.5M synthesized params, so it runs in
+/// the release-mode `--ignored` tier CI compiles and executes.
+#[test]
+#[ignore]
+fn resnet50_cifar_lowers_with_bottleneck_joins() {
+    let spec = arch::resnet50_cifar();
+    let graph = lower_arch_spec(&spec, &opts((3, 32, 32), 4, 21)).unwrap();
+    // [3, 4, 6, 3] bottleneck blocks -> 16 joins, every stage opens with a
+    // projection (stage 0 grows 64 -> 256)
+    assert_eq!(count_nodes(&graph, |n| matches!(n, Node::Add { .. })), 16);
+    let downs = graph
+        .nodes
+        .iter()
+        .filter(|gn| gn.node.name().ends_with(".down"))
+        .count();
+    assert_eq!(downs, 4);
+    let engine =
+        Engine::from_graph(graph, Nonlin::Relu, EnginePath::Reference).unwrap();
+    assert_eq!(engine.in_len(), 3 * 32 * 32);
+    assert_eq!(engine.out_len(), 10);
+}
+
+/// Full forward of the branching minis on the packed tile-resident path vs
+/// the expanded layout at full depth — release-tier (`--ignored`) version
+/// of the micro checks with more samples.
+#[test]
+#[ignore]
+fn branching_minis_extended_layout_sweep() {
+    for (spec, input) in [
+        (arch::resnet_micro(), (3usize, 7usize, 7usize)),
+        (arch::pointnet_tnet_micro(), (3, 16, 1)),
+    ] {
+        for p in [2usize, 4, 8] {
+            let graph = match lower_arch_spec(&spec, &opts(input, p, 22)) {
+                Ok(g) => g,
+                Err(e) => panic!("{} p={p}: {e}", spec.name),
+            };
+            let tile = Engine::with_layout_graph(graph.clone(), Nonlin::Relu,
+                                                 EnginePath::Packed,
+                                                 PackedLayout::TileResident)
+                .unwrap();
+            let expanded = Engine::with_layout_graph(graph, Nonlin::Relu,
+                                                     EnginePath::Packed,
+                                                     PackedLayout::Expanded)
+                .unwrap();
+            let mut rng = Rng::new(23);
+            for s in 0..32 {
+                let x = rng.normal_vec(tile.in_len(), 1.0);
+                assert_eq!(tile.forward(&x), expanded.forward(&x),
+                           "{} p={p} sample {s}", spec.name);
+            }
+        }
+    }
+}

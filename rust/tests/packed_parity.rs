@@ -17,6 +17,10 @@
 //! individual outputs, so a small outlier budget is allowed per
 //! configuration.  The two packed layouts accumulate identical exact dots
 //! in identical order, so their comparison is `assert_eq!` — no tolerance.
+//!
+//! Packed engines built "at the default layout" go through
+//! `PackedLayout::from_env()`, so the CI matrix re-runs this suite under
+//! `TBN_LAYOUT=expanded` to gate both layouts end to end.
 
 use tiledbits::nn::{EnginePath, MlpEngine, Nonlin, PackedLayout};
 use tiledbits::tbn::{alphas_from, tile_from_weights, AlphaMode, LayerRecord,
@@ -94,7 +98,9 @@ fn packed_matches_reference_across_random_configs() {
         );
         let reference =
             MlpEngine::with_path(model.clone(), Nonlin::Relu, EnginePath::Reference).unwrap();
-        let packed = MlpEngine::with_path(model, Nonlin::Relu, EnginePath::Packed).unwrap();
+        let packed = MlpEngine::with_path_layout(model, Nonlin::Relu, EnginePath::Packed,
+                                                 PackedLayout::from_env())
+            .unwrap();
         let out_budget = 1 + packed.out_dim() / 50; // sign-tie outlier budget
         for s in 0..4 {
             let x = rng.normal_vec(reference.in_dim(), 1.0);
@@ -114,7 +120,9 @@ fn packed_matches_reference_without_relu() {
         let model = random_model(&mut rng);
         let reference =
             MlpEngine::with_path(model.clone(), Nonlin::None, EnginePath::Reference).unwrap();
-        let packed = MlpEngine::with_path(model, Nonlin::None, EnginePath::Packed).unwrap();
+        let packed = MlpEngine::with_path_layout(model, Nonlin::None, EnginePath::Packed,
+                                                 PackedLayout::from_env())
+            .unwrap();
         let x = rng.normal_vec(reference.in_dim(), 1.0);
         let budget = 1 + packed.out_dim() / 50;
         assert_close(&reference.forward_quantized(&x), &packed.forward(&x), budget,
@@ -154,7 +162,9 @@ fn packed_handles_ragged_widths_and_split_alpha_runs() {
     let model = TbnzModel { layers: vec![layer0, layer1] };
     let reference =
         MlpEngine::with_path(model.clone(), Nonlin::Relu, EnginePath::Reference).unwrap();
-    let packed = MlpEngine::with_path(model, Nonlin::Relu, EnginePath::Packed).unwrap();
+    let packed = MlpEngine::with_path_layout(model, Nonlin::Relu, EnginePath::Packed,
+                                             PackedLayout::from_env())
+        .unwrap();
     for s in 0..8 {
         let mut r = Rng::new(900 + s);
         let x = r.normal_vec(33, 1.0);
@@ -276,7 +286,9 @@ fn classify_agrees_between_paths_on_separable_inputs() {
     };
     let reference =
         MlpEngine::with_path(model.clone(), Nonlin::Relu, EnginePath::Reference).unwrap();
-    let packed = MlpEngine::with_path(model, Nonlin::Relu, EnginePath::Packed).unwrap();
+    let packed = MlpEngine::with_path_layout(model, Nonlin::Relu, EnginePath::Packed,
+                                             PackedLayout::from_env())
+        .unwrap();
     let n = 64;
     let mut agree = 0usize;
     for _ in 0..n {

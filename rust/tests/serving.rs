@@ -10,8 +10,10 @@
 use std::sync::Arc;
 use std::time::Duration;
 
+use tiledbits::arch;
 use tiledbits::config::Manifest;
-use tiledbits::nn::{EnginePath, MlpEngine, Nonlin, PackedLayout};
+use tiledbits::nn::{lower_arch_spec, Engine, EnginePath, LowerOptions, MlpEngine,
+                    Nonlin, PackedLayout};
 use tiledbits::runtime::Runtime;
 use tiledbits::serve::{BatchPolicy, Server};
 use tiledbits::tbn::{alphas_from, tile_from_weights, AlphaMode, LayerRecord,
@@ -266,6 +268,40 @@ fn serving_reports_latency_percentiles() {
     assert!(p.p50_us <= p.p95_us && p.p95_us <= p.p99_us,
             "tail ordering violated: {p:?}");
     assert!(p.p99_us <= stats.max_latency_us);
+}
+
+/// A branching layer-graph engine (residual joins) serves directly behind
+/// the pool: lowered ResNet-style graphs answer bit-identically to direct
+/// batched inference on the packed path.
+#[test]
+fn pool_serves_branching_graph_engine() {
+    let spec = arch::resnet_micro();
+    let lopts = LowerOptions {
+        input: (3, 7, 7),
+        p: 4,
+        alpha_mode: AlphaMode::PerTile,
+        seed: 31,
+    };
+    let graph = lower_arch_spec(&spec, &lopts).unwrap();
+    // default layout through the TBN_LAYOUT env hook, so the CI expanded
+    // leg serves a branching graph under the expanded layout too
+    let engine = Arc::new(
+        Engine::with_layout_graph(graph, Nonlin::Relu, EnginePath::Packed,
+                                  PackedLayout::from_env())
+            .unwrap());
+    let mut r = Rng::new(32);
+    let xs: Vec<Vec<f32>> = (0..24).map(|_| r.normal_vec(3 * 7 * 7, 1.0)).collect();
+    let direct: Vec<Vec<f32>> = xs.iter().map(|x| engine.forward(x)).collect();
+    let server = Server::start_pool(
+        engine,
+        BatchPolicy { max_batch: 4, window: Duration::from_micros(200) },
+        2,
+    );
+    for (x, want) in xs.iter().zip(&direct) {
+        let got = server.infer(x.clone()).unwrap();
+        assert_eq!(&got.y, want, "served branching graph must equal direct forward");
+    }
+    assert_eq!(server.stats().served, xs.len());
 }
 
 /// The serve stack returns identical outputs under both packed weight
