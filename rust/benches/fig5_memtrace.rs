@@ -67,13 +67,17 @@ fn main() {
     // how many distinct u64 weight words each binarized layer touches per
     // forward under the expanded rows vs the tile-resident layout (the
     // total word *reads* are identical; residency is the delta).  The list
-    // now includes a branching graph — resnet_micro's residual joins are
-    // weightless, so the trace covers exactly the weight nodes.
-    for (name, spec, input) in [
-        ("cnn_micro", arch::cnn_micro(), (3usize, 16usize, 16usize)),
-        ("resnet_micro", arch::resnet_micro(), (3, 7, 7)),
-        ("vgg_small_cifar", arch::vgg_small_cifar(), (3, 32, 32)),
+    // includes a branching graph (resnet_micro) and two transformer
+    // encoders (vit_micro, tst_weather) — joins, layer norms and attention
+    // are weightless, so the trace covers exactly the weight nodes.
+    for (name, spec) in [
+        ("cnn_micro", arch::cnn_micro()),
+        ("resnet_micro", arch::resnet_micro()),
+        ("vgg_small_cifar", arch::vgg_small_cifar()),
+        ("vit_micro", arch::vit_micro()),
+        ("tst_weather", arch::tst_weather()),
     ] {
+        let input = spec.native_input().expect("first-layer input shape");
         let opts = LowerOptions { input, p: 4, alpha_mode: AlphaMode::PerTile, seed: 5 };
         let graph = lower_arch_spec(&spec, &opts).expect("lowerable paper spec");
         let expanded = Engine::with_layout_graph(graph.clone(), Nonlin::Relu,

@@ -1,8 +1,11 @@
 //! Table 4: Vision Transformers (ViT / Swin-t) — analytic columns on the
-//! full-size specs, measured accuracy on the ViT-tiny mini.
+//! full-size specs, native transformer lowering/forward stats (attention
+//! joins, expanded-vs-tile packed residency), measured accuracy on the
+//! ViT-tiny mini.
 
 use tiledbits::arch;
-use tiledbits::bench_util::{bench_dirs, bench_steps, header};
+use tiledbits::bench_util::{bench_dirs, bench_steps, header,
+                            print_native_lowering_stats};
 use tiledbits::config::Manifest;
 use tiledbits::coordinator::run_or_load;
 use tiledbits::runtime::Runtime;
@@ -25,6 +28,15 @@ fn main() {
     }
     println!("paper: ViT TBN_4 0.253/2.40, TBN_8 0.129/1.22; Swin-t TBN_4 0.259/6.88,");
     println!("       TBN_8 0.135/3.61; Swin-t ImageNet TBN_2 0.534/14.7");
+
+    // native transformer execution (the tentpole): ViT lowers to a pre-LN
+    // attention graph and runs on the tile-resident packed engine; Swin
+    // stays rejected (shifted windows have no native node yet)
+    println!("\n-- native layer-graph lowering (attention joins, packed residency) --");
+    print_native_lowering_stats(&arch::vit_micro());
+    print_native_lowering_stats(&arch::vit_cifar());
+    print_native_lowering_stats(&arch::mlpmixer_cifar());
+    print_native_lowering_stats(&arch::swin_t());
 
     let (artifacts, runs) = bench_dirs();
     let steps = bench_steps(60);

@@ -1,7 +1,11 @@
 //! Table 5: multivariate time-series forecasting MSE (electricity + weather
-//! stand-ins), averaged over seeds with std, exactly the paper's protocol.
+//! stand-ins), averaged over seeds with std, exactly the paper's protocol;
+//! plus the native TST encoder lowering/forward stats and the
+//! expanded-vs-tile packed residency delta.
 
-use tiledbits::bench_util::{bench_dirs, bench_steps, header};
+use tiledbits::arch;
+use tiledbits::bench_util::{bench_dirs, bench_steps, header,
+                            print_native_lowering_stats};
 use tiledbits::config::Manifest;
 use tiledbits::coordinator::run_experiment;
 use tiledbits::runtime::Runtime;
@@ -10,6 +14,14 @@ use tiledbits::util::mean_std;
 
 fn main() {
     header("Table 5: time-series forecasting (MSE over seeds)");
+
+    // native TST execution (the tentpole): both Table 5 encoders lower to
+    // pre-LN attention graphs and run on the tile-resident packed engine
+    println!("\n-- native layer-graph lowering (attention joins, packed residency) --");
+    print_native_lowering_stats(&arch::tst_micro());
+    print_native_lowering_stats(&arch::tst_weather());
+    print_native_lowering_stats(&arch::tst_electricity());
+
     let (artifacts, _) = bench_dirs();
     let steps = bench_steps(60);
     let seeds: usize = std::env::var("TBN_SEEDS").ok()

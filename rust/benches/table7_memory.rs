@@ -57,21 +57,30 @@ fn main() {
     // layout on the natively-lowered paper architectures (binarized layers
     // only differ; the entry layer stays a reference tile on both).  Since
     // the DAG lowering, the list includes the branching Table 1 / Table 3
-    // architectures: ResNet18/50 (residual joins) and PointNet-cls
-    // (T-Nets) lower natively.
+    // architectures — ResNet18/50 (residual joins) and PointNet-cls
+    // (T-Nets) — and, since the transformer nodes, the Table 4/5 encoders
+    // (ViT, TST, MLP-Mixer): attention/LayerNorm run weightless f32, so
+    // the residency delta is carried entirely by the tiled projections.
     println!("\n-- packed weight residency: expanded vs tile-resident (measured) --");
     println!("{:22} {:>14} {:>14} {:>8}", "architecture", "expanded B",
              "tile-resident B", "ratio");
-    let specs: [(&str, arch::ArchSpec, (usize, usize, usize)); 7] = [
-        ("cnn_micro", arch::cnn_micro(), (3, 16, 16)),
-        ("pointnet_micro", arch::pointnet_micro(), (3, 64, 1)),
-        ("vgg_small_cifar", arch::vgg_small_cifar(), (3, 32, 32)),
-        ("convmixer_cifar", arch::convmixer_cifar(), (3, 32, 32)),
-        ("resnet18_cifar", arch::resnet18_cifar(), (3, 32, 32)),
-        ("resnet50_cifar", arch::resnet50_cifar(), (3, 32, 32)),
-        ("pointnet_cls", arch::pointnet_cls(), (3, 1024, 1)),
+    let specs: [(&str, arch::ArchSpec); 11] = [
+        ("cnn_micro", arch::cnn_micro()),
+        ("pointnet_micro", arch::pointnet_micro()),
+        ("vgg_small_cifar", arch::vgg_small_cifar()),
+        ("convmixer_cifar", arch::convmixer_cifar()),
+        ("resnet18_cifar", arch::resnet18_cifar()),
+        ("resnet50_cifar", arch::resnet50_cifar()),
+        ("pointnet_cls", arch::pointnet_cls()),
+        ("vit_cifar", arch::vit_cifar()),
+        ("tst_electricity", arch::tst_electricity()),
+        ("tst_weather", arch::tst_weather()),
+        ("mlpmixer_cifar", arch::mlpmixer_cifar()),
     ];
-    for (name, spec, input) in specs {
+    for (name, spec) in specs {
+        // input shape derived from the spec itself, so the list cannot
+        // drift if a spec's tokens/patch geometry changes
+        let input = spec.native_input().expect("first-layer input shape");
         let opts = LowerOptions { input, p: 4, alpha_mode: AlphaMode::PerTile, seed: 9 };
         let graph = match lower_arch_spec(&spec, &opts) {
             Ok(g) => g,

@@ -26,12 +26,22 @@ pub enum Kind {
     Other,
 }
 
+/// Which projection of a transformer encoder attention sub-block a layer is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AttnPart {
+    Q,
+    K,
+    V,
+    /// The output projection applied to the attention context.
+    O,
+}
+
 /// Block-boundary annotation marking the branching construct a layer belongs
 /// to.  Plain sequential layers carry no annotation; `nn::lower_arch_spec`
 /// uses consecutive runs of equal `id`s to rebuild the graph edges the flat
 /// `Vec<LayerSpec>` cannot express (ResNet skip connections, PointNet T-Net
-/// subgraphs).  The annotations change nothing about the analytic
-/// accounting — params/MACs stay per-layer sums.
+/// subgraphs, transformer encoder sub-blocks).  The annotations change
+/// nothing about the analytic accounting — params/MACs stay per-layer sums.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum BlockRole {
     /// Residual-block body layer.  The activation entering the block's first
@@ -46,6 +56,23 @@ pub enum BlockRole {
     /// the transform left-multiplies the features it branched from
     /// (`MatMulFeature`).
     Tnet { id: String, k: usize },
+    /// Transformer encoder attention sub-block projection: the four
+    /// consecutive `AttnProj` layers of one `id` (Q, K, V, O in order)
+    /// lower pre-LN to `LayerNorm -> Q/K/V token-FCs -> Attention -> O
+    /// token-FC -> Add` (residual join, stream stays linear).
+    AttnProj { id: String, heads: usize, part: AttnPart },
+    /// Transformer / mixer MLP sub-block: two consecutive `MlpBody` layers
+    /// (fc1 then fc2) lower pre-LN to `LayerNorm -> fc1 (ReLU) -> fc2 ->
+    /// Add`.
+    MlpBody { id: String },
+    /// MLP-Mixer token-mixing MLP: two consecutive `TokenMix` layers lower
+    /// pre-LN and *transposed* to `LayerNorm -> Transpose -> fc1 (ReLU) ->
+    /// fc2 -> Transpose -> Add`, so the FCs mix the token axis.
+    TokenMix { id: String },
+    /// A construct the native engine has no graph node for (Swin shifted
+    /// windows, MobileViT unfold/fold): `nn::lower_arch_spec` fails with an
+    /// error naming it.
+    Unsupported { id: String, construct: String },
 }
 
 impl BlockRole {
@@ -54,7 +81,11 @@ impl BlockRole {
         match self {
             BlockRole::ResidualBody { id }
             | BlockRole::ResidualDown { id }
-            | BlockRole::Tnet { id, .. } => id,
+            | BlockRole::Tnet { id, .. }
+            | BlockRole::AttnProj { id, .. }
+            | BlockRole::MlpBody { id }
+            | BlockRole::TokenMix { id }
+            | BlockRole::Unsupported { id, .. } => id,
         }
     }
 }
@@ -174,6 +205,32 @@ impl ArchSpec {
         let total = (self.conv_params() + self.fc_params()).max(1);
         self.fc_params() as f64 / total as f64
     }
+
+    /// Native lowering input `(channels, height, width)` implied by the
+    /// first weight layer: a conv stem reads a square `ci x s x s` image, a
+    /// token FC a channel-major `(ci, tokens, 1)` token map.  `None` when
+    /// the first weight layer's input shape cannot be reconstructed (the
+    /// benches and `tbn serve --arch` feed this to `nn::LowerOptions`).
+    pub fn native_input(&self) -> Option<(usize, usize, usize)> {
+        let l = self.layers.iter().find(|l| l.is_conv() || l.is_fc())?;
+        match l.kind {
+            Kind::Conv { ci, .. } => {
+                if ci == 0 || l.in_act % ci != 0 {
+                    return None;
+                }
+                let area = l.in_act / ci;
+                let s = (area as f64).sqrt().round() as usize;
+                (s * s == area).then_some((ci, s, s))
+            }
+            Kind::Fc { ci, .. } => {
+                if ci == 0 || l.in_act == 0 || l.in_act % ci != 0 {
+                    return None;
+                }
+                Some((ci, l.in_act / ci, 1))
+            }
+            Kind::Other => None,
+        }
+    }
 }
 
 /// All architectures that appear in the paper's evaluation.
@@ -199,6 +256,29 @@ pub fn all_archs() -> Vec<ArchSpec> {
 
 pub fn arch_by_name(name: &str) -> Option<ArchSpec> {
     all_archs().into_iter().find(|a| a.name == name)
+}
+
+/// The native-engine demo minis (not paper architectures; kept out of
+/// [`all_archs`] so the analytic tables stay paper-only).
+pub fn mini_archs() -> Vec<ArchSpec> {
+    vec![
+        cnn_micro(),
+        pointnet_micro(),
+        resnet_micro(),
+        pointnet_tnet_micro(),
+        vit_micro(),
+        tst_micro(),
+        mixer_micro(),
+    ]
+}
+
+/// Look up a paper architecture *or* demo mini by name (what
+/// `tbn serve --arch` accepts).
+pub fn any_arch_by_name(name: &str) -> Option<ArchSpec> {
+    all_archs()
+        .into_iter()
+        .chain(mini_archs())
+        .find(|a| a.name == name)
 }
 
 #[cfg(test)]
@@ -299,5 +379,79 @@ mod tests {
         assert!(ks[..6].iter().all(|&k| k == 3));
         assert!(ks[6..].iter().all(|&k| k == 64));
         assert_eq!(pn.layers[0].block.as_ref().unwrap().id(), "tnet3");
+    }
+
+    /// Transformer annotations: each ViT/TST encoder block carries Q, K, V,
+    /// O attention projections (in order, consistent heads) and an MLP
+    /// pair; Swin/MobileViT attention is tagged `Unsupported`; the mixer's
+    /// token MLPs are `TokenMix` pairs.
+    #[test]
+    fn encoder_annotations_group_blocks() {
+        for (spec, depth, heads) in [(vit_cifar(), 6usize, 8usize),
+                                     (vit_small_imagenet(), 6, 8),
+                                     (tst_electricity(), 2, 8),
+                                     (tst_weather(), 2, 8),
+                                     (vit_micro(), 2, 4),
+                                     (tst_micro(), 2, 3)] {
+            let parts: Vec<AttnPart> = spec
+                .layers
+                .iter()
+                .filter_map(|l| match &l.block {
+                    Some(BlockRole::AttnProj { heads: h, part, .. }) => {
+                        assert_eq!(*h, heads, "{}", spec.name);
+                        Some(*part)
+                    }
+                    _ => None,
+                })
+                .collect();
+            assert_eq!(parts.len(), 4 * depth, "{}", spec.name);
+            for blk in parts.chunks(4) {
+                assert_eq!(blk, [AttnPart::Q, AttnPart::K, AttnPart::V, AttnPart::O],
+                           "{}", spec.name);
+            }
+            let mlps = spec
+                .layers
+                .iter()
+                .filter(|l| matches!(&l.block, Some(BlockRole::MlpBody { .. })))
+                .count();
+            assert_eq!(mlps, 2 * depth, "{}", spec.name);
+            assert!(spec.layers[0].block.is_none(), "{}: embed is trunk", spec.name);
+            assert!(spec.layers.last().unwrap().block.is_none(),
+                    "{}: head is trunk", spec.name);
+        }
+        for spec in [swin_t(), mobilevit()] {
+            assert!(
+                spec.layers.iter().any(|l| matches!(
+                    &l.block, Some(BlockRole::Unsupported { .. }))),
+                "{}: attention must be tagged unsupported", spec.name
+            );
+        }
+        let mixer = mlpmixer_cifar();
+        let tok = mixer
+            .layers
+            .iter()
+            .filter(|l| matches!(&l.block, Some(BlockRole::TokenMix { .. })))
+            .count();
+        let ch = mixer
+            .layers
+            .iter()
+            .filter(|l| matches!(&l.block, Some(BlockRole::MlpBody { .. })))
+            .count();
+        assert_eq!((tok, ch), (12, 12), "6 blocks x (2 token + 2 channel) FCs");
+    }
+
+    #[test]
+    fn native_input_reconstructs_first_layer_shape() {
+        let cases = [
+            ("resnet18_cifar", resnet18_cifar(), (3, 32, 32)),
+            ("vit_cifar", vit_cifar(), (48, 64, 1)),
+            ("pointnet_cls", pointnet_cls(), (3, 1024, 1)),
+            ("tst_weather", tst_weather(), (7, 96, 1)),
+            ("vit_micro", vit_micro(), (12, 10, 1)),
+            ("mixer_micro", mixer_micro(), (6, 9, 1)),
+        ];
+        for (name, spec, want) in cases {
+            assert_eq!(spec.native_input(), Some(want), "{name}");
+        }
     }
 }

@@ -4,7 +4,7 @@
 //! annotations so `nn::lower_arch_spec` can rebuild the graph edges from
 //! the flat layer list; the analytic accounting ignores them.
 
-use super::{ArchSpec, BlockRole, LayerSpec};
+use super::{ArchSpec, AttnPart, BlockRole, LayerSpec};
 
 // ---------------------------------------------------------------------------
 // ResNets
@@ -118,38 +118,67 @@ pub fn vgg_small_cifar() -> ArchSpec {
 // Transformers
 // ---------------------------------------------------------------------------
 
+/// How [`encoder_blocks`] tags its layers for the native graph lowering.
+enum EncoderTag<'a> {
+    /// Standard multi-head self-attention with this many heads: the blocks
+    /// lower natively (pre-LN `LayerNorm`/`Attention` nodes, linear
+    /// residual joins).
+    Native { heads: usize },
+    /// An attention variant the engine has no node for (Swin shifted
+    /// windows, MobileViT unfold/fold): lowering fails naming it.
+    Unsupported(&'a str),
+}
+
 /// Standard encoder stack: qkv + proj + 2-layer MLP per block, FC applied
-/// across `tokens` positions.
+/// across `tokens` positions, annotated for `nn::lower_arch_spec` per
+/// `tag` (the analytic accounting ignores the tags).
 fn encoder_blocks(layers: &mut Vec<LayerSpec>, depth: usize, dim: usize,
-                  mlp: usize, tokens: usize) {
+                  mlp: usize, tokens: usize, tag: &EncoderTag) {
     for d in 0..depth {
         let pre = format!("blk{d}");
-        layers.push(LayerSpec::fc_tok(&format!("{pre}.wq"), dim, dim, tokens));
-        layers.push(LayerSpec::fc_tok(&format!("{pre}.wk"), dim, dim, tokens));
-        layers.push(LayerSpec::fc_tok(&format!("{pre}.wv"), dim, dim, tokens));
-        layers.push(LayerSpec::fc_tok(&format!("{pre}.wo"), dim, dim, tokens));
-        layers.push(LayerSpec::fc_tok(&format!("{pre}.mlp.fc1"), dim, mlp, tokens));
-        layers.push(LayerSpec::fc_tok(&format!("{pre}.mlp.fc2"), mlp, dim, tokens));
+        let attn = |part: AttnPart| match tag {
+            EncoderTag::Native { heads } => BlockRole::AttnProj {
+                id: format!("{pre}.attn"), heads: *heads, part },
+            EncoderTag::Unsupported(c) => BlockRole::Unsupported {
+                id: format!("{pre}.attn"), construct: (*c).into() },
+        };
+        let mlp_role = || BlockRole::MlpBody { id: format!("{pre}.mlp") };
+        layers.push(LayerSpec::fc_tok(&format!("{pre}.wq"), dim, dim, tokens)
+            .in_block(attn(AttnPart::Q)));
+        layers.push(LayerSpec::fc_tok(&format!("{pre}.wk"), dim, dim, tokens)
+            .in_block(attn(AttnPart::K)));
+        layers.push(LayerSpec::fc_tok(&format!("{pre}.wv"), dim, dim, tokens)
+            .in_block(attn(AttnPart::V)));
+        layers.push(LayerSpec::fc_tok(&format!("{pre}.wo"), dim, dim, tokens)
+            .in_block(attn(AttnPart::O)));
+        layers.push(LayerSpec::fc_tok(&format!("{pre}.mlp.fc1"), dim, mlp, tokens)
+            .in_block(mlp_role()));
+        layers.push(LayerSpec::fc_tok(&format!("{pre}.mlp.fc2"), mlp, dim, tokens)
+            .in_block(mlp_role()));
     }
 }
 
 /// ViT trained on CIFAR-10 (Table 4): patch 4, dim 512, depth 6, mlp 512.
+/// The pos-embed record sits right after the patch embedding (where the
+/// lowering turns it into a `PosEmbedAdd` node); 8 heads (head dim 64).
 pub fn vit_cifar() -> ArchSpec {
-    let (dim, depth, mlp, tokens) = (512, 6, 512, 64);
+    let (dim, depth, mlp, tokens, heads) = (512, 6, 512, 64, 8);
     let mut layers = vec![LayerSpec::fc_tok("patch_embed", 3 * 4 * 4, dim, tokens)];
-    encoder_blocks(&mut layers, depth, dim, mlp, tokens);
     layers.push(LayerSpec::other("pos_embed", tokens * dim));
+    encoder_blocks(&mut layers, depth, dim, mlp, tokens,
+                   &EncoderTag::Native { heads });
     layers.push(LayerSpec::fc("head", dim, 10));
     ArchSpec { name: "vit_cifar".into(), layers }
 }
 
 /// ImageNet ViT (Small) used in Table 7 / Fig 5: ~52M params, six ~8.4M
-/// attention blocks (dim 832, mlp ratio 4, patch 16 on 224).
+/// attention blocks (dim 832, mlp ratio 4, patch 16 on 224), 8 heads.
 pub fn vit_small_imagenet() -> ArchSpec {
-    let (dim, depth, tokens) = (832, 6, 196);
+    let (dim, depth, tokens, heads) = (832, 6, 196, 8);
     let mut layers = vec![LayerSpec::fc_tok("patch_embed", 3 * 16 * 16, dim, tokens)];
-    encoder_blocks(&mut layers, depth, dim, 4 * dim, tokens);
     layers.push(LayerSpec::other("pos_embed", tokens * dim));
+    encoder_blocks(&mut layers, depth, dim, 4 * dim, tokens,
+                   &EncoderTag::Native { heads });
     layers.push(LayerSpec::fc("head", dim, 1000));
     ArchSpec { name: "vit_small_imagenet".into(), layers }
 }
@@ -162,7 +191,8 @@ pub fn swin_t() -> ArchSpec {
     let mut layers = vec![LayerSpec::fc_tok("patch_embed", 3 * 4 * 4, dims[0], tokens[0])];
     for s in 0..4 {
         let mut stage = Vec::new();
-        encoder_blocks(&mut stage, depths[s], dims[s], 4 * dims[s], tokens[s]);
+        encoder_blocks(&mut stage, depths[s], dims[s], 4 * dims[s], tokens[s],
+                       &EncoderTag::Unsupported("Swin shifted-window attention"));
         for mut l in stage {
             l.name = format!("st{s}.{}", l.name);
             layers.push(l);
@@ -187,9 +217,10 @@ pub fn mobilevit() -> ArchSpec {
         LayerSpec::conv("mv2_3", 96, 128, 3, 16, 16, 32, 32),
         LayerSpec::conv("mv2_4", 128, 160, 3, 8, 8, 16, 16),
     ];
-    encoder_blocks(&mut layers, 2, 144, 288, 256);
-    encoder_blocks(&mut layers, 4, 192, 384, 64);
-    encoder_blocks(&mut layers, 3, 240, 480, 16);
+    let fold = EncoderTag::Unsupported("MobileViT unfold/fold attention");
+    encoder_blocks(&mut layers, 2, 144, 288, 256, &fold);
+    encoder_blocks(&mut layers, 4, 192, 384, 64, &fold);
+    encoder_blocks(&mut layers, 3, 240, 480, 16, &fold);
     layers.push(LayerSpec::conv("proj", 160, 640, 1, 8, 8, 8, 8));
     layers.push(LayerSpec::fc("head", 640, 1000));
     ArchSpec { name: "mobilevit".into(), layers }
@@ -264,17 +295,30 @@ pub fn pointnet_sem_seg() -> ArchSpec {
 // Mixers (Figure 6 ablation architectures)
 // ---------------------------------------------------------------------------
 
+/// Mixer block pair-annotations: token-mixing MLPs lower transposed
+/// (`BlockRole::TokenMix`), channel MLPs as plain pre-LN MLP sub-blocks.
+fn mixer_blocks(layers: &mut Vec<LayerSpec>, depth: usize, dim: usize,
+                tokens: usize, tok_h: usize, ch_h: usize) {
+    for d in 0..depth {
+        let pre = format!("blk{d}");
+        let tok = || BlockRole::TokenMix { id: format!("{pre}.tok") };
+        let ch = || BlockRole::MlpBody { id: format!("{pre}.ch") };
+        layers.push(LayerSpec::fc_tok(&format!("{pre}.tok.fc1"), tokens, tok_h, dim)
+            .in_block(tok()));
+        layers.push(LayerSpec::fc_tok(&format!("{pre}.tok.fc2"), tok_h, tokens, dim)
+            .in_block(tok()));
+        layers.push(LayerSpec::fc_tok(&format!("{pre}.ch.fc1"), dim, ch_h, tokens)
+            .in_block(ch()));
+        layers.push(LayerSpec::fc_tok(&format!("{pre}.ch.fc2"), ch_h, dim, tokens)
+            .in_block(ch()));
+    }
+}
+
 /// MLPMixer whose largest layers are 131k elements (512x256), per Fig 6.
 pub fn mlpmixer_cifar() -> ArchSpec {
     let (dim, depth, tokens, tok_h, ch_h) = (512, 6, 64, 64, 256);
     let mut layers = vec![LayerSpec::fc_tok("patch_embed", 3 * 4 * 4, dim, tokens)];
-    for d in 0..depth {
-        let pre = format!("blk{d}");
-        layers.push(LayerSpec::fc_tok(&format!("{pre}.tok.fc1"), tokens, tok_h, dim));
-        layers.push(LayerSpec::fc_tok(&format!("{pre}.tok.fc2"), tok_h, tokens, dim));
-        layers.push(LayerSpec::fc_tok(&format!("{pre}.ch.fc1"), dim, ch_h, tokens));
-        layers.push(LayerSpec::fc_tok(&format!("{pre}.ch.fc2"), ch_h, dim, tokens));
-    }
+    mixer_blocks(&mut layers, depth, dim, tokens, tok_h, ch_h);
     layers.push(LayerSpec::fc("head", dim, 10));
     ArchSpec { name: "mlpmixer_cifar".into(), layers }
 }
@@ -375,22 +419,59 @@ pub fn pointnet_tnet_micro() -> ArchSpec {
     }
 }
 
+/// ViT mini for the native transformer engine: ragged dims everywhere
+/// (dim 20 with 4 heads -> head dim 5; 10 tokens; neither a multiple of
+/// 64), a learned pos-embed after the patch embedding, and two pre-LN
+/// encoder blocks.  `tests/transformer_parity.rs` runs it end-to-end on
+/// every path, and CI's `TBN_LAYOUT` matrix covers both packed layouts.
+pub fn vit_micro() -> ArchSpec {
+    let (dim, depth, mlp, tokens, heads) = (20, 2, 28, 10, 4);
+    let mut layers = vec![LayerSpec::fc_tok("patch_embed", 12, dim, tokens)];
+    layers.push(LayerSpec::other("pos_embed", tokens * dim));
+    encoder_blocks(&mut layers, depth, dim, mlp, tokens,
+                   &EncoderTag::Native { heads });
+    layers.push(LayerSpec::fc("head", dim, 6));
+    ArchSpec { name: "vit_micro".into(), layers }
+}
+
+/// Time-series Transformer mini: 5 input channels projected to dim 12 over
+/// a 9-step window, two encoder blocks with 3 heads (head dim 4), per-step
+/// forecast head after the token mean pool.
+pub fn tst_micro() -> ArchSpec {
+    let (dim, depth, mlp, seq, ch, heads) = (12, 2, 20, 9, 5, 3);
+    let mut layers = vec![LayerSpec::fc_tok("in_proj", ch, dim, seq)];
+    encoder_blocks(&mut layers, depth, dim, mlp, seq, &EncoderTag::Native { heads });
+    layers.push(LayerSpec::fc("head", dim, ch));
+    ArchSpec { name: "tst_micro".into(), layers }
+}
+
+/// MLP-Mixer mini: token-mixing MLPs run transposed through the native
+/// `Transpose` node; the token-MLP hidden width (12) differs from the
+/// token count (9) so the transposed shapes are actually exercised.
+pub fn mixer_micro() -> ArchSpec {
+    let (dim, depth, tokens, tok_h, ch_h) = (16, 2, 9, 12, 24);
+    let mut layers = vec![LayerSpec::fc_tok("patch_embed", 6, dim, tokens)];
+    mixer_blocks(&mut layers, depth, dim, tokens, tok_h, ch_h);
+    layers.push(LayerSpec::fc("head", dim, 4));
+    ArchSpec { name: "mixer_micro".into(), layers }
+}
+
 // ---------------------------------------------------------------------------
 // Time-series Transformers (Table 5)
 // ---------------------------------------------------------------------------
 
 pub fn tst_electricity() -> ArchSpec {
-    let (dim, depth, mlp, seq, ch) = (512, 2, 1024, 96, 321);
+    let (dim, depth, mlp, seq, ch, heads) = (512, 2, 1024, 96, 321, 8);
     let mut layers = vec![LayerSpec::fc_tok("in_proj", ch, dim, seq)];
-    encoder_blocks(&mut layers, depth, dim, mlp, seq);
+    encoder_blocks(&mut layers, depth, dim, mlp, seq, &EncoderTag::Native { heads });
     layers.push(LayerSpec::fc("head", dim, ch));
     ArchSpec { name: "tst_electricity".into(), layers }
 }
 
 pub fn tst_weather() -> ArchSpec {
-    let (dim, depth, mlp, seq, ch) = (128, 2, 448, 96, 7);
+    let (dim, depth, mlp, seq, ch, heads) = (128, 2, 448, 96, 7, 8);
     let mut layers = vec![LayerSpec::fc_tok("in_proj", ch, dim, seq)];
-    encoder_blocks(&mut layers, depth, dim, mlp, seq);
+    encoder_blocks(&mut layers, depth, dim, mlp, seq, &EncoderTag::Native { heads });
     layers.push(LayerSpec::fc("head", dim, ch));
     ArchSpec { name: "tst_weather".into(), layers }
 }

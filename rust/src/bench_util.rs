@@ -86,6 +86,54 @@ pub fn bench_steps(default: usize) -> usize {
         .unwrap_or(default)
 }
 
+/// Lower a spec natively and print one stat line: graph shape (attention /
+/// join counts), the expanded-vs-tile-resident packed residency delta, and
+/// the time of one packed tile-resident forward — the per-arch treatment
+/// the transformer benches (`table4_vit` / `table5_timeseries`) share,
+/// mirroring what `table1`/`table3` print for the CNN/PointNet graphs.
+pub fn print_native_lowering_stats(spec: &crate::arch::ArchSpec) {
+    use crate::nn::{lower_arch_spec, Engine, EnginePath, LowerOptions, Node, Nonlin,
+                    PackedLayout};
+    use crate::tbn::AlphaMode;
+    let Some(input) = spec.native_input() else {
+        println!("{:18} (no native input shape)", spec.name);
+        return;
+    };
+    let opts = LowerOptions { input, p: 4, alpha_mode: AlphaMode::PerTile, seed: 3 };
+    match lower_arch_spec(spec, &opts) {
+        Ok(graph) => {
+            let attn = graph
+                .nodes
+                .iter()
+                .filter(|gn| matches!(gn.node, Node::Attention { .. }))
+                .count();
+            let joins = graph.nodes.iter().filter(|gn| gn.node.is_join()).count();
+            let n_nodes = graph.len();
+            let expanded = Engine::with_layout_graph(graph.clone(), Nonlin::Relu,
+                                                     EnginePath::Packed,
+                                                     PackedLayout::Expanded)
+                .expect("lowered graph builds");
+            let tile = Engine::with_layout_graph(graph, Nonlin::Relu,
+                                                 EnginePath::Packed,
+                                                 PackedLayout::TileResident)
+                .expect("lowered graph builds");
+            let (eb, tb) = (expanded.resident_weight_bytes(),
+                            tile.resident_weight_bytes());
+            let mut rng = crate::util::Rng::new(4);
+            let x = rng.normal_vec(tile.in_len(), 1.0);
+            let t0 = Instant::now();
+            let y = tile.forward(&x);
+            let dt = t0.elapsed().as_secs_f64();
+            std::hint::black_box(y);
+            println!("{:18} {n_nodes:3} nodes  {attn:2} attention  {joins:2} joins  \
+                      packed resident: {eb:>11} B expanded / {tb:>9} B tile \
+                      ({:.1}x)  fwd {}",
+                     spec.name, eb as f64 / tb.max(1) as f64, fmt_time(dt));
+        }
+        Err(e) => println!("{:18} not lowerable: {e}", spec.name),
+    }
+}
+
 /// Shared bench entry boilerplate: artifacts + runs dirs. Defaults resolve
 /// upwards (benches run with `rust/` as cwd; assets live at the repo root).
 pub fn bench_dirs() -> (String, String) {

@@ -76,16 +76,24 @@ COMMANDS:
   report                    render all analytic tables (T2, T7, F2) + cached runs
   export <exp_id>           train (or reuse) and write the TBNZ model file
   serve <exp_id>            start the native serving demo on a trained model
+  serve --arch <name>       serve a natively-lowered architecture instead
+                            (synthesized weights, no artifacts needed): any
+                            spec the graph lowering accepts — CNNs, ResNets,
+                            PointNets, and the transformers vit_cifar /
+                            tst_electricity / tst_weather / mlpmixer_cifar
+                            plus the vit_micro / tst_micro / mixer_micro minis
 
 OPTIONS:
   --artifacts <dir>         artifact directory            [default: artifacts]
   --runs <dir>              run-record directory          [default: runs]
   --steps <n>               override training step count
   --eval-every <n>          evaluation period             [default: 100]
-  --seed <n>                override the experiment seed
+  --seed <n>                override the experiment seed (or lowering seed)
   --out <path>              output path (export)
   --engine <path>           serve engine: packed|packed-int8|reference
                                                           [default: packed]
+  --p <n>                   tiles per layer for serve --arch [default: 4]
+  --requests <n>            demo request count for serve --arch [default: 64]
   --layout <layout>         packed weight layout: tile|expanded (A/B)
                                         [default: tile, or $TBN_LAYOUT if set]
   --workers <n>             serve worker threads          [default: 2]

@@ -22,18 +22,27 @@
 //! The native engine is a **layer DAG**: `nn::Engine` executes an
 //! `nn::Graph` of typed nodes (`nn::layers::Node`) — `Fc`, `Conv2d` (im2col
 //! over the same bit kernels as FC, incl. grouped/depthwise), `Pool2d`,
-//! `GlobalPool`, `Flatten`, plus the two-input join nodes `Add` (residual
-//! skip) and `MatMulFeature` (PointNet T-Net feature transform) — with a
-//! value-table walker: activations are addressable by node id and freed
-//! after their last consumer.  `nn::lower_arch_spec` turns `arch::models`
-//! specs into runnable graphs: sequential CNN stacks (`vgg_small_cifar`,
-//! `convmixer_cifar`, the minis, PointNet-style shared-MLP token convs)
-//! *and* the annotated branching architectures — `resnet18_cifar` /
-//! `resnet50_cifar` residual graphs (identity + 1x1-projection skips, ReLU
-//! after the join) and `pointnet_cls` T-Nets (transform subgraph →
-//! `MatMulFeature` apply) — per the `arch::BlockRole` block-boundary
-//! annotations.  `nn::MlpEngine` wraps an FC-chain `Engine` built from a
-//! TBNZ model and keeps the original deployable-runner API.
+//! `GlobalPool`, `Flatten`, the transformer plumbing `LayerNorm` /
+//! `TokenMeanPool` / `Transpose` / `PosEmbedAdd`, plus the join nodes
+//! `Add` (residual skip), `MatMulFeature` (PointNet T-Net feature
+//! transform) and `Attention` (multi-head self-attention over Q/K/V slots,
+//! max-subtracted softmax in f32) — with a value-table walker: activations
+//! are addressable by node id and freed after their last consumer.
+//! `nn::lower_arch_spec` turns `arch::models` specs into runnable graphs:
+//! sequential CNN stacks (`vgg_small_cifar`, `convmixer_cifar`, the minis,
+//! PointNet-style shared-MLP token convs) *and* the annotated branching
+//! architectures per the `arch::BlockRole` block-boundary annotations —
+//! `resnet18_cifar` / `resnet50_cifar` residual graphs (identity +
+//! 1x1-projection skips, ReLU after the join), `pointnet_cls` T-Nets
+//! (transform subgraph → `MatMulFeature` apply), and the transformer
+//! encoders: `vit_cifar` / `vit_small_imagenet` / `tst_electricity` /
+//! `tst_weather` lower to pre-LN attention + MLP residual blocks (Q/K/V/O
+//! and MLP projections run as tiled token-FCs through the batched
+//! tile-resident row kernel) and `mlpmixer_cifar` runs its token-mixing
+//! MLPs between `Transpose` pairs, closing the paper's full architecture
+//! coverage (Swin/MobileViT attention variants are rejected with errors
+//! naming the construct).  `nn::MlpEngine` wraps an FC-chain `Engine`
+//! built from a TBNZ model and keeps the original deployable-runner API.
 //!
 //! Every engine runs one of three `nn::EnginePath`s:
 //!
@@ -66,7 +75,9 @@
 //!   tests (`tests/properties.rs`), packed/reference parity
 //!   (`tests/packed_parity.rs`), conv parity + CNN graph smoke tests
 //!   (`tests/conv_parity.rs`), branching-graph parity
-//!   (`tests/graph_parity.rs`), serving-pool tests, format/config tests.
+//!   (`tests/graph_parity.rs`), transformer parity
+//!   (`tests/transformer_parity.rs`), serving-pool tests, format/config
+//!   tests.
 //!   CI also compiles every bench binary (`cargo bench --no-run`) and runs
 //!   the release-mode `--ignored` tier.
 //! * **Artifact-dependent** (`tests/native_parity.rs`, runtime/pipeline

@@ -5,14 +5,17 @@ use anyhow::{anyhow, Result};
 
 use std::sync::Arc;
 
+use tiledbits::arch;
 use tiledbits::cli::{Cli, USAGE};
 use tiledbits::config::Manifest;
 use tiledbits::coordinator::{self, report, TABLES};
-use tiledbits::nn::{EnginePath, MlpEngine, Nonlin, PackedLayout};
+use tiledbits::nn::{lower_arch_spec, Engine, EnginePath, LowerOptions, MlpEngine,
+                    Nonlin, PackedLayout};
 use tiledbits::runtime::Runtime;
-use tiledbits::serve::{BatchPolicy, OverflowPolicy, ServePolicy, Server};
+use tiledbits::serve::{BatchPolicy, OverflowPolicy, ServePolicy, Server, ServerStats};
+use tiledbits::tbn::AlphaMode;
 use tiledbits::train::{export, TrainOptions};
-use tiledbits::util::log;
+use tiledbits::util::{log, Rng};
 use tiledbits::{data, info};
 
 fn main() {
@@ -33,6 +36,119 @@ fn train_opts(cli: &Cli) -> TrainOptions {
         log_every: 50,
         seed: cli.opt_usize("seed").map(|s| s as u64),
     }
+}
+
+fn engine_path_opt(cli: &Cli) -> EnginePath {
+    match cli.opt_or("engine", "packed") {
+        "reference" => EnginePath::Reference,
+        "packed-int8" | "int8" => EnginePath::PackedInt8,
+        _ => EnginePath::Packed,
+    }
+}
+
+/// `--layout` wins; without it the `TBN_LAYOUT` env override (the CI A/B
+/// hook) picks the default.  Unknown values fail loudly: this flag exists
+/// for A/B measurement, so a typo must not silently benchmark the wrong
+/// layout.
+fn packed_layout_opt(cli: &Cli) -> Result<PackedLayout> {
+    match cli.opt("layout") {
+        Some("expanded") => Ok(PackedLayout::Expanded),
+        Some("tile") | Some("tile-resident") => Ok(PackedLayout::TileResident),
+        Some(other) => Err(anyhow!("unknown --layout {other:?} (tile|expanded)")),
+        None => Ok(PackedLayout::from_env()),
+    }
+}
+
+fn serve_policy_opt(cli: &Cli) -> ServePolicy {
+    ServePolicy {
+        batch: BatchPolicy::default(),
+        queue_cap: cli.opt_usize("queue-cap").unwrap_or(1024),
+        on_full: match cli.opt_or("overflow", "block") {
+            "reject" => OverflowPolicy::Reject,
+            _ => OverflowPolicy::Block,
+        },
+    }
+}
+
+fn print_serve_stats(stats: &ServerStats, elapsed_s: f64) {
+    info!("serve", "{} requests in {elapsed_s:.3}s ({} rejected), mean latency \
+           {:.0}us, mean batch {:.1}",
+          stats.served, stats.rejected, stats.mean_latency_us(), stats.mean_batch());
+    if let Some(p) = stats.latency_percentiles() {
+        info!("serve", "latency percentiles over last {} requests: \
+               p50 {}us  p95 {}us  p99 {}us  (lifetime max {}us)",
+              p.samples, p.p50_us, p.p95_us, p.p99_us, stats.max_latency_us);
+    }
+    for (w, ws) in stats.per_worker.iter().enumerate() {
+        info!("serve", "  worker {w}: {} requests in {} batches", ws.served, ws.batches);
+    }
+}
+
+/// `tbn serve --arch <name>`: lower a paper architecture or demo mini
+/// natively (synthesized weights — no artifacts or PJRT runtime needed)
+/// and serve the layer-graph engine behind the batching pool under a
+/// synthetic concurrent load.  Covers everything `nn::lower_arch_spec`
+/// accepts, including the transformer specs (`vit_cifar`, `tst_*`,
+/// `mlpmixer_cifar`, `vit_micro`, `tst_micro`, `mixer_micro`).
+fn serve_arch(cli: &Cli, name: &str) -> Result<()> {
+    let spec = arch::any_arch_by_name(name)
+        .ok_or_else(|| anyhow!("unknown architecture {name:?}"))?;
+    let input = spec
+        .native_input()
+        .ok_or_else(|| anyhow!("{name}: cannot infer the native input shape"))?;
+    let lopts = LowerOptions {
+        input,
+        p: cli.opt_usize("p").unwrap_or(4),
+        alpha_mode: AlphaMode::PerTile,
+        seed: cli.opt_usize("seed").map(|s| s as u64).unwrap_or(0),
+    };
+    let graph = lower_arch_spec(&spec, &lopts).map_err(|e| anyhow!(e))?;
+    let path = engine_path_opt(cli);
+    let layout = packed_layout_opt(cli)?;
+    let engine =
+        Engine::with_layout_graph(graph, Nonlin::Relu, path, layout).map_err(|e| anyhow!(e))?;
+    let (in_dim, out_dim) = (engine.in_len(), engine.out_len());
+    let workers = cli.opt_usize("workers").unwrap_or(2);
+    let policy = serve_policy_opt(cli);
+    info!("serve", "{name}: natively lowered graph ({} nodes), {path:?} engine \
+           ({layout:?} weights), {workers} workers, queue cap {} ({:?}), \
+           {} resident weight bytes",
+          engine.graph().len(), policy.queue_cap, policy.on_full,
+          engine.resident_weight_bytes());
+    let server = Arc::new(Server::start_pool_with(Arc::new(engine), policy, workers));
+    let n_requests = cli.opt_usize("requests").unwrap_or(64);
+    let t0 = std::time::Instant::now();
+    let clients = 4usize;
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let s = server.clone();
+        let mut rng = Rng::new(1000 + c as u64);
+        let xs: Vec<Vec<f32>> = (c..n_requests)
+            .step_by(clients)
+            .map(|_| rng.normal_vec(in_dim, 1.0))
+            .collect();
+        handles.push(std::thread::spawn(move || -> Result<(), String> {
+            for x in xs {
+                match s.infer(x) {
+                    Ok(r) if r.y.len() != out_dim => {
+                        return Err(format!("bad output width {}", r.y.len()));
+                    }
+                    Ok(_) => {}
+                    // shed requests are the Reject policy working as
+                    // intended: counted in the server stats
+                    Err(e) if e.contains("queue full") => {}
+                    Err(e) => return Err(e),
+                }
+            }
+            Ok(())
+        }));
+    }
+    for h in handles {
+        h.join().map_err(|_| anyhow!("client thread panicked"))?
+            .map_err(|e| anyhow!(e))?;
+    }
+    print_serve_stats(&server.stats(), t0.elapsed().as_secs_f64());
+    Ok(())
 }
 
 fn dispatch(cli: &Cli) -> Result<()> {
@@ -126,6 +242,11 @@ fn dispatch(cli: &Cli) -> Result<()> {
             Ok(())
         }
         "serve" => {
+            // --arch <name>: the artifact-free native-lowering path (any
+            // spec `nn::lower_arch_spec` accepts, incl. the transformers)
+            if let Some(name) = cli.opt("arch") {
+                return serve_arch(cli, name);
+            }
             let id = cli.positional.first().ok_or_else(|| anyhow!("serve needs <exp_id>"))?;
             let manifest = Manifest::load(&artifacts).map_err(|e| anyhow!(e))?;
             let exp = manifest.by_id(id).ok_or_else(|| anyhow!("unknown experiment {id}"))?;
@@ -136,32 +257,10 @@ fn dispatch(cli: &Cli) -> Result<()> {
             let trainer = tiledbits::train::Trainer::new(&rt, exp)?;
             let (_, model) = trainer.run(&train_opts(cli))?;
             let tbnz = export::to_tbnz(exp, &model)?;
-            let path = match cli.opt_or("engine", "packed") {
-                "reference" => EnginePath::Reference,
-                "packed-int8" | "int8" => EnginePath::PackedInt8,
-                _ => EnginePath::Packed,
-            };
-            // --layout wins; without it the TBN_LAYOUT env override (the CI
-            // A/B hook) picks the default.  Unknown values fail loudly: this
-            // flag exists for A/B measurement, so a typo must not silently
-            // benchmark the wrong layout.
-            let layout = match cli.opt("layout") {
-                Some("expanded") => PackedLayout::Expanded,
-                Some("tile") | Some("tile-resident") => PackedLayout::TileResident,
-                Some(other) => {
-                    return Err(anyhow!("unknown --layout {other:?} (tile|expanded)"))
-                }
-                None => PackedLayout::from_env(),
-            };
+            let path = engine_path_opt(cli);
+            let layout = packed_layout_opt(cli)?;
             let workers = cli.opt_usize("workers").unwrap_or(2);
-            let policy = ServePolicy {
-                batch: BatchPolicy::default(),
-                queue_cap: cli.opt_usize("queue-cap").unwrap_or(1024),
-                on_full: match cli.opt_or("overflow", "block") {
-                    "reject" => OverflowPolicy::Reject,
-                    _ => OverflowPolicy::Block,
-                },
-            };
+            let policy = serve_policy_opt(cli);
             let engine = MlpEngine::with_path_layout(tbnz, Nonlin::Relu, path, layout)
                 .map_err(|e| anyhow!(e))?;
             info!("serve", "{path:?} engine ({layout:?} weights), {workers} workers, \
@@ -198,20 +297,7 @@ fn dispatch(cli: &Cli) -> Result<()> {
                 h.join().map_err(|_| anyhow!("client thread panicked"))?
                     .map_err(|e| anyhow!(e))?;
             }
-            let stats = server.stats();
-            info!("serve", "{} requests in {:.3}s ({} rejected), mean latency {:.0}us, \
-                   mean batch {:.1}",
-                  stats.served, t0.elapsed().as_secs_f64(), stats.rejected,
-                  stats.mean_latency_us(), stats.mean_batch());
-            if let Some(p) = stats.latency_percentiles() {
-                info!("serve", "latency percentiles over last {} requests: \
-                       p50 {}us  p95 {}us  p99 {}us  (lifetime max {}us)",
-                      p.samples, p.p50_us, p.p95_us, p.p99_us, stats.max_latency_us);
-            }
-            for (w, ws) in stats.per_worker.iter().enumerate() {
-                info!("serve", "  worker {w}: {} requests in {} batches",
-                      ws.served, ws.batches);
-            }
+            print_serve_stats(&server.stats(), t0.elapsed().as_secs_f64());
             Ok(())
         }
         "" | "help" => {

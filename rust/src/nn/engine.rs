@@ -1,8 +1,10 @@
 //! The layer-graph inference engine and its FC-chain wrapper.
 //!
 //! [`Engine`] executes a layer [`Graph`] — a DAG of [`Node`]s (FC, Conv2d,
-//! pooling, flatten, plus the `Add`/`MatMulFeature` join nodes of
-//! `nn::layers`) in topological order — behind the [`EnginePath`] selector:
+//! pooling, flatten, the transformer plumbing `LayerNorm` /
+//! `TokenMeanPool` / `Transpose` / `PosEmbedAdd`, plus the
+//! `Add`/`MatMulFeature`/`Attention` join nodes of `nn::layers`) in
+//! topological order — behind the [`EnginePath`] selector:
 //!
 //! * `Reference` — the f32 Algorithm 1 path (tile reuse, expand-free), the
 //!   crate's oracle.  `forward` runs the exact paper math on f32
@@ -26,7 +28,8 @@
 //! table: every node's output is addressable by node id while any later
 //! node still reads it, and is freed as soon as its last consumer has run
 //! (consumer counts are precomputed at construction).  Join nodes fetch
-//! both input slots from the table; a residual skip simply keeps its
+//! all their input slots from the table (two for `Add`/`MatMulFeature`,
+//! three — Q, K, V — for `Attention`); a residual skip simply keeps its
 //! producer's activation alive across the block body.  Joins are weightless
 //! and run in f32 on every path, so the branching executor changes nothing
 //! about packed-vs-reference parity of the weight layers.  `forward_batch`
@@ -113,6 +116,14 @@ impl Engine {
             if gn.inputs.len() != gn.node.arity() {
                 return Err(format!("{}: {} input slots, expected {}",
                                    gn.node.name(), gn.inputs.len(), gn.node.arity()));
+            }
+            if let Node::Attention { heads, dim, tokens } = gn.node {
+                if heads == 0 || dim == 0 || tokens == 0 || dim % heads != 0 {
+                    return Err(format!(
+                        "attention: {heads} heads do not divide dim {dim} \
+                         ({tokens} tokens)"
+                    ));
+                }
             }
             for (s, slot) in gn.inputs.iter().enumerate() {
                 let want = gn.node.slot_in_len(s);
@@ -279,13 +290,13 @@ impl Engine {
     /// Walk the graph with a value table: every node's activation is
     /// addressable by node id while a later node still reads it, and is
     /// freed after its last consumer ran (`uses` counts).  `apply` computes
-    /// one node from its fetched input slots (`b` is `Some` exactly for the
-    /// two-input join nodes).  The single walker behind both the per-sample
-    /// and the batched forwards, so the liveness/ordering logic exists
-    /// once.
+    /// one node from its fetched input slots (one entry per slot, in slot
+    /// order — 1 for chain nodes, 2 for `Add`/`MatMulFeature`, 3 for
+    /// `Attention`).  The single walker behind both the per-sample and the
+    /// batched forwards, so the liveness/ordering logic exists once.
     fn walk<V, F>(&self, source: &V, mut apply: F) -> V
     where
-        F: FnMut(usize, &V, Option<&V>) -> V,
+        F: FnMut(usize, &[&V]) -> V,
     {
         fn get<'a, V>(slot: Slot, source: &'a V, values: &'a [Option<V>]) -> &'a V {
             match slot {
@@ -301,9 +312,18 @@ impl Engine {
         for idx in 0..n {
             let gn = &self.graph[idx];
             let out = {
+                // node arity is bounded at 3 (Attention), so the fetched
+                // slots fit a stack buffer — no per-node heap allocation on
+                // the inference hot path (unused tail entries alias slot 0)
+                let n_in = gn.inputs.len();
+                debug_assert!((1..=3).contains(&n_in));
                 let a = get(gn.inputs[0], source, &values);
-                let b = gn.inputs.get(1).map(|&s| get(s, source, &values));
-                apply(idx, a, b)
+                let ins: [&V; 3] = [
+                    a,
+                    gn.inputs.get(1).map_or(a, |&s| get(s, source, &values)),
+                    gn.inputs.get(2).map_or(a, |&s| get(s, source, &values)),
+                ];
+                apply(idx, &ins[..n_in])
             };
             for slot in &gn.inputs {
                 if let Slot::Node(j) = slot {
@@ -323,11 +343,19 @@ impl Engine {
     /// packed math.
     fn exec(&self, x: &[f32], scratch: &mut Scratch, quantized: bool) -> Vec<f32> {
         let source = x.to_vec();
-        self.walk(&source, |idx, a: &Vec<f32>, b| {
+        self.walk(&source, |idx, ins: &[&Vec<f32>]| {
             let gn = &self.graph[idx];
-            if let Some(b) = b {
-                return gn.node.forward_join(a, b, self.relu_after[idx]);
+            if gn.node.is_join() {
+                let a = ins[0].as_slice();
+                let slices: [&[f32]; 3] = [
+                    a,
+                    ins.get(1).map_or(a, |v| v.as_slice()),
+                    ins.get(2).map_or(a, |v| v.as_slice()),
+                ];
+                return gn.node.forward_join(&slices[..ins.len()],
+                                            self.relu_after[idx], scratch);
             }
+            let a = ins[0];
             if quantized && gn.node.is_weight() && Some(idx) != self.first_weight {
                 return match &gn.node {
                     Node::Fc(fc) => fc.forward_quantized_oracle(a, self.relu_after[idx]),
@@ -367,15 +395,24 @@ impl Engine {
     pub fn forward_batch(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
         let mut scratch = Scratch::default();
         let source = xs.to_vec();
-        self.walk(&source, |idx, a: &Vec<Vec<f32>>, b| {
+        self.walk(&source, |idx, ins: &[&Vec<Vec<f32>>]| {
             let gn = &self.graph[idx];
-            if let Some(b) = b {
-                return a
-                    .iter()
-                    .zip(b.iter())
-                    .map(|(u, v)| gn.node.forward_join(u, v, self.relu_after[idx]))
+            if gn.node.is_join() {
+                let bsz = ins[0].len();
+                return (0..bsz)
+                    .map(|b| {
+                        let a = ins[0][b].as_slice();
+                        let slices: [&[f32]; 3] = [
+                            a,
+                            ins.get(1).map_or(a, |v| v[b].as_slice()),
+                            ins.get(2).map_or(a, |v| v[b].as_slice()),
+                        ];
+                        gn.node.forward_join(&slices[..ins.len()],
+                                             self.relu_after[idx], &mut scratch)
+                    })
                     .collect();
             }
+            let a = ins[0];
             if let (Some(p), Node::Fc(fc)) = (&self.packed[idx], &gn.node) {
                 return fc.forward_packed_batch(p, a, self.relu_after[idx], &mut scratch);
             }
@@ -413,12 +450,15 @@ impl Engine {
     }
 
     /// Serialized-model bits across all weight nodes (the TBNZ storage
-    /// accounting, summed from the shared records).
+    /// accounting, summed from the shared records), plus any f32 parameter
+    /// tables carried outside a record (the learned pos-embedding).
     pub fn storage_bits(&self) -> usize {
         self.graph
             .iter()
-            .filter_map(|gn| gn.node.record())
-            .map(LayerRecord::storage_bits)
+            .map(|gn| {
+                gn.node.record().map(LayerRecord::storage_bits).unwrap_or(0)
+                    + gn.node.extra_param_bits()
+            })
             .sum()
     }
 
@@ -427,7 +467,10 @@ impl Engine {
     /// and output activation buffers (f32) — the Table 6 "Max Memory Usage"
     /// model — plus, for nodes that run packed, the scratch the batched
     /// packed forward stages (a conv's binarized im2col map and
-    /// position-major output copy; `Node::packed_scratch_bytes`), plus any
+    /// position-major output copy; `Node::packed_scratch_bytes`), plus the
+    /// path-independent f32 staging of an attention node (the
+    /// `tokens x tokens` score matrix, `Node::f32_scratch_bytes`; its
+    /// context accumulator is the output buffer already counted), plus any
     /// earlier activation the value table still holds for a *later*
     /// consumer (a residual skip stays live across the whole block body and
     /// is charged to every node it spans).  On a linear chain the held term
@@ -452,11 +495,13 @@ impl Engine {
         (0..n)
             .map(|i| {
                 let gn = &self.graph[i];
+                // packed staging when the node runs packed, plus any
+                // path-independent f32 staging (the attention score matrix)
                 let scratch = if self.packed[i].is_some() {
                     gn.node.packed_scratch_bytes()
                 } else {
                     0
-                };
+                } + gn.node.f32_scratch_bytes();
                 let in_elems: usize =
                     (0..gn.inputs.len()).map(|s| gn.node.slot_in_len(s)).sum();
                 // activations produced earlier, not read here, but still
@@ -1102,6 +1147,97 @@ mod tests {
         }
         let want = head.forward_reference(&applied_v, false);
         assert_eq!(engine.forward(&x), want);
+    }
+
+    /// A hand-built attention graph (Q/K/V FCs off one trunk, Attention
+    /// join, head) through the DAG executor equals the hand-rolled
+    /// per-node math, on the engine's own kernels.
+    #[test]
+    fn dag_attention_graph_matches_handrolled_walk() {
+        let (dim, tokens, heads) = (8usize, 5usize, 2usize);
+        let n = dim * tokens;
+        let mut rng = Rng::new(60);
+        let wq = FcLayer::from_record(bwnn_record("wq", n, n, &mut rng)).unwrap();
+        let wk = FcLayer::from_record(bwnn_record("wk", n, n, &mut rng)).unwrap();
+        let wv = FcLayer::from_record(bwnn_record("wv", n, n, &mut rng)).unwrap();
+        let head = FcLayer::from_record(bwnn_record("head", 4, n, &mut rng)).unwrap();
+        let g = engine_graph(&wq, &wk, &wv, &head, heads, dim, tokens);
+        let engine = Engine::from_graph(g, Nonlin::Relu, EnginePath::Reference).unwrap();
+        assert_eq!(engine.in_len(), n);
+        assert_eq!(engine.out_len(), 4);
+        let x = rng.normal_vec(n, 1.0);
+        let qv = wq.forward_reference(&x, false);
+        let kv = wk.forward_reference(&x, false);
+        let vv = wv.forward_reference(&x, false);
+        let node = Node::Attention { heads, dim, tokens };
+        let mut s = Scratch::default();
+        let ctx = node.forward_join(&[&qv, &kv, &vv], false, &mut s);
+        let want = head.forward_reference(&ctx, false);
+        assert_eq!(engine.forward(&x), want, "attention DAG walk must be bit-exact");
+        // batch == single on every path
+        let xs: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec(n, 1.0)).collect();
+        for path in [EnginePath::Reference, EnginePath::Packed] {
+            let e = Engine::from_graph(engine_graph(&wq, &wk, &wv, &head, heads, dim,
+                                                    tokens),
+                                       Nonlin::Relu, path)
+                .unwrap();
+            let batch = e.forward_batch(&xs);
+            for (x, y) in xs.iter().zip(&batch) {
+                assert_eq!(&e.forward(x), y, "{path:?}");
+            }
+        }
+    }
+
+    fn engine_graph(wq: &FcLayer, wk: &FcLayer, wv: &FcLayer, head: &FcLayer,
+                    heads: usize, dim: usize, tokens: usize) -> Graph {
+        let mut g = Graph::new();
+        let q = g.push_with_relu(Node::Fc(wq.clone()), vec![Slot::Source], Some(false));
+        let k = g.push_with_relu(Node::Fc(wk.clone()), vec![Slot::Source], Some(false));
+        let v = g.push_with_relu(Node::Fc(wv.clone()), vec![Slot::Source], Some(false));
+        let attn = g.push_with_relu(Node::Attention { heads, dim, tokens },
+                                    vec![q, k, v], Some(false));
+        g.push(Node::Fc(head.clone()), vec![attn]);
+        g
+    }
+
+    #[test]
+    fn dag_rejects_bad_attention_configs() {
+        let mut rng = Rng::new(61);
+        let n = 12usize; // dim 4 x tokens 3
+        let fc = FcLayer::from_record(bwnn_record("p", n, n, &mut rng)).unwrap();
+        // heads not dividing dim
+        let mut g = Graph::new();
+        let q = g.push(Node::Fc(fc.clone()), vec![Slot::Source]);
+        g.push(Node::Attention { heads: 3, dim: 4, tokens: 3 }, vec![q, q, q]);
+        let err = Engine::from_graph(g, Nonlin::Relu, EnginePath::Reference).unwrap_err();
+        assert!(err.contains("heads do not divide"), "{err}");
+        // wrong arity: attention with two inputs
+        let mut g = Graph::new();
+        let q = g.push(Node::Fc(fc), vec![Slot::Source]);
+        g.push(Node::Attention { heads: 2, dim: 4, tokens: 3 }, vec![q, q]);
+        let err = Engine::from_graph(g, Nonlin::Relu, EnginePath::Reference).unwrap_err();
+        assert!(err.contains("input slots"), "{err}");
+    }
+
+    /// The attention score matrix is charged to the peak: the same graph
+    /// with more tokens peaks higher by exactly the scratch delta when the
+    /// attention node is the peak.
+    #[test]
+    fn dag_peak_memory_charges_attention_scratch() {
+        let mut rng = Rng::new(62);
+        let (dim, tokens, heads) = (4usize, 32usize, 2usize);
+        let n = dim * tokens;
+        let wq = FcLayer::from_record(bwnn_record("wq", n, n, &mut rng)).unwrap();
+        let wk = FcLayer::from_record(bwnn_record("wk", n, n, &mut rng)).unwrap();
+        let wv = FcLayer::from_record(bwnn_record("wv", n, n, &mut rng)).unwrap();
+        let head = FcLayer::from_record(bwnn_record("head", 4, n, &mut rng)).unwrap();
+        let g = engine_graph(&wq, &wk, &wv, &head, heads, dim, tokens);
+        let engine = Engine::from_graph(g, Nonlin::Relu, EnginePath::Reference).unwrap();
+        // at the attention node: 3 inputs + output (4 * n each) + scores
+        let attn_bytes = 4 * (3 * n + n) + 4 * tokens * tokens;
+        assert!(engine.peak_memory_bytes() >= attn_bytes,
+                "peak {} must cover the attention term {attn_bytes}",
+                engine.peak_memory_bytes());
     }
 
     #[test]

@@ -12,10 +12,17 @@
 //!   inner loop (`tbn::bitops::xnor_dot_words_range`);
 //! * `Pool2d` / `GlobalPool` / `Flatten` — weightless shape plumbing that
 //!   lets whole CNN specs (`arch::models`) run natively;
-//! * `Add` / `MatMulFeature` — the two-input **join** nodes: an elementwise
-//!   residual join (ResNet skip connections) and the PointNet T-Net
-//!   feature-transform apply (a `k x k` matrix from one branch multiplying
-//!   the `(k, positions)` features of the other).
+//! * `LayerNorm` / `TokenMeanPool` / `Transpose` / `PosEmbedAdd` — the
+//!   transformer plumbing: per-token epsilon-stable normalization, the
+//!   encoder head's token mean pool, the mixer's token<->channel
+//!   transpose, and the learned positional-embedding add (an f32
+//!   parameter node);
+//! * `Add` / `MatMulFeature` / `Attention` — the multi-input **join**
+//!   nodes: an elementwise residual join (ResNet skips, transformer
+//!   residuals), the PointNet T-Net feature-transform apply (a `k x k`
+//!   matrix from one branch multiplying the `(k, positions)` features of
+//!   the other), and multi-head self-attention consuming Q/K/V slots
+//!   (max-subtracted softmax over `QK^T / sqrt(d_h)` in f32).
 //!
 //! Nodes are wired into a [`Graph`]: each [`GraphNode`] names where every
 //! input slot reads from ([`Slot::Source`] for the engine input,
@@ -27,9 +34,12 @@
 //! conv stride/padding from the spec's activation shapes and inserting
 //! pooling nodes where consecutive specs imply spatial reduction.  Branching
 //! constructs are rebuilt from the spec's `arch::BlockRole` annotations:
-//! residual blocks (identity or 1x1-downsample skips, ReLU after the join)
-//! and T-Net subgraphs (transform head kept linear, then a `MatMulFeature`
-//! join).  `nn::Engine` executes the graph with a value-table walker.
+//! residual blocks (identity or 1x1-downsample skips, ReLU after the join),
+//! T-Net subgraphs (transform head kept linear, then a `MatMulFeature`
+//! join), and the transformer encoder sub-blocks (pre-LN attention and MLP
+//! residuals, mixer token-mixing MLPs between transposes) — so ViT, TST
+//! *and* MLP-Mixer specs run natively.  `nn::Engine` executes the graph
+//! with a value-table walker.
 
 mod conv;
 mod fc;
@@ -37,12 +47,19 @@ mod fc;
 pub use conv::Conv2dLayer;
 pub use fc::FcLayer;
 
+use std::sync::Arc;
+
 use super::layer_resident_bytes;
 use super::packed::{PackedLayer, PackedLayout};
-use crate::arch::{ArchSpec, BlockRole, Kind, LayerSpec};
+use crate::arch::{ArchSpec, AttnPart, BlockRole, Kind, LayerSpec};
 use crate::tbn::{alphas_from, tile_from_weights, AlphaMode, LayerRecord, WeightPayload};
 use crate::tensor::BitVec;
 use crate::util::Rng;
+
+/// Epsilon of the native `LayerNorm` node (torch's LayerNorm default): the
+/// variance is stabilized as `1 / sqrt(var + eps)`, so all-constant tokens
+/// normalize to exact zeros instead of dividing by zero.
+pub const LN_EPS: f32 = 1e-5;
 
 /// Pooling flavor for the weightless pool nodes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -60,7 +77,9 @@ pub enum PoolKind {
 /// * `batch_words` / `gammas` / `batch_out` — the batched packed path:
 ///   `B` packed activation-bit vectors side by side, their XNOR-Net
 ///   scales, and the per-batch output staging (conv scatters it back into
-///   channel-major order).
+///   channel-major order);
+/// * `attn` — the attention score matrix (`tokens x tokens` f32, reused
+///   across heads and samples).
 #[derive(Debug, Clone, Default)]
 pub struct Scratch {
     pub words: Vec<u64>,
@@ -70,12 +89,15 @@ pub struct Scratch {
     pub batch_words: Vec<u64>,
     pub gammas: Vec<f32>,
     pub batch_out: Vec<f32>,
+    pub attn: Vec<f32>,
 }
 
 /// One node of the inference layer graph.  Activations flow through as flat
-/// f32 vectors; conv/pool nodes interpret them channel-major `(c, h, w)`.
+/// f32 vectors; conv/pool nodes interpret them channel-major `(c, h, w)`,
+/// the transformer nodes channel-major `(dim, tokens)`.
 ///
-/// `Add` and `MatMulFeature` are the two-input **join** nodes: they take two
+/// `Add`, `MatMulFeature` and `Attention` are the multi-input **join**
+/// nodes: they take two (`Add`/`MatMulFeature`) or three (`Attention`)
 /// input slots (see [`GraphNode`]) and run through [`Node::forward_join`]
 /// instead of [`Node::forward_reference`].  Joins are weightless and run in
 /// f32 on every `EnginePath` — the packed paths binarize only weight-layer
@@ -93,13 +115,40 @@ pub enum Node {
     Flatten { len: usize },
     /// Elementwise residual join of two equal-length activations (slot 0:
     /// block body, slot 1: skip).  ResNet applies ReLU *after* the join, so
-    /// the lowering forces the body's last conv linear and activates here.
+    /// the lowering forces the body's last conv linear and activates here;
+    /// transformer residual joins stay linear.
     Add { len: usize },
     /// T-Net feature-transform apply: slot 0 carries `(k, positions)`
     /// channel-major features, slot 1 a row-major `k x k` transform matrix;
     /// the output is the transformed `(k, positions)` map
     /// `y[c', pos] = sum_c T[c', c] * x[c, pos]`.
     MatMulFeature { k: usize, positions: usize },
+    /// Per-token layer normalization over a channel-major `(c, positions)`
+    /// map: each token (position) is normalized across its `c` channels
+    /// with the epsilon-stabilized variance ([`LN_EPS`]).  Weightless
+    /// (unit gain, zero bias — norm scales are never quantized and the
+    /// native weights are synthesized anyway).
+    LayerNorm { c: usize, positions: usize, eps: f32 },
+    /// Multi-head self-attention over channel-major `(dim, tokens)` maps:
+    /// slots `[Q, K, V]` each carry a projected `(dim, tokens)` map, and
+    /// the output is `softmax(Q_h^T K_h / sqrt(dim/heads)) V_h^T` per head
+    /// `h`, concatenated back to `(dim, tokens)`.  Softmax rows are
+    /// max-subtracted before exponentiation (overflow-stable); the whole
+    /// node runs in f32 on every path.
+    Attention { heads: usize, dim: usize, tokens: usize },
+    /// Mean over the token axis of a `(c, positions)` map -> `(c,)`: the
+    /// transformer classification/forecast head's pooling (same math as an
+    /// average [`Node::GlobalPool`], kept distinct so transformer graphs
+    /// and their stats read as such).
+    TokenMeanPool { c: usize, positions: usize },
+    /// Channel-major transpose `(c, positions)` -> `(positions, c)`:
+    /// `y[t * c + d] = x[d * positions + t]`.  The mixer token-mixing MLPs
+    /// run between a transpose pair so their FCs mix the token axis.
+    Transpose { c: usize, positions: usize },
+    /// Learned positional-embedding add: `y = x + emb` elementwise.  The
+    /// table is an f32 parameter (never quantized, matching the paper's
+    /// treatment of embeddings) shared behind an `Arc`.
+    PosEmbedAdd { emb: Arc<Vec<f32>> },
 }
 
 impl Node {
@@ -112,6 +161,11 @@ impl Node {
             Node::Flatten { .. } => "flatten",
             Node::Add { .. } => "add",
             Node::MatMulFeature { .. } => "matmul_feature",
+            Node::LayerNorm { .. } => "layer_norm",
+            Node::Attention { .. } => "attention",
+            Node::TokenMeanPool { .. } => "token_mean_pool",
+            Node::Transpose { .. } => "transpose",
+            Node::PosEmbedAdd { .. } => "pos_embed_add",
         }
     }
 
@@ -124,6 +178,11 @@ impl Node {
             Node::Flatten { len } => *len,
             Node::Add { len } => *len,
             Node::MatMulFeature { k, positions } => k * positions,
+            Node::LayerNorm { c, positions, .. } => c * positions,
+            Node::Attention { dim, tokens, .. } => dim * tokens,
+            Node::TokenMeanPool { c, positions } => c * positions,
+            Node::Transpose { c, positions } => c * positions,
+            Node::PosEmbedAdd { emb } => emb.len(),
         }
     }
 
@@ -136,20 +195,28 @@ impl Node {
             Node::Flatten { len } => *len,
             Node::Add { len } => *len,
             Node::MatMulFeature { k, positions } => k * positions,
+            Node::LayerNorm { c, positions, .. } => c * positions,
+            Node::Attention { dim, tokens, .. } => dim * tokens,
+            Node::TokenMeanPool { c, .. } => *c,
+            Node::Transpose { c, positions } => c * positions,
+            Node::PosEmbedAdd { emb } => emb.len(),
         }
     }
 
-    /// Number of input slots: 1 for the chain nodes, 2 for the joins.
+    /// Number of input slots: 1 for the chain nodes, 2 for `Add` /
+    /// `MatMulFeature`, 3 for `Attention` (Q, K, V).
     pub fn arity(&self) -> usize {
         match self {
             Node::Add { .. } | Node::MatMulFeature { .. } => 2,
+            Node::Attention { .. } => 3,
             _ => 1,
         }
     }
 
-    /// True for the two-input join nodes (`Add` / `MatMulFeature`).
+    /// True for the multi-input join nodes (`Add` / `MatMulFeature` /
+    /// `Attention`).
     pub fn is_join(&self) -> bool {
-        self.arity() == 2
+        self.arity() > 1
     }
 
     /// Expected input length of slot `slot` (join nodes have per-slot
@@ -177,9 +244,34 @@ impl Node {
     }
 
     /// Weight bytes resident on the reference path (sub-bit tiles stay
-    /// packed); weightless nodes are free.
+    /// packed); the pos-embed table is a resident f32 parameter on every
+    /// path; weightless nodes are free.
     pub fn resident_bytes_reference(&self) -> usize {
-        self.record().map(layer_resident_bytes).unwrap_or(0)
+        match self {
+            Node::PosEmbedAdd { emb } => 4 * emb.len(),
+            _ => self.record().map(layer_resident_bytes).unwrap_or(0),
+        }
+    }
+
+    /// Serialized parameter bits carried outside a `LayerRecord` (the
+    /// learned pos-embedding table: fp32, never quantized).
+    pub fn extra_param_bits(&self) -> usize {
+        match self {
+            Node::PosEmbedAdd { emb } => 32 * emb.len(),
+            _ => 0,
+        }
+    }
+
+    /// f32 scratch this node's forward stages on *every* path: the
+    /// attention score matrix (`tokens x tokens`, reused across heads); 0
+    /// for everything else.  `Engine::peak_memory_bytes` charges this term
+    /// unconditionally — the context accumulator is the node's output
+    /// buffer, which the peak model already counts.
+    pub fn f32_scratch_bytes(&self) -> usize {
+        match self {
+            Node::Attention { tokens, .. } => 4 * tokens * tokens,
+            _ => 0,
+        }
     }
 
     /// Scratch staging bytes this node's *packed* batch-1 forward holds
@@ -211,8 +303,8 @@ impl Node {
         }
     }
 
-    /// Reference (f32) forward of this node.  Join nodes take two inputs
-    /// and run through [`Node::forward_join`] instead.
+    /// Reference (f32) forward of this node.  Join nodes take multiple
+    /// inputs and run through [`Node::forward_join`] instead.
     pub fn forward_reference(&self, x: &[f32], relu: bool, scratch: &mut Scratch) -> Vec<f32> {
         match self {
             Node::Fc(l) => l.forward_reference(x, relu),
@@ -220,17 +312,36 @@ impl Node {
             Node::Pool2d { kind, c, h, w, f } => pool2d(*kind, *c, *h, *w, *f, x),
             Node::GlobalPool { kind, c, positions } => global_pool(*kind, *c, *positions, x),
             Node::Flatten { .. } => x.to_vec(),
-            Node::Add { .. } | Node::MatMulFeature { .. } => {
-                unreachable!("join nodes take two inputs; use Node::forward_join")
+            Node::LayerNorm { c, positions, eps } => layer_norm(*c, *positions, *eps, x),
+            Node::TokenMeanPool { c, positions } => {
+                global_pool(PoolKind::Avg, *c, *positions, x)
+            }
+            Node::Transpose { c, positions } => transpose_cp(*c, *positions, x),
+            Node::PosEmbedAdd { emb } => {
+                debug_assert_eq!(x.len(), emb.len());
+                x.iter()
+                    .zip(emb.iter())
+                    .map(|(v, e)| {
+                        let s = v + e;
+                        if relu { s.max(0.0) } else { s }
+                    })
+                    .collect()
+            }
+            Node::Add { .. } | Node::MatMulFeature { .. } | Node::Attention { .. } => {
+                unreachable!("join nodes take multiple inputs; use Node::forward_join")
             }
         }
     }
 
-    /// Forward of a two-input join node (identical on every `EnginePath`:
-    /// joins are weightless, so there is nothing to binarize or pack).
-    pub fn forward_join(&self, a: &[f32], b: &[f32], relu: bool) -> Vec<f32> {
+    /// Forward of a multi-input join node (`inputs` holds one slice per
+    /// slot, `self.arity()` of them).  Identical on every `EnginePath`:
+    /// joins are weightless, so there is nothing to binarize or pack.
+    pub fn forward_join(&self, inputs: &[&[f32]], relu: bool,
+                        scratch: &mut Scratch) -> Vec<f32> {
+        debug_assert_eq!(inputs.len(), self.arity());
         match self {
             Node::Add { len } => {
+                let (a, b) = (inputs[0], inputs[1]);
                 debug_assert_eq!(a.len(), *len);
                 debug_assert_eq!(b.len(), *len);
                 a.iter()
@@ -243,6 +354,7 @@ impl Node {
             }
             Node::MatMulFeature { k, positions } => {
                 let (k, positions) = (*k, *positions);
+                let (a, b) = (inputs[0], inputs[1]);
                 debug_assert_eq!(a.len(), k * positions);
                 debug_assert_eq!(b.len(), k * k);
                 let mut y = vec![0.0f32; k * positions];
@@ -259,6 +371,66 @@ impl Node {
                         for o in out.iter_mut() {
                             *o = o.max(0.0);
                         }
+                    }
+                }
+                y
+            }
+            Node::Attention { heads, dim, tokens } => {
+                let (heads, dim, tokens) = (*heads, *dim, *tokens);
+                let (q, k, v) = (inputs[0], inputs[1], inputs[2]);
+                debug_assert!(heads > 0 && dim % heads == 0);
+                debug_assert_eq!(q.len(), dim * tokens);
+                debug_assert_eq!(k.len(), dim * tokens);
+                debug_assert_eq!(v.len(), dim * tokens);
+                let dh = dim / heads;
+                let scale = 1.0 / (dh as f32).sqrt();
+                scratch.attn.clear();
+                scratch.attn.resize(tokens * tokens, 0.0);
+                let mut y = vec![0.0f32; dim * tokens];
+                for h in 0..heads {
+                    let d0 = h * dh;
+                    // raw scores: s[t1, t2] = <Q[:, t1], K[:, t2]> over the
+                    // head's channels (channel-outer walk keeps the token
+                    // rows contiguous)
+                    for s in scratch.attn.iter_mut() {
+                        *s = 0.0;
+                    }
+                    for d in d0..d0 + dh {
+                        let qrow = &q[d * tokens..(d + 1) * tokens];
+                        let krow = &k[d * tokens..(d + 1) * tokens];
+                        for (t1, &qv) in qrow.iter().enumerate() {
+                            let srow =
+                                &mut scratch.attn[t1 * tokens..(t1 + 1) * tokens];
+                            for (s, &kv) in srow.iter_mut().zip(krow) {
+                                *s += qv * kv;
+                            }
+                        }
+                    }
+                    // scale + stable softmax per query row
+                    for t1 in 0..tokens {
+                        let srow = &mut scratch.attn[t1 * tokens..(t1 + 1) * tokens];
+                        for s in srow.iter_mut() {
+                            *s *= scale;
+                        }
+                        softmax_inplace(srow);
+                    }
+                    // context: y[d, t1] = sum_t2 p[t1, t2] * V[d, t2]
+                    for d in d0..d0 + dh {
+                        let vrow = &v[d * tokens..(d + 1) * tokens];
+                        let yrow = &mut y[d * tokens..(d + 1) * tokens];
+                        for (t1, yv) in yrow.iter_mut().enumerate() {
+                            let prow = &scratch.attn[t1 * tokens..(t1 + 1) * tokens];
+                            let mut acc = 0.0f32;
+                            for (&p, &vv) in prow.iter().zip(vrow) {
+                                acc += p * vv;
+                            }
+                            *yv = acc;
+                        }
+                    }
+                }
+                if relu {
+                    for o in y.iter_mut() {
+                        *o = o.max(0.0);
                     }
                 }
                 y
@@ -375,6 +547,63 @@ fn pool2d(kind: PoolKind, c: usize, h: usize, w: usize, f: usize, x: &[f32]) -> 
                 }
                 y[(ch * ho + oy) * wo + ox] = acc;
             }
+        }
+    }
+    y
+}
+
+/// Numerically stable softmax over `row` in place: max-subtracted before
+/// exponentiation, so huge logits cannot overflow (`exp(x - max) <= 1` and
+/// the denominator is at least 1 — the max element contributes `exp(0)`).
+fn softmax_inplace(row: &mut [f32]) {
+    let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+    let mut denom = 0.0f32;
+    for v in row.iter_mut() {
+        *v = (*v - max).exp();
+        denom += *v;
+    }
+    for v in row.iter_mut() {
+        *v /= denom;
+    }
+}
+
+/// Per-token layer normalization over a channel-major `(c, positions)`
+/// map: token `t` is normalized across its `c` channel values, with the
+/// biased variance stabilized by `eps` (all-constant tokens normalize to
+/// exact zeros instead of dividing by zero).
+fn layer_norm(c: usize, positions: usize, eps: f32, x: &[f32]) -> Vec<f32> {
+    debug_assert!(c > 0 && positions > 0);
+    debug_assert_eq!(x.len(), c * positions);
+    let mut y = vec![0.0f32; x.len()];
+    for t in 0..positions {
+        let mut mean = 0.0f32;
+        for d in 0..c {
+            mean += x[d * positions + t];
+        }
+        mean /= c as f32;
+        let mut var = 0.0f32;
+        for d in 0..c {
+            let dv = x[d * positions + t] - mean;
+            var += dv * dv;
+        }
+        var /= c as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        for d in 0..c {
+            y[d * positions + t] = (x[d * positions + t] - mean) * inv;
+        }
+    }
+    y
+}
+
+/// Channel-major transpose `(c, positions)` -> `(positions, c)`:
+/// `y[t * c + d] = x[d * positions + t]`.
+fn transpose_cp(c: usize, positions: usize, x: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(x.len(), c * positions);
+    let mut y = vec![0.0f32; x.len()];
+    for d in 0..c {
+        let plane = &x[d * positions..(d + 1) * positions];
+        for (t, &v) in plane.iter().enumerate() {
+            y[t * c + d] = v;
         }
     }
     y
@@ -533,7 +762,27 @@ fn lower_layer(graph: &mut Graph, rng: &mut Rng, opts: &LowerOptions, cur: &mut 
                spec_name: &str, l: &LayerSpec) -> Result<(), String> {
     let at = format!("{spec_name}::{}", l.name);
     match l.kind {
-        Kind::Other => Ok(()),
+        Kind::Other => {
+            // a learned positional embedding lowers to a PosEmbedAdd
+            // parameter node (drawn at ViT's 0.02 init scale); one that
+            // does not match the current activation fails loudly — a
+            // mis-placed/mis-sized pos_embed must not be silently dropped
+            // from the graph.  Every other `Other` record (norm scales,
+            // ...) carries no MACs and is skipped as before.
+            if l.name.ends_with("pos_embed") {
+                if l.params != cur.len() || l.params == 0 {
+                    return Err(format!(
+                        "{at}: pos_embed carries {} params but the activation here \
+                         is {} x {} x {} = {} elements — cannot lower the \
+                         positional embedding",
+                        l.params, cur.c, cur.h, cur.w, cur.len()
+                    ));
+                }
+                let emb = Arc::new(rng.normal_vec(l.params, 0.02));
+                cur.slot = graph.push(Node::PosEmbedAdd { emb }, vec![cur.slot]);
+            }
+            Ok(())
+        }
         Kind::Conv { co, ci, kh, kw } => {
             reconcile(graph, cur, l.in_act, &at)?;
             if ci == 0 || cur.c % ci != 0 {
@@ -600,7 +849,8 @@ fn lower_layer(graph: &mut Graph, rng: &mut Rng, opts: &LowerOptions, cur: &mut 
                 if cur.c != ci || cur.h * cur.w != tokens {
                     return Err(format!(
                         "{at}: token FC expects ({ci} ch x {tokens} pos), have \
-                         ({} x {} x {}) — token-mixing layers are unsupported",
+                         ({} x {} x {}) — unannotated token-mixing layers are \
+                         unsupported (tag them BlockRole::TokenMix)",
                         cur.c, cur.h, cur.w
                     ));
                 }
@@ -722,15 +972,169 @@ fn lower_tnet(graph: &mut Graph, rng: &mut Rng, opts: &LowerOptions, cur: &mut C
     Ok(())
 }
 
+/// Build one token-wise FC — a 1x1 conv over the token axis at input shape
+/// `(ci, h, w)` — with a synthesized payload: the shared projection
+/// constructor of the encoder lowering.  On the packed paths the conv
+/// batches every token through `PackedLayer::forward_batch_binarized_rows`,
+/// so all tokens hit the (shift-stitched, tile-resident) row kernel in one
+/// call.
+fn token_fc_node(rng: &mut Rng, opts: &LowerOptions, l: &LayerSpec, co: usize,
+                 ci: usize, h: usize, w: usize) -> Result<Node, String> {
+    let record = LayerRecord {
+        name: l.name.clone(),
+        shape: vec![co, ci, 1, 1],
+        payload: synth_payload(l.params, opts, rng),
+    };
+    let conv = Conv2dLayer::with_output(record, (ci, h, w), 1, 0, (h, w), 1)?;
+    Ok(Node::Conv2d(conv))
+}
+
+/// Extract `(co, ci)` of an FC-kind layer spec inside an encoder sub-block.
+fn fc_dims(spec_name: &str, l: &LayerSpec) -> Result<(usize, usize), String> {
+    match l.kind {
+        Kind::Fc { co, ci } => Ok((co, ci)),
+        _ => Err(format!(
+            "{spec_name}::{}: encoder sub-block layers must be FC projections",
+            l.name
+        )),
+    }
+}
+
+/// Lower one pre-LN attention sub-block: `LayerNorm -> Q/K/V token-FCs
+/// (all reading the normalized features) -> Attention -> O token-FC ->
+/// Add` with the block entry as the residual operand.  Every projection
+/// stays linear and the join stays linear (the transformer stream carries
+/// no ReLU; the MLP sub-block activates its hidden layer instead).
+#[allow(clippy::too_many_arguments)]
+fn lower_attention_block(graph: &mut Graph, rng: &mut Rng, opts: &LowerOptions,
+                         cur: &mut Cursor, spec_name: &str, id: &str, heads: usize,
+                         parts: &[(&LayerSpec, AttnPart)]) -> Result<(), String> {
+    let (dim, tokens) = (cur.c, cur.h * cur.w);
+    if heads == 0 || dim % heads != 0 {
+        return Err(format!(
+            "{spec_name}::{id}: {heads} heads do not divide dim {dim}"
+        ));
+    }
+    let got: Vec<AttnPart> = parts.iter().map(|(_, p)| *p).collect();
+    if got != [AttnPart::Q, AttnPart::K, AttnPart::V, AttnPart::O] {
+        return Err(format!(
+            "{spec_name}::{id}: attention sub-block needs exactly the Q, K, V, O \
+             projections in order, got {got:?}"
+        ));
+    }
+    for (l, part) in parts {
+        let (co, ci) = fc_dims(spec_name, l)?;
+        if ci != dim || co != dim || l.in_act != dim * tokens {
+            return Err(format!(
+                "{spec_name}::{}: {part:?} projection is {co}x{ci} over {} input \
+                 activations, but the block's features are dim {dim} x {tokens} \
+                 tokens (mismatched token counts?)",
+                l.name, l.in_act
+            ));
+        }
+    }
+    let entry = *cur;
+    let ln = graph.push(
+        Node::LayerNorm { c: dim, positions: tokens, eps: LN_EPS }, vec![entry.slot]);
+    let mut qkv = Vec::with_capacity(3);
+    for (l, _) in &parts[..3] {
+        let node = token_fc_node(rng, opts, l, dim, dim, entry.h, entry.w)?;
+        qkv.push(graph.push_with_relu(node, vec![ln], Some(false)));
+    }
+    let attn = graph.push_with_relu(Node::Attention { heads, dim, tokens },
+                                    vec![qkv[0], qkv[1], qkv[2]], Some(false));
+    let o_node = token_fc_node(rng, opts, parts[3].0, dim, dim, entry.h, entry.w)?;
+    let o = graph.push_with_relu(o_node, vec![attn], Some(false));
+    cur.slot = graph.push_with_relu(Node::Add { len: dim * tokens },
+                                    vec![o, entry.slot], Some(false));
+    Ok(())
+}
+
+/// Lower one pre-LN MLP sub-block (transformer MLP / mixer channel MLP):
+/// `LayerNorm -> fc1 (ReLU) -> fc2 -> Add` with the block entry as the
+/// residual operand (fc2 and the join stay linear).
+fn lower_mlp_block(graph: &mut Graph, rng: &mut Rng, opts: &LowerOptions,
+                   cur: &mut Cursor, spec_name: &str, id: &str,
+                   body: &[&LayerSpec]) -> Result<(), String> {
+    let (dim, tokens) = (cur.c, cur.h * cur.w);
+    if body.len() != 2 {
+        return Err(format!(
+            "{spec_name}::{id}: MLP sub-block needs exactly fc1 and fc2, got {} layers",
+            body.len()
+        ));
+    }
+    let (h1, d1) = fc_dims(spec_name, body[0])?;
+    let (d2, h2) = fc_dims(spec_name, body[1])?;
+    if d1 != dim || d2 != dim || h1 != h2 || body[0].in_act != dim * tokens {
+        return Err(format!(
+            "{spec_name}::{id}: MLP sub-block must map dim {dim} -> hidden -> dim \
+             over {tokens} tokens, got {h1}x{d1} then {d2}x{h2} over {} input \
+             activations",
+            body[0].in_act
+        ));
+    }
+    let entry = *cur;
+    let ln = graph.push(
+        Node::LayerNorm { c: dim, positions: tokens, eps: LN_EPS }, vec![entry.slot]);
+    let fc1 = token_fc_node(rng, opts, body[0], h1, dim, entry.h, entry.w)?;
+    let hidden = graph.push_with_relu(fc1, vec![ln], Some(true));
+    let fc2 = token_fc_node(rng, opts, body[1], dim, h1, entry.h, entry.w)?;
+    let out = graph.push_with_relu(fc2, vec![hidden], Some(false));
+    cur.slot = graph.push_with_relu(Node::Add { len: dim * tokens },
+                                    vec![out, entry.slot], Some(false));
+    Ok(())
+}
+
+/// Lower one mixer token-mixing MLP sub-block: the same pre-LN MLP shape,
+/// but run *transposed* so the FCs mix the token axis — `LayerNorm ->
+/// Transpose -> fc1 (ReLU) -> fc2 -> Transpose -> Add`.
+fn lower_token_mix_block(graph: &mut Graph, rng: &mut Rng, opts: &LowerOptions,
+                         cur: &mut Cursor, spec_name: &str, id: &str,
+                         body: &[&LayerSpec]) -> Result<(), String> {
+    let (dim, tokens) = (cur.c, cur.h * cur.w);
+    if body.len() != 2 {
+        return Err(format!(
+            "{spec_name}::{id}: token-mixing MLP needs exactly fc1 and fc2, got {} \
+             layers",
+            body.len()
+        ));
+    }
+    let (h1, t1) = fc_dims(spec_name, body[0])?;
+    let (t2, h2) = fc_dims(spec_name, body[1])?;
+    if t1 != tokens || t2 != tokens || h1 != h2 || body[0].in_act != dim * tokens {
+        return Err(format!(
+            "{spec_name}::{id}: token-mixing MLP must map {tokens} tokens -> hidden \
+             -> {tokens} tokens across dim {dim}, got {h1}x{t1} then {t2}x{h2} over \
+             {} input activations (mismatched token counts?)",
+            body[0].in_act
+        ));
+    }
+    let entry = *cur;
+    let ln = graph.push(
+        Node::LayerNorm { c: dim, positions: tokens, eps: LN_EPS }, vec![entry.slot]);
+    let t = graph.push(Node::Transpose { c: dim, positions: tokens }, vec![ln]);
+    // transposed view: (tokens, dim) channel-major — token FCs over dim
+    // positions
+    let fc1 = token_fc_node(rng, opts, body[0], h1, tokens, dim, 1)?;
+    let hidden = graph.push_with_relu(fc1, vec![t], Some(true));
+    let fc2 = token_fc_node(rng, opts, body[1], tokens, h1, dim, 1)?;
+    let mixed = graph.push_with_relu(fc2, vec![hidden], Some(false));
+    let back = graph.push(Node::Transpose { c: tokens, positions: dim }, vec![mixed]);
+    cur.slot = graph.push_with_relu(Node::Add { len: dim * tokens },
+                                    vec![back, entry.slot], Some(false));
+    Ok(())
+}
+
 /// Lower an `arch::ArchSpec` into a native layer [`Graph`].
 ///
 /// Supported: plain conv stacks (square spatial maps, symmetric or
 /// "same"-style asymmetric padding, grouped/depthwise convs), token-wise FC
 /// layers (`fc_tok`, lowered to 1x1 convs over the token axis — PointNet's
 /// shared MLPs), FC heads (global/spatial pooling plus a `Flatten` are
-/// inserted automatically), `Kind::Other` records (skipped — they carry no
-/// MACs), and the two annotated branching constructs
-/// (`arch::BlockRole`):
+/// inserted automatically), `Kind::Other` records (a `pos_embed` sized to
+/// the current activation lowers to a learned [`Node::PosEmbedAdd`]; every
+/// other `Other` record is skipped — they carry no MACs), and the annotated
+/// branching constructs (`arch::BlockRole`):
 ///
 /// * **residual blocks** — consecutive `ResidualBody` layers chain from the
 ///   block entry; a `ResidualDown` layer (if present) lowers the 1x1
@@ -738,12 +1142,29 @@ fn lower_tnet(graph: &mut Graph, rng: &mut Rng, opts: &LowerOptions, cur: &mut C
 ///   ReLU after the join (the body's final conv stays linear);
 /// * **T-Nets** — consecutive `Tnet` layers form a subgraph from the
 ///   current `(k, positions)` features, ending in a linear `k*k` transform
-///   that a `MatMulFeature` node applies back onto the entry features.
+///   that a `MatMulFeature` node applies back onto the entry features;
+/// * **encoder attention sub-blocks** — four consecutive `AttnProj` layers
+///   (Q, K, V, O) lower pre-LN to `LayerNorm -> Q/K/V token-FCs ->
+///   Attention -> O token-FC -> Add` (everything linear: the transformer
+///   stream carries no ReLU);
+/// * **encoder / mixer MLP sub-blocks** — two consecutive `MlpBody` layers
+///   lower to `LayerNorm -> fc1 (ReLU) -> fc2 -> Add`;
+/// * **mixer token-mixing MLPs** — two consecutive `TokenMix` layers run
+///   the same MLP shape between a [`Node::Transpose`] pair, so the FCs mix
+///   the token axis.
+///
+/// A trunk FC head that follows encoder output gets the standard pre-LN
+/// transformer treatment: a final `LayerNorm` + [`Node::TokenMeanPool`]
+/// ahead of the projection.  So `vit_cifar` / `vit_small_imagenet` /
+/// `tst_electricity` / `tst_weather` / `mlpmixer_cifar` (and the
+/// `vit_micro` / `tst_micro` / `mixer_micro` minis) lower natively.
 ///
 /// Mis-annotated specs fail with shape errors (mismatched skip shapes,
-/// transform size != `k*k`, entry channels != `k`); unannotated branching
-/// (e.g. segmentation-head feature concats) still fails at the shape
-/// reconciliation.
+/// transform size != `k*k`, head count not dividing dim, mismatched token
+/// counts, missing/mis-ordered Q/K/V/O projections); `Unsupported`-tagged
+/// constructs (Swin shifted windows, MobileViT unfold/fold) fail naming
+/// the construct, and unannotated branching (e.g. segmentation-head
+/// feature concats) still fails at the shape reconciliation.
 pub fn lower_arch_spec(spec: &ArchSpec, opts: &LowerOptions) -> Result<Graph, String> {
     let mut rng = Rng::new(opts.seed ^ 0x7B1E5);
     let (c, h, w) = opts.input;
@@ -754,10 +1175,33 @@ pub fn lower_arch_spec(spec: &ArchSpec, opts: &LowerOptions) -> Result<Graph, St
     let mut cur = Cursor { slot: Slot::Source, c, h, w };
     let layers = &spec.layers;
     let mut i = 0usize;
+    // true while the cursor carries encoder-block output: the next trunk FC
+    // head gets the standard pre-LN transformer treatment (final LayerNorm
+    // + TokenMeanPool) instead of the generic pooling reconciliation
+    let mut encoder_tail = false;
     while i < layers.len() {
         match &layers[i].block {
             None => {
-                lower_layer(&mut graph, &mut rng, opts, &mut cur, &spec.name, &layers[i])?;
+                let l = &layers[i];
+                if encoder_tail {
+                    if let Kind::Fc { ci, .. } = l.kind {
+                        if l.in_act == ci && cur.c == ci && cur.h * cur.w > 1 {
+                            let positions = cur.h * cur.w;
+                            cur.slot = graph.push(
+                                Node::LayerNorm { c: ci, positions, eps: LN_EPS },
+                                vec![cur.slot]);
+                            cur.slot = graph.push(
+                                Node::TokenMeanPool { c: ci, positions },
+                                vec![cur.slot]);
+                            cur.h = 1;
+                            cur.w = 1;
+                        }
+                    }
+                }
+                lower_layer(&mut graph, &mut rng, opts, &mut cur, &spec.name, l)?;
+                if !matches!(l.kind, Kind::Other) {
+                    encoder_tail = false;
+                }
                 i += 1;
             }
             Some(BlockRole::ResidualBody { id }) | Some(BlockRole::ResidualDown { id }) => {
@@ -784,6 +1228,7 @@ pub fn lower_arch_spec(spec: &ArchSpec, opts: &LowerOptions) -> Result<Graph, St
                 }
                 lower_residual_block(&mut graph, &mut rng, opts, &mut cur, &spec.name,
                                      &id, &body, downsample)?;
+                encoder_tail = false;
             }
             Some(BlockRole::Tnet { id, k }) => {
                 let (id, k) = (id.clone(), *k);
@@ -799,6 +1244,64 @@ pub fn lower_arch_spec(spec: &ArchSpec, opts: &LowerOptions) -> Result<Graph, St
                 }
                 lower_tnet(&mut graph, &mut rng, opts, &mut cur, &spec.name, &id, k,
                            &body)?;
+                encoder_tail = false;
+            }
+            Some(BlockRole::AttnProj { id, heads, .. }) => {
+                let (id, heads) = (id.clone(), *heads);
+                let mut parts: Vec<(&LayerSpec, AttnPart)> = Vec::new();
+                while i < layers.len() {
+                    match &layers[i].block {
+                        Some(BlockRole::AttnProj { id: j, heads: hj, part })
+                            if *j == id && *hj == heads =>
+                        {
+                            parts.push((&layers[i], *part));
+                            i += 1;
+                        }
+                        _ => break,
+                    }
+                }
+                lower_attention_block(&mut graph, &mut rng, opts, &mut cur,
+                                      &spec.name, &id, heads, &parts)?;
+                encoder_tail = true;
+            }
+            Some(BlockRole::MlpBody { id }) => {
+                let id = id.clone();
+                let mut body: Vec<&LayerSpec> = Vec::new();
+                while i < layers.len() {
+                    match &layers[i].block {
+                        Some(BlockRole::MlpBody { id: j }) if *j == id => {
+                            body.push(&layers[i]);
+                            i += 1;
+                        }
+                        _ => break,
+                    }
+                }
+                lower_mlp_block(&mut graph, &mut rng, opts, &mut cur, &spec.name, &id,
+                                &body)?;
+                encoder_tail = true;
+            }
+            Some(BlockRole::TokenMix { id }) => {
+                let id = id.clone();
+                let mut body: Vec<&LayerSpec> = Vec::new();
+                while i < layers.len() {
+                    match &layers[i].block {
+                        Some(BlockRole::TokenMix { id: j }) if *j == id => {
+                            body.push(&layers[i]);
+                            i += 1;
+                        }
+                        _ => break,
+                    }
+                }
+                lower_token_mix_block(&mut graph, &mut rng, opts, &mut cur,
+                                      &spec.name, &id, &body)?;
+                encoder_tail = true;
+            }
+            Some(BlockRole::Unsupported { id, construct }) => {
+                return Err(format!(
+                    "{}::{id}: {construct} is not lowerable — the native engine has \
+                     no graph node for it",
+                    spec.name
+                ));
             }
         }
     }
@@ -892,10 +1395,13 @@ mod tests {
         assert_eq!((add.slot_in_len(0), add.slot_in_len(1)), (4, 4));
         assert_eq!(add.resident_bytes_reference(), 0);
         assert_eq!(add.packed_scratch_bytes(), 0);
+        let mut s = Scratch::default();
         let a = [1.0f32, -2.0, 3.0, 0.5];
         let b = [1.0f32, 1.0, -4.0, 0.5];
-        assert_eq!(add.forward_join(&a, &b, false), vec![2.0, -1.0, -1.0, 1.0]);
-        assert_eq!(add.forward_join(&a, &b, true), vec![2.0, 0.0, 0.0, 1.0]);
+        assert_eq!(add.forward_join(&[&a, &b], false, &mut s),
+                   vec![2.0, -1.0, -1.0, 1.0]);
+        assert_eq!(add.forward_join(&[&a, &b], true, &mut s),
+                   vec![2.0, 0.0, 0.0, 1.0]);
     }
 
     #[test]
@@ -905,15 +1411,165 @@ mod tests {
         assert_eq!(mm.arity(), 2);
         assert_eq!((mm.slot_in_len(0), mm.slot_in_len(1)), (6, 4));
         assert_eq!((mm.in_len(), mm.out_len()), (6, 6));
+        let mut s = Scratch::default();
         let x = [1.0f32, 2.0, 3.0, // channel 0
                  4.0, 5.0, 6.0]; // channel 1
         let t = [1.0f32, 0.0, // row 0: identity on channel 0
                  1.0, 1.0]; // row 1: channel 0 + channel 1
-        assert_eq!(mm.forward_join(&x, &t, false),
+        assert_eq!(mm.forward_join(&[&x, &t], false, &mut s),
                    vec![1.0, 2.0, 3.0, 5.0, 7.0, 9.0]);
         let neg_t = [-1.0f32, 0.0, 0.0, -1.0];
-        let y = mm.forward_join(&x, &neg_t, true);
+        let y = mm.forward_join(&[&x, &neg_t], true, &mut s);
         assert!(y.iter().all(|&v| v == 0.0), "relu clamps the negated map");
+    }
+
+    #[test]
+    fn softmax_is_max_subtracted_and_normalized() {
+        // huge logits must not overflow: exp(x - max) <= 1 by construction
+        let mut row = [1.0e30f32, 1.0e30, -1.0e30];
+        softmax_inplace(&mut row);
+        assert!(row.iter().all(|v| v.is_finite()));
+        assert!((row[0] - 0.5).abs() < 1e-6 && (row[1] - 0.5).abs() < 1e-6);
+        assert_eq!(row[2], 0.0);
+        // shift invariance: softmax(x + c) == softmax(x)
+        let mut a = [0.3f32, -1.2, 2.5, 0.0];
+        let mut b = [100.3f32, 98.8, 102.5, 100.0];
+        softmax_inplace(&mut a);
+        softmax_inplace(&mut b);
+        for (u, v) in a.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-6, "{u} vs {v}");
+        }
+        let sum: f32 = a.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn layer_norm_normalizes_each_token_and_eps_stabilizes() {
+        // two channels, three tokens, channel-major
+        let x = [1.0f32, 5.0, 7.0, // channel 0
+                 3.0, 5.0, 7.0]; // channel 1 (token 1 and 2 are constant)
+        let y = layer_norm(2, 3, LN_EPS, &x);
+        // token 0: mean 2, var 1 -> ±1/sqrt(1 + eps)
+        let g = 1.0 / (1.0f32 + LN_EPS).sqrt();
+        assert!((y[0] + g).abs() < 1e-5 && (y[3] - g).abs() < 1e-5);
+        // constant tokens: variance 0 -> exact zeros, no NaN/inf (epsilon)
+        assert_eq!(y[1], 0.0);
+        assert_eq!(y[4], 0.0);
+        assert_eq!(y[2], 0.0);
+        assert_eq!(y[5], 0.0);
+        // every token ends up zero-mean / unit-variance (up to eps)
+        let mut rng = Rng::new(71);
+        let x = rng.normal_vec(16 * 9, 2.0);
+        let y = layer_norm(16, 9, LN_EPS, &x);
+        for t in 0..9 {
+            let vals: Vec<f32> = (0..16).map(|d| y[d * 9 + t]).collect();
+            let mean: f32 = vals.iter().sum::<f32>() / 16.0;
+            let var: f32 = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 16.0;
+            assert!(mean.abs() < 1e-4, "token {t} mean {mean}");
+            assert!((var - 1.0).abs() < 1e-2, "token {t} var {var}");
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrips_and_relocates() {
+        // (2, 3) channel-major -> (3, 2)
+        let x = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let t = transpose_cp(2, 3, &x);
+        assert_eq!(t, vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+        assert_eq!(transpose_cp(3, 2, &t), x.to_vec());
+        let node = Node::Transpose { c: 2, positions: 3 };
+        let mut s = Scratch::default();
+        assert_eq!(node.forward_reference(&x, false, &mut s), t);
+        assert_eq!((node.in_len(), node.out_len()), (6, 6));
+    }
+
+    #[test]
+    fn token_mean_pool_matches_global_avg_pool() {
+        let mut rng = Rng::new(72);
+        let x = rng.normal_vec(5 * 7, 1.0);
+        let pool = Node::TokenMeanPool { c: 5, positions: 7 };
+        let gp = Node::GlobalPool { kind: PoolKind::Avg, c: 5, positions: 7 };
+        let mut s = Scratch::default();
+        assert_eq!(pool.forward_reference(&x, false, &mut s),
+                   gp.forward_reference(&x, false, &mut s));
+        assert_eq!((pool.in_len(), pool.out_len()), (35, 5));
+    }
+
+    #[test]
+    fn pos_embed_add_is_elementwise_and_counts_as_parameters() {
+        let emb = Arc::new(vec![0.5f32, -1.0, 0.0, 2.0]);
+        let node = Node::PosEmbedAdd { emb };
+        assert!(!node.is_weight() && !node.is_join());
+        assert_eq!((node.in_len(), node.out_len()), (4, 4));
+        assert_eq!(node.resident_bytes_reference(), 16);
+        assert_eq!(node.extra_param_bits(), 128);
+        let mut s = Scratch::default();
+        let y = node.forward_reference(&[1.0, 1.0, 1.0, -3.0], false, &mut s);
+        assert_eq!(y, vec![1.5, 0.0, 1.0, -1.0]);
+    }
+
+    /// The attention node must equal a naive per-head implementation, and
+    /// stay finite under huge-magnitude inputs (the max-subtracted
+    /// softmax).
+    #[test]
+    fn attention_matches_naive_reference() {
+        let (heads, dim, tokens) = (2usize, 6usize, 5usize);
+        let node = Node::Attention { heads, dim, tokens };
+        assert_eq!(node.arity(), 3);
+        assert!(node.is_join() && !node.is_weight());
+        assert_eq!(node.in_len(), 30);
+        assert_eq!(node.slot_in_len(2), 30);
+        assert_eq!(node.f32_scratch_bytes(), 4 * tokens * tokens);
+        let mut rng = Rng::new(73);
+        let q = rng.normal_vec(dim * tokens, 1.0);
+        let k = rng.normal_vec(dim * tokens, 1.0);
+        let v = rng.normal_vec(dim * tokens, 1.0);
+        let mut s = Scratch::default();
+        let got = node.forward_join(&[&q, &k, &v], false, &mut s);
+        // naive: per head, per query token, softmax over all key tokens
+        let dh = dim / heads;
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut want = vec![0.0f32; dim * tokens];
+        for h in 0..heads {
+            for t1 in 0..tokens {
+                let mut scores = vec![0.0f32; tokens];
+                for (t2, sc) in scores.iter_mut().enumerate() {
+                    for d in h * dh..(h + 1) * dh {
+                        *sc += q[d * tokens + t1] * k[d * tokens + t2];
+                    }
+                    *sc *= scale;
+                }
+                let max = scores.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+                let exps: Vec<f32> = scores.iter().map(|&v| (v - max).exp()).collect();
+                let denom: f32 = exps.iter().sum();
+                for d in h * dh..(h + 1) * dh {
+                    let mut acc = 0.0f32;
+                    for t2 in 0..tokens {
+                        acc += exps[t2] / denom * v[d * tokens + t2];
+                    }
+                    want[d * tokens + t1] = acc;
+                }
+            }
+        }
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!((g - w).abs() < 1e-4 * w.abs().max(1.0), "out {i}: {g} vs {w}");
+        }
+        // huge scores (~1e30 logits): softmax must saturate, never overflow
+        let big: Vec<f32> = q.iter().map(|&v| v * 1.0e15).collect();
+        let y = node.forward_join(&[&big, &big, &v], false, &mut s);
+        assert!(y.iter().all(|o| o.is_finite()), "attention must be overflow-stable");
+    }
+
+    /// With a single token the attention weights are exactly 1, so the node
+    /// passes V through untouched — a closed-form anchor.
+    #[test]
+    fn attention_single_token_passes_v_through() {
+        let node = Node::Attention { heads: 2, dim: 4, tokens: 1 };
+        let q = [5.0f32, -2.0, 0.0, 1.0];
+        let k = [1.0f32, 1.0, 1.0, 1.0];
+        let v = [0.25f32, -0.5, 3.0, 4.0];
+        let mut s = Scratch::default();
+        assert_eq!(node.forward_join(&[&q, &k, &v], false, &mut s), v.to_vec());
     }
 
     #[test]

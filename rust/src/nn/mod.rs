@@ -16,12 +16,16 @@
 //! * **kernels** (this file) — per-row and per-layer FC math over every
 //!   `WeightPayload`;
 //! * **[`layers`]** — the layer-graph node types (`Fc`, `Conv2d`, pooling,
-//!   flatten, and the `Add`/`MatMulFeature` join nodes) with per-node
-//!   Reference and Packed forwards, the [`Graph`]/[`GraphNode`]/[`Slot`]
-//!   DAG wiring, and [`layers::lower_arch_spec`] which turns
-//!   `arch::ArchSpec`s — sequential CNN stacks *and* the annotated
-//!   branching topologies (ResNet residual blocks, PointNet T-Nets) — into
-//!   runnable graphs;
+//!   flatten, the transformer plumbing `LayerNorm` / `TokenMeanPool` /
+//!   `Transpose` / `PosEmbedAdd`, and the `Add`/`MatMulFeature`/`Attention`
+//!   join nodes) with per-node Reference and Packed forwards, the
+//!   [`Graph`]/[`GraphNode`]/[`Slot`] DAG wiring, and
+//!   [`layers::lower_arch_spec`] which turns `arch::ArchSpec`s —
+//!   sequential CNN stacks *and* the annotated branching topologies
+//!   (ResNet residual blocks, PointNet T-Nets, transformer encoder
+//!   sub-blocks: pre-LN multi-head attention and MLP residuals, mixer
+//!   token-mixing MLPs between transposes) — into runnable graphs, so
+//!   ViT / TST / MLP-Mixer specs execute natively end to end;
 //! * **[`Engine`]** (`engine` module) — executes a graph on one of the
 //!   [`EnginePath`]s with a value-table walker (activations addressable by
 //!   node id, freed after their last consumer); [`MlpEngine`] is the thin
@@ -50,7 +54,7 @@ mod packed;
 
 pub use engine::{Engine, MlpEngine, Nonlin};
 pub use layers::{lower_arch_spec, Conv2dLayer, FcLayer, Graph, GraphNode, LowerOptions,
-                 Node, PoolKind, Scratch, Slot};
+                 Node, PoolKind, Scratch, Slot, LN_EPS};
 pub use packed::{binarize_activations, binarize_activations_into,
                  forward_quantized_reference, payload_row_dot_i8, quantize_input_i8,
                  AlphaRun, EnginePath, PackedLayer, PackedLayout, PackedPayload};

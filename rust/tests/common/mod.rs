@@ -1,0 +1,54 @@
+//! Helpers shared by the graph-parity test binaries
+//! (`tests/graph_parity.rs`, `tests/transformer_parity.rs`).
+
+use tiledbits::nn::{Graph, Node, Scratch, Slot};
+
+/// Independent reference-graph evaluator: walk the graph with an explicit
+/// value table, calling the per-node Reference kernels directly (n-ary
+/// joins fetch every input slot).  ReLU placement mirrors the engine
+/// contract — weight nodes except the last weight node, overrides win —
+/// so `Engine::forward` on the Reference path must agree bit-exactly.
+pub fn handrolled_reference_forward(graph: &Graph, x: &[f32], relu_on: bool)
+                                    -> Vec<f32> {
+    fn fetch<'a>(slot: Slot, x: &'a [f32], values: &'a [Vec<f32>]) -> &'a [f32] {
+        match slot {
+            Slot::Source => x,
+            Slot::Node(j) => &values[j],
+        }
+    }
+    let last_weight = graph
+        .nodes
+        .iter()
+        .enumerate()
+        .filter(|(_, gn)| gn.node.is_weight())
+        .map(|(i, _)| i)
+        .last();
+    let mut values: Vec<Vec<f32>> = Vec::with_capacity(graph.len());
+    let mut scratch = Scratch::default();
+    for (i, gn) in graph.nodes.iter().enumerate() {
+        let default = gn.node.is_weight() && Some(i) != last_weight;
+        let relu = gn.relu.unwrap_or(default) && relu_on;
+        let out = if gn.node.is_join() {
+            let ins: Vec<&[f32]> =
+                gn.inputs.iter().map(|&s| fetch(s, x, &values)).collect();
+            gn.node.forward_join(&ins, relu, &mut scratch)
+        } else {
+            gn.node.forward_reference(fetch(gn.inputs[0], x, &values), relu,
+                                      &mut scratch)
+        };
+        values.push(out);
+    }
+    values.pop().unwrap()
+}
+
+pub fn argmax(y: &[f32]) -> usize {
+    y.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+pub fn count_nodes(graph: &Graph, pred: impl Fn(&Node) -> bool) -> usize {
+    graph.nodes.iter().filter(|gn| pred(&gn.node)).count()
+}

@@ -25,62 +25,19 @@
 //! `PackedLayout::from_env()`, so the CI matrix re-runs this suite under
 //! `TBN_LAYOUT=expanded`.
 
+mod common;
+
+use common::{argmax, count_nodes, handrolled_reference_forward};
 use tiledbits::arch::{self, ArchSpec, BlockRole, LayerSpec};
 use tiledbits::nn::{
-    lower_arch_spec, Engine, EnginePath, Graph, LowerOptions, Node, Nonlin,
-    PackedLayout, Scratch, Slot,
+    lower_arch_spec, Engine, EnginePath, LowerOptions, Node, Nonlin,
+    PackedLayout, Slot,
 };
 use tiledbits::tbn::AlphaMode;
 use tiledbits::util::Rng;
 
 fn opts(input: (usize, usize, usize), p: usize, seed: u64) -> LowerOptions {
     LowerOptions { input, p, alpha_mode: AlphaMode::PerTile, seed }
-}
-
-fn argmax(y: &[f32]) -> usize {
-    y.iter()
-        .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .map(|(i, _)| i)
-        .unwrap()
-}
-
-fn count_nodes(graph: &Graph, pred: impl Fn(&Node) -> bool) -> usize {
-    graph.nodes.iter().filter(|gn| pred(&gn.node)).count()
-}
-
-/// Independent reference-graph evaluator: walk the graph with an explicit
-/// value table, calling the per-node Reference kernels directly.  ReLU
-/// placement mirrors the engine contract (weight nodes except the last
-/// weight node; overrides win; everything gated on `relu_on`).
-fn handrolled_reference_forward(graph: &Graph, x: &[f32], relu_on: bool) -> Vec<f32> {
-    fn fetch<'a>(slot: Slot, x: &'a [f32], values: &'a [Vec<f32>]) -> &'a [f32] {
-        match slot {
-            Slot::Source => x,
-            Slot::Node(j) => &values[j],
-        }
-    }
-    let last_weight = graph
-        .nodes
-        .iter()
-        .enumerate()
-        .filter(|(_, gn)| gn.node.is_weight())
-        .map(|(i, _)| i)
-        .last();
-    let mut values: Vec<Vec<f32>> = Vec::with_capacity(graph.len());
-    let mut scratch = Scratch::default();
-    for (i, gn) in graph.nodes.iter().enumerate() {
-        let default = gn.node.is_weight() && Some(i) != last_weight;
-        let relu = gn.relu.unwrap_or(default) && relu_on;
-        let out = if gn.node.is_join() {
-            gn.node.forward_join(fetch(gn.inputs[0], x, &values),
-                                 fetch(gn.inputs[1], x, &values), relu)
-        } else {
-            gn.node.forward_reference(fetch(gn.inputs[0], x, &values), relu, &mut scratch)
-        };
-        values.push(out);
-    }
-    values.pop().unwrap()
 }
 
 /// Randomized annotated branching spec: either a small residual net (stem +

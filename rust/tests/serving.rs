@@ -304,6 +304,42 @@ fn pool_serves_branching_graph_engine() {
     assert_eq!(server.stats().served, xs.len());
 }
 
+/// A lowered transformer graph (attention joins, layer norms, pos-embed,
+/// mean-pool head) serves behind the batching pool bit-identically to
+/// direct batched inference — the `tbn serve --arch vit_micro` path.
+#[test]
+fn pool_serves_transformer_graph_engine() {
+    let spec = arch::vit_micro();
+    let lopts = LowerOptions {
+        input: spec.native_input().expect("vit_micro input shape"),
+        p: 4,
+        alpha_mode: AlphaMode::PerTile,
+        seed: 41,
+    };
+    let graph = lower_arch_spec(&spec, &lopts).unwrap();
+    // default layout through the TBN_LAYOUT env hook, so the CI expanded
+    // leg serves a transformer graph under the expanded layout too
+    let engine = Arc::new(
+        Engine::with_layout_graph(graph, Nonlin::Relu, EnginePath::Packed,
+                                  PackedLayout::from_env())
+            .unwrap());
+    let d = engine.in_len();
+    let mut r = Rng::new(42);
+    let xs: Vec<Vec<f32>> = (0..24).map(|_| r.normal_vec(d, 1.0)).collect();
+    let direct = engine.forward_batch(&xs);
+    let server = Server::start_pool(
+        engine,
+        BatchPolicy { max_batch: 4, window: Duration::from_micros(200) },
+        2,
+    );
+    for (x, want) in xs.iter().zip(&direct) {
+        let got = server.infer(x.clone()).unwrap();
+        assert_eq!(&got.y, want, "served transformer graph must equal direct forward");
+        assert_eq!(got.y.len(), 6);
+    }
+    assert_eq!(server.stats().served, xs.len());
+}
+
 /// The serve stack returns identical outputs under both packed weight
 /// layouts (the tile-resident layout is bit-exact vs expanded), while the
 /// tile-resident engine keeps strictly fewer weight bytes resident.

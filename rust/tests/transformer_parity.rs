@@ -1,0 +1,512 @@
+//! Native transformer execution parity (artifact-free): the encoder
+//! lowering (pre-LN attention / MLP sub-blocks, mixer token-mixing,
+//! pos-embed, mean-pool heads) and the Attention/LayerNorm/Transpose graph
+//! nodes, pinned the same three ways as `tests/graph_parity.rs`:
+//!
+//! * **Reference-graph oracle** — an independent test-side evaluator walks
+//!   the lowered graph (per-node `forward_reference`/`forward_join` calls
+//!   over an explicit value table) and must agree **bit-exactly** with
+//!   `Engine::forward` on the Reference path;
+//! * **Layout bit-exactness** — on the Packed path, the tile-resident
+//!   layout must agree **bit-exactly** with the expanded layout (single
+//!   and batched), across ragged dims (token counts and model dims that
+//!   are not multiples of 64 everywhere in the minis);
+//! * **Quantized-oracle closeness** — the packed forward tracks the f32
+//!   sign/gamma oracle at the argmax level (sign tie-breaks can flip
+//!   individual hidden units through deep stacks, as in the other parity
+//!   suites).
+//!
+//! Plus the lowering failure modes (head count not dividing dim,
+//! mismatched token counts, missing/mis-ordered Q/K/V/O projections,
+//! malformed MLP / token-mixing pairs, `Unsupported` constructs naming
+//! Swin/MobileViT), the attention-scratch term of `peak_memory_bytes`,
+//! and — in the release-mode `--ignored` tier — full-size
+//! `vit_small_imagenet` lowering and full-size ViT/TST/Mixer forwards.
+//!
+//! Packed engines built "at the default layout" go through
+//! `PackedLayout::from_env()`, so the CI matrix re-runs this suite (and
+//! the `vit_micro`/`tst_micro`/`mixer_micro` minis) under
+//! `TBN_LAYOUT=expanded`.
+
+mod common;
+
+use common::{argmax, count_nodes, handrolled_reference_forward};
+use tiledbits::arch::{self, ArchSpec, AttnPart, BlockRole, LayerSpec};
+use tiledbits::nn::{
+    lower_arch_spec, Engine, EnginePath, Graph, LowerOptions, Node, Nonlin,
+    PackedLayout, Scratch, Slot,
+};
+use tiledbits::tbn::AlphaMode;
+use tiledbits::util::Rng;
+
+fn opts(input: (usize, usize, usize), p: usize, seed: u64) -> LowerOptions {
+    LowerOptions { input, p, alpha_mode: AlphaMode::PerTile, seed }
+}
+
+fn native_opts(spec: &ArchSpec, p: usize, seed: u64) -> LowerOptions {
+    opts(spec.native_input().expect("native input shape"), p, seed)
+}
+
+/// The shared acceptance sweep body: Reference bit-exact vs the
+/// independent evaluator, tile-resident bit-exact vs expanded (single and
+/// batched), packed == forward_quantized, argmax tracking of the f32
+/// oracle.  Returns `(agree, total)` argmax counts.
+fn run_parity(graph: &Graph, samples: usize, seed: u64) -> (usize, usize) {
+    let reference =
+        Engine::from_graph(graph.clone(), Nonlin::Relu, EnginePath::Reference).unwrap();
+    let tile = Engine::with_layout_graph(graph.clone(), Nonlin::Relu,
+                                         EnginePath::Packed,
+                                         PackedLayout::TileResident)
+        .unwrap();
+    let expanded = Engine::with_layout_graph(graph.clone(), Nonlin::Relu,
+                                             EnginePath::Packed,
+                                             PackedLayout::Expanded)
+        .unwrap();
+    assert!(tile.resident_weight_bytes() <= expanded.resident_weight_bytes(),
+            "tile residency above expanded");
+    let mut rng = Rng::new(seed);
+    let mut agree = 0usize;
+    for s in 0..samples {
+        let x = rng.normal_vec(reference.in_len(), 1.0);
+        assert_eq!(reference.forward(&x),
+                   handrolled_reference_forward(graph, &x, true),
+                   "sample {s}: Reference DAG walk not bit-exact");
+        let yt = tile.forward(&x);
+        assert_eq!(yt, expanded.forward(&x), "sample {s}: layouts disagree");
+        assert_eq!(yt, tile.forward_quantized(&x),
+                   "sample {s}: packed forward_quantized must coincide");
+        if argmax(&reference.forward_quantized(&x)) == argmax(&yt) {
+            agree += 1;
+        }
+    }
+    let xs: Vec<Vec<f32>> =
+        (0..4).map(|_| rng.normal_vec(tile.in_len(), 1.0)).collect();
+    let batch = tile.forward_batch(&xs);
+    assert_eq!(batch, expanded.forward_batch(&xs), "batched layouts disagree");
+    for (x, y) in xs.iter().zip(&batch) {
+        assert_eq!(&tile.forward(x), y, "batch != single");
+    }
+    (agree, samples)
+}
+
+// ---------------------------------------------------------------------------
+// The transformer minis, end to end on every path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn vit_micro_lowers_to_expected_graph_and_runs() {
+    let spec = arch::vit_micro();
+    let graph = lower_arch_spec(&spec, &native_opts(&spec, 4, 900)).unwrap();
+    // patch_embed, pos_embed_add, 2 x (LN q k v attn wo add + LN fc1 fc2
+    // add), final LN, token mean pool, head
+    assert_eq!(graph.len(), 27);
+    assert_eq!(count_nodes(&graph, |n| matches!(n, Node::Attention { .. })), 2);
+    assert_eq!(count_nodes(&graph, |n| matches!(n, Node::LayerNorm { .. })), 5);
+    assert_eq!(count_nodes(&graph, |n| matches!(n, Node::PosEmbedAdd { .. })), 1);
+    assert_eq!(count_nodes(&graph, |n| matches!(n, Node::TokenMeanPool { .. })), 1);
+    assert_eq!(count_nodes(&graph, |n| matches!(n, Node::Add { .. })), 4);
+    // ragged everywhere: dim 20, tokens 10 -> joins are 200 wide (% 64 != 0)
+    for gn in &graph.nodes {
+        if let Node::Add { len } = gn.node {
+            assert_eq!(len % 64, 8, "join width 200 must be ragged");
+        }
+    }
+    match &graph.nodes[6].node {
+        Node::Attention { heads, dim, tokens } => {
+            assert_eq!((*heads, *dim, *tokens), (4, 20, 10));
+        }
+        other => panic!("node 6 should be the first attention, got {}", other.name()),
+    }
+    // wiring: attention reads the three projections; the residual add reads
+    // the O projection and the block entry (the pos-embed output)
+    assert_eq!(graph.nodes[6].inputs,
+               vec![Slot::Node(3), Slot::Node(4), Slot::Node(5)]);
+    assert_eq!(graph.nodes[6].relu, Some(false));
+    assert_eq!(graph.nodes[8].inputs, vec![Slot::Node(7), Slot::Node(1)]);
+    assert_eq!(graph.nodes[8].relu, Some(false), "transformer joins stay linear");
+    assert_eq!(graph.nodes[3].relu, Some(false), "projections stay linear");
+    assert_eq!(graph.nodes[10].relu, Some(true), "the MLP hidden layer activates");
+
+    let (agree, total) = run_parity(&graph, 8, 901);
+    assert!(agree * 10 >= total * 6, "argmax agreement {agree}/{total}");
+
+    // the attention score scratch is visible in the peak-memory model
+    let engine =
+        Engine::from_graph(graph.clone(), Nonlin::Relu, EnginePath::Reference).unwrap();
+    let (dim, tokens) = (20usize, 10usize);
+    let attn_term = 4 * (3 * dim * tokens + dim * tokens) + 4 * tokens * tokens;
+    assert!(engine.peak_memory_bytes() >= attn_term,
+            "peak {} must cover the attention node's inputs+output+scores {attn_term}",
+            engine.peak_memory_bytes());
+
+    // int8 entry path runs and batches consistently
+    let int8 =
+        Engine::from_graph(graph, Nonlin::Relu, EnginePath::PackedInt8).unwrap();
+    let mut rng = Rng::new(902);
+    let x = rng.normal_vec(int8.in_len(), 1.0);
+    assert!(int8.forward(&x).iter().all(|v| v.is_finite()));
+    assert_eq!(int8.forward_batch(&[x.clone()])[0], int8.forward(&x));
+}
+
+#[test]
+fn tst_micro_lowers_and_runs_end_to_end() {
+    let spec = arch::tst_micro();
+    let graph = lower_arch_spec(&spec, &native_opts(&spec, 4, 910)).unwrap();
+    // in_proj, 2 x 11 encoder nodes, final LN + pool + head
+    assert_eq!(graph.len(), 26);
+    assert_eq!(count_nodes(&graph, |n| matches!(n, Node::Attention { .. })), 2);
+    assert_eq!(count_nodes(&graph, |n| matches!(n, Node::PosEmbedAdd { .. })), 0);
+    match graph
+        .nodes
+        .iter()
+        .find(|gn| matches!(gn.node, Node::Attention { .. }))
+        .map(|gn| &gn.node)
+    {
+        Some(&Node::Attention { heads, dim, tokens }) => {
+            assert_eq!((heads, dim, tokens), (3, 12, 9));
+        }
+        _ => panic!("no attention node"),
+    }
+    let (agree, total) = run_parity(&graph, 8, 911);
+    assert!(agree * 10 >= total * 6, "argmax agreement {agree}/{total}");
+}
+
+#[test]
+fn mixer_micro_token_mixing_runs_transposed() {
+    let spec = arch::mixer_micro();
+    let graph = lower_arch_spec(&spec, &native_opts(&spec, 4, 920)).unwrap();
+    // patch_embed, 2 x (LN T fc1 fc2 T add + LN fc1 fc2 add), LN pool head
+    assert_eq!(graph.len(), 24);
+    assert_eq!(count_nodes(&graph, |n| matches!(n, Node::Transpose { .. })), 4);
+    assert_eq!(count_nodes(&graph, |n| matches!(n, Node::Attention { .. })), 0);
+    assert_eq!(count_nodes(&graph, |n| matches!(n, Node::Add { .. })), 4);
+    // the token-mixing FCs run on the transposed (tokens, dim) view: 1x1
+    // convs whose channel count is the token count
+    let tok_fcs = graph
+        .nodes
+        .iter()
+        .filter_map(|gn| match &gn.node {
+            Node::Conv2d(c) if c.record.name.contains(".tok.") => Some((c.ci, c.co)),
+            _ => None,
+        })
+        .collect::<Vec<_>>();
+    assert_eq!(tok_fcs, vec![(9, 12), (12, 9), (9, 12), (12, 9)]);
+    let (agree, total) = run_parity(&graph, 8, 921);
+    assert!(agree * 10 >= total * 6, "argmax agreement {agree}/{total}");
+}
+
+/// The minis at the env-selected default layout — the CI `TBN_LAYOUT`
+/// matrix hook: both packed layouts serve batch == single bit-identically.
+#[test]
+fn minis_run_at_env_default_layout() {
+    for spec in [arch::vit_micro(), arch::tst_micro(), arch::mixer_micro()] {
+        let graph = lower_arch_spec(&spec, &native_opts(&spec, 4, 990))
+            .unwrap_or_else(|e| panic!("{}: {e}", spec.name));
+        let engine = Engine::with_layout_graph(graph, Nonlin::Relu,
+                                               EnginePath::Packed,
+                                               PackedLayout::from_env())
+            .unwrap();
+        let mut rng = Rng::new(991);
+        let xs: Vec<Vec<f32>> =
+            (0..5).map(|_| rng.normal_vec(engine.in_len(), 1.0)).collect();
+        let batch = engine.forward_batch(&xs);
+        for (x, y) in xs.iter().zip(&batch) {
+            assert_eq!(&engine.forward(x), y, "{}: batch != single", spec.name);
+        }
+    }
+}
+
+/// Full-size TST (weather): light enough for the default tier on the
+/// packed paths — tile-resident vs expanded stay bit-exact at full depth.
+#[test]
+fn tst_weather_full_size_packed_layouts_bit_exact() {
+    let spec = arch::tst_weather();
+    let graph = lower_arch_spec(&spec, &native_opts(&spec, 4, 930)).unwrap();
+    assert_eq!(count_nodes(&graph, |n| matches!(n, Node::Attention { .. })), 2);
+    assert_eq!(count_nodes(&graph, |n| matches!(n, Node::Add { .. })), 4);
+    let tile = Engine::with_layout_graph(graph.clone(), Nonlin::Relu,
+                                         EnginePath::Packed,
+                                         PackedLayout::TileResident)
+        .unwrap();
+    let expanded = Engine::with_layout_graph(graph, Nonlin::Relu, EnginePath::Packed,
+                                             PackedLayout::Expanded)
+        .unwrap();
+    assert_eq!(tile.in_len(), 7 * 96);
+    assert_eq!(tile.out_len(), 7);
+    assert!(tile.resident_weight_bytes() < expanded.resident_weight_bytes());
+    let mut rng = Rng::new(931);
+    for s in 0..2 {
+        let x = rng.normal_vec(tile.in_len(), 1.0);
+        assert_eq!(tile.forward(&x), expanded.forward(&x), "sample {s}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Full-size paper specs: graph construction in the default tier
+// ---------------------------------------------------------------------------
+
+#[test]
+fn full_size_transformers_lower_natively() {
+    // (spec, expected attention nodes, expected residual adds)
+    let cases = [
+        (arch::vit_cifar(), 6usize, 12usize),
+        (arch::tst_electricity(), 2, 4),
+        (arch::mlpmixer_cifar(), 0, 12),
+    ];
+    for (spec, attn, adds) in cases {
+        let graph = lower_arch_spec(&spec, &native_opts(&spec, 4, 940))
+            .unwrap_or_else(|e| panic!("{}: {e}", spec.name));
+        assert_eq!(count_nodes(&graph, |n| matches!(n, Node::Attention { .. })), attn,
+                   "{}", spec.name);
+        assert_eq!(count_nodes(&graph, |n| matches!(n, Node::Add { .. })), adds,
+                   "{}", spec.name);
+        assert_eq!(count_nodes(&graph, |n| matches!(n, Node::TokenMeanPool { .. })), 1,
+                   "{}", spec.name);
+        let engine = Engine::from_graph(graph, Nonlin::Relu, EnginePath::Reference)
+            .unwrap_or_else(|e| panic!("{}: {e}", spec.name));
+        let (c, h, w) = spec.native_input().unwrap();
+        assert_eq!(engine.in_len(), c * h * w, "{}", spec.name);
+    }
+    // vit_cifar carries the learned pos-embed
+    let graph = lower_arch_spec(&arch::vit_cifar(),
+                                &native_opts(&arch::vit_cifar(), 4, 941))
+        .unwrap();
+    assert_eq!(count_nodes(&graph, |n| matches!(n, Node::PosEmbedAdd { .. })), 1);
+}
+
+#[test]
+fn unsupported_attention_constructs_are_named() {
+    let swin = arch::swin_t();
+    let err = lower_arch_spec(&swin, &native_opts(&swin, 4, 950)).unwrap_err();
+    assert!(err.contains("shifted-window"), "unexpected error: {err}");
+    let mv = arch::mobilevit();
+    let err = lower_arch_spec(&mv, &native_opts(&mv, 4, 951)).unwrap_err();
+    assert!(err.contains("unfold/fold"), "unexpected error: {err}");
+}
+
+// ---------------------------------------------------------------------------
+// Node-level numerics: max-subtracted softmax and LayerNorm epsilon
+// ---------------------------------------------------------------------------
+
+/// Attention's softmax is max-subtracted: scaling Q to produce ~1e30
+/// logits must saturate toward the argmax key, never overflow to NaN/inf.
+#[test]
+fn attention_softmax_is_overflow_stable_and_saturates() {
+    let (heads, dim, tokens) = (1usize, 4usize, 3usize);
+    let node = Node::Attention { heads, dim, tokens };
+    let mut scratch = Scratch::default();
+    // token 1's key aligns with every query -> its value dominates
+    let q = vec![1.0f32; dim * tokens];
+    let mut k = vec![-1.0f32; dim * tokens];
+    for d in 0..dim {
+        k[d * tokens + 1] = 1.0;
+    }
+    let v: Vec<f32> = (0..dim * tokens).map(|i| i as f32).collect();
+    let big_q: Vec<f32> = q.iter().map(|&x| x * 1.0e15).collect();
+    let big_k: Vec<f32> = k.iter().map(|&x| x * 1.0e15).collect();
+    let y = node.forward_join(&[&big_q, &big_k, &v], false, &mut scratch);
+    assert!(y.iter().all(|o| o.is_finite()), "softmax must not overflow");
+    // saturated: every query token attends ~entirely to token 1
+    for d in 0..dim {
+        for t in 0..tokens {
+            let want = v[d * tokens + 1];
+            let got = y[d * tokens + t];
+            assert!((got - want).abs() < 1e-3, "d={d} t={t}: {got} vs {want}");
+        }
+    }
+}
+
+/// The LayerNorm node normalizes each token across channels; all-constant
+/// tokens hit the epsilon floor (exact zeros, no NaN from a 0 variance).
+#[test]
+fn layer_norm_node_normalizes_tokens_and_eps_guards_zero_variance() {
+    let (c, positions) = (3usize, 2usize);
+    let node = Node::LayerNorm { c, positions, eps: tiledbits::nn::LN_EPS };
+    let mut scratch = Scratch::default();
+    // token 0: (1, 2, 3); token 1: constant 5s
+    let x = [1.0f32, 5.0, 2.0, 5.0, 3.0, 5.0];
+    let y = node.forward_reference(&x, false, &mut scratch);
+    assert!(y.iter().all(|v| v.is_finite()));
+    // token 0 is zero-mean with unit variance (up to eps)
+    let t0: Vec<f32> = (0..c).map(|d| y[d * positions]).collect();
+    let mean: f32 = t0.iter().sum::<f32>() / c as f32;
+    let var: f32 = t0.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / c as f32;
+    assert!(mean.abs() < 1e-6 && (var - 1.0).abs() < 1e-3, "mean {mean} var {var}");
+    // token 1: zero variance -> exact zeros via the epsilon guard
+    for d in 0..c {
+        assert_eq!(y[d * positions + 1], 0.0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lowering failure modes
+// ---------------------------------------------------------------------------
+
+fn attn_layer(name: &str, dim: usize, tokens: usize, heads: usize, part: AttnPart)
+              -> LayerSpec {
+    LayerSpec::fc_tok(name, dim, dim, tokens)
+        .in_block(BlockRole::AttnProj { id: "b0.attn".into(), heads, part })
+}
+
+#[test]
+fn head_count_not_dividing_dim_is_rejected() {
+    let (dim, tokens, heads) = (10usize, 6usize, 3usize);
+    let spec = ArchSpec {
+        name: "bad_heads".into(),
+        layers: vec![
+            attn_layer("wq", dim, tokens, heads, AttnPart::Q),
+            attn_layer("wk", dim, tokens, heads, AttnPart::K),
+            attn_layer("wv", dim, tokens, heads, AttnPart::V),
+            attn_layer("wo", dim, tokens, heads, AttnPart::O),
+            LayerSpec::fc("head", dim, 4),
+        ],
+    };
+    let err = lower_arch_spec(&spec, &opts((dim, tokens, 1), 4, 960)).unwrap_err();
+    assert!(err.contains("heads do not divide"), "unexpected error: {err}");
+}
+
+#[test]
+fn mismatched_token_counts_are_rejected() {
+    let (dim, tokens) = (8usize, 10usize);
+    let spec = ArchSpec {
+        name: "bad_tokens".into(),
+        layers: vec![
+            attn_layer("wq", dim, tokens, 2, AttnPart::Q),
+            // wk claims 12 tokens while the block's features carry 10
+            attn_layer("wk", dim, 12, 2, AttnPart::K),
+            attn_layer("wv", dim, tokens, 2, AttnPart::V),
+            attn_layer("wo", dim, tokens, 2, AttnPart::O),
+            LayerSpec::fc("head", dim, 4),
+        ],
+    };
+    let err = lower_arch_spec(&spec, &opts((dim, tokens, 1), 4, 961)).unwrap_err();
+    assert!(err.contains("mismatched token counts"), "unexpected error: {err}");
+}
+
+#[test]
+fn missing_or_misordered_projections_are_rejected() {
+    let (dim, tokens) = (8usize, 10usize);
+    // missing the O projection
+    let spec = ArchSpec {
+        name: "no_o".into(),
+        layers: vec![
+            attn_layer("wq", dim, tokens, 2, AttnPart::Q),
+            attn_layer("wk", dim, tokens, 2, AttnPart::K),
+            attn_layer("wv", dim, tokens, 2, AttnPart::V),
+            LayerSpec::fc("head", dim, 4),
+        ],
+    };
+    let err = lower_arch_spec(&spec, &opts((dim, tokens, 1), 4, 962)).unwrap_err();
+    assert!(err.contains("Q, K, V, O"), "unexpected error: {err}");
+    // V and K swapped
+    let spec = ArchSpec {
+        name: "swapped".into(),
+        layers: vec![
+            attn_layer("wq", dim, tokens, 2, AttnPart::Q),
+            attn_layer("wv", dim, tokens, 2, AttnPart::V),
+            attn_layer("wk", dim, tokens, 2, AttnPart::K),
+            attn_layer("wo", dim, tokens, 2, AttnPart::O),
+            LayerSpec::fc("head", dim, 4),
+        ],
+    };
+    let err = lower_arch_spec(&spec, &opts((dim, tokens, 1), 4, 963)).unwrap_err();
+    assert!(err.contains("in order"), "unexpected error: {err}");
+}
+
+#[test]
+fn malformed_mlp_and_token_mix_pairs_are_rejected() {
+    let (dim, tokens) = (8usize, 10usize);
+    let mlp = |l: LayerSpec| l.in_block(BlockRole::MlpBody { id: "b0.mlp".into() });
+    // fc2 returns to the wrong width
+    let spec = ArchSpec {
+        name: "bad_mlp".into(),
+        layers: vec![
+            mlp(LayerSpec::fc_tok("fc1", dim, 16, tokens)),
+            mlp(LayerSpec::fc_tok("fc2", 16, dim + 1, tokens)),
+            LayerSpec::fc("head", dim + 1, 4),
+        ],
+    };
+    let err = lower_arch_spec(&spec, &opts((dim, tokens, 1), 4, 964)).unwrap_err();
+    assert!(err.contains("MLP sub-block"), "unexpected error: {err}");
+    // token-mixing pair whose fc1 does not read the token axis
+    let tok = |l: LayerSpec| l.in_block(BlockRole::TokenMix { id: "b0.tok".into() });
+    let spec = ArchSpec {
+        name: "bad_tok".into(),
+        layers: vec![
+            tok(LayerSpec::fc_tok("fc1", dim, 16, tokens)),
+            tok(LayerSpec::fc_tok("fc2", 16, dim, tokens)),
+            LayerSpec::fc("head", dim, 4),
+        ],
+    };
+    let err = lower_arch_spec(&spec, &opts((dim, tokens, 1), 4, 965)).unwrap_err();
+    assert!(err.contains("token-mixing MLP"), "unexpected error: {err}");
+}
+
+/// A pos-embed record that does not match the activation it sits on must
+/// fail the lowering, not be silently dropped from the graph.
+#[test]
+fn mismatched_pos_embed_is_rejected() {
+    let (dim, tokens) = (8usize, 10usize);
+    let spec = ArchSpec {
+        name: "bad_pos".into(),
+        layers: vec![
+            LayerSpec::fc_tok("patch_embed", 4, dim, tokens),
+            // sized for twice the tokens actually present
+            LayerSpec::other("pos_embed", dim * tokens * 2),
+            LayerSpec::fc("head", dim, 4),
+        ],
+    };
+    let err = lower_arch_spec(&spec, &opts((4, tokens, 1), 4, 966)).unwrap_err();
+    assert!(err.contains("pos_embed") && err.contains("cannot lower"),
+            "unexpected error: {err}");
+}
+
+// ---------------------------------------------------------------------------
+// Release-mode tier: full-size lowering and forwards
+// ---------------------------------------------------------------------------
+
+/// ~52M synthesized params: release (`--ignored`) tier only.
+#[test]
+#[ignore]
+fn vit_small_imagenet_lowers_full_size() {
+    let spec = arch::vit_small_imagenet();
+    let graph = lower_arch_spec(&spec, &native_opts(&spec, 4, 970)).unwrap();
+    assert_eq!(count_nodes(&graph, |n| matches!(n, Node::Attention { .. })), 6);
+    assert_eq!(count_nodes(&graph, |n| matches!(n, Node::Add { .. })), 12);
+    assert_eq!(count_nodes(&graph, |n| matches!(n, Node::PosEmbedAdd { .. })), 1);
+    let engine =
+        Engine::from_graph(graph, Nonlin::Relu, EnginePath::Reference).unwrap();
+    assert_eq!(engine.in_len(), 768 * 196);
+    assert_eq!(engine.out_len(), 1000);
+}
+
+/// Full-size ViT / TST-electricity / Mixer forwards: tile-resident vs
+/// expanded bit-exact at full depth (release tier).
+#[test]
+#[ignore]
+fn full_size_transformer_forwards_tile_vs_expanded() {
+    for spec in [arch::vit_cifar(), arch::tst_electricity(), arch::mlpmixer_cifar()] {
+        let graph = lower_arch_spec(&spec, &native_opts(&spec, 4, 980))
+            .unwrap_or_else(|e| panic!("{}: {e}", spec.name));
+        let tile = Engine::with_layout_graph(graph.clone(), Nonlin::Relu,
+                                             EnginePath::Packed,
+                                             PackedLayout::TileResident)
+            .unwrap();
+        let expanded = Engine::with_layout_graph(graph, Nonlin::Relu,
+                                                 EnginePath::Packed,
+                                                 PackedLayout::Expanded)
+            .unwrap();
+        assert!(tile.resident_weight_bytes() < expanded.resident_weight_bytes(),
+                "{}", spec.name);
+        let mut rng = Rng::new(981);
+        for s in 0..2 {
+            let x = rng.normal_vec(tile.in_len(), 1.0);
+            assert_eq!(tile.forward(&x), expanded.forward(&x),
+                       "{} sample {s}", spec.name);
+        }
+        let xs: Vec<Vec<f32>> =
+            (0..2).map(|_| rng.normal_vec(tile.in_len(), 1.0)).collect();
+        assert_eq!(tile.forward_batch(&xs), expanded.forward_batch(&xs),
+                   "{} batched", spec.name);
+    }
+}
