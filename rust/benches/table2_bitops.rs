@@ -12,7 +12,9 @@ use tiledbits::tbn::bitops::{
     xnor_dot_words_offset, xnor_dot_words_range, xnor_dot_words_range_scalar,
     xnor_dot_words_range_u64x4,
 };
-use tiledbits::tbn::{alphas_from, tile_from_weights, AlphaMode};
+use tiledbits::nn::{binarize_activations_into, PackedLayer, PackedLayout};
+use tiledbits::tbn::{alphas_from, tile_from_weights, AlphaMode, LayerRecord,
+                     WeightPayload};
 use tiledbits::tensor::BitVec;
 use tiledbits::util::Rng;
 
@@ -82,4 +84,42 @@ fn main() {
     println!("u128 lanes vs scalar {:.2}x, vs 4-wide {:.2}x; shift-stitched \
               (tile-resident) {wps_off:.3e} words/s ({:.2}x of aligned u128)",
              wps_wide / wps_sc, wps_wide / wps_u4, wps_off / wps_wide);
+
+    // intra-op thread scaling of the batched row kernel itself (the loop the
+    // packed engine runs per weight layer): 512x512 tiled layer, batch of
+    // 32 pre-binarized inputs, output rows split across 1/2/4/8 threads.
+    let rec = LayerRecord {
+        name: "mt".into(),
+        shape: vec![m, n],
+        payload: WeightPayload::Tiled { p, tile, alphas },
+    };
+    let packed = PackedLayer::from_record_mn_layout(&rec, m, n,
+                                                    PackedLayout::TileResident)
+        .unwrap();
+    let bsz = 32usize;
+    let stride = n.div_ceil(64);
+    let mut bwords = vec![0u64; bsz * stride];
+    let mut gammas = vec![0.0f32; bsz];
+    for b in 0..bsz {
+        let xb = rng.normal_vec(n, 1.0);
+        gammas[b] = binarize_activations_into(
+            &xb, &mut bwords[b * stride..(b + 1) * stride]);
+    }
+    let kernel_words = m * bsz * stride; // row-dot words touched per call
+    println!("\n-- batched row-kernel thread scaling (512x512, batch 32) --");
+    println!("{:>8} {:>14} {:>8}", "threads", "words/s", "speedup");
+    let mut out = vec![0.0f32; bsz * m];
+    let mut base = 0.0f64;
+    for t in [1usize, 2, 4, 8] {
+        let res = bench(&format!("batched rows threads={t}"), 3, 60, || {
+            packed.forward_batch_binarized_rows_mt(0, m, &bwords, stride, &gammas,
+                                                   false, &mut out, t);
+            std::hint::black_box(&out);
+        });
+        let wps = res.throughput(kernel_words);
+        if t == 1 {
+            base = wps;
+        }
+        println!("{t:>8} {:>14.3e} {:>7.2}x", wps, wps / base);
+    }
 }

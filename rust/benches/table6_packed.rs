@@ -42,6 +42,32 @@ fn micro_model(p: usize) -> TbnzModel {
     }
 }
 
+/// A wider 512 -> 512 -> 512 -> 10 tiled MLP for the intra-op thread-scaling
+/// curve: the packed hidden layer has 512 output rows to split across cores
+/// (the micro model's sole packed layer is the 10-row head).
+fn wide_model(p: usize) -> TbnzModel {
+    let mut r = Rng::new(43);
+    let mk = |name: &str, m: usize, n: usize, r: &mut Rng| {
+        let w: Vec<f32> = r.normal_vec(m * n, 1.0);
+        LayerRecord {
+            name: name.into(),
+            shape: vec![m, n],
+            payload: WeightPayload::Tiled {
+                p,
+                tile: tile_from_weights(&w, p),
+                alphas: alphas_from(&w, p, AlphaMode::PerTile),
+            },
+        }
+    };
+    TbnzModel {
+        layers: vec![
+            mk("fc0", 512, 512, &mut r),
+            mk("fc1", 512, 512, &mut r),
+            mk("head", 10, 512, &mut r),
+        ],
+    }
+}
+
 fn main() {
     header("Table 6 companion: packed XNOR path vs f32 reference (micro MLP)");
 
@@ -84,6 +110,31 @@ fn main() {
              r_pkd.per_sec(), r_pkd.per_sec() / r_refq.per_sec());
     println!("reference batch:  {:>12.0}", b_ref.throughput(batch.len()));
     println!("packed batch:     {:>12.0}", b_pkd.throughput(batch.len()));
+
+    // intra-op thread scaling on a wider hidden layer (the micro MLP's only
+    // packed layer has 10 rows — too few to split): 512 -> 512 tiled hidden
+    // layer behind an f32 entry layer, batch of 32, threads 1/2/4/8.
+    println!("\n-- intra-op kernel-thread scaling (512-wide hidden, batch 32) --");
+    println!("{:>8} {:>16} {:>14} {:>8}", "threads", "batch latency", "samples/s",
+             "speedup");
+    let wide = wide_model(p);
+    let wbatch: Vec<Vec<f32>> = (0..32).map(|_| r.normal_vec(512, 1.0)).collect();
+    let mut base = 0.0f64;
+    for t in [1usize, 2, 4, 8] {
+        let engine = MlpEngine::with_path(wide.clone(), Nonlin::Relu,
+                                          EnginePath::Packed)
+            .unwrap()
+            .with_threads(t);
+        let res = bench(&format!("packed forward_batch(32) threads={t}"), 3, 40, || {
+            std::hint::black_box(engine.forward_batch(&wbatch));
+        });
+        let sps = res.throughput(wbatch.len());
+        if t == 1 {
+            base = sps;
+        }
+        println!("{t:>8} {:>13.0} us {:>14.0} {:>7.2}x",
+                 1e6 / res.per_sec(), sps, sps / base);
+    }
 
     println!("\n-- Table 6/7-style memory (bytes) --");
     println!("{:28} {:>12} {:>12} {:>12}", "engine", "resident W", "peak mem",

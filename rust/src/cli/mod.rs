@@ -96,6 +96,8 @@ OPTIONS:
   --requests <n>            demo request count for serve --arch [default: 64]
   --layout <layout>         packed weight layout: tile|expanded (A/B)
                                         [default: tile, or $TBN_LAYOUT if set]
+  --threads <n>             intra-op kernel threads per forward (bit-exact
+                            at any count) [default: 1, or $TBN_THREADS if set]
   --workers <n>             serve worker threads          [default: 2]
   --queue-cap <n>           serve queue bound             [default: 1024]
   --overflow <policy>       full-queue behavior: block|reject [default: block]

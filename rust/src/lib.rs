@@ -62,7 +62,14 @@
 //!   walk each row's weight state once across the whole batch.
 //!   `serve::Server::start_pool` shares one packed model across N batching
 //!   workers behind a bounded queue (`serve::ServePolicy`: reject-or-block
-//!   backpressure, per-worker counters, p50/p95/p99 latency report).
+//!   backpressure, per-worker counters, nearest-rank p50/p95/p99 latency
+//!   report).  Both packed paths also thread *within* one forward:
+//!   `Engine::with_threads` (CLI `--threads`, env `TBN_THREADS`) splits the
+//!   independent output rows / conv positions of each packed kernel across
+//!   scoped std threads writing disjoint output slices, leaving every
+//!   per-element reduction order untouched — so threaded forwards are
+//!   **bit-exact** against single-threaded ones at any thread count, and
+//!   intra-op threads compose multiplicatively with serve workers.
 //! * `PackedInt8` — `Packed` with the first weight layer's input quantized
 //!   to 8-bit integers (the paper's microcontroller input packing) instead
 //!   of running layer 0 in f32; parity-gated by the quantization bound in
@@ -71,7 +78,8 @@
 //! ## Test tiers
 //!
 //! * **Artifact-free** (always run, what CI gates on — once per packed
-//!   weight layout via the `TBN_LAYOUT` env override): unit tests, property
+//!   weight layout via the `TBN_LAYOUT` env override, crossed with
+//!   single-/multi-threaded kernels via `TBN_THREADS`): unit tests, property
 //!   tests (`tests/properties.rs`), packed/reference parity
 //!   (`tests/packed_parity.rs`), conv parity + CNN graph smoke tests
 //!   (`tests/conv_parity.rs`), branching-graph parity

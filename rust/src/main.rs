@@ -9,8 +9,8 @@ use tiledbits::arch;
 use tiledbits::cli::{Cli, USAGE};
 use tiledbits::config::Manifest;
 use tiledbits::coordinator::{self, report, TABLES};
-use tiledbits::nn::{lower_arch_spec, Engine, EnginePath, LowerOptions, MlpEngine,
-                    Nonlin, PackedLayout};
+use tiledbits::nn::{lower_arch_spec, threads_from_env, Engine, EnginePath,
+                    LowerOptions, MlpEngine, Nonlin, PackedLayout};
 use tiledbits::runtime::Runtime;
 use tiledbits::serve::{BatchPolicy, OverflowPolicy, ServePolicy, Server, ServerStats};
 use tiledbits::tbn::AlphaMode;
@@ -59,7 +59,20 @@ fn packed_layout_opt(cli: &Cli) -> Result<PackedLayout> {
     }
 }
 
-fn serve_policy_opt(cli: &Cli) -> ServePolicy {
+/// `--threads` wins; without it the `TBN_THREADS` env override (the CI A/B
+/// hook) picks the default.  Like `--layout`, a typo must not silently
+/// benchmark the wrong kernel configuration, so parse errors fail loudly.
+fn threads_opt(cli: &Cli) -> Result<usize> {
+    match cli.opt("threads") {
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) if n >= 1 => Ok(n),
+            _ => Err(anyhow!("invalid --threads {v:?} (want an integer >= 1)")),
+        },
+        None => Ok(threads_from_env()),
+    }
+}
+
+fn serve_policy_opt(cli: &Cli, kernel_threads: usize) -> ServePolicy {
     ServePolicy {
         batch: BatchPolicy::default(),
         queue_cap: cli.opt_usize("queue-cap").unwrap_or(1024),
@@ -67,17 +80,25 @@ fn serve_policy_opt(cli: &Cli) -> ServePolicy {
             "reject" => OverflowPolicy::Reject,
             _ => OverflowPolicy::Block,
         },
+        kernel_threads,
     }
 }
 
 fn print_serve_stats(stats: &ServerStats, elapsed_s: f64) {
     info!("serve", "{} requests in {elapsed_s:.3}s ({} rejected), mean latency \
-           {:.0}us, mean batch {:.1}",
-          stats.served, stats.rejected, stats.mean_latency_us(), stats.mean_batch());
+           {:.0}us, mean batch {:.1}, {} kernel thread(s)/request",
+          stats.served, stats.rejected, stats.mean_latency_us(), stats.mean_batch(),
+          stats.kernel_threads);
     if let Some(p) = stats.latency_percentiles() {
         info!("serve", "latency percentiles over last {} requests: \
                p50 {}us  p95 {}us  p99 {}us  (lifetime max {}us)",
               p.samples, p.p50_us, p.p95_us, p.p99_us, stats.max_latency_us);
+    }
+    if !stats.per_worker.is_empty() {
+        info!("serve", "peak kernel occupancy ~{} cores ({} workers x {} \
+               kernel threads)",
+              stats.per_worker.len() * stats.kernel_threads,
+              stats.per_worker.len(), stats.kernel_threads);
     }
     for (w, ws) in stats.per_worker.iter().enumerate() {
         info!("serve", "  worker {w}: {} requests in {} batches", ws.served, ws.batches);
@@ -105,14 +126,16 @@ fn serve_arch(cli: &Cli, name: &str) -> Result<()> {
     let graph = lower_arch_spec(&spec, &lopts).map_err(|e| anyhow!(e))?;
     let path = engine_path_opt(cli);
     let layout = packed_layout_opt(cli)?;
-    let engine =
-        Engine::with_layout_graph(graph, Nonlin::Relu, path, layout).map_err(|e| anyhow!(e))?;
+    let threads = threads_opt(cli)?;
+    let engine = Engine::with_layout_graph(graph, Nonlin::Relu, path, layout)
+        .map_err(|e| anyhow!(e))?
+        .with_threads(threads);
     let (in_dim, out_dim) = (engine.in_len(), engine.out_len());
     let workers = cli.opt_usize("workers").unwrap_or(2);
-    let policy = serve_policy_opt(cli);
+    let policy = serve_policy_opt(cli, threads);
     info!("serve", "{name}: natively lowered graph ({} nodes), {path:?} engine \
-           ({layout:?} weights), {workers} workers, queue cap {} ({:?}), \
-           {} resident weight bytes",
+           ({layout:?} weights, {threads} kernel thread(s)), {workers} workers, \
+           queue cap {} ({:?}), {} resident weight bytes",
           engine.graph().len(), policy.queue_cap, policy.on_full,
           engine.resident_weight_bytes());
     let server = Arc::new(Server::start_pool_with(Arc::new(engine), policy, workers));
@@ -259,12 +282,15 @@ fn dispatch(cli: &Cli) -> Result<()> {
             let tbnz = export::to_tbnz(exp, &model)?;
             let path = engine_path_opt(cli);
             let layout = packed_layout_opt(cli)?;
+            let threads = threads_opt(cli)?;
             let workers = cli.opt_usize("workers").unwrap_or(2);
-            let policy = serve_policy_opt(cli);
+            let policy = serve_policy_opt(cli, threads);
             let engine = MlpEngine::with_path_layout(tbnz, Nonlin::Relu, path, layout)
-                .map_err(|e| anyhow!(e))?;
-            info!("serve", "{path:?} engine ({layout:?} weights), {workers} workers, \
-                   queue cap {} ({:?}), {} resident weight bytes",
+                .map_err(|e| anyhow!(e))?
+                .with_threads(threads);
+            info!("serve", "{path:?} engine ({layout:?} weights, {threads} kernel \
+                   thread(s)), {workers} workers, queue cap {} ({:?}), \
+                   {} resident weight bytes",
                   policy.queue_cap, policy.on_full, engine.resident_weight_bytes());
             let server = Arc::new(Server::start_pool_with(Arc::new(engine),
                                                           policy, workers));

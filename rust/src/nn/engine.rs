@@ -46,7 +46,7 @@
 use std::sync::Arc;
 
 use super::layers::{FcLayer, Graph, GraphNode, Node, Scratch, Slot};
-use super::packed::{EnginePath, PackedLayer, PackedLayout};
+use super::packed::{threads_from_env, EnginePath, PackedLayer, PackedLayout};
 use crate::tbn::{LayerRecord, TbnzModel};
 
 /// Hidden-layer nonlinearity (fused into the weight-layer kernels).
@@ -75,6 +75,13 @@ pub struct Engine {
     /// the executor frees a node's activation when this many readers ran.
     uses: Vec<usize>,
     in_len: usize,
+    /// Intra-op kernel threads for the packed/int8 weight kernels (1 =
+    /// serial; the Reference path never threads).  Defaults to
+    /// `threads_from_env()` (`TBN_THREADS`); [`Engine::with_threads`]
+    /// overrides.  Threading is bit-exact at any count — each thread owns
+    /// disjoint output slices and runs the unchanged serial per-element
+    /// math.
+    threads: usize,
 }
 
 impl Engine {
@@ -202,7 +209,22 @@ impl Engine {
         }
         Ok(Engine {
             graph, nonlin, path, layout, packed, first_weight, relu_after, uses, in_len,
+            threads: threads_from_env(),
         })
+    }
+
+    /// Set the intra-op kernel thread count (clamped to at least 1).
+    /// Composes with any outer pool: a serve worker running a 4-thread
+    /// engine occupies up to 4 cores per request.  Results are unchanged at
+    /// any setting (see the field docs / module determinism contract).
+    pub fn with_threads(mut self, threads: usize) -> Engine {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Intra-op kernel threads the packed/int8 weight kernels run with.
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 
     /// Build an FC-chain engine from a borrowed TBNZ model (one `Fc` node
@@ -272,15 +294,15 @@ impl Engine {
         let node = &self.graph[idx].node;
         if let Some(p) = &self.packed[idx] {
             return match node {
-                Node::Fc(fc) => fc.forward_packed(p, h, relu, scratch),
-                Node::Conv2d(c) => c.forward_packed(p, h, relu, scratch),
+                Node::Fc(fc) => fc.forward_packed(p, h, relu, scratch, self.threads),
+                Node::Conv2d(c) => c.forward_packed(p, h, relu, scratch, self.threads),
                 _ => unreachable!("packed state only exists for weight nodes"),
             };
         }
         if self.path == EnginePath::PackedInt8 && Some(idx) == self.first_weight {
             return match node {
-                Node::Fc(fc) => fc.forward_int8(h, relu, scratch),
-                Node::Conv2d(c) => c.forward_int8(h, relu, scratch),
+                Node::Fc(fc) => fc.forward_int8(h, relu, scratch, self.threads),
+                Node::Conv2d(c) => c.forward_int8(h, relu, scratch, self.threads),
                 _ => unreachable!("first weight index always names a weight node"),
             };
         }
@@ -414,7 +436,8 @@ impl Engine {
             }
             let a = ins[0];
             if let (Some(p), Node::Fc(fc)) = (&self.packed[idx], &gn.node) {
-                return fc.forward_packed_batch(p, a, self.relu_after[idx], &mut scratch);
+                return fc.forward_packed_batch(p, a, self.relu_after[idx], &mut scratch,
+                                               self.threads);
             }
             a.iter().map(|h| self.node_forward(idx, h, &mut scratch)).collect()
         })
@@ -558,6 +581,12 @@ impl MlpEngine {
         let records = model.layers.into_iter().map(Arc::new).collect();
         let engine = Engine::from_records(records, nonlin, path, layout)?;
         Ok(MlpEngine { engine })
+    }
+
+    /// Set the intra-op kernel thread count ([`Engine::with_threads`]).
+    pub fn with_threads(mut self, threads: usize) -> MlpEngine {
+        self.engine = self.engine.with_threads(threads);
+        self
     }
 
     /// The underlying layer-graph engine.

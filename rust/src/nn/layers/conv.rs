@@ -24,8 +24,8 @@ use std::sync::Arc;
 
 use super::Scratch;
 use crate::nn::packed::{
-    binarize_activations_into, payload_row_dot_i8, quantize_input_i8, PackedLayer,
-    PackedLayout,
+    activation_gamma, binarize_activations_into, partition_strided, payload_row_dot_i8,
+    quantize_input_i8, split_ranges, PackedLayer, PackedLayout,
 };
 use crate::nn::payload_row_dot;
 use crate::tbn::LayerRecord;
@@ -224,13 +224,20 @@ impl Conv2dLayer {
     /// and on the tile-resident layout the one shared tile — is walked
     /// while hot across the whole spatial map.  Outputs are bit-identical
     /// to the per-position form `gamma * row_dot_binarized`.
+    ///
+    /// With `threads > 1` the output-position loop splits across scoped std
+    /// threads: each thread owns a contiguous position range and, for that
+    /// range, disjoint chunks of the staging buffers (`batch_words`,
+    /// `gammas`, `batch_out`) plus a private im2col patch buffer (its
+    /// per-thread scratch) — it binarizes its own positions and runs the
+    /// unmodified serial batched row kernel over them, no barrier, no
+    /// shared writes.  Per-element math and accumulation order are exactly
+    /// the serial kernel's, so any thread count is bit-exact against 1.
     pub fn forward_packed(&self, packed: &PackedLayer, x: &[f32], relu: bool,
-                          scratch: &mut Scratch) -> Vec<f32> {
+                          scratch: &mut Scratch, threads: usize) -> Vec<f32> {
         debug_assert_eq!(x.len(), self.in_len());
         let n = self.patch_len();
         let stride = n.div_ceil(64).max(1);
-        scratch.patch.clear();
-        scratch.patch.resize(n, 0.0);
         let cog = self.co / self.groups;
         let area = self.h_out * self.w_out;
         scratch.batch_words.clear();
@@ -240,20 +247,68 @@ impl Conv2dLayer {
         scratch.batch_out.clear();
         scratch.batch_out.resize(area * cog, 0.0);
         let mut y = vec![0.0f32; self.co * area];
+        let t = threads.min(area).max(1);
+        let ranges = if t > 1 { split_ranges(area, t) } else { Vec::new() };
         for g in 0..self.groups {
-            for oy in 0..self.h_out {
-                for ox in 0..self.w_out {
-                    let pos = oy * self.w_out + ox;
-                    self.extract_patch(x, g, oy, ox, &mut scratch.patch);
-                    scratch.gammas[pos] = binarize_activations_into(
-                        &scratch.patch,
-                        &mut scratch.batch_words[pos * stride..(pos + 1) * stride]);
+            if t <= 1 {
+                scratch.patch.clear();
+                scratch.patch.resize(n, 0.0);
+                for oy in 0..self.h_out {
+                    for ox in 0..self.w_out {
+                        let pos = oy * self.w_out + ox;
+                        self.extract_patch(x, g, oy, ox, &mut scratch.patch);
+                        scratch.gammas[pos] = binarize_activations_into(
+                            &scratch.patch,
+                            &mut scratch.batch_words[pos * stride..(pos + 1) * stride]);
+                    }
                 }
+                packed.forward_batch_binarized_rows(g * cog, (g + 1) * cog,
+                                                    &scratch.batch_words, stride,
+                                                    &scratch.gammas, relu,
+                                                    &mut scratch.batch_out);
+            } else {
+                // Contiguous per-range chunks of the position-major staging
+                // buffers: range (lo, hi) owns words[lo*stride..hi*stride],
+                // gammas[lo..hi] and batch_out[lo*cog..hi*cog].
+                let mut wchunks = Vec::with_capacity(ranges.len());
+                let mut gchunks = Vec::with_capacity(ranges.len());
+                let mut ochunks = Vec::with_capacity(ranges.len());
+                let mut wrest = &mut scratch.batch_words[..];
+                let mut grest = &mut scratch.gammas[..];
+                let mut orest = &mut scratch.batch_out[..];
+                for &(lo, hi) in &ranges {
+                    let len = hi - lo;
+                    let (wc, wt) = std::mem::take(&mut wrest).split_at_mut(len * stride);
+                    let (gc, gt) = std::mem::take(&mut grest).split_at_mut(len);
+                    let (oc, ot) = std::mem::take(&mut orest).split_at_mut(len * cog);
+                    wchunks.push(wc);
+                    gchunks.push(gc);
+                    ochunks.push(oc);
+                    wrest = wt;
+                    grest = gt;
+                    orest = ot;
+                }
+                std::thread::scope(|scope| {
+                    for (((&(lo, hi), wc), gc), oc) in ranges
+                        .iter()
+                        .zip(wchunks)
+                        .zip(gchunks)
+                        .zip(ochunks)
+                    {
+                        scope.spawn(move || {
+                            let mut patch = vec![0.0f32; n];
+                            for (k, pos) in (lo..hi).enumerate() {
+                                let (oy, ox) = (pos / self.w_out, pos % self.w_out);
+                                self.extract_patch(x, g, oy, ox, &mut patch);
+                                gc[k] = binarize_activations_into(
+                                    &patch, &mut wc[k * stride..(k + 1) * stride]);
+                            }
+                            packed.forward_batch_binarized_rows(
+                                g * cog, (g + 1) * cog, wc, stride, gc, relu, oc);
+                        });
+                    }
+                });
             }
-            packed.forward_batch_binarized_rows(g * cog, (g + 1) * cog,
-                                                &scratch.batch_words, stride,
-                                                &scratch.gammas, relu,
-                                                &mut scratch.batch_out);
             for pos in 0..area {
                 for oc in 0..cog {
                     y[(g * cog + oc) * area + pos] = scratch.batch_out[pos * cog + oc];
@@ -265,29 +320,64 @@ impl Conv2dLayer {
 
     /// Layer-0 forward on the `PackedInt8` path: quantize the whole input
     /// map once, then run integer row dots over int8 im2col patches.
-    pub fn forward_int8(&self, x: &[f32], relu: bool, scratch: &mut Scratch) -> Vec<f32> {
+    ///
+    /// With `threads > 1` output positions split across scoped std threads;
+    /// each thread owns the channel-strided, pairwise-disjoint `y` slices
+    /// of its position range plus a private int8 patch buffer, so results
+    /// stay bit-exact against the serial loop.
+    pub fn forward_int8(&self, x: &[f32], relu: bool, scratch: &mut Scratch,
+                        threads: usize) -> Vec<f32> {
         debug_assert_eq!(x.len(), self.in_len());
         let scale = quantize_input_i8(x, &mut scratch.qi8);
         let n = self.patch_len();
-        scratch.patch_i8.clear();
-        scratch.patch_i8.resize(n, 0);
         let cog = self.co / self.groups;
         let area = self.h_out * self.w_out;
         let mut y = vec![0.0f32; self.co * area];
-        for oy in 0..self.h_out {
-            for ox in 0..self.w_out {
-                for g in 0..self.groups {
-                    self.extract_patch_i8(&scratch.qi8, g, oy, ox, &mut scratch.patch_i8);
-                    for oc in 0..cog {
-                        let o = g * cog + oc;
-                        let v = payload_row_dot_i8(
-                            &self.record.payload, o * n, &scratch.patch_i8, scale);
-                        y[(o * self.h_out + oy) * self.w_out + ox] =
-                            if relu { v.max(0.0) } else { v };
+        let t = threads.min(area).max(1);
+        if t <= 1 {
+            scratch.patch_i8.clear();
+            scratch.patch_i8.resize(n, 0);
+            for oy in 0..self.h_out {
+                for ox in 0..self.w_out {
+                    for g in 0..self.groups {
+                        self.extract_patch_i8(&scratch.qi8, g, oy, ox,
+                                              &mut scratch.patch_i8);
+                        for oc in 0..cog {
+                            let o = g * cog + oc;
+                            let v = payload_row_dot_i8(
+                                &self.record.payload, o * n, &scratch.patch_i8, scale);
+                            y[(o * self.h_out + oy) * self.w_out + ox] =
+                                if relu { v.max(0.0) } else { v };
+                        }
                     }
                 }
             }
+            return y;
         }
+        let qi8: &[i8] = &scratch.qi8;
+        let ranges = split_ranges(area, t);
+        // planes[o] is this thread's positions within output channel o
+        // (y is channel-major: y[o * area + pos]).
+        let parts = partition_strided(&mut y, area, &ranges);
+        std::thread::scope(|scope| {
+            for (&(lo, hi), mut planes) in ranges.iter().zip(parts) {
+                scope.spawn(move || {
+                    let mut patch = vec![0i8; n];
+                    for pos in lo..hi {
+                        let (oy, ox) = (pos / self.w_out, pos % self.w_out);
+                        for g in 0..self.groups {
+                            self.extract_patch_i8(qi8, g, oy, ox, &mut patch);
+                            for oc in 0..cog {
+                                let o = g * cog + oc;
+                                let v = payload_row_dot_i8(
+                                    &self.record.payload, o * n, &patch, scale);
+                                planes[o][pos - lo] = if relu { v.max(0.0) } else { v };
+                            }
+                        }
+                    }
+                });
+            }
+        });
         y
     }
 
@@ -308,11 +398,10 @@ impl Conv2dLayer {
             for ox in 0..self.w_out {
                 for g in 0..self.groups {
                     self.extract_patch(x, g, oy, ox, &mut scratch.patch);
-                    let gamma = if n == 0 {
-                        0.0
-                    } else {
-                        scratch.patch.iter().map(|v| v.abs()).sum::<f32>() / n as f32
-                    };
+                    // same non-finite guard as the packed path's
+                    // `binarize_activations_into`, so parity holds on
+                    // poisoned inputs
+                    let gamma = activation_gamma(&scratch.patch);
                     for (s, &v) in signs.iter_mut().zip(scratch.patch.iter()) {
                         *s = if v > 0.0 { 1.0 } else { -1.0 };
                     }
@@ -453,7 +542,7 @@ mod tests {
         let want = conv.forward_quantized_oracle(&x, false, &mut s);
         for layout in [PackedLayout::TileResident, PackedLayout::Expanded] {
             let packed = conv.build_packed(layout).unwrap();
-            let got = conv.forward_packed(&packed, &x, false, &mut s);
+            let got = conv.forward_packed(&packed, &x, false, &mut s, 1);
             assert_eq!(got.len(), want.len());
             for i in 0..got.len() {
                 assert!((got[i] - want[i]).abs() < 1e-3 * want[i].abs().max(1.0),
@@ -487,8 +576,31 @@ mod tests {
         assert!(tile.resident_bytes() < expanded.resident_bytes());
         let mut s = Scratch::default();
         let x = rng.normal_vec(conv.in_len(), 1.0);
-        let a = conv.forward_packed(&tile, &x, true, &mut s);
-        let b = conv.forward_packed(&expanded, &x, true, &mut s);
+        let a = conv.forward_packed(&tile, &x, true, &mut s, 1);
+        let b = conv.forward_packed(&expanded, &x, true, &mut s, 1);
         assert_eq!(a, b, "layouts must agree bit-exactly");
+
+        // the threaded position split is bit-exact on both layouts, at any
+        // thread count (including threads > positions: area = 49)
+        for threads in [2usize, 3, 4, 8, 64] {
+            assert_eq!(conv.forward_packed(&tile, &x, true, &mut s, threads), a,
+                       "tile threads={threads}");
+            assert_eq!(conv.forward_packed(&expanded, &x, true, &mut s, threads), b,
+                       "expanded threads={threads}");
+        }
+    }
+
+    /// The threaded int8 conv forward is bit-exact against the serial one.
+    #[test]
+    fn int8_threaded_matches_serial_bit_exact() {
+        let mut rng = Rng::new(24);
+        let conv = fp_conv(5, 3, 3, (3, 6, 6), 1, 1, 1, 25);
+        let x = rng.normal_vec(conv.in_len(), 1.0);
+        let mut s = Scratch::default();
+        let want = conv.forward_int8(&x, true, &mut s, 1);
+        for threads in [2usize, 4, 8, 64] {
+            assert_eq!(conv.forward_int8(&x, true, &mut s, threads), want,
+                       "threads={threads}");
+        }
     }
 }

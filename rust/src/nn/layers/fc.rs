@@ -8,8 +8,8 @@ use std::sync::Arc;
 
 use super::Scratch;
 use crate::nn::packed::{
-    binarize_activations, binarize_activations_into, payload_row_dot_i8,
-    quantize_input_i8, PackedLayer, PackedLayout,
+    activation_gamma, binarize_activations, binarize_activations_into,
+    payload_row_dot_i8, quantize_input_i8, split_ranges, PackedLayer, PackedLayout,
 };
 use crate::nn::{fc_fp_forward, fc_layer_forward};
 use crate::tbn::LayerRecord;
@@ -53,12 +53,22 @@ impl FcLayer {
     }
 
     /// Packed forward: sign-binarize the input with an XNOR-Net scale, then
-    /// XNOR-popcount every row.
+    /// XNOR-popcount every row.  With `threads > 1` the row loop splits
+    /// across scoped std threads (`PackedLayer::
+    /// forward_batch_binarized_rows_mt` with a batch of one) — bit-exact
+    /// against the serial path at any thread count.
     pub fn forward_packed(&self, packed: &PackedLayer, x: &[f32], relu: bool,
-                          scratch: &mut Scratch) -> Vec<f32> {
+                          scratch: &mut Scratch, threads: usize) -> Vec<f32> {
         debug_assert_eq!(x.len(), self.n);
         let gamma = binarize_activations(x, &mut scratch.words);
-        packed.forward_binarized(&scratch.words, gamma, relu)
+        if threads <= 1 {
+            return packed.forward_binarized(&scratch.words, gamma, relu);
+        }
+        let mut out = vec![0.0f32; self.m];
+        packed.forward_batch_binarized_rows_mt(0, self.m, &scratch.words,
+                                               scratch.words.len(), &[gamma], relu,
+                                               &mut out, threads);
+        out
     }
 
     /// Batched packed forward: binarize all `B` inputs side by side into
@@ -66,9 +76,12 @@ impl FcLayer {
     /// pass (`PackedLayer::forward_batch_binarized_rows`), so per-row
     /// weight state — and on the tile-resident layout the one shared tile —
     /// stays hot across the batch.  Outputs are bit-identical to per-sample
-    /// [`FcLayer::forward_packed`].
+    /// [`FcLayer::forward_packed`].  `threads > 1` row-splits the batched
+    /// kernel (`PackedLayer::forward_batch_binarized_rows_mt`), preserving
+    /// that bit-identity at any thread count.
     pub fn forward_packed_batch(&self, packed: &PackedLayer, xs: &[Vec<f32>],
-                                relu: bool, scratch: &mut Scratch) -> Vec<Vec<f32>> {
+                                relu: bool, scratch: &mut Scratch, threads: usize)
+                                -> Vec<Vec<f32>> {
         let stride = self.n.div_ceil(64).max(1);
         let bsz = xs.len();
         scratch.batch_words.clear();
@@ -81,34 +94,53 @@ impl FcLayer {
             scratch.gammas.push(g);
         }
         let mut out = vec![0.0f32; bsz * self.m];
-        packed.forward_batch_binarized_rows(0, self.m, &scratch.batch_words, stride,
-                                            &scratch.gammas, relu, &mut out);
+        packed.forward_batch_binarized_rows_mt(0, self.m, &scratch.batch_words, stride,
+                                               &scratch.gammas, relu, &mut out, threads);
         out.chunks(self.m).map(|row| row.to_vec()).collect()
     }
 
     /// Layer-0 forward on the `PackedInt8` path: quantize the input to i8
-    /// once, run integer MACs per row, rescale.
-    pub fn forward_int8(&self, x: &[f32], relu: bool, scratch: &mut Scratch) -> Vec<f32> {
+    /// once, run integer MACs per row, rescale.  With `threads > 1` the row
+    /// loop splits across scoped std threads, each writing a contiguous
+    /// disjoint chunk of the output — bit-exact against the serial loop.
+    pub fn forward_int8(&self, x: &[f32], relu: bool, scratch: &mut Scratch,
+                        threads: usize) -> Vec<f32> {
         debug_assert_eq!(x.len(), self.n);
         let scale = quantize_input_i8(x, &mut scratch.qi8);
-        (0..self.m)
-            .map(|i| {
-                let v = payload_row_dot_i8(
-                    &self.record.payload, i * self.n, &scratch.qi8, scale);
-                if relu { v.max(0.0) } else { v }
-            })
-            .collect()
+        let qi8: &[i8] = &scratch.qi8;
+        let row = |i: usize| {
+            let v = payload_row_dot_i8(&self.record.payload, i * self.n, qi8, scale);
+            if relu { v.max(0.0) } else { v }
+        };
+        let t = threads.min(self.m).max(1);
+        if t <= 1 {
+            return (0..self.m).map(row).collect();
+        }
+        let mut y = vec![0.0f32; self.m];
+        let ranges = split_ranges(self.m, t);
+        std::thread::scope(|scope| {
+            let mut rest = y.as_mut_slice();
+            for &(lo, hi) in &ranges {
+                let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(hi - lo);
+                rest = tail;
+                let row = &row;
+                scope.spawn(move || {
+                    for (k, v) in chunk.iter_mut().enumerate() {
+                        *v = row(lo + k);
+                    }
+                });
+            }
+        });
+        y
     }
 
     /// f32 oracle of [`FcLayer::forward_packed`] — the same sign/gamma math
     /// over the expanded weights, no bit tricks.  `Engine::forward_quantized`
-    /// runs this on the Reference path.
+    /// runs this on the Reference path.  Gamma carries the packed path's
+    /// non-finite guard ([`activation_gamma`]) so parity holds on poisoned
+    /// inputs too.
     pub fn forward_quantized_oracle(&self, x: &[f32], relu: bool) -> Vec<f32> {
-        let gamma = if x.is_empty() {
-            0.0
-        } else {
-            x.iter().map(|v| v.abs()).sum::<f32>() / x.len() as f32
-        };
+        let gamma = activation_gamma(x);
         let signs: Vec<f32> = x.iter().map(|&v| if v > 0.0 { 1.0 } else { -1.0 }).collect();
         let w = self.record.expand();
         let mut y = fc_fp_forward(&w, &signs, self.m, false);
@@ -160,7 +192,7 @@ mod tests {
         for layout in [PackedLayout::TileResident, PackedLayout::Expanded] {
             let packed = fc.build_packed(layout).unwrap();
             let mut scratch = Scratch::default();
-            let got = fc.forward_packed(&packed, &x, false, &mut scratch);
+            let got = fc.forward_packed(&packed, &x, false, &mut scratch, 1);
             for i in 0..12 {
                 assert!((got[i] - want[i]).abs() < 1e-3 * want[i].abs().max(1.0),
                         "{layout:?} row {i}");
@@ -169,7 +201,9 @@ mod tests {
     }
 
     /// Batched and per-sample packed forwards must be bit-identical, on
-    /// both weight layouts.
+    /// both weight layouts — and threaded variants of both must match the
+    /// single-threaded results exactly (rows=9 < 64 threads covers the
+    /// rows-fewer-than-threads edge).
     #[test]
     fn packed_batch_is_bit_identical_to_single() {
         let fc = tiled_fc(9, 70, 7, 15); // ragged width, mid-row alpha splits
@@ -178,11 +212,21 @@ mod tests {
         for layout in [PackedLayout::TileResident, PackedLayout::Expanded] {
             let packed = fc.build_packed(layout).unwrap();
             let mut scratch = Scratch::default();
-            let batch = fc.forward_packed_batch(&packed, &xs, true, &mut scratch);
+            let batch = fc.forward_packed_batch(&packed, &xs, true, &mut scratch, 1);
             assert_eq!(batch.len(), xs.len());
             for (b, x) in xs.iter().enumerate() {
-                let single = fc.forward_packed(&packed, x, true, &mut scratch);
+                let single = fc.forward_packed(&packed, x, true, &mut scratch, 1);
                 assert_eq!(batch[b], single, "{layout:?} sample {b}");
+                for threads in [2usize, 4, 64] {
+                    assert_eq!(
+                        fc.forward_packed(&packed, x, true, &mut scratch, threads),
+                        single, "{layout:?} sample {b} threads={threads}");
+                }
+            }
+            for threads in [2usize, 4, 64] {
+                assert_eq!(
+                    fc.forward_packed_batch(&packed, &xs, true, &mut scratch, threads),
+                    batch, "{layout:?} threads={threads}");
             }
         }
     }
@@ -193,7 +237,11 @@ mod tests {
         let mut rng = Rng::new(12);
         let x = rng.normal_vec(60, 1.0);
         let mut scratch = Scratch::default();
-        let got = fc.forward_int8(&x, false, &mut scratch);
+        let got = fc.forward_int8(&x, false, &mut scratch, 1);
+        for threads in [2usize, 4, 64] {
+            assert_eq!(fc.forward_int8(&x, false, &mut scratch, threads), got,
+                       "threads={threads}");
+        }
         let want = fc.forward_reference(&x, false);
         // documented bound: scale/2 * sum|w_row| per output
         let scale = x.iter().fold(0.0f32, |m, v| m.max(v.abs())) / 127.0;
@@ -216,8 +264,8 @@ mod tests {
         let x = rng.normal_vec(24, 1.0);
         let mut s = Scratch::default();
         assert!(fc.forward_reference(&x, true).iter().all(|&v| v >= 0.0));
-        assert!(fc.forward_packed(&packed, &x, true, &mut s).iter().all(|&v| v >= 0.0));
-        assert!(fc.forward_int8(&x, true, &mut s).iter().all(|&v| v >= 0.0));
+        assert!(fc.forward_packed(&packed, &x, true, &mut s, 1).iter().all(|&v| v >= 0.0));
+        assert!(fc.forward_int8(&x, true, &mut s, 1).iter().all(|&v| v >= 0.0));
         assert!(fc.forward_quantized_oracle(&x, true).iter().all(|&v| v >= 0.0));
     }
 }

@@ -80,6 +80,13 @@ pub enum PoolKind {
 ///   channel-major order);
 /// * `attn` — the attention score matrix (`tokens x tokens` f32, reused
 ///   across heads and samples).
+///
+/// Under intra-op threading (`Engine::with_threads` / `TBN_THREADS`) the
+/// threaded kernels hand each scoped thread a *disjoint chunk* of these
+/// buffers (conv: its position range of `batch_words`/`gammas`/`batch_out`)
+/// plus a small private patch buffer allocated once per call — the
+/// per-thread scratch that keeps the inner loops zero-alloc without any
+/// shared mutable state.
 #[derive(Debug, Clone, Default)]
 pub struct Scratch {
     pub words: Vec<u64>,

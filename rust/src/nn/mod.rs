@@ -47,6 +47,18 @@
 //! the whole batch.  The reference path doubles as the oracle the packed
 //! paths are parity-tested against (`rust/tests/packed_parity.rs`,
 //! `rust/tests/conv_parity.rs`).
+//!
+//! **Intra-op threading determinism contract.**  The packed and int8
+//! kernels optionally split their work across scoped std threads
+//! (`Engine::with_threads`, default from `TBN_THREADS` via
+//! [`threads_from_env`]): the FC kernels split the output-row loop, the
+//! conv kernels the output-position loop.  Threads never share state —
+//! each owns a disjoint slice of the output (and, for conv, of the staging
+//! buffers) plus a private patch buffer — and every output element is
+//! computed by the *unmodified serial expression* with its f32 accumulation
+//! order intact.  No reduction is reordered, so any thread count is
+//! **bit-exact** against single-threaded execution, on both packed
+//! layouts; the Reference path never threads.
 
 mod engine;
 pub mod layers;
@@ -55,9 +67,10 @@ mod packed;
 pub use engine::{Engine, MlpEngine, Nonlin};
 pub use layers::{lower_arch_spec, Conv2dLayer, FcLayer, Graph, GraphNode, LowerOptions,
                  Node, PoolKind, Scratch, Slot, LN_EPS};
-pub use packed::{binarize_activations, binarize_activations_into,
+pub use packed::{activation_gamma, binarize_activations, binarize_activations_into,
                  forward_quantized_reference, payload_row_dot_i8, quantize_input_i8,
-                 AlphaRun, EnginePath, PackedLayer, PackedLayout, PackedPayload};
+                 threads_from_env, AlphaRun, EnginePath, PackedLayer, PackedLayout,
+                 PackedPayload};
 
 use crate::tbn::{LayerRecord, WeightPayload};
 use crate::tensor::BitVec;

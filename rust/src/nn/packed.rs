@@ -103,6 +103,65 @@ impl PackedLayout {
     }
 }
 
+/// Kernel thread count selected by the `TBN_THREADS` environment variable
+/// (unset, unparsable or `< 1` values fall back to 1 — single-threaded).
+/// This is the CI matrix hook mirroring [`PackedLayout::from_env`]: engines
+/// built without an explicit `Engine::with_threads` pick it up, so the
+/// parity suites exercise the threaded kernels whenever the workflow sets
+/// `TBN_THREADS=4`.  Threading never changes results: each thread owns a
+/// disjoint slice of the output and runs the unmodified serial per-element
+/// math, so any thread count is bit-exact against 1.
+pub fn threads_from_env() -> usize {
+    match std::env::var("TBN_THREADS") {
+        Ok(v) => v.trim().parse::<usize>().unwrap_or(1).max(1),
+        Err(_) => 1,
+    }
+}
+
+/// Split `items` into at most `threads` contiguous non-empty `(lo, hi)`
+/// ranges covering `0..items` — the static partition behind every threaded
+/// kernel.  Remainder items go to the leading ranges, so range sizes differ
+/// by at most one.  Empty when `items == 0`.
+pub(crate) fn split_ranges(items: usize, threads: usize) -> Vec<(usize, usize)> {
+    if items == 0 {
+        return Vec::new();
+    }
+    let t = threads.clamp(1, items);
+    let (base, rem) = (items / t, items % t);
+    let mut ranges = Vec::with_capacity(t);
+    let mut lo = 0usize;
+    for k in 0..t {
+        let len = base + usize::from(k < rem);
+        ranges.push((lo, lo + len));
+        lo += len;
+    }
+    ranges
+}
+
+/// Partition a buffer of `inner`-element blocks into per-range strided
+/// views: `parts[r][blk]` is block `blk`'s `ranges[r]` sub-slice.  The
+/// slices are pairwise disjoint, so one scoped thread can own range `r`'s
+/// views across every block — disjoint writes with no aliasing and no
+/// `unsafe`.  `ranges` must be the sorted cover produced by
+/// [`split_ranges`] over `0..inner`.
+pub(crate) fn partition_strided<'a>(
+    buf: &'a mut [f32],
+    inner: usize,
+    ranges: &[(usize, usize)],
+) -> Vec<Vec<&'a mut [f32]>> {
+    let mut parts: Vec<Vec<&'a mut [f32]>> =
+        ranges.iter().map(|_| Vec::with_capacity(buf.len() / inner.max(1))).collect();
+    for block in buf.chunks_mut(inner) {
+        let mut rest = block;
+        for (r, &(lo, hi)) in ranges.iter().enumerate() {
+            let (mid, tail) = std::mem::take(&mut rest).split_at_mut(hi - lo);
+            parts[r].push(mid);
+            rest = tail;
+        }
+    }
+    parts
+}
+
 /// One run of constant alpha inside a packed row: `[start, start + len)`
 /// bits scaled by `alpha`.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -402,6 +461,49 @@ impl PackedLayer {
             }
         }
     }
+
+    /// Multi-threaded [`PackedLayer::forward_batch_binarized_rows`]: splits
+    /// the output-row loop across at most `threads` scoped std threads
+    /// (`std::thread::scope` — no pool state, no new deps).  Each thread
+    /// computes one contiguous row range and writes only its own strided,
+    /// pairwise-disjoint sub-slices of `out`; every output element is still
+    /// produced by the unmodified serial expression
+    /// `gamma_b * row_dot_binarized(i, xw_b)` with the same per-run f32
+    /// accumulation order, so the result is **bit-exact at any thread
+    /// count**, on both packed layouts.  `threads <= 1`, a single row, or
+    /// an empty batch run the serial kernel inline with zero spawn
+    /// overhead.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_batch_binarized_rows_mt(&self, row_lo: usize, row_hi: usize,
+                                           xws: &[u64], stride: usize,
+                                           gammas: &[f32], relu: bool,
+                                           out: &mut [f32], threads: usize) {
+        let bsz = gammas.len();
+        debug_assert!(row_lo <= row_hi && row_hi <= self.m);
+        let nrows = row_hi - row_lo;
+        let t = threads.min(nrows).max(1);
+        if t <= 1 || bsz == 0 {
+            return self.forward_batch_binarized_rows(row_lo, row_hi, xws, stride,
+                                                     gammas, relu, out);
+        }
+        debug_assert!(xws.len() >= bsz * stride);
+        debug_assert!(out.len() >= bsz * nrows);
+        let ranges = split_ranges(nrows, t);
+        let parts = partition_strided(&mut out[..bsz * nrows], nrows, &ranges);
+        std::thread::scope(|scope| {
+            for (&(lo, hi), mut slices) in ranges.iter().zip(parts) {
+                scope.spawn(move || {
+                    for i in (row_lo + lo)..(row_lo + hi) {
+                        for (b, dst) in slices.iter_mut().enumerate() {
+                            let xw = &xws[b * stride..(b + 1) * stride];
+                            let v = gammas[b] * self.row_dot_binarized(i, xw);
+                            dst[i - row_lo - lo] = if relu { v.max(0.0) } else { v };
+                        }
+                    }
+                });
+            }
+        });
+    }
 }
 
 /// Sign-binarize an activation vector into `words` (bit j set iff
@@ -419,6 +521,13 @@ pub fn binarize_activations(h: &[f32], words: &mut Vec<u64>) -> f32 {
 /// [`binarize_activations`] into a caller-placed word slice (at least
 /// `ceil(len/64)` words; fully overwritten, tail bits zeroed).  Batch loops
 /// pack `B` inputs side by side in one buffer through this entry point.
+///
+/// Non-finite activations are handled deterministically, mirroring the
+/// [`quantize_input_i8`] guard: the sign bit follows the crate-wide
+/// `v > 0.0` convention (NaN and `-inf` read −1, `+inf` reads +1), but
+/// only *finite* magnitudes feed the gamma mean — a single NaN or infinity
+/// must not turn the XNOR-Net scale non-finite and poison every downstream
+/// layer.  If the finite sum itself overflows f32, gamma collapses to 0.
 pub fn binarize_activations_into(h: &[f32], words: &mut [u64]) -> f32 {
     debug_assert!(words.len() * 64 >= h.len());
     for w in words.iter_mut() {
@@ -426,7 +535,9 @@ pub fn binarize_activations_into(h: &[f32], words: &mut [u64]) -> f32 {
     }
     let mut sum = 0.0f32;
     for (j, &v) in h.iter().enumerate() {
-        sum += v.abs();
+        if v.is_finite() {
+            sum += v.abs();
+        }
         if v > 0.0 {
             words[j / 64] |= 1u64 << (j % 64);
         }
@@ -434,8 +545,25 @@ pub fn binarize_activations_into(h: &[f32], words: &mut [u64]) -> f32 {
     if h.is_empty() {
         0.0
     } else {
-        sum / h.len() as f32
+        finite_or_zero(sum / h.len() as f32)
     }
+}
+
+/// The XNOR-Net activation scale `gamma = mean |h|` with the same
+/// non-finite guard as [`binarize_activations_into`]: non-finite elements
+/// are skipped, and a non-finite mean collapses to 0.  The f32 oracles
+/// (`forward_quantized_reference` and the layer `forward_quantized_oracle`s)
+/// share this so packed-vs-oracle parity holds on poisoned inputs too.
+pub fn activation_gamma(h: &[f32]) -> f32 {
+    if h.is_empty() {
+        return 0.0;
+    }
+    let sum: f32 = h.iter().filter(|v| v.is_finite()).map(|v| v.abs()).sum();
+    finite_or_zero(sum / h.len() as f32)
+}
+
+fn finite_or_zero(v: f32) -> f32 {
+    if v.is_finite() { v } else { 0.0 }
 }
 
 /// Symmetric 8-bit input quantization (the paper's microcontroller input
@@ -522,11 +650,7 @@ pub fn forward_quantized_reference(model: &TbnzModel, x: &[f32], relu_hidden: bo
     let last = model.layers.len() - 1;
     let mut h = fc_layer_forward(&model.layers[0], x, relu_hidden && last > 0);
     for (li, layer) in model.layers.iter().enumerate().skip(1) {
-        let gamma = if h.is_empty() {
-            0.0
-        } else {
-            h.iter().map(|v| v.abs()).sum::<f32>() / h.len() as f32
-        };
+        let gamma = activation_gamma(&h);
         let signs: Vec<f32> = h.iter().map(|&v| if v > 0.0 { 1.0 } else { -1.0 }).collect();
         let w = layer.expand();
         let m = layer.shape[0];
@@ -839,6 +963,107 @@ mod tests {
                         "{} row {i}: {got} vs {exact} (bound {bound})", rec.name);
             }
         }
+    }
+
+    /// `split_ranges` always yields a contiguous, non-empty cover of
+    /// `0..items` with at most `threads` pieces.
+    #[test]
+    fn split_ranges_covers_and_balances() {
+        for items in [0usize, 1, 2, 3, 7, 8, 64, 65] {
+            for threads in [1usize, 2, 3, 4, 8, 100] {
+                let ranges = split_ranges(items, threads);
+                if items == 0 {
+                    assert!(ranges.is_empty());
+                    continue;
+                }
+                assert!(ranges.len() <= threads.min(items));
+                assert_eq!(ranges[0].0, 0);
+                assert_eq!(ranges.last().unwrap().1, items);
+                for w in ranges.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "contiguous {items}/{threads}");
+                }
+                let (min, max) = ranges.iter().fold((usize::MAX, 0), |(mn, mx), r| {
+                    (mn.min(r.1 - r.0), mx.max(r.1 - r.0))
+                });
+                assert!(min >= 1 && max - min <= 1, "balanced {items}/{threads}");
+            }
+        }
+    }
+
+    /// The threaded batched row kernel is bit-exact against the serial one
+    /// at every thread count, on both layouts — including threads > rows,
+    /// a batch that doesn't divide across threads, and a row sub-range.
+    #[test]
+    fn batch_rows_mt_bit_exact_vs_serial() {
+        let mut rng = Rng::new(46);
+        for layout in [PackedLayout::TileResident, PackedLayout::Expanded] {
+            let (m, n) = (11usize, 70usize);
+            let rec = tiled_record("t", m, n, 7, AlphaMode::PerTile, &mut rng);
+            let packed = PackedLayer::from_record_mn_layout(&rec, m, n, layout).unwrap();
+            let stride = n.div_ceil(64).max(1);
+            let bsz = 5usize; // does not divide 2/4/8 threads
+            let mut xws = vec![0u64; bsz * stride];
+            let mut gammas = Vec::with_capacity(bsz);
+            for b in 0..bsz {
+                let h = rng.normal_vec(n, 1.0);
+                gammas.push(binarize_activations_into(
+                    &h, &mut xws[b * stride..(b + 1) * stride]));
+            }
+            let mut want = vec![0.0f32; bsz * m];
+            packed.forward_batch_binarized_rows(0, m, &xws, stride, &gammas, true,
+                                                &mut want);
+            for threads in [1usize, 2, 3, 4, 8, 64] {
+                let mut got = vec![0.0f32; bsz * m];
+                packed.forward_batch_binarized_rows_mt(
+                    0, m, &xws, stride, &gammas, true, &mut got, threads);
+                assert_eq!(got, want, "{layout:?} threads={threads}");
+                // row sub-range, re-based like the serial kernel
+                let (lo, hi) = (3usize, 8usize);
+                let mut sub = vec![0.0f32; bsz * (hi - lo)];
+                packed.forward_batch_binarized_rows_mt(
+                    lo, hi, &xws, stride, &gammas, true, &mut sub, threads);
+                for b in 0..bsz {
+                    assert_eq!(&sub[b * (hi - lo)..(b + 1) * (hi - lo)],
+                               &want[b * m + lo..b * m + hi],
+                               "{layout:?} threads={threads} rows {lo}..{hi}");
+                }
+            }
+        }
+    }
+
+    /// Non-finite activations must not poison gamma: signs stay on the
+    /// `v > 0.0` convention (NaN/−inf → 0-bit, +inf → 1-bit) and gamma
+    /// averages the finite magnitudes only.
+    #[test]
+    fn binarize_guards_non_finite_activations() {
+        let h = [1.0f32, f32::NAN, -2.0, f32::INFINITY, f32::NEG_INFINITY, 3.0];
+        let mut words = Vec::new();
+        let gamma = binarize_activations(&h, &mut words);
+        assert!(gamma.is_finite());
+        // mean over all 6 slots of the finite |h| values: (1 + 2 + 3) / 6
+        assert!((gamma - 1.0).abs() < 1e-7, "gamma {gamma}");
+        // bits: 1.0 -> 1, NaN -> 0, -2 -> 0, +inf -> 1, -inf -> 0, 3 -> 1
+        assert_eq!(words, vec![0b101001u64]);
+        assert_eq!(activation_gamma(&h), gamma);
+        // an all-non-finite vector yields gamma 0, like the i8 guard
+        let bad = [f32::NAN, f32::INFINITY];
+        assert_eq!(binarize_activations(&bad, &mut words), 0.0);
+        assert_eq!(activation_gamma(&bad), 0.0);
+        // finite-sum overflow collapses to 0 instead of +inf
+        let huge = [f32::MAX, f32::MAX, f32::MAX];
+        assert_eq!(binarize_activations(&huge, &mut words), 0.0);
+    }
+
+    #[test]
+    fn threads_from_env_parses_and_clamps() {
+        // Avoid mutating the process env (tests run in parallel); the
+        // parse rule itself is what matters: junk and 0 fall back to 1.
+        let parse = |v: &str| v.trim().parse::<usize>().unwrap_or(1).max(1);
+        assert_eq!(parse("4"), 4);
+        assert_eq!(parse(" 8 "), 8);
+        assert_eq!(parse("0"), 1);
+        assert_eq!(parse("nope"), 1);
+        assert!(threads_from_env() >= 1);
     }
 
     #[test]

@@ -113,6 +113,11 @@ pub struct ServerStats {
     /// first, capacity [`LATENCY_RING_CAP`] — the window behind the
     /// percentile report.
     pub latency_ring: VecDeque<u64>,
+    /// Intra-op kernel threads each worker's engine runs per request
+    /// ([`ServePolicy::kernel_threads`]): kernel-level parallelism that
+    /// composes with the worker pool, so peak busy cores ≈
+    /// `workers * kernel_threads`.
+    pub kernel_threads: usize,
 }
 
 impl ServerStats {
@@ -140,6 +145,11 @@ impl ServerStats {
 
     /// p50/p95/p99 over the latency ring (nearest-rank on the sorted
     /// window); `None` before the first completed request.
+    ///
+    /// True nearest-rank: the p-th percentile of `N` sorted samples is the
+    /// value at 1-based rank `ceil(p * N)` (clamped to `[1, N]`) — e.g.
+    /// p50 over 4 samples is the 2nd smallest, not the 3rd as the previous
+    /// `round(p * (N - 1))` interpolation index picked.
     pub fn latency_percentiles(&self) -> Option<LatencyPercentiles> {
         if self.latency_ring.is_empty() {
             return None;
@@ -147,8 +157,8 @@ impl ServerStats {
         let mut v: Vec<u64> = self.latency_ring.iter().copied().collect();
         v.sort_unstable();
         let pick = |p: f64| {
-            let idx = (p * (v.len() - 1) as f64).round() as usize;
-            v[idx.min(v.len() - 1)]
+            let rank = (p * v.len() as f64).ceil() as usize;
+            v[rank.clamp(1, v.len()) - 1]
         };
         Some(LatencyPercentiles {
             p50_us: pick(0.50),
@@ -190,6 +200,11 @@ pub struct ServePolicy {
     /// clamped to at least 1.
     pub queue_cap: usize,
     pub on_full: OverflowPolicy,
+    /// Intra-op kernel threads the served engine runs with (informational
+    /// for the stats report — the engine itself is configured via
+    /// `Engine::with_threads`; keep the two in sync).  Composes with the
+    /// worker pool: each in-flight batch occupies up to this many cores.
+    pub kernel_threads: usize,
 }
 
 impl Default for ServePolicy {
@@ -198,6 +213,7 @@ impl Default for ServePolicy {
             batch: BatchPolicy::default(),
             queue_cap: 1024,
             on_full: OverflowPolicy::Block,
+            kernel_threads: 1,
         }
     }
 }
@@ -205,7 +221,7 @@ impl Default for ServePolicy {
 impl ServePolicy {
     /// The pre-backpressure behavior: an effectively unbounded queue.
     pub fn unbounded(batch: BatchPolicy) -> ServePolicy {
-        ServePolicy { batch, queue_cap: usize::MAX, on_full: OverflowPolicy::Block }
+        ServePolicy { batch, queue_cap: usize::MAX, ..ServePolicy::default() }
     }
 }
 
@@ -380,6 +396,7 @@ impl Server {
         let stats = Arc::new(Mutex::new(ServerStats {
             workers: n_workers,
             per_worker: vec![WorkerStats::default(); n_workers],
+            kernel_threads: policy.kernel_threads.max(1),
             ..ServerStats::default()
         }));
         let in_dim = model.in_dim();
@@ -579,6 +596,7 @@ mod tests {
                 batch: BatchPolicy { max_batch: 1, window: Duration::ZERO },
                 queue_cap: 1,
                 on_full: OverflowPolicy::Reject,
+                kernel_threads: 1,
             },
             1,
         );
@@ -612,6 +630,7 @@ mod tests {
                 batch: BatchPolicy { max_batch: 4, window: Duration::from_micros(100) },
                 queue_cap: 2,
                 on_full: OverflowPolicy::Block,
+                kernel_threads: 1,
             },
             2,
         ));
@@ -655,6 +674,50 @@ mod tests {
         assert!(p.p50_us > 0, "a 50us model cannot have zero p50");
     }
 
+    /// True nearest-rank (1-based rank `ceil(p * N)`) pinned at every
+    /// window size 1–5.  The regression case is N=4: p50 must be the 2nd
+    /// smallest sample (rank `ceil(0.5 * 4) = 2`), where the old
+    /// `round(p * (N - 1))` index picked the 3rd.
+    #[test]
+    fn latency_percentiles_are_nearest_rank_on_small_windows() {
+        let window = |vals: &[u64]| {
+            let mut stats = ServerStats::default();
+            for &v in vals {
+                stats.record_latency(v);
+            }
+            stats.latency_percentiles().unwrap()
+        };
+        // N=1: every percentile is the only sample
+        let p = window(&[7]);
+        assert_eq!((p.p50_us, p.p95_us, p.p99_us, p.samples), (7, 7, 7, 1));
+        // N=2: p50 -> rank 1, p95/p99 -> rank 2
+        let p = window(&[10, 20]);
+        assert_eq!((p.p50_us, p.p95_us, p.p99_us), (10, 20, 20));
+        // N=3: p50 -> rank 2, p95/p99 -> rank 3
+        let p = window(&[10, 20, 30]);
+        assert_eq!((p.p50_us, p.p95_us, p.p99_us), (20, 30, 30));
+        // N=4: p50 -> rank 2 (the bugfix case), p95/p99 -> rank 4
+        let p = window(&[10, 20, 30, 40]);
+        assert_eq!((p.p50_us, p.p95_us, p.p99_us), (20, 40, 40));
+        // N=5: p50 -> rank 3, p95/p99 -> rank 5; order of arrival irrelevant
+        let p = window(&[50, 10, 40, 20, 30]);
+        assert_eq!((p.p50_us, p.p95_us, p.p99_us), (30, 50, 50));
+    }
+
+    #[test]
+    fn kernel_threads_flow_into_stats() {
+        let server = Server::start_pool_with(
+            Arc::new(SumModel { dim: 1, delay: Duration::ZERO }),
+            ServePolicy { kernel_threads: 4, ..ServePolicy::default() },
+            2,
+        );
+        assert_eq!(server.stats().kernel_threads, 4);
+        // the unbounded/legacy constructors report the serial default
+        let legacy = Server::start(SumModel { dim: 1, delay: Duration::ZERO },
+                                   BatchPolicy::default());
+        assert_eq!(legacy.stats().kernel_threads, 1);
+    }
+
     #[test]
     fn latency_ring_is_bounded() {
         let mut stats = ServerStats::default();
@@ -678,6 +741,7 @@ mod tests {
                 batch: BatchPolicy { max_batch: 4, window: Duration::from_micros(200) },
                 queue_cap: 64,
                 on_full: OverflowPolicy::Block,
+                kernel_threads: 1,
             },
             3,
         ));

@@ -1,0 +1,190 @@
+//! Threaded-vs-single-threaded bit-exactness (artifact-free).
+//!
+//! The intra-op threading contract (`nn` module docs): a threaded packed
+//! forward splits only *independent output elements* across scoped std
+//! threads — every element is computed wholly by one thread with the serial
+//! per-element expression — so the result is **bit-exact** against the
+//! single-threaded kernel at any thread count.  These tests sweep
+//! `Packed`/`PackedInt8` × tile-resident/expanded layouts × FC chains and
+//! conv graphs, with the awkward shapes on purpose: ragged widths
+//! (`n % 64 != 0`), batch sizes that do not divide the thread count, and
+//! fewer output rows than threads.
+//!
+//! A NaN/±inf regression rides along: `binarize_activations_into` guards its
+//! XNOR-Net gamma against non-finite activations (as `quantize_input_i8`
+//! always did), so poisoned inputs yield finite outputs on every engine
+//! path instead of NaN-poisoning downstream layers.
+//!
+//! Engines built "at the default" go through `PackedLayout::from_env()` /
+//! `threads_from_env()`, so the CI matrix re-runs this suite under
+//! `TBN_LAYOUT=expanded` and `TBN_THREADS=4`.
+
+use tiledbits::arch;
+use tiledbits::nn::{lower_arch_spec, threads_from_env, Engine, EnginePath,
+                    LowerOptions, MlpEngine, Nonlin, PackedLayout};
+use tiledbits::tbn::{alphas_from, tile_from_weights, AlphaMode, LayerRecord,
+                     TbnzModel, WeightPayload};
+use tiledbits::util::Rng;
+
+fn tiled_layer(rng: &mut Rng, name: &str, m: usize, n: usize, p: usize) -> LayerRecord {
+    let w = rng.normal_vec(m * n, 1.0);
+    assert_eq!((m * n) % p, 0, "{name}: p must divide the layer");
+    LayerRecord {
+        name: name.into(),
+        shape: vec![m, n],
+        payload: WeightPayload::Tiled {
+            p,
+            tile: tile_from_weights(&w, p),
+            alphas: alphas_from(&w, p, AlphaMode::PerTile),
+        },
+    }
+}
+
+/// Ragged 70 -> 65 -> 33 -> 3 tiled chain: no width is a multiple of 64,
+/// alpha runs split mid-row, and the 3-row head has fewer rows than any
+/// multi-thread sweep point.
+fn ragged_model() -> TbnzModel {
+    let mut rng = Rng::new(0x7EAD5);
+    TbnzModel {
+        layers: vec![
+            tiled_layer(&mut rng, "fc0", 65, 70, 5),
+            tiled_layer(&mut rng, "fc1", 33, 65, 5),
+            tiled_layer(&mut rng, "head", 3, 33, 3),
+        ],
+    }
+}
+
+const THREAD_SWEEP: [usize; 3] = [2, 4, 8];
+
+#[test]
+fn threaded_fc_chain_is_bit_exact_on_every_path_and_layout() {
+    let model = ragged_model();
+    let mut rng = Rng::new(51);
+    let xs: Vec<Vec<f32>> = (0..5).map(|_| rng.normal_vec(70, 1.0)).collect();
+    for path in [EnginePath::Packed, EnginePath::PackedInt8] {
+        for layout in [PackedLayout::TileResident, PackedLayout::Expanded] {
+            let serial = MlpEngine::with_path_layout(
+                model.clone(), Nonlin::Relu, path, layout).unwrap().with_threads(1);
+            let singles: Vec<Vec<f32>> = xs.iter().map(|x| serial.forward(x)).collect();
+            let batch = serial.forward_batch(&xs);
+            for t in THREAD_SWEEP {
+                let threaded = MlpEngine::with_path_layout(
+                    model.clone(), Nonlin::Relu, path, layout).unwrap().with_threads(t);
+                for (s, x) in xs.iter().enumerate() {
+                    assert_eq!(threaded.forward(x), singles[s],
+                               "{path:?} {layout:?} threads={t} sample {s}");
+                }
+                // batch of 5 with threads in {2, 4, 8}: none divides evenly
+                assert_eq!(threaded.forward_batch(&xs), batch,
+                           "{path:?} {layout:?} threads={t} batched");
+            }
+        }
+    }
+}
+
+/// Batched and single-sample forwards must stay bit-identical to each other
+/// *under* threading, not just each to their serial counterparts.
+#[test]
+fn batch_equals_single_under_threads() {
+    let model = ragged_model();
+    let mut rng = Rng::new(52);
+    let xs: Vec<Vec<f32>> = (0..5).map(|_| rng.normal_vec(70, 1.0)).collect();
+    for layout in [PackedLayout::TileResident, PackedLayout::Expanded] {
+        let engine = MlpEngine::with_path_layout(
+            model.clone(), Nonlin::Relu, EnginePath::Packed, layout)
+            .unwrap()
+            .with_threads(4);
+        let batch = engine.forward_batch(&xs);
+        for (s, x) in xs.iter().enumerate() {
+            assert_eq!(batch[s], engine.forward(x), "{layout:?} sample {s}");
+        }
+    }
+}
+
+#[test]
+fn threaded_conv_graph_is_bit_exact_on_every_path_and_layout() {
+    let spec = arch::cnn_micro();
+    let opts = LowerOptions {
+        input: (3, 16, 16),
+        p: 4,
+        alpha_mode: AlphaMode::PerTile,
+        seed: 7,
+    };
+    let graph = lower_arch_spec(&spec, &opts).unwrap();
+    let mut rng = Rng::new(53);
+    let xs: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec(3 * 16 * 16, 1.0)).collect();
+    for path in [EnginePath::Packed, EnginePath::PackedInt8] {
+        for layout in [PackedLayout::TileResident, PackedLayout::Expanded] {
+            let serial = Engine::with_layout_graph(
+                graph.clone(), Nonlin::Relu, path, layout).unwrap().with_threads(1);
+            let singles: Vec<Vec<f32>> = xs.iter().map(|x| serial.forward(x)).collect();
+            for t in THREAD_SWEEP {
+                let threaded = Engine::with_layout_graph(
+                    graph.clone(), Nonlin::Relu, path, layout).unwrap().with_threads(t);
+                for (s, x) in xs.iter().enumerate() {
+                    assert_eq!(threaded.forward(x), singles[s],
+                               "{path:?} {layout:?} threads={t} sample {s}");
+                }
+            }
+        }
+    }
+}
+
+/// NaN/±inf regression: non-finite activations must not poison the XNOR-Net
+/// gamma.  Poisoned inputs yield finite outputs on the Packed and PackedInt8
+/// paths (bit-equal across layouts and thread counts like any other input),
+/// and on the Reference path's quantized oracle.
+#[test]
+fn non_finite_inputs_stay_finite_on_all_paths() {
+    let model = ragged_model();
+    let mut rng = Rng::new(54);
+    let mut x = rng.normal_vec(70, 1.0);
+    x[0] = f32::NAN;
+    x[13] = f32::INFINITY;
+    x[27] = f32::NEG_INFINITY;
+    x[64] = f32::NAN; // past the first packed word on ragged widths
+
+    let reference = MlpEngine::with_path(
+        model.clone(), Nonlin::Relu, EnginePath::Reference).unwrap();
+    let y_ref = reference.forward_quantized(&x);
+    assert!(y_ref.iter().all(|v| v.is_finite()),
+            "Reference quantized oracle produced non-finite outputs: {y_ref:?}");
+
+    for path in [EnginePath::Packed, EnginePath::PackedInt8] {
+        let mut per_layout = Vec::new();
+        for layout in [PackedLayout::TileResident, PackedLayout::Expanded] {
+            let engine = MlpEngine::with_path_layout(
+                model.clone(), Nonlin::Relu, path, layout).unwrap();
+            let y = engine.forward(&x);
+            assert!(y.iter().all(|v| v.is_finite()),
+                    "{path:?} {layout:?} produced non-finite outputs: {y:?}");
+            let threaded = MlpEngine::with_path_layout(
+                model.clone(), Nonlin::Relu, path, layout).unwrap().with_threads(4);
+            assert_eq!(threaded.forward(&x), y,
+                       "{path:?} {layout:?}: threading must not change poisoned-input \
+                        handling");
+            per_layout.push(y);
+        }
+        assert_eq!(per_layout[0], per_layout[1],
+                   "{path:?}: layouts must agree bit-exactly on poisoned inputs");
+    }
+}
+
+/// The env default (`TBN_THREADS`, the CI matrix hook) must agree with the
+/// explicit setter — whatever the matrix leg, engines built "at the default"
+/// compute the same bits as `with_threads(1)`.
+#[test]
+fn env_default_threads_match_explicit_serial() {
+    let model = ragged_model();
+    let mut rng = Rng::new(55);
+    let x = rng.normal_vec(70, 1.0);
+    let default_engine = MlpEngine::with_path_layout(
+        model.clone(), Nonlin::Relu, EnginePath::Packed, PackedLayout::from_env())
+        .unwrap();
+    assert_eq!(default_engine.engine().threads(), threads_from_env());
+    let serial = MlpEngine::with_path_layout(
+        model, Nonlin::Relu, EnginePath::Packed, PackedLayout::from_env())
+        .unwrap()
+        .with_threads(1);
+    assert_eq!(default_engine.forward(&x), serial.forward(&x));
+}
