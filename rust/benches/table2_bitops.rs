@@ -3,22 +3,28 @@
 //! Analytic accounting on the exact architecture specs plus a measured
 //! micro-benchmark of the three kernel classes (fp MAC, XNOR-popcount,
 //! tile-reuse) to show the per-op cost ordering really holds on hardware.
+//!
+//! The XNOR word loop is measured once per SIMD backend generation
+//! (scalar / u64x4 / u128 / avx2 where the CPU has it), on both the aligned
+//! range kernel and the misaligned shift-stitched kernel the tile-resident
+//! layout runs, so the AVX2-vs-u128 win is a number.  `--json` additionally
+//! writes the machine-readable `BENCH_table2.json` next to the cwd so the
+//! perf trajectory is tracked in-repo instead of only in scrollback.
 
 use tiledbits::arch;
 use tiledbits::bench_util::{bench, header};
 use tiledbits::coordinator::report;
 use tiledbits::nn;
-use tiledbits::tbn::bitops::{
-    xnor_dot_words_offset, xnor_dot_words_range, xnor_dot_words_range_scalar,
-    xnor_dot_words_range_u64x4,
-};
 use tiledbits::nn::{binarize_activations_into, PackedLayer, PackedLayout};
+use tiledbits::tbn::bitops::{active_backend, xnor_dot_words_offset_with,
+                             xnor_dot_words_range_with, SimdBackend};
 use tiledbits::tbn::{alphas_from, tile_from_weights, AlphaMode, LayerRecord,
                      WeightPayload};
 use tiledbits::tensor::BitVec;
-use tiledbits::util::Rng;
+use tiledbits::util::{Json, Rng};
 
 fn main() {
+    let json_mode = std::env::args().any(|a| a == "--json");
     header("Table 2: Bit-Ops accounting + kernel-class micro-bench");
     print!("{}", report::bitops_table().render());
     println!("paper reference: 35.03 / 0.547 / 0.082 (6.7x), 78.12 / 1.22 / 0.155 (7.9x),");
@@ -51,39 +57,48 @@ fn main() {
     println!("\nweight bytes touched: fp {}  bwnn {}  tbn {}",
              4 * m * n, bits.storage_bytes(), tile.storage_bytes());
 
-    // the packed path's one inner loop, three generations: one-word scalar,
-    // the 4-wide unrolled u64 accumulation, and the current u128 lanes —
-    // reported as words/second
+    // the packed path's one inner loop, once per backend generation, on
+    // both phases the engine runs it: aligned (`xnor_dot_words_range`, the
+    // expanded layout) and misaligned shift-stitched
+    // (`xnor_dot_words_offset` at tile phase 1, the tile-resident default)
     let words = 1usize << 15; // 32k words = 2M bits per call
     let nbits = words * 64;
     let wa: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
     let wb: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
-    let r_sc = bench("xnor popcount scalar (32k words)", 5, 200, || {
-        std::hint::black_box(xnor_dot_words_range_scalar(&wa, &wb, 0, nbits));
-    });
-    let r_u4 = bench("xnor popcount 4-wide u64 (32k words)", 5, 200, || {
-        std::hint::black_box(xnor_dot_words_range_u64x4(&wa, &wb, 0, nbits));
-    });
-    let r_wide = bench("xnor popcount u128 lanes (32k words)", 5, 200, || {
-        std::hint::black_box(xnor_dot_words_range(&wa, &wb, 0, nbits));
-    });
-    // the tile-resident inner loop: same dot at a misaligned tile phase
-    // (shift-stitched fetches) — the price of O(q) weight residency
-    let r_off = bench("xnor popcount shift-stitched (32k words)", 5, 200, || {
-        std::hint::black_box(xnor_dot_words_offset(&wa, 1, &wb, 0, nbits - 64));
-    });
-    for r in [&r_sc, &r_u4, &r_wide, &r_off] {
-        println!("{}", r.report());
+    let detected = SimdBackend::detect();
+    let active = active_backend();
+    println!("\n-- xnor-popcount word loop by SIMD backend (32k words) --");
+    println!("simd backend: detected {detected}, active {active}{}",
+             if active == detected { " (auto)" } else { " (forced via TBN_SIMD)" });
+    let backends: Vec<SimdBackend> = [SimdBackend::Scalar, SimdBackend::U64x4,
+                                      SimdBackend::U128, SimdBackend::Avx2]
+        .into_iter()
+        .filter(|b| b.supported())
+        .collect();
+    let mut kernel_rows: Vec<(SimdBackend, f64, f64)> = Vec::new();
+    for &b in &backends {
+        let r_al = bench(&format!("xnor popcount {b} aligned"), 5, 200, || {
+            std::hint::black_box(xnor_dot_words_range_with(b, &wa, &wb, 0, nbits));
+        });
+        let r_off = bench(&format!("xnor popcount {b} misaligned"), 5, 200, || {
+            std::hint::black_box(
+                xnor_dot_words_offset_with(b, &wa, 1, &wb, 0, nbits - 64));
+        });
+        kernel_rows.push((b,
+                          words as f64 * r_al.per_sec(),
+                          (words - 1) as f64 * r_off.per_sec()));
     }
-    let wps_sc = words as f64 * r_sc.per_sec();
-    let wps_u4 = words as f64 * r_u4.per_sec();
-    let wps_wide = words as f64 * r_wide.per_sec();
-    let wps_off = words as f64 * r_off.per_sec();
-    println!("\npopcount throughput: scalar {wps_sc:.3e}  4-wide {wps_u4:.3e}  \
-              u128 {wps_wide:.3e} words/s");
-    println!("u128 lanes vs scalar {:.2}x, vs 4-wide {:.2}x; shift-stitched \
-              (tile-resident) {wps_off:.3e} words/s ({:.2}x of aligned u128)",
-             wps_wide / wps_sc, wps_wide / wps_u4, wps_off / wps_wide);
+    println!("{:>8} {:>16} {:>18} {:>10}", "backend", "aligned words/s",
+             "misaligned words/s", "vs u128");
+    let u128_aligned = kernel_rows
+        .iter()
+        .find(|(b, _, _)| *b == SimdBackend::U128)
+        .map(|&(_, al, _)| al)
+        .unwrap_or(1.0);
+    for &(b, al, off) in &kernel_rows {
+        println!("{:>8} {al:>16.3e} {off:>18.3e} {:>9.2}x",
+                 b.as_str(), al / u128_aligned);
+    }
 
     // intra-op thread scaling of the batched row kernel itself (the loop the
     // packed engine runs per weight layer): 512x512 tiled layer, batch of
@@ -106,10 +121,12 @@ fn main() {
             &xb, &mut bwords[b * stride..(b + 1) * stride]);
     }
     let kernel_words = m * bsz * stride; // row-dot words touched per call
-    println!("\n-- batched row-kernel thread scaling (512x512, batch 32) --");
+    println!("\n-- batched row-kernel thread scaling (512x512, batch 32, {active} \
+              kernels) --");
     println!("{:>8} {:>14} {:>8}", "threads", "words/s", "speedup");
     let mut out = vec![0.0f32; bsz * m];
     let mut base = 0.0f64;
+    let mut thread_rows: Vec<(usize, f64)> = Vec::new();
     for t in [1usize, 2, 4, 8] {
         let res = bench(&format!("batched rows threads={t}"), 3, 60, || {
             packed.forward_batch_binarized_rows_mt(0, m, &bwords, stride, &gammas,
@@ -120,6 +137,41 @@ fn main() {
         if t == 1 {
             base = wps;
         }
+        thread_rows.push((t, wps));
         println!("{t:>8} {:>14.3e} {:>7.2}x", wps, wps / base);
+    }
+
+    if json_mode {
+        let kernels = Json::Arr(
+            kernel_rows
+                .iter()
+                .map(|&(b, al, off)| Json::obj(vec![
+                    ("backend", Json::Str(b.as_str().to_string())),
+                    ("aligned_words_per_s", Json::Num(al)),
+                    ("misaligned_words_per_s", Json::Num(off)),
+                ]))
+                .collect(),
+        );
+        let batched = Json::Arr(
+            thread_rows
+                .iter()
+                .map(|&(t, wps)| Json::obj(vec![
+                    ("backend", Json::Str(active.as_str().to_string())),
+                    ("threads", Json::Num(t as f64)),
+                    ("words_per_s", Json::Num(wps)),
+                ]))
+                .collect(),
+        );
+        let doc = Json::obj(vec![
+            ("bench", Json::Str("table2_bitops".to_string())),
+            ("detected_backend", Json::Str(detected.as_str().to_string())),
+            ("active_backend", Json::Str(active.as_str().to_string())),
+            ("words_per_call", Json::Num(words as f64)),
+            ("kernels", kernels),
+            ("batched_rows", batched),
+        ]);
+        let path = "BENCH_table2.json";
+        std::fs::write(path, doc.to_string_pretty()).expect("write BENCH_table2.json");
+        println!("\nwrote {path}");
     }
 }

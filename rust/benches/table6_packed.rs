@@ -5,14 +5,16 @@
 //!
 //! Artifact-free: models are built from a seeded RNG exactly like the engine
 //! unit tests, so this bench runs on a bare checkout
-//! (`cargo bench --bench table6_packed`).
+//! (`cargo bench --bench table6_packed`).  `--json` additionally writes the
+//! machine-readable `BENCH_table6.json` (backend, threads, samples/s) so the
+//! packed-path perf trajectory is tracked in-repo.
 
 use tiledbits::bench_util::{bench, header};
-use tiledbits::nn::{EnginePath, MlpEngine, Nonlin};
+use tiledbits::nn::{EnginePath, MlpEngine, Nonlin, SimdBackend};
 use tiledbits::tbn::{alphas_from, tile_from_weights, AlphaMode, LayerRecord,
                      TbnzModel, WeightPayload};
 use tiledbits::tensor::BitVec;
-use tiledbits::util::Rng;
+use tiledbits::util::{Json, Rng};
 
 /// The paper's deployment MLP: 256 -> 128 tiled at p, 128 -> 10 stored 1-bit.
 fn micro_model(p: usize) -> TbnzModel {
@@ -69,7 +71,10 @@ fn wide_model(p: usize) -> TbnzModel {
 }
 
 fn main() {
+    let json_mode = std::env::args().any(|a| a == "--json");
+    let simd = SimdBackend::default();
     header("Table 6 companion: packed XNOR path vs f32 reference (micro MLP)");
+    println!("packed kernels run the {simd} xnor-popcount backend");
 
     let p = 4usize;
     let model = micro_model(p);
@@ -120,11 +125,13 @@ fn main() {
     let wide = wide_model(p);
     let wbatch: Vec<Vec<f32>> = (0..32).map(|_| r.normal_vec(512, 1.0)).collect();
     let mut base = 0.0f64;
+    let mut thread_rows: Vec<(usize, f64)> = Vec::new();
     for t in [1usize, 2, 4, 8] {
         let engine = MlpEngine::with_path(wide.clone(), Nonlin::Relu,
                                           EnginePath::Packed)
             .unwrap()
-            .with_threads(t);
+            .with_threads(t)
+            .with_simd(simd);
         let res = bench(&format!("packed forward_batch(32) threads={t}"), 3, 40, || {
             std::hint::black_box(engine.forward_batch(&wbatch));
         });
@@ -132,8 +139,37 @@ fn main() {
         if t == 1 {
             base = sps;
         }
+        thread_rows.push((t, sps));
         println!("{t:>8} {:>13.0} us {:>14.0} {:>7.2}x",
                  1e6 / res.per_sec(), sps, sps / base);
+    }
+
+    if json_mode {
+        let entry = |name: &str, threads: usize, sps: f64| {
+            Json::obj(vec![
+                ("name", Json::Str(name.to_string())),
+                ("backend", Json::Str(simd.as_str().to_string())),
+                ("threads", Json::Num(threads as f64)),
+                ("samples_per_s", Json::Num(sps)),
+            ])
+        };
+        let mut runs = vec![
+            entry("micro reference single", 1, r_ref.per_sec()),
+            entry("micro packed single", 1, r_pkd.per_sec()),
+            entry("micro reference batch32", 1, b_ref.throughput(batch.len())),
+            entry("micro packed batch32", 1, b_pkd.throughput(batch.len())),
+        ];
+        for &(t, sps) in &thread_rows {
+            runs.push(entry("wide packed batch32", t, sps));
+        }
+        let doc = Json::obj(vec![
+            ("bench", Json::Str("table6_packed".to_string())),
+            ("backend", Json::Str(simd.as_str().to_string())),
+            ("runs", Json::Arr(runs)),
+        ]);
+        let path = "BENCH_table6.json";
+        std::fs::write(path, doc.to_string_pretty()).expect("write BENCH_table6.json");
+        println!("\nwrote {path}");
     }
 
     println!("\n-- Table 6/7-style memory (bytes) --");

@@ -98,6 +98,10 @@ OPTIONS:
                                         [default: tile, or $TBN_LAYOUT if set]
   --threads <n>             intra-op kernel threads per forward (bit-exact
                             at any count) [default: 1, or $TBN_THREADS if set]
+  --simd <backend>          XNOR-popcount kernel backend:
+                            scalar|u64x4|u128|avx2|auto (bit-exact at any
+                            choice; avx2 needs CPU support)
+                                        [default: auto, or $TBN_SIMD if set]
   --workers <n>             serve worker threads          [default: 2]
   --queue-cap <n>           serve queue bound             [default: 1024]
   --overflow <policy>       full-queue behavior: block|reject [default: block]

@@ -70,6 +70,14 @@
 //!   per-element reduction order untouched — so threaded forwards are
 //!   **bit-exact** against single-threaded ones at any thread count, and
 //!   intra-op threads compose multiplicatively with serve workers.
+//!   Inside each thread the XNOR-popcount word loops run on a
+//!   runtime-dispatched SIMD backend (`nn::SimdBackend`, resolved once per
+//!   process via `OnceLock`): AVX2 Harley–Seal kernels where the CPU has
+//!   them, portable u128 / four-lane u64 / scalar generations everywhere
+//!   else — selected by `Engine::with_simd` (CLI `--simd`, env `TBN_SIMD`,
+//!   mirroring the layout/thread switches) and also **bit-exact** across
+//!   every backend at every width, offset phase, and thread count (the
+//!   safety argument for the `unsafe` intrinsics lives in `tbn::bitops`).
 //! * `PackedInt8` — `Packed` with the first weight layer's input quantized
 //!   to 8-bit integers (the paper's microcontroller input packing) instead
 //!   of running layer 0 in f32; parity-gated by the quantization bound in

@@ -9,8 +9,9 @@ use tiledbits::arch;
 use tiledbits::cli::{Cli, USAGE};
 use tiledbits::config::Manifest;
 use tiledbits::coordinator::{self, report, TABLES};
-use tiledbits::nn::{lower_arch_spec, threads_from_env, Engine, EnginePath,
-                    LowerOptions, MlpEngine, Nonlin, PackedLayout};
+use tiledbits::nn::{init_backend, lower_arch_spec, threads_from_env, Engine,
+                    EnginePath, LowerOptions, MlpEngine, Nonlin, PackedLayout,
+                    SimdBackend};
 use tiledbits::runtime::Runtime;
 use tiledbits::serve::{BatchPolicy, OverflowPolicy, ServePolicy, Server, ServerStats};
 use tiledbits::tbn::AlphaMode;
@@ -72,7 +73,24 @@ fn threads_opt(cli: &Cli) -> Result<usize> {
     }
 }
 
-fn serve_policy_opt(cli: &Cli, kernel_threads: usize) -> ServePolicy {
+/// `--simd` wins; without it the `TBN_SIMD` env override (the CI A/B hook)
+/// picks the default.  Unlike the env var (which clamps quietly so one
+/// matrix config runs everywhere), an explicit flag fails loudly both on a
+/// typo and on a backend this CPU cannot run — `--simd avx2` on a machine
+/// without AVX2 must not silently benchmark the u128 kernels.
+fn simd_opt(cli: &Cli) -> Result<SimdBackend> {
+    match cli.opt("simd") {
+        Some(v) => match SimdBackend::parse(v) {
+            Some(b) if b.supported() => Ok(b),
+            Some(b) => Err(anyhow!("--simd {v:?}: {b} is not supported on this CPU")),
+            None => Err(anyhow!("unknown --simd {v:?} (scalar|u64x4|u128|avx2|auto)")),
+        },
+        None => Ok(SimdBackend::from_env()),
+    }
+}
+
+fn serve_policy_opt(cli: &Cli, kernel_threads: usize, simd: SimdBackend)
+                    -> ServePolicy {
     ServePolicy {
         batch: BatchPolicy::default(),
         queue_cap: cli.opt_usize("queue-cap").unwrap_or(1024),
@@ -81,14 +99,15 @@ fn serve_policy_opt(cli: &Cli, kernel_threads: usize) -> ServePolicy {
             _ => OverflowPolicy::Block,
         },
         kernel_threads,
+        simd,
     }
 }
 
 fn print_serve_stats(stats: &ServerStats, elapsed_s: f64) {
     info!("serve", "{} requests in {elapsed_s:.3}s ({} rejected), mean latency \
-           {:.0}us, mean batch {:.1}, {} kernel thread(s)/request",
+           {:.0}us, mean batch {:.1}, {} kernel thread(s)/request, {} kernels",
           stats.served, stats.rejected, stats.mean_latency_us(), stats.mean_batch(),
-          stats.kernel_threads);
+          stats.kernel_threads, stats.simd);
     if let Some(p) = stats.latency_percentiles() {
         info!("serve", "latency percentiles over last {} requests: \
                p50 {}us  p95 {}us  p99 {}us  (lifetime max {}us)",
@@ -127,15 +146,19 @@ fn serve_arch(cli: &Cli, name: &str) -> Result<()> {
     let path = engine_path_opt(cli);
     let layout = packed_layout_opt(cli)?;
     let threads = threads_opt(cli)?;
+    // resolve the process-wide dispatch once at startup (OnceLock): the
+    // engine carries the same choice explicitly
+    let simd = init_backend(simd_opt(cli)?);
     let engine = Engine::with_layout_graph(graph, Nonlin::Relu, path, layout)
         .map_err(|e| anyhow!(e))?
-        .with_threads(threads);
+        .with_threads(threads)
+        .with_simd(simd);
     let (in_dim, out_dim) = (engine.in_len(), engine.out_len());
     let workers = cli.opt_usize("workers").unwrap_or(2);
-    let policy = serve_policy_opt(cli, threads);
+    let policy = serve_policy_opt(cli, threads, simd);
     info!("serve", "{name}: natively lowered graph ({} nodes), {path:?} engine \
-           ({layout:?} weights, {threads} kernel thread(s)), {workers} workers, \
-           queue cap {} ({:?}), {} resident weight bytes",
+           ({layout:?} weights, {threads} kernel thread(s), {simd} kernels), \
+           {workers} workers, queue cap {} ({:?}), {} resident weight bytes",
           engine.graph().len(), policy.queue_cap, policy.on_full,
           engine.resident_weight_bytes());
     let server = Arc::new(Server::start_pool_with(Arc::new(engine), policy, workers));
@@ -283,14 +306,16 @@ fn dispatch(cli: &Cli) -> Result<()> {
             let path = engine_path_opt(cli);
             let layout = packed_layout_opt(cli)?;
             let threads = threads_opt(cli)?;
+            let simd = init_backend(simd_opt(cli)?);
             let workers = cli.opt_usize("workers").unwrap_or(2);
-            let policy = serve_policy_opt(cli, threads);
+            let policy = serve_policy_opt(cli, threads, simd);
             let engine = MlpEngine::with_path_layout(tbnz, Nonlin::Relu, path, layout)
                 .map_err(|e| anyhow!(e))?
-                .with_threads(threads);
+                .with_threads(threads)
+                .with_simd(simd);
             info!("serve", "{path:?} engine ({layout:?} weights, {threads} kernel \
-                   thread(s)), {workers} workers, queue cap {} ({:?}), \
-                   {} resident weight bytes",
+                   thread(s), {simd} kernels), {workers} workers, queue cap {} \
+                   ({:?}), {} resident weight bytes",
                   policy.queue_cap, policy.on_full, engine.resident_weight_bytes());
             let server = Arc::new(Server::start_pool_with(Arc::new(engine),
                                                           policy, workers));

@@ -47,6 +47,7 @@ use std::sync::Arc;
 
 use super::layers::{FcLayer, Graph, GraphNode, Node, Scratch, Slot};
 use super::packed::{threads_from_env, EnginePath, PackedLayer, PackedLayout};
+use crate::tbn::bitops::{active_backend, SimdBackend};
 use crate::tbn::{LayerRecord, TbnzModel};
 
 /// Hidden-layer nonlinearity (fused into the weight-layer kernels).
@@ -82,6 +83,11 @@ pub struct Engine {
     /// disjoint output slices and runs the unchanged serial per-element
     /// math.
     threads: usize,
+    /// XNOR-popcount backend the packed row kernels dispatch to.  Defaults
+    /// to [`active_backend`] (the process-wide `TBN_SIMD` / `--simd`
+    /// resolution); [`Engine::with_simd`] overrides per engine.  Every
+    /// backend is bit-exact against scalar, so this only moves throughput.
+    simd: SimdBackend,
 }
 
 impl Engine {
@@ -210,6 +216,7 @@ impl Engine {
         Ok(Engine {
             graph, nonlin, path, layout, packed, first_weight, relu_after, uses, in_len,
             threads: threads_from_env(),
+            simd: active_backend(),
         })
     }
 
@@ -225,6 +232,20 @@ impl Engine {
     /// Intra-op kernel threads the packed/int8 weight kernels run with.
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Force the XNOR-popcount backend for this engine's packed kernels.
+    /// Backends that need CPU features the host lacks (e.g. `Avx2` off
+    /// x86-64) clamp to the detected best, mirroring `TBN_SIMD=auto`.
+    /// Bit-exact at any setting — selection only moves throughput.
+    pub fn with_simd(mut self, simd: SimdBackend) -> Engine {
+        self.simd = if simd.supported() { simd } else { SimdBackend::detect() };
+        self
+    }
+
+    /// The XNOR-popcount backend the packed row kernels dispatch to.
+    pub fn simd(&self) -> SimdBackend {
+        self.simd
     }
 
     /// Build an FC-chain engine from a borrowed TBNZ model (one `Fc` node
@@ -294,8 +315,12 @@ impl Engine {
         let node = &self.graph[idx].node;
         if let Some(p) = &self.packed[idx] {
             return match node {
-                Node::Fc(fc) => fc.forward_packed(p, h, relu, scratch, self.threads),
-                Node::Conv2d(c) => c.forward_packed(p, h, relu, scratch, self.threads),
+                Node::Fc(fc) => {
+                    fc.forward_packed(p, h, relu, scratch, self.threads, self.simd)
+                }
+                Node::Conv2d(c) => {
+                    c.forward_packed(p, h, relu, scratch, self.threads, self.simd)
+                }
                 _ => unreachable!("packed state only exists for weight nodes"),
             };
         }
@@ -437,7 +462,7 @@ impl Engine {
             let a = ins[0];
             if let (Some(p), Node::Fc(fc)) = (&self.packed[idx], &gn.node) {
                 return fc.forward_packed_batch(p, a, self.relu_after[idx], &mut scratch,
-                                               self.threads);
+                                               self.threads, self.simd);
             }
             a.iter().map(|h| self.node_forward(idx, h, &mut scratch)).collect()
         })
@@ -586,6 +611,12 @@ impl MlpEngine {
     /// Set the intra-op kernel thread count ([`Engine::with_threads`]).
     pub fn with_threads(mut self, threads: usize) -> MlpEngine {
         self.engine = self.engine.with_threads(threads);
+        self
+    }
+
+    /// Force the XNOR-popcount backend ([`Engine::with_simd`]).
+    pub fn with_simd(mut self, simd: SimdBackend) -> MlpEngine {
+        self.engine = self.engine.with_simd(simd);
         self
     }
 

@@ -28,6 +28,7 @@ use crate::nn::packed::{
     quantize_input_i8, split_ranges, PackedLayer, PackedLayout,
 };
 use crate::nn::payload_row_dot;
+use crate::tbn::bitops::SimdBackend;
 use crate::tbn::LayerRecord;
 
 /// A 2-D convolution over a channel-major `(c, h, w)` activation map.
@@ -234,7 +235,8 @@ impl Conv2dLayer {
     /// shared writes.  Per-element math and accumulation order are exactly
     /// the serial kernel's, so any thread count is bit-exact against 1.
     pub fn forward_packed(&self, packed: &PackedLayer, x: &[f32], relu: bool,
-                          scratch: &mut Scratch, threads: usize) -> Vec<f32> {
+                          scratch: &mut Scratch, threads: usize,
+                          simd: SimdBackend) -> Vec<f32> {
         debug_assert_eq!(x.len(), self.in_len());
         let n = self.patch_len();
         let stride = n.div_ceil(64).max(1);
@@ -262,10 +264,12 @@ impl Conv2dLayer {
                             &mut scratch.batch_words[pos * stride..(pos + 1) * stride]);
                     }
                 }
-                packed.forward_batch_binarized_rows(g * cog, (g + 1) * cog,
-                                                    &scratch.batch_words, stride,
-                                                    &scratch.gammas, relu,
-                                                    &mut scratch.batch_out);
+                packed.forward_batch_binarized_rows_simd(g * cog, (g + 1) * cog,
+                                                         &scratch.batch_words,
+                                                         stride,
+                                                         &scratch.gammas, relu,
+                                                         &mut scratch.batch_out,
+                                                         simd);
             } else {
                 // Contiguous per-range chunks of the position-major staging
                 // buffers: range (lo, hi) owns words[lo*stride..hi*stride],
@@ -303,8 +307,9 @@ impl Conv2dLayer {
                                 gc[k] = binarize_activations_into(
                                     &patch, &mut wc[k * stride..(k + 1) * stride]);
                             }
-                            packed.forward_batch_binarized_rows(
-                                g * cog, (g + 1) * cog, wc, stride, gc, relu, oc);
+                            packed.forward_batch_binarized_rows_simd(
+                                g * cog, (g + 1) * cog, wc, stride, gc, relu,
+                                oc, simd);
                         });
                     }
                 });
@@ -542,7 +547,8 @@ mod tests {
         let want = conv.forward_quantized_oracle(&x, false, &mut s);
         for layout in [PackedLayout::TileResident, PackedLayout::Expanded] {
             let packed = conv.build_packed(layout).unwrap();
-            let got = conv.forward_packed(&packed, &x, false, &mut s, 1);
+            let got = conv.forward_packed(&packed, &x, false, &mut s, 1,
+                                          SimdBackend::default());
             assert_eq!(got.len(), want.len());
             for i in 0..got.len() {
                 assert!((got[i] - want[i]).abs() < 1e-3 * want[i].abs().max(1.0),
@@ -576,17 +582,21 @@ mod tests {
         assert!(tile.resident_bytes() < expanded.resident_bytes());
         let mut s = Scratch::default();
         let x = rng.normal_vec(conv.in_len(), 1.0);
-        let a = conv.forward_packed(&tile, &x, true, &mut s, 1);
-        let b = conv.forward_packed(&expanded, &x, true, &mut s, 1);
+        let a = conv.forward_packed(&tile, &x, true, &mut s, 1,
+                                    SimdBackend::default());
+        let b = conv.forward_packed(&expanded, &x, true, &mut s, 1,
+                                    SimdBackend::default());
         assert_eq!(a, b, "layouts must agree bit-exactly");
 
         // the threaded position split is bit-exact on both layouts, at any
         // thread count (including threads > positions: area = 49)
         for threads in [2usize, 3, 4, 8, 64] {
-            assert_eq!(conv.forward_packed(&tile, &x, true, &mut s, threads), a,
-                       "tile threads={threads}");
-            assert_eq!(conv.forward_packed(&expanded, &x, true, &mut s, threads), b,
-                       "expanded threads={threads}");
+            assert_eq!(conv.forward_packed(&tile, &x, true, &mut s, threads,
+                                           SimdBackend::default()),
+                       a, "tile threads={threads}");
+            assert_eq!(conv.forward_packed(&expanded, &x, true, &mut s, threads,
+                                           SimdBackend::default()),
+                       b, "expanded threads={threads}");
         }
     }
 

@@ -12,6 +12,7 @@ use crate::nn::packed::{
     payload_row_dot_i8, quantize_input_i8, split_ranges, PackedLayer, PackedLayout,
 };
 use crate::nn::{fc_fp_forward, fc_layer_forward};
+use crate::tbn::bitops::SimdBackend;
 use crate::tbn::LayerRecord;
 
 /// A `[m, n]` weight layer: `y = W x` with an optional fused ReLU.
@@ -53,21 +54,24 @@ impl FcLayer {
     }
 
     /// Packed forward: sign-binarize the input with an XNOR-Net scale, then
-    /// XNOR-popcount every row.  With `threads > 1` the row loop splits
-    /// across scoped std threads (`PackedLayer::
-    /// forward_batch_binarized_rows_mt` with a batch of one) — bit-exact
-    /// against the serial path at any thread count.
+    /// XNOR-popcount every row on the `simd` backend.  With `threads > 1`
+    /// the row loop splits across scoped std threads (`PackedLayer::
+    /// forward_batch_binarized_rows_mt_simd` with a batch of one) —
+    /// bit-exact against the serial path at any thread count and on any
+    /// backend.
+    #[allow(clippy::too_many_arguments)]
     pub fn forward_packed(&self, packed: &PackedLayer, x: &[f32], relu: bool,
-                          scratch: &mut Scratch, threads: usize) -> Vec<f32> {
+                          scratch: &mut Scratch, threads: usize,
+                          simd: SimdBackend) -> Vec<f32> {
         debug_assert_eq!(x.len(), self.n);
         let gamma = binarize_activations(x, &mut scratch.words);
         if threads <= 1 {
-            return packed.forward_binarized(&scratch.words, gamma, relu);
+            return packed.forward_binarized_simd(&scratch.words, gamma, relu, simd);
         }
         let mut out = vec![0.0f32; self.m];
-        packed.forward_batch_binarized_rows_mt(0, self.m, &scratch.words,
-                                               scratch.words.len(), &[gamma], relu,
-                                               &mut out, threads);
+        packed.forward_batch_binarized_rows_mt_simd(0, self.m, &scratch.words,
+                                                    scratch.words.len(), &[gamma], relu,
+                                                    &mut out, threads, simd);
         out
     }
 
@@ -77,10 +81,13 @@ impl FcLayer {
     /// weight state — and on the tile-resident layout the one shared tile —
     /// stays hot across the batch.  Outputs are bit-identical to per-sample
     /// [`FcLayer::forward_packed`].  `threads > 1` row-splits the batched
-    /// kernel (`PackedLayer::forward_batch_binarized_rows_mt`), preserving
-    /// that bit-identity at any thread count.
+    /// kernel (`PackedLayer::forward_batch_binarized_rows_mt_simd`),
+    /// preserving that bit-identity at any thread count; `simd` selects the
+    /// XNOR-popcount backend every worker runs.
+    #[allow(clippy::too_many_arguments)]
     pub fn forward_packed_batch(&self, packed: &PackedLayer, xs: &[Vec<f32>],
-                                relu: bool, scratch: &mut Scratch, threads: usize)
+                                relu: bool, scratch: &mut Scratch, threads: usize,
+                                simd: SimdBackend)
                                 -> Vec<Vec<f32>> {
         let stride = self.n.div_ceil(64).max(1);
         let bsz = xs.len();
@@ -94,8 +101,9 @@ impl FcLayer {
             scratch.gammas.push(g);
         }
         let mut out = vec![0.0f32; bsz * self.m];
-        packed.forward_batch_binarized_rows_mt(0, self.m, &scratch.batch_words, stride,
-                                               &scratch.gammas, relu, &mut out, threads);
+        packed.forward_batch_binarized_rows_mt_simd(0, self.m, &scratch.batch_words,
+                                                    stride, &scratch.gammas, relu,
+                                                    &mut out, threads, simd);
         out.chunks(self.m).map(|row| row.to_vec()).collect()
     }
 
@@ -192,7 +200,8 @@ mod tests {
         for layout in [PackedLayout::TileResident, PackedLayout::Expanded] {
             let packed = fc.build_packed(layout).unwrap();
             let mut scratch = Scratch::default();
-            let got = fc.forward_packed(&packed, &x, false, &mut scratch, 1);
+            let got = fc.forward_packed(&packed, &x, false, &mut scratch, 1,
+                                        SimdBackend::default());
             for i in 0..12 {
                 assert!((got[i] - want[i]).abs() < 1e-3 * want[i].abs().max(1.0),
                         "{layout:?} row {i}");
@@ -212,20 +221,24 @@ mod tests {
         for layout in [PackedLayout::TileResident, PackedLayout::Expanded] {
             let packed = fc.build_packed(layout).unwrap();
             let mut scratch = Scratch::default();
-            let batch = fc.forward_packed_batch(&packed, &xs, true, &mut scratch, 1);
+            let batch = fc.forward_packed_batch(&packed, &xs, true, &mut scratch, 1,
+                                                SimdBackend::default());
             assert_eq!(batch.len(), xs.len());
             for (b, x) in xs.iter().enumerate() {
-                let single = fc.forward_packed(&packed, x, true, &mut scratch, 1);
+                let single = fc.forward_packed(&packed, x, true, &mut scratch, 1,
+                                               SimdBackend::default());
                 assert_eq!(batch[b], single, "{layout:?} sample {b}");
                 for threads in [2usize, 4, 64] {
                     assert_eq!(
-                        fc.forward_packed(&packed, x, true, &mut scratch, threads),
+                        fc.forward_packed(&packed, x, true, &mut scratch, threads,
+                                          SimdBackend::default()),
                         single, "{layout:?} sample {b} threads={threads}");
                 }
             }
             for threads in [2usize, 4, 64] {
                 assert_eq!(
-                    fc.forward_packed_batch(&packed, &xs, true, &mut scratch, threads),
+                    fc.forward_packed_batch(&packed, &xs, true, &mut scratch,
+                                            threads, SimdBackend::default()),
                     batch, "{layout:?} threads={threads}");
             }
         }
@@ -264,7 +277,9 @@ mod tests {
         let x = rng.normal_vec(24, 1.0);
         let mut s = Scratch::default();
         assert!(fc.forward_reference(&x, true).iter().all(|&v| v >= 0.0));
-        assert!(fc.forward_packed(&packed, &x, true, &mut s, 1).iter().all(|&v| v >= 0.0));
+        assert!(fc.forward_packed(&packed, &x, true, &mut s, 1, SimdBackend::default())
+            .iter()
+            .all(|&v| v >= 0.0));
         assert!(fc.forward_int8(&x, true, &mut s, 1).iter().all(|&v| v >= 0.0));
         assert!(fc.forward_quantized_oracle(&x, true).iter().all(|&v| v >= 0.0));
     }

@@ -71,6 +71,9 @@ pub use packed::{activation_gamma, binarize_activations, binarize_activations_in
                  forward_quantized_reference, payload_row_dot_i8, quantize_input_i8,
                  threads_from_env, AlphaRun, EnginePath, PackedLayer, PackedLayout,
                  PackedPayload};
+// Re-exported beside the engine: `with_simd` / `TBN_SIMD` select it the same
+// way `with_threads` / `TBN_THREADS` select the kernel thread count.
+pub use crate::tbn::bitops::{active_backend, init_backend, SimdBackend};
 
 use crate::tbn::{LayerRecord, WeightPayload};
 use crate::tensor::BitVec;

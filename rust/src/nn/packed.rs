@@ -31,7 +31,13 @@
 //! [`PackedLayout::Expanded`] keeps the PR 1 behavior (every row expanded
 //! into its own packed words) for A/B measurement; the two layouts are
 //! bit-exact against each other because both accumulate the same exact
-//! integer dot per alpha run in the same order.
+//! integer dot per alpha run in the same order.  The XNOR-popcount
+//! arithmetic itself runs on the runtime-dispatched
+//! [`SimdBackend`](crate::tbn::bitops::SimdBackend) (`TBN_SIMD` /
+//! `--simd`): the `_simd` kernel variants take the backend explicitly so
+//! engines hoist the choice out of the row loops, and backend selection
+//! never changes results either — every backend masks partial words
+//! identically and leaves the per-run f32 accumulation order untouched.
 //!
 //! A `PackedLayer` is a plain `(m, n)` row matrix over the layer's row-major
 //! flat weights: FC layers pack their `[m, n]` shape directly, Conv2d layers
@@ -48,7 +54,8 @@
 //! tie-breaks at exactly-zero activations).
 
 use super::{fc_fp_forward, fc_layer_forward};
-use crate::tbn::bitops::{xnor_dot_words_offset, xnor_dot_words_range};
+use crate::tbn::bitops::{active_backend, xnor_dot_words_offset_with,
+                         xnor_dot_words_range_with, SimdBackend};
 use crate::tbn::{LayerRecord, TbnzModel, WeightPayload};
 
 /// Which implementation serves `MlpEngine::forward` / `Engine::forward`.
@@ -369,14 +376,26 @@ impl PackedLayer {
     /// the two layouts accumulate the same exact integer dots in the same
     /// order — bit-exact agreement.
     pub fn row_dot_binarized(&self, i: usize, xw: &[u64]) -> f32 {
+        self.row_dot_binarized_simd(i, xw, active_backend())
+    }
+
+    /// [`PackedLayer::row_dot_binarized`] on an explicit XNOR-popcount
+    /// backend.  The backend changes only how the interior full words of
+    /// each run batch their popcounts — every backend computes the same
+    /// exact integer dot per alpha run, and the f32 accumulation order is
+    /// untouched — so any backend choice is **bit-exact** against any
+    /// other (and composes with the threading contract the same way).
+    pub fn row_dot_binarized_simd(&self, i: usize, xw: &[u64],
+                                  simd: SimdBackend) -> f32 {
         match &self.payload {
             PackedPayload::Bits { words_per_row, row_words, runs, run_offsets } => {
                 let row = &row_words[i * words_per_row..(i + 1) * words_per_row];
                 let (lo, hi) = (run_offsets[i] as usize, run_offsets[i + 1] as usize);
                 let mut acc = 0.0f32;
                 for run in &runs[lo..hi] {
-                    let dot =
-                        xnor_dot_words_range(row, xw, run.start as usize, run.len as usize);
+                    let dot = xnor_dot_words_range_with(simd, row, xw,
+                                                        run.start as usize,
+                                                        run.len as usize);
                     acc += run.alpha * dot as f32;
                 }
                 acc
@@ -394,7 +413,7 @@ impl PackedLayer {
                     let len = (q - ti).min(self.n - j);
                     let alpha =
                         if single { alphas[0] } else { alphas[(flat / q) % alphas.len()] };
-                    let dot = xnor_dot_words_offset(tile_words, ti, xw, j, len);
+                    let dot = xnor_dot_words_offset_with(simd, tile_words, ti, xw, j, len);
                     acc += alpha * dot as f32;
                     j += len;
                 }
@@ -420,9 +439,17 @@ impl PackedLayer {
     /// sign bits of the input activations (bits `>= n` zero) and `gamma` is
     /// their XNOR-Net scale.  The multiply count is one per alpha run.
     pub fn forward_binarized(&self, xw: &[u64], gamma: f32, relu: bool) -> Vec<f32> {
+        self.forward_binarized_simd(xw, gamma, relu, active_backend())
+    }
+
+    /// [`PackedLayer::forward_binarized`] on an explicit backend (see
+    /// [`PackedLayer::row_dot_binarized_simd`] for the bit-exactness
+    /// contract).
+    pub fn forward_binarized_simd(&self, xw: &[u64], gamma: f32, relu: bool,
+                                  simd: SimdBackend) -> Vec<f32> {
         (0..self.m)
             .map(|i| {
-                let v = gamma * self.row_dot_binarized(i, xw);
+                let v = gamma * self.row_dot_binarized_simd(i, xw, simd);
                 if relu { v.max(0.0) } else { v }
             })
             .collect()
@@ -448,6 +475,18 @@ impl PackedLayer {
     pub fn forward_batch_binarized_rows(&self, row_lo: usize, row_hi: usize,
                                         xws: &[u64], stride: usize, gammas: &[f32],
                                         relu: bool, out: &mut [f32]) {
+        self.forward_batch_binarized_rows_simd(row_lo, row_hi, xws, stride, gammas,
+                                               relu, out, active_backend())
+    }
+
+    /// [`PackedLayer::forward_batch_binarized_rows`] on an explicit
+    /// backend — the form the engine layers call, with the backend hoisted
+    /// out of the row loop (see [`PackedLayer::row_dot_binarized_simd`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_batch_binarized_rows_simd(&self, row_lo: usize, row_hi: usize,
+                                             xws: &[u64], stride: usize,
+                                             gammas: &[f32], relu: bool,
+                                             out: &mut [f32], simd: SimdBackend) {
         let bsz = gammas.len();
         debug_assert!(row_lo <= row_hi && row_hi <= self.m);
         debug_assert!(xws.len() >= bsz * stride);
@@ -456,7 +495,7 @@ impl PackedLayer {
         for i in row_lo..row_hi {
             for b in 0..bsz {
                 let xw = &xws[b * stride..(b + 1) * stride];
-                let v = gammas[b] * self.row_dot_binarized(i, xw);
+                let v = gammas[b] * self.row_dot_binarized_simd(i, xw, simd);
                 out[b * nrows + (i - row_lo)] = if relu { v.max(0.0) } else { v };
             }
         }
@@ -478,13 +517,27 @@ impl PackedLayer {
                                            xws: &[u64], stride: usize,
                                            gammas: &[f32], relu: bool,
                                            out: &mut [f32], threads: usize) {
+        self.forward_batch_binarized_rows_mt_simd(row_lo, row_hi, xws, stride, gammas,
+                                                  relu, out, threads, active_backend())
+    }
+
+    /// [`PackedLayer::forward_batch_binarized_rows_mt`] on an explicit
+    /// backend: every worker thread runs the dispatched kernel, so the
+    /// intra-op threading and the SIMD backend compose — and stay
+    /// bit-exact — in both directions.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_batch_binarized_rows_mt_simd(&self, row_lo: usize, row_hi: usize,
+                                                xws: &[u64], stride: usize,
+                                                gammas: &[f32], relu: bool,
+                                                out: &mut [f32], threads: usize,
+                                                simd: SimdBackend) {
         let bsz = gammas.len();
         debug_assert!(row_lo <= row_hi && row_hi <= self.m);
         let nrows = row_hi - row_lo;
         let t = threads.min(nrows).max(1);
         if t <= 1 || bsz == 0 {
-            return self.forward_batch_binarized_rows(row_lo, row_hi, xws, stride,
-                                                     gammas, relu, out);
+            return self.forward_batch_binarized_rows_simd(row_lo, row_hi, xws, stride,
+                                                          gammas, relu, out, simd);
         }
         debug_assert!(xws.len() >= bsz * stride);
         debug_assert!(out.len() >= bsz * nrows);
@@ -496,7 +549,7 @@ impl PackedLayer {
                     for i in (row_lo + lo)..(row_lo + hi) {
                         for (b, dst) in slices.iter_mut().enumerate() {
                             let xw = &xws[b * stride..(b + 1) * stride];
-                            let v = gammas[b] * self.row_dot_binarized(i, xw);
+                            let v = gammas[b] * self.row_dot_binarized_simd(i, xw, simd);
                             dst[i - row_lo - lo] = if relu { v.max(0.0) } else { v };
                         }
                     }
@@ -1027,6 +1080,43 @@ mod tests {
                                &want[b * m + lo..b * m + hi],
                                "{layout:?} threads={threads} rows {lo}..{hi}");
                 }
+            }
+        }
+    }
+
+    /// Every XNOR-popcount backend produces bit-identical packed forwards
+    /// on both layouts, serial and threaded — the engine-level face of the
+    /// kernel parity `tests/simd_parity.rs` sweeps.
+    #[test]
+    fn batch_rows_bit_exact_across_simd_backends() {
+        let mut rng = Rng::new(47);
+        for layout in [PackedLayout::TileResident, PackedLayout::Expanded] {
+            let (m, n) = (11usize, 70usize);
+            let rec = tiled_record("t", m, n, 7, AlphaMode::PerTile, &mut rng);
+            let packed = PackedLayer::from_record_mn_layout(&rec, m, n, layout).unwrap();
+            let stride = n.div_ceil(64).max(1);
+            let bsz = 5usize;
+            let mut xws = vec![0u64; bsz * stride];
+            let mut gammas = Vec::with_capacity(bsz);
+            for b in 0..bsz {
+                let h = rng.normal_vec(n, 1.0);
+                gammas.push(binarize_activations_into(
+                    &h, &mut xws[b * stride..(b + 1) * stride]));
+            }
+            let mut want = vec![0.0f32; bsz * m];
+            packed.forward_batch_binarized_rows_simd(0, m, &xws, stride, &gammas, true,
+                                                     &mut want, SimdBackend::Scalar);
+            for simd in [SimdBackend::Scalar, SimdBackend::U64x4, SimdBackend::U128,
+                         SimdBackend::Avx2] {
+                for threads in [1usize, 3, 8] {
+                    let mut got = vec![0.0f32; bsz * m];
+                    packed.forward_batch_binarized_rows_mt_simd(
+                        0, m, &xws, stride, &gammas, true, &mut got, threads, simd);
+                    assert_eq!(got, want, "{layout:?} {simd} threads={threads}");
+                }
+                let single = packed.forward_binarized_simd(
+                    &xws[..stride], gammas[0], true, simd);
+                assert_eq!(&single[..], &want[..m], "{layout:?} {simd} single");
             }
         }
     }

@@ -29,6 +29,8 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
+use crate::nn::SimdBackend;
+
 /// Anything that can run a batch of flat f32 samples to output vectors.
 pub trait BatchModel: Send + 'static {
     fn infer_batch(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>>;
@@ -118,6 +120,10 @@ pub struct ServerStats {
     /// composes with the worker pool, so peak busy cores ≈
     /// `workers * kernel_threads`.
     pub kernel_threads: usize,
+    /// XNOR-popcount backend the served engine's packed kernels dispatch to
+    /// ([`ServePolicy::simd`]) — printed in the serve stats line so a
+    /// perf report always names the kernel generation it measured.
+    pub simd: SimdBackend,
 }
 
 impl ServerStats {
@@ -205,6 +211,11 @@ pub struct ServePolicy {
     /// `Engine::with_threads`; keep the two in sync).  Composes with the
     /// worker pool: each in-flight batch occupies up to this many cores.
     pub kernel_threads: usize,
+    /// XNOR-popcount backend the served engine runs (informational for the
+    /// stats report, like `kernel_threads` — the engine itself is
+    /// configured via `Engine::with_simd`; keep the two in sync).
+    /// Defaults to the process-wide [`SimdBackend::default`] resolution.
+    pub simd: SimdBackend,
 }
 
 impl Default for ServePolicy {
@@ -214,6 +225,7 @@ impl Default for ServePolicy {
             queue_cap: 1024,
             on_full: OverflowPolicy::Block,
             kernel_threads: 1,
+            simd: SimdBackend::default(),
         }
     }
 }
@@ -397,6 +409,7 @@ impl Server {
             workers: n_workers,
             per_worker: vec![WorkerStats::default(); n_workers],
             kernel_threads: policy.kernel_threads.max(1),
+            simd: policy.simd,
             ..ServerStats::default()
         }));
         let in_dim = model.in_dim();
@@ -597,6 +610,7 @@ mod tests {
                 queue_cap: 1,
                 on_full: OverflowPolicy::Reject,
                 kernel_threads: 1,
+                simd: SimdBackend::default(),
             },
             1,
         );
@@ -631,6 +645,7 @@ mod tests {
                 queue_cap: 2,
                 on_full: OverflowPolicy::Block,
                 kernel_threads: 1,
+                simd: SimdBackend::default(),
             },
             2,
         ));
@@ -712,6 +727,7 @@ mod tests {
             2,
         );
         assert_eq!(server.stats().kernel_threads, 4);
+        assert_eq!(server.stats().simd, SimdBackend::default());
         // the unbounded/legacy constructors report the serial default
         let legacy = Server::start(SumModel { dim: 1, delay: Duration::ZERO },
                                    BatchPolicy::default());
@@ -742,6 +758,7 @@ mod tests {
                 queue_cap: 64,
                 on_full: OverflowPolicy::Block,
                 kernel_threads: 1,
+                simd: SimdBackend::default(),
             },
             3,
         ));

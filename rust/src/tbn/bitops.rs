@@ -2,6 +2,20 @@
 //! it models — word-level XNOR + popcount dot products over `u64`-packed
 //! sign vectors, the arithmetic the `nn::packed` fast path runs on.
 //!
+//! The dot kernels come in four bit-exact backend generations
+//! ([`SimdBackend`]): per-word scalar, the 4-wide u64 unroll, two-lane
+//! `u128` accumulation, and an `std::arch` AVX2 kernel (Harley–Seal
+//! carry-save reduction with a vpshufb nibble-LUT popcount, plus a
+//! vectorized shift-stitch for the misaligned tile-resident loop).  The
+//! backend is resolved **once** per process — `TBN_SIMD` env /
+//! `--simd` CLI via a `OnceLock` ([`active_backend`] / [`init_backend`]),
+//! with `auto` detecting AVX2 at runtime and every non-AVX2 target
+//! silently falling back to the u128 path — and the `unsafe` intrinsics
+//! blocks are entered only behind the cached
+//! `is_x86_feature_detected!("avx2")` bit (safety argument at the `avx2`
+//! module: alignment-free loads, bounds-proved stitched reads, scalar
+//! masked tails shared verbatim with the portable backends).
+//!
 //! Unit convention (standard in the BNN literature and consistent with the
 //! paper's numbers — FP/IR-Net = 64x exactly): one full-precision MAC costs
 //! 64 bit-ops; one binary (XNOR+popcount) MAC costs 1 bit-op.
@@ -14,6 +28,8 @@
 //! a further p-fold reduction where applicable.  This yields the >p overall
 //! savings the paper reports (6.7x at p=4 on ResNet18).
 
+use std::sync::OnceLock;
+
 use crate::arch::{ArchSpec, Kind};
 use super::policy::{decide, Quant, TilingPolicy};
 
@@ -23,6 +39,141 @@ use super::policy::{decide, Quant, TilingPolicy};
 //
 // Layout convention is `tensor::BitVec`'s: bit k of a packed slice lives in
 // word k / 64 at position k % 64 (LSB-first); bit = 1 encodes +1.
+//
+// Every kernel exists per backend generation (scalar -> u64x4 -> u128 ->
+// AVX2), all bit-exact against each other: partial boundary words are
+// masked with the *same* scalar expressions in every backend, and only the
+// interior full-word runs differ in how they batch `popcount`.  The public
+// entry points ([`xnor_dot_words_range`], [`xnor_dot_words_offset`])
+// dispatch once through the process-wide [`SimdBackend`]; the packed layer
+// kernels carry an explicit backend instead so the choice is hoisted out of
+// the row loops entirely.
+
+/// Which XNOR-popcount implementation the packed kernels run on.
+///
+/// Selection happens **once**: [`SimdBackend::from_env`] reads `TBN_SIMD`
+/// (`scalar | u64x4 | u128 | avx2 | auto`, mirroring `TBN_LAYOUT` /
+/// `TBN_THREADS`), and the process-wide default is resolved a single time
+/// through a `OnceLock` ([`active_backend`]) — never per call.  `auto` (or
+/// unset, or junk) picks [`SimdBackend::detect`]: AVX2 when the CPU has it,
+/// the u128 lanes otherwise.  Forcing `avx2` on hardware without it clamps
+/// back to `detect()` rather than faulting — the dispatch layer re-checks
+/// the cached CPUID bit before entering any `unsafe` intrinsics block, so
+/// a hand-constructed `Avx2` value is safe on every target.
+///
+/// All four backends are bit-exact against each other at every width,
+/// offset phase and thread count (`tests/simd_parity.rs` sweeps the full
+/// cross); `Scalar` / `U64x4` stay selectable as oracles and bench
+/// baselines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdBackend {
+    /// One masked `count_ones` per `u64` word.
+    Scalar,
+    /// 4-wide unrolled scalar accumulation (the PR 1 kernel).
+    U64x4,
+    /// Two `u128` lanes per 4-word step (the PR 6 kernel; the portable
+    /// fallback everywhere AVX2 is absent).
+    U128,
+    /// `std::arch` AVX2: Harley–Seal CSA reduction with a vpshufb
+    /// nibble-LUT popcount over 256-bit lanes, plus a vectorized
+    /// shift-stitch for the misaligned tile-resident loop.
+    Avx2,
+}
+
+impl SimdBackend {
+    /// Best backend this CPU supports: AVX2 where
+    /// `is_x86_feature_detected!("avx2")` holds, the u128 lanes otherwise
+    /// (including every non-x86_64 target).
+    pub fn detect() -> SimdBackend {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2") {
+                return SimdBackend::Avx2;
+            }
+        }
+        SimdBackend::U128
+    }
+
+    /// Whether this backend can run on the current CPU (always true for
+    /// the portable backends; `Avx2` requires the CPUID feature bit).
+    pub fn supported(self) -> bool {
+        match self {
+            SimdBackend::Avx2 => SimdBackend::detect() == SimdBackend::Avx2,
+            _ => true,
+        }
+    }
+
+    /// Parse a `TBN_SIMD` / `--simd` value (case-insensitive).  `auto`
+    /// resolves to [`SimdBackend::detect`]; unknown strings are `None` so
+    /// callers choose between a loud CLI error and the silent env default.
+    pub fn parse(s: &str) -> Option<SimdBackend> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(SimdBackend::Scalar),
+            "u64x4" => Some(SimdBackend::U64x4),
+            "u128" => Some(SimdBackend::U128),
+            "avx2" => Some(SimdBackend::Avx2),
+            "auto" => Some(SimdBackend::detect()),
+            _ => None,
+        }
+    }
+
+    /// Backend selected by the `TBN_SIMD` environment variable — the CI
+    /// matrix hook mirroring `nn`'s `TBN_LAYOUT` / `TBN_THREADS`.
+    /// Unset, unparsable, or unsupported-on-this-CPU
+    /// values fall back to [`SimdBackend::detect`], so `TBN_SIMD=auto`
+    /// (and `TBN_SIMD=avx2` on hardware without AVX2) silently lands on
+    /// the best portable choice.
+    pub fn from_env() -> SimdBackend {
+        let b = match std::env::var("TBN_SIMD") {
+            Ok(v) => SimdBackend::parse(&v).unwrap_or_else(SimdBackend::detect),
+            Err(_) => SimdBackend::detect(),
+        };
+        if b.supported() { b } else { SimdBackend::detect() }
+    }
+
+    /// Stable lowercase name (the same tokens `parse` accepts).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SimdBackend::Scalar => "scalar",
+            SimdBackend::U64x4 => "u64x4",
+            SimdBackend::U128 => "u128",
+            SimdBackend::Avx2 => "avx2",
+        }
+    }
+}
+
+impl Default for SimdBackend {
+    /// The process-wide active backend (so `Default`-derived configs like
+    /// `serve::ServePolicy` follow `TBN_SIMD` / `--simd` automatically).
+    fn default() -> SimdBackend {
+        active_backend()
+    }
+}
+
+impl std::fmt::Display for SimdBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+static ACTIVE_BACKEND: OnceLock<SimdBackend> = OnceLock::new();
+
+/// The process-wide backend default, resolved exactly once (first use wins):
+/// either what [`init_backend`] pinned, or [`SimdBackend::from_env`].
+/// After resolution this is a single atomic load — engines hoist it further
+/// by carrying their own copy through the row kernels.
+pub fn active_backend() -> SimdBackend {
+    *ACTIVE_BACKEND.get_or_init(SimdBackend::from_env)
+}
+
+/// Pin the process-wide backend (the `tbn serve --simd` hook).  First
+/// resolution wins — calling after the default has been used keeps the
+/// earlier value — and unsupported requests clamp to
+/// [`SimdBackend::detect`].  Returns the backend actually in effect.
+pub fn init_backend(backend: SimdBackend) -> SimdBackend {
+    let clamped = if backend.supported() { backend } else { SimdBackend::detect() };
+    *ACTIVE_BACKEND.get_or_init(|| clamped)
+}
 
 /// Low `count` bits set (`count` in `0..=64`).
 #[inline]
@@ -40,15 +191,36 @@ fn mask_low(count: usize) -> u64 {
 ///
 /// This is the one bit-op the whole packed inference path reduces to; the
 /// per-layer alpha scaling happens outside, once per constant-alpha run.
+/// Dispatches through the process-wide [`active_backend`]; use
+/// [`xnor_dot_words_range_with`] to force a backend explicitly (what the
+/// packed layer kernels do, with the choice hoisted out of the row loops).
+#[inline]
+pub fn xnor_dot_words_range(a: &[u64], b: &[u64], start: usize, len: usize) -> i64 {
+    xnor_dot_words_range_with(active_backend(), a, b, start, len)
+}
+
+/// [`xnor_dot_words_range`] on an explicit backend.  All backends are
+/// bit-exact against each other; `benches/table2_bitops.rs` reports the
+/// per-backend words-per-second column this selects between.
+#[inline]
+pub fn xnor_dot_words_range_with(backend: SimdBackend, a: &[u64], b: &[u64],
+                                 start: usize, len: usize) -> i64 {
+    match backend {
+        SimdBackend::Scalar => xnor_dot_words_range_scalar(a, b, start, len),
+        SimdBackend::U64x4 => xnor_dot_words_range_u64x4(a, b, start, len),
+        SimdBackend::U128 => xnor_dot_words_range_u128(a, b, start, len),
+        SimdBackend::Avx2 => xnor_dot_words_range_avx2(a, b, start, len),
+    }
+}
+
+/// The u128-lane [`xnor_dot_words_range`] body — the portable fallback
+/// backend ([`SimdBackend::U128`]).
 ///
 /// The interior full words run through two `u128` lanes (four `u64` words
 /// per iteration, two independent popcount chains the CPU can retire in
 /// parallel); only the boundary words pay the masking.
-/// `benches/table2_bitops.rs` reports the words-per-second delta against
-/// [`xnor_dot_words_range_u64x4`] (the previous 4-wide scalar unroll) and
-/// [`xnor_dot_words_range_scalar`].
 #[inline]
-pub fn xnor_dot_words_range(a: &[u64], b: &[u64], start: usize, len: usize) -> i64 {
+pub fn xnor_dot_words_range_u128(a: &[u64], b: &[u64], start: usize, len: usize) -> i64 {
     if len == 0 {
         return 0;
     }
@@ -176,13 +348,37 @@ fn fetch_bits(a: &[u64], start: usize, count: usize) -> u64 {
 /// resident and every row of the expanded matrix is a window into the
 /// repeated tile stream, so row dots need dots at a tile phase that
 /// generally differs from the activation's word phase.  When the two phases
-/// agree mod 64 this delegates to the aligned kernel over shifted word
-/// views; otherwise the `a` side is shift-stitched to `b`'s word grid with
-/// the previous high word carried across iterations — one fresh load plus
-/// two shifts per 64 bits of `a`.
+/// agree mod 64 every backend delegates to its aligned kernel over shifted
+/// word views; otherwise the `a` side is shift-stitched to `b`'s word grid
+/// with the previous high word carried across iterations — one fresh load
+/// plus two shifts per 64 bits of `a`.  Dispatches through the process-wide
+/// [`active_backend`]; see [`xnor_dot_words_offset_with`].
 #[inline]
 pub fn xnor_dot_words_offset(a: &[u64], a_start: usize, b: &[u64], b_start: usize,
                              len: usize) -> i64 {
+    xnor_dot_words_offset_with(active_backend(), a, a_start, b, b_start, len)
+}
+
+/// [`xnor_dot_words_offset`] on an explicit backend — the hot loop of the
+/// default tile-resident layout, so every backend gets its own stitched
+/// interior (the AVX2 one vectorizes the stitch itself with paired
+/// variable-count shifts).  All backends are bit-exact against each other.
+#[inline]
+pub fn xnor_dot_words_offset_with(backend: SimdBackend, a: &[u64], a_start: usize,
+                                  b: &[u64], b_start: usize, len: usize) -> i64 {
+    match backend {
+        SimdBackend::Scalar => xnor_dot_words_offset_scalar(a, a_start, b, b_start, len),
+        SimdBackend::U64x4 => xnor_dot_words_offset_u64x4(a, a_start, b, b_start, len),
+        SimdBackend::U128 => xnor_dot_words_offset_u128(a, a_start, b, b_start, len),
+        SimdBackend::Avx2 => xnor_dot_words_offset_avx2(a, a_start, b, b_start, len),
+    }
+}
+
+/// Scalar [`xnor_dot_words_offset`] body: one stitched word per iteration.
+/// The baseline oracle for the wider stitches below.
+#[inline]
+pub fn xnor_dot_words_offset_scalar(a: &[u64], a_start: usize, b: &[u64],
+                                    b_start: usize, len: usize) -> i64 {
     if len == 0 {
         return 0;
     }
@@ -190,8 +386,8 @@ pub fn xnor_dot_words_offset(a: &[u64], a_start: usize, b: &[u64], b_start: usiz
     debug_assert!(b_start + len <= b.len() * 64);
     if a_start % 64 == b_start % 64 {
         // congruent phases: one aligned walk over word-shifted views
-        return xnor_dot_words_range(&a[a_start / 64..], &b[b_start / 64..],
-                                    a_start % 64, len);
+        return xnor_dot_words_range_scalar(&a[a_start / 64..], &b[b_start / 64..],
+                                           a_start % 64, len);
     }
     let mut same: u64 = 0;
     let mut done = 0usize;
@@ -213,6 +409,155 @@ pub fn xnor_dot_words_offset(a: &[u64], a_start: usize, b: &[u64], b_start: usiz
         debug_assert!(off != 0, "congruent phases must take the aligned path");
         let mut wi = (a_start + done) / 64;
         let mut lo = a[wi] >> off;
+        while done + 64 <= len {
+            let hi = a[wi + 1];
+            let av = lo | (hi << (64 - off));
+            same += (!(av ^ b[bw])).count_ones() as u64;
+            lo = hi >> off;
+            wi += 1;
+            bw += 1;
+            done += 64;
+        }
+    }
+    if done < len {
+        let take = len - done;
+        let av = fetch_bits(a, a_start + done, take);
+        let bv = b[bw] & mask_low(take);
+        same += ((!(av ^ bv)) & mask_low(take)).count_ones() as u64;
+    }
+    2 * same as i64 - len as i64
+}
+
+/// 4-wide [`xnor_dot_words_offset`] body: the stitch loop unrolled four
+/// words deep with four independent scalar popcount chains (the offset
+/// sibling of [`xnor_dot_words_range_u64x4`]).
+#[inline]
+pub fn xnor_dot_words_offset_u64x4(a: &[u64], a_start: usize, b: &[u64],
+                                   b_start: usize, len: usize) -> i64 {
+    if len == 0 {
+        return 0;
+    }
+    debug_assert!(a_start + len <= a.len() * 64);
+    debug_assert!(b_start + len <= b.len() * 64);
+    if a_start % 64 == b_start % 64 {
+        return xnor_dot_words_range_u64x4(&a[a_start / 64..], &b[b_start / 64..],
+                                          a_start % 64, len);
+    }
+    let mut same: u64 = 0;
+    let mut done = 0usize;
+    let b_off = b_start % 64;
+    if b_off != 0 {
+        let take = (64 - b_off).min(len);
+        let av = fetch_bits(a, a_start, take);
+        let bv = (b[b_start / 64] >> b_off) & mask_low(take);
+        same += ((!(av ^ bv)) & mask_low(take)).count_ones() as u64;
+        done = take;
+    }
+    let mut bw = (b_start + done) / 64;
+    if done + 64 <= len {
+        let off = (a_start + done) % 64;
+        debug_assert!(off != 0, "congruent phases must take the aligned path");
+        let mut wi = (a_start + done) / 64;
+        let mut lo = a[wi] >> off;
+        // 4 stitched words per iteration; the high word of each step seeds
+        // the next, so still one fresh load per 64 bits of `a`.  In-bounds:
+        // bit a_start+done+255 lives in word wi + (off+255)/64 <= wi+4, and
+        // done+256 <= len keeps that bit (and b's word bw+3) in range.
+        let (mut s0, mut s1, mut s2, mut s3) = (0u64, 0u64, 0u64, 0u64);
+        while done + 256 <= len {
+            let h0 = a[wi + 1];
+            let h1 = a[wi + 2];
+            let h2 = a[wi + 3];
+            let h3 = a[wi + 4];
+            let av0 = lo | (h0 << (64 - off));
+            let av1 = (h0 >> off) | (h1 << (64 - off));
+            let av2 = (h1 >> off) | (h2 << (64 - off));
+            let av3 = (h2 >> off) | (h3 << (64 - off));
+            s0 += (!(av0 ^ b[bw])).count_ones() as u64;
+            s1 += (!(av1 ^ b[bw + 1])).count_ones() as u64;
+            s2 += (!(av2 ^ b[bw + 2])).count_ones() as u64;
+            s3 += (!(av3 ^ b[bw + 3])).count_ones() as u64;
+            lo = h3 >> off;
+            wi += 4;
+            bw += 4;
+            done += 256;
+        }
+        same += s0 + s1 + s2 + s3;
+        while done + 64 <= len {
+            let hi = a[wi + 1];
+            let av = lo | (hi << (64 - off));
+            same += (!(av ^ b[bw])).count_ones() as u64;
+            lo = hi >> off;
+            wi += 1;
+            bw += 1;
+            done += 64;
+        }
+    }
+    if done < len {
+        let take = len - done;
+        let av = fetch_bits(a, a_start + done, take);
+        let bv = b[bw] & mask_low(take);
+        same += ((!(av ^ bv)) & mask_low(take)).count_ones() as u64;
+    }
+    2 * same as i64 - len as i64
+}
+
+/// u128-lane [`xnor_dot_words_offset`] body: the 4-wide stitch of
+/// [`xnor_dot_words_offset_u64x4`] with the four stitched words paired into
+/// two `u128` popcount lanes (the offset sibling of
+/// [`xnor_dot_words_range_u128`]).
+#[inline]
+pub fn xnor_dot_words_offset_u128(a: &[u64], a_start: usize, b: &[u64],
+                                  b_start: usize, len: usize) -> i64 {
+    if len == 0 {
+        return 0;
+    }
+    debug_assert!(a_start + len <= a.len() * 64);
+    debug_assert!(b_start + len <= b.len() * 64);
+    if a_start % 64 == b_start % 64 {
+        return xnor_dot_words_range_u128(&a[a_start / 64..], &b[b_start / 64..],
+                                         a_start % 64, len);
+    }
+    let mut same: u64 = 0;
+    let mut done = 0usize;
+    let b_off = b_start % 64;
+    if b_off != 0 {
+        let take = (64 - b_off).min(len);
+        let av = fetch_bits(a, a_start, take);
+        let bv = (b[b_start / 64] >> b_off) & mask_low(take);
+        same += ((!(av ^ bv)) & mask_low(take)).count_ones() as u64;
+        done = take;
+    }
+    let mut bw = (b_start + done) / 64;
+    if done + 64 <= len {
+        let off = (a_start + done) % 64;
+        debug_assert!(off != 0, "congruent phases must take the aligned path");
+        let mut wi = (a_start + done) / 64;
+        let mut lo = a[wi] >> off;
+        // same bounds argument as the u64x4 stitch: off >= 1 keeps
+        // a[wi + 4] and b[bw + 3] in range while done + 256 <= len
+        let (mut s0, mut s1) = (0u64, 0u64);
+        while done + 256 <= len {
+            let h0 = a[wi + 1];
+            let h1 = a[wi + 2];
+            let h2 = a[wi + 3];
+            let h3 = a[wi + 4];
+            let av0 = lo | (h0 << (64 - off));
+            let av1 = (h0 >> off) | (h1 << (64 - off));
+            let av2 = (h1 >> off) | (h2 << (64 - off));
+            let av3 = (h2 >> off) | (h3 << (64 - off));
+            let a01 = av0 as u128 | ((av1 as u128) << 64);
+            let b01 = b[bw] as u128 | ((b[bw + 1] as u128) << 64);
+            let a23 = av2 as u128 | ((av3 as u128) << 64);
+            let b23 = b[bw + 2] as u128 | ((b[bw + 3] as u128) << 64);
+            s0 += (!(a01 ^ b01)).count_ones() as u64;
+            s1 += (!(a23 ^ b23)).count_ones() as u64;
+            lo = h3 >> off;
+            wi += 4;
+            bw += 4;
+            done += 256;
+        }
+        same += s0 + s1;
         while done + 64 <= len {
             let hi = a[wi + 1];
             let av = lo | (hi << (64 - off));
@@ -266,6 +611,312 @@ pub fn xnor_dot_words_range_scalar(a: &[u64], b: &[u64], start: usize, len: usiz
 #[inline]
 pub fn xnor_dot_words(a: &[u64], b: &[u64], bits: usize) -> i64 {
     xnor_dot_words_range(a, b, 0, bits)
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 backend (x86_64)
+// ---------------------------------------------------------------------------
+
+/// AVX2 [`xnor_dot_words_range`] body ([`SimdBackend::Avx2`]): Harley–Seal
+/// carry-save reduction with a vpshufb nibble-LUT popcount over 256-bit
+/// lanes.  Safe to call on any x86_64 CPU: the cached
+/// `is_x86_feature_detected!` bit gates the `unsafe` kernel and the u128
+/// path serves the rest — so a forced/deserialized `Avx2` selection can
+/// never execute illegal instructions.
+#[cfg(target_arch = "x86_64")]
+pub fn xnor_dot_words_range_avx2(a: &[u64], b: &[u64], start: usize, len: usize) -> i64 {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        // SAFETY: the AVX2 feature bit was just confirmed (std caches the
+        // CPUID probe, so this is an atomic load, not a per-call probe).
+        // The kernel's own contract — every load lands in-bounds — is
+        // argued at the `avx2` module.
+        unsafe { avx2::range(a, b, start, len) }
+    } else {
+        xnor_dot_words_range_u128(a, b, start, len)
+    }
+}
+
+/// Portable stand-in for the AVX2 range kernel on non-x86_64 targets: the
+/// u128 fallback, so [`SimdBackend::Avx2`] stays a valid (clamped)
+/// selection on every target.
+#[cfg(not(target_arch = "x86_64"))]
+pub fn xnor_dot_words_range_avx2(a: &[u64], b: &[u64], start: usize, len: usize) -> i64 {
+    xnor_dot_words_range_u128(a, b, start, len)
+}
+
+/// AVX2 [`xnor_dot_words_offset`] body ([`SimdBackend::Avx2`]): the
+/// shift-stitch itself runs in 256-bit lanes — paired variable-count
+/// `srl`/`sll` over four stitched words per step — feeding the vpshufb
+/// popcount.  Same runtime-detection guard as
+/// [`xnor_dot_words_range_avx2`].
+#[cfg(target_arch = "x86_64")]
+pub fn xnor_dot_words_offset_avx2(a: &[u64], a_start: usize, b: &[u64],
+                                  b_start: usize, len: usize) -> i64 {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        // SAFETY: as in `xnor_dot_words_range_avx2` — feature bit
+        // confirmed, in-bounds loads argued at the `avx2` module.
+        unsafe { avx2::offset(a, a_start, b, b_start, len) }
+    } else {
+        xnor_dot_words_offset_u128(a, a_start, b, b_start, len)
+    }
+}
+
+/// Portable stand-in for the AVX2 offset kernel on non-x86_64 targets.
+#[cfg(not(target_arch = "x86_64"))]
+pub fn xnor_dot_words_offset_avx2(a: &[u64], a_start: usize, b: &[u64],
+                                  b_start: usize, len: usize) -> i64 {
+    xnor_dot_words_offset_u128(a, a_start, b, b_start, len)
+}
+
+/// The `std::arch` AVX2 kernels behind [`SimdBackend::Avx2`].
+///
+/// # Safety argument
+///
+/// Every function here is `unsafe` only because of `#[target_feature]`:
+/// callers must guarantee the CPU supports AVX2, which the safe wrappers
+/// establish through `is_x86_feature_detected!("avx2")` (std caches the
+/// CPUID probe in an atomic, so the check is one relaxed load).  Beyond
+/// that the kernels uphold memory safety themselves:
+///
+/// * **Alignment-free loads** — all vector traffic uses
+///   `_mm256_loadu_si256` / `_mm256_storeu_si256`, which carry no
+///   alignment requirement, so `&[u64]` slices of any provenance are fine.
+/// * **In-bounds loads** — the aligned interior reads words `[w, w + 4)`
+///   only while `w + 4 <= full_end <= slice.len()`; the Harley–Seal block
+///   reads `[w, w + 64)` only while `w + 64 <= full_end`.  The stitched
+///   interior reads `a[wi .. wi + 5]` and `b[bw .. bw + 4]` per step: with
+///   the stitch offset `off >= 1`, bit `a_start + done + 255` lives in
+///   word `wi + (off + 255) / 64 >= wi + 4`, and the loop condition
+///   `done + 256 <= len` plus the caller precondition
+///   `a_start + len <= a.len() * 64` keeps that word (and `b[bw + 3]`)
+///   inside both slices.
+/// * **Tail handling** — leading/trailing partial words never touch vector
+///   code: they run the *same masked scalar expressions* as the u128 and
+///   scalar backends (`mask_low` / `fetch_bits`), which is also what makes
+///   every backend bit-exact at every width and offset phase.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    use super::{fetch_bits, mask_low};
+
+    /// Per-64-bit-lane popcount of a 256-bit vector via the vpshufb
+    /// nibble LUT: each byte is split into nibbles, both looked up in a
+    /// 16-entry popcount table, and `_mm256_sad_epu8` folds the per-byte
+    /// counts into the four 64-bit lanes.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn popcnt256(v: __m256i) -> __m256i {
+        let lut = _mm256_setr_epi8(
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        );
+        let low = _mm256_set1_epi8(0x0f);
+        let lo = _mm256_and_si256(v, low);
+        let hi = _mm256_and_si256(_mm256_srli_epi16::<4>(v), low);
+        let cnt8 = _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo),
+                                   _mm256_shuffle_epi8(lut, hi));
+        _mm256_sad_epu8(cnt8, _mm256_setzero_si256())
+    }
+
+    /// Carry-save adder over three bit streams: returns `(carry, sum)`.
+    /// The Harley–Seal building block — two CSAs halve the popcount work
+    /// per doubling of the counter weight.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn csa(a: __m256i, b: __m256i, c: __m256i) -> (__m256i, __m256i) {
+        let u = _mm256_xor_si256(a, b);
+        let carry = _mm256_or_si256(_mm256_and_si256(a, b), _mm256_and_si256(u, c));
+        (carry, _mm256_xor_si256(u, c))
+    }
+
+    /// Sum of the four 64-bit lanes.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum(v: __m256i) -> u64 {
+        let mut out = [0u64; 4];
+        _mm256_storeu_si256(out.as_mut_ptr() as *mut __m256i, v);
+        out[0] + out[1] + out[2] + out[3]
+    }
+
+    /// `popcount(!(a[w] ^ b[w]))` summed over the full words `[w0, w1)`:
+    /// Harley–Seal CSA reduction 16 vectors (64 words) per block — only
+    /// the `sixteens` stream pays a vpshufb popcount, the four carry
+    /// counters are folded in once at the end with shifted weights — then
+    /// a plain vector loop per 4 words, then scalar `count_ones`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn same_full_words(a: &[u64], b: &[u64], w0: usize, w1: usize) -> u64 {
+        debug_assert!(w1 <= a.len() && w1 <= b.len());
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let all1 = _mm256_set1_epi8(-1);
+        let mut w = w0;
+        let mut total = _mm256_setzero_si256();
+        // XNOR vector k of the current block: words [w + 4k, w + 4k + 4)
+        macro_rules! xnor_vec {
+            ($k:expr) => {{
+                let va = _mm256_loadu_si256(ap.add(w + 4 * $k) as *const __m256i);
+                let vb = _mm256_loadu_si256(bp.add(w + 4 * $k) as *const __m256i);
+                _mm256_xor_si256(_mm256_xor_si256(va, vb), all1)
+            }};
+        }
+        let mut ones = _mm256_setzero_si256();
+        let mut twos = _mm256_setzero_si256();
+        let mut fours = _mm256_setzero_si256();
+        let mut eights = _mm256_setzero_si256();
+        while w + 64 <= w1 {
+            let (twos_a, o1) = csa(ones, xnor_vec!(0), xnor_vec!(1));
+            let (twos_b, o2) = csa(o1, xnor_vec!(2), xnor_vec!(3));
+            let (fours_a, t1) = csa(twos, twos_a, twos_b);
+            let (twos_c, o3) = csa(o2, xnor_vec!(4), xnor_vec!(5));
+            let (twos_d, o4) = csa(o3, xnor_vec!(6), xnor_vec!(7));
+            let (fours_b, t2) = csa(t1, twos_c, twos_d);
+            let (eights_a, f1) = csa(fours, fours_a, fours_b);
+            let (twos_e, o5) = csa(o4, xnor_vec!(8), xnor_vec!(9));
+            let (twos_f, o6) = csa(o5, xnor_vec!(10), xnor_vec!(11));
+            let (fours_c, t3) = csa(t2, twos_e, twos_f);
+            let (twos_g, o7) = csa(o6, xnor_vec!(12), xnor_vec!(13));
+            let (twos_h, o8) = csa(o7, xnor_vec!(14), xnor_vec!(15));
+            let (fours_d, t4) = csa(t3, twos_g, twos_h);
+            let (eights_b, f2) = csa(f1, fours_c, fours_d);
+            let (sixteens, e) = csa(eights, eights_a, eights_b);
+            ones = o8;
+            twos = t4;
+            fours = f2;
+            eights = e;
+            total = _mm256_add_epi64(total, popcnt256(sixteens));
+            w += 64;
+        }
+        total = _mm256_slli_epi64::<4>(total);
+        total = _mm256_add_epi64(total, _mm256_slli_epi64::<3>(popcnt256(eights)));
+        total = _mm256_add_epi64(total, _mm256_slli_epi64::<2>(popcnt256(fours)));
+        total = _mm256_add_epi64(total, _mm256_slli_epi64::<1>(popcnt256(twos)));
+        total = _mm256_add_epi64(total, popcnt256(ones));
+        while w + 4 <= w1 {
+            total = _mm256_add_epi64(total, popcnt256(xnor_vec!(0)));
+            w += 4;
+        }
+        let mut same = hsum(total);
+        while w < w1 {
+            same += (!(a[w] ^ b[w])).count_ones() as u64;
+            w += 1;
+        }
+        same
+    }
+
+    /// AVX2 body of `xnor_dot_words_range`: identical masked boundary
+    /// handling to the u128 backend, Harley–Seal interior.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn range(a: &[u64], b: &[u64], start: usize, len: usize) -> i64 {
+        if len == 0 {
+            return 0;
+        }
+        let end = start + len;
+        debug_assert!(end <= a.len() * 64 && end <= b.len() * 64);
+        let first_w = start / 64;
+        let last_w = (end - 1) / 64;
+        if first_w == last_w {
+            let mut mask = u64::MAX << (start % 64);
+            let valid = end - last_w * 64;
+            if valid < 64 {
+                mask &= (1u64 << valid) - 1;
+            }
+            let same = ((!(a[first_w] ^ b[first_w])) & mask).count_ones() as i64;
+            return 2 * same - len as i64;
+        }
+        let mut same: u64 = 0;
+        let mut w = first_w;
+        if start % 64 != 0 {
+            let mask = u64::MAX << (start % 64);
+            same += ((!(a[w] ^ b[w])) & mask).count_ones() as u64;
+            w += 1;
+        }
+        let full_end = if end % 64 == 0 { last_w + 1 } else { last_w };
+        if w < full_end {
+            same += same_full_words(a, b, w, full_end);
+        }
+        if end % 64 != 0 {
+            let valid = end - last_w * 64;
+            let mask = (1u64 << valid) - 1;
+            same += ((!(a[last_w] ^ b[last_w])) & mask).count_ones() as u64;
+        }
+        2 * same as i64 - len as i64
+    }
+
+    /// AVX2 body of `xnor_dot_words_offset`: identical leading/trailing
+    /// partials to the scalar stitch, vectorized interior — `lo` lanes are
+    /// words `a[wi..wi+4]`, `hi` lanes `a[wi+1..wi+5]`, combined with one
+    /// variable-count shift pair per step (the shift count is uniform
+    /// across lanes, loaded once into an xmm register).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn offset(a: &[u64], a_start: usize, b: &[u64], b_start: usize,
+                                len: usize) -> i64 {
+        if len == 0 {
+            return 0;
+        }
+        debug_assert!(a_start + len <= a.len() * 64);
+        debug_assert!(b_start + len <= b.len() * 64);
+        if a_start % 64 == b_start % 64 {
+            return range(&a[a_start / 64..], &b[b_start / 64..], a_start % 64, len);
+        }
+        let mut same: u64 = 0;
+        let mut done = 0usize;
+        let b_off = b_start % 64;
+        if b_off != 0 {
+            let take = (64 - b_off).min(len);
+            let av = fetch_bits(a, a_start, take);
+            let bv = (b[b_start / 64] >> b_off) & mask_low(take);
+            same += ((!(av ^ bv)) & mask_low(take)).count_ones() as u64;
+            done = take;
+        }
+        let mut bw = (b_start + done) / 64;
+        if done + 64 <= len {
+            let off = (a_start + done) % 64;
+            debug_assert!(off != 0, "congruent phases must take the aligned path");
+            let mut wi = (a_start + done) / 64;
+            if done + 256 <= len {
+                let ap = a.as_ptr();
+                let bp = b.as_ptr();
+                let all1 = _mm256_set1_epi8(-1);
+                let sr = _mm_cvtsi64_si128(off as i64);
+                let sl = _mm_cvtsi64_si128((64 - off) as i64);
+                let mut total = _mm256_setzero_si256();
+                // in-bounds: see the module safety argument (off >= 1)
+                while done + 256 <= len {
+                    let lo_v = _mm256_loadu_si256(ap.add(wi) as *const __m256i);
+                    let hi_v = _mm256_loadu_si256(ap.add(wi + 1) as *const __m256i);
+                    let av = _mm256_or_si256(_mm256_srl_epi64(lo_v, sr),
+                                             _mm256_sll_epi64(hi_v, sl));
+                    let bv = _mm256_loadu_si256(bp.add(bw) as *const __m256i);
+                    let v = _mm256_xor_si256(_mm256_xor_si256(av, bv), all1);
+                    total = _mm256_add_epi64(total, popcnt256(v));
+                    wi += 4;
+                    bw += 4;
+                    done += 256;
+                }
+                same += hsum(total);
+            }
+            if done + 64 <= len {
+                let mut lo = a[wi] >> off;
+                while done + 64 <= len {
+                    let hi = a[wi + 1];
+                    let av = lo | (hi << (64 - off));
+                    same += (!(av ^ b[bw])).count_ones() as u64;
+                    lo = hi >> off;
+                    wi += 1;
+                    bw += 1;
+                    done += 64;
+                }
+            }
+        }
+        if done < len {
+            let take = len - done;
+            let av = fetch_bits(a, a_start + done, take);
+            let bv = b[bw] & mask_low(take);
+            same += ((!(av ^ bv)) & mask_low(take)).count_ones() as u64;
+        }
+        2 * same as i64 - len as i64
+    }
 }
 
 /// Bit-ops per fp MAC.
@@ -472,6 +1123,122 @@ mod tests {
                 want,
                 "tile offset {s}"
             );
+        }
+    }
+
+    const ALL_BACKENDS: [SimdBackend; 4] = [SimdBackend::Scalar, SimdBackend::U64x4,
+                                            SimdBackend::U128, SimdBackend::Avx2];
+
+    #[test]
+    fn backend_parse_detect_and_env_rules() {
+        assert_eq!(SimdBackend::parse("scalar"), Some(SimdBackend::Scalar));
+        assert_eq!(SimdBackend::parse(" U64X4 "), Some(SimdBackend::U64x4));
+        assert_eq!(SimdBackend::parse("u128"), Some(SimdBackend::U128));
+        assert_eq!(SimdBackend::parse("AVX2"), Some(SimdBackend::Avx2));
+        assert_eq!(SimdBackend::parse("auto"), Some(SimdBackend::detect()));
+        assert_eq!(SimdBackend::parse("nope"), None);
+        // detect() only ever lands on a supported backend, and `auto`
+        // resolves to exactly it — on non-AVX2 targets that is U128
+        assert!(SimdBackend::detect().supported());
+        assert!(matches!(SimdBackend::detect(),
+                         SimdBackend::U128 | SimdBackend::Avx2));
+        assert!(SimdBackend::from_env().supported());
+        assert!(active_backend().supported());
+        assert_eq!(SimdBackend::default(), active_backend());
+        assert_eq!(SimdBackend::Avx2.as_str(), "avx2");
+        assert_eq!(format!("{}", SimdBackend::U128), "u128");
+    }
+
+    /// Bugfix-audit pin: the final partial word must be masked before the
+    /// popcount by **every** backend.  Words here are fully random, so the
+    /// bits at positions `>= len` of the last word are deliberately dirty —
+    /// a backend that popcounts an unmasked tail (or leading) word is off
+    /// immediately.  Pinned at the widths that straddle the word boundary
+    /// and the first u128 lane: 63 / 64 / 65 / 127 / 128 / 129.
+    #[test]
+    fn partial_final_word_masked_identically_across_backends() {
+        let mut r = Rng::new(77);
+        for len in [63usize, 64, 65, 127, 128, 129] {
+            let words = len.div_ceil(64);
+            let a: Vec<u64> = (0..words).map(|_| r.next_u64()).collect();
+            let b: Vec<u64> = (0..words).map(|_| r.next_u64()).collect();
+            let naive: i64 = (0..len)
+                .map(|i| {
+                    let ab = (a[i / 64] >> (i % 64)) & 1;
+                    let bb = (b[i / 64] >> (i % 64)) & 1;
+                    if ab == bb { 1 } else { -1 }
+                })
+                .sum();
+            for backend in ALL_BACKENDS {
+                assert_eq!(xnor_dot_words_range_with(backend, &a, &b, 0, len), naive,
+                           "{backend} range len={len}");
+                assert_eq!(xnor_dot_words_offset_with(backend, &a, 0, &b, 0, len),
+                           naive, "{backend} offset len={len}");
+            }
+            assert_eq!(xnor_dot_words(&a, &b, len), naive, "dispatched len={len}");
+        }
+    }
+
+    /// The same dirty-tail audit through the misaligned stitch: every
+    /// backend, every boundary width, a handful of non-congruent phases.
+    #[test]
+    fn offset_stitch_masks_dirty_tails_at_every_backend() {
+        let mut r = Rng::new(78);
+        for len in [63usize, 64, 65, 127, 128, 129] {
+            // a needs headroom for the phase shift; keep its tail dirty too
+            let awords = (len + 63).div_ceil(64) + 1;
+            let bwords = len.div_ceil(64);
+            let a: Vec<u64> = (0..awords).map(|_| r.next_u64()).collect();
+            let b: Vec<u64> = (0..bwords).map(|_| r.next_u64()).collect();
+            for a_start in [1usize, 7, 33, 63] {
+                let naive: i64 = (0..len)
+                    .map(|k| {
+                        let i = a_start + k;
+                        let ab = (a[i / 64] >> (i % 64)) & 1;
+                        let bb = (b[k / 64] >> (k % 64)) & 1;
+                        if ab == bb { 1 } else { -1 }
+                    })
+                    .sum();
+                for backend in ALL_BACKENDS {
+                    assert_eq!(
+                        xnor_dot_words_offset_with(backend, &a, a_start, &b, 0, len),
+                        naive,
+                        "{backend} a_start={a_start} len={len}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Long aligned + misaligned runs across every backend: spans several
+    /// Harley–Seal blocks (64 words each) plus the vector, scalar and
+    /// masked remainders, so the AVX2 CSA tree and the stitched interiors
+    /// are all exercised against the scalar oracle.
+    #[test]
+    fn every_backend_matches_scalar_on_long_runs() {
+        let mut r = Rng::new(79);
+        let words = 150usize; // 2 full HS blocks + 22-word remainder
+        let a: Vec<u64> = (0..words).map(|_| r.next_u64()).collect();
+        let b: Vec<u64> = (0..words).map(|_| r.next_u64()).collect();
+        for (start, len) in [(0usize, words * 64), (0, words * 64 - 17),
+                             (3, words * 64 - 70), (65, 64 * 64), (130, 8000)] {
+            let want = xnor_dot_words_range_scalar(&a, &b, start, len);
+            for backend in ALL_BACKENDS {
+                assert_eq!(xnor_dot_words_range_with(backend, &a, &b, start, len),
+                           want, "{backend} start={start} len={len}");
+            }
+        }
+        for (a_start, b_start, len) in [(1usize, 0usize, 140 * 64), (37, 64, 8200),
+                                        (63, 1, 4096), (129, 2, 6000)] {
+            let want =
+                xnor_dot_words_offset_scalar(&a, a_start, &b, b_start, len);
+            for backend in ALL_BACKENDS {
+                assert_eq!(
+                    xnor_dot_words_offset_with(backend, &a, a_start, &b, b_start, len),
+                    want,
+                    "{backend} a_start={a_start} b_start={b_start} len={len}"
+                );
+            }
         }
     }
 

@@ -1,0 +1,218 @@
+//! SIMD-backend bit-exactness (artifact-free).
+//!
+//! The dispatch contract (`tbn::bitops` module docs): every backend
+//! generation of the XNOR-popcount word loop — scalar, the 4-wide u64
+//! unroll, the u128 lanes, and the AVX2 Harley–Seal kernels — computes the
+//! *identical* signed dot at every width, start phase, and offset phase.
+//! The only thing a backend may change is how interior full words are
+//! batched into popcounts; every partial boundary word is masked by the
+//! same scalar expressions in all of them.  These tests fuzz that contract
+//! directly against `xnor_dot_words_range_scalar` (the one-word oracle) and
+//! then pin it end to end: engine forwards on the `cnn_micro` conv graph
+//! and the `vit_micro` transformer are bit-exact across every
+//! backend × layout × thread-count combination.
+//!
+//! `SimdBackend::Avx2` is safe to request everywhere: off-AVX2 hosts fall
+//! back to the u128 path inside the wrapper (and `Engine::with_simd` clamps
+//! to the detected best), so this suite passes unchanged on any CPU.
+
+use tiledbits::arch;
+use tiledbits::nn::{lower_arch_spec, Engine, EnginePath, LowerOptions, Nonlin,
+                    PackedLayout, SimdBackend};
+use tiledbits::tbn::bitops::{xnor_dot_words_offset_scalar, xnor_dot_words_offset_with,
+                             xnor_dot_words_range_scalar, xnor_dot_words_range_with};
+use tiledbits::tbn::AlphaMode;
+use tiledbits::util::Rng;
+
+const ALL_BACKENDS: [SimdBackend; 4] = [SimdBackend::Scalar, SimdBackend::U64x4,
+                                        SimdBackend::U128, SimdBackend::Avx2];
+
+fn rand_words(rng: &mut Rng, n: usize) -> Vec<u64> {
+    (0..n).map(|_| rng.next_u64()).collect()
+}
+
+/// Aligned range kernel: every backend vs the scalar oracle over a grid of
+/// ragged starts × lens (0, 1, sub-word, %64 != 0 tails, interiors that are
+/// not multiples of the 4-word / 64-word vector blocks) plus a randomized
+/// sweep of 500 (start, len) pairs.
+#[test]
+fn every_backend_matches_scalar_range_on_ragged_lens() {
+    let mut rng = Rng::new(0x51D0);
+    let words = 300usize;
+    let a = rand_words(&mut rng, words);
+    let b = rand_words(&mut rng, words);
+    let lens = [0usize, 1, 2, 63, 64, 65, 100, 127, 128, 129, 191, 255, 256, 257,
+                64 * 4 + 1, 64 * 5 - 1, 64 * 63, 64 * 64, 64 * 64 + 17, words * 64];
+    let starts = [0usize, 1, 7, 31, 63, 64, 65, 129, 1000];
+    for &start in &starts {
+        for &len in &lens {
+            if start + len > words * 64 {
+                continue;
+            }
+            let want = xnor_dot_words_range_scalar(&a, &b, start, len);
+            for backend in ALL_BACKENDS {
+                assert_eq!(xnor_dot_words_range_with(backend, &a, &b, start, len),
+                           want, "{backend} range start={start} len={len}");
+            }
+        }
+    }
+    for _ in 0..500 {
+        let start = (rng.next_u64() as usize) % (words * 64);
+        let len = (rng.next_u64() as usize) % (words * 64 - start + 1);
+        let want = xnor_dot_words_range_scalar(&a, &b, start, len);
+        for backend in ALL_BACKENDS {
+            assert_eq!(xnor_dot_words_range_with(backend, &a, &b, start, len),
+                       want, "{backend} random range start={start} len={len}");
+        }
+    }
+}
+
+/// Misaligned shift-stitch kernel: every backend vs the scalar offset
+/// kernel at **all 64 offset phases** (`a_start % 64` from 0 to 63, so both
+/// the congruent delegate-to-range case and every carried-word stitch), at
+/// congruent and non-congruent `b` phases, across ragged lens.
+#[test]
+fn every_backend_matches_scalar_offset_at_all_64_phases() {
+    let mut rng = Rng::new(0x0FF5E7);
+    let words = 200usize;
+    let a = rand_words(&mut rng, words);
+    let b = rand_words(&mut rng, words);
+    let lens = [0usize, 1, 65, 127, 64 * 3, 64 * 5 + 13, 5000];
+    for a_phase in 0..64usize {
+        // one full word of headroom so every phase reads mid-slice
+        let a_start = 64 + a_phase;
+        for b_start in [0usize, 1, 37, 63, 64 + a_phase] {
+            for &len in &lens {
+                if a_start + len > words * 64 || b_start + len > words * 64 {
+                    continue;
+                }
+                let want = xnor_dot_words_offset_scalar(&a, a_start, &b, b_start, len);
+                for backend in ALL_BACKENDS {
+                    assert_eq!(
+                        xnor_dot_words_offset_with(backend, &a, a_start, &b,
+                                                   b_start, len),
+                        want,
+                        "{backend} offset a_start={a_start} b_start={b_start} \
+                         len={len}"
+                    );
+                }
+            }
+        }
+    }
+    // randomized sweep across phases and ragged lens
+    for _ in 0..500 {
+        let a_start = (rng.next_u64() as usize) % (words * 32);
+        let b_start = (rng.next_u64() as usize) % (words * 32);
+        let room = words * 64 - a_start.max(b_start);
+        let len = (rng.next_u64() as usize) % (room + 1);
+        let want = xnor_dot_words_offset_scalar(&a, a_start, &b, b_start, len);
+        for backend in ALL_BACKENDS {
+            assert_eq!(
+                xnor_dot_words_offset_with(backend, &a, a_start, &b, b_start, len),
+                want,
+                "{backend} random offset a_start={a_start} b_start={b_start} len={len}"
+            );
+        }
+    }
+}
+
+/// The offset kernel agrees with the aligned range kernel whenever both can
+/// express the same dot (`a_start` congruent to `b_start` mod 64), for
+/// every backend — the congruent fast path must not drift from the stitch.
+#[test]
+fn congruent_offsets_agree_with_range_on_every_backend() {
+    let mut rng = Rng::new(0xC0FFEE);
+    let words = 96usize;
+    let a = rand_words(&mut rng, words);
+    for phase in [0usize, 1, 17, 63] {
+        for words_off in [0usize, 1, 5] {
+            let start = words_off * 64 + phase;
+            for &len in &[0usize, 1, 64, 129, 64 * 10 + 7] {
+                if start + len > words * 64 {
+                    continue;
+                }
+                let want = xnor_dot_words_range_scalar(&a, &a, start, len);
+                for backend in ALL_BACKENDS {
+                    assert_eq!(
+                        xnor_dot_words_offset_with(backend, &a, start, &a, start, len),
+                        want, "{backend} congruent start={start} len={len}");
+                }
+            }
+        }
+    }
+}
+
+fn graph_for(name: &str) -> (tiledbits::nn::Graph, usize) {
+    let (spec, input) = match name {
+        "cnn_micro" => (arch::cnn_micro(), (3usize, 16usize, 16usize)),
+        "vit_micro" => {
+            let s = arch::vit_micro();
+            let input = s.native_input().expect("vit_micro input shape");
+            (s, input)
+        }
+        other => panic!("unknown spec {other}"),
+    };
+    let opts = LowerOptions { input, p: 4, alpha_mode: AlphaMode::PerTile, seed: 7 };
+    let graph = lower_arch_spec(&spec, &opts).unwrap();
+    let in_len = input.0 * input.1 * input.2;
+    (graph, in_len)
+}
+
+/// End-to-end pin: packed engine forwards (single and batched) on the
+/// `cnn_micro` conv graph and the `vit_micro` transformer are bit-exact
+/// across every backend × layout × thread count — FC rows, conv im2col and
+/// attention projections all ride the dispatched kernels.
+#[test]
+fn engine_forwards_bit_exact_across_backend_layout_threads() {
+    for name in ["cnn_micro", "vit_micro"] {
+        let (graph, in_len) = graph_for(name);
+        let mut rng = Rng::new(59);
+        let xs: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec(in_len, 1.0)).collect();
+        for layout in [PackedLayout::TileResident, PackedLayout::Expanded] {
+            let baseline = Engine::with_layout_graph(
+                graph.clone(), Nonlin::Relu, EnginePath::Packed, layout)
+                .unwrap()
+                .with_threads(1)
+                .with_simd(SimdBackend::Scalar);
+            let singles: Vec<Vec<f32>> = xs.iter().map(|x| baseline.forward(x)).collect();
+            let batch = baseline.forward_batch(&xs);
+            for backend in ALL_BACKENDS {
+                for threads in [1usize, 3] {
+                    let engine = Engine::with_layout_graph(
+                        graph.clone(), Nonlin::Relu, EnginePath::Packed, layout)
+                        .unwrap()
+                        .with_threads(threads)
+                        .with_simd(backend);
+                    for (s, x) in xs.iter().enumerate() {
+                        assert_eq!(engine.forward(x), singles[s],
+                                   "{name} {layout:?} {backend} threads={threads} \
+                                    sample {s}");
+                    }
+                    assert_eq!(engine.forward_batch(&xs), batch,
+                               "{name} {layout:?} {backend} threads={threads} batched");
+                }
+            }
+        }
+    }
+}
+
+/// `with_simd` clamps impossible requests instead of faulting: asking for
+/// AVX2 yields a backend the host can actually run, and the engine still
+/// computes the scalar bits.
+#[test]
+fn unsupported_backend_requests_clamp_to_detected() {
+    let (graph, in_len) = graph_for("cnn_micro");
+    let mut rng = Rng::new(60);
+    let x = rng.normal_vec(in_len, 1.0);
+    let engine = Engine::with_layout_graph(
+        graph.clone(), Nonlin::Relu, EnginePath::Packed, PackedLayout::TileResident)
+        .unwrap()
+        .with_simd(SimdBackend::Avx2);
+    assert!(engine.simd().supported(), "with_simd must never store an \
+             unsupported backend (got {})", engine.simd());
+    let scalar = Engine::with_layout_graph(
+        graph, Nonlin::Relu, EnginePath::Packed, PackedLayout::TileResident)
+        .unwrap()
+        .with_simd(SimdBackend::Scalar);
+    assert_eq!(engine.forward(&x), scalar.forward(&x));
+}
