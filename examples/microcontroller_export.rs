@@ -1,27 +1,73 @@
 //! Microcontroller deployment (paper §5.1 / Table 6): train the deployment
 //! MLP, export both a BWNN and a TBN_4 model to TBNZ, and compare speed
 //! (FPS), max memory and storage exactly as the paper's Table 6 does —
-//! against the Arduino budget (1MB flash, 250KB RAM).
+//! against the Arduino budget (1MB flash, 250KB RAM).  The TBN model also
+//! runs the threshold-folded integer pipeline (`EnginePath::PackedInt`) and
+//! its folded per-row `i32` popcount thresholds are written out as a C
+//! header — the table a microcontroller needs next to the packed tile to
+//! run hidden layers with no f32 at all.
 
 use anyhow::{anyhow, Result};
 use tiledbits::config::Manifest;
-use tiledbits::nn::{MlpEngine, Nonlin};
+use tiledbits::nn::{EnginePath, MlpEngine, Nonlin};
 use tiledbits::runtime::Runtime;
+use tiledbits::tbn::TbnzModel;
 use tiledbits::train::{export, Trainer, TrainOptions};
-use tiledbits::util::human_bytes;
+use tiledbits::util::{human_bytes, Rng};
 
 const FLASH_BUDGET: usize = 1_000_000; // 1MB storage
 const RAM_BUDGET: usize = 250_000; // 250KB memory
 
 fn build(rt: &Runtime, manifest: &Manifest, id: &str, steps: usize)
-         -> Result<(MlpEngine, f64)> {
+         -> Result<(MlpEngine, TbnzModel, f64)> {
     let exp = manifest.by_id(id).ok_or_else(|| anyhow!("missing {id}"))?;
     let trainer = Trainer::new(rt, exp)?;
     let (result, model) = trainer.run(&TrainOptions {
         steps: Some(steps), eval_every: 0, log_every: 10_000, seed: None })?;
     let tbnz = export::to_tbnz(exp, &model)?;
-    Ok((MlpEngine::new(tbnz, Nonlin::Relu).map_err(|e| anyhow!(e))?,
-        result.final_eval.metric))
+    Ok((MlpEngine::new(tbnz.clone(), Nonlin::Relu).map_err(|e| anyhow!(e))?,
+        tbnz, result.final_eval.metric))
+}
+
+/// Render every packed layer's folded thresholds
+/// ([`tiledbits::nn::IntThresholds::export_i32`]) as a C header: one
+/// `int32_t` per output row.  Encoding (see the `nn::packed` docs):
+/// `v >= 1` fires at `same >= v`, `v <= -1` fires at `same <= -v - 1`
+/// (negative scale), `INT32_MAX` never fires (zero scale), `INT32_MIN`
+/// marks a mixed-alpha row that needs the weighted-run fallback.
+fn threshold_header(int: &MlpEngine) -> (String, usize) {
+    let e = int.engine();
+    let mut h = String::from(
+        "/* Folded popcount thresholds (EnginePath::PackedInt).\n\
+         \x20* Per row (same = popcount(xnor(row_bits, x_bits))):\n\
+         \x20*   v >= 1     -> bit fires at same >= v       (positive scale)\n\
+         \x20*   v <= -1    -> bit fires at same <= -v - 1  (negative scale)\n\
+         \x20*   INT32_MAX  -> never fires                  (zero scale)\n\
+         \x20*   INT32_MIN  -> mixed alphas: weighted-run fallback needed */\n\
+         #include <stdint.h>\n");
+    let mut tables = 0usize;
+    for idx in 0..e.graph().len() {
+        let Some(thr) = e.int_thresholds(idx) else { continue };
+        let node = e.node(idx);
+        let cname: String = node
+            .name()
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+            .collect();
+        let table = thr.export_i32();
+        h.push_str(&format!(
+            "\n/* {}: {} rows, calibrated gamma {:e} (f32 boundaries only) */\n",
+            node.name(), table.len(), thr.gamma));
+        h.push_str(&format!("static const int32_t {cname}_thr[{}] = {{",
+                            table.len()));
+        for (i, v) in table.iter().enumerate() {
+            h.push_str(if i % 8 == 0 { "\n    " } else { " " });
+            h.push_str(&format!("{v},"));
+        }
+        h.push_str("\n};\n");
+        tables += 1;
+    }
+    (h, tables)
 }
 
 fn main() -> Result<()> {
@@ -34,26 +80,44 @@ fn main() -> Result<()> {
     println!("== microcontroller deployment (Table 6) ==");
     println!("model: MLP 256 -> 128 -> 10, fused ReLU; budget: 1MB flash / 250KB RAM\n");
 
-    let (bwnn, bwnn_acc) = build(&rt, &manifest, "mlp_micro_bwnn", steps)?;
-    let (tbn, tbn_acc) = build(&rt, &manifest, "mlp_micro_tbn4", steps)?;
+    let (bwnn, _, bwnn_acc) = build(&rt, &manifest, "mlp_micro_bwnn", steps)?;
+    let (tbn, tbn_model, tbn_acc) = build(&rt, &manifest, "mlp_micro_tbn4", steps)?;
+
+    // the integer pipeline on the same trained TBN model, gammas calibrated
+    // on a synthetic batch (calibration only moves f32 boundaries)
+    let mut rng = Rng::new(6);
+    let calib: Vec<Vec<f32>> =
+        (0..16).map(|_| rng.normal_vec(tbn.in_dim(), 1.0)).collect();
+    let int = MlpEngine::with_path(tbn_model, Nonlin::Relu, EnginePath::PackedInt)
+        .map_err(|e| anyhow!(e))?
+        .calibrate_int_gammas(&calib);
 
     let x = vec![0.25f32; bwnn.in_dim()];
     let iters = 2000;
     let rows = [
         ("BWNN", &bwnn, bwnn_acc),
         ("TBN_4", &tbn, tbn_acc),
+        ("TBN_4/int", &int, tbn_acc),
     ];
-    println!("{:8} {:>12} {:>14} {:>12} {:>10}", "Model", "Speed (FPS)",
+    println!("{:10} {:>12} {:>14} {:>12} {:>10}", "Model", "Speed (FPS)",
              "Max Mem (KB)", "Storage (KB)", "Test Acc");
     for (name, engine, acc) in rows {
         let fps = engine.measure_fps(&x, iters);
         let mem = engine.peak_memory_bytes();
         let sto = engine.storage_bytes();
-        println!("{:8} {:>12.1} {:>14.2} {:>12.2} {:>9.1}%",
+        println!("{:10} {:>12.1} {:>14.2} {:>12.2} {:>9.1}%",
                  name, fps, mem as f64 / 1e3, sto as f64 / 1e3, 100.0 * acc);
         assert!(sto < FLASH_BUDGET, "{name} exceeds the flash budget");
         assert!(mem < RAM_BUDGET, "{name} exceeds the RAM budget");
     }
+
+    // -- integer-pipeline export: folded per-row popcount thresholds --
+    let (header, tables) = threshold_header(&int);
+    let out = std::env::var("TBN_THRESHOLDS_OUT")
+        .unwrap_or_else(|_| "tbn_thresholds.h".into());
+    std::fs::write(&out, &header)?;
+    println!("\nwrote {tables} folded i32 threshold table(s) to {out} \
+              ({} bytes)", header.len());
 
     let mem_saving = bwnn.peak_memory_bytes() as f64 / tbn.peak_memory_bytes() as f64;
     let sto_saving = bwnn.storage_bytes() as f64 / tbn.storage_bytes() as f64;

@@ -6,8 +6,11 @@
 //! Artifact-free: models are built from a seeded RNG exactly like the engine
 //! unit tests, so this bench runs on a bare checkout
 //! (`cargo bench --bench table6_packed`).  `--json` additionally writes the
-//! machine-readable `BENCH_table6.json` (backend, threads, samples/s) so the
-//! packed-path perf trajectory is tracked in-repo.
+//! machine-readable `BENCH_table6.json` (backend, threads, samples/s; wide
+//! rows also carry `activation_bytes`) so the packed-path perf trajectory is
+//! tracked in-repo.  Both fast paths appear: `Packed` (exact XNOR-Net
+//! baseline) and `PackedInt` (the threshold-folded integer pipeline — the
+//! hidden 512-wide layer emits bit-words directly, no f32 round trip).
 
 use tiledbits::bench_util::{bench, header};
 use tiledbits::nn::{EnginePath, MlpEngine, Nonlin, SimdBackend};
@@ -80,11 +83,17 @@ fn main() {
     let model = micro_model(p);
     let reference =
         MlpEngine::with_path(model.clone(), Nonlin::Relu, EnginePath::Reference).unwrap();
-    let packed = MlpEngine::with_path(model, Nonlin::Relu, EnginePath::Packed).unwrap();
+    let packed =
+        MlpEngine::with_path(model.clone(), Nonlin::Relu, EnginePath::Packed).unwrap();
 
     let mut r = Rng::new(7);
     let x = r.normal_vec(256, 1.0);
     let batch: Vec<Vec<f32>> = (0..32).map(|_| r.normal_vec(256, 1.0)).collect();
+    // the threshold-folded integer pipeline, gammas calibrated on the bench
+    // batch (calibration only moves f32 boundaries; bits are invariant)
+    let int = MlpEngine::with_path(model, Nonlin::Relu, EnginePath::PackedInt)
+        .unwrap()
+        .calibrate_int_gammas(&batch);
 
     // single-sample latency
     let r_ref = bench("reference forward (1 sample)", 20, 200, || {
@@ -96,6 +105,9 @@ fn main() {
     let r_pkd = bench("packed xnor forward (1 sample)", 20, 200, || {
         std::hint::black_box(packed.forward(&x));
     });
+    let r_int = bench("packed-int threshold forward (1 sample)", 20, 200, || {
+        std::hint::black_box(int.forward(&x));
+    });
 
     // batched throughput (the serving path)
     let b_ref = bench("reference forward_batch (32)", 5, 60, || {
@@ -104,8 +116,11 @@ fn main() {
     let b_pkd = bench("packed forward_batch (32)", 5, 60, || {
         std::hint::black_box(packed.forward_batch(&batch));
     });
+    let b_int = bench("packed-int forward_batch (32)", 5, 60, || {
+        std::hint::black_box(int.forward_batch(&batch));
+    });
 
-    for r in [&r_ref, &r_refq, &r_pkd, &b_ref, &b_pkd] {
+    for r in [&r_ref, &r_refq, &r_pkd, &r_int, &b_ref, &b_pkd, &b_int] {
         println!("{}", r.report());
     }
 
@@ -113,35 +128,49 @@ fn main() {
     println!("reference single: {:>12.0}", r_ref.per_sec());
     println!("packed single:    {:>12.0}  ({:.2}x vs reference quantized oracle)",
              r_pkd.per_sec(), r_pkd.per_sec() / r_refq.per_sec());
+    println!("packed-int single:{:>12.0}  ({:.2}x vs packed)",
+             r_int.per_sec(), r_int.per_sec() / r_pkd.per_sec());
     println!("reference batch:  {:>12.0}", b_ref.throughput(batch.len()));
     println!("packed batch:     {:>12.0}", b_pkd.throughput(batch.len()));
+    println!("packed-int batch: {:>12.0}  ({:.2}x vs packed)",
+             b_int.throughput(batch.len()),
+             b_int.throughput(batch.len()) / b_pkd.throughput(batch.len()));
 
     // intra-op thread scaling on a wider hidden layer (the micro MLP's only
     // packed layer has 10 rows — too few to split): 512 -> 512 tiled hidden
     // layer behind an f32 entry layer, batch of 32, threads 1/2/4/8.
     println!("\n-- intra-op kernel-thread scaling (512-wide hidden, batch 32) --");
-    println!("{:>8} {:>16} {:>14} {:>8}", "threads", "batch latency", "samples/s",
-             "speedup");
+    println!("{:>8} {:>12} {:>14} {:>8} {:>14} {:>8}", "threads", "path",
+             "samples/s", "speedup", "act bytes", "vs pkd");
     let wide = wide_model(p);
     let wbatch: Vec<Vec<f32>> = (0..32).map(|_| r.normal_vec(512, 1.0)).collect();
     let mut base = 0.0f64;
-    let mut thread_rows: Vec<(usize, f64)> = Vec::new();
+    let mut thread_rows: Vec<(&str, usize, f64, usize)> = Vec::new();
+    let mut packed_act = 0usize;
     for t in [1usize, 2, 4, 8] {
-        let engine = MlpEngine::with_path(wide.clone(), Nonlin::Relu,
-                                          EnginePath::Packed)
-            .unwrap()
-            .with_threads(t)
-            .with_simd(simd);
-        let res = bench(&format!("packed forward_batch(32) threads={t}"), 3, 40, || {
-            std::hint::black_box(engine.forward_batch(&wbatch));
-        });
-        let sps = res.throughput(wbatch.len());
-        if t == 1 {
-            base = sps;
+        for path in [EnginePath::Packed, EnginePath::PackedInt] {
+            let tag = if path == EnginePath::Packed { "packed" } else { "int" };
+            let engine = MlpEngine::with_path(wide.clone(), Nonlin::Relu, path)
+                .unwrap()
+                .with_threads(t)
+                .with_simd(simd)
+                .calibrate_int_gammas(&wbatch[..4]);
+            let act = engine.activation_bytes();
+            if path == EnginePath::Packed {
+                packed_act = act;
+            }
+            let res = bench(&format!("{tag} forward_batch(32) threads={t}"), 3, 40,
+                            || {
+                                std::hint::black_box(engine.forward_batch(&wbatch));
+                            });
+            let sps = res.throughput(wbatch.len());
+            if t == 1 && path == EnginePath::Packed {
+                base = sps;
+            }
+            thread_rows.push((tag, t, sps, act));
+            println!("{t:>8} {tag:>12} {sps:>14.0} {:>7.2}x {act:>14} {:>7.2}x",
+                     sps / base, packed_act as f64 / act as f64);
         }
-        thread_rows.push((t, sps));
-        println!("{t:>8} {:>13.0} us {:>14.0} {:>7.2}x",
-                 1e6 / res.per_sec(), sps, sps / base);
     }
 
     if json_mode {
@@ -156,11 +185,17 @@ fn main() {
         let mut runs = vec![
             entry("micro reference single", 1, r_ref.per_sec()),
             entry("micro packed single", 1, r_pkd.per_sec()),
+            entry("micro packed-int single", 1, r_int.per_sec()),
             entry("micro reference batch32", 1, b_ref.throughput(batch.len())),
             entry("micro packed batch32", 1, b_pkd.throughput(batch.len())),
+            entry("micro packed-int batch32", 1, b_int.throughput(batch.len())),
         ];
-        for &(t, sps) in &thread_rows {
-            runs.push(entry("wide packed batch32", t, sps));
+        for &(tag, t, sps, act) in &thread_rows {
+            let name = if tag == "int" { "wide packed-int batch32" }
+                       else { "wide packed batch32" };
+            let mut e = entry(name, t, sps);
+            e.set("activation_bytes", Json::Num(act as f64));
+            runs.push(e);
         }
         let doc = Json::obj(vec![
             ("bench", Json::Str("table6_packed".to_string())),

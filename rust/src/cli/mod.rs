@@ -90,7 +90,9 @@ OPTIONS:
   --eval-every <n>          evaluation period             [default: 100]
   --seed <n>                override the experiment seed (or lowering seed)
   --out <path>              output path (export)
-  --engine <path>           serve engine: packed|packed-int8|reference
+  --engine <path>           serve engine:
+                            packed|packed-int|packed-int8|reference
+                            (packed-int: threshold-folded integer pipeline)
                                                           [default: packed]
   --p <n>                   tiles per layer for serve --arch [default: 4]
   --requests <n>            demo request count for serve --arch [default: 64]

@@ -44,7 +44,7 @@
 //! naming the construct).  `nn::MlpEngine` wraps an FC-chain `Engine`
 //! built from a TBNZ model and keeps the original deployable-runner API.
 //!
-//! Every engine runs one of three `nn::EnginePath`s:
+//! Every engine runs one of four `nn::EnginePath`s:
 //!
 //! * `Reference` — f32 Algorithm 1 (tile reuse, never expands weights); the
 //!   oracle for everything else.
@@ -82,6 +82,17 @@
 //!   to 8-bit integers (the paper's microcontroller input packing) instead
 //!   of running layer 0 in f32; parity-gated by the quantization bound in
 //!   `tests/conv_parity.rs`.
+//! * `PackedInt` — the threshold-folded fully-integer hidden pipeline: a
+//!   hidden FC feeding only packed FCs never materializes f32 — each row's
+//!   sign test collapses into a precomputed integer popcount threshold
+//!   (`nn::IntThresholds`; negative-alpha rows flip the comparison, ReLU
+//!   folds in for free) and the row kernel writes the next layer's packed
+//!   bit-words directly, composing with both weight layouts, `--threads`
+//!   and every SIMD backend.  f32 boundaries (entry layer, convs, joins,
+//!   the output layer) emit with a per-layer constant gamma calibrated by
+//!   `Engine::calibrate_int_gammas`, so `Packed` stays the exact
+//!   data-dependent-gamma baseline; bit-exactness against a plain-Rust
+//!   integer oracle is pinned by `tests/int_pipeline_parity.rs`.
 //!
 //! ## Test tiers
 //!

@@ -43,6 +43,7 @@ fn engine_path_opt(cli: &Cli) -> EnginePath {
     match cli.opt_or("engine", "packed") {
         "reference" => EnginePath::Reference,
         "packed-int8" | "int8" => EnginePath::PackedInt8,
+        "packed-int" | "int" => EnginePath::PackedInt,
         _ => EnginePath::Packed,
     }
 }
@@ -89,8 +90,8 @@ fn simd_opt(cli: &Cli) -> Result<SimdBackend> {
     }
 }
 
-fn serve_policy_opt(cli: &Cli, kernel_threads: usize, simd: SimdBackend)
-                    -> ServePolicy {
+fn serve_policy_opt(cli: &Cli, kernel_threads: usize, simd: SimdBackend,
+                    engine: EnginePath) -> ServePolicy {
     ServePolicy {
         batch: BatchPolicy::default(),
         queue_cap: cli.opt_usize("queue-cap").unwrap_or(1024),
@@ -100,14 +101,16 @@ fn serve_policy_opt(cli: &Cli, kernel_threads: usize, simd: SimdBackend)
         },
         kernel_threads,
         simd,
+        engine,
     }
 }
 
 fn print_serve_stats(stats: &ServerStats, elapsed_s: f64) {
     info!("serve", "{} requests in {elapsed_s:.3}s ({} rejected), mean latency \
-           {:.0}us, mean batch {:.1}, {} kernel thread(s)/request, {} kernels",
+           {:.0}us, mean batch {:.1}, {} kernel thread(s)/request, {} kernels, \
+           {:?} engine",
           stats.served, stats.rejected, stats.mean_latency_us(), stats.mean_batch(),
-          stats.kernel_threads, stats.simd);
+          stats.kernel_threads, stats.simd, stats.engine);
     if let Some(p) = stats.latency_percentiles() {
         info!("serve", "latency percentiles over last {} requests: \
                p50 {}us  p95 {}us  p99 {}us  (lifetime max {}us)",
@@ -155,7 +158,7 @@ fn serve_arch(cli: &Cli, name: &str) -> Result<()> {
         .with_simd(simd);
     let (in_dim, out_dim) = (engine.in_len(), engine.out_len());
     let workers = cli.opt_usize("workers").unwrap_or(2);
-    let policy = serve_policy_opt(cli, threads, simd);
+    let policy = serve_policy_opt(cli, threads, simd, path);
     info!("serve", "{name}: natively lowered graph ({} nodes), {path:?} engine \
            ({layout:?} weights, {threads} kernel thread(s), {simd} kernels), \
            {workers} workers, queue cap {} ({:?}), {} resident weight bytes",
@@ -308,7 +311,7 @@ fn dispatch(cli: &Cli) -> Result<()> {
             let threads = threads_opt(cli)?;
             let simd = init_backend(simd_opt(cli)?);
             let workers = cli.opt_usize("workers").unwrap_or(2);
-            let policy = serve_policy_opt(cli, threads, simd);
+            let policy = serve_policy_opt(cli, threads, simd, path);
             let engine = MlpEngine::with_path_layout(tbnz, Nonlin::Relu, path, layout)
                 .map_err(|e| anyhow!(e))?
                 .with_threads(threads)

@@ -23,6 +23,15 @@
 //! * `PackedInt8` — `Packed` with the *first* weight layer's input
 //!   quantized to 8-bit integers (the paper's microcontroller input
 //!   packing) instead of running layer 0 in f32.
+//! * `PackedInt` — the threshold-folded integer pipeline: a hidden FC
+//!   whose consumers are all packed FCs never materializes f32
+//!   activations — each row's sign test collapses into an integer
+//!   popcount threshold precomputed at build time, and the row kernel
+//!   writes the next layer's bit-words directly (`nn::packed` module
+//!   docs derive the fold).  f32 boundaries (the entry layer, convs,
+//!   joins, the output layer) emit with a per-layer *constant* gamma
+//!   ([`Engine::calibrate_int_gammas`]) instead of the data-dependent
+//!   XNOR-Net scale, so `Packed` remains the exact baseline.
 //!
 //! **Execution model.**  The engine walks the graph with a per-node value
 //! table: every node's output is addressable by node id while any later
@@ -46,7 +55,9 @@
 use std::sync::Arc;
 
 use super::layers::{FcLayer, Graph, GraphNode, Node, Scratch, Slot};
-use super::packed::{threads_from_env, EnginePath, PackedLayer, PackedLayout};
+use super::packed::{activation_gamma, binarize_signs, binarize_signs_into,
+                    threads_from_env, EnginePath, IntThresholds, PackedLayer,
+                    PackedLayout};
 use crate::tbn::bitops::{active_backend, SimdBackend};
 use crate::tbn::{LayerRecord, TbnzModel};
 
@@ -55,6 +66,35 @@ use crate::tbn::{LayerRecord, TbnzModel};
 pub enum Nonlin {
     Relu,
     None,
+}
+
+/// Per-node value of the `PackedInt` walk: f32 activations at the
+/// boundaries (entry layer, convs, joins, weightless plumbing, the output
+/// node), packed sign bits on hidden FC -> FC edges.
+enum IntVal {
+    F32(Vec<f32>),
+    Bits(Vec<u64>),
+}
+
+/// Batched twin of [`IntVal`]: `Bits` holds one packed bit-vector per
+/// sample side by side, `stride` words apart.
+enum IntBatch {
+    F32(Vec<Vec<f32>>),
+    Bits { words: Vec<u64>, stride: usize },
+}
+
+fn int_f32(v: &IntVal) -> &Vec<f32> {
+    match v {
+        IntVal::F32(h) => h,
+        IntVal::Bits(_) => unreachable!("bits flow only into packed FC nodes"),
+    }
+}
+
+fn int_f32_batch(v: &IntBatch) -> &Vec<Vec<f32>> {
+    match v {
+        IntBatch::F32(hs) => hs,
+        IntBatch::Bits { .. } => unreachable!("bits flow only into packed FC nodes"),
+    }
 }
 
 /// Layer-graph engine over typed nodes wired into a DAG (see the module
@@ -68,6 +108,14 @@ pub struct Engine {
     /// Parallel to the graph: packed state for every weight node that runs
     /// binarized (all weight nodes after the first) when `path.is_packed()`.
     packed: Vec<Option<PackedLayer>>,
+    /// `PackedInt` only: folded per-row integer threshold rules (plus the
+    /// calibrated constant gamma) for every packed node; `None` everywhere
+    /// else.
+    int_state: Vec<Option<IntThresholds>>,
+    /// `PackedInt` only: true for nodes whose output stays packed sign
+    /// bits (a hidden FC feeding only packed FCs).  All-false on every
+    /// other path, so activation accounting is unchanged there.
+    emit_bits: Vec<bool>,
     first_weight: Option<usize>,
     /// Precomputed per-node ReLU decision (overrides + default policy,
     /// gated on `nonlin`).
@@ -213,8 +261,31 @@ impl Engine {
                 packed[i] = graph[i].node.build_packed(layout)?;
             }
         }
+        let mut int_state: Vec<Option<IntThresholds>> = vec![None; graph.len()];
+        let mut emit_bits = vec![false; graph.len()];
+        if path == EnginePath::PackedInt {
+            for (i, p) in packed.iter().enumerate() {
+                if let Some(p) = p {
+                    int_state[i] = Some(IntThresholds::from_layer(p));
+                }
+            }
+            // a node's output stays packed bits iff it is a binarized FC
+            // whose every consumer is a binarized FC (the last node always
+            // reports f32 — the caller reads logits)
+            let last = graph.len() - 1;
+            for i in 0..last {
+                emit_bits[i] = int_state[i].is_some()
+                    && matches!(graph[i].node, Node::Fc(_))
+                    && graph.iter().enumerate().all(|(k, gn)| {
+                        !gn.inputs.contains(&Slot::Node(i))
+                            || (int_state[k].is_some()
+                                && matches!(gn.node, Node::Fc(_)))
+                    });
+            }
+        }
         Ok(Engine {
-            graph, nonlin, path, layout, packed, first_weight, relu_after, uses, in_len,
+            graph, nonlin, path, layout, packed, int_state, emit_bits,
+            first_weight, relu_after, uses, in_len,
             threads: threads_from_env(),
             simd: active_backend(),
         })
@@ -284,6 +355,77 @@ impl Engine {
     /// for weightless nodes and for the entry weight layer).
     pub fn packed_layer(&self, idx: usize) -> Option<&PackedLayer> {
         self.packed.get(idx).and_then(Option::as_ref)
+    }
+
+    /// Folded integer threshold rules of node `idx` (`PackedInt` path
+    /// only; `None` elsewhere and for non-packed nodes).  The exporter
+    /// reads these through [`IntThresholds::export_i32`].
+    pub fn int_thresholds(&self, idx: usize) -> Option<&IntThresholds> {
+        self.int_state.get(idx).and_then(Option::as_ref)
+    }
+
+    /// True when node `idx`'s output stays packed sign bits on the active
+    /// path (a hidden FC feeding only packed FCs, `PackedInt` only).
+    pub fn emits_bits(&self, idx: usize) -> bool {
+        self.emit_bits.get(idx).copied().unwrap_or(false)
+    }
+
+    /// Calibrate the `PackedInt` path's per-layer constant gammas from
+    /// sample inputs: each packed node's gamma becomes the mean XNOR-Net
+    /// scale ([`activation_gamma`]) its input activation shows under the
+    /// exact `Packed` semantics (the packed state is identical, so the
+    /// calibration walk reuses the packed kernels directly).  Gamma only
+    /// scales f32 emission — hidden bit decisions are invariant under any
+    /// positive constant — so calibration moves boundary layers (convs,
+    /// the output layer) closer to `Packed` without touching the folded
+    /// thresholds.  No-op on every other path, for empty `xs`, and for
+    /// layers whose observed mean is non-finite or not positive.
+    pub fn calibrate_int_gammas(mut self, xs: &[Vec<f32>]) -> Engine {
+        if self.path != EnginePath::PackedInt || xs.is_empty() {
+            return self;
+        }
+        let n = self.graph.len();
+        let mut sums = vec![0.0f64; n];
+        let mut counts = vec![0usize; n];
+        let mut scratch = Scratch::default();
+        for x in xs {
+            assert_eq!(x.len(), self.in_len);
+            let source = x.clone();
+            self.walk(&source, |idx, ins: &[&Vec<f32>]| {
+                let gn = &self.graph[idx];
+                if gn.node.is_join() {
+                    let a = ins[0].as_slice();
+                    let slices: [&[f32]; 3] = [
+                        a,
+                        ins.get(1).map_or(a, |v| v.as_slice()),
+                        ins.get(2).map_or(a, |v| v.as_slice()),
+                    ];
+                    return gn.node.forward_join(&slices[..ins.len()],
+                                                self.relu_after[idx], &mut scratch);
+                }
+                let a = ins[0];
+                if self.int_state[idx].is_some() {
+                    let g = activation_gamma(a);
+                    if g.is_finite() && g > 0.0 {
+                        sums[idx] += g as f64;
+                        counts[idx] += 1;
+                    }
+                }
+                self.node_forward(idx, a, &mut scratch)
+            });
+        }
+        for i in 0..n {
+            if counts[i] == 0 {
+                continue;
+            }
+            if let Some(thr) = self.int_state[i].as_mut() {
+                let mean = (sums[i] / counts[i] as f64) as f32;
+                if mean.is_finite() && mean > 0.0 {
+                    thr.gamma = mean;
+                }
+            }
+        }
+        self
     }
 
     pub fn nonlin(&self) -> Nonlin {
@@ -416,6 +558,141 @@ impl Engine {
         })
     }
 
+    /// Per-sample walk of the `PackedInt` path.  Hidden FC -> FC edges
+    /// carry packed sign bits ([`IntVal::Bits`]); every other edge carries
+    /// f32.  A packed FC consumes bits directly (or sign-binarizes an f32
+    /// input into `scratch.words`) and either emits the next layer's
+    /// bit-words straight from the threshold rules (`emit_bits`) or, at an
+    /// f32 boundary, the constant-gamma f32 activation.
+    fn exec_int(&self, x: &[f32], scratch: &mut Scratch) -> Vec<f32> {
+        let source = IntVal::F32(x.to_vec());
+        let out = self.walk(&source, |idx, ins: &[&IntVal]| {
+            let gn = &self.graph[idx];
+            let relu = self.relu_after[idx];
+            if gn.node.is_join() {
+                let a = int_f32(ins[0]).as_slice();
+                let slices: [&[f32]; 3] = [
+                    a,
+                    ins.get(1).map_or(a, |v| int_f32(v).as_slice()),
+                    ins.get(2).map_or(a, |v| int_f32(v).as_slice()),
+                ];
+                return IntVal::F32(gn.node.forward_join(&slices[..ins.len()], relu,
+                                                        scratch));
+            }
+            if let (Some(p), Some(thr)) = (&self.packed[idx], &self.int_state[idx]) {
+                match &gn.node {
+                    Node::Fc(fc) => {
+                        let xw: &[u64] = match ins[0] {
+                            IntVal::Bits(w) => w.as_slice(),
+                            IntVal::F32(h) => {
+                                binarize_signs(h, &mut scratch.words);
+                                scratch.words.as_slice()
+                            }
+                        };
+                        return if self.emit_bits[idx] {
+                            IntVal::Bits(fc.forward_int_bits(p, thr, xw, self.threads,
+                                                             self.simd))
+                        } else {
+                            IntVal::F32(fc.forward_int_f32(p, thr, xw, relu,
+                                                           self.threads, self.simd))
+                        };
+                    }
+                    Node::Conv2d(c) => {
+                        return IntVal::F32(c.forward_int(p, thr, int_f32(ins[0]),
+                                                         relu, scratch, self.threads,
+                                                         self.simd));
+                    }
+                    _ => unreachable!("packed state only exists for weight nodes"),
+                }
+            }
+            IntVal::F32(self.node_forward(idx, int_f32(ins[0]), scratch))
+        });
+        match out {
+            IntVal::F32(y) => y,
+            IntVal::Bits(_) => unreachable!("the output node never emits bits"),
+        }
+    }
+
+    /// Batched twin of [`Engine::exec_int`] (node-major, like
+    /// [`Engine::forward_batch`]): hidden FC -> FC edges carry the batch's
+    /// packed bit-vectors side by side and the batched bit kernel walks
+    /// every row once over all samples.
+    fn exec_int_batch(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let mut scratch = Scratch::default();
+        let bsz = xs.len();
+        let source = IntBatch::F32(xs.to_vec());
+        let out = self.walk(&source, |idx, ins: &[&IntBatch]| {
+            let gn = &self.graph[idx];
+            let relu = self.relu_after[idx];
+            if gn.node.is_join() {
+                let hs: Vec<Vec<f32>> = (0..bsz)
+                    .map(|b| {
+                        let a = int_f32_batch(ins[0])[b].as_slice();
+                        let slices: [&[f32]; 3] = [
+                            a,
+                            ins.get(1).map_or(a, |v| int_f32_batch(v)[b].as_slice()),
+                            ins.get(2).map_or(a, |v| int_f32_batch(v)[b].as_slice()),
+                        ];
+                        gn.node.forward_join(&slices[..ins.len()], relu, &mut scratch)
+                    })
+                    .collect();
+                return IntBatch::F32(hs);
+            }
+            if let (Some(p), Some(thr)) = (&self.packed[idx], &self.int_state[idx]) {
+                match &gn.node {
+                    Node::Fc(fc) => {
+                        let staged: Vec<u64>;
+                        let (xw, stride): (&[u64], usize) = match ins[0] {
+                            IntBatch::Bits { words, stride } => {
+                                (words.as_slice(), *stride)
+                            }
+                            IntBatch::F32(hs) => {
+                                let s = fc.n.div_ceil(64).max(1);
+                                let mut w = vec![0u64; bsz * s];
+                                for (b, h) in hs.iter().enumerate() {
+                                    binarize_signs_into(
+                                        h, &mut w[b * s..(b + 1) * s]);
+                                }
+                                staged = w;
+                                (staged.as_slice(), s)
+                            }
+                        };
+                        return if self.emit_bits[idx] {
+                            IntBatch::Bits {
+                                words: fc.forward_int_bits_batch(
+                                    p, thr, xw, stride, bsz, self.threads,
+                                    self.simd),
+                                stride: fc.m.div_ceil(64).max(1),
+                            }
+                        } else {
+                            IntBatch::F32(fc.forward_int_f32_batch(
+                                p, thr, xw, stride, bsz, relu, &mut scratch,
+                                self.threads, self.simd))
+                        };
+                    }
+                    Node::Conv2d(c) => {
+                        return IntBatch::F32(
+                            int_f32_batch(ins[0])
+                                .iter()
+                                .map(|h| c.forward_int(p, thr, h, relu, &mut scratch,
+                                                       self.threads, self.simd))
+                                .collect());
+                    }
+                    _ => unreachable!("packed state only exists for weight nodes"),
+                }
+            }
+            IntBatch::F32(
+                int_f32_batch(ins[0])
+                    .iter()
+                    .map(|h| self.node_forward(idx, h, &mut scratch))
+                    .collect())
+        });
+        match out {
+            IntBatch::F32(ys) => ys,
+            IntBatch::Bits { .. } => unreachable!("the output node never emits bits"),
+        }
+    }
+
     /// Forward one sample through the active path.
     pub fn forward(&self, x: &[f32]) -> Vec<f32> {
         let mut scratch = Scratch::default();
@@ -426,6 +703,9 @@ impl Engine {
     /// loops reuse one allocation across samples).
     pub fn forward_with_scratch(&self, x: &[f32], scratch: &mut Scratch) -> Vec<f32> {
         assert_eq!(x.len(), self.in_len);
+        if self.path == EnginePath::PackedInt {
+            return self.exec_int(x, scratch);
+        }
         self.exec(x, scratch, false)
     }
 
@@ -440,6 +720,9 @@ impl Engine {
     /// join per sample.  Results are bit-identical to per-sample
     /// [`Engine::forward`].
     pub fn forward_batch(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        if self.path == EnginePath::PackedInt {
+            return self.exec_int_batch(xs);
+        }
         let mut scratch = Scratch::default();
         let source = xs.to_vec();
         self.walk(&source, |idx, ins: &[&Vec<Vec<f32>>]| {
@@ -488,6 +771,26 @@ impl Engine {
         }
     }
 
+    /// Bytes of node `idx`'s output activation on the active path: packed
+    /// bit-words (8 bytes per 64 elements) when the node emits bits on the
+    /// `PackedInt` path, f32 otherwise.
+    fn out_bytes(&self, idx: usize) -> usize {
+        let len = self.graph[idx].node.out_len();
+        if self.emit_bits[idx] {
+            8 * len.div_ceil(64).max(1)
+        } else {
+            4 * len
+        }
+    }
+
+    /// Total bytes of per-node output activations one forward moves on the
+    /// active path (the bench's activation-traffic column): on `PackedInt`,
+    /// hidden FC -> FC edges count their packed bit-words — 32x below the
+    /// f32 buffers every other path materializes for the same edges.
+    pub fn activation_bytes(&self) -> usize {
+        (0..self.graph.len()).map(|i| self.out_bytes(i)).sum()
+    }
+
     /// Weight bytes resident for the *active* path: sub-bit tiles on the
     /// reference path (and for the f32/int8 entry layer); on the packed
     /// paths, the true per-layout number — `O(q)` tile words + alphas on
@@ -523,6 +826,11 @@ impl Engine {
     /// consumer (a residual skip stays live across the whole block body and
     /// is charged to every node it spans).  On a linear chain the held term
     /// is always zero, so the original Table 6 numbers are unchanged.
+    ///
+    /// On the `PackedInt` path, a hidden FC -> FC edge never materializes
+    /// f32: the producer's activation is charged at its packed bit-word
+    /// size (`out_bytes`), wherever it appears — as an input slot, as the
+    /// produced output, or held live for a later consumer.
     pub fn peak_memory_bytes(&self) -> usize {
         let n = self.graph.len();
         // last consumer of each node's activation (the executor frees after
@@ -550,20 +858,27 @@ impl Engine {
                 } else {
                     0
                 } + gn.node.f32_scratch_bytes();
-                let in_elems: usize =
-                    (0..gn.inputs.len()).map(|s| gn.node.slot_in_len(s)).sum();
+                let in_bytes: usize = gn
+                    .inputs
+                    .iter()
+                    .enumerate()
+                    .map(|(s, slot)| match slot {
+                        Slot::Source => 4 * gn.node.slot_in_len(s),
+                        Slot::Node(j) => self.out_bytes(*j),
+                    })
+                    .sum();
                 // activations produced earlier, not read here, but still
                 // held for a later consumer (e.g. the skip during the body,
                 // or the source across a subgraph branching off it)
-                let mut held_elems: usize = (0..i)
+                let mut held_bytes: usize = (0..i)
                     .filter(|&j| last_use[j] > i && !gn.inputs.contains(&Slot::Node(j)))
-                    .map(|j| self.graph[j].node.out_len())
+                    .map(|j| self.out_bytes(j))
                     .sum();
                 if src_last_use > i && !gn.inputs.contains(&Slot::Source) {
-                    held_elems += self.in_len;
+                    held_bytes += 4 * self.in_len;
                 }
                 self.node_resident_bytes(i)
-                    + 4 * (in_elems + gn.node.out_len() + held_elems)
+                    + in_bytes + self.out_bytes(i) + held_bytes
                     + scratch
             })
             .max()
@@ -617,6 +932,13 @@ impl MlpEngine {
     /// Force the XNOR-popcount backend ([`Engine::with_simd`]).
     pub fn with_simd(mut self, simd: SimdBackend) -> MlpEngine {
         self.engine = self.engine.with_simd(simd);
+        self
+    }
+
+    /// Calibrate the `PackedInt` path's constant gammas from sample inputs
+    /// ([`Engine::calibrate_int_gammas`]; no-op on every other path).
+    pub fn calibrate_int_gammas(mut self, xs: &[Vec<f32>]) -> MlpEngine {
+        self.engine = self.engine.calibrate_int_gammas(xs);
         self
     }
 
@@ -685,6 +1007,13 @@ impl MlpEngine {
     /// first FC layer).
     pub fn peak_memory_bytes(&self) -> usize {
         self.engine.peak_memory_bytes()
+    }
+
+    /// Total activation bytes one forward moves on the active path
+    /// ([`Engine::activation_bytes`]; `PackedInt` counts hidden FC -> FC
+    /// edges at their packed bit-word size).
+    pub fn activation_bytes(&self) -> usize {
+        self.engine.activation_bytes()
     }
 
     /// Total storage for the serialized model (Table 6 "Storage"), summed
@@ -1017,7 +1346,8 @@ mod tests {
     #[test]
     fn rejects_empty_models() {
         let empty = TbnzModel { layers: vec![] };
-        for path in [EnginePath::Reference, EnginePath::Packed, EnginePath::PackedInt8] {
+        for path in [EnginePath::Reference, EnginePath::Packed,
+                     EnginePath::PackedInt8, EnginePath::PackedInt] {
             assert!(Engine::from_tbnz(&empty, Nonlin::Relu, path).is_err());
         }
         assert!(Engine::new(vec![], Nonlin::Relu, EnginePath::Reference).is_err());
@@ -1085,7 +1415,8 @@ mod tests {
     #[test]
     fn dag_batch_equals_per_sample_on_packed_paths() {
         let (g, ..) = residual_fc_graph(24, 40, 10, 54);
-        for path in [EnginePath::Reference, EnginePath::Packed, EnginePath::PackedInt8] {
+        for path in [EnginePath::Reference, EnginePath::Packed,
+                     EnginePath::PackedInt8, EnginePath::PackedInt] {
             let engine = Engine::from_graph(g.clone(), Nonlin::Relu, path).unwrap();
             let mut rng = Rng::new(55);
             let xs: Vec<Vec<f32>> = (0..5).map(|_| rng.normal_vec(40, 1.0)).collect();
@@ -1324,5 +1655,49 @@ mod tests {
         // int8 input quantization perturbs layer 0 by <1% — argmax stays
         // stable for the large majority of samples
         assert!(agree * 10 >= n * 7, "argmax agreement {agree}/{n}");
+    }
+
+    /// On a pure FC chain the `PackedInt` path classifies *identically* to
+    /// `Packed`: hidden bit decisions are invariant under the (positive)
+    /// data-dependent gamma, and the output layer's constant gamma scales
+    /// all logits together, so the argmax is unchanged.
+    #[test]
+    fn int_path_argmax_matches_packed_on_fc_chain() {
+        // three layers so the hidden fc1 -> head edge actually carries bits
+        let mut rng = Rng::new(90);
+        let model = TbnzModel {
+            layers: vec![
+                tiled_record("fc0", 96, 256, 4, AlphaMode::PerTile, &mut rng),
+                tiled_record("fc1", 64, 96, 4, AlphaMode::PerTile, &mut rng),
+                bwnn_record("head", 10, 64, &mut rng),
+            ],
+        };
+        let packed =
+            MlpEngine::with_path(model.clone(), Nonlin::Relu, EnginePath::Packed)
+                .unwrap();
+        let int =
+            MlpEngine::with_path(model, Nonlin::Relu, EnginePath::PackedInt).unwrap();
+        assert_eq!(int.path(), EnginePath::PackedInt);
+        // same packed rows resident on both paths
+        assert_eq!(int.resident_weight_bytes(), packed.resident_weight_bytes());
+        // fc1 feeds only the packed head, so its output stays bit-words;
+        // the head (output node) and the f32 entry layer do not
+        assert!(int.engine().emits_bits(1));
+        assert!(!int.engine().emits_bits(0));
+        assert!(!int.engine().emits_bits(2));
+        // fc1's 64 f32s collapse to one u64 word in the traffic model
+        assert_eq!(int.activation_bytes() + 4 * 64,
+                   packed.activation_bytes() + 8);
+        assert!(int.peak_memory_bytes() <= packed.peak_memory_bytes());
+        let mut r = Rng::new(91);
+        let xs: Vec<Vec<f32>> = (0..16).map(|_| r.normal_vec(256, 1.0)).collect();
+        let int = int.calibrate_int_gammas(&xs);
+        // calibration replaces the default gamma on the packed nodes
+        let thr = int.engine().int_thresholds(2).unwrap();
+        assert!(thr.gamma.is_finite() && thr.gamma > 0.0);
+        assert_eq!(int.classify_batch(&xs), packed.classify_batch(&xs));
+        for x in &xs {
+            assert_eq!(int.forward(x).len(), 10);
+        }
     }
 }

@@ -24,8 +24,9 @@ use std::sync::Arc;
 
 use super::Scratch;
 use crate::nn::packed::{
-    activation_gamma, binarize_activations_into, partition_strided, payload_row_dot_i8,
-    quantize_input_i8, split_ranges, PackedLayer, PackedLayout,
+    activation_gamma, binarize_activations_into, binarize_signs_into,
+    partition_strided, payload_row_dot_i8, quantize_input_i8, split_ranges,
+    IntThresholds, PackedLayer, PackedLayout, PackedPayload,
 };
 use crate::nn::payload_row_dot;
 use crate::tbn::bitops::SimdBackend;
@@ -237,6 +238,31 @@ impl Conv2dLayer {
     pub fn forward_packed(&self, packed: &PackedLayer, x: &[f32], relu: bool,
                           scratch: &mut Scratch, threads: usize,
                           simd: SimdBackend) -> Vec<f32> {
+        self.forward_packed_impl(packed, x, relu, scratch, threads, simd, None)
+    }
+
+    /// Integer-pipeline conv forward ([`crate::nn::EnginePath::PackedInt`]):
+    /// identical to [`Conv2dLayer::forward_packed`] except every patch's
+    /// data-dependent XNOR-Net gamma reduction is replaced by the layer's
+    /// *calibrated constant* `thr.gamma` — patches are sign-binarized only
+    /// (`binarize_signs_into`), dropping one `mean |patch|` pass per output
+    /// position per group.  Conv stays an f32-in / f32-out node on the
+    /// integer path (its spatial output feeds pools/flattens, not packed
+    /// bit consumers); the whole-map constant replaces *per-patch* scales,
+    /// so this computes a different function from Packed — argmax
+    /// agreement is gated in `tests/int_pipeline_parity.rs`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_int(&self, packed: &PackedLayer, thr: &IntThresholds, x: &[f32],
+                       relu: bool, scratch: &mut Scratch, threads: usize,
+                       simd: SimdBackend) -> Vec<f32> {
+        self.forward_packed_impl(packed, x, relu, scratch, threads, simd,
+                                 Some(thr.gamma))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn forward_packed_impl(&self, packed: &PackedLayer, x: &[f32], relu: bool,
+                           scratch: &mut Scratch, threads: usize,
+                           simd: SimdBackend, const_gamma: Option<f32>) -> Vec<f32> {
         debug_assert_eq!(x.len(), self.in_len());
         let n = self.patch_len();
         let stride = n.div_ceil(64).max(1);
@@ -259,9 +285,15 @@ impl Conv2dLayer {
                     for ox in 0..self.w_out {
                         let pos = oy * self.w_out + ox;
                         self.extract_patch(x, g, oy, ox, &mut scratch.patch);
-                        scratch.gammas[pos] = binarize_activations_into(
-                            &scratch.patch,
-                            &mut scratch.batch_words[pos * stride..(pos + 1) * stride]);
+                        let words =
+                            &mut scratch.batch_words[pos * stride..(pos + 1) * stride];
+                        scratch.gammas[pos] = match const_gamma {
+                            Some(gamma) => {
+                                binarize_signs_into(&scratch.patch, words);
+                                gamma
+                            }
+                            None => binarize_activations_into(&scratch.patch, words),
+                        };
                     }
                 }
                 packed.forward_batch_binarized_rows_simd(g * cog, (g + 1) * cog,
@@ -304,8 +336,14 @@ impl Conv2dLayer {
                             for (k, pos) in (lo..hi).enumerate() {
                                 let (oy, ox) = (pos / self.w_out, pos % self.w_out);
                                 self.extract_patch(x, g, oy, ox, &mut patch);
-                                gc[k] = binarize_activations_into(
-                                    &patch, &mut wc[k * stride..(k + 1) * stride]);
+                                let words = &mut wc[k * stride..(k + 1) * stride];
+                                gc[k] = match const_gamma {
+                                    Some(gamma) => {
+                                        binarize_signs_into(&patch, words);
+                                        gamma
+                                    }
+                                    None => binarize_activations_into(&patch, words),
+                                };
                             }
                             packed.forward_batch_binarized_rows_simd(
                                 g * cog, (g + 1) * cog, wc, stride, gc, relu,
@@ -383,6 +421,55 @@ impl Conv2dLayer {
                 });
             }
         });
+        y
+    }
+
+    /// Plain-Rust oracle of [`Conv2dLayer::forward_int`]: per patch,
+    /// sign-binarize with scalar compares, accumulate each filter row's
+    /// constant-alpha runs as exact integer same-counts (scalar bit reads,
+    /// no popcount words), scale by the calibrated constant `thr.gamma` —
+    /// the same per-run f32 accumulation order as the kernels, so the two
+    /// are **bit-exact**.
+    pub fn forward_int_oracle(&self, packed: &PackedLayer, thr: &IntThresholds,
+                              x: &[f32], relu: bool, scratch: &mut Scratch)
+                              -> Vec<f32> {
+        debug_assert_eq!(x.len(), self.in_len());
+        let n = self.patch_len();
+        scratch.patch.clear();
+        scratch.patch.resize(n, 0.0);
+        let cog = self.co / self.groups;
+        let area = self.h_out * self.w_out;
+        let mut y = vec![0.0f32; self.co * area];
+        let mut pos_bits = vec![false; n];
+        for oy in 0..self.h_out {
+            for ox in 0..self.w_out {
+                for g in 0..self.groups {
+                    self.extract_patch(x, g, oy, ox, &mut scratch.patch);
+                    for (b, &v) in pos_bits.iter_mut().zip(scratch.patch.iter()) {
+                        *b = v > 0.0;
+                    }
+                    for oc in 0..cog {
+                        let o = g * cog + oc;
+                        let mut acc = 0.0f32;
+                        if let PackedPayload::Dense(w) = &packed.payload {
+                            for (j, &wj) in w[o * n..(o + 1) * n].iter().enumerate() {
+                                if pos_bits[j] { acc += wj } else { acc -= wj }
+                            }
+                        } else {
+                            packed.for_each_run(o, |start, len, alpha| {
+                                let same = (start..start + len)
+                                    .filter(|&j| packed.weight_bit(o, j) == pos_bits[j])
+                                    .count() as i64;
+                                acc += alpha * (2 * same - len as i64) as f32;
+                            });
+                        }
+                        let v = thr.gamma * acc;
+                        y[(o * self.h_out + oy) * self.w_out + ox] =
+                            if relu { v.max(0.0) } else { v };
+                    }
+                }
+            }
+        }
         y
     }
 
@@ -597,6 +684,40 @@ mod tests {
             assert_eq!(conv.forward_packed(&expanded, &x, true, &mut s, threads,
                                            SimdBackend::default()),
                        b, "expanded threads={threads}");
+        }
+    }
+
+    /// The integer-pipeline conv forward (constant calibrated gamma, sign
+    /// only binarize) is bit-exact against its plain-Rust oracle, on both
+    /// layouts and at any thread count — including a grouped conv.
+    #[test]
+    fn int_conv_matches_oracle_bit_exact() {
+        let mut rng = Rng::new(26);
+        let (co, ci, k, groups) = (6usize, 4usize, 3usize, 2usize);
+        let cig = ci / groups;
+        let w = rng.normal_vec(co * cig * k * k, 1.0);
+        let record = LayerRecord {
+            name: "gc".into(),
+            shape: vec![co, cig, k, k],
+            payload: crate::tbn::WeightPayload::Tiled {
+                p: 4,
+                tile: crate::tbn::tile_from_weights(&w, 4),
+                alphas: crate::tbn::alphas_from(&w, 4, crate::tbn::AlphaMode::PerTile),
+            },
+        };
+        let conv = Conv2dLayer::new(record, (ci, 7, 7), 1, 1, groups).unwrap();
+        let x = rng.normal_vec(conv.in_len(), 1.0);
+        let mut s = Scratch::default();
+        for layout in [PackedLayout::TileResident, PackedLayout::Expanded] {
+            let packed = conv.build_packed(layout).unwrap();
+            let mut thr = IntThresholds::from_layer(&packed);
+            thr.gamma = 0.37; // calibrated constants must flow through
+            let want = conv.forward_int_oracle(&packed, &thr, &x, true, &mut s);
+            for threads in [1usize, 2, 4, 64] {
+                assert_eq!(conv.forward_int(&packed, &thr, &x, true, &mut s, threads,
+                                            SimdBackend::default()),
+                           want, "{layout:?} threads={threads}");
+            }
         }
     }
 

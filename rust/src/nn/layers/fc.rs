@@ -9,7 +9,8 @@ use std::sync::Arc;
 use super::Scratch;
 use crate::nn::packed::{
     activation_gamma, binarize_activations, binarize_activations_into,
-    payload_row_dot_i8, quantize_input_i8, split_ranges, PackedLayer, PackedLayout,
+    payload_row_dot_i8, quantize_input_i8, split_ranges, IntRowRule, IntThresholds,
+    PackedLayer, PackedLayout, PackedPayload,
 };
 use crate::nn::{fc_fp_forward, fc_layer_forward};
 use crate::tbn::bitops::SimdBackend;
@@ -142,6 +143,128 @@ impl FcLayer {
         y
     }
 
+    /// Integer-pipeline forward, bit output: the input is already packed
+    /// sign bits (`xw`, bits `>= n` zero) and the output is the next
+    /// layer's packed sign bits — one `u64` word buffer, no f32 anywhere.
+    /// ReLU needs no parameter: `relu(v) > 0 ⇔ v > 0`, so the emitted bit
+    /// is the same either way.  Threads split output *words*; any thread
+    /// count and backend is bit-exact (see
+    /// `PackedLayer::forward_batch_bits_mt_simd`).
+    pub fn forward_int_bits(&self, packed: &PackedLayer, thr: &IntThresholds,
+                            xw: &[u64], threads: usize, simd: SimdBackend)
+                            -> Vec<u64> {
+        let stride_out = self.m.div_ceil(64).max(1);
+        let mut out = vec![0u64; stride_out];
+        packed.forward_batch_bits_mt_simd(thr, xw, xw.len(), 1, &mut out, stride_out,
+                                          threads, simd);
+        out
+    }
+
+    /// Integer-pipeline forward, f32 output — the boundary form for the
+    /// output layer (or a non-FC consumer): the same bit input, but values
+    /// are emitted as `thr.gamma * row_dot` with the per-layer *calibrated
+    /// constant* in place of the data-dependent XNOR-Net scale.  Reuses the
+    /// exact f32 batch kernel, so the accumulation order matches the
+    /// Packed path run for run.
+    pub fn forward_int_f32(&self, packed: &PackedLayer, thr: &IntThresholds,
+                           xw: &[u64], relu: bool, threads: usize,
+                           simd: SimdBackend) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.m];
+        packed.forward_batch_binarized_rows_mt_simd(0, self.m, xw, xw.len(),
+                                                    &[thr.gamma], relu, &mut out,
+                                                    threads, simd);
+        out
+    }
+
+    /// Batched [`FcLayer::forward_int_bits`]: `bsz` bit inputs of `stride`
+    /// words each, producing `bsz` bit outputs of `ceil(m/64)` words each
+    /// in one buffer (returned with that output stride implied).
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_int_bits_batch(&self, packed: &PackedLayer, thr: &IntThresholds,
+                                  xws: &[u64], stride: usize, bsz: usize,
+                                  threads: usize, simd: SimdBackend) -> Vec<u64> {
+        let stride_out = self.m.div_ceil(64).max(1);
+        let mut out = vec![0u64; bsz * stride_out];
+        packed.forward_batch_bits_mt_simd(thr, xws, stride, bsz, &mut out, stride_out,
+                                          threads, simd);
+        out
+    }
+
+    /// Batched [`FcLayer::forward_int_f32`] (boundary layers inside a
+    /// batched forward): the constant gamma is broadcast across the batch
+    /// through the shared `scratch.gammas` staging buffer.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_int_f32_batch(&self, packed: &PackedLayer, thr: &IntThresholds,
+                                 xws: &[u64], stride: usize, bsz: usize, relu: bool,
+                                 scratch: &mut Scratch, threads: usize,
+                                 simd: SimdBackend) -> Vec<Vec<f32>> {
+        scratch.gammas.clear();
+        scratch.gammas.resize(bsz, thr.gamma);
+        let mut out = vec![0.0f32; bsz * self.m];
+        packed.forward_batch_binarized_rows_mt_simd(0, self.m, xws, stride,
+                                                    &scratch.gammas, relu, &mut out,
+                                                    threads, simd);
+        out.chunks(self.m).map(|row| row.to_vec()).collect()
+    }
+
+    /// Exact per-run accumulation of row `i` over a ±1 input given as sign
+    /// bools — the plain-Rust (scalar bit reads, no popcount words) half of
+    /// the integer oracle, f32-bit-exact against the kernels' `Mixed` path.
+    fn oracle_acc(&self, packed: &PackedLayer, i: usize, x_pos: &[bool]) -> f32 {
+        if let PackedPayload::Dense(w) = &packed.payload {
+            let row = &w[i * self.n..(i + 1) * self.n];
+            let mut acc = 0.0f32;
+            for (j, &wj) in row.iter().enumerate() {
+                if x_pos[j] { acc += wj } else { acc -= wj }
+            }
+            return acc;
+        }
+        let mut acc = 0.0f32;
+        packed.for_each_run(i, |start, len, alpha| {
+            let same = (start..start + len)
+                .filter(|&j| packed.weight_bit(i, j) == x_pos[j])
+                .count() as i64;
+            acc += alpha * (2 * same - len as i64) as f32;
+        });
+        acc
+    }
+
+    /// Plain-Rust integer oracle of [`FcLayer::forward_int_bits`]: per row,
+    /// count matching sign bits with scalar loops and compare against the
+    /// folded threshold in the same-count domain (`Pos`: `same ≥ t`,
+    /// `Neg`: `same ≤ t`), falling back to the exact per-run f32 sum for
+    /// `Mixed` rows.  No packed words, no SIMD — the independent
+    /// formulation `tests/int_pipeline_parity.rs` pins the kernels against.
+    pub fn forward_int_oracle(&self, packed: &PackedLayer, thr: &IntThresholds,
+                              x_pos: &[bool]) -> Vec<bool> {
+        debug_assert_eq!(x_pos.len(), self.n);
+        let same = |i: usize| {
+            (0..self.n).filter(|&j| packed.weight_bit(i, j) == x_pos[j]).count() as i64
+        };
+        (0..self.m)
+            .map(|i| match thr.rules[i] {
+                IntRowRule::Zero => false,
+                IntRowRule::Pos { t } => same(i) >= t as i64,
+                IntRowRule::Neg { t } => same(i) <= t as i64,
+                IntRowRule::Mixed => self.oracle_acc(packed, i, x_pos) > 0.0,
+            })
+            .collect()
+    }
+
+    /// Plain-Rust oracle of [`FcLayer::forward_int_f32`]: the boundary f32
+    /// emission `thr.gamma * acc` with the same per-run accumulation
+    /// order — bit-exact against the kernel.
+    pub fn forward_int_oracle_f32(&self, packed: &PackedLayer, thr: &IntThresholds,
+                                  x_pos: &[bool], relu: bool) -> Vec<f32> {
+        debug_assert_eq!(x_pos.len(), self.n);
+        (0..self.m)
+            .map(|i| {
+                let v = thr.gamma * self.oracle_acc(packed, i, x_pos);
+                if relu { v.max(0.0) } else { v }
+            })
+            .collect()
+    }
+
     /// f32 oracle of [`FcLayer::forward_packed`] — the same sign/gamma math
     /// over the expanded weights, no bit tricks.  `Engine::forward_quantized`
     /// runs this on the Reference path.  Gamma carries the packed path's
@@ -266,6 +389,57 @@ mod tests {
                 + 1e-4;
             assert!((got[i] - want[i]).abs() <= bound,
                     "row {i}: {} vs {} (bound {bound})", got[i], want[i]);
+        }
+    }
+
+    /// Bit and f32 integer forwards are bit-exact against their plain-Rust
+    /// oracles on both layouts, at several thread counts, with m > 64 so
+    /// the bit output spans words (and word-split threading engages).
+    #[test]
+    fn int_forwards_match_oracles() {
+        let fc = tiled_fc(70, 70, 7, 21); // PerTile alphas: Mixed rows included
+        let mut rng = Rng::new(22);
+        let x = rng.normal_vec(70, 1.0);
+        let x_pos: Vec<bool> = x.iter().map(|&v| v > 0.0).collect();
+        let mut xw = Vec::new();
+        crate::nn::packed::binarize_signs(&x, &mut xw);
+        for layout in [PackedLayout::TileResident, PackedLayout::Expanded] {
+            let packed = fc.build_packed(layout).unwrap();
+            let thr = IntThresholds::from_layer(&packed);
+            let want_bits = fc.forward_int_oracle(&packed, &thr, &x_pos);
+            let want_f32 = fc.forward_int_oracle_f32(&packed, &thr, &x_pos, true);
+            for threads in [1usize, 2, 4, 64] {
+                let bits = fc.forward_int_bits(&packed, &thr, &xw, threads,
+                                               SimdBackend::default());
+                for (i, &want) in want_bits.iter().enumerate() {
+                    assert_eq!((bits[i / 64] >> (i % 64)) & 1 == 1, want,
+                               "{layout:?} threads={threads} row {i}");
+                }
+                assert_eq!(fc.forward_int_f32(&packed, &thr, &xw, true, threads,
+                                              SimdBackend::default()),
+                           want_f32, "{layout:?} threads={threads}");
+            }
+            // the batched bit kernel agrees with the single-sample one
+            let stride = 70usize.div_ceil(64);
+            let mut xws = vec![0u64; 3 * stride];
+            for b in 0..3 {
+                xws[b * stride..(b + 1) * stride].copy_from_slice(&xw);
+            }
+            let batch = fc.forward_int_bits_batch(&packed, &thr, &xws, stride, 3, 2,
+                                                  SimdBackend::default());
+            let single = fc.forward_int_bits(&packed, &thr, &xw, 1,
+                                             SimdBackend::default());
+            let so = 70usize.div_ceil(64);
+            for b in 0..3 {
+                assert_eq!(&batch[b * so..(b + 1) * so], &single[..], "sample {b}");
+            }
+            let mut scratch = Scratch::default();
+            let fbatch = fc.forward_int_f32_batch(&packed, &thr, &xws, stride, 3,
+                                                  true, &mut scratch, 2,
+                                                  SimdBackend::default());
+            for (b, row) in fbatch.iter().enumerate() {
+                assert_eq!(row, &want_f32, "f32 batch sample {b}");
+            }
         }
     }
 

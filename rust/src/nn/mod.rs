@@ -68,8 +68,9 @@ pub use engine::{Engine, MlpEngine, Nonlin};
 pub use layers::{lower_arch_spec, Conv2dLayer, FcLayer, Graph, GraphNode, LowerOptions,
                  Node, PoolKind, Scratch, Slot, LN_EPS};
 pub use packed::{activation_gamma, binarize_activations, binarize_activations_into,
-                 forward_quantized_reference, payload_row_dot_i8, quantize_input_i8,
-                 threads_from_env, AlphaRun, EnginePath, PackedLayer, PackedLayout,
+                 binarize_signs, binarize_signs_into, forward_quantized_reference,
+                 payload_row_dot_i8, quantize_input_i8, threads_from_env, AlphaRun,
+                 EnginePath, IntRowRule, IntThresholds, PackedLayer, PackedLayout,
                  PackedPayload};
 // Re-exported beside the engine: `with_simd` / `TBN_SIMD` select it the same
 // way `with_threads` / `TBN_THREADS` select the kernel thread count.

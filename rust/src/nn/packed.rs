@@ -39,6 +39,30 @@
 //! never changes results either — every backend masks partial words
 //! identically and leaves the per-run f32 accumulation order untouched.
 //!
+//! **Threshold-folded integer pipeline** ([`EnginePath::PackedInt`]): on
+//! hidden FC-to-FC edges the f32 round trip disappears entirely.  The next
+//! binarized layer only consumes the *sign* of
+//! `v = gamma · alpha · (2·same − n)` (and ReLU cannot flip it:
+//! `relu(v) > 0 ⇔ v > 0`), so for a row whose alpha runs share one value
+//! `a` the output bit collapses to an integer popcount compare: with any
+//! constant `gamma > 0`, `a > 0` gives `bit = same ≥ T_r` with
+//! `T_r = ⌊n/2⌋ + 1`, and `a < 0` **flips** the comparison to
+//! `bit = same ≤ ⌊(n−1)/2⌋`; `a = 0` (or a NaN alpha) pins the bit to 0,
+//! matching the Packed path's `NaN > 0 == false` convention.  Rows whose
+//! runs mix alpha values (per-tile alpha modes) keep the exact per-run f32
+//! accumulation and test `acc > 0` — still skipping the gamma reduction
+//! and the separate binarize pass.  The thresholds are precomputed once at
+//! engine build time ([`IntThresholds::from_layer`]) and the row kernels
+//! write the next layer's bit-words directly
+//! ([`PackedLayer::forward_batch_bits_mt_simd`]).  The data-dependent
+//! XNOR-Net gamma is replaced on this path by a per-layer *calibrated
+//! constant* ([`IntThresholds::gamma`]), applied only where f32 values
+//! must be emitted (the output layer and boundaries into non-FC
+//! consumers) — bit emission is invariant to any positive constant gamma,
+//! but PackedInt therefore computes a slightly different function from
+//! Packed; `tests/int_pipeline_parity.rs` pins bit-exactness against a
+//! plain-Rust integer oracle and argmax agreement against Packed.
+//!
 //! A `PackedLayer` is a plain `(m, n)` row matrix over the layer's row-major
 //! flat weights: FC layers pack their `[m, n]` shape directly, Conv2d layers
 //! pack `(co, ci/groups * kh * kw)` rows and feed im2col patches through the
@@ -73,6 +97,14 @@ pub enum EnginePath {
     /// f32 oracle by the input quantization error; `tests/conv_parity.rs`
     /// documents and gates the tolerance.
     PackedInt8,
+    /// Threshold-folded integer pipeline: hidden FC-to-FC edges never
+    /// materialize f32 activations — each packed FC row emits its output
+    /// *bit* straight from the integer XNOR-popcount via a precomputed
+    /// per-row threshold ([`IntThresholds`]), and the data-dependent
+    /// XNOR-Net gamma is replaced by a per-layer calibrated constant
+    /// (`Engine::calibrate_int_gammas`) applied only where f32 values are
+    /// emitted.  `Packed` stays the exact XNOR-Net baseline.
+    PackedInt,
 }
 
 impl EnginePath {
@@ -150,13 +182,15 @@ pub(crate) fn split_ranges(items: usize, threads: usize) -> Vec<(usize, usize)> 
 /// slices are pairwise disjoint, so one scoped thread can own range `r`'s
 /// views across every block — disjoint writes with no aliasing and no
 /// `unsafe`.  `ranges` must be the sorted cover produced by
-/// [`split_ranges`] over `0..inner`.
-pub(crate) fn partition_strided<'a>(
-    buf: &'a mut [f32],
+/// [`split_ranges`] over `0..inner`.  Generic over the element type: the
+/// f32 kernels split activation blocks, the integer pipeline splits `u64`
+/// bit-word blocks with the same machinery.
+pub(crate) fn partition_strided<'a, T>(
+    buf: &'a mut [T],
     inner: usize,
     ranges: &[(usize, usize)],
-) -> Vec<Vec<&'a mut [f32]>> {
-    let mut parts: Vec<Vec<&'a mut [f32]>> =
+) -> Vec<Vec<&'a mut [T]>> {
+    let mut parts: Vec<Vec<&'a mut [T]>> =
         ranges.iter().map(|_| Vec::with_capacity(buf.len() / inner.max(1))).collect();
     for block in buf.chunks_mut(inner) {
         let mut rest = block;
@@ -557,6 +591,267 @@ impl PackedLayer {
             }
         });
     }
+
+    /// Walk row `i`'s constant-alpha runs in kernel order, calling
+    /// `f(start, len, alpha)` per run.  `Bits` rows replay their stored
+    /// runs, `Tile` rows derive them arithmetically (exactly like
+    /// [`PackedLayer::row_dot_binarized_simd`]), `Dense` rows have none.
+    /// Shared by the threshold precompute and the plain-Rust oracles.
+    pub fn for_each_run<F: FnMut(usize, usize, f32)>(&self, i: usize, mut f: F) {
+        match &self.payload {
+            PackedPayload::Bits { runs, run_offsets, .. } => {
+                let (lo, hi) = (run_offsets[i] as usize, run_offsets[i + 1] as usize);
+                for run in &runs[lo..hi] {
+                    f(run.start as usize, run.len as usize, run.alpha);
+                }
+            }
+            PackedPayload::Tile { q, alphas, .. } => {
+                let q = *q;
+                let single = alphas.len() == 1;
+                let row_start = i * self.n;
+                let mut j = 0usize;
+                while j < self.n {
+                    let flat = row_start + j;
+                    let len = (q - flat % q).min(self.n - j);
+                    let alpha =
+                        if single { alphas[0] } else { alphas[(flat / q) % alphas.len()] };
+                    f(j, len, alpha);
+                    j += len;
+                }
+            }
+            PackedPayload::Dense(_) => {}
+        }
+    }
+
+    /// Weight sign bit of row `i`, column `j` (binary payloads only; panics
+    /// on `Dense`).  Scalar single-bit reads — the plain-Rust oracle's view
+    /// of the weights, independent of the popcount kernels.
+    pub fn weight_bit(&self, i: usize, j: usize) -> bool {
+        match &self.payload {
+            PackedPayload::Bits { words_per_row, row_words, .. } => {
+                let w = row_words[i * words_per_row + j / 64];
+                (w >> (j % 64)) & 1 == 1
+            }
+            PackedPayload::Tile { q, tile_words, .. } => {
+                let t = (i * self.n + j) % q;
+                (tile_words[t / 64] >> (t % 64)) & 1 == 1
+            }
+            PackedPayload::Dense(_) => panic!("dense rows have no weight bits"),
+        }
+    }
+
+    /// Raw integer XNOR-popcount dot of row `i` against the packed input
+    /// bits: `2·same − n` with no alpha and no gamma — the quantity the
+    /// folded thresholds compare against.  Only meaningful for rows whose
+    /// alpha runs share one value (see [`IntRowRule`]); `Dense` rows have
+    /// no integer dot and panic.
+    pub fn row_int_dot_simd(&self, i: usize, xw: &[u64], simd: SimdBackend) -> i64 {
+        match &self.payload {
+            PackedPayload::Bits { words_per_row, row_words, .. } => {
+                let row = &row_words[i * words_per_row..(i + 1) * words_per_row];
+                xnor_dot_words_range_with(simd, row, xw, 0, self.n)
+            }
+            PackedPayload::Tile { q, tile_words, .. } => {
+                let q = *q;
+                let row_start = i * self.n;
+                let mut acc = 0i64;
+                let mut j = 0usize;
+                while j < self.n {
+                    let ti = (row_start + j) % q;
+                    let len = (q - ti).min(self.n - j);
+                    acc += xnor_dot_words_offset_with(simd, tile_words, ti, xw, j, len);
+                    j += len;
+                }
+                acc
+            }
+            PackedPayload::Dense(_) => panic!("dense rows have no integer dot"),
+        }
+    }
+
+    /// Output bit of row `i` under its folded rule — the integer-pipeline
+    /// row kernel.  `Pos`/`Neg` rows stay entirely in the integer domain
+    /// (one popcount dot, one compare); `Mixed` rows accumulate the exact
+    /// per-run f32 sum and test its sign; `Zero` rows are constant.  Every
+    /// backend computes the same integer dots, so the emitted bit is
+    /// bit-exact across `SimdBackend`s and (word-split) thread counts.
+    pub fn row_rule_bit_simd(&self, rule: IntRowRule, i: usize, xw: &[u64],
+                             simd: SimdBackend) -> bool {
+        match rule {
+            IntRowRule::Zero => false,
+            IntRowRule::Mixed => self.row_dot_binarized_simd(i, xw, simd) > 0.0,
+            IntRowRule::Pos { t } => {
+                self.row_int_dot_simd(i, xw, simd) >= 2 * t as i64 - self.n as i64
+            }
+            IntRowRule::Neg { t } => {
+                self.row_int_dot_simd(i, xw, simd) <= 2 * t as i64 - self.n as i64
+            }
+        }
+    }
+
+    /// Batched bit-emitting forward: for each of `bsz` packed inputs
+    /// (`xws[b*stride ..]`, bits `>= n` zero) compute every row's folded
+    /// output bit and write it straight into `out[b*stride_out ..]` as the
+    /// *next* layer's activation words (bit `i` of sample `b`; tail bits
+    /// zero).  No f32 buffer, no binarize pass, no gamma reduction.  Rows
+    /// stay the outer loop so each row's weight state is walked while hot
+    /// across the whole batch, like the f32 batch kernel.
+    /// `stride_out >= ceil(m/64)` words per sample, fully overwritten.
+    pub fn forward_batch_bits_simd(&self, thr: &IntThresholds, xws: &[u64],
+                                   stride: usize, bsz: usize, out: &mut [u64],
+                                   stride_out: usize, simd: SimdBackend) {
+        debug_assert_eq!(thr.rules.len(), self.m);
+        debug_assert!(xws.len() >= bsz * stride);
+        debug_assert!(stride_out * 64 >= self.m && out.len() >= bsz * stride_out);
+        for w in out[..bsz * stride_out].iter_mut() {
+            *w = 0;
+        }
+        for i in 0..self.m {
+            let rule = thr.rules[i];
+            for b in 0..bsz {
+                let xw = &xws[b * stride..(b + 1) * stride];
+                if self.row_rule_bit_simd(rule, i, xw, simd) {
+                    out[b * stride_out + i / 64] |= 1u64 << (i % 64);
+                }
+            }
+        }
+    }
+
+    /// Multi-threaded [`PackedLayer::forward_batch_bits_simd`].  Output
+    /// bits of different rows share `u64` words, so the split is by
+    /// contiguous *word* ranges: each thread owns rows
+    /// `[64·w_lo, min(64·w_hi, m))` and therefore whole words of every
+    /// sample's output — pairwise-disjoint writes with no atomics, via the
+    /// same strided partition as the f32 kernels.  Each bit is still
+    /// produced by the unmodified serial row kernel, so any thread count
+    /// is bit-exact against 1.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_batch_bits_mt_simd(&self, thr: &IntThresholds, xws: &[u64],
+                                      stride: usize, bsz: usize, out: &mut [u64],
+                                      stride_out: usize, threads: usize,
+                                      simd: SimdBackend) {
+        let wcount = self.m.div_ceil(64).max(1);
+        let t = threads.min(wcount).max(1);
+        if t <= 1 || bsz == 0 {
+            return self.forward_batch_bits_simd(thr, xws, stride, bsz, out,
+                                                stride_out, simd);
+        }
+        debug_assert_eq!(thr.rules.len(), self.m);
+        debug_assert!(xws.len() >= bsz * stride);
+        debug_assert!(stride_out >= wcount && out.len() >= bsz * stride_out);
+        for w in out[..bsz * stride_out].iter_mut() {
+            *w = 0;
+        }
+        let ranges = split_ranges(wcount, t);
+        let parts = partition_strided(&mut out[..bsz * stride_out], stride_out,
+                                      &ranges);
+        std::thread::scope(|scope| {
+            for (&(wlo, whi), mut slices) in ranges.iter().zip(parts) {
+                scope.spawn(move || {
+                    for i in (wlo * 64)..(whi * 64).min(self.m) {
+                        let rule = thr.rules[i];
+                        for (b, dst) in slices.iter_mut().enumerate() {
+                            let xw = &xws[b * stride..(b + 1) * stride];
+                            if self.row_rule_bit_simd(rule, i, xw, simd) {
+                                dst[i / 64 - wlo] |= 1u64 << (i % 64);
+                            }
+                        }
+                    }
+                });
+            }
+        });
+    }
+}
+
+/// One row's folded integer decision rule on the [`EnginePath::PackedInt`]
+/// path, in the *same-count* domain of `same = popcount(xnor(row, x))`
+/// (so the raw dot `2·same − n` compares against `2t − n`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum IntRowRule {
+    /// Uniform positive alpha: `bit = same ≥ t`, `t = ⌊n/2⌋ + 1`
+    /// (⇔ `2·same − n > 0`).
+    Pos { t: i32 },
+    /// Uniform negative alpha flips the comparison: `bit = same ≤ t`,
+    /// `t = ⌊(n−1)/2⌋` (⇔ `2·same − n < 0`).
+    Neg { t: i32 },
+    /// Alpha 0 or NaN (or an empty row): the pre-activation can never be
+    /// `> 0` on the Packed path, so the bit is constant 0.
+    Zero,
+    /// Runs mix alpha values (per-tile alpha modes, dense fp rows): no
+    /// single integer threshold exists; the kernel keeps the exact per-run
+    /// f32 accumulation and tests `acc > 0`.
+    Mixed,
+}
+
+/// Per-row folded thresholds plus the per-layer calibrated gamma constant
+/// for one packed layer — the [`EnginePath::PackedInt`] build-time state.
+///
+/// `gamma` defaults to 1.0 and is only *observable* where the layer must
+/// emit f32 values (the output layer, or a boundary into a non-FC
+/// consumer): hidden bit emission is invariant to any positive constant
+/// scale.  `Engine::calibrate_int_gammas` replaces it with the mean
+/// XNOR-Net gamma observed over a calibration set.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IntThresholds {
+    /// One rule per output row (`rules.len() == m`).
+    pub rules: Vec<IntRowRule>,
+    /// Per-layer constant replacing the data-dependent XNOR-Net scale on
+    /// f32-emitting boundaries.  Positive and finite.
+    pub gamma: f32,
+}
+
+impl IntThresholds {
+    /// Classify every row of `layer` at build time.  A row is `Pos`/`Neg`
+    /// when all its alpha runs share one finite non-zero value (Bwnn rows,
+    /// single-alpha tiled rows, and any per-tile row that happens to be
+    /// covered by one run), `Zero` when that shared value is 0 or NaN, and
+    /// `Mixed` otherwise (including every dense fp row).
+    pub fn from_layer(layer: &PackedLayer) -> IntThresholds {
+        let n = layer.n;
+        let rules = (0..layer.m)
+            .map(|i| {
+                if matches!(layer.payload, PackedPayload::Dense(_)) {
+                    return IntRowRule::Mixed;
+                }
+                let mut first: Option<f32> = None;
+                let mut uniform = true;
+                layer.for_each_run(i, |_, _, a| match first {
+                    None => first = Some(a),
+                    // NaN != NaN keeps a NaN-alpha multi-run row Mixed,
+                    // where the f32 kernel reproduces Packed's NaN > 0
+                    // == false; a single NaN run classifies Zero below.
+                    Some(f) if f != a => uniform = false,
+                    Some(_) => {}
+                });
+                match first {
+                    _ if !uniform => IntRowRule::Mixed,
+                    None => IntRowRule::Zero, // empty row: dot is always 0
+                    Some(a) if a > 0.0 => IntRowRule::Pos { t: (n / 2 + 1) as i32 },
+                    Some(a) if a < 0.0 => {
+                        IntRowRule::Neg { t: (n.saturating_sub(1) / 2) as i32 }
+                    }
+                    Some(_) => IntRowRule::Zero, // ±0.0 or NaN alpha
+                }
+            })
+            .collect();
+        IntThresholds { rules, gamma: 1.0 }
+    }
+
+    /// The microcontroller export encoding: one `i32` per row.
+    /// `Pos { t }` → `t` (always ≥ 1), `Neg { t }` → `−t − 1` (always
+    /// ≤ −1, decodes as `t = −v − 1`), `Zero` → `i32::MAX` (an
+    /// unreachable same-count), `Mixed` → `i32::MIN` (sentinel: the row
+    /// needs the weighted-run evaluation, no single threshold exists).
+    pub fn export_i32(&self) -> Vec<i32> {
+        self.rules
+            .iter()
+            .map(|r| match *r {
+                IntRowRule::Pos { t } => t,
+                IntRowRule::Neg { t } => -t - 1,
+                IntRowRule::Zero => i32::MAX,
+                IntRowRule::Mixed => i32::MIN,
+            })
+            .collect()
+    }
 }
 
 /// Sign-binarize an activation vector into `words` (bit j set iff
@@ -602,6 +897,32 @@ pub fn binarize_activations_into(h: &[f32], words: &mut [u64]) -> f32 {
     }
 }
 
+/// Sign-binarize with **no** gamma reduction — the integer pipeline's
+/// boundary entry point (an f32 value crossing into a bit-consuming layer
+/// only needs its signs; the folded thresholds replace the scale).  Same
+/// bit convention as [`binarize_activations_into`]: bit j set iff
+/// `h[j] > 0.0` (NaN and `-inf` read 0), tail bits zeroed.
+pub fn binarize_signs_into(h: &[f32], words: &mut [u64]) {
+    debug_assert!(words.len() * 64 >= h.len());
+    for w in words.iter_mut() {
+        *w = 0;
+    }
+    for (j, &v) in h.iter().enumerate() {
+        if v > 0.0 {
+            words[j / 64] |= 1u64 << (j % 64);
+        }
+    }
+}
+
+/// [`binarize_signs_into`] with a resizing scratch `Vec` (at least one
+/// word, like [`binarize_activations`]).
+pub fn binarize_signs(h: &[f32], words: &mut Vec<u64>) {
+    let wpr = h.len().div_ceil(64).max(1);
+    words.clear();
+    words.resize(wpr, 0);
+    binarize_signs_into(h, words);
+}
+
 /// The XNOR-Net activation scale `gamma = mean |h|` with the same
 /// non-finite guard as [`binarize_activations_into`]: non-finite elements
 /// are skipped, and a non-finite mean collapses to 0.  The f32 oracles
@@ -621,8 +942,15 @@ fn finite_or_zero(v: f32) -> f32 {
 
 /// Symmetric 8-bit input quantization (the paper's microcontroller input
 /// packing): `scale = max|x| / 127`, `xq[j] = round(x[j] / scale)` clamped
-/// to `[-127, 127]`.  Returns the scale (0.0 for an all-zero input, with
-/// `out` all zeros).  `out` is a scratch buffer reused across samples.
+/// to `[-127, 127]`.  Returns the scale.  The degenerate guard returns
+/// scale 0.0 with `out` all zeros in **two** cases: an all-zero input
+/// (`max|x| == 0`), and any input whose `max|x|` is non-finite — a NaN or
+/// ±inf element makes no symmetric scale meaningful, so the whole sample
+/// collapses to zeros rather than poisoning the integer kernels.  This is
+/// the same convention as the integer hidden pipeline's gamma guards
+/// ([`activation_gamma`] / `Engine::calibrate_int_gammas`): non-finite
+/// inputs deterministically degrade to zero, never to NaN.  `out` is a
+/// scratch buffer reused across samples.
 ///
 /// Per-element quantization error is at most `scale / 2`, so a dot with a
 /// weight row `w` is off by at most `scale / 2 * sum_j |w_j|` — the bound
@@ -988,6 +1316,30 @@ mod tests {
         }
     }
 
+    /// The documented degenerate guard: a non-finite `max|x|` (any NaN or
+    /// ±inf element) behaves exactly like the all-zero input — scale 0.0,
+    /// `out` all zeros — never a NaN scale.
+    #[test]
+    fn quantize_i8_non_finite_collapses_to_zero() {
+        let mut out = Vec::new();
+        for bad in [
+            vec![1.0f32, f32::NAN, -2.0],
+            vec![f32::INFINITY, 0.5],
+            vec![-1.0, f32::NEG_INFINITY],
+            vec![f32::NAN],
+        ] {
+            let scale = quantize_input_i8(&bad, &mut out);
+            assert_eq!(scale, 0.0, "input {bad:?}");
+            assert!(scale.is_finite());
+            assert_eq!(out, vec![0i8; bad.len()], "input {bad:?}");
+        }
+        // stale scratch from a previous sample is fully replaced
+        let s = quantize_input_i8(&[2.0, -2.0], &mut out);
+        assert!(s > 0.0);
+        assert_eq!(quantize_input_i8(&[f32::NAN, 1.0, 1.0], &mut out), 0.0);
+        assert_eq!(out, vec![0i8; 3]);
+    }
+
     /// The int8 row kernel is within the documented quantization bound of
     /// the exact f32 row dot: `scale/2 * sum_j |w_j|` plus f32 slack.
     #[test]
@@ -1166,5 +1518,161 @@ mod tests {
         assert!(PackedLayer::from_record(&rec).is_err());
         assert!(PackedLayer::from_record_mn(&rec, 4, 4).is_err());
         assert!(PackedLayer::from_record_mn(&rec, 4, 36).is_ok());
+    }
+
+    fn tiled_record_alphas(name: &str, m: usize, n: usize, p: usize,
+                           alphas: Vec<f32>, rng: &mut Rng) -> LayerRecord {
+        let w = rng.normal_vec(m * n, 1.0);
+        LayerRecord {
+            name: name.into(),
+            shape: vec![m, n],
+            payload: WeightPayload::Tiled { p, tile: tile_from_weights(&w, p), alphas },
+        }
+    }
+
+    #[test]
+    fn binarize_signs_matches_gamma_variant_bits() {
+        let mut rng = Rng::new(51);
+        let h = rng.normal_vec(130, 1.0);
+        let mut with_gamma = Vec::new();
+        binarize_activations(&h, &mut with_gamma);
+        let mut signs_only = vec![u64::MAX; 3]; // stale bits must be cleared
+        binarize_signs_into(&h, &mut signs_only);
+        assert_eq!(&with_gamma[..], &signs_only[..]);
+        let mut v = vec![u64::MAX; 7];
+        binarize_signs(&h, &mut v);
+        assert_eq!(with_gamma, v);
+        binarize_signs(&[], &mut v);
+        assert_eq!(v, vec![0u64]);
+    }
+
+    /// Threshold classification: uniform positive alpha folds to `Pos`
+    /// with `t = n/2 + 1`, uniform negative flips to `Neg` with
+    /// `t = (n-1)/2`, zero/NaN alphas pin to `Zero`, per-tile alpha mixes
+    /// and dense fp rows stay `Mixed` — and the export encoding is stable.
+    #[test]
+    fn int_thresholds_classify_rows() {
+        let mut rng = Rng::new(52);
+        let (m, n, p) = (6usize, 40usize, 4usize);
+        let pos = PackedLayer::from_record(
+            &tiled_record_alphas("pos", m, n, p, vec![0.5], &mut rng)).unwrap();
+        let thr = IntThresholds::from_layer(&pos);
+        assert_eq!(thr.gamma, 1.0);
+        assert!(thr.rules.iter().all(|r| *r == IntRowRule::Pos { t: 21 }));
+        assert_eq!(thr.export_i32(), vec![21; m]);
+
+        let neg = PackedLayer::from_record(
+            &tiled_record_alphas("neg", m, n, p, vec![-0.5], &mut rng)).unwrap();
+        let thr = IntThresholds::from_layer(&neg);
+        assert!(thr.rules.iter().all(|r| *r == IntRowRule::Neg { t: 19 }));
+        assert_eq!(thr.export_i32(), vec![-20; m]);
+
+        for a in [0.0f32, -0.0, f32::NAN] {
+            let z = PackedLayer::from_record(
+                &tiled_record_alphas("z", m, n, p, vec![a], &mut rng)).unwrap();
+            let thr = IntThresholds::from_layer(&z);
+            assert!(thr.rules.iter().all(|r| *r == IntRowRule::Zero), "alpha {a}");
+            assert_eq!(thr.export_i32(), vec![i32::MAX; m], "alpha {a}");
+        }
+
+        // per-tile alphas split rows mid-way (q = 60 < n*2): Mixed rows
+        let mixed = PackedLayer::from_record(
+            &tiled_record("mix", m, n, p, AlphaMode::PerTile, &mut rng)).unwrap();
+        let thr = IntThresholds::from_layer(&mixed);
+        assert!(thr.rules.contains(&IntRowRule::Mixed));
+        assert!(thr.export_i32().contains(&i32::MIN));
+
+        let dense = PackedLayer::from_record(&LayerRecord {
+            name: "fp".into(),
+            shape: vec![2, 8],
+            payload: WeightPayload::Fp(rng.normal_vec(16, 1.0)),
+        })
+        .unwrap();
+        let thr = IntThresholds::from_layer(&dense);
+        assert_eq!(thr.rules, vec![IntRowRule::Mixed; 2]);
+    }
+
+    /// Each folded row rule emits exactly the Packed path's bit: for any
+    /// positive constant gamma, `bit == (gamma * row_dot_binarized > 0)` —
+    /// across positive, negative, zero and NaN alphas, both layouts, even
+    /// and odd widths.
+    #[test]
+    fn row_rule_bit_matches_packed_sign() {
+        let mut rng = Rng::new(53);
+        for (n, p) in [(40usize, 4usize), (33, 3), (70, 7)] {
+            let m = 6usize;
+            for alphas in [vec![0.5f32], vec![-0.5], vec![0.0], vec![f32::NAN]] {
+                let rec = tiled_record_alphas("t", m, n, p, alphas.clone(), &mut rng);
+                for layout in [PackedLayout::TileResident, PackedLayout::Expanded] {
+                    let packed =
+                        PackedLayer::from_record_mn_layout(&rec, m, n, layout).unwrap();
+                    let thr = IntThresholds::from_layer(&packed);
+                    let h = rng.normal_vec(n, 1.0);
+                    let mut xw = Vec::new();
+                    binarize_signs(&h, &mut xw);
+                    for i in 0..m {
+                        let want = 1.7f32 * packed.row_dot_binarized(i, &xw) > 0.0;
+                        let got = packed.row_rule_bit_simd(thr.rules[i], i, &xw,
+                                                           SimdBackend::Scalar);
+                        assert_eq!(got, want,
+                                   "n={n} alphas={alphas:?} {layout:?} row {i}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// The bit-emitting batch kernel writes exactly the per-row rule bits
+    /// (tail bits zero), and the word-split threaded variant is bit-exact
+    /// against it at every thread count and SIMD backend, on both layouts —
+    /// with m > 64 so the output spans multiple words.
+    #[test]
+    fn batch_bits_mt_bit_exact_vs_serial() {
+        let mut rng = Rng::new(54);
+        for layout in [PackedLayout::TileResident, PackedLayout::Expanded] {
+            for mode in [AlphaMode::Single, AlphaMode::PerTile] {
+                let (m, n, p) = (70usize, 70usize, 7usize);
+                let rec = tiled_record("t", m, n, p, mode, &mut rng);
+                let packed =
+                    PackedLayer::from_record_mn_layout(&rec, m, n, layout).unwrap();
+                let thr = IntThresholds::from_layer(&packed);
+                let stride = n.div_ceil(64).max(1);
+                let stride_out = m.div_ceil(64).max(1);
+                let bsz = 5usize;
+                let mut xws = vec![0u64; bsz * stride];
+                for b in 0..bsz {
+                    let h = rng.normal_vec(n, 1.0);
+                    binarize_signs_into(&h, &mut xws[b * stride..(b + 1) * stride]);
+                }
+                let mut want = vec![u64::MAX; bsz * stride_out]; // stale bits cleared
+                packed.forward_batch_bits_simd(&thr, &xws, stride, bsz, &mut want,
+                                               stride_out, SimdBackend::Scalar);
+                for b in 0..bsz {
+                    let xw = &xws[b * stride..(b + 1) * stride];
+                    for i in 0..m {
+                        let bit = (want[b * stride_out + i / 64] >> (i % 64)) & 1 == 1;
+                        assert_eq!(bit,
+                                   packed.row_rule_bit_simd(thr.rules[i], i, xw,
+                                                            SimdBackend::Scalar),
+                                   "{layout:?} {mode:?} sample {b} row {i}");
+                    }
+                    for tail in m..stride_out * 64 {
+                        assert_eq!((want[b * stride_out + tail / 64] >> (tail % 64)) & 1,
+                                   0, "tail bit {tail}");
+                    }
+                }
+                for simd in [SimdBackend::Scalar, SimdBackend::U64x4, SimdBackend::U128,
+                             SimdBackend::Avx2] {
+                    for threads in [1usize, 2, 3, 8, 64] {
+                        let mut got = vec![u64::MAX; bsz * stride_out];
+                        packed.forward_batch_bits_mt_simd(&thr, &xws, stride, bsz,
+                                                          &mut got, stride_out,
+                                                          threads, simd);
+                        assert_eq!(got, want,
+                                   "{layout:?} {mode:?} {simd} threads={threads}");
+                    }
+                }
+            }
+        }
     }
 }

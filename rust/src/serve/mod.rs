@@ -29,7 +29,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use crate::nn::SimdBackend;
+use crate::nn::{EnginePath, SimdBackend};
 
 /// Anything that can run a batch of flat f32 samples to output vectors.
 pub trait BatchModel: Send + 'static {
@@ -124,6 +124,11 @@ pub struct ServerStats {
     /// ([`ServePolicy::simd`]) — printed in the serve stats line so a
     /// perf report always names the kernel generation it measured.
     pub simd: SimdBackend,
+    /// Execution path the served engine runs ([`ServePolicy::engine`]) —
+    /// printed in the serve stats line so a perf report always names the
+    /// path (packed vs the threshold-folded integer pipeline vs reference)
+    /// it measured.
+    pub engine: EnginePath,
 }
 
 impl ServerStats {
@@ -216,6 +221,11 @@ pub struct ServePolicy {
     /// configured via `Engine::with_simd`; keep the two in sync).
     /// Defaults to the process-wide [`SimdBackend::default`] resolution.
     pub simd: SimdBackend,
+    /// Execution path of the served engine (informational for the stats
+    /// report, like `simd` — the engine itself is built with
+    /// `Engine::with_layout_graph`/`MlpEngine::with_path`; keep the two in
+    /// sync).
+    pub engine: EnginePath,
 }
 
 impl Default for ServePolicy {
@@ -226,6 +236,7 @@ impl Default for ServePolicy {
             on_full: OverflowPolicy::Block,
             kernel_threads: 1,
             simd: SimdBackend::default(),
+            engine: EnginePath::default(),
         }
     }
 }
@@ -410,6 +421,7 @@ impl Server {
             per_worker: vec![WorkerStats::default(); n_workers],
             kernel_threads: policy.kernel_threads.max(1),
             simd: policy.simd,
+            engine: policy.engine,
             ..ServerStats::default()
         }));
         let in_dim = model.in_dim();
@@ -611,6 +623,7 @@ mod tests {
                 on_full: OverflowPolicy::Reject,
                 kernel_threads: 1,
                 simd: SimdBackend::default(),
+                engine: EnginePath::default(),
             },
             1,
         );
@@ -646,6 +659,7 @@ mod tests {
                 on_full: OverflowPolicy::Block,
                 kernel_threads: 1,
                 simd: SimdBackend::default(),
+                engine: EnginePath::default(),
             },
             2,
         ));
@@ -723,15 +737,18 @@ mod tests {
     fn kernel_threads_flow_into_stats() {
         let server = Server::start_pool_with(
             Arc::new(SumModel { dim: 1, delay: Duration::ZERO }),
-            ServePolicy { kernel_threads: 4, ..ServePolicy::default() },
+            ServePolicy { kernel_threads: 4, engine: EnginePath::PackedInt,
+                          ..ServePolicy::default() },
             2,
         );
         assert_eq!(server.stats().kernel_threads, 4);
         assert_eq!(server.stats().simd, SimdBackend::default());
+        assert_eq!(server.stats().engine, EnginePath::PackedInt);
         // the unbounded/legacy constructors report the serial default
         let legacy = Server::start(SumModel { dim: 1, delay: Duration::ZERO },
                                    BatchPolicy::default());
         assert_eq!(legacy.stats().kernel_threads, 1);
+        assert_eq!(legacy.stats().engine, EnginePath::Reference);
     }
 
     #[test]
@@ -759,6 +776,7 @@ mod tests {
                 on_full: OverflowPolicy::Block,
                 kernel_threads: 1,
                 simd: SimdBackend::default(),
+                engine: EnginePath::default(),
             },
             3,
         ));

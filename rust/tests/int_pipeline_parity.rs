@@ -1,0 +1,310 @@
+//! `PackedInt` pipeline parity (artifact-free).
+//!
+//! The threshold-folded integer path (`EnginePath::PackedInt`) replaces
+//! every hidden FC -> FC edge with packed sign bits: a row's sign test
+//! collapses into an integer popcount threshold (`nn::IntThresholds`), so
+//! the kernel never materializes f32 between binarized FC layers.  These
+//! tests pin that path three ways:
+//!
+//! 1. **Bit-exactness vs a plain-Rust integer oracle** on a ragged-width
+//!    FC chain (every width `% 64 != 0`): the oracle composes
+//!    `FcLayer::forward_int_oracle` / `forward_int_oracle_f32` — scalar
+//!    bit reads, no packed words, no SIMD, no threads — and the engine
+//!    must match it exactly on both weight layouts, every `SimdBackend`,
+//!    and every thread count, single-sample and batched alike.
+//! 2. **Edge-case rules pinned at the engine level**: a layer whose alphas
+//!    are all negative classifies every row `Neg` (flipped comparison) and
+//!    one with alpha 0 classifies `Zero` (constant-0 bits), both still
+//!    bit-exact against the oracle, with the microcontroller `export_i32`
+//!    encodings checked alongside.
+//! 3. **Argmax agreement vs `Packed`** on the lowered `cnn_micro` conv
+//!    graph and the `vit_micro` transformer with calibrated gammas: conv /
+//!    attention boundaries genuinely move (a per-layer constant replaces
+//!    the data-dependent XNOR-Net scale), so the gate is prediction
+//!    agreement, not bit equality.
+//!
+//! `SimdBackend::Avx2` is safe to list everywhere: `with_simd` clamps to
+//! the detected best off-AVX2 hosts (see `tests/simd_parity.rs`).
+
+use tiledbits::arch;
+use tiledbits::nn::{lower_arch_spec, Engine, EnginePath, IntRowRule, LowerOptions,
+                    MlpEngine, Node, Nonlin, PackedLayout, SimdBackend};
+use tiledbits::tbn::{alphas_from, tile_from_weights, AlphaMode, LayerRecord,
+                     TbnzModel, WeightPayload};
+use tiledbits::util::Rng;
+
+const ALL_BACKENDS: [SimdBackend; 4] = [SimdBackend::Scalar, SimdBackend::U64x4,
+                                        SimdBackend::U128, SimdBackend::Avx2];
+const LAYOUTS: [PackedLayout; 2] = [PackedLayout::TileResident,
+                                    PackedLayout::Expanded];
+const THREAD_SWEEP: [usize; 4] = [1, 2, 4, 8];
+
+fn tiled_layer(rng: &mut Rng, name: &str, m: usize, n: usize, p: usize)
+               -> LayerRecord {
+    let w = rng.normal_vec(m * n, 1.0);
+    LayerRecord {
+        name: name.into(),
+        shape: vec![m, n],
+        payload: WeightPayload::Tiled {
+            p,
+            tile: tile_from_weights(&w, p),
+            alphas: alphas_from(&w, p, AlphaMode::PerTile),
+        },
+    }
+}
+
+/// A tiled layer with caller-pinned alphas (a single alpha covers the whole
+/// layer) — how the negative- and zero-scale rule classes are forced.
+fn tiled_layer_alpha(rng: &mut Rng, name: &str, m: usize, n: usize, p: usize,
+                     alpha: f32) -> LayerRecord {
+    let w = rng.normal_vec(m * n, 1.0);
+    LayerRecord {
+        name: name.into(),
+        shape: vec![m, n],
+        payload: WeightPayload::Tiled {
+            p,
+            tile: tile_from_weights(&w, p),
+            alphas: vec![alpha],
+        },
+    }
+}
+
+/// Ragged FC chain (70 -> 90 -> 70 -> 33 -> 3): every width `% 64 != 0`, so
+/// each bit buffer carries a partial tail word, and the 70-row hidden layer
+/// spans two output words (the word-split threading engages).
+fn ragged_model() -> TbnzModel {
+    let mut rng = Rng::new(0x1A7B);
+    TbnzModel {
+        layers: vec![
+            tiled_layer(&mut rng, "fc0", 90, 70, 5),
+            tiled_layer(&mut rng, "fc1", 70, 90, 5),
+            tiled_layer(&mut rng, "fc2", 33, 70, 3),
+            tiled_layer(&mut rng, "head", 3, 33, 3),
+        ],
+    }
+}
+
+/// Plain-Rust composition of the integer pipeline over an FC chain: the
+/// entry layer runs the f32 reference, hidden packed layers run the scalar
+/// threshold oracle over sign bools, f32 boundaries emit `gamma * acc` —
+/// no packed words anywhere.  Thresholds and gammas are read back from the
+/// engine so a calibrated engine is compared against its own constants.
+fn oracle_chain(engine: &Engine, x: &[f32]) -> Vec<f32> {
+    enum Val {
+        F32(Vec<f32>),
+        Bits(Vec<bool>),
+    }
+    let n = engine.graph().len();
+    let mut cur = Val::F32(x.to_vec());
+    for idx in 0..n {
+        let Node::Fc(fc) = engine.node(idx) else {
+            panic!("oracle_chain only walks FC chains")
+        };
+        let relu = idx + 1 < n; // Nonlin::Relu everywhere but the head
+        cur = match (engine.packed_layer(idx), engine.int_thresholds(idx)) {
+            (Some(p), Some(thr)) => {
+                let x_pos: Vec<bool> = match &cur {
+                    Val::F32(h) => h.iter().map(|&v| v > 0.0).collect(),
+                    Val::Bits(b) => b.clone(),
+                };
+                if engine.emits_bits(idx) {
+                    Val::Bits(fc.forward_int_oracle(p, thr, &x_pos))
+                } else {
+                    Val::F32(fc.forward_int_oracle_f32(p, thr, &x_pos, relu))
+                }
+            }
+            _ => {
+                let Val::F32(h) = &cur else {
+                    panic!("bits never flow into a non-packed node")
+                };
+                Val::F32(fc.forward_reference(h, relu))
+            }
+        };
+    }
+    match cur {
+        Val::F32(y) => y,
+        Val::Bits(_) => panic!("the output node never emits bits"),
+    }
+}
+
+fn argmax(y: &[f32]) -> usize {
+    y.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+/// The integer path is bit-exact against the plain-Rust oracle on the
+/// ragged chain: both layouts, every SIMD backend, every thread count,
+/// per-sample and batched.  Also pins the bit-edge plan the constructor
+/// derived: hidden packed FCs emit bits, the entry layer and head do not.
+#[test]
+fn int_path_bit_exact_vs_integer_oracle_on_ragged_chain() {
+    let model = ragged_model();
+    let mut rng = Rng::new(0x515);
+    let xs: Vec<Vec<f32>> = (0..5).map(|_| rng.normal_vec(70, 1.0)).collect();
+    for layout in LAYOUTS {
+        let base = MlpEngine::with_path_layout(model.clone(), Nonlin::Relu,
+                                               EnginePath::PackedInt, layout)
+            .unwrap();
+        let e = base.engine();
+        assert!(!e.emits_bits(0), "{layout:?}: the entry layer is f32");
+        assert!(e.emits_bits(1) && e.emits_bits(2),
+                "{layout:?}: hidden packed FCs must emit bits");
+        assert!(!e.emits_bits(3), "{layout:?}: the head emits logits");
+        let want: Vec<Vec<f32>> = xs.iter().map(|x| oracle_chain(e, x)).collect();
+        for backend in ALL_BACKENDS {
+            for threads in THREAD_SWEEP {
+                let engine = MlpEngine::with_path_layout(
+                    model.clone(), Nonlin::Relu, EnginePath::PackedInt, layout)
+                    .unwrap()
+                    .with_threads(threads)
+                    .with_simd(backend);
+                for (s, x) in xs.iter().enumerate() {
+                    assert_eq!(engine.forward(x), want[s],
+                               "{layout:?} {backend} threads={threads} sample {s}");
+                }
+                assert_eq!(engine.forward_batch(&xs), want,
+                           "{layout:?} {backend} threads={threads} batched");
+            }
+        }
+    }
+}
+
+/// Calibration only moves f32 boundaries: hidden bits are invariant under
+/// any positive constant gamma, so a calibrated engine still matches the
+/// oracle (which reads the calibrated constants back from the engine).
+#[test]
+fn calibrated_engine_still_matches_oracle() {
+    let model = ragged_model();
+    let mut rng = Rng::new(0x516);
+    let xs: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(70, 1.0)).collect();
+    for layout in LAYOUTS {
+        let engine = MlpEngine::with_path_layout(model.clone(), Nonlin::Relu,
+                                                 EnginePath::PackedInt, layout)
+            .unwrap()
+            .calibrate_int_gammas(&xs);
+        let e = engine.engine();
+        let head = e.graph().len() - 1;
+        let thr = e.int_thresholds(head).unwrap();
+        assert!(thr.gamma.is_finite() && thr.gamma > 0.0 && thr.gamma != 1.0,
+                "{layout:?}: calibration must move the head gamma (got {})",
+                thr.gamma);
+        for (s, x) in xs.iter().enumerate() {
+            assert_eq!(engine.forward(x), oracle_chain(e, x),
+                       "{layout:?} calibrated sample {s}");
+        }
+    }
+}
+
+/// Negative- and zero-scale layers at the engine level: every row of the
+/// all-negative layer folds to `Neg` (flipped comparison), every row of
+/// the zero-alpha layer folds to `Zero` (constant-0 bits), the `export_i32`
+/// encodings match the documented scheme, and the whole chain stays
+/// bit-exact against the oracle on both layouts at several thread counts.
+#[test]
+fn negative_and_zero_scale_rows_pinned() {
+    let mut rng = Rng::new(0xA1FA);
+    let model = TbnzModel {
+        layers: vec![
+            tiled_layer(&mut rng, "fc0", 48, 40, 4),
+            tiled_layer_alpha(&mut rng, "neg", 72, 48, 4, -0.5),
+            tiled_layer_alpha(&mut rng, "zero", 40, 72, 4, 0.0),
+            tiled_layer(&mut rng, "head", 3, 40, 4),
+        ],
+    };
+    let mut xrng = Rng::new(0xA1FB);
+    let xs: Vec<Vec<f32>> = (0..4).map(|_| xrng.normal_vec(40, 1.0)).collect();
+    for layout in LAYOUTS {
+        let base = MlpEngine::with_path_layout(model.clone(), Nonlin::Relu,
+                                               EnginePath::PackedInt, layout)
+            .unwrap();
+        let e = base.engine();
+        assert!(e.emits_bits(1) && e.emits_bits(2),
+                "{layout:?}: both interior layers feed packed FCs");
+        let neg = e.int_thresholds(1).unwrap();
+        assert!(neg.rules.iter().all(|r| matches!(r, IntRowRule::Neg { .. })),
+                "{layout:?}: uniform negative alpha must fold every row Neg");
+        assert!(neg.export_i32().iter().all(|&v| v <= -1),
+                "{layout:?}: Neg rows export as -t-1 <= -1");
+        let zero = e.int_thresholds(2).unwrap();
+        assert!(zero.rules.iter().all(|r| matches!(r, IntRowRule::Zero)),
+                "{layout:?}: alpha 0 must fold every row Zero");
+        assert!(zero.export_i32().iter().all(|&v| v == i32::MAX),
+                "{layout:?}: Zero rows export the unreachable i32::MAX");
+        // Zero rows emit constant-0 bits: the oracle sees the head reading
+        // an all-false sign vector, and the engine must agree exactly.
+        for threads in THREAD_SWEEP {
+            let engine = MlpEngine::with_path_layout(
+                model.clone(), Nonlin::Relu, EnginePath::PackedInt, layout)
+                .unwrap()
+                .with_threads(threads);
+            for (s, x) in xs.iter().enumerate() {
+                assert_eq!(engine.forward(x), oracle_chain(e, x),
+                           "{layout:?} threads={threads} sample {s}");
+            }
+            assert_eq!(engine.forward_batch(&xs),
+                       xs.iter().map(|x| oracle_chain(e, x)).collect::<Vec<_>>(),
+                       "{layout:?} threads={threads} batched");
+        }
+    }
+}
+
+fn lowered(name: &str) -> (tiledbits::nn::Graph, usize) {
+    let (spec, input) = match name {
+        "cnn_micro" => (arch::cnn_micro(), (3usize, 16usize, 16usize)),
+        "vit_micro" => {
+            let s = arch::vit_micro();
+            let input = s.native_input().expect("vit_micro input shape");
+            (s, input)
+        }
+        other => panic!("unknown spec {other}"),
+    };
+    let opts = LowerOptions { input, p: 4, alpha_mode: AlphaMode::PerTile, seed: 7 };
+    let graph = lower_arch_spec(&spec, &opts).unwrap();
+    (graph, input.0 * input.1 * input.2)
+}
+
+/// Argmax-agreement sweep vs `Packed` on the lowered `cnn_micro` conv graph
+/// and the `vit_micro` transformer, gammas calibrated on the eval samples.
+/// Conv and attention boundaries replace data-dependent per-patch /
+/// per-token gammas with one calibrated constant per layer, so logits move;
+/// predictions must still agree on at least 70% of samples (the same gate
+/// the int8 entry path uses).  Calibration itself must have engaged: at
+/// least one packed layer's gamma moved off the 1.0 default, and every
+/// gamma stays finite and positive.
+#[test]
+fn argmax_agreement_on_cnn_and_vit_micro() {
+    for name in ["cnn_micro", "vit_micro"] {
+        let (graph, in_len) = lowered(name);
+        let mut rng = Rng::new(61);
+        let xs: Vec<Vec<f32>> = (0..12).map(|_| rng.normal_vec(in_len, 1.0)).collect();
+        let packed = Engine::with_layout_graph(graph.clone(), Nonlin::Relu,
+                                               EnginePath::Packed,
+                                               PackedLayout::TileResident)
+            .unwrap();
+        let int = Engine::with_layout_graph(graph, Nonlin::Relu,
+                                            EnginePath::PackedInt,
+                                            PackedLayout::TileResident)
+            .unwrap()
+            .calibrate_int_gammas(&xs);
+        let gammas: Vec<f32> = (0..int.graph().len())
+            .filter_map(|i| int.int_thresholds(i))
+            .map(|thr| thr.gamma)
+            .collect();
+        assert!(!gammas.is_empty(), "{name}: expected packed layers");
+        assert!(gammas.iter().all(|g| g.is_finite() && *g > 0.0),
+                "{name}: calibrated gammas must stay finite and positive \
+                 ({gammas:?})");
+        assert!(gammas.iter().any(|g| *g != 1.0),
+                "{name}: calibration must move at least one gamma off the \
+                 1.0 default ({gammas:?})");
+        let n = xs.len();
+        let agree = xs
+            .iter()
+            .filter(|x| argmax(&packed.forward(x)) == argmax(&int.forward(x)))
+            .count();
+        assert!(agree * 10 >= n * 7, "{name}: argmax agreement {agree}/{n}");
+    }
+}
