@@ -1,0 +1,108 @@
+//! Serving bench: open-loop load against the network front end.
+//!
+//! Boots the full production serving path in-process — `ModelRegistry` +
+//! `NetServer` on `127.0.0.1:0` over a packed micro-MLP worker pool — and
+//! drives it with the in-crate Poisson load generator at a ladder of
+//! offered rates.  Reports per-rate completed/rejected counts, p50/p95/p99
+//! latency (measured from the scheduled arrival, so client-side queueing
+//! under overload is charged to the server), and the saturation throughput
+//! across the sweep.  `--json` writes the machine-readable
+//! `BENCH_serve.json` (grep-gated in CI next to `BENCH_table2/table6`).
+//!
+//! Artifact-free and short: the model is seeded like the engine unit
+//! tests, rates/durations are sized for a CI smoke run
+//! (`cargo bench --bench table_serve`), not a steady-state soak.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use tiledbits::bench_util::header;
+use tiledbits::nn::{EnginePath, MlpEngine, Nonlin, SimdBackend};
+use tiledbits::serve::{loadgen, BatchPolicy, LoadgenConfig, ModelRegistry, NetServer,
+                       OverflowPolicy, ServePolicy, Server};
+use tiledbits::tbn::{alphas_from, tile_from_weights, AlphaMode, LayerRecord,
+                     TbnzModel, WeightPayload};
+use tiledbits::util::Rng;
+
+/// The deployment micro MLP (256 -> 128 -> 10), fully tiled at p=4.
+fn micro_model() -> TbnzModel {
+    let p = 4usize;
+    let mut r = Rng::new(42);
+    let mk = |name: &str, m: usize, n: usize, r: &mut Rng| {
+        let w: Vec<f32> = r.normal_vec(m * n, 1.0);
+        LayerRecord {
+            name: name.into(),
+            shape: vec![m, n],
+            payload: WeightPayload::Tiled {
+                p,
+                tile: tile_from_weights(&w, p),
+                alphas: alphas_from(&w, p, AlphaMode::PerTile),
+            },
+        }
+    };
+    TbnzModel { layers: vec![mk("fc0", 128, 256, &mut r), mk("head", 10, 128, &mut r)] }
+}
+
+fn main() {
+    let json_mode = std::env::args().any(|a| a == "--json");
+    let simd = SimdBackend::default();
+    header("Serving: open-loop load vs the network front end (micro MLP)");
+    println!("packed kernels run the {simd} xnor-popcount backend");
+
+    let engine =
+        MlpEngine::with_path(micro_model(), Nonlin::Relu, EnginePath::Packed).unwrap();
+    let policy = ServePolicy {
+        batch: BatchPolicy { max_batch: 32, window: Duration::from_micros(200) },
+        queue_cap: 256,
+        // shed under overload so the saturation sweep measures the server,
+        // not a convoy of blocked submitters
+        on_full: OverflowPolicy::Reject,
+        kernel_threads: 1,
+        simd,
+        engine: EnginePath::Packed,
+    };
+    let workers = 2usize;
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register("micro", Server::start_pool_with(Arc::new(engine), policy, workers));
+    let net = NetServer::start(registry, "127.0.0.1:0", None).expect("bind loopback");
+    let addr = net.addr().to_string();
+    println!("serving micro on {addr} ({workers} workers, queue cap 256, reject)");
+
+    let base = LoadgenConfig {
+        addr,
+        model: "micro".into(),
+        duration: Duration::from_millis(600),
+        conns: 4,
+        seed: 9,
+        ..LoadgenConfig::default()
+    };
+    let rates = [500.0, 2000.0, 8000.0];
+    let reports = loadgen::sweep(&base, &rates).expect("loadgen sweep");
+
+    println!("\n{:>12} {:>8} {:>10} {:>10} {:>12} {:>9} {:>9} {:>9}", "offered_rps",
+             "sent", "completed", "rejected", "achieved_rps", "p50_us", "p95_us",
+             "p99_us");
+    for r in &reports {
+        println!("{:>12.0} {:>8} {:>10} {:>10} {:>12.1} {:>9} {:>9} {:>9}",
+                 r.offered_rps, r.sent, r.completed, r.rejected, r.achieved_rps,
+                 r.p50_us, r.p95_us, r.p99_us);
+    }
+    let saturation = loadgen::saturation_rps(&reports);
+    println!("\nsaturation throughput: {saturation:.1} req/s (max achieved across the \
+              sweep)");
+
+    if json_mode {
+        let doc = loadgen::sweep_to_json(&reports);
+        let path = "BENCH_serve.json";
+        std::fs::write(path, doc.to_string_pretty()).expect("write BENCH_serve.json");
+        println!("wrote {path}");
+    }
+
+    // graceful drain: every accepted request completed before this returns
+    let final_stats = net.shutdown();
+    for (name, generation, s) in final_stats {
+        println!("final model={name} generation={generation} served={} rejected={}",
+                 s.served, s.rejected);
+    }
+    println!("drain: complete");
+}

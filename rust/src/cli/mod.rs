@@ -82,6 +82,17 @@ COMMANDS:
                             PointNets, and the transformers vit_cifar /
                             tst_electricity / tst_weather / mlpmixer_cifar
                             plus the vit_micro / tst_micro / mixer_micro minis
+  serve --listen <h:p>      network front end: HTTP/1.1 over TCP serving every
+                            --arch name (comma-separated) from one process.
+                            POST /infer {\"model\",\"x\"}; POST /reload hot-swaps
+                            a model in place; GET /models | /stats | /healthz.
+                            Full queues shed load as 503 (--overflow reject);
+                            SIGTERM (or --duration-s) drains gracefully and
+                            prints final per-model stats + `drain: complete`
+  loadgen --addr <h:p>      open-loop Poisson load generator against a running
+                            serve --listen: measures p50/p95/p99 latency from
+                            the scheduled arrival time (coordinated-omission
+                            free) and saturation throughput over --rates
 
 OPTIONS:
   --artifacts <dir>         artifact directory            [default: artifacts]
@@ -107,6 +118,20 @@ OPTIONS:
   --workers <n>             serve worker threads          [default: 2]
   --queue-cap <n>           serve queue bound             [default: 1024]
   --overflow <policy>       full-queue behavior: block|reject [default: block]
+  --max-batch <n>           dynamic batching cap          [default: 32]
+  --window-us <n>           batching window in us         [default: 200]
+  --addr-file <path>        serve --listen: write the bound host:port (the
+                            resolved ephemeral port with --listen host:0)
+  --duration-s <secs>       serve --listen: exit after this long (otherwise
+                            runs until SIGTERM/SIGINT); loadgen: seconds of
+                            offered load per rate        [default: 2]
+  --addr <host:port>        loadgen: target server        (required)
+  --model <name>            loadgen: target model   [default: the sole model]
+  --rate <rps>              loadgen: offered arrival rate [default: 200]
+  --rates <r1,r2,...>       loadgen: sweep these rates and report the
+                            saturation throughput across them
+  --conns <n>               loadgen: client connections   [default: 4]
+  --json <path>             loadgen: write BENCH_serve.json-style report
   --quiet                   errors only
 ";
 

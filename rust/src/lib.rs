@@ -63,7 +63,22 @@
 //!   `serve::Server::start_pool` shares one packed model across N batching
 //!   workers behind a bounded queue (`serve::ServePolicy`: reject-or-block
 //!   backpressure, per-worker counters, nearest-rank p50/p95/p99 latency
-//!   report).  Both packed paths also thread *within* one forward:
+//!   report).  The pools serve real traffic through the network front end
+//!   (`tbn serve --listen`): `serve::NetServer` speaks minimal HTTP/1.1
+//!   over `std::net` (no HTTP crate) in front of a `serve::ModelRegistry`
+//!   holding many named models in one process — `O(q)` tile residency is
+//!   what makes multi-model serving cheap — with `Arc`-swap hot model
+//!   replacement (`POST /reload`; in-flight requests finish on the model
+//!   they resolved), load shedding as `503` under `OverflowPolicy::Reject`,
+//!   and graceful drain on SIGTERM/shutdown (stop accepting, complete
+//!   every accepted request, emit final per-model stats).  `serve::loadgen`
+//!   (`tbn loadgen`, `benches/table_serve.rs`) drives it open-loop with
+//!   Poisson arrivals, measuring p50/p95/p99 from the scheduled arrival
+//!   time (coordinated-omission-free) and saturation throughput
+//!   (`BENCH_serve.json`); `tests/net_serving.rs` pins wire parity —
+//!   an HTTP answer is bit-identical to `Engine::forward` — plus
+//!   shedding, torn-model-free swaps, and drain completeness.
+//!   Both packed paths also thread *within* one forward:
 //!   `Engine::with_threads` (CLI `--threads`, env `TBN_THREADS`) splits the
 //!   independent output rows / conv positions of each packed kernel across
 //!   scoped std threads writing disjoint output slices, leaving every

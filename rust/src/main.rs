@@ -3,7 +3,10 @@
 
 use anyhow::{anyhow, Result};
 
+use std::net::SocketAddr;
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use tiledbits::arch;
 use tiledbits::cli::{Cli, USAGE};
@@ -13,7 +16,9 @@ use tiledbits::nn::{init_backend, lower_arch_spec, threads_from_env, Engine,
                     EnginePath, LowerOptions, MlpEngine, Nonlin, PackedLayout,
                     SimdBackend};
 use tiledbits::runtime::Runtime;
-use tiledbits::serve::{BatchPolicy, OverflowPolicy, ServePolicy, Server, ServerStats};
+use tiledbits::serve::{install_shutdown_flag, loadgen, BatchPolicy, LoadgenConfig,
+                       ModelBuilder, ModelRegistry, NetServer, OverflowPolicy,
+                       ServePolicy, Server, ServerStats};
 use tiledbits::tbn::AlphaMode;
 use tiledbits::train::{export, TrainOptions};
 use tiledbits::util::{log, Rng};
@@ -90,19 +95,58 @@ fn simd_opt(cli: &Cli) -> Result<SimdBackend> {
     }
 }
 
+/// Loud integer flag (mirrors `--layout`/`--simd`): a typo must not
+/// silently fall back to the default.
+fn usize_flag(cli: &Cli, key: &str, default: usize, min: usize) -> Result<usize> {
+    match cli.opt(key) {
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) if n >= min => Ok(n),
+            _ => Err(anyhow!("invalid --{key} {v:?} (want an integer >= {min})")),
+        },
+        None => Ok(default),
+    }
+}
+
+/// Loud positive-float flag (loadgen rates and durations).
+fn f64_flag(cli: &Cli, key: &str, default: f64) -> Result<f64> {
+    match cli.opt(key) {
+        Some(v) => match v.parse::<f64>() {
+            Ok(x) if x > 0.0 && x.is_finite() => Ok(x),
+            _ => Err(anyhow!("invalid --{key} {v:?} (want a positive number)")),
+        },
+        None => Ok(default),
+    }
+}
+
+/// `--listen <host:port>`, parsed loudly (`127.0.0.1:0` asks the kernel
+/// for an ephemeral port; the bound address is printed and optionally
+/// written to `--addr-file`).
+fn listen_addr_opt(cli: &Cli) -> Result<Option<SocketAddr>> {
+    match cli.opt("listen") {
+        Some(v) => v.parse::<SocketAddr>().map(Some).map_err(|_| {
+            anyhow!("invalid --listen {v:?} (want host:port, e.g. 127.0.0.1:8080)")
+        }),
+        None => Ok(None),
+    }
+}
+
 fn serve_policy_opt(cli: &Cli, kernel_threads: usize, simd: SimdBackend,
-                    engine: EnginePath) -> ServePolicy {
-    ServePolicy {
-        batch: BatchPolicy::default(),
-        queue_cap: cli.opt_usize("queue-cap").unwrap_or(1024),
+                    engine: EnginePath) -> Result<ServePolicy> {
+    Ok(ServePolicy {
+        batch: BatchPolicy {
+            max_batch: usize_flag(cli, "max-batch", 32, 1)?,
+            window: Duration::from_micros(usize_flag(cli, "window-us", 200, 0)? as u64),
+        },
+        queue_cap: usize_flag(cli, "queue-cap", 1024, 1)?,
         on_full: match cli.opt_or("overflow", "block") {
             "reject" => OverflowPolicy::Reject,
-            _ => OverflowPolicy::Block,
+            "block" => OverflowPolicy::Block,
+            other => return Err(anyhow!("unknown --overflow {other:?} (block|reject)")),
         },
         kernel_threads,
         simd,
         engine,
-    }
+    })
 }
 
 fn print_serve_stats(stats: &ServerStats, elapsed_s: f64) {
@@ -158,7 +202,7 @@ fn serve_arch(cli: &Cli, name: &str) -> Result<()> {
         .with_simd(simd);
     let (in_dim, out_dim) = (engine.in_len(), engine.out_len());
     let workers = cli.opt_usize("workers").unwrap_or(2);
-    let policy = serve_policy_opt(cli, threads, simd, path);
+    let policy = serve_policy_opt(cli, threads, simd, path)?;
     info!("serve", "{name}: natively lowered graph ({} nodes), {path:?} engine \
            ({layout:?} weights, {threads} kernel thread(s), {simd} kernels), \
            {workers} workers, queue cap {} ({:?}), {} resident weight bytes",
@@ -197,6 +241,99 @@ fn serve_arch(cli: &Cli, name: &str) -> Result<()> {
             .map_err(|e| anyhow!(e))?;
     }
     print_serve_stats(&server.stats(), t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+/// Lower `name` natively and wrap it in a worker pool — the unit the
+/// model registry holds and `POST /reload` rebuilds (with a fresh seed)
+/// for hot swaps.
+#[allow(clippy::too_many_arguments)]
+fn build_arch_server(name: &str, seed: u64, p: usize, path: EnginePath,
+                     layout: PackedLayout, threads: usize, simd: SimdBackend,
+                     policy: &ServePolicy, workers: usize) -> Result<Server, String> {
+    let spec = arch::any_arch_by_name(name)
+        .ok_or_else(|| format!("unknown architecture {name:?}"))?;
+    let input = spec
+        .native_input()
+        .ok_or_else(|| format!("{name}: cannot infer the native input shape"))?;
+    let lopts = LowerOptions { input, p, alpha_mode: AlphaMode::PerTile, seed };
+    let graph = lower_arch_spec(&spec, &lopts)?;
+    let engine = Engine::with_layout_graph(graph, Nonlin::Relu, path, layout)?
+        .with_threads(threads)
+        .with_simd(simd);
+    Ok(Server::start_pool_with(Arc::new(engine), policy.clone(), workers))
+}
+
+/// `tbn serve --listen <host:port>`: the production front end.  Registers
+/// every `--arch` name (comma-separated) as a served model, accepts HTTP
+/// traffic until SIGTERM/SIGINT (or `--duration-s`), then drains
+/// gracefully and prints final per-model stats plus `drain: complete` —
+/// the lines the serve-e2e CI job greps.
+fn serve_listen(cli: &Cli, addr: SocketAddr) -> Result<()> {
+    let archs: Vec<String> = cli
+        .opt_or("arch", "cnn_micro")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if archs.is_empty() {
+        return Err(anyhow!("--arch gave no model names"));
+    }
+    let p = usize_flag(cli, "p", 4, 1)?;
+    let path = engine_path_opt(cli);
+    let layout = packed_layout_opt(cli)?;
+    let threads = threads_opt(cli)?;
+    let simd = init_backend(simd_opt(cli)?);
+    let workers = usize_flag(cli, "workers", 2, 1)?;
+    let policy = serve_policy_opt(cli, threads, simd, path)?;
+    let seed = cli.opt_usize("seed").map(|s| s as u64).unwrap_or(0);
+    let duration_s = match cli.opt("duration-s") {
+        Some(_) => Some(f64_flag(cli, "duration-s", 0.0)?),
+        None => None,
+    };
+    let registry = Arc::new(ModelRegistry::new());
+    for name in &archs {
+        let server =
+            build_arch_server(name, seed, p, path, layout, threads, simd, &policy, workers)
+                .map_err(|e| anyhow!(e))?;
+        info!("serve", "{name}: registered (in_dim {}, {path:?} engine, {layout:?} \
+               weights, {workers} workers, queue cap {} ({:?}))",
+              server.in_dim(), policy.queue_cap, policy.on_full);
+        registry.register(name, server);
+    }
+    let builder_policy = policy.clone();
+    let builder: ModelBuilder = Arc::new(move |name: &str, seed: u64| {
+        build_arch_server(name, seed, p, path, layout, threads, simd, &builder_policy,
+                          workers)
+    });
+    let net = NetServer::start(registry, &addr.to_string(), Some(builder))
+        .map_err(|e| anyhow!(e))?;
+    let bound = net.addr();
+    // machine-readable: resolves `:0` to the real port for scripts/CI
+    println!("listening on {bound}");
+    if let Some(file) = cli.opt("addr-file") {
+        std::fs::write(file, format!("{bound}\n"))
+            .map_err(|e| anyhow!("write {file}: {e}"))?;
+    }
+    let stop = install_shutdown_flag();
+    let deadline = duration_s.map(|s| Instant::now() + Duration::from_secs_f64(s));
+    while !stop.load(Ordering::SeqCst)
+        && !deadline.is_some_and(|d| Instant::now() >= d)
+    {
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    info!("serve", "shutdown requested: draining");
+    for (name, generation, s) in net.shutdown() {
+        let tail = s
+            .latency_percentiles()
+            .map(|lp| format!(" p50_us={} p95_us={} p99_us={}", lp.p50_us, lp.p95_us,
+                              lp.p99_us))
+            .unwrap_or_default();
+        println!("final model={name} generation={generation} served={} rejected={} \
+                  mean_latency_us={:.0}{tail}",
+                 s.served, s.rejected, s.mean_latency_us());
+    }
+    println!("drain: complete");
     Ok(())
 }
 
@@ -291,6 +428,11 @@ fn dispatch(cli: &Cli) -> Result<()> {
             Ok(())
         }
         "serve" => {
+            // --listen <host:port>: the production network front end
+            // (model registry, load shedding, graceful drain)
+            if let Some(addr) = listen_addr_opt(cli)? {
+                return serve_listen(cli, addr);
+            }
             // --arch <name>: the artifact-free native-lowering path (any
             // spec `nn::lower_arch_spec` accepts, incl. the transformers)
             if let Some(name) = cli.opt("arch") {
@@ -311,7 +453,7 @@ fn dispatch(cli: &Cli) -> Result<()> {
             let threads = threads_opt(cli)?;
             let simd = init_backend(simd_opt(cli)?);
             let workers = cli.opt_usize("workers").unwrap_or(2);
-            let policy = serve_policy_opt(cli, threads, simd, path);
+            let policy = serve_policy_opt(cli, threads, simd, path)?;
             let engine = MlpEngine::with_path_layout(tbnz, Nonlin::Relu, path, layout)
                 .map_err(|e| anyhow!(e))?
                 .with_threads(threads)
@@ -352,6 +494,50 @@ fn dispatch(cli: &Cli) -> Result<()> {
                     .map_err(|e| anyhow!(e))?;
             }
             print_serve_stats(&server.stats(), t0.elapsed().as_secs_f64());
+            Ok(())
+        }
+        "loadgen" => {
+            let addr = cli
+                .opt("addr")
+                .ok_or_else(|| anyhow!("loadgen needs --addr <host:port>"))?;
+            let base = LoadgenConfig {
+                addr: addr.to_string(),
+                model: cli.opt_or("model", "").to_string(),
+                rate_rps: f64_flag(cli, "rate", 200.0)?,
+                duration: Duration::from_secs_f64(f64_flag(cli, "duration-s", 2.0)?),
+                conns: usize_flag(cli, "conns", 4, 1)?,
+                seed: cli.opt_usize("seed").unwrap_or(1) as u64,
+            };
+            // --rates 100,400,1600 sweeps; --rate alone is a 1-point sweep
+            let rates: Vec<f64> = match cli.opt("rates") {
+                Some(list) => {
+                    let mut v = Vec::new();
+                    for part in list.split(',') {
+                        let part = part.trim();
+                        let r = part
+                            .parse::<f64>()
+                            .ok()
+                            .filter(|x| *x > 0.0 && x.is_finite())
+                            .ok_or_else(|| {
+                                anyhow!("invalid --rates entry {part:?} \
+                                         (want positive numbers, comma-separated)")
+                            })?;
+                        v.push(r);
+                    }
+                    v
+                }
+                None => vec![base.rate_rps],
+            };
+            let reports = loadgen::sweep(&base, &rates).map_err(|e| anyhow!(e))?;
+            for r in &reports {
+                println!("{}", r.summary());
+            }
+            println!("loadgen saturation_rps={:.1}", loadgen::saturation_rps(&reports));
+            if let Some(out) = cli.opt("json") {
+                std::fs::write(out, loadgen::sweep_to_json(&reports).to_string_pretty())
+                    .map_err(|e| anyhow!("write {out}: {e}"))?;
+                info!("loadgen", "wrote {out}");
+            }
             Ok(())
         }
         "" | "help" => {

@@ -1,0 +1,462 @@
+//! Open-loop load generator for the network serving front end.
+//!
+//! "Heavy traffic" is a number, not a vibe: this module offers requests to
+//! a running [`net::NetServer`](super::net::NetServer) at a configured
+//! arrival rate and measures what comes back.  The arrival process is
+//! open-loop Poisson-ish: each client connection draws exponential
+//! inter-arrival gaps (rate `rate_rps / conns` per connection) and fires on
+//! that schedule *regardless of completions*.  When the server (or the
+//! connection) falls behind, the next request goes out late — and its
+//! latency is measured **from the scheduled arrival time**, not from the
+//! send, so queueing the client was forced into is charged to the server
+//! (the standard correction for coordinated omission; a closed-loop
+//! measurement would silently pace itself to the server and report
+//! flattering tails).
+//!
+//! Each report carries completed/rejected/error counts, nearest-rank
+//! p50/p95/p99 latency, and achieved throughput.  [`sweep`] runs a rate
+//! ladder and [`saturation_rps`] reads off the knee: the highest achieved
+//! throughput across offered rates — the saturation number `tbn loadgen`
+//! and `benches/table_serve.rs` report and `BENCH_serve.json` records.
+//!
+//! The HTTP client side is the mirror of `net.rs`'s server framing: one
+//! keep-alive connection per client thread, `POST /infer` with a
+//! single-line JSON body, status + `Content-Length` response parsing.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::util::{Json, Rng};
+
+/// One load-generation run's shape.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Server address, `host:port`.
+    pub addr: String,
+    /// Model to target; empty targets the server's sole model.
+    pub model: String,
+    /// Offered arrival rate, requests/s across all connections.
+    pub rate_rps: f64,
+    /// How long to offer load.
+    pub duration: Duration,
+    /// Client connections (each is one serial keep-alive HTTP client).
+    pub conns: usize,
+    /// RNG seed for arrival gaps and request payloads.
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            addr: String::new(),
+            model: String::new(),
+            rate_rps: 200.0,
+            duration: Duration::from_secs(2),
+            conns: 4,
+            seed: 1,
+        }
+    }
+}
+
+/// What one run measured.
+#[derive(Debug, Clone)]
+pub struct LoadgenReport {
+    pub model: String,
+    pub offered_rps: f64,
+    /// Requests actually fired (schedule slots that fit in the window).
+    pub sent: usize,
+    /// `200` answers.
+    pub completed: usize,
+    /// `503` sheds (the server's load shedding working as intended).
+    pub rejected: usize,
+    /// Transport/HTTP failures (connect refused, truncated responses, 4xx).
+    pub errors: usize,
+    pub elapsed_s: f64,
+    /// Completed requests per second of wall time.
+    pub achieved_rps: f64,
+    /// Nearest-rank percentiles over completed requests' latencies,
+    /// measured from the *scheduled* arrival (µs).  Zero when nothing
+    /// completed.
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+}
+
+impl LoadgenReport {
+    /// The one-line machine-greppable summary `tbn loadgen` prints.
+    pub fn summary(&self) -> String {
+        format!(
+            "loadgen model={} offered_rps={:.0} sent={} completed={} rejected={} \
+             errors={} achieved_rps={:.1} p50_us={} p95_us={} p99_us={} max_us={}",
+            self.model, self.offered_rps, self.sent, self.completed, self.rejected,
+            self.errors, self.achieved_rps, self.p50_us, self.p95_us, self.p99_us,
+            self.max_us
+        )
+    }
+
+    /// One `BENCH_serve.json` row.
+    pub fn to_json(&self, name: &str) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(name.to_string())),
+            ("model", Json::Str(self.model.clone())),
+            ("offered_rps", Json::Num(self.offered_rps)),
+            ("sent", Json::Num(self.sent as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("errors", Json::Num(self.errors as f64)),
+            ("achieved_rps", Json::Num(self.achieved_rps)),
+            ("p50_us", Json::Num(self.p50_us as f64)),
+            ("p95_us", Json::Num(self.p95_us as f64)),
+            ("p99_us", Json::Num(self.p99_us as f64)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Minimal HTTP/1.1 client (the mirror of net.rs's server framing)
+// ---------------------------------------------------------------------------
+
+/// One keep-alive client connection with its pipelining leftover buffer.
+struct HttpClient {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl HttpClient {
+    fn connect(addr: &str) -> Result<HttpClient, String> {
+        let stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+        stream
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .map_err(|e| format!("set_read_timeout: {e}"))?;
+        let _ = stream.set_nodelay(true);
+        Ok(HttpClient { stream, buf: Vec::new() })
+    }
+
+    /// One request/response round trip; returns `(status code, body)`.
+    fn request(&mut self, method: &str, path: &str, body: Option<&Json>)
+               -> Result<(u16, Json), String> {
+        let body = body.map(Json::to_string).unwrap_or_default();
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: tbn\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\n\r\n",
+            body.len()
+        );
+        self.stream
+            .write_all(head.as_bytes())
+            .and_then(|()| self.stream.write_all(body.as_bytes()))
+            .map_err(|e| format!("send: {e}"))?;
+        self.read_response()
+    }
+
+    fn read_response(&mut self) -> Result<(u16, Json), String> {
+        let mut tmp = [0u8; 4096];
+        loop {
+            if let Some(h) = self.buf.windows(4).position(|w| w == b"\r\n\r\n") {
+                let (status, content_length) = parse_response_header(&self.buf[..h])?;
+                let total = h + 4 + content_length;
+                while self.buf.len() < total {
+                    match self.stream.read(&mut tmp) {
+                        Ok(0) => return Err("truncated response body".into()),
+                        Ok(n) => self.buf.extend_from_slice(&tmp[..n]),
+                        Err(e) => return Err(format!("recv: {e}")),
+                    }
+                }
+                let text = std::str::from_utf8(&self.buf[h + 4..total])
+                    .map_err(|_| "non-utf8 response".to_string())?
+                    .to_string();
+                self.buf.drain(..total);
+                let json = Json::parse(&text)?;
+                return Ok((status, json));
+            }
+            match self.stream.read(&mut tmp) {
+                Ok(0) => return Err("connection closed mid-response".into()),
+                Ok(n) => self.buf.extend_from_slice(&tmp[..n]),
+                Err(e) => return Err(format!("recv: {e}")),
+            }
+        }
+    }
+}
+
+/// `HTTP/1.1 200 OK` + headers -> (200, content-length).
+fn parse_response_header(block: &[u8]) -> Result<(u16, usize), String> {
+    let text = std::str::from_utf8(block).map_err(|_| "non-utf8 header".to_string())?;
+    let mut lines = text.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
+    let mut parts = status_line.split_whitespace();
+    let version = parts.next().unwrap_or("");
+    let status = parts
+        .next()
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| format!("bad status line {status_line:?}"))?;
+    if !version.starts_with("HTTP/1.") {
+        return Err(format!("bad status line {status_line:?}"));
+    }
+    let mut content_length = 0usize;
+    for line in lines {
+        let Some((name, value)) = line.split_once(':') else { continue };
+        if name.eq_ignore_ascii_case("content-length") {
+            content_length = value
+                .trim()
+                .parse::<usize>()
+                .map_err(|_| format!("bad content-length {value:?}"))?;
+        }
+    }
+    Ok((status, content_length))
+}
+
+/// Query `GET /models`; returns `(name, in_dim)` rows.
+pub fn probe_models(addr: &str) -> Result<Vec<(String, usize)>, String> {
+    let mut client = HttpClient::connect(addr)?;
+    let (status, body) = client.request("GET", "/models", None)?;
+    if status != 200 {
+        return Err(format!("GET /models -> {status}"));
+    }
+    let rows = body.get("models").and_then(Json::as_arr).unwrap_or(&[]);
+    Ok(rows
+        .iter()
+        .map(|m| (m.str_or("name", "").to_string(), m.usize_or("in_dim", 0)))
+        .collect())
+}
+
+/// Resolve the target model and its input width: the named model, or the
+/// server's sole model when `model` is empty.
+fn resolve_model(addr: &str, model: &str) -> Result<(String, usize), String> {
+    let models = probe_models(addr)?;
+    if model.is_empty() {
+        match models.as_slice() {
+            [one] => Ok(one.clone()),
+            [] => Err("server has no models".into()),
+            _ => Err(format!(
+                "server has {} models — pass --model (one of: {})",
+                models.len(),
+                models.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>().join(", ")
+            )),
+        }
+    } else {
+        models
+            .iter()
+            .find(|(n, _)| n == model)
+            .cloned()
+            .ok_or_else(|| format!("model {model:?} not served"))
+    }
+}
+
+struct ClientTally {
+    sent: usize,
+    completed: usize,
+    rejected: usize,
+    errors: usize,
+    latencies_us: Vec<u64>,
+}
+
+/// One client thread: fire `POST /infer` on an exponential-gap schedule at
+/// `rate` until `deadline`, measuring sojourn from the scheduled arrival.
+fn client_loop(addr: &str, model: &str, in_dim: usize, rate: f64, start: Instant,
+               deadline: Instant, mut rng: Rng) -> ClientTally {
+    let mut tally =
+        ClientTally { sent: 0, completed: 0, rejected: 0, errors: 0, latencies_us: Vec::new() };
+    let mut client = HttpClient::connect(addr).ok();
+    // first arrival one gap into the window, like every later one
+    let mut scheduled = start + exp_gap(&mut rng, rate);
+    while scheduled < deadline {
+        let now = Instant::now();
+        if now < scheduled {
+            thread::sleep(scheduled - now);
+        }
+        let x: Vec<Json> =
+            (0..in_dim).map(|_| Json::Num(rng.gauss_f32() as f64)).collect();
+        let body = Json::obj(vec![
+            ("model", Json::Str(model.to_string())),
+            ("x", Json::Arr(x)),
+        ]);
+        // (re)connect lazily: one failed connect marks this slot an error
+        // and the next slot retries, so a draining server doesn't wedge us
+        if client.is_none() {
+            client = HttpClient::connect(addr).ok();
+        }
+        tally.sent += 1;
+        match client.as_mut().map(|c| c.request("POST", "/infer", Some(&body))) {
+            Some(Ok((200, _))) => {
+                tally.completed += 1;
+                tally.latencies_us.push(scheduled.elapsed().as_micros() as u64);
+            }
+            Some(Ok((503, _))) => tally.rejected += 1,
+            Some(Ok(_)) => tally.errors += 1,
+            Some(Err(_)) => {
+                tally.errors += 1;
+                client = None; // broken connection: rebuild on next slot
+            }
+            None => tally.errors += 1,
+        }
+        scheduled += exp_gap(&mut rng, rate);
+    }
+    tally
+}
+
+/// Exponential inter-arrival gap at `rate` req/s (capped at 1s so a tiny
+/// rate still makes progress through the deadline check).
+fn exp_gap(rng: &mut Rng, rate: f64) -> Duration {
+    let u = rng.next_f64(); // [0, 1)
+    let gap_s = -(1.0 - u).ln() / rate.max(1e-9);
+    Duration::from_secs_f64(gap_s.clamp(0.0, 1.0))
+}
+
+/// Nearest-rank percentile over a sorted slice (the same convention as
+/// `ServerStats::latency_percentiles`).
+fn percentile(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = (p * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Run one open-loop load generation pass.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport, String> {
+    let (model, in_dim) = resolve_model(&cfg.addr, &cfg.model)?;
+    if in_dim == 0 {
+        return Err(format!("model {model:?} reports input width 0"));
+    }
+    let conns = cfg.conns.max(1);
+    let per_conn_rate = cfg.rate_rps / conns as f64;
+    let start = Instant::now();
+    let deadline = start + cfg.duration;
+    let tallies: Vec<ClientTally> = thread::scope(|scope| {
+        let handles: Vec<_> = (0..conns)
+            .map(|c| {
+                let addr = cfg.addr.clone();
+                let model = model.clone();
+                let rng = Rng::new(cfg.seed.wrapping_add(c as u64).wrapping_mul(0x9E37));
+                scope.spawn(move || {
+                    client_loop(&addr, &model, in_dim, per_conn_rate, start, deadline, rng)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread panicked")).collect()
+    });
+    let elapsed_s = start.elapsed().as_secs_f64();
+    let mut latencies: Vec<u64> = Vec::new();
+    let (mut sent, mut completed, mut rejected, mut errors) = (0, 0, 0, 0);
+    for t in tallies {
+        sent += t.sent;
+        completed += t.completed;
+        rejected += t.rejected;
+        errors += t.errors;
+        latencies.extend(t.latencies_us);
+    }
+    latencies.sort_unstable();
+    Ok(LoadgenReport {
+        model,
+        offered_rps: cfg.rate_rps,
+        sent,
+        completed,
+        rejected,
+        errors,
+        elapsed_s,
+        achieved_rps: completed as f64 / elapsed_s.max(1e-9),
+        p50_us: percentile(&latencies, 0.50),
+        p95_us: percentile(&latencies, 0.95),
+        p99_us: percentile(&latencies, 0.99),
+        max_us: latencies.last().copied().unwrap_or(0),
+    })
+}
+
+/// Run a rate ladder (one [`run`] per offered rate, same duration/conns).
+pub fn sweep(base: &LoadgenConfig, rates: &[f64]) -> Result<Vec<LoadgenReport>, String> {
+    let mut out = Vec::with_capacity(rates.len());
+    for (i, &r) in rates.iter().enumerate() {
+        let cfg = LoadgenConfig {
+            rate_rps: r,
+            seed: base.seed.wrapping_add(i as u64),
+            ..base.clone()
+        };
+        out.push(run(&cfg)?);
+    }
+    Ok(out)
+}
+
+/// Saturation throughput: the highest achieved rate across a sweep — past
+/// the knee, offering more only grows rejects and tails, not completions.
+pub fn saturation_rps(reports: &[LoadgenReport]) -> f64 {
+    reports.iter().map(|r| r.achieved_rps).fold(0.0, f64::max)
+}
+
+/// The `BENCH_serve.json` document for a sweep: one row per offered rate
+/// plus the saturation-throughput row.
+pub fn sweep_to_json(reports: &[LoadgenReport]) -> Json {
+    let mut runs: Vec<Json> = reports
+        .iter()
+        .map(|r| r.to_json(&format!("rate{:.0}", r.offered_rps)))
+        .collect();
+    runs.push(Json::obj(vec![
+        ("name", Json::Str("saturation".to_string())),
+        ("model", Json::Str(reports.first().map(|r| r.model.clone()).unwrap_or_default())),
+        ("saturation_rps", Json::Num(saturation_rps(reports))),
+    ]));
+    Json::obj(vec![
+        ("bench", Json::Str("table_serve".to_string())),
+        ("runs", Json::Arr(runs)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp_gaps_have_the_right_mean() {
+        let mut rng = Rng::new(7);
+        let rate = 500.0;
+        let n = 20_000;
+        let total: f64 = (0..n).map(|_| exp_gap(&mut rng, rate).as_secs_f64()).sum();
+        let mean = total / n as f64;
+        assert!((mean - 1.0 / rate).abs() < 0.1 / rate, "mean gap {mean}");
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        assert_eq!(percentile(&[], 0.5), 0);
+        assert_eq!(percentile(&[7], 0.5), 7);
+        assert_eq!(percentile(&[10, 20, 30, 40], 0.50), 20);
+        assert_eq!(percentile(&[10, 20, 30, 40], 0.99), 40);
+    }
+
+    #[test]
+    fn response_header_parses_and_rejects() {
+        let (s, l) =
+            parse_response_header(b"HTTP/1.1 503 Service Unavailable\r\nContent-Length: 9")
+                .unwrap();
+        assert_eq!((s, l), (503, 9));
+        assert!(parse_response_header(b"ICY 200 OK").is_err());
+        assert!(parse_response_header(b"HTTP/1.1 abc").is_err());
+    }
+
+    #[test]
+    fn sweep_json_has_rate_and_saturation_rows() {
+        let r = LoadgenReport {
+            model: "m".into(),
+            offered_rps: 100.0,
+            sent: 10,
+            completed: 9,
+            rejected: 1,
+            errors: 0,
+            elapsed_s: 1.0,
+            achieved_rps: 9.0,
+            p50_us: 5,
+            p95_us: 9,
+            p99_us: 9,
+            max_us: 9,
+        };
+        let doc = sweep_to_json(&[r]);
+        let runs = doc.get("runs").and_then(Json::as_arr).unwrap();
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[0].str_or("name", ""), "rate100");
+        assert_eq!(runs[0].usize_or("completed", 0), 9);
+        assert_eq!(runs[1].str_or("name", ""), "saturation");
+        assert!((runs[1].f64_or("saturation_rps", 0.0) - 9.0).abs() < 1e-9);
+        assert_eq!(doc.str_or("bench", ""), "table_serve");
+    }
+}

@@ -22,6 +22,23 @@
 //! durations feeds the tail-latency report
 //! ([`ServerStats::latency_percentiles`]: p50/p95/p99, printed by
 //! `tbn serve`).
+//!
+//! Network layer (PR 9): [`registry::ModelRegistry`] holds many named
+//! pools in one process with `Arc`-swap hot model replacement,
+//! [`net::NetServer`] fronts the registry with a `std::net` TCP listener
+//! speaking minimal HTTP/1.1 (load shedding as `503`, graceful drain on
+//! shutdown/SIGTERM), and [`loadgen`] is the open-loop Poisson load
+//! generator that turns "heavy traffic" into measured p50/p95/p99 and
+//! saturation-throughput numbers (`tbn loadgen`, `benches/table_serve.rs`,
+//! `BENCH_serve.json`).
+
+pub mod loadgen;
+pub mod net;
+pub mod registry;
+
+pub use loadgen::{LoadgenConfig, LoadgenReport};
+pub use net::{install_shutdown_flag, ModelBuilder, NetServer};
+pub use registry::{ModelInfo, ModelRegistry};
 
 use std::collections::VecDeque;
 use std::sync::mpsc;
@@ -464,6 +481,13 @@ impl Server {
 
     pub fn stats(&self) -> ServerStats {
         self.stats.lock().unwrap().clone()
+    }
+
+    /// Input width the served model expects (what `submit` validates
+    /// against; served by `GET /models` so load generators can synthesize
+    /// well-formed requests).
+    pub fn in_dim(&self) -> usize {
+        self.in_dim
     }
 }
 

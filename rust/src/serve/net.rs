@@ -1,0 +1,561 @@
+//! Network front end: a `std::net` TCP listener speaking minimal HTTP/1.1
+//! over the bounded-queue worker pools in a [`ModelRegistry`].
+//!
+//! No HTTP crate is vendored, so the framing is hand-rolled and deliberately
+//! small: request line + headers + `Content-Length` body, keep-alive by
+//! default, single-line JSON bodies (the `util::Json` writer emits no
+//! newlines in compact mode).  Endpoints:
+//!
+//! * `POST /infer` — body `{"model": "<name>", "x": [f32, ...]}` (the
+//!   `model` field may be omitted on single-model servers).  `200` answers
+//!   carry `y`, the model `generation`, and the pool's timing breakdown.
+//!   A full queue under `OverflowPolicy::Reject` sheds the request with a
+//!   `503 Service Unavailable` (the HTTP face of load shedding — the pool's
+//!   `rejected` counter has already recorded it); an unknown model is
+//!   `404`; a malformed body or wrong input width is `400` — the
+//!   connection handler answers and keeps the connection alive rather than
+//!   dying with the request.
+//! * `POST /reload` — body `{"model": "<name>", "seed": n}`: rebuild the
+//!   named model through the server's [`ModelBuilder`] and hot-swap it into
+//!   the registry (`Arc` swap; in-flight requests finish on the old pool).
+//!   `501` when the server was started without a builder.
+//! * `GET /models` — registry listing (name, input dim, generation).
+//! * `GET /stats` — per-model serving stats incl. nearest-rank p50/p95/p99.
+//! * `GET /healthz` — liveness probe.
+//!
+//! **Graceful drain** ([`NetServer::shutdown`], also wired to
+//! SIGTERM/SIGINT via [`install_shutdown_flag`]): stop accepting (the
+//! listener is woken and dropped, so new connects are refused), let every
+//! connection handler finish the request it is serving (handlers poll the
+//! closing flag on a short read timeout), join them all, and return the
+//! final per-model stats.  Because handlers block in `Server::infer` until
+//! the pool answers, joining them proves every accepted network request was
+//! completed — nothing accepted is dropped.
+//!
+//! Concurrency model: one accept thread + one handler thread per
+//! connection (clients are expected to keep connections alive and pipeline
+//! serially; the load generator and tests do).  Handler threads are
+//! tracked and reaped so the handle list stays bounded.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use crate::util::Json;
+
+use super::registry::ModelRegistry;
+use super::{Server, ServerStats};
+
+/// Upper bound on one request's header block.
+const MAX_HEADER_BYTES: usize = 64 * 1024;
+/// Upper bound on one request's body (a 1M-float input is ~8 MB of JSON).
+const MAX_BODY_BYTES: usize = 16 * 1024 * 1024;
+/// Read-timeout granularity at which idle handlers poll the closing flag.
+const POLL_READ_TIMEOUT: Duration = Duration::from_millis(100);
+
+/// Rebuilds a model by name for `POST /reload` hot swaps: `(name, seed)`
+/// -> a fresh worker pool over the rebuilt engine.
+pub type ModelBuilder = Arc<dyn Fn(&str, u64) -> Result<Server, String> + Send + Sync>;
+
+/// Tracked connection-handler threads (joined at drain).
+type ConnHandles = Arc<Mutex<Vec<thread::JoinHandle<()>>>>;
+
+/// A parsed HTTP request (the subset this server speaks).
+struct HttpRequest {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+    keep_alive: bool,
+}
+
+enum ReqRead {
+    Request(HttpRequest),
+    /// Clean EOF between requests, a broken connection, or drain.
+    Closed,
+    /// Unparseable framing: answer 400 and close.
+    Malformed(String),
+}
+
+/// Read one HTTP request from `stream` into/out of `buf` (which carries
+/// pipelined leftovers between keep-alive requests).  Returns `Closed` when
+/// the peer hangs up cleanly or `closing` is raised while idle.
+fn read_request(stream: &mut TcpStream, buf: &mut Vec<u8>, closing: &AtomicBool) -> ReqRead {
+    let mut tmp = [0u8; 4096];
+    loop {
+        if let Some(h) = find_header_end(buf) {
+            let (method, path, content_length, keep_alive) = match parse_header(&buf[..h]) {
+                Ok(p) => p,
+                Err(e) => return ReqRead::Malformed(e),
+            };
+            if content_length > MAX_BODY_BYTES {
+                return ReqRead::Malformed(format!(
+                    "content-length {content_length} exceeds {MAX_BODY_BYTES}"
+                ));
+            }
+            let total = h + 4 + content_length;
+            while buf.len() < total {
+                match stream.read(&mut tmp) {
+                    Ok(0) => return ReqRead::Malformed("truncated body".into()),
+                    Ok(n) => buf.extend_from_slice(&tmp[..n]),
+                    Err(e) if would_block(&e) => {
+                        if closing.load(Ordering::SeqCst) {
+                            // mid-request at drain: the framing is incomplete
+                            // and the client is gone from our perspective
+                            return ReqRead::Closed;
+                        }
+                    }
+                    Err(_) => return ReqRead::Closed,
+                }
+            }
+            let body = buf[h + 4..total].to_vec();
+            buf.drain(..total);
+            return ReqRead::Request(HttpRequest { method, path, body, keep_alive });
+        }
+        if buf.len() > MAX_HEADER_BYTES {
+            return ReqRead::Malformed("header block too large".into());
+        }
+        match stream.read(&mut tmp) {
+            Ok(0) => {
+                return if buf.is_empty() {
+                    ReqRead::Closed
+                } else {
+                    ReqRead::Malformed("truncated request".into())
+                };
+            }
+            Ok(n) => buf.extend_from_slice(&tmp[..n]),
+            Err(e) if would_block(&e) => {
+                if closing.load(Ordering::SeqCst) {
+                    return ReqRead::Closed;
+                }
+            }
+            Err(_) => return ReqRead::Closed,
+        }
+    }
+}
+
+fn would_block(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
+fn find_header_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Parse the header block (without the trailing blank line): request line
+/// + the two headers we honor (`Content-Length`, `Connection`).
+fn parse_header(block: &[u8]) -> Result<(String, String, usize, bool), String> {
+    let text = std::str::from_utf8(block).map_err(|_| "non-utf8 header".to_string())?;
+    let mut lines = text.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("");
+    if method.is_empty() || path.is_empty() || !version.starts_with("HTTP/1.") {
+        return Err(format!("bad request line {request_line:?}"));
+    }
+    let mut content_length = 0usize;
+    let mut keep_alive = true; // HTTP/1.1 default
+    for line in lines {
+        let Some((name, value)) = line.split_once(':') else { continue };
+        let value = value.trim();
+        if name.eq_ignore_ascii_case("content-length") {
+            content_length = value
+                .parse::<usize>()
+                .map_err(|_| format!("bad content-length {value:?}"))?;
+        } else if name.eq_ignore_ascii_case("connection")
+            && value.eq_ignore_ascii_case("close")
+        {
+            keep_alive = false;
+        }
+    }
+    Ok((method, path, content_length, keep_alive))
+}
+
+fn write_response(
+    stream: &mut TcpStream,
+    status: &str,
+    body: &Json,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let body = body.to_string();
+    let conn = if keep_alive { "keep-alive" } else { "close" };
+    let head = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: {conn}\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+fn err_json(msg: &str) -> Json {
+    Json::obj(vec![("error", Json::Str(msg.to_string()))])
+}
+
+/// Dispatch one parsed request against the registry; returns
+/// `(status line, body)`.
+fn handle(registry: &ModelRegistry, builder: Option<&ModelBuilder>, req: &HttpRequest)
+          -> (&'static str, Json) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/infer") => handle_infer(registry, &req.body),
+        ("POST", "/reload") => handle_reload(registry, builder, &req.body),
+        ("GET", "/models") => {
+            let models: Vec<Json> = registry
+                .infos()
+                .into_iter()
+                .map(|i| {
+                    Json::obj(vec![
+                        ("name", Json::Str(i.name)),
+                        ("in_dim", Json::Num(i.in_dim as f64)),
+                        ("generation", Json::Num(i.generation as f64)),
+                    ])
+                })
+                .collect();
+            ("200 OK", Json::obj(vec![("models", Json::Arr(models))]))
+        }
+        ("GET", "/stats") => {
+            let rows: Vec<Json> = registry
+                .stats()
+                .into_iter()
+                .map(|(name, generation, s)| stats_json(&name, generation, &s))
+                .collect();
+            ("200 OK", Json::obj(vec![("models", Json::Arr(rows))]))
+        }
+        ("GET", "/healthz") => ("200 OK", Json::obj(vec![("ok", Json::Bool(true))])),
+        ("POST", _) | ("GET", _) => ("404 Not Found", err_json("unknown path")),
+        _ => ("405 Method Not Allowed", err_json("method not allowed")),
+    }
+}
+
+fn handle_infer(registry: &ModelRegistry, body: &[u8]) -> (&'static str, Json) {
+    let parsed = match std::str::from_utf8(body)
+        .map_err(|_| "non-utf8 body".to_string())
+        .and_then(Json::parse)
+    {
+        Ok(j) => j,
+        Err(e) => return ("400 Bad Request", err_json(&format!("bad JSON body: {e}"))),
+    };
+    let name = parsed.str_or("model", "");
+    let resolved = if name.is_empty() {
+        registry.sole().ok_or_else(|| {
+            "missing \"model\" field (required with multiple models)".to_string()
+        })
+    } else {
+        registry
+            .get(name)
+            .map(|(s, g)| (name.to_string(), s, g))
+            .ok_or_else(|| format!("unknown model {name:?}"))
+    };
+    let (name, server, generation) = match resolved {
+        Ok(r) => r,
+        Err(e) => {
+            let status = if name.is_empty() { "400 Bad Request" } else { "404 Not Found" };
+            return (status, err_json(&e));
+        }
+    };
+    let Some(xs) = parsed.get("x").and_then(Json::as_arr) else {
+        return ("400 Bad Request", err_json("missing \"x\" array"));
+    };
+    let mut x = Vec::with_capacity(xs.len());
+    for v in xs {
+        match v.as_f64() {
+            Some(f) => x.push(f as f32),
+            None => return ("400 Bad Request", err_json("\"x\" must be numbers")),
+        }
+    }
+    match server.infer(x) {
+        Ok(r) => (
+            "200 OK",
+            Json::obj(vec![
+                ("model", Json::Str(name)),
+                ("generation", Json::Num(generation as f64)),
+                ("y", Json::Arr(r.y.iter().map(|&v| Json::Num(v as f64)).collect())),
+                ("queue_us", Json::Num(r.queue_us as f64)),
+                ("total_us", Json::Num(r.total_us as f64)),
+                ("batch_size", Json::Num(r.batch_size as f64)),
+            ]),
+        ),
+        // load shedding: the pool's Reject policy refused the request and
+        // counted it — surface the 503 equivalent to the client
+        Err(e) if e.contains("queue full") => ("503 Service Unavailable", err_json(&e)),
+        Err(e) if e.contains("input dim") => ("400 Bad Request", err_json(&e)),
+        Err(e) => ("503 Service Unavailable", err_json(&e)),
+    }
+}
+
+fn handle_reload(registry: &ModelRegistry, builder: Option<&ModelBuilder>, body: &[u8])
+                 -> (&'static str, Json) {
+    let Some(builder) = builder else {
+        return ("501 Not Implemented", err_json("server started without a model builder"));
+    };
+    let parsed = match std::str::from_utf8(body)
+        .map_err(|_| "non-utf8 body".to_string())
+        .and_then(Json::parse)
+    {
+        Ok(j) => j,
+        Err(e) => return ("400 Bad Request", err_json(&format!("bad JSON body: {e}"))),
+    };
+    let name = parsed.str_or("model", "");
+    if name.is_empty() {
+        return ("400 Bad Request", err_json("missing \"model\" field"));
+    }
+    let seed = parsed.usize_or("seed", 0) as u64;
+    match builder(name, seed).and_then(|server| registry.swap(name, server)) {
+        Ok(generation) => (
+            "200 OK",
+            Json::obj(vec![
+                ("model", Json::Str(name.to_string())),
+                ("generation", Json::Num(generation as f64)),
+            ]),
+        ),
+        Err(e) => ("400 Bad Request", err_json(&e)),
+    }
+}
+
+fn stats_json(name: &str, generation: usize, s: &ServerStats) -> Json {
+    let mut row = Json::obj(vec![
+        ("name", Json::Str(name.to_string())),
+        ("generation", Json::Num(generation as f64)),
+        ("served", Json::Num(s.served as f64)),
+        ("rejected", Json::Num(s.rejected as f64)),
+        ("batches", Json::Num(s.batches as f64)),
+        ("mean_batch", Json::Num(s.mean_batch())),
+        ("mean_latency_us", Json::Num(s.mean_latency_us())),
+        ("workers", Json::Num(s.workers as f64)),
+        ("kernel_threads", Json::Num(s.kernel_threads as f64)),
+        ("engine", Json::Str(format!("{:?}", s.engine))),
+    ]);
+    if let Some(p) = s.latency_percentiles() {
+        row.set("p50_us", Json::Num(p.p50_us as f64));
+        row.set("p95_us", Json::Num(p.p95_us as f64));
+        row.set("p99_us", Json::Num(p.p99_us as f64));
+    }
+    row
+}
+
+/// One connection's serve loop: read request, answer, repeat until the
+/// peer closes, a framing error forces a close, or drain begins.  A
+/// malformed request gets a `400` answer and (for body/framing breakage)
+/// a close — it never kills the thread with a panic.
+fn connection_loop(
+    mut stream: TcpStream,
+    registry: Arc<ModelRegistry>,
+    builder: Option<ModelBuilder>,
+    closing: Arc<AtomicBool>,
+) {
+    // short read timeout so an idle handler notices drain promptly
+    let _ = stream.set_read_timeout(Some(POLL_READ_TIMEOUT));
+    let _ = stream.set_nodelay(true);
+    let mut buf = Vec::new();
+    loop {
+        match read_request(&mut stream, &mut buf, &closing) {
+            ReqRead::Request(req) => {
+                let (status, body) = handle(&registry, builder.as_ref(), &req);
+                let keep = req.keep_alive && !closing.load(Ordering::SeqCst);
+                if write_response(&mut stream, status, &body, keep).is_err() || !keep {
+                    return;
+                }
+            }
+            ReqRead::Malformed(e) => {
+                let _ = write_response(&mut stream, "400 Bad Request", &err_json(&e), false);
+                return;
+            }
+            ReqRead::Closed => return,
+        }
+    }
+}
+
+/// A running network front end.  Dropping it without calling
+/// [`shutdown`](NetServer::shutdown) still drains (Drop delegates).
+pub struct NetServer {
+    addr: SocketAddr,
+    closing: Arc<AtomicBool>,
+    accept_handle: Option<thread::JoinHandle<()>>,
+    conns: ConnHandles,
+    registry: Arc<ModelRegistry>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and start
+    /// accepting.  `builder` enables `POST /reload` hot swaps.
+    pub fn start(
+        registry: Arc<ModelRegistry>,
+        addr: &str,
+        builder: Option<ModelBuilder>,
+    ) -> Result<NetServer, String> {
+        let listener = TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
+        let local = listener.local_addr().map_err(|e| format!("local_addr: {e}"))?;
+        let closing = Arc::new(AtomicBool::new(false));
+        let conns: ConnHandles = Arc::new(Mutex::new(Vec::new()));
+        let accept_handle = {
+            let registry = registry.clone();
+            let closing = closing.clone();
+            let conns = conns.clone();
+            thread::spawn(move || {
+                for stream in listener.incoming() {
+                    if closing.load(Ordering::SeqCst) {
+                        // the shutdown self-connect (or any racer) lands
+                        // here: refuse and stop accepting
+                        return;
+                    }
+                    let Ok(stream) = stream else { continue };
+                    let registry = registry.clone();
+                    let builder = builder.clone();
+                    let closing = closing.clone();
+                    let handle = thread::spawn(move || {
+                        connection_loop(stream, registry, builder, closing)
+                    });
+                    let mut c = conns.lock().unwrap();
+                    // reap finished handlers so the list stays bounded
+                    let mut live = Vec::new();
+                    for h in c.drain(..) {
+                        if h.is_finished() {
+                            let _ = h.join();
+                        } else {
+                            live.push(h);
+                        }
+                    }
+                    *c = live;
+                    c.push(handle);
+                }
+            })
+        };
+        Ok(NetServer {
+            addr: local,
+            closing,
+            accept_handle: Some(accept_handle),
+            conns,
+            registry,
+        })
+    }
+
+    /// The bound address (resolves `:0` to the real port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
+    }
+
+    /// Graceful drain: stop accepting, finish every in-flight request,
+    /// join all connection handlers, and return the final per-model stats.
+    pub fn shutdown(mut self) -> Vec<(String, usize, ServerStats)> {
+        self.drain();
+        self.registry.stats()
+    }
+
+    fn drain(&mut self) {
+        if self.closing.swap(true, Ordering::SeqCst) {
+            return; // already drained
+        }
+        // wake the accept loop so it observes the flag and exits
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        // the listener is dropped: new connects are refused from here on;
+        // join every handler — each finishes its in-flight request first
+        let handles: Vec<_> = self.conns.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.drain();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SIGTERM / SIGINT -> process-wide shutdown flag
+// ---------------------------------------------------------------------------
+
+static SHUTDOWN_FLAG: AtomicBool = AtomicBool::new(false);
+
+/// Install SIGTERM/SIGINT handlers that raise a process-wide flag, and
+/// return the flag.  `tbn serve --listen` polls it and drains when raised,
+/// so `kill -TERM` is a graceful drain, not an abort.  Raw `signal(2)` FFI
+/// against the platform libc — the vendor set has no signal crate; the
+/// handler only stores an atomic, which is async-signal-safe.  On non-unix
+/// targets the flag exists but is never raised by a signal.
+#[cfg(unix)]
+pub fn install_shutdown_flag() -> &'static AtomicBool {
+    extern "C" fn on_signal(_sig: i32) {
+        SHUTDOWN_FLAG.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGINT, on_signal as usize);
+        signal(SIGTERM, on_signal as usize);
+    }
+    &SHUTDOWN_FLAG
+}
+
+#[cfg(not(unix))]
+pub fn install_shutdown_flag() -> &'static AtomicBool {
+    &SHUTDOWN_FLAG
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_parser_accepts_minimal_requests() {
+        let block = b"POST /infer HTTP/1.1\r\nHost: x\r\nContent-Length: 12";
+        let (method, path, len, keep) = parse_header(block).unwrap();
+        assert_eq!(method, "POST");
+        assert_eq!(path, "/infer");
+        assert_eq!(len, 12);
+        assert!(keep);
+        let block = b"GET /models HTTP/1.1\r\nConnection: close";
+        let (_, _, len, keep) = parse_header(block).unwrap();
+        assert_eq!(len, 0);
+        assert!(!keep);
+    }
+
+    #[test]
+    fn header_parser_rejects_garbage() {
+        assert!(parse_header(b"nonsense").is_err());
+        assert!(parse_header(b"POST /x SPDY/3").is_err());
+        assert!(parse_header(b"POST /x HTTP/1.1\r\nContent-Length: tweleve").is_err());
+    }
+
+    #[test]
+    fn find_header_end_locates_terminator() {
+        assert_eq!(find_header_end(b"GET / HTTP/1.1\r\n\r\nrest"), Some(14));
+        assert_eq!(find_header_end(b"partial"), None);
+    }
+
+    #[test]
+    fn infer_handler_reports_client_errors() {
+        let reg = ModelRegistry::new();
+        let (status, body) = handle_infer(&reg, b"not json");
+        assert_eq!(status, "400 Bad Request");
+        assert!(body.str_or("error", "").contains("bad JSON"));
+        let (status, _) = handle_infer(&reg, br#"{"model":"nope","x":[1]}"#);
+        assert_eq!(status, "404 Not Found");
+        // empty registry, no model field -> 400 (no sole default)
+        let (status, _) = handle_infer(&reg, br#"{"x":[1]}"#);
+        assert_eq!(status, "400 Bad Request");
+    }
+
+    #[test]
+    fn shutdown_flag_is_stable() {
+        // the handler install must not fire the flag by itself
+        let flag = install_shutdown_flag();
+        assert!(!flag.load(Ordering::SeqCst) || cfg!(not(unix)));
+    }
+}

@@ -1,0 +1,225 @@
+//! Multi-model registry: one process serves many models, swappable live.
+//!
+//! The tile-resident packed layout keeps `O(q)` weight bytes resident per
+//! tiled layer, so dozens of models fit where one expanded binary model did
+//! — the registry is what turns that residency headroom into a serving
+//! feature.  Each entry owns a full [`Server`] worker pool (bounded queue,
+//! batching, per-model [`ServerStats`]), published behind an `Arc` in an
+//! `RwLock`ed map.
+//!
+//! **Hot swap** is an `Arc` swap: [`ModelRegistry::swap`] replaces the
+//! entry's `Arc<Server>` under the write lock and bumps the entry's
+//! generation counter.  Readers ([`ModelRegistry::get`]) clone the `Arc`
+//! under the read lock and then operate lock-free, so an in-flight request
+//! always runs against exactly the server it resolved — a swap can never
+//! tear a model mid-request.  The old pool drains gracefully: when its last
+//! `Arc` holder finishes, `Server::drop` closes the queue, the workers
+//! drain what was accepted, and the threads join.
+
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+use super::{Server, ServerStats};
+
+struct Entry {
+    server: Arc<Server>,
+    /// Bumped on every [`ModelRegistry::swap`]; echoed in `/infer`
+    /// responses so clients (and the torn-model test) can attribute an
+    /// answer to the exact model version that produced it.
+    generation: usize,
+}
+
+/// One model's public registry row.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub in_dim: usize,
+    pub generation: usize,
+}
+
+/// Name -> serving pool map with live (`Arc`-swap) model replacement.
+#[derive(Default)]
+pub struct ModelRegistry {
+    models: RwLock<HashMap<String, Entry>>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> ModelRegistry {
+        ModelRegistry::default()
+    }
+
+    /// Add (or replace) a model under `name`.  Returns the entry's
+    /// generation: 0 for a new name, `previous + 1` when replacing — so
+    /// `register` on an existing name is exactly a [`swap`](Self::swap).
+    pub fn register(&self, name: &str, server: Server) -> usize {
+        let mut m = self.models.write().unwrap();
+        let generation = m.get(name).map_or(0, |e| e.generation + 1);
+        m.insert(name.to_string(), Entry { server: Arc::new(server), generation });
+        generation
+    }
+
+    /// Hot-swap the model behind `name`.  Errors if the name was never
+    /// registered (a swap targets a live model; use
+    /// [`register`](Self::register) to introduce one).  In-flight requests
+    /// keep the old `Arc<Server>` and complete against it; the old pool
+    /// drains and joins when its last holder drops it.
+    pub fn swap(&self, name: &str, server: Server) -> Result<usize, String> {
+        let mut m = self.models.write().unwrap();
+        match m.get_mut(name) {
+            Some(e) => {
+                e.generation += 1;
+                e.server = Arc::new(server);
+                Ok(e.generation)
+            }
+            None => Err(format!("swap: unknown model {name:?}")),
+        }
+    }
+
+    /// Resolve a model for one request: the returned `Arc` pins the exact
+    /// server (and therefore model version) for the request's lifetime.
+    pub fn get(&self, name: &str) -> Option<(Arc<Server>, usize)> {
+        let m = self.models.read().unwrap();
+        m.get(name).map(|e| (e.server.clone(), e.generation))
+    }
+
+    /// The single registered model, if exactly one — lets `/infer` omit
+    /// the `model` field on single-model servers.
+    pub fn sole(&self) -> Option<(String, Arc<Server>, usize)> {
+        let m = self.models.read().unwrap();
+        if m.len() == 1 {
+            m.iter()
+                .next()
+                .map(|(n, e)| (n.clone(), e.server.clone(), e.generation))
+        } else {
+            None
+        }
+    }
+
+    /// Drop a model; its pool drains once in-flight holders release it.
+    pub fn remove(&self, name: &str) -> bool {
+        self.models.write().unwrap().remove(name).is_some()
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Registry listing, name-sorted (what `GET /models` serves).
+    pub fn infos(&self) -> Vec<ModelInfo> {
+        let m = self.models.read().unwrap();
+        let mut v: Vec<ModelInfo> = m
+            .iter()
+            .map(|(n, e)| ModelInfo {
+                name: n.clone(),
+                in_dim: e.server.in_dim(),
+                generation: e.generation,
+            })
+            .collect();
+        v.sort_by(|a, b| a.name.cmp(&b.name));
+        v
+    }
+
+    /// Per-model stats snapshot, name-sorted (the `GET /stats` rows and
+    /// the final drain report).
+    pub fn stats(&self) -> Vec<(String, usize, ServerStats)> {
+        let m = self.models.read().unwrap();
+        let mut v: Vec<(String, usize, ServerStats)> = m
+            .iter()
+            .map(|(n, e)| (n.clone(), e.generation, e.server.stats()))
+            .collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::{BatchPolicy, OverflowPolicy, ServePolicy};
+    use std::time::Duration;
+
+    struct ConstModel {
+        dim: usize,
+        v: f32,
+    }
+
+    impl crate::serve::BatchModel for ConstModel {
+        fn infer_batch(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+            xs.iter().map(|_| vec![self.v, self.v]).collect()
+        }
+
+        fn in_dim(&self) -> usize {
+            self.dim
+        }
+    }
+
+    fn pool(v: f32) -> Server {
+        Server::start_pool_with(
+            Arc::new(ConstModel { dim: 3, v }),
+            ServePolicy {
+                batch: BatchPolicy { max_batch: 4, window: Duration::from_micros(50) },
+                queue_cap: 16,
+                on_full: OverflowPolicy::Block,
+                ..ServePolicy::default()
+            },
+            1,
+        )
+    }
+
+    #[test]
+    fn register_get_and_list() {
+        let reg = ModelRegistry::new();
+        assert!(reg.is_empty());
+        assert_eq!(reg.register("a", pool(1.0)), 0);
+        assert_eq!(reg.register("b", pool(2.0)), 0);
+        assert_eq!(reg.len(), 2);
+        let (srv, generation) = reg.get("a").expect("registered");
+        assert_eq!(generation, 0);
+        assert_eq!(srv.in_dim(), 3);
+        assert_eq!(srv.infer(vec![0.0; 3]).unwrap().y, vec![1.0, 1.0]);
+        let names: Vec<String> = reg.infos().into_iter().map(|i| i.name).collect();
+        assert_eq!(names, vec!["a", "b"]);
+        assert!(reg.get("missing").is_none());
+        assert!(reg.sole().is_none(), "two models -> no sole default");
+        assert!(reg.remove("b"));
+        let (name, _, _) = reg.sole().expect("one model left");
+        assert_eq!(name, "a");
+    }
+
+    #[test]
+    fn swap_bumps_generation_and_old_arc_survives() {
+        let reg = ModelRegistry::new();
+        reg.register("m", pool(1.0));
+        let (old, g0) = reg.get("m").unwrap();
+        assert_eq!(g0, 0);
+        assert!(reg.swap("missing", pool(9.0)).is_err());
+        assert_eq!(reg.swap("m", pool(2.0)).unwrap(), 1);
+        // the pinned old Arc still serves the old model (no torn state)
+        assert_eq!(old.infer(vec![0.0; 3]).unwrap().y, vec![1.0, 1.0]);
+        let (new, g1) = reg.get("m").unwrap();
+        assert_eq!(g1, 1);
+        assert_eq!(new.infer(vec![0.0; 3]).unwrap().y, vec![2.0, 2.0]);
+        // re-register on a live name is a swap too
+        assert_eq!(reg.register("m", pool(3.0)), 2);
+    }
+
+    #[test]
+    fn stats_are_per_model() {
+        let reg = ModelRegistry::new();
+        reg.register("x", pool(1.0));
+        reg.register("y", pool(2.0));
+        let (srv, _) = reg.get("x").unwrap();
+        for _ in 0..5 {
+            srv.infer(vec![0.0; 3]).unwrap();
+        }
+        let stats = reg.stats();
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats[0].0, "x");
+        assert_eq!(stats[0].2.served, 5);
+        assert_eq!(stats[1].2.served, 0);
+    }
+}
