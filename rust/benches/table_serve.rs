@@ -2,12 +2,17 @@
 //!
 //! Boots the full production serving path in-process — `ModelRegistry` +
 //! `NetServer` on `127.0.0.1:0` over a packed micro-MLP worker pool — and
-//! drives it with the in-crate Poisson load generator at a ladder of
-//! offered rates.  Reports per-rate completed/rejected counts, p50/p95/p99
-//! latency (measured from the scheduled arrival, so client-side queueing
-//! under overload is charged to the server), and the saturation throughput
-//! across the sweep.  `--json` writes the machine-readable
-//! `BENCH_serve.json` (grep-gated in CI next to `BENCH_table2/table6`).
+//! drives it with the in-crate Poisson load generator, once per net model
+//! (`mux` event loop vs `threads` per-connection baseline).  Each model
+//! gets a rate ladder at a fixed connection count *and* a latency-vs-#conns
+//! ladder (1/64/512 keep-alive connections at a fixed rate) — the mux
+//! model's whole point is holding the 512-connection rung with bounded
+//! threads.  Reports completed/rejected counts, p50/p95/p99/p99.9 latency
+//! (measured from the scheduled arrival, so client-side queueing under
+//! overload is charged to the server), and per-model saturation
+//! throughput.  `--json` writes the machine-readable `BENCH_serve.json`
+//! with `net_model`-tagged rows (grep-gated in CI next to
+//! `BENCH_table2/table6`).
 //!
 //! Artifact-free and short: the model is seeded like the engine unit
 //! tests, rates/durations are sized for a CI smoke run
@@ -18,8 +23,9 @@ use std::time::Duration;
 
 use tiledbits::bench_util::header;
 use tiledbits::nn::{EnginePath, MlpEngine, Nonlin, SimdBackend};
-use tiledbits::serve::{loadgen, BatchPolicy, LoadgenConfig, ModelRegistry, NetServer,
-                       OverflowPolicy, ServePolicy, Server};
+use tiledbits::serve::{loadgen, BatchPolicy, LoadgenConfig, LoadgenReport, ModelRegistry,
+                       NetConfig, NetModel, NetServer, OverflowPolicy, ServePolicy,
+                       Server};
 use tiledbits::tbn::{alphas_from, tile_from_weights, AlphaMode, LayerRecord,
                      TbnzModel, WeightPayload};
 use tiledbits::util::Rng;
@@ -43,12 +49,11 @@ fn micro_model() -> TbnzModel {
     TbnzModel { layers: vec![mk("fc0", 128, 256, &mut r), mk("head", 10, 128, &mut r)] }
 }
 
-fn main() {
-    let json_mode = std::env::args().any(|a| a == "--json");
-    let simd = SimdBackend::default();
-    header("Serving: open-loop load vs the network front end (micro MLP)");
-    println!("packed kernels run the {simd} xnor-popcount backend");
+const WORKERS: usize = 2;
+const MAX_CONNS: usize = 2048;
 
+/// Boot one fresh micro-MLP pool behind a front end running `model`.
+fn boot(simd: SimdBackend, model: NetModel) -> NetServer {
     let engine =
         MlpEngine::with_path(micro_model(), Nonlin::Relu, EnginePath::Packed).unwrap();
     let policy = ServePolicy {
@@ -61,48 +66,94 @@ fn main() {
         simd,
         engine: EnginePath::Packed,
     };
-    let workers = 2usize;
     let registry = Arc::new(ModelRegistry::new());
-    registry.register("micro", Server::start_pool_with(Arc::new(engine), policy, workers));
-    let net = NetServer::start(registry, "127.0.0.1:0", None).expect("bind loopback");
-    let addr = net.addr().to_string();
-    println!("serving micro on {addr} ({workers} workers, queue cap 256, reject)");
+    registry.register("micro", Server::start_pool_with(Arc::new(engine), policy, WORKERS));
+    NetServer::start_with(
+        registry,
+        "127.0.0.1:0",
+        None,
+        NetConfig { model, max_conns: MAX_CONNS, dispatch_threads: 16 },
+    )
+    .expect("bind loopback")
+}
 
-    let base = LoadgenConfig {
-        addr,
-        model: "micro".into(),
-        duration: Duration::from_millis(600),
-        conns: 4,
-        seed: 9,
-        ..LoadgenConfig::default()
+fn print_table(title: &str, reports: &[LoadgenReport]) {
+    println!("\n{title}");
+    println!("{:>12} {:>6} {:>8} {:>10} {:>10} {:>12} {:>9} {:>9} {:>9} {:>9}",
+             "offered_rps", "conns", "sent", "completed", "rejected", "achieved_rps",
+             "p50_us", "p95_us", "p99_us", "p999_us");
+    for r in reports {
+        println!("{:>12.0} {:>6} {:>8} {:>10} {:>10} {:>12.1} {:>9} {:>9} {:>9} {:>9}",
+                 r.offered_rps, r.conns, r.sent, r.completed, r.rejected,
+                 r.achieved_rps, r.p50_us, r.p95_us, r.p99_us, r.p999_us);
+    }
+}
+
+fn main() {
+    let json_mode = std::env::args().any(|a| a == "--json");
+    let simd = SimdBackend::default();
+    header("Serving: open-loop load vs the network front end (micro MLP)");
+    println!("packed kernels run the {simd} xnor-popcount backend");
+
+    let net_models: &[NetModel] = if cfg!(unix) {
+        &[NetModel::Mux, NetModel::Threads]
+    } else {
+        &[NetModel::Threads]
     };
     let rates = [500.0, 2000.0, 8000.0];
-    let reports = loadgen::sweep(&base, &rates).expect("loadgen sweep");
+    let conns_ladder = [1usize, 64, 512];
+    let mut groups: Vec<(String, Vec<LoadgenReport>)> = Vec::new();
 
-    println!("\n{:>12} {:>8} {:>10} {:>10} {:>12} {:>9} {:>9} {:>9}", "offered_rps",
-             "sent", "completed", "rejected", "achieved_rps", "p50_us", "p95_us",
-             "p99_us");
-    for r in &reports {
-        println!("{:>12.0} {:>8} {:>10} {:>10} {:>12.1} {:>9} {:>9} {:>9}",
-                 r.offered_rps, r.sent, r.completed, r.rejected, r.achieved_rps,
-                 r.p50_us, r.p95_us, r.p99_us);
+    for &model in net_models {
+        let net = boot(simd, model);
+        let addr = net.addr().to_string();
+        println!("\n== net model {model} ==");
+        println!("serving micro on {addr} ({WORKERS} workers, queue cap 256, reject, \
+                  max {MAX_CONNS} conns)");
+
+        let base = LoadgenConfig {
+            addr,
+            model: "micro".into(),
+            duration: Duration::from_millis(600),
+            conns: 4,
+            seed: 9,
+            ..LoadgenConfig::default()
+        };
+        // rate ladder at a fixed connection count: the saturation sweep
+        let rate_reports = loadgen::sweep_grid(&base, &rates, &[4]).expect("rate sweep");
+        print_table(&format!("[{model}] rate ladder at 4 conns"), &rate_reports);
+        let saturation = loadgen::saturation_rps(&rate_reports);
+        println!("[{model}] saturation throughput: {saturation:.1} req/s (max achieved \
+                  across the sweep)");
+
+        // connection ladder at a fixed rate: latency vs #conns — where the
+        // threads model pays a thread per idle client and mux does not
+        let conn_reports =
+            loadgen::sweep_grid(&base, &[2000.0], &conns_ladder).expect("conns sweep");
+        print_table(&format!("[{model}] latency vs #conns at 2000 req/s"), &conn_reports);
+
+        let ns = net.net_stats();
+        println!("[{model}] net counters: accepted={} closed={} read_stalls={} \
+                  write_stalls={} shed_at_accept={}",
+                 ns.accepted, ns.closed, ns.read_stalls, ns.write_stalls,
+                 ns.shed_at_accept);
+
+        let mut all = rate_reports;
+        all.extend(conn_reports);
+        groups.push((model.as_str().to_string(), all));
+
+        // graceful drain: every accepted request completed before this returns
+        for (name, generation, s) in net.shutdown() {
+            println!("final model={name} generation={generation} served={} rejected={}",
+                     s.served, s.rejected);
+        }
     }
-    let saturation = loadgen::saturation_rps(&reports);
-    println!("\nsaturation throughput: {saturation:.1} req/s (max achieved across the \
-              sweep)");
 
     if json_mode {
-        let doc = loadgen::sweep_to_json(&reports);
+        let doc = loadgen::grid_to_json(&groups);
         let path = "BENCH_serve.json";
         std::fs::write(path, doc.to_string_pretty()).expect("write BENCH_serve.json");
         println!("wrote {path}");
-    }
-
-    // graceful drain: every accepted request completed before this returns
-    let final_stats = net.shutdown();
-    for (name, generation, s) in final_stats {
-        println!("final model={name} generation={generation} served={} rejected={}",
-                 s.served, s.rejected);
     }
     println!("drain: complete");
 }

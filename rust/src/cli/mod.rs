@@ -90,9 +90,10 @@ COMMANDS:
                             SIGTERM (or --duration-s) drains gracefully and
                             prints final per-model stats + `drain: complete`
   loadgen --addr <h:p>      open-loop Poisson load generator against a running
-                            serve --listen: measures p50/p95/p99 latency from
-                            the scheduled arrival time (coordinated-omission
-                            free) and saturation throughput over --rates
+                            serve --listen: measures p50/p95/p99/p99.9 latency
+                            from the scheduled arrival time (coordinated-
+                            omission free) and saturation throughput over
+                            --rates, crossed with a --conns connection ladder
 
 OPTIONS:
   --artifacts <dir>         artifact directory            [default: artifacts]
@@ -120,6 +121,13 @@ OPTIONS:
   --overflow <policy>       full-queue behavior: block|reject [default: block]
   --max-batch <n>           dynamic batching cap          [default: 32]
   --window-us <n>           batching window in us         [default: 200]
+  --net-model <model>       serve --listen connection handling: mux (one
+                            readiness-driven event loop, bounded threads at
+                            any connection count) | threads (one handler
+                            thread per connection, the A/B baseline)
+                                                 [default: mux on unix]
+  --max-conns <n>           serve --listen open-connection limit; accepts
+                            beyond it are shed with 503 [default: 4096]
   --addr-file <path>        serve --listen: write the bound host:port (the
                             resolved ephemeral port with --listen host:0)
   --duration-s <secs>       serve --listen: exit after this long (otherwise
@@ -130,7 +138,8 @@ OPTIONS:
   --rate <rps>              loadgen: offered arrival rate [default: 200]
   --rates <r1,r2,...>       loadgen: sweep these rates and report the
                             saturation throughput across them
-  --conns <n>               loadgen: client connections   [default: 4]
+  --conns <n1,n2,...>       loadgen: client connections; a comma list sweeps
+                            every rate at each count      [default: 4]
   --json <path>             loadgen: write BENCH_serve.json-style report
   --quiet                   errors only
 ";

@@ -71,13 +71,28 @@
 //!   replacement (`POST /reload`; in-flight requests finish on the model
 //!   they resolved), load shedding as `503` under `OverflowPolicy::Reject`,
 //!   and graceful drain on SIGTERM/shutdown (stop accepting, complete
-//!   every accepted request, emit final per-model stats).  `serve::loadgen`
+//!   every accepted request, emit final per-model stats).  Connections are
+//!   multiplexed (`serve::NetModel`, CLI `--net-model`): the default `mux`
+//!   model runs every connection as a nonblocking state machine on one
+//!   epoll-driven event loop (raw `epoll`/`poll(2)` FFI, no async runtime),
+//!   dispatching parsed requests to the worker pools off-loop and resuming
+//!   partial writes on readiness — thread count stays bounded at any
+//!   connection count, idle keep-alive clients cost a table entry instead
+//!   of a parked thread, and accepts beyond `--max-conns` shed with `503`;
+//!   the `threads` model keeps the handler-thread-per-connection baseline
+//!   for A/B, and both share one request handler + response renderer, so
+//!   wire behavior is byte-identical.  Connection counters
+//!   (accepted/open/stalls/shed) surface on `GET /stats` and a periodic
+//!   stats line.  `serve::loadgen`
 //!   (`tbn loadgen`, `benches/table_serve.rs`) drives it open-loop with
-//!   Poisson arrivals, measuring p50/p95/p99 from the scheduled arrival
-//!   time (coordinated-omission-free) and saturation throughput
+//!   Poisson arrivals, measuring p50/p95/p99/p99.9 from the scheduled
+//!   arrival time (coordinated-omission-free), saturation throughput, and
+//!   latency across a `--conns` connection ladder, A/B per net model
 //!   (`BENCH_serve.json`); `tests/net_serving.rs` pins wire parity —
 //!   an HTTP answer is bit-identical to `Engine::forward` — plus
-//!   shedding, torn-model-free swaps, and drain completeness.
+//!   shedding, torn-model-free swaps, drain completeness, and the
+//!   connection state machine (slowloris dribble, pipelined bursts,
+//!   multi-MB partial-write resume, idle-conn drain) on both net models.
 //!   Both packed paths also thread *within* one forward:
 //!   `Engine::with_threads` (CLI `--threads`, env `TBN_THREADS`) splits the
 //!   independent output rows / conv positions of each packed kernel across

@@ -17,8 +17,8 @@ use tiledbits::nn::{init_backend, lower_arch_spec, threads_from_env, Engine,
                     SimdBackend};
 use tiledbits::runtime::Runtime;
 use tiledbits::serve::{install_shutdown_flag, loadgen, BatchPolicy, LoadgenConfig,
-                       ModelBuilder, ModelRegistry, NetServer, OverflowPolicy,
-                       ServePolicy, Server, ServerStats};
+                       ModelBuilder, ModelRegistry, NetConfig, NetModel, NetServer,
+                       OverflowPolicy, ServePolicy, Server, ServerStats};
 use tiledbits::tbn::AlphaMode;
 use tiledbits::train::{export, TrainOptions};
 use tiledbits::util::{log, Rng};
@@ -115,6 +115,40 @@ fn f64_flag(cli: &Cli, key: &str, default: f64) -> Result<f64> {
             _ => Err(anyhow!("invalid --{key} {v:?} (want a positive number)")),
         },
         None => Ok(default),
+    }
+}
+
+/// `--net-model mux|threads` (the serving front end's connection model,
+/// default mux on unix), parsed loudly like the other A/B switches.
+fn net_model_opt(cli: &Cli) -> Result<NetModel> {
+    match cli.opt("net-model") {
+        Some(v) => NetModel::parse(v).map_err(|e| anyhow!(e)),
+        None => Ok(NetModel::default()),
+    }
+}
+
+/// Loud comma-separated positive-integer list (`--conns 1,64,512`); a
+/// bare integer is a 1-point list.
+fn usize_list_flag(cli: &Cli, key: &str, default: usize) -> Result<Vec<usize>> {
+    match cli.opt(key) {
+        Some(list) => {
+            let mut v = Vec::new();
+            for part in list.split(',') {
+                let n = part
+                    .trim()
+                    .parse::<usize>()
+                    .ok()
+                    .filter(|n| *n >= 1)
+                    .ok_or_else(|| {
+                        anyhow!("invalid --{key} entry {:?} \
+                                 (want integers >= 1, comma-separated)",
+                                part.trim())
+                    })?;
+                v.push(n);
+            }
+            Ok(v)
+        }
+        None => Ok(vec![default]),
     }
 }
 
@@ -306,23 +340,49 @@ fn serve_listen(cli: &Cli, addr: SocketAddr) -> Result<()> {
         build_arch_server(name, seed, p, path, layout, threads, simd, &builder_policy,
                           workers)
     });
-    let net = NetServer::start(registry, &addr.to_string(), Some(builder))
+    // enough dispatchers to keep every worker's batches formed, bounded so
+    // the mux model's thread count stays independent of connection count
+    let net_config = NetConfig {
+        model: net_model_opt(cli)?,
+        max_conns: usize_flag(cli, "max-conns", 4096, 1)?,
+        dispatch_threads: (workers * policy.batch.max_batch).clamp(8, 64),
+    };
+    let net = NetServer::start_with(registry, &addr.to_string(), Some(builder),
+                                    net_config.clone())
         .map_err(|e| anyhow!(e))?;
     let bound = net.addr();
     // machine-readable: resolves `:0` to the real port for scripts/CI
     println!("listening on {bound}");
+    info!("serve", "net model {} (max {} conns, {} dispatchers)",
+          net.net_stats().model, net_config.max_conns, net_config.dispatch_threads);
     if let Some(file) = cli.opt("addr-file") {
         std::fs::write(file, format!("{bound}\n"))
             .map_err(|e| anyhow!("write {file}: {e}"))?;
     }
     let stop = install_shutdown_flag();
     let deadline = duration_s.map(|s| Instant::now() + Duration::from_secs_f64(s));
+    let mut ticks = 0u64;
     while !stop.load(Ordering::SeqCst)
         && !deadline.is_some_and(|d| Instant::now() >= d)
     {
         std::thread::sleep(Duration::from_millis(100));
+        ticks += 1;
+        // periodic stats line (~5s): connection counters + request totals
+        if ticks % 50 == 0 {
+            let ns = net.net_stats();
+            let (served, rejected) = net.registry().totals();
+            info!("serve", "net={} open={} accepted={} closed={} read_stalls={} \
+                   write_stalls={} shed_at_accept={} served={served} \
+                   rejected={rejected}",
+                  ns.model, ns.open, ns.accepted, ns.closed, ns.read_stalls,
+                  ns.write_stalls, ns.shed_at_accept);
+        }
     }
     info!("serve", "shutdown requested: draining");
+    let ns = net.net_stats();
+    println!("final net model={} accepted={} read_stalls={} write_stalls={} \
+              shed_at_accept={}",
+             ns.model, ns.accepted, ns.read_stalls, ns.write_stalls, ns.shed_at_accept);
     for (name, generation, s) in net.shutdown() {
         let tail = s
             .latency_percentiles()
@@ -500,12 +560,14 @@ fn dispatch(cli: &Cli) -> Result<()> {
             let addr = cli
                 .opt("addr")
                 .ok_or_else(|| anyhow!("loadgen needs --addr <host:port>"))?;
+            // --conns 1,64,512 crosses every rate with a connection ladder
+            let conns_list = usize_list_flag(cli, "conns", 4)?;
             let base = LoadgenConfig {
                 addr: addr.to_string(),
                 model: cli.opt_or("model", "").to_string(),
                 rate_rps: f64_flag(cli, "rate", 200.0)?,
                 duration: Duration::from_secs_f64(f64_flag(cli, "duration-s", 2.0)?),
-                conns: usize_flag(cli, "conns", 4, 1)?,
+                conns: conns_list[0],
                 seed: cli.opt_usize("seed").unwrap_or(1) as u64,
             };
             // --rates 100,400,1600 sweeps; --rate alone is a 1-point sweep
@@ -528,7 +590,8 @@ fn dispatch(cli: &Cli) -> Result<()> {
                 }
                 None => vec![base.rate_rps],
             };
-            let reports = loadgen::sweep(&base, &rates).map_err(|e| anyhow!(e))?;
+            let reports =
+                loadgen::sweep_grid(&base, &rates, &conns_list).map_err(|e| anyhow!(e))?;
             for r in &reports {
                 println!("{}", r.summary());
             }

@@ -13,11 +13,14 @@
 //! measurement would silently pace itself to the server and report
 //! flattering tails).
 //!
-//! Each report carries completed/rejected/error counts, nearest-rank
-//! p50/p95/p99 latency, and achieved throughput.  [`sweep`] runs a rate
-//! ladder and [`saturation_rps`] reads off the knee: the highest achieved
-//! throughput across offered rates — the saturation number `tbn loadgen`
-//! and `benches/table_serve.rs` report and `BENCH_serve.json` records.
+//! Each report carries completed/rejected/error counts, per-connection
+//! reconnect totals, nearest-rank p50/p95/p99/p99.9 latency, and achieved
+//! throughput.  [`sweep`] runs a rate ladder, [`sweep_grid`] crosses it
+//! with a connection-count ladder (how the mux front end's latency-vs-
+//! #conns tables are measured), and [`saturation_rps`] reads off the
+//! knee: the highest achieved throughput across offered rates — the
+//! saturation number `tbn loadgen` and `benches/table_serve.rs` report
+//! and `BENCH_serve.json` records.
 //!
 //! The HTTP client side is the mirror of `net.rs`'s server framing: one
 //! keep-alive connection per client thread, `POST /infer` with a
@@ -73,6 +76,11 @@ pub struct LoadgenReport {
     pub rejected: usize,
     /// Transport/HTTP failures (connect refused, truncated responses, 4xx).
     pub errors: usize,
+    /// Client connections the load was offered over.
+    pub conns: usize,
+    /// Connection rebuilds after the initial connect, summed over clients
+    /// (a healthy keep-alive server holds this at 0).
+    pub reconnects: usize,
     pub elapsed_s: f64,
     /// Completed requests per second of wall time.
     pub achieved_rps: f64,
@@ -82,6 +90,7 @@ pub struct LoadgenReport {
     pub p50_us: u64,
     pub p95_us: u64,
     pub p99_us: u64,
+    pub p999_us: u64,
     pub max_us: u64,
 }
 
@@ -89,11 +98,12 @@ impl LoadgenReport {
     /// The one-line machine-greppable summary `tbn loadgen` prints.
     pub fn summary(&self) -> String {
         format!(
-            "loadgen model={} offered_rps={:.0} sent={} completed={} rejected={} \
-             errors={} achieved_rps={:.1} p50_us={} p95_us={} p99_us={} max_us={}",
-            self.model, self.offered_rps, self.sent, self.completed, self.rejected,
-            self.errors, self.achieved_rps, self.p50_us, self.p95_us, self.p99_us,
-            self.max_us
+            "loadgen model={} offered_rps={:.0} conns={} sent={} completed={} \
+             rejected={} errors={} reconnects={} achieved_rps={:.1} p50_us={} \
+             p95_us={} p99_us={} p999_us={} max_us={}",
+            self.model, self.offered_rps, self.conns, self.sent, self.completed,
+            self.rejected, self.errors, self.reconnects, self.achieved_rps,
+            self.p50_us, self.p95_us, self.p99_us, self.p999_us, self.max_us
         )
     }
 
@@ -103,14 +113,17 @@ impl LoadgenReport {
             ("name", Json::Str(name.to_string())),
             ("model", Json::Str(self.model.clone())),
             ("offered_rps", Json::Num(self.offered_rps)),
+            ("conns", Json::Num(self.conns as f64)),
             ("sent", Json::Num(self.sent as f64)),
             ("completed", Json::Num(self.completed as f64)),
             ("rejected", Json::Num(self.rejected as f64)),
             ("errors", Json::Num(self.errors as f64)),
+            ("reconnects", Json::Num(self.reconnects as f64)),
             ("achieved_rps", Json::Num(self.achieved_rps)),
             ("p50_us", Json::Num(self.p50_us as f64)),
             ("p95_us", Json::Num(self.p95_us as f64)),
             ("p99_us", Json::Num(self.p99_us as f64)),
+            ("p999_us", Json::Num(self.p999_us as f64)),
         ])
     }
 }
@@ -249,6 +262,7 @@ struct ClientTally {
     completed: usize,
     rejected: usize,
     errors: usize,
+    reconnects: usize,
     latencies_us: Vec<u64>,
 }
 
@@ -256,8 +270,14 @@ struct ClientTally {
 /// `rate` until `deadline`, measuring sojourn from the scheduled arrival.
 fn client_loop(addr: &str, model: &str, in_dim: usize, rate: f64, start: Instant,
                deadline: Instant, mut rng: Rng) -> ClientTally {
-    let mut tally =
-        ClientTally { sent: 0, completed: 0, rejected: 0, errors: 0, latencies_us: Vec::new() };
+    let mut tally = ClientTally {
+        sent: 0,
+        completed: 0,
+        rejected: 0,
+        errors: 0,
+        reconnects: 0,
+        latencies_us: Vec::new(),
+    };
     let mut client = HttpClient::connect(addr).ok();
     // first arrival one gap into the window, like every later one
     let mut scheduled = start + exp_gap(&mut rng, rate);
@@ -276,6 +296,7 @@ fn client_loop(addr: &str, model: &str, in_dim: usize, rate: f64, start: Instant
         // and the next slot retries, so a draining server doesn't wedge us
         if client.is_none() {
             client = HttpClient::connect(addr).ok();
+            tally.reconnects += 1;
         }
         tally.sent += 1;
         match client.as_mut().map(|c| c.request("POST", "/infer", Some(&body))) {
@@ -339,12 +360,13 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport, String> {
     });
     let elapsed_s = start.elapsed().as_secs_f64();
     let mut latencies: Vec<u64> = Vec::new();
-    let (mut sent, mut completed, mut rejected, mut errors) = (0, 0, 0, 0);
+    let (mut sent, mut completed, mut rejected, mut errors, mut reconnects) = (0, 0, 0, 0, 0);
     for t in tallies {
         sent += t.sent;
         completed += t.completed;
         rejected += t.rejected;
         errors += t.errors;
+        reconnects += t.reconnects;
         latencies.extend(t.latencies_us);
     }
     latencies.sort_unstable();
@@ -355,11 +377,14 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport, String> {
         completed,
         rejected,
         errors,
+        conns,
+        reconnects,
         elapsed_s,
         achieved_rps: completed as f64 / elapsed_s.max(1e-9),
         p50_us: percentile(&latencies, 0.50),
         p95_us: percentile(&latencies, 0.95),
         p99_us: percentile(&latencies, 0.99),
+        p999_us: percentile(&latencies, 0.999),
         max_us: latencies.last().copied().unwrap_or(0),
     })
 }
@@ -378,24 +403,88 @@ pub fn sweep(base: &LoadgenConfig, rates: &[f64]) -> Result<Vec<LoadgenReport>, 
     Ok(out)
 }
 
+/// Run a rate × connection-count grid: one [`run`] per `(conns, rate)`
+/// pair, in connection-ladder-major order (how `tbn loadgen --conns 1,64,512`
+/// and the bench's latency-vs-#conns tables are produced).
+pub fn sweep_grid(
+    base: &LoadgenConfig,
+    rates: &[f64],
+    conns_list: &[usize],
+) -> Result<Vec<LoadgenReport>, String> {
+    let mut out = Vec::with_capacity(rates.len() * conns_list.len());
+    for (j, &conns) in conns_list.iter().enumerate() {
+        for (i, &r) in rates.iter().enumerate() {
+            let cfg = LoadgenConfig {
+                rate_rps: r,
+                conns,
+                seed: base.seed.wrapping_add((j * rates.len() + i) as u64),
+                ..base.clone()
+            };
+            out.push(run(&cfg)?);
+        }
+    }
+    Ok(out)
+}
+
 /// Saturation throughput: the highest achieved rate across a sweep — past
 /// the knee, offering more only grows rejects and tails, not completions.
 pub fn saturation_rps(reports: &[LoadgenReport]) -> f64 {
     reports.iter().map(|r| r.achieved_rps).fold(0.0, f64::max)
 }
 
-/// The `BENCH_serve.json` document for a sweep: one row per offered rate
-/// plus the saturation-throughput row.
-pub fn sweep_to_json(reports: &[LoadgenReport]) -> Json {
+/// Rows for one sweep: one per report (named `rate{R}_conns{C}`, or
+/// `"{net_model} rate{R} conns{C}"` when tagged) plus the group's
+/// saturation-throughput row.
+fn report_rows(reports: &[LoadgenReport], net_model: Option<&str>) -> Vec<Json> {
     let mut runs: Vec<Json> = reports
         .iter()
-        .map(|r| r.to_json(&format!("rate{:.0}", r.offered_rps)))
+        .map(|r| {
+            let name = match net_model {
+                Some(m) => format!("{m} rate{:.0} conns{}", r.offered_rps, r.conns),
+                None => format!("rate{:.0}_conns{}", r.offered_rps, r.conns),
+            };
+            let mut row = r.to_json(&name);
+            if let Some(m) = net_model {
+                row.set("net_model", Json::Str(m.to_string()));
+            }
+            row
+        })
         .collect();
-    runs.push(Json::obj(vec![
-        ("name", Json::Str("saturation".to_string())),
+    let mut sat = Json::obj(vec![
+        (
+            "name",
+            Json::Str(match net_model {
+                Some(m) => format!("saturation_{m}"),
+                None => "saturation".to_string(),
+            }),
+        ),
         ("model", Json::Str(reports.first().map(|r| r.model.clone()).unwrap_or_default())),
         ("saturation_rps", Json::Num(saturation_rps(reports))),
-    ]));
+    ]);
+    if let Some(m) = net_model {
+        sat.set("net_model", Json::Str(m.to_string()));
+    }
+    runs.push(sat);
+    runs
+}
+
+/// The `BENCH_serve.json` document for a sweep: one row per run plus the
+/// saturation-throughput row.
+pub fn sweep_to_json(reports: &[LoadgenReport]) -> Json {
+    Json::obj(vec![
+        ("bench", Json::Str("table_serve".to_string())),
+        ("runs", Json::Arr(report_rows(reports, None))),
+    ])
+}
+
+/// The `BENCH_serve.json` document for an A/B grid: each group is one net
+/// model's sweep; its rows carry a `net_model` field and a per-model
+/// saturation row.
+pub fn grid_to_json(groups: &[(String, Vec<LoadgenReport>)]) -> Json {
+    let mut runs = Vec::new();
+    for (net_model, reports) in groups {
+        runs.extend(report_rows(reports, Some(net_model)));
+    }
     Json::obj(vec![
         ("bench", Json::Str("table_serve".to_string())),
         ("runs", Json::Arr(runs)),
@@ -434,29 +523,54 @@ mod tests {
         assert!(parse_response_header(b"HTTP/1.1 abc").is_err());
     }
 
-    #[test]
-    fn sweep_json_has_rate_and_saturation_rows() {
-        let r = LoadgenReport {
+    fn report(rate: f64, conns: usize, achieved: f64) -> LoadgenReport {
+        LoadgenReport {
             model: "m".into(),
-            offered_rps: 100.0,
+            offered_rps: rate,
             sent: 10,
             completed: 9,
             rejected: 1,
             errors: 0,
+            conns,
+            reconnects: 0,
             elapsed_s: 1.0,
-            achieved_rps: 9.0,
+            achieved_rps: achieved,
             p50_us: 5,
             p95_us: 9,
             p99_us: 9,
+            p999_us: 9,
             max_us: 9,
-        };
-        let doc = sweep_to_json(&[r]);
+        }
+    }
+
+    #[test]
+    fn sweep_json_has_rate_and_saturation_rows() {
+        let doc = sweep_to_json(&[report(100.0, 4, 9.0)]);
         let runs = doc.get("runs").and_then(Json::as_arr).unwrap();
         assert_eq!(runs.len(), 2);
-        assert_eq!(runs[0].str_or("name", ""), "rate100");
+        assert_eq!(runs[0].str_or("name", ""), "rate100_conns4");
         assert_eq!(runs[0].usize_or("completed", 0), 9);
+        assert_eq!(runs[0].usize_or("conns", 0), 4);
+        assert_eq!(runs[0].usize_or("reconnects", 99), 0);
+        assert_eq!(runs[0].usize_or("p999_us", 0), 9);
         assert_eq!(runs[1].str_or("name", ""), "saturation");
         assert!((runs[1].f64_or("saturation_rps", 0.0) - 9.0).abs() < 1e-9);
         assert_eq!(doc.str_or("bench", ""), "table_serve");
+    }
+
+    #[test]
+    fn grid_json_tags_rows_with_net_model() {
+        let doc = grid_to_json(&[
+            ("mux".to_string(), vec![report(2000.0, 512, 1800.0)]),
+            ("threads".to_string(), vec![report(2000.0, 4, 1500.0)]),
+        ]);
+        let runs = doc.get("runs").and_then(Json::as_arr).unwrap();
+        assert_eq!(runs.len(), 4);
+        assert_eq!(runs[0].str_or("name", ""), "mux rate2000 conns512");
+        assert_eq!(runs[0].str_or("net_model", ""), "mux");
+        assert_eq!(runs[1].str_or("name", ""), "saturation_mux");
+        assert!((runs[1].f64_or("saturation_rps", 0.0) - 1800.0).abs() < 1e-9);
+        assert_eq!(runs[2].str_or("net_model", ""), "threads");
+        assert_eq!(runs[3].str_or("name", ""), "saturation_threads");
     }
 }

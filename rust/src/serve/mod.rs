@@ -23,21 +23,30 @@
 //! ([`ServerStats::latency_percentiles`]: p50/p95/p99, printed by
 //! `tbn serve`).
 //!
-//! Network layer (PR 9): [`registry::ModelRegistry`] holds many named
-//! pools in one process with `Arc`-swap hot model replacement,
+//! Network layer: [`registry::ModelRegistry`] holds many named pools in
+//! one process with `Arc`-swap hot model replacement, and
 //! [`net::NetServer`] fronts the registry with a `std::net` TCP listener
 //! speaking minimal HTTP/1.1 (load shedding as `503`, graceful drain on
-//! shutdown/SIGTERM), and [`loadgen`] is the open-loop Poisson load
-//! generator that turns "heavy traffic" into measured p50/p95/p99 and
-//! saturation-throughput numbers (`tbn loadgen`, `benches/table_serve.rs`,
-//! `BENCH_serve.json`).
+//! shutdown/SIGTERM).  Connections are handled by one of two
+//! [`net::NetModel`]s: the default readiness-driven `mux` event loop
+//! (epoll/poll FFI + nonblocking sockets; bounded threads at any
+//! connection count, blocking inference dispatched off-loop to keep the
+//! pool semantics above intact) or the thread-per-connection `threads`
+//! baseline kept for A/B comparison.  [`loadgen`] is the open-loop
+//! Poisson load generator that turns "heavy traffic" into measured
+//! p50/p95/p99/p99.9 and saturation-throughput numbers across connection
+//! counts (`tbn loadgen`, `benches/table_serve.rs`, `BENCH_serve.json`).
 
 pub mod loadgen;
+#[cfg(unix)]
+mod mux;
 pub mod net;
 pub mod registry;
 
 pub use loadgen::{LoadgenConfig, LoadgenReport};
-pub use net::{install_shutdown_flag, ModelBuilder, NetServer};
+pub use net::{
+    install_shutdown_flag, ModelBuilder, NetConfig, NetModel, NetServer, NetStatsSnapshot,
+};
 pub use registry::{ModelInfo, ModelRegistry};
 
 use std::collections::VecDeque;

@@ -1,0 +1,866 @@
+//! Readiness-driven connection multiplexer for [`NetServer`]: one epoll
+//! event loop owns every connection, so thousands of idle keep-alive
+//! clients cost file descriptors — not OS threads.
+//!
+//! [`NetServer`]: super::NetServer
+//!
+//! # Design
+//!
+//! The `threads` net model (the PR 9 baseline, kept in `net.rs` as the A/B
+//! toggle) burns one OS thread and a 100 ms poll-timeout loop per
+//! connection — idle clients squander exactly the compute the packed
+//! kernels saved.  This module replaces it with a single event-loop thread
+//! over raw `epoll_create1(2)`/`epoll_ctl(2)`/`epoll_wait(2)` FFI (the
+//! same zero-new-deps discipline as the `signal(2)` shim; a `poll(2)`
+//! fallback keeps non-Linux unix targets building) and nonblocking
+//! sockets.  Each connection is an explicit state machine:
+//!
+//! ```text
+//! Reading --(full request buffered)--> InFlight --(pool answers)-->
+//! Writing --(response flushed; keep-alive)--> Reading (pipelined
+//! leftovers parsed immediately) | --(Connection: close / drain)--> closed
+//! ```
+//!
+//! * **Reading** — readable events accumulate bytes until the header block
+//!   plus `Content-Length` body is complete (the same framing limits as
+//!   the threads model).  A partial request parked by `EWOULDBLOCK` counts
+//!   one `read_stall` (slowloris visibility).
+//! * **InFlight** — the parsed request is handed to a small dispatcher
+//!   pool which calls the *blocking* [`handle`] path (`Server::infer`
+//!   and friends), so the worker pool's batching, backpressure and
+//!   503-shedding semantics — and the exact response bytes — are
+//!   unchanged from the threads model.  Read interest is dropped while a
+//!   request is in flight: one request per connection at a time, answers
+//!   in arrival order.
+//! * **Writing** — the rendered response is written with partial-write
+//!   resume: `EWOULDBLOCK` counts a `write_stall`, arms `EPOLLOUT`, and
+//!   the flush continues on the next writable event.  A full socket
+//!   buffer never blocks the loop.
+//!
+//! Admission control: beyond `max_conns` open connections, an accept is
+//! answered `503` and closed immediately (`shed_at_accept` in the
+//! connection counters) — the accept queue cannot grow an unbounded
+//! connection table.
+//!
+//! **Graceful drain**: stop accepting (the listener is deregistered and
+//! dropped), close idle connections, flush every in-flight response to
+//! completion, then close — the loop exits only when the connection table
+//! is empty, so every dispatched request is answered before
+//! [`NetServer::shutdown`] returns.  Dispatcher threads are joined last.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+use super::net::{err_json, find_header_end, handle, parse_header, render_response,
+                 would_block, HttpRequest, ModelBuilder, NetStats, MAX_BODY_BYTES,
+                 MAX_HEADER_BYTES};
+use super::registry::ModelRegistry;
+
+/// Poll token of the accept socket.
+const TOK_LISTENER: u64 = 0;
+/// Poll token of the wakeup pipe (dispatch completions, shutdown).
+const TOK_WAKER: u64 = 1;
+/// First connection id; ids are poll tokens.
+const TOK_BASE: u64 = 2;
+/// Wait timeout so the loop re-checks the closing flag even if a wakeup
+/// byte is lost.
+const WAIT_MS: i32 = 100;
+/// Accepts processed per listener readiness event (bounds one event's
+/// work; the listener stays level-triggered so the rest fire next wait).
+const ACCEPT_BURST: usize = 1024;
+
+// ---------------------------------------------------------------------------
+// Readiness backend: epoll(7) on Linux, poll(2) elsewhere on unix
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+pub(super) mod sys {
+    //! Raw `epoll` FFI against the platform libc (no signal/epoll crate in
+    //! the vendor set).  Safety: every syscall takes either a valid owned
+    //! fd or a pointer to a stack-local `EpollEvent`; `epoll_wait` writes
+    //! at most `maxevents` entries into the array we size it with.
+
+    use std::io;
+    use std::os::unix::io::RawFd;
+
+    /// Kernel `struct epoll_event`: packed on x86-64 (the kernel ABI),
+    /// naturally aligned everywhere else.
+    #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+    #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    const EPOLLIN: u32 = 0x1;
+    const EPOLLOUT: u32 = 0x4;
+    const EPOLLERR: u32 = 0x8;
+    const EPOLLHUP: u32 = 0x10;
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_DEL: i32 = 2;
+    const EPOLL_CTL_MOD: i32 = 3;
+    const EPOLL_CLOEXEC: i32 = 0x80000;
+    const MAX_EVENTS: usize = 64;
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32,
+                      timeout: i32) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+
+    /// One epoll instance; tokens are opaque `u64`s carried in
+    /// `epoll_event.data`.
+    pub(crate) struct Poller {
+        epfd: RawFd,
+    }
+
+    impl Poller {
+        pub(crate) fn new() -> io::Result<Poller> {
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Poller { epfd })
+        }
+
+        fn ctl(&self, op: i32, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+            let mut ev = EpollEvent { events, data: token };
+            let rc = unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) };
+            if rc < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        fn mask(readable: bool, writable: bool) -> u32 {
+            (if readable { EPOLLIN } else { 0 }) | (if writable { EPOLLOUT } else { 0 })
+        }
+
+        pub(crate) fn add(&self, fd: RawFd, token: u64, readable: bool,
+                          writable: bool) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, Self::mask(readable, writable), token)
+        }
+
+        pub(crate) fn modify(&self, fd: RawFd, token: u64, readable: bool,
+                             writable: bool) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, Self::mask(readable, writable), token)
+        }
+
+        pub(crate) fn remove(&self, fd: RawFd) {
+            // a non-null event pointer keeps pre-2.6.9 kernels happy
+            let _ = self.ctl(EPOLL_CTL_DEL, fd, 0, 0);
+        }
+
+        /// Collect `(token, readable, writable)` readiness; error/hangup
+        /// reports as both so the state machine observes it either way.
+        pub(crate) fn wait(&self, out: &mut Vec<(u64, bool, bool)>,
+                           timeout_ms: i32) -> io::Result<()> {
+            let mut evs = [EpollEvent { events: 0, data: 0 }; MAX_EVENTS];
+            let n = unsafe {
+                epoll_wait(self.epfd, evs.as_mut_ptr(), MAX_EVENTS as i32, timeout_ms)
+            };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(e);
+            }
+            for ev in evs.iter().take(n as usize) {
+                // field reads copy out of the (possibly packed) struct
+                let events = ev.events;
+                let token = ev.data;
+                let hup = events & (EPOLLERR | EPOLLHUP) != 0;
+                out.push((token, events & EPOLLIN != 0 || hup,
+                          events & EPOLLOUT != 0 || hup));
+            }
+            Ok(())
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            unsafe {
+                close(self.epfd);
+            }
+        }
+    }
+}
+
+#[cfg(all(unix, not(target_os = "linux")))]
+pub(super) mod sys {
+    //! `poll(2)` fallback for non-Linux unix targets: a registration map
+    //! rebuilt into a `pollfd` array per wait.  O(n) per wait where epoll
+    //! is O(ready), but it keeps every unix target building and correct.
+
+    use std::collections::HashMap;
+    use std::io;
+    use std::os::unix::io::RawFd;
+    use std::sync::Mutex;
+
+    #[repr(C)]
+    struct PollFd {
+        fd: i32,
+        events: i16,
+        revents: i16,
+    }
+
+    const POLLIN: i16 = 0x1;
+    const POLLOUT: i16 = 0x4;
+    const POLLERR: i16 = 0x8;
+    const POLLHUP: i16 = 0x10;
+    const POLLNVAL: i16 = 0x20;
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: u32, timeout: i32) -> i32;
+    }
+
+    pub(crate) struct Poller {
+        regs: Mutex<HashMap<RawFd, (u64, bool, bool)>>,
+    }
+
+    impl Poller {
+        pub(crate) fn new() -> io::Result<Poller> {
+            Ok(Poller { regs: Mutex::new(HashMap::new()) })
+        }
+
+        pub(crate) fn add(&self, fd: RawFd, token: u64, readable: bool,
+                          writable: bool) -> io::Result<()> {
+            self.regs.lock().unwrap().insert(fd, (token, readable, writable));
+            Ok(())
+        }
+
+        pub(crate) fn modify(&self, fd: RawFd, token: u64, readable: bool,
+                             writable: bool) -> io::Result<()> {
+            self.add(fd, token, readable, writable)
+        }
+
+        pub(crate) fn remove(&self, fd: RawFd) {
+            self.regs.lock().unwrap().remove(&fd);
+        }
+
+        pub(crate) fn wait(&self, out: &mut Vec<(u64, bool, bool)>,
+                           timeout_ms: i32) -> io::Result<()> {
+            let (mut fds, tokens): (Vec<PollFd>, Vec<u64>) = {
+                let regs = self.regs.lock().unwrap();
+                regs.iter()
+                    .map(|(&fd, &(token, r, w))| {
+                        let events = (if r { POLLIN } else { 0 })
+                            | (if w { POLLOUT } else { 0 });
+                        (PollFd { fd, events, revents: 0 }, token)
+                    })
+                    .unzip()
+            };
+            let n = unsafe { poll(fds.as_mut_ptr(), fds.len() as u32, timeout_ms) };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(e);
+            }
+            for (pfd, &token) in fds.iter().zip(&tokens) {
+                let hup = pfd.revents & (POLLERR | POLLHUP | POLLNVAL) != 0;
+                if pfd.revents != 0 {
+                    out.push((token, pfd.revents & POLLIN != 0 || hup,
+                              pfd.revents & POLLOUT != 0 || hup));
+                }
+            }
+            Ok(())
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Off-loop dispatch: blocking `handle` calls run on a small thread pool
+// ---------------------------------------------------------------------------
+
+struct Job {
+    conn: u64,
+    req: HttpRequest,
+}
+
+struct Completion {
+    conn: u64,
+    bytes: Vec<u8>,
+    keep_alive: bool,
+}
+
+/// Job queue + completion mailbox between the event loop and the
+/// dispatcher pool.  Jobs block in `Server::infer` on a dispatcher thread
+/// — never on the loop — so `OverflowPolicy::Block` stalls one dispatcher,
+/// not every connection.
+#[derive(Default)]
+struct Dispatch {
+    jobs: Mutex<(VecDeque<Job>, bool)>,
+    jobs_cv: Condvar,
+    done: Mutex<Vec<Completion>>,
+}
+
+impl Dispatch {
+    fn push_job(&self, job: Job) {
+        let mut j = self.jobs.lock().unwrap();
+        j.0.push_back(job);
+        self.jobs_cv.notify_one();
+    }
+
+    fn close(&self) {
+        let mut j = self.jobs.lock().unwrap();
+        j.1 = true;
+        self.jobs_cv.notify_all();
+    }
+
+    /// Block for the next job; `None` once closed and drained.
+    fn pop_job(&self) -> Option<Job> {
+        let mut j = self.jobs.lock().unwrap();
+        loop {
+            if let Some(job) = j.0.pop_front() {
+                return Some(job);
+            }
+            if j.1 {
+                return None;
+            }
+            j = self.jobs_cv.wait(j).unwrap();
+        }
+    }
+}
+
+fn dispatcher_loop(dispatch: &Dispatch, registry: &ModelRegistry,
+                   builder: Option<&ModelBuilder>, net: &NetStats,
+                   closing: &AtomicBool, waker: &UnixStream) {
+    while let Some(job) = dispatch.pop_job() {
+        let (status, body) = handle(registry, builder, net, &job.req);
+        let keep = job.req.keep_alive && !closing.load(Ordering::SeqCst);
+        let bytes = render_response(status, &body, keep);
+        dispatch.done.lock().unwrap().push(Completion {
+            conn: job.conn,
+            bytes,
+            keep_alive: keep,
+        });
+        // best-effort wake: a full pipe means a wakeup is already pending
+        let _ = (&mut &*waker).write(&[1u8]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Connection state machine
+// ---------------------------------------------------------------------------
+
+enum ConnState {
+    /// Accumulating request bytes.
+    Reading,
+    /// A request is dispatched; read interest is off until it answers.
+    InFlight,
+    /// Response bytes pending in `out`.
+    Writing,
+}
+
+struct Conn {
+    stream: TcpStream,
+    /// Read accumulation; carries pipelined leftovers between requests.
+    buf: Vec<u8>,
+    /// Pending response bytes and the resume offset.
+    out: Vec<u8>,
+    out_pos: usize,
+    state: ConnState,
+    /// Whether the response in `out` permits another request after it.
+    keep_alive: bool,
+    /// Peer sent EOF while we still owed it a response: flush, then close.
+    peer_closed: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            buf: Vec::new(),
+            out: Vec::new(),
+            out_pos: 0,
+            state: ConnState::Reading,
+            keep_alive: true,
+            peer_closed: false,
+        }
+    }
+}
+
+/// Everything the event loop needs from [`NetServer::start_with`].
+pub(super) struct MuxParams {
+    pub registry: Arc<ModelRegistry>,
+    pub builder: Option<ModelBuilder>,
+    pub closing: Arc<AtomicBool>,
+    pub stats: Arc<NetStats>,
+    pub max_conns: usize,
+    pub dispatch_threads: usize,
+}
+
+/// Start the event loop on its own thread.  Returns the loop handle and a
+/// wakeup handle (write any byte to make the loop re-check the closing
+/// flag promptly).
+pub(super) fn spawn(listener: TcpListener, params: MuxParams)
+                    -> Result<(thread::JoinHandle<()>, UnixStream), String> {
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| format!("listener set_nonblocking: {e}"))?;
+    let poller = sys::Poller::new().map_err(|e| format!("poller: {e}"))?;
+    let (waker_rx, waker_tx) = UnixStream::pair().map_err(|e| format!("waker: {e}"))?;
+    waker_rx
+        .set_nonblocking(true)
+        .map_err(|e| format!("waker set_nonblocking: {e}"))?;
+    waker_tx
+        .set_nonblocking(true)
+        .map_err(|e| format!("waker set_nonblocking: {e}"))?;
+    poller
+        .add(listener.as_raw_fd(), TOK_LISTENER, true, false)
+        .map_err(|e| format!("register listener: {e}"))?;
+    poller
+        .add(waker_rx.as_raw_fd(), TOK_WAKER, true, false)
+        .map_err(|e| format!("register waker: {e}"))?;
+    let external_waker = waker_tx.try_clone().map_err(|e| format!("waker clone: {e}"))?;
+    let handle = thread::Builder::new()
+        .name("tbn-mux".into())
+        .spawn(move || EventLoop::new(poller, listener, waker_rx, waker_tx, params).run())
+        .map_err(|e| format!("spawn mux loop: {e}"))?;
+    Ok((handle, external_waker))
+}
+
+struct EventLoop {
+    poller: sys::Poller,
+    listener: Option<TcpListener>,
+    waker_rx: UnixStream,
+    conns: HashMap<u64, Conn>,
+    next_id: u64,
+    dispatch: Arc<Dispatch>,
+    dispatchers: Vec<thread::JoinHandle<()>>,
+    stats: Arc<NetStats>,
+    closing: Arc<AtomicBool>,
+    max_conns: usize,
+    draining: bool,
+}
+
+impl EventLoop {
+    fn new(poller: sys::Poller, listener: TcpListener, waker_rx: UnixStream,
+           waker_tx: UnixStream, params: MuxParams) -> EventLoop {
+        let dispatch = Arc::new(Dispatch::default());
+        let n = params.dispatch_threads.max(1);
+        let mut dispatchers = Vec::with_capacity(n);
+        for i in 0..n {
+            let d = dispatch.clone();
+            let registry = params.registry.clone();
+            let builder = params.builder.clone();
+            let stats = params.stats.clone();
+            let closing = params.closing.clone();
+            let waker = waker_tx.try_clone().expect("clone mux waker");
+            dispatchers.push(
+                thread::Builder::new()
+                    .name(format!("tbn-dispatch-{i}"))
+                    .spawn(move || {
+                        dispatcher_loop(&d, &registry, builder.as_ref(), &stats,
+                                        &closing, &waker)
+                    })
+                    .expect("spawn dispatcher"),
+            );
+        }
+        EventLoop {
+            poller,
+            listener: Some(listener),
+            waker_rx,
+            conns: HashMap::new(),
+            next_id: TOK_BASE,
+            dispatch,
+            dispatchers,
+            stats: params.stats,
+            closing: params.closing,
+            max_conns: params.max_conns.max(1),
+            draining: false,
+        }
+    }
+
+    fn run(mut self) {
+        let mut events: Vec<(u64, bool, bool)> = Vec::with_capacity(64);
+        loop {
+            if !self.draining && self.closing.load(Ordering::SeqCst) {
+                self.begin_drain();
+            }
+            if self.draining && self.conns.is_empty() {
+                break;
+            }
+            events.clear();
+            if self.poller.wait(&mut events, WAIT_MS).is_err() {
+                break; // unrecoverable polling failure: exit cleanly
+            }
+            for i in 0..events.len() {
+                let (token, readable, writable) = events[i];
+                match token {
+                    TOK_LISTENER => self.on_accept(),
+                    TOK_WAKER => self.on_waker(),
+                    id => self.on_conn(id, readable, writable),
+                }
+            }
+        }
+        // every connection is flushed and closed: stop the dispatchers
+        self.dispatch.close();
+        for h in self.dispatchers.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    fn on_accept(&mut self) {
+        for _ in 0..ACCEPT_BURST {
+            let Some(listener) = self.listener.as_ref() else { return };
+            match listener.accept() {
+                Ok((mut stream, _)) => {
+                    if self.draining {
+                        continue; // refused: dropped without a response
+                    }
+                    if self.conns.len() >= self.max_conns {
+                        // admission control: shed before the table grows.
+                        // The accepted socket is still blocking; the tiny
+                        // response fits any socket buffer.
+                        self.stats.count_shed_at_accept();
+                        let body = err_json("connection limit reached");
+                        let bytes =
+                            render_response("503 Service Unavailable", &body, false);
+                        let _ = stream.write_all(&bytes);
+                        continue;
+                    }
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    let id = self.next_id;
+                    self.next_id += 1;
+                    if self.poller.add(stream.as_raw_fd(), id, true, false).is_err() {
+                        continue;
+                    }
+                    self.stats.count_open();
+                    self.conns.insert(id, Conn::new(stream));
+                }
+                Err(e) if would_block(&e) => return,
+                // per-connection accept error (ECONNABORTED & co): go on
+                Err(_) => {}
+            }
+        }
+    }
+
+    fn on_waker(&mut self) {
+        let mut tmp = [0u8; 256];
+        loop {
+            match (&mut &self.waker_rx).read(&mut tmp) {
+                Ok(0) => break,
+                Ok(_) => continue,
+                Err(_) => break,
+            }
+        }
+        let done: Vec<Completion> = std::mem::take(&mut self.dispatch.done.lock().unwrap());
+        for c in done {
+            self.on_completion(c);
+        }
+    }
+
+    fn on_completion(&mut self, c: Completion) {
+        {
+            // the client may have vanished mid-flight; the pool already
+            // counted the request either way
+            let Some(conn) = self.conns.get_mut(&c.conn) else { return };
+            if !matches!(conn.state, ConnState::InFlight) {
+                return;
+            }
+            conn.out = c.bytes;
+            conn.out_pos = 0;
+            conn.keep_alive = c.keep_alive;
+            conn.state = ConnState::Writing;
+        }
+        self.flush_out(c.conn);
+    }
+
+    fn on_conn(&mut self, id: u64, readable: bool, writable: bool) {
+        if writable {
+            self.flush_out(id);
+        }
+        if readable && self.read_some(id) {
+            self.process_buf(id);
+        }
+    }
+
+    /// Drain readable bytes into the connection buffer.  Returns whether
+    /// the caller should try to parse a request from the buffer.
+    fn read_some(&mut self, id: u64) -> bool {
+        enum After {
+            Parse,
+            Ignore,
+            CloseClean,
+            CloseTruncated,
+        }
+        let after = {
+            let Some(conn) = self.conns.get_mut(&id) else { return false };
+            let mut tmp = [0u8; 16 * 1024];
+            let mut eof = false;
+            let mut dead = false;
+            loop {
+                match conn.stream.read(&mut tmp) {
+                    Ok(0) => {
+                        eof = true;
+                        break;
+                    }
+                    Ok(n) => conn.buf.extend_from_slice(&tmp[..n]),
+                    Err(e) if would_block(&e) => break,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        dead = true;
+                        break;
+                    }
+                }
+            }
+            if dead {
+                After::CloseClean
+            } else if eof {
+                match conn.state {
+                    ConnState::Reading if conn.buf.is_empty() => After::CloseClean,
+                    ConnState::Reading => After::CloseTruncated,
+                    // still owe a response: flush it, then close
+                    _ => {
+                        conn.peer_closed = true;
+                        After::Ignore
+                    }
+                }
+            } else {
+                After::Parse
+            }
+        };
+        match after {
+            After::Parse => true,
+            After::Ignore => false,
+            After::CloseClean => {
+                self.close_conn(id);
+                false
+            }
+            After::CloseTruncated => {
+                self.refuse(id, "truncated request");
+                false
+            }
+        }
+    }
+
+    /// Try to cut one complete request out of the connection buffer and
+    /// dispatch it.  Called after reads and after a keep-alive response
+    /// flush (pipelined leftovers).
+    fn process_buf(&mut self, id: u64) {
+        enum Action {
+            Wait,
+            Stalled,
+            Dispatch(HttpRequest),
+            Refuse(String),
+        }
+        let action = {
+            let Some(conn) = self.conns.get_mut(&id) else { return };
+            if !matches!(conn.state, ConnState::Reading) {
+                return;
+            }
+            match find_header_end(&conn.buf) {
+                Some(h) => match parse_header(&conn.buf[..h]) {
+                    Ok((method, path, content_length, keep_alive)) => {
+                        if content_length > MAX_BODY_BYTES {
+                            Action::Refuse(format!(
+                                "content-length {content_length} exceeds {MAX_BODY_BYTES}"
+                            ))
+                        } else if conn.buf.len() < h + 4 + content_length {
+                            Action::Stalled // body still arriving
+                        } else {
+                            let total = h + 4 + content_length;
+                            let body = conn.buf[h + 4..total].to_vec();
+                            conn.buf.drain(..total);
+                            Action::Dispatch(HttpRequest { method, path, body, keep_alive })
+                        }
+                    }
+                    Err(e) => Action::Refuse(e),
+                },
+                None if conn.buf.len() > MAX_HEADER_BYTES => {
+                    Action::Refuse("header block too large".into())
+                }
+                None if conn.buf.is_empty() => Action::Wait,
+                None => Action::Stalled,
+            }
+        };
+        match action {
+            Action::Wait => {}
+            Action::Stalled => {
+                // an incomplete request is parked in the buffer — the
+                // slowloris counter
+                self.stats.count_read_stall();
+            }
+            Action::Dispatch(req) => {
+                if let Some(conn) = self.conns.get_mut(&id) {
+                    conn.state = ConnState::InFlight;
+                    // one request at a time per connection: pause reads
+                    // until the answer is flushed
+                    let _ = self.poller.modify(conn.stream.as_raw_fd(), id, false, false);
+                }
+                self.dispatch.push_job(Job { conn: id, req });
+            }
+            Action::Refuse(e) => self.refuse(id, &e),
+        }
+    }
+
+    /// Answer `400` for unparseable framing and close after the flush —
+    /// the same wire behavior as the threads model.
+    fn refuse(&mut self, id: u64, error: &str) {
+        {
+            let Some(conn) = self.conns.get_mut(&id) else { return };
+            conn.out = render_response("400 Bad Request", &err_json(error), false);
+            conn.out_pos = 0;
+            conn.keep_alive = false;
+            conn.state = ConnState::Writing;
+        }
+        self.flush_out(id);
+    }
+
+    /// Write as much pending response as the socket accepts; arm
+    /// `EPOLLOUT` on a partial write, recycle or close on completion.
+    fn flush_out(&mut self, id: u64) {
+        enum After {
+            Done,
+            Stalled,
+            Dead,
+        }
+        let after = {
+            let Some(conn) = self.conns.get_mut(&id) else { return };
+            if !matches!(conn.state, ConnState::Writing) {
+                return;
+            }
+            let mut after = After::Done;
+            while conn.out_pos < conn.out.len() {
+                match conn.stream.write(&conn.out[conn.out_pos..]) {
+                    Ok(0) => {
+                        after = After::Dead;
+                        break;
+                    }
+                    Ok(n) => conn.out_pos += n,
+                    Err(e) if would_block(&e) => {
+                        after = After::Stalled;
+                        break;
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        after = After::Dead;
+                        break;
+                    }
+                }
+            }
+            after
+        };
+        match after {
+            After::Dead => self.close_conn(id),
+            After::Stalled => {
+                self.stats.count_write_stall();
+                if let Some(conn) = self.conns.get(&id) {
+                    let _ = self.poller.modify(conn.stream.as_raw_fd(), id, false, true);
+                }
+            }
+            After::Done => {
+                let recycle = {
+                    let Some(conn) = self.conns.get_mut(&id) else { return };
+                    let keep = conn.keep_alive && !conn.peer_closed && !self.draining;
+                    if keep {
+                        conn.out.clear();
+                        conn.out_pos = 0;
+                        conn.state = ConnState::Reading;
+                    }
+                    keep
+                };
+                if !recycle {
+                    self.close_conn(id);
+                    return;
+                }
+                // a pipelined request may already be buffered in full
+                self.process_buf(id);
+                if let Some(conn) = self.conns.get(&id) {
+                    if matches!(conn.state, ConnState::Reading) {
+                        let _ =
+                            self.poller.modify(conn.stream.as_raw_fd(), id, true, false);
+                    }
+                }
+            }
+        }
+    }
+
+    fn close_conn(&mut self, id: u64) {
+        if let Some(conn) = self.conns.remove(&id) {
+            self.poller.remove(conn.stream.as_raw_fd());
+            self.stats.count_close();
+        }
+    }
+
+    /// Stop accepting, drop idle connections, and let the main loop run
+    /// until every in-flight response is flushed.
+    fn begin_drain(&mut self) {
+        self.draining = true;
+        if let Some(listener) = self.listener.take() {
+            self.poller.remove(listener.as_raw_fd());
+            // dropped here: further connects are refused by the kernel
+        }
+        let idle: Vec<u64> = self
+            .conns
+            .iter()
+            .filter(|(_, c)| matches!(c.state, ConnState::Reading))
+            .map(|(&id, _)| id)
+            .collect();
+        for id in idle {
+            self.close_conn(id);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poller_reports_readiness_transitions() {
+        let poller = sys::Poller::new().unwrap();
+        let (a, b) = UnixStream::pair().unwrap();
+        a.set_nonblocking(true).unwrap();
+        b.set_nonblocking(true).unwrap();
+        poller.add(a.as_raw_fd(), 7, true, false).unwrap();
+        let mut events = Vec::new();
+        poller.wait(&mut events, 0).unwrap();
+        assert!(events.is_empty(), "no data yet: {events:?}");
+        (&mut &b).write_all(b"x").unwrap();
+        poller.wait(&mut events, 1000).unwrap();
+        assert!(events.iter().any(|&(t, r, _)| t == 7 && r), "readable: {events:?}");
+        // flip to write interest: an empty socket buffer is writable
+        poller.modify(a.as_raw_fd(), 7, false, true).unwrap();
+        events.clear();
+        poller.wait(&mut events, 1000).unwrap();
+        assert!(events.iter().any(|&(t, _, w)| t == 7 && w), "writable: {events:?}");
+        poller.remove(a.as_raw_fd());
+        events.clear();
+        poller.wait(&mut events, 0).unwrap();
+        assert!(events.is_empty(), "deregistered: {events:?}");
+    }
+
+    #[test]
+    fn dispatch_queue_closes_and_drains() {
+        let d = Dispatch::default();
+        d.push_job(Job {
+            conn: 5,
+            req: HttpRequest {
+                method: "GET".into(),
+                path: "/healthz".into(),
+                body: Vec::new(),
+                keep_alive: true,
+            },
+        });
+        assert_eq!(d.pop_job().map(|j| j.conn), Some(5));
+        d.close();
+        assert!(d.pop_job().is_none());
+    }
+}

@@ -13,33 +13,61 @@
 //!   `503 Service Unavailable` (the HTTP face of load shedding — the pool's
 //!   `rejected` counter has already recorded it); an unknown model is
 //!   `404`; a malformed body or wrong input width is `400` — the
-//!   connection handler answers and keeps the connection alive rather than
-//!   dying with the request.
+//!   connection answers and stays alive rather than dying with the request.
 //! * `POST /reload` — body `{"model": "<name>", "seed": n}`: rebuild the
 //!   named model through the server's [`ModelBuilder`] and hot-swap it into
 //!   the registry (`Arc` swap; in-flight requests finish on the old pool).
 //!   `501` when the server was started without a builder.
 //! * `GET /models` — registry listing (name, input dim, generation).
-//! * `GET /stats` — per-model serving stats incl. nearest-rank p50/p95/p99.
+//! * `GET /stats` — per-model serving stats incl. nearest-rank p50/p95/p99,
+//!   plus a `net` object with connection-level counters (open/accepted/
+//!   closed connections, read/write stalls, shed-at-accept).
 //! * `GET /healthz` — liveness probe.
+//!
+//! # Concurrency model
+//!
+//! Two interchangeable net models sit in front of the same request
+//! handler, selected by [`NetConfig::model`] (`tbn serve --net-model`):
+//!
+//! * [`NetModel::Mux`] (**default on unix**) — a single readiness-driven
+//!   event loop (`serve::mux`) owns every connection over raw
+//!   `epoll(7)` FFI (a `poll(2)` fallback covers non-Linux unix) and
+//!   nonblocking sockets.  Each connection is an explicit state machine —
+//!   read-accumulate → parse → dispatch → write with partial-write resume
+//!   → keep-alive reset — and blocking work (`Server::infer`, reloads)
+//!   runs on a small dispatcher pool *off* the loop, so the worker pools'
+//!   batching/backpressure/503-shedding semantics and the exact response
+//!   bytes match the threads model.  Thread count is
+//!   `1 + dispatch_threads`, independent of connection count: thousands
+//!   of idle keep-alive clients cost file descriptors, not threads.
+//! * [`NetModel::Threads`] — the PR 9 baseline kept as the A/B toggle:
+//!   one accept thread plus one handler thread per connection, each
+//!   polling the closing flag on a 100 ms read timeout.  Handler handles
+//!   are self-reaped: every handler removes its own entry from the
+//!   tracked-handle table on exit (insertion holds the table lock across
+//!   spawn, so the removal cannot race it), which keeps the table bounded
+//!   even under a connect-burst-then-idle pattern where no later accept
+//!   would have swept it.
+//!
+//! Both models enforce [`NetConfig::max_conns`]: beyond it, an accept is
+//! answered `503 {"error":"connection limit reached"}` and closed
+//! immediately (`shed_at_accept` in the `net` counters).
 //!
 //! **Graceful drain** ([`NetServer::shutdown`], also wired to
 //! SIGTERM/SIGINT via [`install_shutdown_flag`]): stop accepting (the
-//! listener is woken and dropped, so new connects are refused), let every
-//! connection handler finish the request it is serving (handlers poll the
-//! closing flag on a short read timeout), join them all, and return the
-//! final per-model stats.  Because handlers block in `Server::infer` until
-//! the pool answers, joining them proves every accepted network request was
-//! completed — nothing accepted is dropped.
-//!
-//! Concurrency model: one accept thread + one handler thread per
-//! connection (clients are expected to keep connections alive and pipeline
-//! serially; the load generator and tests do).  Handler threads are
-//! tracked and reaped so the handle list stays bounded.
+//! listener is woken/deregistered and dropped, so new connects are
+//! refused), answer everything already accepted, then close.  The mux
+//! loop closes idle connections at once, flushes every in-flight response
+//! to completion (partial-write resume included) and exits only when the
+//! connection table is empty; the threads model joins every handler, each
+//! of which finishes the request it is serving.  Either way nothing
+//! accepted is dropped, and [`NetServer::shutdown`] returns the final
+//! per-model stats.
 
+use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::Duration;
@@ -49,26 +77,197 @@ use crate::util::Json;
 use super::registry::ModelRegistry;
 use super::{Server, ServerStats};
 
+#[cfg(unix)]
+use super::mux;
+
 /// Upper bound on one request's header block.
-const MAX_HEADER_BYTES: usize = 64 * 1024;
+pub(super) const MAX_HEADER_BYTES: usize = 64 * 1024;
 /// Upper bound on one request's body (a 1M-float input is ~8 MB of JSON).
-const MAX_BODY_BYTES: usize = 16 * 1024 * 1024;
-/// Read-timeout granularity at which idle handlers poll the closing flag.
+pub(super) const MAX_BODY_BYTES: usize = 16 * 1024 * 1024;
+/// Read-timeout granularity at which idle threads-model handlers poll the
+/// closing flag.
 const POLL_READ_TIMEOUT: Duration = Duration::from_millis(100);
 
 /// Rebuilds a model by name for `POST /reload` hot swaps: `(name, seed)`
 /// -> a fresh worker pool over the rebuilt engine.
 pub type ModelBuilder = Arc<dyn Fn(&str, u64) -> Result<Server, String> + Send + Sync>;
 
-/// Tracked connection-handler threads (joined at drain).
-type ConnHandles = Arc<Mutex<Vec<thread::JoinHandle<()>>>>;
+/// Tracked threads-model handler threads, keyed by connection id; each
+/// handler removes its own entry on exit (self-reaping).
+type ConnHandles = Arc<Mutex<HashMap<u64, thread::JoinHandle<()>>>>;
+
+// ---------------------------------------------------------------------------
+// Net model selection + connection-level counters
+// ---------------------------------------------------------------------------
+
+/// Which connection-handling model the front end runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NetModel {
+    /// Readiness-driven event loop (`epoll`/`poll` + nonblocking sockets);
+    /// bounded threads at any connection count.  Unix only — on other
+    /// targets it falls back to [`NetModel::Threads`] at start.
+    Mux,
+    /// One handler thread per connection (the PR 9 baseline, kept for
+    /// A/B comparison).
+    Threads,
+}
+
+impl Default for NetModel {
+    fn default() -> NetModel {
+        if cfg!(unix) {
+            NetModel::Mux
+        } else {
+            NetModel::Threads
+        }
+    }
+}
+
+impl NetModel {
+    /// Parse a `--net-model` value (loud on anything but `mux|threads`).
+    pub fn parse(s: &str) -> Result<NetModel, String> {
+        match s {
+            "mux" => Ok(NetModel::Mux),
+            "threads" => Ok(NetModel::Threads),
+            _ => Err(format!("unknown net model {s:?} (expected mux|threads)")),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            NetModel::Mux => "mux",
+            NetModel::Threads => "threads",
+        }
+    }
+}
+
+impl std::fmt::Display for NetModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Front-end configuration for [`NetServer::start_with`].
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    pub model: NetModel,
+    /// Open-connection admission limit; accepts beyond it are answered
+    /// `503` and closed (`shed_at_accept`).
+    pub max_conns: usize,
+    /// Mux dispatcher threads running the blocking handler path (sized to
+    /// keep the worker pools fed; ignored by the threads model).
+    pub dispatch_threads: usize,
+}
+
+impl Default for NetConfig {
+    fn default() -> NetConfig {
+        NetConfig {
+            model: NetModel::default(),
+            max_conns: 4096,
+            dispatch_threads: 16,
+        }
+    }
+}
+
+/// Connection-level counters shared by both net models; surfaced in
+/// `GET /stats` (the `net` object), the periodic serve stats line, and
+/// [`NetServer::net_stats`].
+pub(super) struct NetStats {
+    model: &'static str,
+    accepted: AtomicUsize,
+    closed: AtomicUsize,
+    open: AtomicUsize,
+    read_stalls: AtomicUsize,
+    write_stalls: AtomicUsize,
+    shed_at_accept: AtomicUsize,
+}
+
+impl NetStats {
+    fn new(model: NetModel) -> NetStats {
+        NetStats {
+            model: model.as_str(),
+            accepted: AtomicUsize::new(0),
+            closed: AtomicUsize::new(0),
+            open: AtomicUsize::new(0),
+            read_stalls: AtomicUsize::new(0),
+            write_stalls: AtomicUsize::new(0),
+            shed_at_accept: AtomicUsize::new(0),
+        }
+    }
+
+    /// A connection was admitted (accepted + now open).
+    pub(super) fn count_open(&self) {
+        self.accepted.fetch_add(1, Ordering::Relaxed);
+        self.open.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(super) fn count_close(&self) {
+        self.closed.fetch_add(1, Ordering::Relaxed);
+        self.open.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// A readable event left an incomplete request parked in the buffer
+    /// (slowloris visibility).
+    pub(super) fn count_read_stall(&self) {
+        self.read_stalls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A response write hit `EWOULDBLOCK` with bytes still pending.
+    pub(super) fn count_write_stall(&self) {
+        self.write_stalls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// An accept was refused at the `max_conns` admission limit.
+    pub(super) fn count_shed_at_accept(&self) {
+        self.shed_at_accept.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(super) fn snapshot(&self) -> NetStatsSnapshot {
+        NetStatsSnapshot {
+            model: self.model,
+            open: self.open.load(Ordering::Relaxed),
+            accepted: self.accepted.load(Ordering::Relaxed),
+            closed: self.closed.load(Ordering::Relaxed),
+            read_stalls: self.read_stalls.load(Ordering::Relaxed),
+            write_stalls: self.write_stalls.load(Ordering::Relaxed),
+            shed_at_accept: self.shed_at_accept.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of the connection-level counters.
+#[derive(Clone, Copy, Debug)]
+pub struct NetStatsSnapshot {
+    pub model: &'static str,
+    pub open: usize,
+    pub accepted: usize,
+    pub closed: usize,
+    pub read_stalls: usize,
+    pub write_stalls: usize,
+    pub shed_at_accept: usize,
+}
+
+fn net_json(s: &NetStatsSnapshot) -> Json {
+    Json::obj(vec![
+        ("model", Json::Str(s.model.to_string())),
+        ("open", Json::Num(s.open as f64)),
+        ("accepted", Json::Num(s.accepted as f64)),
+        ("closed", Json::Num(s.closed as f64)),
+        ("read_stalls", Json::Num(s.read_stalls as f64)),
+        ("write_stalls", Json::Num(s.write_stalls as f64)),
+        ("shed_at_accept", Json::Num(s.shed_at_accept as f64)),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// HTTP framing (shared by both net models)
+// ---------------------------------------------------------------------------
 
 /// A parsed HTTP request (the subset this server speaks).
-struct HttpRequest {
-    method: String,
-    path: String,
-    body: Vec<u8>,
-    keep_alive: bool,
+pub(super) struct HttpRequest {
+    pub(super) method: String,
+    pub(super) path: String,
+    pub(super) body: Vec<u8>,
+    pub(super) keep_alive: bool,
 }
 
 enum ReqRead {
@@ -81,8 +280,14 @@ enum ReqRead {
 
 /// Read one HTTP request from `stream` into/out of `buf` (which carries
 /// pipelined leftovers between keep-alive requests).  Returns `Closed` when
-/// the peer hangs up cleanly or `closing` is raised while idle.
-fn read_request(stream: &mut TcpStream, buf: &mut Vec<u8>, closing: &AtomicBool) -> ReqRead {
+/// the peer hangs up cleanly or `closing` is raised while idle.  Threads
+/// model only — the mux loop runs the same framing incrementally.
+fn read_request(
+    stream: &mut TcpStream,
+    buf: &mut Vec<u8>,
+    closing: &AtomicBool,
+    net: &NetStats,
+) -> ReqRead {
     let mut tmp = [0u8; 4096];
     loop {
         if let Some(h) = find_header_end(buf) {
@@ -101,6 +306,8 @@ fn read_request(stream: &mut TcpStream, buf: &mut Vec<u8>, closing: &AtomicBool)
                     Ok(0) => return ReqRead::Malformed("truncated body".into()),
                     Ok(n) => buf.extend_from_slice(&tmp[..n]),
                     Err(e) if would_block(&e) => {
+                        // a partial request is parked across a timeout tick
+                        net.count_read_stall();
                         if closing.load(Ordering::SeqCst) {
                             // mid-request at drain: the framing is incomplete
                             // and the client is gone from our perspective
@@ -127,6 +334,9 @@ fn read_request(stream: &mut TcpStream, buf: &mut Vec<u8>, closing: &AtomicBool)
             }
             Ok(n) => buf.extend_from_slice(&tmp[..n]),
             Err(e) if would_block(&e) => {
+                if !buf.is_empty() {
+                    net.count_read_stall();
+                }
                 if closing.load(Ordering::SeqCst) {
                     return ReqRead::Closed;
                 }
@@ -136,17 +346,17 @@ fn read_request(stream: &mut TcpStream, buf: &mut Vec<u8>, closing: &AtomicBool)
     }
 }
 
-fn would_block(e: &std::io::Error) -> bool {
+pub(super) fn would_block(e: &std::io::Error) -> bool {
     matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
 }
 
-fn find_header_end(buf: &[u8]) -> Option<usize> {
+pub(super) fn find_header_end(buf: &[u8]) -> Option<usize> {
     buf.windows(4).position(|w| w == b"\r\n\r\n")
 }
 
 /// Parse the header block (without the trailing blank line): request line
 /// + the two headers we honor (`Content-Length`, `Connection`).
-fn parse_header(block: &[u8]) -> Result<(String, String, usize, bool), String> {
+pub(super) fn parse_header(block: &[u8]) -> Result<(String, String, usize, bool), String> {
     let text = std::str::from_utf8(block).map_err(|_| "non-utf8 header".to_string())?;
     let mut lines = text.split("\r\n");
     let request_line = lines.next().unwrap_or("");
@@ -175,12 +385,10 @@ fn parse_header(block: &[u8]) -> Result<(String, String, usize, bool), String> {
     Ok((method, path, content_length, keep_alive))
 }
 
-fn write_response(
-    stream: &mut TcpStream,
-    status: &str,
-    body: &Json,
-    keep_alive: bool,
-) -> std::io::Result<()> {
+/// Render a full response (status line + headers + body) into one buffer —
+/// the single source of the wire format for both net models, so the mux
+/// path is bit-identical to the threads path.
+pub(super) fn render_response(status: &str, body: &Json, keep_alive: bool) -> Vec<u8> {
     let body = body.to_string();
     let conn = if keep_alive { "keep-alive" } else { "close" };
     let head = format!(
@@ -188,19 +396,34 @@ fn write_response(
          Content-Length: {}\r\nConnection: {conn}\r\n\r\n",
         body.len()
     );
-    stream.write_all(head.as_bytes())?;
-    stream.write_all(body.as_bytes())?;
+    let mut out = Vec::with_capacity(head.len() + body.len());
+    out.extend_from_slice(head.as_bytes());
+    out.extend_from_slice(body.as_bytes());
+    out
+}
+
+fn write_response(
+    stream: &mut TcpStream,
+    status: &str,
+    body: &Json,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    stream.write_all(&render_response(status, body, keep_alive))?;
     stream.flush()
 }
 
-fn err_json(msg: &str) -> Json {
+pub(super) fn err_json(msg: &str) -> Json {
     Json::obj(vec![("error", Json::Str(msg.to_string()))])
 }
 
 /// Dispatch one parsed request against the registry; returns
 /// `(status line, body)`.
-fn handle(registry: &ModelRegistry, builder: Option<&ModelBuilder>, req: &HttpRequest)
-          -> (&'static str, Json) {
+pub(super) fn handle(
+    registry: &ModelRegistry,
+    builder: Option<&ModelBuilder>,
+    net: &NetStats,
+    req: &HttpRequest,
+) -> (&'static str, Json) {
     match (req.method.as_str(), req.path.as_str()) {
         ("POST", "/infer") => handle_infer(registry, &req.body),
         ("POST", "/reload") => handle_reload(registry, builder, &req.body),
@@ -224,7 +447,13 @@ fn handle(registry: &ModelRegistry, builder: Option<&ModelBuilder>, req: &HttpRe
                 .into_iter()
                 .map(|(name, generation, s)| stats_json(&name, generation, &s))
                 .collect();
-            ("200 OK", Json::obj(vec![("models", Json::Arr(rows))]))
+            (
+                "200 OK",
+                Json::obj(vec![
+                    ("models", Json::Arr(rows)),
+                    ("net", net_json(&net.snapshot())),
+                ]),
+            )
         }
         ("GET", "/healthz") => ("200 OK", Json::obj(vec![("ok", Json::Bool(true))])),
         ("POST", _) | ("GET", _) => ("404 Not Found", err_json("unknown path")),
@@ -338,24 +567,29 @@ fn stats_json(name: &str, generation: usize, s: &ServerStats) -> Json {
     row
 }
 
+// ---------------------------------------------------------------------------
+// Threads model: accept loop + one handler thread per connection
+// ---------------------------------------------------------------------------
+
 /// One connection's serve loop: read request, answer, repeat until the
 /// peer closes, a framing error forces a close, or drain begins.  A
 /// malformed request gets a `400` answer and (for body/framing breakage)
 /// a close — it never kills the thread with a panic.
 fn connection_loop(
     mut stream: TcpStream,
-    registry: Arc<ModelRegistry>,
-    builder: Option<ModelBuilder>,
-    closing: Arc<AtomicBool>,
+    registry: &ModelRegistry,
+    builder: Option<&ModelBuilder>,
+    closing: &AtomicBool,
+    net: &NetStats,
 ) {
     // short read timeout so an idle handler notices drain promptly
     let _ = stream.set_read_timeout(Some(POLL_READ_TIMEOUT));
     let _ = stream.set_nodelay(true);
     let mut buf = Vec::new();
     loop {
-        match read_request(&mut stream, &mut buf, &closing) {
+        match read_request(&mut stream, &mut buf, closing, net) {
             ReqRead::Request(req) => {
-                let (status, body) = handle(&registry, builder.as_ref(), &req);
+                let (status, body) = handle(registry, builder, net, &req);
                 let keep = req.keep_alive && !closing.load(Ordering::SeqCst);
                 if write_response(&mut stream, status, &body, keep).is_err() || !keep {
                     return;
@@ -370,68 +604,141 @@ fn connection_loop(
     }
 }
 
+fn threads_accept_loop(
+    listener: TcpListener,
+    registry: Arc<ModelRegistry>,
+    builder: Option<ModelBuilder>,
+    closing: Arc<AtomicBool>,
+    stats: Arc<NetStats>,
+    conns: ConnHandles,
+    max_conns: usize,
+) {
+    let mut next_id = 0u64;
+    for stream in listener.incoming() {
+        if closing.load(Ordering::SeqCst) {
+            // the shutdown self-connect (or any racer) lands here:
+            // refuse and stop accepting
+            return;
+        }
+        let Ok(mut stream) = stream else { continue };
+        // hold the table lock across spawn + insert so a handler that
+        // finishes instantly still finds (and removes) its own entry
+        let mut c = conns.lock().unwrap();
+        if c.len() >= max_conns {
+            stats.count_shed_at_accept();
+            let bytes =
+                render_response("503 Service Unavailable", &err_json("connection limit reached"), false);
+            let _ = stream.write_all(&bytes);
+            continue;
+        }
+        let id = next_id;
+        next_id += 1;
+        stats.count_open();
+        let handle = {
+            let registry = registry.clone();
+            let builder = builder.clone();
+            let closing = closing.clone();
+            let stats = stats.clone();
+            let conns = conns.clone();
+            thread::spawn(move || {
+                connection_loop(stream, &registry, builder.as_ref(), &closing, &stats);
+                stats.count_close();
+                // self-reap: dropping our own JoinHandle detaches this
+                // (already exiting) thread and keeps the table bounded
+                conns.lock().unwrap().remove(&id);
+            })
+        };
+        c.insert(id, handle);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The front end
+// ---------------------------------------------------------------------------
+
+enum Backend {
+    Threads {
+        accept_handle: Option<thread::JoinHandle<()>>,
+        conns: ConnHandles,
+    },
+    #[cfg(unix)]
+    Mux {
+        loop_handle: Option<thread::JoinHandle<()>>,
+        waker: std::os::unix::net::UnixStream,
+    },
+}
+
 /// A running network front end.  Dropping it without calling
 /// [`shutdown`](NetServer::shutdown) still drains (Drop delegates).
 pub struct NetServer {
     addr: SocketAddr,
     closing: Arc<AtomicBool>,
-    accept_handle: Option<thread::JoinHandle<()>>,
-    conns: ConnHandles,
+    backend: Backend,
     registry: Arc<ModelRegistry>,
+    stats: Arc<NetStats>,
 }
 
 impl NetServer {
     /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and start
-    /// accepting.  `builder` enables `POST /reload` hot swaps.
+    /// accepting with the default [`NetConfig`] (mux model on unix).
+    /// `builder` enables `POST /reload` hot swaps.
     pub fn start(
         registry: Arc<ModelRegistry>,
         addr: &str,
         builder: Option<ModelBuilder>,
     ) -> Result<NetServer, String> {
+        NetServer::start_with(registry, addr, builder, NetConfig::default())
+    }
+
+    /// [`start`](NetServer::start) with an explicit net model and limits.
+    pub fn start_with(
+        registry: Arc<ModelRegistry>,
+        addr: &str,
+        builder: Option<ModelBuilder>,
+        config: NetConfig,
+    ) -> Result<NetServer, String> {
         let listener = TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
         let local = listener.local_addr().map_err(|e| format!("local_addr: {e}"))?;
         let closing = Arc::new(AtomicBool::new(false));
-        let conns: ConnHandles = Arc::new(Mutex::new(Vec::new()));
-        let accept_handle = {
-            let registry = registry.clone();
-            let closing = closing.clone();
-            let conns = conns.clone();
-            thread::spawn(move || {
-                for stream in listener.incoming() {
-                    if closing.load(Ordering::SeqCst) {
-                        // the shutdown self-connect (or any racer) lands
-                        // here: refuse and stop accepting
-                        return;
-                    }
-                    let Ok(stream) = stream else { continue };
+        // the mux model needs a unix poller; elsewhere run threads
+        let model = if cfg!(unix) { config.model } else { NetModel::Threads };
+        let stats = Arc::new(NetStats::new(model));
+        let max_conns = config.max_conns.max(1);
+        let backend = match model {
+            #[cfg(unix)]
+            NetModel::Mux => {
+                let (loop_handle, waker) = mux::spawn(
+                    listener,
+                    mux::MuxParams {
+                        registry: registry.clone(),
+                        builder,
+                        closing: closing.clone(),
+                        stats: stats.clone(),
+                        max_conns,
+                        dispatch_threads: config.dispatch_threads,
+                    },
+                )?;
+                Backend::Mux { loop_handle: Some(loop_handle), waker }
+            }
+            #[cfg(not(unix))]
+            NetModel::Mux => unreachable!("mux model is rewritten to threads off unix"),
+            NetModel::Threads => {
+                let conns: ConnHandles = Arc::new(Mutex::new(HashMap::new()));
+                let accept_handle = {
                     let registry = registry.clone();
-                    let builder = builder.clone();
                     let closing = closing.clone();
-                    let handle = thread::spawn(move || {
-                        connection_loop(stream, registry, builder, closing)
-                    });
-                    let mut c = conns.lock().unwrap();
-                    // reap finished handlers so the list stays bounded
-                    let mut live = Vec::new();
-                    for h in c.drain(..) {
-                        if h.is_finished() {
-                            let _ = h.join();
-                        } else {
-                            live.push(h);
-                        }
-                    }
-                    *c = live;
-                    c.push(handle);
-                }
-            })
+                    let stats = stats.clone();
+                    let conns = conns.clone();
+                    thread::spawn(move || {
+                        threads_accept_loop(
+                            listener, registry, builder, closing, stats, conns, max_conns,
+                        )
+                    })
+                };
+                Backend::Threads { accept_handle: Some(accept_handle), conns }
+            }
         };
-        Ok(NetServer {
-            addr: local,
-            closing,
-            accept_handle: Some(accept_handle),
-            conns,
-            registry,
-        })
+        Ok(NetServer { addr: local, closing, backend, registry, stats })
     }
 
     /// The bound address (resolves `:0` to the real port).
@@ -443,8 +750,13 @@ impl NetServer {
         &self.registry
     }
 
+    /// Point-in-time connection-level counters (also in `GET /stats`).
+    pub fn net_stats(&self) -> NetStatsSnapshot {
+        self.stats.snapshot()
+    }
+
     /// Graceful drain: stop accepting, finish every in-flight request,
-    /// join all connection handlers, and return the final per-model stats.
+    /// and return the final per-model stats.
     pub fn shutdown(mut self) -> Vec<(String, usize, ServerStats)> {
         self.drain();
         self.registry.stats()
@@ -454,16 +766,35 @@ impl NetServer {
         if self.closing.swap(true, Ordering::SeqCst) {
             return; // already drained
         }
-        // wake the accept loop so it observes the flag and exits
-        let _ = TcpStream::connect(self.addr);
-        if let Some(h) = self.accept_handle.take() {
-            let _ = h.join();
-        }
-        // the listener is dropped: new connects are refused from here on;
-        // join every handler — each finishes its in-flight request first
-        let handles: Vec<_> = self.conns.lock().unwrap().drain(..).collect();
-        for h in handles {
-            let _ = h.join();
+        let addr = self.addr;
+        match &mut self.backend {
+            Backend::Threads { accept_handle, conns } => {
+                // wake the accept loop so it observes the flag and exits
+                let _ = TcpStream::connect(addr);
+                if let Some(h) = accept_handle.take() {
+                    let _ = h.join();
+                }
+                // the listener is dropped: new connects are refused from
+                // here on; join every handler — each finishes its
+                // in-flight request first
+                let handles: Vec<_> = {
+                    let mut c = conns.lock().unwrap();
+                    c.drain().map(|(_, h)| h).collect()
+                };
+                for h in handles {
+                    let _ = h.join();
+                }
+            }
+            #[cfg(unix)]
+            Backend::Mux { loop_handle, waker } => {
+                // a wakeup byte makes the loop re-check the closing flag
+                // immediately; the loop drains (flushes every in-flight
+                // response) and exits when its connection table is empty
+                let _ = (&mut &*waker).write(&[1u8]);
+                if let Some(h) = loop_handle.take() {
+                    let _ = h.join();
+                }
+            }
         }
     }
 }
@@ -550,6 +881,55 @@ mod tests {
         // empty registry, no model field -> 400 (no sole default)
         let (status, _) = handle_infer(&reg, br#"{"x":[1]}"#);
         assert_eq!(status, "400 Bad Request");
+    }
+
+    #[test]
+    fn net_model_parses_loudly() {
+        assert_eq!(NetModel::parse("mux").unwrap(), NetModel::Mux);
+        assert_eq!(NetModel::parse("threads").unwrap(), NetModel::Threads);
+        assert!(NetModel::parse("tokio").is_err());
+        assert_eq!(NetModel::Mux.to_string(), "mux");
+    }
+
+    #[test]
+    fn net_stats_counters_roundtrip() {
+        let stats = NetStats::new(NetModel::Threads);
+        stats.count_open();
+        stats.count_open();
+        stats.count_close();
+        stats.count_read_stall();
+        stats.count_shed_at_accept();
+        let s = stats.snapshot();
+        assert_eq!(s.model, "threads");
+        assert_eq!((s.accepted, s.open, s.closed), (2, 1, 1));
+        assert_eq!((s.read_stalls, s.write_stalls, s.shed_at_accept), (1, 0, 1));
+    }
+
+    #[test]
+    fn stats_endpoint_includes_net_object() {
+        let reg = ModelRegistry::new();
+        let stats = NetStats::new(NetModel::Threads);
+        stats.count_open();
+        let req = HttpRequest {
+            method: "GET".into(),
+            path: "/stats".into(),
+            body: Vec::new(),
+            keep_alive: true,
+        };
+        let (status, body) = handle(&reg, None, &stats, &req);
+        assert_eq!(status, "200 OK");
+        let net = body.get("net").expect("net object");
+        assert_eq!(net.str_or("model", ""), "threads");
+        assert_eq!(net.get("open").and_then(Json::as_f64), Some(1.0));
+    }
+
+    #[test]
+    fn render_response_matches_wire_format() {
+        let bytes = render_response("200 OK", &Json::obj(vec![("ok", Json::Bool(true))]), true);
+        let text = std::str::from_utf8(&bytes).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("Connection: keep-alive\r\n"));
+        assert!(text.ends_with("\r\n\r\n{\"ok\": true}") || text.contains("{\"ok\""));
     }
 
     #[test]

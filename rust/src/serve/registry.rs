@@ -123,6 +123,16 @@ impl ModelRegistry {
         v
     }
 
+    /// Summed served/rejected across every model — the one-line aggregate
+    /// for the periodic serve stats line.
+    pub fn totals(&self) -> (usize, usize) {
+        let m = self.models.read().unwrap();
+        m.values().fold((0, 0), |(served, rejected), e| {
+            let s = e.server.stats();
+            (served + s.served, rejected + s.rejected)
+        })
+    }
+
     /// Per-model stats snapshot, name-sorted (the `GET /stats` rows and
     /// the final drain report).
     pub fn stats(&self) -> Vec<(String, usize, ServerStats)> {
